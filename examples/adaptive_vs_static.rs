@@ -1,0 +1,72 @@
+//! Ablation (DESIGN.md §5): how much does the *adaptive* level schedule
+//! of Alg. 3 (Lemma 3.4, computed by the L1 Pallas `seg_energy` kernel)
+//! buy over the static geometric prior of Alg. 2, and over the rust-sort
+//! fallback path? Reports both estimator variance on real gradients and
+//! full training curves.
+//!
+//!     make artifacts && cargo run --release --example adaptive_vs_static
+
+use mlmc_dist::config::TrainConfig;
+use mlmc_dist::mlmc::{adaptive_variance, normalize_probs, schedule_variance, MlSTopK, Multilevel};
+use mlmc_dist::runtime::{ArgValue, Runtime};
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::{train, util};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let model = rt.meta.models["tx-tiny"].clone();
+
+    // --- estimator-level ablation on a real training gradient ----------
+    let params = model.init_params(1);
+    let mut rng = Rng::new(0);
+    let x: Vec<i32> = (0..model.x_len()).map(|_| rng.below(model.vocab) as i32).collect();
+    let y: Vec<i32> = (0..model.y_len()).map(|_| rng.below(model.n_classes) as i32).collect();
+    let (_, grad) = rt.grad_step(&model, &params, &ArgValue::I32(&x), &y)?;
+
+    println!("estimator variance on a real tx-tiny gradient (d = {}):", grad.len());
+    println!("{:<10} {:>14} {:>14} {:>9}", "k/n", "adaptive var", "static var", "ratio");
+    for pm in [10u32, 50, 100, 500] {
+        let s = model.seg_size(pm);
+        let ml = MlSTopK { s };
+        let ctx = ml.prepare(&grad);
+        let deltas = ctx.deltas();
+        let adaptive = adaptive_variance(&deltas, &grad);
+        let static_probs = ml.default_probs(grad.len());
+        let stat = schedule_variance(&deltas, &static_probs, &grad);
+        println!("{:<10} {:>14.4} {:>14.4} {:>8.2}x", format!("{}%", pm as f64 / 10.0), adaptive, stat, stat / adaptive);
+        // sanity: adaptive == optimal among normalized-delta schedules
+        let check = schedule_variance(&deltas, &normalize_probs(deltas.clone()), &grad);
+        assert!((check - adaptive).abs() < 1e-3 * adaptive.abs().max(1.0));
+    }
+
+    // --- end-to-end training ablation -----------------------------------
+    let mut base = TrainConfig::default();
+    base.model = "tx-tiny".into();
+    base.workers = 4;
+    base.steps = 120;
+    base.lr = 0.1;
+    base.frac_pm = 50;
+    base.eval_every = 30;
+    base.eval_batches = 4;
+
+    println!("\ntraining ablation (120 steps, M=4, k/n=5%):");
+    println!("{:<44} {:>9} {:>12}", "codec", "eval acc", "uplink bits");
+    for (label, method, l1) in [
+        ("Alg.3 adaptive + L1 Pallas segstats", "mlmc-topk", true),
+        ("Alg.3 adaptive + rust-sort fallback", "mlmc-topk", false),
+        ("Alg.2 static geometric schedule", "mlmc-topk-static", true),
+    ] {
+        let mut cfg = base.clone();
+        cfg.set("method", method).unwrap();
+        cfg.use_l1_stats = l1;
+        let r = train::run(&rt, &cfg)?;
+        let acc = r.curve.points.iter().rev().find(|p| !p.eval_acc.is_nan()).map(|p| p.eval_acc);
+        println!(
+            "{:<44} {:>9.4} {:>12}",
+            label,
+            acc.unwrap_or(f64::NAN),
+            util::fmt_bits(r.total_bits)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Real distributed mode: leader + M workers over loopback TCP, each
+//! worker with its **own PJRT runtime** (the `xla` wrappers are !Send, so
+//! every worker thread constructs its runtime locally — process-equivalent
+//! isolation in one binary; `mlmc-dist leader/worker` run the same
+//! protocol across actual processes/hosts).
+//!
+//!     make artifacts && cargo run --release --example tcp_cluster
+
+use std::net::TcpListener;
+
+use mlmc_dist::config::TrainConfig;
+use mlmc_dist::coordinator::{agg_kind, Server};
+use mlmc_dist::data::Task;
+use mlmc_dist::runtime::{ArgValue, Runtime};
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::train::build_codec;
+use mlmc_dist::transport::tcp::{read_frame, TcpLeader, TcpWorker};
+use mlmc_dist::transport::{params_from_bytes, params_to_bytes, Frame, FRAME_SHUTDOWN};
+use mlmc_dist::{util, wire};
+
+const M: usize = 4;
+const STEPS: usize = 60;
+
+fn worker(addr: String, id: u32) -> anyhow::Result<()> {
+    // each worker owns a full runtime, exactly like a separate process
+    let rt = Runtime::load_default()?;
+    let model = rt.meta.models["tx-tiny"].clone();
+    let task = Task::for_model(&model, 42);
+    let mut cfg = TrainConfig::default();
+    cfg.set("method", "mlmc-topk").unwrap();
+    cfg.workers = M;
+    let mut codec = build_codec(&cfg, &model);
+
+    let mut port = TcpWorker::connect(&addr, id)?;
+    let mut step = 0u64;
+    loop {
+        let frame = port.recv()?;
+        if frame.kind == FRAME_SHUTDOWN {
+            return Ok(());
+        }
+        let params = params_from_bytes(&frame.payload);
+        let b = task.train_batch(cfg.seed, id as u64, step, None);
+        let (loss, grad) = rt.grad_step(&model, &params, &ArgValue::I32(&b.x_i32), &b.y)?;
+        let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
+        let comp = codec.encode(&rt, &model, &grad, &mut rng)?;
+        let msg = wire::WorkerMsg { step: step as u32, worker: id, comp };
+        let mut payload = loss.to_le_bytes().to_vec();
+        payload.extend_from_slice(&wire::encode(&msg));
+        port.send(&Frame::grad(payload))?;
+        step += 1;
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    println!("cluster: leader on {addr}, spawning {M} workers");
+
+    let workers: Vec<_> = (0..M as u32)
+        .map(|id| {
+            let a = addr.clone();
+            std::thread::spawn(move || worker(a, id).unwrap())
+        })
+        .collect();
+
+    // accept M workers (ordered by their hello ids)
+    let mut streams: Vec<Option<std::net::TcpStream>> = (0..M).map(|_| None).collect();
+    for _ in 0..M {
+        let (mut s, _) = listener.accept()?;
+        let hello = read_frame(&mut s)?;
+        let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
+        streams[id] = Some(s);
+    }
+    let mut leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect());
+
+    // the leader needs only metadata (for params/init), not XLA execution
+    let rt = Runtime::load_default()?;
+    let model = rt.meta.models["tx-tiny"].clone();
+    let mut server = Server::new(
+        model.init_params(1),
+        Box::new(mlmc_dist::optim::Sgd { lr: 0.1 }),
+        agg_kind(&mlmc_dist::config::Method::MlmcTopK),
+    );
+
+    let t0 = std::time::Instant::now();
+    for step in 0..STEPS {
+        leader.broadcast(&Frame::params(params_to_bytes(&server.params)))?;
+        let frames = leader.gather()?;
+        let mut msgs = Vec::with_capacity(frames.len());
+        let mut loss = 0.0f64;
+        for f in &frames {
+            loss += f32::from_le_bytes(f.payload[..4].try_into().unwrap()) as f64;
+            msgs.push(wire::decode(&f.payload[4..]).comp);
+        }
+        server.apply_round(&msgs);
+        if (step + 1) % 15 == 0 {
+            println!(
+                "step {:>3}  mean loss {:.4}  uplink {}",
+                step + 1,
+                loss / M as f64,
+                util::fmt_bits(server.total_bits)
+            );
+        }
+    }
+    leader.broadcast(&Frame::shutdown())?;
+    for w in workers {
+        w.join().unwrap();
+    }
+    println!(
+        "cluster done: {STEPS} rounds in {:.1}s, total uplink {}",
+        t0.elapsed().as_secs_f64(),
+        util::fmt_bits(server.total_bits)
+    );
+    Ok(())
+}

@@ -1,0 +1,289 @@
+"""AOT bridge: lower every L2 function to HLO *text* + JSON metadata.
+
+python runs exactly once (``make artifacts``); the rust coordinator loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and never
+touches python again.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.fx_truncate import fx_truncate
+from .kernels.rtn import rtn
+
+ELEMWISE_CHUNK = 65536
+
+# sparsification grids (fraction of the parameter count), per figure
+TX_FRACS = [0.01, 0.05, 0.1, 0.5]  # Figs. 1/2
+CNN_FRACS = [0.001, 0.005, 0.01, 0.05]  # Figs. 4/5
+LM_FRACS = [0.01]  # e2e driver
+
+DEFAULT_MODELS = ["tx-tiny", "tx-small", "cnn-tiny", "lm-small"]
+FULL_MODELS = DEFAULT_MODELS + ["cnn-small", "lm-med", "lm-bert"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(dtype, shape):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_meta(dtype, shape) -> Dict[str, Any]:
+    name = {jnp.float32: "f32", jnp.int32: "i32"}[dtype]
+    return {"dtype": name, "shape": list(shape)}
+
+
+class Emitter:
+    def __init__(self, out_dir: str, force: bool):
+        self.out_dir = out_dir
+        self.force = force
+        self.artifacts: Dict[str, Any] = {}
+
+    def emit(self, name: str, fn, inputs: List[Dict[str, Any]], extra: Dict[str, Any]):
+        """Lower `fn` at the given input specs and write `<name>.hlo.txt`."""
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        specs = [_spec({"f32": jnp.float32, "i32": jnp.int32}[i["dtype"]], i["shape"])
+                 for i in inputs]
+        abstract = jax.eval_shape(fn, *specs)
+        outputs = [_io_meta(o.dtype.type if hasattr(o.dtype, "type") else o.dtype, o.shape)
+                   for o in jax.tree_util.tree_leaves(abstract)]
+        meta = {"file": os.path.basename(path), "inputs": inputs, "outputs": outputs}
+        meta.update(extra)
+        self.artifacts[name] = meta
+        if os.path.exists(path) and not self.force:
+            print(f"  [cached] {name}")
+            return
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [lowered] {name} ({len(text)} chars)")
+
+
+def _param_meta(specs: List[M.ParamSpec], total: int) -> List[Dict[str, Any]]:
+    return [
+        {
+            "name": s.name,
+            "shape": list(s.shape),
+            "offset": s.offset,
+            "numel": s.numel,
+            "init": s.init,
+            "std": s.std,
+        }
+        for s in specs
+    ]
+
+
+def seg_size(p: int, frac: float) -> int:
+    return max(1, round(frac * p))
+
+
+def emit_tx(em: Emitter, cfg: M.TxConfig, fracs: List[float], models_meta):
+    specs, p = M.tx_param_spec(cfg)
+    b, s = cfg.batch, cfg.seq_len
+    y_shape = [b, s] if cfg.is_lm else [b]
+    ins = [
+        {"dtype": "f32", "shape": [p]},
+        {"dtype": "i32", "shape": [b, s]},
+        {"dtype": "i32", "shape": y_shape},
+    ]
+    base = {"model": cfg.name, "param_count": p}
+    em.emit(f"{cfg.name}_grad", M.tx_grad_fn(cfg), ins, dict(base, kind="grad"))
+    em.emit(f"{cfg.name}_eval", M.tx_eval_fn(cfg), ins, dict(base, kind="eval"))
+    seg_artifacts = {}
+    gradstats_artifacts = {}
+    for frac in fracs:
+        ssz = seg_size(p, frac)
+        pm = round(frac * 1000)
+        name = f"{cfg.name}_segstats_pm{pm}"
+        em.emit(
+            name,
+            M.seg_stats_fn(p, ssz),
+            [{"dtype": "f32", "shape": [p]}],
+            dict(base, kind="segstats", seg_size=ssz, n_segs=(p + ssz - 1) // ssz,
+                 frac_pm=pm),
+        )
+        seg_artifacts[str(pm)] = name
+        # fused grad + stats: one dispatch on the Alg. 3 hot path
+        gname = f"{cfg.name}_gradstats_pm{pm}"
+        em.emit(
+            gname,
+            M.tx_grad_stats_fn(cfg, ssz),
+            ins,
+            dict(base, kind="gradstats", seg_size=ssz,
+                 n_segs=(p + ssz - 1) // ssz, frac_pm=pm),
+        )
+        gradstats_artifacts[str(pm)] = gname
+    models_meta[cfg.name] = {
+        "kind": "lm" if cfg.is_lm else "tx",
+        "param_count": p,
+        "batch": b,
+        "seq_len": s,
+        "vocab": cfg.vocab,
+        "n_classes": cfg.n_classes,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "grad": f"{cfg.name}_grad",
+        "eval": f"{cfg.name}_eval",
+        "segstats": seg_artifacts,
+        "gradstats": gradstats_artifacts,
+        "params": _param_meta(specs, p),
+    }
+
+
+def emit_cnn(em: Emitter, cfg: M.CnnConfig, fracs: List[float], models_meta):
+    specs, p = M.cnn_param_spec(cfg)
+    b = cfg.batch
+    ins = [
+        {"dtype": "f32", "shape": [p]},
+        {"dtype": "f32", "shape": [b, cfg.image, cfg.image, cfg.in_channels]},
+        {"dtype": "i32", "shape": [b]},
+    ]
+    base = {"model": cfg.name, "param_count": p}
+    em.emit(f"{cfg.name}_grad", M.cnn_grad_fn(cfg), ins, dict(base, kind="grad"))
+    em.emit(f"{cfg.name}_eval", M.cnn_eval_fn(cfg), ins, dict(base, kind="eval"))
+    seg_artifacts = {}
+    gradstats_artifacts = {}
+    for frac in fracs:
+        ssz = seg_size(p, frac)
+        pm = round(frac * 1000)
+        name = f"{cfg.name}_segstats_pm{pm}"
+        em.emit(
+            name,
+            M.seg_stats_fn(p, ssz),
+            [{"dtype": "f32", "shape": [p]}],
+            dict(base, kind="segstats", seg_size=ssz, n_segs=(p + ssz - 1) // ssz,
+                 frac_pm=pm),
+        )
+        seg_artifacts[str(pm)] = name
+        gname = f"{cfg.name}_gradstats_pm{pm}"
+        em.emit(
+            gname,
+            M.cnn_grad_stats_fn(cfg, ssz),
+            ins,
+            dict(base, kind="gradstats", seg_size=ssz,
+                 n_segs=(p + ssz - 1) // ssz, frac_pm=pm),
+        )
+        gradstats_artifacts[str(pm)] = gname
+    models_meta[cfg.name] = {
+        "kind": "cnn",
+        "param_count": p,
+        "batch": b,
+        "image": cfg.image,
+        "in_channels": cfg.in_channels,
+        "n_classes": cfg.n_classes,
+        "grad": f"{cfg.name}_grad",
+        "eval": f"{cfg.name}_eval",
+        "segstats": seg_artifacts,
+        "gradstats": gradstats_artifacts,
+        "params": _param_meta(specs, p),
+    }
+
+
+def emit_elementwise(em: Emitter):
+    n = ELEMWISE_CHUNK
+
+    def fx_fn(x, pow2):
+        return (fx_truncate(x, pow2),)
+
+    def rtn_fn(x, delta, c):
+        return (rtn(x, delta, c),)
+
+    em.emit(
+        f"fx_truncate_c{n}",
+        fx_fn,
+        [{"dtype": "f32", "shape": [n]}, {"dtype": "f32", "shape": [1]}],
+        {"kind": "elementwise", "chunk": n},
+    )
+    em.emit(
+        f"rtn_c{n}",
+        rtn_fn,
+        [{"dtype": "f32", "shape": [n]}, {"dtype": "f32", "shape": [1]},
+         {"dtype": "f32", "shape": [1]}],
+        {"kind": "elementwise", "chunk": n},
+    )
+
+
+def emit_sanity(em: Emitter):
+    """Tiny known-answer artifact for runtime smoke tests."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    em.emit(
+        "sanity_matmul",
+        fn,
+        [{"dtype": "f32", "shape": [2, 2]}, {"dtype": "f32", "shape": [2, 2]}],
+        {"kind": "sanity"},
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="also emit lm-med/lm-bert/cnn-small")
+    ap.add_argument("--force", action="store_true", help="re-lower even if files exist")
+    ap.add_argument("--models", nargs="*", default=None, help="explicit model list")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out, args.force)
+    models_meta: Dict[str, Any] = {}
+
+    names = args.models if args.models else (FULL_MODELS if args.full else DEFAULT_MODELS)
+    print(f"AOT: emitting models {names} -> {args.out}")
+    for name in names:
+        if name in M.TX_CONFIGS:
+            cfg = M.TX_CONFIGS[name]
+            fracs = LM_FRACS if cfg.is_lm else TX_FRACS
+            emit_tx(em, cfg, fracs, models_meta)
+        elif name in M.CNN_CONFIGS:
+            emit_cnn(em, M.CNN_CONFIGS[name], CNN_FRACS, models_meta)
+        else:
+            print(f"unknown model {name}", file=sys.stderr)
+            sys.exit(1)
+    emit_elementwise(em)
+    emit_sanity(em)
+
+    meta = {"elemwise_chunk": ELEMWISE_CHUNK, "models": models_meta,
+            "artifacts": em.artifacts}
+    meta_path = os.path.join(args.out, "metadata.json")
+    # merge with an existing metadata.json so --models invocations extend it
+    if os.path.exists(meta_path) and not args.force:
+        with open(meta_path) as f:
+            old = json.load(f)
+        old_models = old.get("models", {})
+        old_artifacts = old.get("artifacts", {})
+        old_models.update(meta["models"])
+        old_artifacts.update(meta["artifacts"])
+        meta["models"], meta["artifacts"] = old_models, old_artifacts
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    print(f"wrote {meta_path}: {len(em.artifacts)} artifacts, {len(models_meta)} models")
+
+
+if __name__ == "__main__":
+    main()

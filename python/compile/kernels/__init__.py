@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+
+from .seg_energy import seg_energy, pad_rows  # noqa: F401
+from .fx_truncate import fx_truncate  # noqa: F401
+from .rtn import rtn  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""Pallas kernel: element-wise fixed-point truncation (paper §3.1).
+
+Truncates each (max-normalized, |x|<=1) element to its first l fractional
+bits: ``sign(x) * floor(|x| * 2^l) / 2^l``. The level enters as a runtime
+``pow2 = 2^l`` scalar so one AOT artifact serves all 63 levels — the
+multilevel compressor C^l of Definition 3.1 for the bit-wise family.
+
+TPU mapping: pure VPU elementwise op; 1-D tiles of BLOCK elements stream
+HBM→VMEM, the scalar rides along as a (1,)-block every grid step (on a
+real TPU it would live in SMEM via PrefetchScalarGridSpec; interpret mode
+has no SMEM distinction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _kernel(x_ref, p_ref, o_ref):
+    x = x_ref[...]
+    s = p_ref[0]
+    o_ref[...] = jnp.sign(x) * jnp.floor(jnp.abs(x) * s) / s
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fx_truncate(x: jnp.ndarray, pow2: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Fixed-point truncate a 1-D vector to the level encoded by ``pow2``.
+
+    ``len(x)`` must be a multiple of ``block`` (callers pad; the padding
+    values are truncated too and simply dropped on the host side).
+    """
+    (n,) = x.shape
+    b = min(block, n)
+    if n % b != 0:
+        raise ValueError(f"n={n} not a multiple of block={b}")
+    grid = (n // b,)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        interpret=True,
+    )(x, pow2)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle (up to dtype-appropriate tolerance) under pytest +
+hypothesis sweeps (see python/tests/test_kernels.py).
+
+The oracles also double as the semantic definition used by the rust layer:
+rust's native implementations (rust/src/compress/) are validated against
+vectors generated from these formulas in the integration tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def seg_energy_ref(mat: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise sum of squares.
+
+    ``mat`` has shape (num_segments, s): row l holds the l-th segment of
+    the magnitude-sorted gradient. Returns shape (num_segments,) with
+    ``out[l] = sum_j mat[l, j]**2`` — the (Delta^l)^2 table of Lemma 3.4.
+    """
+    m = mat.astype(jnp.float32)
+    return jnp.sum(m * m, axis=1)
+
+
+def fx_truncate_ref(x: jnp.ndarray, pow2: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-point truncation to level l (paper section 3.1).
+
+    Keeps the first l fractional bits of |x| (assuming |x| <= 1 after
+    normalization): ``sign(x) * floor(|x| * 2^l) / 2^l`` where
+    ``pow2 = 2^l`` is passed as a runtime (1,)-shaped array so a single
+    AOT artifact serves every level.
+    """
+    s = pow2.reshape(())
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) * s) / s
+
+
+def rtn_ref(x: jnp.ndarray, delta: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest quantization on a fixed grid (paper App. G.2).
+
+    ``C_RTN(v) = delta * clip(round(v / delta), -c, c)`` with grid spacing
+    ``delta = 2*c_val / (2^l - 1)`` chosen by the caller. ``delta`` and
+    ``c`` (the clip bound, in grid units) are runtime (1,)-shaped arrays.
+    """
+    d = delta.reshape(())
+    cc = c.reshape(())
+    return d * jnp.clip(jnp.round(x / d), -cc, cc)

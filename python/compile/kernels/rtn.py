@@ -1,0 +1,54 @@
+"""Pallas kernel: element-wise round-to-nearest quantization (App. G.2).
+
+``C_RTN^l(v) = delta^l * clip(round(v / delta^l), -c, c)`` with
+``delta^l = 2*c_val/(2^l - 1)``. ``delta`` and ``c`` are runtime scalars so
+one artifact serves every quantization level of the multilevel RTN
+compressor — the structured-quantization example for which no
+importance-sampling interpretation exists (paper §3.2).
+
+TPU mapping: VPU elementwise; same 1-D HBM→VMEM tiling as fx_truncate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _kernel(x_ref, d_ref, c_ref, o_ref):
+    x = x_ref[...]
+    d = d_ref[0]
+    c = c_ref[0]
+    o_ref[...] = d * jnp.clip(jnp.round(x / d), -c, c)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def rtn(
+    x: jnp.ndarray,
+    delta: jnp.ndarray,
+    c: jnp.ndarray,
+    block: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """RTN-quantize a 1-D vector on the grid (delta, clip c)."""
+    (n,) = x.shape
+    b = min(block, n)
+    if n % b != 0:
+        raise ValueError(f"n={n} not a multiple of block={b}")
+    grid = (n // b,)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        interpret=True,
+    )(x, delta, c)

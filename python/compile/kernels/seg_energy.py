@@ -1,0 +1,64 @@
+"""Pallas kernel: blocked per-segment squared-norm reduction.
+
+This is the L1 hot-spot of the adaptive MLMC path (Alg. 3): given the
+magnitude-sorted gradient laid out as a (num_segments, s) matrix, compute
+the squared l2-norm of every segment — the ``(Delta^l)^2`` table that
+Lemma 3.4 turns into the optimal level distribution
+``p^l ∝ Delta^l``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the paper did this on
+CUDA as a fused torch reduction; here each grid step streams a
+(BLOCK_ROWS, s) tile HBM→VMEM via BlockSpec and reduces it on the VPU
+(elementwise square + row sum — no MXU involvement). ``interpret=True``
+everywhere because CPU-PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 8 keeps the VMEM tile at 8*s floats; with the figure
+# configs (s up to ~0.5M elements) a single row is already VMEM-sized, so
+# the row-block is clamped at call time.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(x * x, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def seg_energy(mat: jnp.ndarray, block_rows: int = DEFAULT_BLOCK_ROWS) -> jnp.ndarray:
+    """Per-row sum of squares of a (rows, s) matrix via a Pallas reduction.
+
+    ``rows`` must be a multiple of ``block_rows`` (callers pad with zero
+    rows; zero rows contribute zero energy so padding is harmless).
+    """
+    rows, s = mat.shape
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, s), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        interpret=True,
+    )(mat)
+
+
+def pad_rows(mat: jnp.ndarray, block_rows: int = DEFAULT_BLOCK_ROWS) -> jnp.ndarray:
+    """Zero-pad the row dimension up to a multiple of ``block_rows``."""
+    rows = mat.shape[0]
+    br = min(block_rows, rows) if rows else block_rows
+    rem = rows % br
+    if rem == 0:
+        return mat
+    return jnp.pad(mat, ((0, br - rem), (0, 0)))

@@ -1,0 +1,384 @@
+"""L2: JAX model definitions with *flat* parameter vectors.
+
+Every model is a pure function of a single f32[P] parameter vector so the
+rust coordinator owns exactly one buffer per model: the server aggregates
+MLMC gradient estimates into a flat f32[P] and applies the optimizer to a
+flat f32[P]. Unflattening happens inside the jitted graph with static
+offsets (free at run time — XLA fuses the slices into the consumers).
+
+Models:
+  * ``TxConfig`` — byte-level pre-LN transformer; ``n_classes > 0`` gives a
+    mean-pool sequence classifier (the GLUE-SST2 stand-in of Figs. 1/2/6),
+    ``n_classes == 0`` gives a causal LM (the e2e training driver).
+  * ``CnnConfig`` — small conv net on 32x32x3 images (the CIFAR-10/ResNet18
+    stand-in of Figs. 3/4/5).
+
+Alongside loss/grad/eval, ``seg_stats`` computes the adaptive-MLMC level
+statistics of Lemma 3.4 — |g| sorted descending, segmented, per-segment
+energies via the L1 Pallas kernel — plus the sort permutation so the rust
+side can extract the sampled residual segment in O(s).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.seg_energy import seg_energy, pad_rows
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named tensor inside the flat parameter vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "normal" | "zeros" | "ones"
+    std: float = 0.0
+    offset: int = 0  # filled in by `layout`
+
+    @property
+    def numel(self) -> int:
+        return int(math.prod(self.shape))
+
+
+def layout(specs: List[ParamSpec]) -> Tuple[List[ParamSpec], int]:
+    """Assign offsets; return (specs, total parameter count)."""
+    out, off = [], 0
+    for s in specs:
+        out.append(dataclasses.replace(s, offset=off))
+        off += s.numel
+    return out, off
+
+
+def unflatten(flat: jnp.ndarray, specs: List[ParamSpec]) -> Dict[str, jnp.ndarray]:
+    return {
+        s.name: jax.lax.slice(flat, (s.offset,), (s.offset + s.numel,)).reshape(s.shape)
+        for s in specs
+    }
+
+
+def init_flat(specs: List[ParamSpec], total: int, seed: int = 0) -> jnp.ndarray:
+    """Python-side init (tests / parity checks; rust re-implements this spec)."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for s in specs:
+        key, sub = jax.random.split(key)
+        if s.init == "normal":
+            parts.append(jax.random.normal(sub, s.shape, jnp.float32).reshape(-1) * s.std)
+        elif s.init == "ones":
+            parts.append(jnp.ones(s.numel, jnp.float32))
+        else:
+            parts.append(jnp.zeros(s.numel, jnp.float32))
+    flat = jnp.concatenate(parts)
+    assert flat.shape == (total,)
+    return flat
+
+
+# --------------------------------------------------------------------------
+# Transformer
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TxConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+    vocab: int = 256
+    n_classes: int = 0  # 0 => causal LM
+
+    @property
+    def is_lm(self) -> bool:
+        return self.n_classes == 0
+
+
+def tx_param_spec(cfg: TxConfig) -> Tuple[List[ParamSpec], int]:
+    d, f = cfg.d_model, cfg.d_ff
+    std = 0.02
+    out_std = std / math.sqrt(2.0 * cfg.n_layers)
+    specs = [
+        ParamSpec("tok_emb", (cfg.vocab, d), "normal", std),
+        ParamSpec("pos_emb", (cfg.seq_len, d), "normal", std),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        specs += [
+            ParamSpec(p + "ln1_g", (d,), "ones"),
+            ParamSpec(p + "ln1_b", (d,), "zeros"),
+            ParamSpec(p + "wq", (d, d), "normal", std),
+            ParamSpec(p + "wk", (d, d), "normal", std),
+            ParamSpec(p + "wv", (d, d), "normal", std),
+            ParamSpec(p + "wo", (d, d), "normal", out_std),
+            ParamSpec(p + "bq", (d,), "zeros"),
+            ParamSpec(p + "bk", (d,), "zeros"),
+            ParamSpec(p + "bv", (d,), "zeros"),
+            ParamSpec(p + "bo", (d,), "zeros"),
+            ParamSpec(p + "ln2_g", (d,), "ones"),
+            ParamSpec(p + "ln2_b", (d,), "zeros"),
+            ParamSpec(p + "w1", (d, f), "normal", std),
+            ParamSpec(p + "b1", (f,), "zeros"),
+            ParamSpec(p + "w2", (f, d), "normal", out_std),
+            ParamSpec(p + "b2", (d,), "zeros"),
+        ]
+    specs += [
+        ParamSpec("lnf_g", (d,), "ones"),
+        ParamSpec("lnf_b", (d,), "zeros"),
+    ]
+    head_out = cfg.vocab if cfg.is_lm else cfg.n_classes
+    specs += [
+        ParamSpec("head_w", (d, head_out), "normal", std),
+        ParamSpec("head_b", (head_out,), "zeros"),
+    ]
+    return layout(specs)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, p, prefix, cfg: TxConfig):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    q = (x @ p[prefix + "wq"] + p[prefix + "bq"]).reshape(b, s, h, dh)
+    k = (x @ p[prefix + "wk"] + p[prefix + "bk"]).reshape(b, s, h, dh)
+    v = (x @ p[prefix + "wv"] + p[prefix + "bv"]).reshape(b, s, h, dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    if cfg.is_lm:
+        mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+    return out @ p[prefix + "wo"] + p[prefix + "bo"]
+
+
+def tx_forward(cfg: TxConfig, flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Return logits: (B, C) for classifier, (B, S, V) for LM."""
+    specs, _ = tx_param_spec(cfg)
+    p = unflatten(flat, specs)
+    h = p["tok_emb"][x] + p["pos_emb"][None, : x.shape[1]]
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        h = h + _attention(_layernorm(h, p[pre + "ln1_g"], p[pre + "ln1_b"]), p, pre, cfg)
+        m = _layernorm(h, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        h = h + jax.nn.gelu(m @ p[pre + "w1"] + p[pre + "b1"]) @ p[pre + "w2"] + p[pre + "b2"]
+    h = _layernorm(h, p["lnf_g"], p["lnf_b"])
+    if cfg.is_lm:
+        return h @ p["head_w"] + p["head_b"]
+    pooled = jnp.mean(h, axis=1)
+    return pooled @ p["head_w"] + p["head_b"]
+
+
+def tx_loss(cfg: TxConfig, flat, x, y) -> jnp.ndarray:
+    logits = tx_forward(cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if cfg.is_lm:
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    else:
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def tx_grad_fn(cfg: TxConfig):
+    def f(flat, x, y):
+        loss, grad = jax.value_and_grad(lambda fl: tx_loss(cfg, fl, x, y))(flat)
+        return (loss, grad)
+
+    return f
+
+
+def tx_eval_fn(cfg: TxConfig):
+    def f(flat, x, y):
+        logits = tx_forward(cfg, flat, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        pred = jnp.argmax(logits, axis=-1)
+        if cfg.is_lm:
+            nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        else:
+            nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        ncorrect = jnp.sum((pred == y).astype(jnp.float32))
+        return (jnp.mean(nll), ncorrect)
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# CNN
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    name: str
+    channels: Tuple[int, ...]
+    batch: int
+    image: int = 32
+    in_channels: int = 3
+    n_classes: int = 10
+
+
+def cnn_param_spec(cfg: CnnConfig) -> Tuple[List[ParamSpec], int]:
+    specs = []
+    cin = cfg.in_channels
+    for i, cout in enumerate(cfg.channels):
+        he = math.sqrt(2.0 / (3 * 3 * cin))
+        specs.append(ParamSpec(f"conv{i}_w", (3, 3, cin, cout), "normal", he))
+        specs.append(ParamSpec(f"conv{i}_b", (cout,), "zeros"))
+        cin = cout
+    side = cfg.image // (2 ** len(cfg.channels))
+    feat = side * side * cfg.channels[-1]
+    specs.append(ParamSpec("fc_w", (feat, cfg.n_classes), "normal", math.sqrt(2.0 / feat)))
+    specs.append(ParamSpec("fc_b", (cfg.n_classes,), "zeros"))
+    return layout(specs)
+
+
+def _avg_pool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) * 0.25
+
+
+def cnn_forward(cfg: CnnConfig, flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    specs, _ = cnn_param_spec(cfg)
+    p = unflatten(flat, specs)
+    h = x  # NHWC
+    for i in range(len(cfg.channels)):
+        h = jax.lax.conv_general_dilated(
+            h, p[f"conv{i}_w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + p[f"conv{i}_b"]
+        h = jax.nn.relu(h)
+        h = _avg_pool2(h)
+    h = h.reshape(h.shape[0], -1)
+    return h @ p["fc_w"] + p["fc_b"]
+
+
+def cnn_loss(cfg: CnnConfig, flat, x, y) -> jnp.ndarray:
+    logits = cnn_forward(cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.mean(-jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0])
+
+
+def cnn_grad_fn(cfg: CnnConfig):
+    def f(flat, x, y):
+        loss, grad = jax.value_and_grad(lambda fl: cnn_loss(cfg, fl, x, y))(flat)
+        return (loss, grad)
+
+    return f
+
+
+def cnn_eval_fn(cfg: CnnConfig):
+    def f(flat, x, y):
+        logits = cnn_forward(cfg, flat, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return (jnp.mean(nll), ncorrect)
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# Adaptive-MLMC segment statistics (Lemma 3.4) via the L1 Pallas kernel
+# --------------------------------------------------------------------------
+
+
+def tx_grad_stats_fn(cfg: TxConfig, s: int):
+    """Fused (params, x, y) -> (loss, grad, seg_sq, perm): the gradient
+    step and the adaptive-MLMC statistics in ONE executable, so the rust
+    hot path pays a single PJRT dispatch and never re-uploads the
+    gradient (EXPERIMENTS.md §Perf)."""
+    _, d = tx_param_spec(cfg)
+    stats = seg_stats_fn(d, s)
+
+    def f(flat, x, y):
+        loss, grad = jax.value_and_grad(lambda fl: tx_loss(cfg, fl, x, y))(flat)
+        seg_sq, perm = stats(grad)
+        return (loss, grad, seg_sq, perm)
+
+    return f
+
+
+def cnn_grad_stats_fn(cfg: CnnConfig, s: int):
+    """CNN variant of the fused grad+stats executable."""
+    _, d = cnn_param_spec(cfg)
+    stats = seg_stats_fn(d, s)
+
+    def f(flat, x, y):
+        loss, grad = jax.value_and_grad(lambda fl: cnn_loss(cfg, fl, x, y))(flat)
+        seg_sq, perm = stats(grad)
+        return (loss, grad, seg_sq, perm)
+
+    return f
+
+
+def seg_stats_fn(d: int, s: int):
+    """Build the (grad[d]) -> (seg_sq[L], perm[d]) stats function.
+
+    Sorts |g| descending (lax.sort_key_val so the permutation comes for
+    free), zero-pads to L = ceil(d/s) full segments, and reduces each
+    segment's energy with the Pallas kernel. ``seg_sq[l-1] = (Delta^l)^2``
+    and ``perm[(l-1)*s : l*s]`` are the original indices of segment l.
+    """
+    n_segs = (d + s - 1) // s
+
+    def f(grad: jnp.ndarray):
+        a = jnp.abs(grad)
+        iota = jax.lax.iota(jnp.int32, d)
+        # ascending sort of -|g|  ==  descending sort of |g|
+        _, perm = jax.lax.sort_key_val(-a, iota)
+        svals = a[perm]
+        pad = n_segs * s - d
+        svals = jnp.pad(svals, (0, pad))
+        mat = pad_rows(svals.reshape(n_segs, s))
+        seg_sq = seg_energy(mat)[:n_segs]
+        return (seg_sq, perm)
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# Model registry
+# --------------------------------------------------------------------------
+
+TX_CONFIGS = {
+    # figure-scale classifier (SST2 stand-in, Figs. 1/2/6)
+    "tx-tiny": TxConfig("tx-tiny", d_model=64, n_layers=2, n_heads=4, d_ff=256,
+                        seq_len=32, batch=8, n_classes=2),
+    # integration-scale classifier
+    "tx-small": TxConfig("tx-small", d_model=128, n_layers=4, n_heads=4, d_ff=512,
+                         seq_len=64, batch=8, n_classes=2),
+    # e2e causal LMs
+    "lm-small": TxConfig("lm-small", d_model=256, n_layers=4, n_heads=8, d_ff=1024,
+                         seq_len=128, batch=8),
+    "lm-med": TxConfig("lm-med", d_model=384, n_layers=6, n_heads=8, d_ff=1536,
+                       seq_len=128, batch=8),
+    # BERT-base-scale config (smoke-tested only on this single-core testbed)
+    "lm-bert": TxConfig("lm-bert", d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+                        seq_len=128, batch=4),
+}
+
+CNN_CONFIGS = {
+    # figure-scale CNN (CIFAR-10/ResNet18 stand-in, Figs. 3/4/5)
+    "cnn-tiny": CnnConfig("cnn-tiny", channels=(8, 16, 32), batch=16),
+    "cnn-small": CnnConfig("cnn-small", channels=(16, 32, 64), batch=32),
+}
+
+
+def param_count(name: str) -> int:
+    if name in TX_CONFIGS:
+        return tx_param_spec(TX_CONFIGS[name])[1]
+    return cnn_param_spec(CNN_CONFIGS[name])[1]

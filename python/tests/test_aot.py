@@ -1,0 +1,103 @@
+"""AOT metadata/artifact consistency: everything rust will load must exist
+and match the declared shapes.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+META = os.path.join(ART, "metadata.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(META), reason="run `make artifacts` first"
+)
+
+
+def _meta():
+    with open(META) as f:
+        return json.load(f)
+
+
+def test_all_artifact_files_exist():
+    meta = _meta()
+    assert len(meta["artifacts"]) >= 10
+    for name, art in meta["artifacts"].items():
+        path = os.path.join(ART, art["file"])
+        assert os.path.exists(path), f"missing {path}"
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+
+
+def test_model_entries_reference_artifacts():
+    meta = _meta()
+    for mname, m in meta["models"].items():
+        assert m["grad"] in meta["artifacts"]
+        assert m["eval"] in meta["artifacts"]
+        for art in m["segstats"].values():
+            assert art in meta["artifacts"]
+        assert m["param_count"] == M.param_count(mname)
+        # param spec covers the whole vector contiguously
+        off = 0
+        for ps in m["params"]:
+            assert ps["offset"] == off
+            off += ps["numel"]
+        assert off == m["param_count"]
+
+
+def test_grad_artifact_io_shapes():
+    meta = _meta()
+    for mname, m in meta["models"].items():
+        art = meta["artifacts"][m["grad"]]
+        p = m["param_count"]
+        assert art["inputs"][0] == {"dtype": "f32", "shape": [p]}
+        # outputs: loss scalar + grad[p]
+        assert art["outputs"][0]["shape"] == []
+        assert art["outputs"][1] == {"dtype": "f32", "shape": [p]}
+
+
+def test_segstats_artifact_io_shapes():
+    meta = _meta()
+    for mname, m in meta["models"].items():
+        p = m["param_count"]
+        for art_name in m["segstats"].values():
+            art = meta["artifacts"][art_name]
+            s, L = art["seg_size"], art["n_segs"]
+            assert L == (p + s - 1) // s
+            assert art["inputs"] == [{"dtype": "f32", "shape": [p]}]
+            assert art["outputs"][0] == {"dtype": "f32", "shape": [L]}
+            assert art["outputs"][1] == {"dtype": "i32", "shape": [p]}
+
+
+def test_elementwise_artifacts():
+    meta = _meta()
+    n = meta["elemwise_chunk"]
+    fx = meta["artifacts"][f"fx_truncate_c{n}"]
+    assert fx["inputs"] == [
+        {"dtype": "f32", "shape": [n]},
+        {"dtype": "f32", "shape": [1]},
+    ]
+    rt = meta["artifacts"][f"rtn_c{n}"]
+    assert len(rt["inputs"]) == 3
+
+
+def test_seg_size_helper():
+    assert aot.seg_size(100, 0.01) == 1
+    assert aot.seg_size(118658, 0.5) == 59329
+    assert aot.seg_size(3, 0.001) == 1  # never zero
+
+
+def test_hlo_text_roundtrip_shape():
+    """Lower a trivial fn and confirm to_hlo_text emits parseable HLO text."""
+    def fn(x):
+        return (x * 2.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[4]" in text

@@ -1,0 +1,165 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+hypothesis sweeps shapes, dtypes, and value ranges; explicit cases pin the
+edge behaviours the rust layer relies on (zeros, sign handling, clipping).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import seg_energy, fx_truncate, rtn, ref, pad_rows
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = np.float32
+
+
+def _rand(shape, seed, lo=-4.0, hi=4.0, dtype=F32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(dtype))
+
+
+# --------------------------------------------------------------------------
+# seg_energy
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows_blocks=st.integers(1, 6),
+    block_rows=st.sampled_from([1, 2, 4, 8]),
+    s=st.integers(1, 67),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_seg_energy_matches_ref(rows_blocks, block_rows, s, seed):
+    rows = rows_blocks * block_rows
+    mat = _rand((rows, s), seed)
+    got = seg_energy(mat, block_rows=block_rows)
+    want = ref.seg_energy_ref(mat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_seg_energy_dtypes(dtype):
+    mat = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)), dtype=dtype)
+    got = seg_energy(mat)
+    want = ref.seg_energy_ref(mat)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_seg_energy_zero_rows_contribute_zero():
+    mat = jnp.zeros((8, 4), jnp.float32)
+    assert np.all(np.asarray(seg_energy(mat)) == 0.0)
+
+
+def test_seg_energy_is_sq_norm():
+    mat = _rand((8, 32), 7)
+    got = np.asarray(seg_energy(mat))
+    want = np.sum(np.asarray(mat) ** 2, axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_pad_rows():
+    mat = jnp.ones((5, 3))
+    padded = pad_rows(mat, block_rows=4)
+    assert padded.shape == (8, 3)
+    assert np.all(np.asarray(padded[5:]) == 0)
+    # already aligned: no-op
+    assert pad_rows(jnp.ones((8, 3)), block_rows=4).shape == (8, 3)
+
+
+def test_seg_energy_rejects_misaligned():
+    with pytest.raises(ValueError):
+        seg_energy(jnp.ones((7, 3)), block_rows=4)
+
+
+# --------------------------------------------------------------------------
+# fx_truncate
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(1, 4),
+    block=st.sampled_from([8, 64, 256]),
+    level=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fx_truncate_matches_ref(nblocks, block, level, seed):
+    x = _rand((nblocks * block,), seed, lo=-1.0, hi=1.0)
+    pow2 = jnp.asarray([2.0**level], jnp.float32)
+    got = fx_truncate(x, pow2, block=block)
+    want = ref.fx_truncate_ref(x, pow2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_fx_truncate_distortion_bound():
+    """|C^l(e) - e| <= 2^-l for normalized entries (paper section 3.1)."""
+    x = _rand((4096,), 3, lo=-1.0, hi=1.0)
+    for level in (1, 2, 5, 10, 20):
+        pow2 = jnp.asarray([2.0**level], jnp.float32)
+        got = np.asarray(fx_truncate(x, pow2))
+        assert np.max(np.abs(got - np.asarray(x))) <= 2.0**-level + 1e-7
+
+
+def test_fx_truncate_sign_and_zero():
+    x = jnp.asarray([0.0, -0.75, 0.75, -1.0, 1.0], jnp.float32)
+    pow2 = jnp.asarray([2.0], jnp.float32)  # level 1: keep one bit
+    got = np.asarray(fx_truncate(x, pow2, block=5))
+    np.testing.assert_array_equal(got, [0.0, -0.5, 0.5, -1.0, 1.0])
+
+
+def test_fx_truncate_levels_nested():
+    """Truncation to l bits then checking level l-1 prefix: residual is one bit."""
+    x = _rand((1024,), 11, lo=-1.0, hi=1.0)
+    for level in (2, 3, 8):
+        hi = np.asarray(fx_truncate(x, jnp.asarray([2.0**level], jnp.float32)))
+        lo = np.asarray(fx_truncate(x, jnp.asarray([2.0 ** (level - 1)], jnp.float32)))
+        resid = np.abs(hi - lo)
+        ok = np.isclose(resid, 0.0) | np.isclose(resid, 2.0**-level)
+        assert ok.all()
+
+
+# --------------------------------------------------------------------------
+# rtn
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(1, 4),
+    block=st.sampled_from([8, 64, 256]),
+    level=st.integers(1, 12),
+    cval=st.floats(0.5, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rtn_matches_ref(nblocks, block, level, cval, seed):
+    x = _rand((nblocks * block,), seed, lo=-2 * cval, hi=2 * cval)
+    c_units = (2.0**level - 1) / 2.0
+    delta = jnp.asarray([2.0 * cval / (2.0**level - 1)], jnp.float32)
+    c = jnp.asarray([c_units], jnp.float32)
+    got = rtn(x, delta, c, block=block)
+    want = ref.rtn_ref(x, delta, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_rtn_clip():
+    x = jnp.asarray([100.0, -100.0, 0.06, 0.05], jnp.float32)
+    delta = jnp.asarray([0.1], jnp.float32)
+    c = jnp.asarray([3.0], jnp.float32)
+    got = np.asarray(rtn(x, delta, c, block=4))
+    # note 0.05/0.1 = 0.5 rounds to 0: jnp.round is round-half-to-EVEN,
+    # and rust's native RTN mirrors that with f32::round_ties_even.
+    np.testing.assert_allclose(got, [0.3, -0.3, 0.1, 0.0], rtol=1e-6)
+
+
+def test_rtn_quantization_error_half_delta():
+    x = _rand((4096,), 5, lo=-0.9, hi=0.9)
+    delta = jnp.asarray([0.25], jnp.float32)
+    c = jnp.asarray([100.0], jnp.float32)  # no clipping in range
+    got = np.asarray(rtn(x, delta, c))
+    assert np.max(np.abs(got - np.asarray(x))) <= 0.125 + 1e-7

@@ -1,0 +1,155 @@
+"""L2 model correctness: shapes, gradients (finite differences), training
+signal, causal masking, and the seg_stats contract the rust layer depends on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tx_setup(name="tx-tiny", seed=0):
+    cfg = M.TX_CONFIGS[name]
+    specs, p = M.tx_param_spec(cfg)
+    flat = M.init_flat(specs, p, seed=seed)
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.randint(k, (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+    if cfg.is_lm:
+        y = jnp.roll(x, -1, axis=1)
+    else:
+        y = jax.random.randint(jax.random.PRNGKey(seed + 1), (cfg.batch,), 0, cfg.n_classes)
+    return cfg, specs, p, flat, x, y
+
+
+def test_param_layout_contiguous():
+    for name in ("tx-tiny", "tx-small"):
+        specs, total = M.tx_param_spec(M.TX_CONFIGS[name])
+        off = 0
+        for s in specs:
+            assert s.offset == off
+            off += s.numel
+        assert off == total
+    specs, total = M.cnn_param_spec(M.CNN_CONFIGS["cnn-tiny"])
+    assert specs[-1].offset + specs[-1].numel == total
+
+
+def test_tx_classifier_shapes():
+    cfg, specs, p, flat, x, y = _tx_setup()
+    logits = M.tx_forward(cfg, flat, x)
+    assert logits.shape == (cfg.batch, cfg.n_classes)
+    loss, grad = jax.jit(M.tx_grad_fn(cfg))(flat, x, y)
+    assert loss.shape == () and grad.shape == (p,)
+    assert bool(jnp.isfinite(loss)) and bool(jnp.all(jnp.isfinite(grad)))
+
+
+def test_tx_grad_matches_finite_difference():
+    cfg, specs, p, flat, x, y = _tx_setup()
+    loss_fn = jax.jit(lambda fl: M.tx_loss(cfg, fl, x, y))
+    g = jax.jit(jax.grad(lambda fl: M.tx_loss(cfg, fl, x, y)))(flat)
+    rng = np.random.default_rng(0)
+    idxs = rng.choice(p, size=8, replace=False)
+    eps = 1e-3
+    for i in idxs:
+        e = jnp.zeros(p).at[i].set(eps)
+        fd = (loss_fn(flat + e) - loss_fn(flat - e)) / (2 * eps)
+        np.testing.assert_allclose(float(fd), float(g[i]), rtol=0.15, atol=5e-4)
+
+
+def test_tx_sgd_reduces_loss():
+    cfg, specs, p, flat, x, y = _tx_setup()
+    grad_fn = jax.jit(M.tx_grad_fn(cfg))
+    loss0, g = grad_fn(flat, x, y)
+    for _ in range(20):
+        _, g = grad_fn(flat, x, y)
+        flat = flat - 0.5 * g
+    loss1, _ = grad_fn(flat, x, y)
+    assert float(loss1) < float(loss0)
+
+
+def test_lm_causal_mask():
+    """Changing a future token must not change the logits at earlier steps."""
+    cfg, specs, p, flat, x, y = _tx_setup("lm-small")
+    cfg_small = M.TxConfig("t", d_model=32, n_layers=2, n_heads=2, d_ff=64,
+                           seq_len=16, batch=2)
+    specs, p = M.tx_param_spec(cfg_small)
+    flat = M.init_flat(specs, p)
+    k = jax.random.PRNGKey(0)
+    x = jax.random.randint(k, (2, 16), 0, 256)
+    lg1 = M.tx_forward(cfg_small, flat, x)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % 256)
+    lg2 = M.tx_forward(cfg_small, flat, x2)
+    np.testing.assert_allclose(np.asarray(lg1[:, :-1]), np.asarray(lg2[:, :-1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_eval_counts_bounded():
+    cfg, specs, p, flat, x, y = _tx_setup()
+    loss, nc = jax.jit(M.tx_eval_fn(cfg))(flat, x, y)
+    assert 0 <= float(nc) <= cfg.batch
+
+
+def test_cnn_shapes_and_grad():
+    cfg = M.CNN_CONFIGS["cnn-tiny"]
+    specs, p = M.cnn_param_spec(cfg)
+    flat = M.init_flat(specs, p)
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (cfg.batch, 32, 32, 3))
+    y = jax.random.randint(k, (cfg.batch,), 0, 10)
+    loss, grad = jax.jit(M.cnn_grad_fn(cfg))(flat, x, y)
+    assert grad.shape == (p,)
+    assert abs(float(loss) - np.log(10)) < 1.0  # near-uniform at init
+    # training signal
+    for _ in range(15):
+        _, g = jax.jit(M.cnn_grad_fn(cfg))(flat, x, y)
+        flat = flat - 0.5 * g
+    loss1, _ = jax.jit(M.cnn_grad_fn(cfg))(flat, x, y)
+    assert float(loss1) < float(loss)
+
+
+def test_cnn_eval():
+    cfg = M.CNN_CONFIGS["cnn-tiny"]
+    specs, p = M.cnn_param_spec(cfg)
+    flat = M.init_flat(specs, p)
+    k = jax.random.PRNGKey(1)
+    x = jax.random.normal(k, (cfg.batch, 32, 32, 3))
+    y = jax.random.randint(k, (cfg.batch,), 0, 10)
+    loss, nc = jax.jit(M.cnn_eval_fn(cfg))(flat, x, y)
+    assert 0 <= float(nc) <= cfg.batch
+
+
+# --------------------------------------------------------------------------
+# seg_stats: the contract consumed by rust/src/mlmc/adaptive.rs
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,s", [(1000, 10), (1000, 7), (128, 128), (128, 1), (37, 5)])
+def test_seg_stats_contract(d, s):
+    rng = np.random.default_rng(42)
+    g = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    seg_sq, perm = jax.jit(M.seg_stats_fn(d, s))(g)
+    n_segs = (d + s - 1) // s
+    assert seg_sq.shape == (n_segs,)
+    assert perm.shape == (d,)
+    perm_np = np.asarray(perm)
+    # perm is a permutation ordering |g| descending
+    assert sorted(perm_np.tolist()) == list(range(d))
+    a = np.abs(np.asarray(g))
+    sorted_a = a[perm_np]
+    assert np.all(np.diff(sorted_a) <= 1e-12)
+    # seg_sq[l] equals the energy of segment l of the sorted vector
+    padded = np.pad(sorted_a, (0, n_segs * s - d))
+    want = np.sum(padded.reshape(n_segs, s) ** 2, axis=1)
+    np.testing.assert_allclose(np.asarray(seg_sq), want, rtol=1e-5, atol=1e-7)
+    # total energy is preserved: sum of seg energies == ||g||^2
+    np.testing.assert_allclose(np.sum(np.asarray(seg_sq)), np.sum(a * a), rtol=1e-5)
+
+
+def test_seg_stats_monotone_energy():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_t(3, size=4096).astype(np.float32))
+    seg_sq, _ = jax.jit(M.seg_stats_fn(4096, 64))(g)
+    assert np.all(np.diff(np.asarray(seg_sq)) <= 1e-6)

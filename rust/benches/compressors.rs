@@ -1,0 +1,50 @@
+//! Compressor micro-benchmarks (L3 hot path): per-compressor throughput
+//! at realistic gradient sizes. The Fig. 1 model (our tx stand-in) has
+//! d ≈ 1.2e5; the paper's BERT has 1.1e8 — throughput in Gelem/s is the
+//! scale-free number. `MLMC_BENCH_MS=100 cargo bench` for a quick pass.
+
+use mlmc_dist::benchlib::{black_box, Bench};
+use mlmc_dist::compress::{Compressor, FixedPoint, Qsgd, RandK, Rtn, SignSgd, TopK};
+use mlmc_dist::tensor::{select, Rng};
+
+fn gvec(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..d).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    let mut b = Bench::new("compressors");
+    for d in [100_000usize, 1_000_000] {
+        let v = gvec(d, 1);
+        let k = d / 100;
+        let de = d as u64;
+
+        b.case_elems(&format!("topk_select d={d} k=1%"), de, || {
+            black_box(select::top_k_indices(&v, k))
+        });
+        b.case_elems(&format!("argsort_desc d={d}"), de, || {
+            black_box(select::argsort_desc_abs(&v))
+        });
+
+        let mut rng = Rng::new(2);
+        b.case_elems(&format!("topk_compress d={d} k=1%"), de, || {
+            black_box(TopK { k }.compress(&v, &mut rng))
+        });
+        b.case_elems(&format!("randk_compress d={d} k=1%"), de, || {
+            black_box(RandK { k }.compress(&v, &mut rng))
+        });
+        b.case_elems(&format!("fixed_point f=1 d={d}"), de, || {
+            black_box(FixedPoint { f: 1 }.compress(&v, &mut rng))
+        });
+        b.case_elems(&format!("rtn l=4 d={d}"), de, || {
+            black_box(Rtn { level: 4 }.compress(&v, &mut rng))
+        });
+        b.case_elems(&format!("qsgd s=1 d={d}"), de, || {
+            black_box(Qsgd { s: 1 }.compress(&v, &mut rng))
+        });
+        b.case_elems(&format!("sign d={d}"), de, || {
+            black_box(SignSgd.compress(&v, &mut rng))
+        });
+    }
+    b.write_csv();
+}

@@ -1,0 +1,59 @@
+//! MLMC estimator micro-benchmarks: the Alg. 2/3 encode path — prepare
+//! (sort vs injected L1 stats), Δ tables, residual extraction, and the
+//! full draw. The from_stats row quantifies exactly what offloading the
+//! sort + segment energies to the L1 Pallas kernel saves rust.
+
+use mlmc_dist::benchlib::{black_box, Bench};
+use mlmc_dist::mlmc::{
+    stopk::StopkCtx, MlCtx, MlFixedPoint, MlRtn, MlSTopK, Mlmc, Multilevel, Schedule,
+};
+use mlmc_dist::tensor::{select, Rng};
+
+fn gvec(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..d).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    let mut b = Bench::new("mlmc");
+    for d in [100_000usize, 1_000_000] {
+        let v = gvec(d, 1);
+        let s = d / 100;
+        let de = d as u64;
+        let ml = MlSTopK { s };
+
+        b.case_elems(&format!("stopk_prepare(sort) d={d}"), de, || {
+            black_box(ml.prepare(&v).levels())
+        });
+
+        // precomputed stats (what the L1 segstats artifact hands back)
+        let order = select::argsort_desc_abs(&v);
+        let sorted: Vec<f32> = order.iter().map(|&i| v[i as usize].abs()).collect();
+        let seg_sq = select::segment_sq_norms(&sorted, s);
+        b.case_elems(&format!("stopk_from_stats d={d}"), de, || {
+            let ctx = StopkCtx::from_stats(&v, s, seg_sq.clone(), order.clone());
+            black_box(ctx.levels())
+        });
+
+        let ctx = ml.prepare(&v);
+        b.case(&format!("stopk_residual(seg) d={d}"), || black_box(ctx.residual(3)));
+        b.case(&format!("stopk_deltas d={d}"), || black_box(ctx.deltas()));
+
+        let mut rng = Rng::new(3);
+        let mlmc = Mlmc::new(Box::new(MlSTopK { s }), Schedule::Adaptive);
+        b.case_elems(&format!("mlmc_stopk_full_draw d={d}"), de, || {
+            black_box(mlmc.draw(&v, &mut rng).level)
+        });
+
+        let fxp = Mlmc::new(Box::new(MlFixedPoint::default()), Schedule::Default);
+        b.case_elems(&format!("mlmc_fxp_draw d={d}"), de, || {
+            black_box(fxp.draw(&v, &mut rng).level)
+        });
+
+        let rtn = Mlmc::new(Box::new(MlRtn::default()), Schedule::Default);
+        b.case_elems(&format!("mlmc_rtn_draw(static) d={d}"), de, || {
+            black_box(rtn.draw(&v, &mut rng).level)
+        });
+    }
+    b.write_csv();
+}

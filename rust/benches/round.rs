@@ -1,0 +1,96 @@
+//! End-to-end round benchmarks — the per-figure cost model:
+//! * pure-L3 rounds (server aggregation + optimizer) at the paper's
+//!   worker counts M ∈ {4, 32},
+//! * full three-layer rounds through PJRT (grad exec + encode + apply)
+//!   on the figure models, incl. the L1 segstats path of Alg. 3 —
+//!   this is the row that EXPERIMENTS.md §Perf tracks before/after.
+//!
+//! Requires `make artifacts` for the XLA rows (skipped otherwise).
+
+use mlmc_dist::benchlib::{black_box, Bench};
+use mlmc_dist::compress::Compressed;
+use mlmc_dist::config::TrainConfig;
+use mlmc_dist::coordinator::{build_encoder, Server};
+use mlmc_dist::data::Task;
+use mlmc_dist::ef::AggKind;
+use mlmc_dist::runtime::{ArgValue, Runtime};
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::train::build_codec;
+
+fn main() {
+    let mut b = Bench::new("round");
+
+    // ---- L3-only rounds -------------------------------------------------
+    let d = 1_000_000usize;
+    let mut rng = Rng::new(1);
+    let grad: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    for m in [4usize, 32] {
+        for method in ["mlmc-topk", "topk", "sgd"] {
+            let mut cfg = TrainConfig::default();
+            cfg.set("method", method).unwrap();
+            cfg.frac_pm = 10;
+            cfg.use_l1_stats = false;
+            let mut encoders: Vec<_> = (0..m).map(|_| build_encoder(&cfg, d)).collect();
+            let mut server = Server::new(
+                vec![0.0; d],
+                Box::new(mlmc_dist::optim::Sgd { lr: 0.01 }),
+                AggKind::Fresh,
+            );
+            b.case(&format!("l3_round {method} M={m} d=1M"), || {
+                let msgs: Vec<Compressed> = encoders
+                    .iter_mut()
+                    .map(|e| e.encode(&grad, &mut rng))
+                    .collect();
+                black_box(server.apply_round(&msgs))
+            });
+        }
+    }
+
+    // ---- full three-layer rounds on real artifacts ----------------------
+    let dir = mlmc_dist::util::artifacts_dir();
+    if !dir.join("metadata.json").exists() {
+        eprintln!("no artifacts: skipping XLA round benches (run `make artifacts`)");
+        b.write_csv();
+        return;
+    }
+    let rt = Runtime::load_default().unwrap();
+    for model_name in ["tx-tiny", "cnn-tiny"] {
+        let model = rt.meta.models[model_name].clone();
+        let task = Task::for_model(&model, 42);
+        let params = model.init_params(1);
+        let batch = task.train_batch(1, 0, 0, None);
+        let x = if model.is_image() {
+            ArgValue::F32(&batch.x_f32)
+        } else {
+            ArgValue::I32(&batch.x_i32)
+        };
+
+        b.case(&format!("xla_grad_step {model_name}"), || {
+            black_box(rt.grad_step(&model, &params, &x, &batch.y).unwrap().0)
+        });
+        let (_, grad) = rt.grad_step(&model, &params, &x, &batch.y).unwrap();
+        if let Some((&pm, _)) = model.segstats.iter().next() {
+            b.case(&format!("xla_segstats {model_name} pm={pm}"), || {
+                black_box(rt.seg_stats(&model, pm, &grad).unwrap().0.len())
+            });
+        }
+        // adaptive MLMC encode through both paths
+        let mut cfg = TrainConfig::default();
+        cfg.model = model_name.to_string();
+        cfg.set("method", "mlmc-topk").unwrap();
+        cfg.frac_pm = 10;
+        cfg.use_l1_stats = true;
+        let mut codec_l1 = build_codec(&cfg, &model);
+        b.case(&format!("encode_mlmc_l1stats {model_name}"), || {
+            let mut rng = Rng::new(5);
+            black_box(codec_l1.encode(&rt, &model, &grad, &mut rng).unwrap().wire_bits())
+        });
+        cfg.use_l1_stats = false;
+        let mut codec_rs = build_codec(&cfg, &model);
+        b.case(&format!("encode_mlmc_rustsort {model_name}"), || {
+            let mut rng = Rng::new(5);
+            black_box(codec_rs.encode(&rt, &model, &grad, &mut rng).unwrap().wire_bits())
+        });
+    }
+    b.write_csv();
+}

@@ -1,0 +1,66 @@
+//! Wire-codec micro-benchmarks: bit-packing, message encode/decode, and
+//! server-side aggregation (`add_into`) — everything between the
+//! compressor output and the optimizer.
+
+use mlmc_dist::benchlib::{black_box, Bench};
+use mlmc_dist::compress::{Compressed, Payload};
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::wire::{decode, encode, BitReader, BitWriter, WorkerMsg};
+
+fn main() {
+    let mut b = Bench::new("wire");
+    let d = 1_000_000u32;
+    let k = 10_000usize;
+    let mut rng = Rng::new(1);
+    let idx: Vec<u32> = (0..k).map(|_| rng.below(d as usize) as u32).collect();
+    let val: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+
+    b.case_elems("bitpack_write 20b x10k", k as u64, || {
+        let mut w = BitWriter::new();
+        for i in &idx {
+            w.push(*i as u64, 20);
+        }
+        black_box(w.finish())
+    });
+    let mut w = BitWriter::new();
+    for i in &idx {
+        w.push(*i as u64, 20);
+    }
+    let packed = w.finish();
+    b.case_elems("bitpack_read 20b x10k", k as u64, || {
+        let mut r = BitReader::new(&packed);
+        let mut acc = 0u64;
+        for _ in 0..k {
+            acc = acc.wrapping_add(r.pull(20));
+        }
+        black_box(acc)
+    });
+
+    let sparse = Compressed {
+        payload: Payload::Sparse { d, idx: idx.clone(), val: val.clone() },
+        extra_bits: 0,
+    };
+    let msg = WorkerMsg { step: 0, worker: 0, comp: sparse.clone() };
+    b.case_elems("encode_sparse 10k/1M", k as u64, || black_box(encode(&msg)));
+    let bytes = encode(&msg);
+    b.case_elems("decode_sparse 10k/1M", k as u64, || black_box(decode(&bytes)));
+
+    let dense = Compressed::dense((0..100_000).map(|i| i as f32).collect());
+    let dmsg = WorkerMsg { step: 0, worker: 0, comp: dense };
+    b.case_elems("encode_dense 100k", 100_000, || black_box(encode(&dmsg)));
+    let dbytes = encode(&dmsg);
+    b.case_elems("decode_dense 100k", 100_000, || black_box(decode(&dbytes)));
+
+    // server aggregation hot path
+    let mut acc = vec![0.0f32; d as usize];
+    b.case_elems("add_into sparse 10k/1M", k as u64, || {
+        sparse.add_into(&mut acc, 0.25);
+        black_box(acc[0])
+    });
+    let dense1m = Compressed::dense(vec![1.0f32; d as usize]);
+    b.case_elems("add_into dense 1M", d as u64, || {
+        dense1m.add_into(&mut acc, 0.25);
+        black_box(acc[0])
+    });
+    b.write_csv();
+}

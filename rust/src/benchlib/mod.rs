@@ -1,0 +1,209 @@
+//! Micro-benchmark harness (criterion-style; criterion itself is not in
+//! the offline vendor set — see DESIGN.md).
+//!
+//! `cargo bench` targets under `rust/benches/` use [`Bench`] with
+//! `harness = false`. Auto-calibrates iteration counts to a target
+//! duration, reports mean/p50/p95, and supports throughput annotations.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// optional elements-per-iteration for throughput reporting
+    pub elems: Option<u64>,
+}
+
+impl Stats {
+    pub fn throughput_gelem_s(&self) -> Option<f64> {
+        self.elems.map(|e| e as f64 / self.mean_ns)
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput_gelem_s() {
+            Some(t) => format!("  {:>8.3} Gelem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            tp
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{:.0} ns", ns)
+    }
+}
+
+/// Benchmark runner: collects cases, prints a report, optionally writes
+/// CSV under `results/bench_<suite>.csv`.
+pub struct Bench {
+    suite: String,
+    target: Duration,
+    pub results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // honour a quick mode for CI-style runs
+        let target = match std::env::var("MLMC_BENCH_MS") {
+            Ok(ms) => Duration::from_millis(ms.parse().unwrap_or(300)),
+            Err(_) => Duration::from_millis(300),
+        };
+        println!("== bench suite: {suite} ==");
+        Bench { suite: suite.into(), target, results: Vec::new() }
+    }
+
+    /// Run `f` repeatedly; `f` must return something observable to keep
+    /// the optimizer honest (its result is black-boxed).
+    pub fn case<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Stats {
+        self.case_with_elems(name, None, &mut f)
+    }
+
+    /// Like [`Bench::case`] with an elements-per-iteration annotation.
+    pub fn case_elems<R>(&mut self, name: &str, elems: u64, mut f: impl FnMut() -> R) -> &Stats {
+        self.case_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn case_with_elems<R>(
+        &mut self,
+        name: &str,
+        elems: Option<u64>,
+        f: &mut dyn FnMut() -> R,
+    ) -> &Stats {
+        // calibration: find iteration count that fills ~target/5
+        let mut iters = 1u64;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let el = t.elapsed();
+            if el >= self.target / 5 || iters >= 1 << 24 {
+                break;
+            }
+            let grow = if el.as_nanos() == 0 {
+                16
+            } else {
+                ((self.target.as_nanos() / 5 / el.as_nanos()) + 1).min(16) as u64
+            };
+            iters = (iters * grow.max(2)).min(1 << 24);
+        }
+        // measurement: batches of `iters` until target elapsed
+        let mut samples: Vec<f64> = Vec::new();
+        let begin = Instant::now();
+        while begin.elapsed() < self.target || samples.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+            if samples.len() >= 200 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+        let p95 = samples[p95_idx];
+        let stats = Stats {
+            name: name.to_string(),
+            iters: iters * samples.len() as u64,
+            mean_ns: mean,
+            p50_ns: p50,
+            p95_ns: p95,
+            elems,
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Write `results/bench_<suite>.csv`.
+    pub fn write_csv(&self) {
+        use std::io::Write;
+        let path = crate::util::results_dir().join(format!("bench_{}.csv", self.suite));
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let _ = writeln!(f, "name,iters,mean_ns,p50_ns,p95_ns,elems");
+            for s in &self.results {
+                let _ = writeln!(
+                    f,
+                    "{},{},{:.1},{:.1},{:.1},{}",
+                    s.name,
+                    s.iters,
+                    s.mean_ns,
+                    s.p50_ns,
+                    s.p95_ns,
+                    s.elems.map(|e| e.to_string()).unwrap_or_default()
+                );
+            }
+            println!("wrote {}", path.display());
+        }
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box re-export point).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(12.0), "12 ns");
+        assert_eq!(fmt_ns(1500.0), "1.500 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3e9), "3.000 s");
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("MLMC_BENCH_MS", "20");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        let s = b.case("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p95_ns >= s.p50_ns * 0.5);
+        std::env::remove_var("MLMC_BENCH_MS");
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 100.0,
+            p50_ns: 100.0,
+            p95_ns: 100.0,
+            elems: Some(1000),
+        };
+        assert!((s.throughput_gelem_s().unwrap() - 10.0).abs() < 1e-12);
+        assert!(s.report().contains("Gelem/s"));
+    }
+}

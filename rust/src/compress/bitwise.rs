@@ -1,0 +1,209 @@
+//! Bit-wise compressors (paper §3.1, App. B): fixed-point and
+//! floating-point truncation.
+//!
+//! The paper's formulas assume 64-bit scalars (63 fixed-point levels, 52
+//! mantissa bits); our gradients are f32, so the native depths are 23/23
+//! and the headline "×32" uncompressed-to-2-bit ratio becomes "×16"
+//! (32-bit baselines). All closed forms are parameterized on the depth so
+//! the paper's numbers are recovered by plugging in 64-bit widths — see
+//! EXPERIMENTS.md `comm` rows.
+
+use super::{Compressed, Compressor, Payload};
+use crate::tensor::{max_abs, Rng};
+
+/// Maximum meaningful fixed-point depth for f32 gradients.
+pub const FX_MAX_LEVELS: usize = 23;
+/// f32 mantissa width = maximum floating-point truncation depth.
+pub const FP_MANTISSA_BITS: usize = 23;
+
+/// Truncate `|e| <= 1` to its first `l` fractional bits (Eq. (7) truncated).
+#[inline]
+pub fn fx_truncate_norm(e: f32, pow2: f32) -> f32 {
+    e.signum() * (e.abs() * pow2).floor() / pow2
+}
+
+/// Fixed-point compressor: normalize by the max entry, keep `f` fractional
+/// bits per element. Biased; distortion ≤ 2^-f per normalized entry.
+///
+/// Wire cost: `(f + 1) * d` bits (f info + 1 sign) + 32 for the scale.
+#[derive(Clone, Debug)]
+pub struct FixedPoint {
+    pub f: usize,
+}
+
+impl FixedPoint {
+    /// Apply at depth `f` and scale; shared with the multilevel wrapper.
+    pub fn apply_with_scale(v: &[f32], f: usize, scale: f32) -> Vec<f32> {
+        if scale == 0.0 {
+            return vec![0.0; v.len()];
+        }
+        let pow2 = (1u64 << f.min(63)) as f32;
+        v.iter()
+            .map(|x| fx_truncate_norm(x / scale, pow2) * scale)
+            .collect()
+    }
+}
+
+impl Compressor for FixedPoint {
+    fn name(&self) -> String {
+        format!("fxp(f={})", self.f)
+    }
+
+    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+        let scale = max_abs(v);
+        let val = Self::apply_with_scale(v, self.f, scale);
+        Compressed {
+            payload: Payload::Quantized {
+                val,
+                bits_per_elem: (self.f + 1) as f64,
+                overhead_bits: 32,
+            },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+}
+
+/// Floating-point compressor (App. B): keep sign, exponent, and the top
+/// `f` mantissa bits of each f32 (truncation toward zero).
+///
+/// Wire cost: `(1 + 8 + f) * d` bits (f32 exponent is 8 bits; the paper's
+/// f64 analysis has 11).
+#[derive(Clone, Debug)]
+pub struct FloatPoint {
+    pub f: usize,
+}
+
+impl FloatPoint {
+    /// Truncate one f32's mantissa to `f` bits.
+    #[inline]
+    pub fn truncate_elem(x: f32, f: usize) -> f32 {
+        if f >= FP_MANTISSA_BITS {
+            return x;
+        }
+        let mask: u32 = !((1u32 << (FP_MANTISSA_BITS - f)) - 1);
+        f32::from_bits(x.to_bits() & mask)
+    }
+
+    pub fn apply(v: &[f32], f: usize) -> Vec<f32> {
+        v.iter().map(|x| Self::truncate_elem(*x, f)).collect()
+    }
+}
+
+impl Compressor for FloatPoint {
+    fn name(&self) -> String {
+        format!("flp(f={})", self.f)
+    }
+
+    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+        Compressed {
+            payload: Payload::Quantized {
+                val: Self::apply(v, self.f),
+                bits_per_elem: (1 + 8 + self.f) as f64,
+                overhead_bits: 0,
+            },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{sq_dist, sq_norm};
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn fx_truncate_matches_python_oracle() {
+        // pinned vectors from python/compile/kernels/ref.py semantics
+        assert_eq!(fx_truncate_norm(0.75, 2.0), 0.5);
+        assert_eq!(fx_truncate_norm(-0.75, 2.0), -0.5);
+        assert_eq!(fx_truncate_norm(1.0, 2.0), 1.0);
+        assert_eq!(fx_truncate_norm(0.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn fixed_point_distortion_bound() {
+        // per-element distortion ≤ 2^-f * scale
+        let v = test_vec(512, 1);
+        let scale = max_abs(&v);
+        for f in [1usize, 2, 8, 16] {
+            let dec = FixedPoint::apply_with_scale(&v, f, scale);
+            for (a, b) in dec.iter().zip(&v) {
+                assert!((a - b).abs() <= 2f32.powi(-(f as i32)) * scale + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_point_wire_cost() {
+        let v = test_vec(100, 2);
+        let mut rng = Rng::new(0);
+        let c = FixedPoint { f: 1 }.compress(&v, &mut rng);
+        // "2-bit quantization": 2 bits/elem + 32-bit scale
+        assert_eq!(c.wire_bits(), 2 * 100 + 32);
+    }
+
+    #[test]
+    fn fixed_point_zero_vector() {
+        let v = vec![0.0f32; 16];
+        let mut rng = Rng::new(0);
+        let dec = FixedPoint { f: 4 }.compress(&v, &mut rng).decode();
+        assert_eq!(dec, v);
+    }
+
+    #[test]
+    fn fixed_point_biased_toward_zero() {
+        // truncation shrinks magnitudes: |C(v)_i| <= |v_i|
+        let v = test_vec(256, 3);
+        let mut rng = Rng::new(0);
+        let dec = FixedPoint { f: 3 }.compress(&v, &mut rng).decode();
+        for (a, b) in dec.iter().zip(&v) {
+            assert!(a.abs() <= b.abs() + 1e-7);
+            assert!(a.signum() * b.signum() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn float_point_truncation() {
+        // 1.75 = 1.11_2 ; keeping 1 mantissa bit → 1.5
+        assert_eq!(FloatPoint::truncate_elem(1.75, 1), 1.5);
+        assert_eq!(FloatPoint::truncate_elem(-1.75, 1), -1.5);
+        // full mantissa is lossless
+        assert_eq!(FloatPoint::truncate_elem(1.2345678, 23), 1.2345678);
+        assert_eq!(FloatPoint::truncate_elem(0.0, 4), 0.0);
+    }
+
+    #[test]
+    fn float_point_alpha_bound() {
+        // App. B: satisfies Eq. (4) with α = 1 − 2^-f... i.e. distortion
+        // ≤ 2^-f ||v||² — relative per-element error ≤ 2^-f
+        let v = test_vec(512, 5);
+        for f in [1usize, 4, 10] {
+            let dec = FloatPoint::apply(&v, f);
+            let rel = sq_dist(&dec, &v) / sq_norm(&v);
+            // distortion of mantissa truncation ≤ (2^-f)² per unit energy,
+            // very loose check against the paper's (1−α) = 2^-f bound:
+            assert!(rel <= 2f64.powi(-(f as i32)), "f={f} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn float_point_wire_cost() {
+        let v = test_vec(10, 7);
+        let mut rng = Rng::new(0);
+        let c = FloatPoint { f: 1 }.compress(&v, &mut rng);
+        assert_eq!(c.wire_bits(), 10 * 10); // (1+8+1) * d
+    }
+}

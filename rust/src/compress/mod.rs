@@ -1,0 +1,278 @@
+//! Gradient compressor library (paper §2.2).
+//!
+//! Every compressor maps a flat gradient `v ∈ R^d` to a [`Compressed`]
+//! payload carrying (a) enough information to reconstruct the dense
+//! estimate and (b) its **exact wire cost in bits** — the x-axis of
+//! Figs. 1/3/4/6. Unbiased compressors satisfy Eq. (3)
+//! (`E[C(v)] = v`), biased ones Eq. (4)
+//! (`E‖C(v)−v‖² ≤ (1−α)‖v‖²`).
+//!
+//! The MLMC wrapper that turns any *multilevel* biased compressor into an
+//! unbiased one lives in [`crate::mlmc`].
+
+pub mod bitwise;
+pub mod natural;
+pub mod qsgd;
+pub mod rtn;
+pub mod sign;
+pub mod sparsify;
+
+pub use bitwise::{FixedPoint, FloatPoint};
+pub use natural::Natural;
+pub use qsgd::Qsgd;
+pub use rtn::Rtn;
+pub use sign::SignSgd;
+pub use sparsify::{RandK, STopK, TopK};
+
+use crate::tensor::Rng;
+
+/// Bits to address one coordinate of a length-d vector.
+pub fn index_bits(d: usize) -> u64 {
+    (usize::BITS - d.max(2).saturating_sub(1).leading_zeros()) as u64
+}
+
+/// Abstract compressed payload.
+///
+/// Values are kept dequantized (f32) so aggregation on the server is a
+/// straight [`Payload::add_into`]; the wire cost is tracked separately and
+/// matches what [`crate::wire`] actually serializes.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// No compression: d * 32 bits.
+    Dense(Vec<f32>),
+    /// index/value pairs over a length-d vector:
+    /// `k * (32 + index_bits(d))` bits.
+    Sparse { d: u32, idx: Vec<u32>, val: Vec<f32> },
+    /// Element-wise quantized vector: `bits_per_elem * d + overhead` bits.
+    /// `val` holds the dequantized values.
+    Quantized {
+        val: Vec<f32>,
+        bits_per_elem: f64,
+        overhead_bits: u64,
+    },
+}
+
+impl Payload {
+    /// Dense length (d).
+    pub fn dim(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::Sparse { d, .. } => *d as usize,
+            Payload::Quantized { val, .. } => val.len(),
+        }
+    }
+
+    /// Exact wire cost of the payload body in bits.
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            Payload::Dense(v) => 32 * v.len() as u64,
+            Payload::Sparse { d, idx, .. } => {
+                idx.len() as u64 * (32 + index_bits(*d as usize))
+            }
+            Payload::Quantized { val, bits_per_elem, overhead_bits } => {
+                (bits_per_elem * val.len() as f64).ceil() as u64 + overhead_bits
+            }
+        }
+    }
+
+    /// Dense reconstruction.
+    pub fn decode(&self) -> Vec<f32> {
+        match self {
+            Payload::Dense(v) => v.clone(),
+            Payload::Sparse { d, idx, val } => {
+                let mut out = vec![0.0; *d as usize];
+                for (i, v) in idx.iter().zip(val) {
+                    out[*i as usize] += *v;
+                }
+                out
+            }
+            Payload::Quantized { val, .. } => val.clone(),
+        }
+    }
+
+    /// `acc += scale * decode(self)` without materializing the dense form.
+    pub fn add_into(&self, acc: &mut [f32], scale: f32) {
+        match self {
+            Payload::Dense(v) | Payload::Quantized { val: v, .. } => {
+                debug_assert_eq!(acc.len(), v.len());
+                for (a, x) in acc.iter_mut().zip(v) {
+                    *a += scale * x;
+                }
+            }
+            Payload::Sparse { d, idx, val } => {
+                debug_assert_eq!(acc.len(), *d as usize);
+                for (i, x) in idx.iter().zip(val) {
+                    acc[*i as usize] += scale * x;
+                }
+            }
+        }
+    }
+
+    /// Multiply all carried values in place (used by the MLMC 1/p^l scale).
+    pub fn scale_values(&mut self, s: f32) {
+        match self {
+            Payload::Dense(v) | Payload::Quantized { val: v, .. } => {
+                for x in v {
+                    *x *= s;
+                }
+            }
+            Payload::Sparse { val, .. } => {
+                for x in val {
+                    *x *= s;
+                }
+            }
+        }
+    }
+}
+
+/// A compressed gradient: payload + fixed per-message overhead.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    pub payload: Payload,
+    /// header/metadata bits beyond the payload body (scales, levels, …)
+    pub extra_bits: u64,
+}
+
+impl Compressed {
+    pub fn dense(v: Vec<f32>) -> Self {
+        Compressed { payload: Payload::Dense(v), extra_bits: 0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.payload.dim()
+    }
+
+    /// Total wire bits for this message.
+    pub fn wire_bits(&self) -> u64 {
+        self.payload.wire_bits() + self.extra_bits
+    }
+
+    pub fn decode(&self) -> Vec<f32> {
+        self.payload.decode()
+    }
+
+    pub fn add_into(&self, acc: &mut [f32], scale: f32) {
+        self.payload.add_into(acc, scale)
+    }
+}
+
+/// A gradient compressor (paper Eq. (3)/(4)).
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> String;
+    /// Compress `v`. `rng` feeds any internal randomization.
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed;
+    /// Whether `E[C(v)] = v` holds.
+    fn unbiased(&self) -> bool;
+}
+
+/// The identity "compressor" (uncompressed SGD baseline).
+#[derive(Clone, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+        Compressed::dense(v.to_vec())
+    }
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// Empirical compression statistics over random draws — used by the
+/// lemma-validation harness ([`crate::figures::validate`]).
+pub struct CompressionStats {
+    /// `E‖C(v) − v‖² / ‖v‖²` (distortion; `1 − α` of Eq. (4))
+    pub rel_distortion: f64,
+    /// `‖E[C(v)] − v‖ / ‖v‖` (relative bias)
+    pub rel_bias: f64,
+    /// mean wire bits per message
+    pub mean_bits: f64,
+}
+
+/// Estimate distortion/bias/cost of `c` on a fixed vector over `n` draws.
+pub fn measure(c: &dyn Compressor, v: &[f32], n: usize, seed: u64) -> CompressionStats {
+    let mut rng = Rng::new(seed);
+    let d = v.len();
+    let mut mean_est = vec![0.0f64; d];
+    let mut dist = 0.0f64;
+    let mut bits = 0.0f64;
+    for _ in 0..n {
+        let comp = c.compress(v, &mut rng);
+        let dec = comp.decode();
+        dist += crate::tensor::sq_dist(&dec, v);
+        bits += comp.wire_bits() as f64;
+        for (m, x) in mean_est.iter_mut().zip(&dec) {
+            *m += *x as f64;
+        }
+    }
+    let vn = crate::tensor::sq_norm(v).max(1e-30);
+    let bias_sq: f64 = mean_est
+        .iter()
+        .zip(v)
+        .map(|(m, x)| {
+            let b = m / n as f64 - *x as f64;
+            b * b
+        })
+        .sum();
+    CompressionStats {
+        rel_distortion: dist / n as f64 / vn,
+        rel_bias: (bias_sq / vn).sqrt(),
+        mean_bits: bits / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_bits_values() {
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(256), 8);
+        assert_eq!(index_bits(257), 9);
+        assert_eq!(index_bits(1_000_000), 20);
+    }
+
+    #[test]
+    fn payload_sparse_roundtrip() {
+        let p = Payload::Sparse { d: 5, idx: vec![1, 4], val: vec![2.0, -3.0] };
+        assert_eq!(p.decode(), vec![0.0, 2.0, 0.0, 0.0, -3.0]);
+        assert_eq!(p.wire_bits(), 2 * (32 + 3));
+        let mut acc = vec![1.0; 5];
+        p.add_into(&mut acc, 2.0);
+        assert_eq!(acc, vec![1.0, 5.0, 1.0, 1.0, -5.0]);
+    }
+
+    #[test]
+    fn payload_scale_values() {
+        let mut p = Payload::Sparse { d: 3, idx: vec![0], val: vec![2.0] };
+        p.scale_values(0.5);
+        assert_eq!(p.decode(), vec![1.0, 0.0, 0.0]);
+        let mut q = Payload::Quantized { val: vec![1.0, 2.0], bits_per_elem: 2.0, overhead_bits: 8 };
+        q.scale_values(3.0);
+        assert_eq!(q.decode(), vec![3.0, 6.0]);
+        assert_eq!(q.wire_bits(), 4 + 8);
+    }
+
+    #[test]
+    fn identity_exact() {
+        let v = vec![1.0, -2.0, 3.0];
+        let mut rng = Rng::new(0);
+        let c = Identity.compress(&v, &mut rng);
+        assert_eq!(c.decode(), v);
+        assert_eq!(c.wire_bits(), 96);
+        assert!(Identity.unbiased());
+    }
+
+    #[test]
+    fn measure_identity_is_exact() {
+        let v: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 7.0).collect();
+        let s = measure(&Identity, &v, 10, 1);
+        assert!(s.rel_distortion < 1e-12);
+        assert!(s.rel_bias < 1e-7);
+        assert_eq!(s.mean_bits, 64.0 * 32.0);
+    }
+}

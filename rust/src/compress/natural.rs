@@ -1,0 +1,111 @@
+//! Natural compression (Horváth et al. 2022, cited in §1.1): stochastic
+//! rounding of each element to one of its two neighbouring powers of two.
+//! Unbiased with ω = 1/8, and each element ships sign + 8-bit exponent
+//! = 9 bits (f32 instantiation of the paper's C_nat).
+
+use super::{Compressed, Compressor, Payload};
+use crate::tensor::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct Natural;
+
+/// Round `x` to a neighbouring power of two, stochastically so the
+/// expectation is exact: x = sign·2^e·m with m ∈ [1,2) maps to
+/// 2^e w.p. (2 − m) and 2^{e+1} w.p. (m − 1).
+pub fn natural_round(x: f32, rng: &mut Rng) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let mag = x.abs();
+    let lo = 2f32.powi(mag.log2().floor() as i32);
+    let hi = lo * 2.0;
+    // guard against boundary rounding in log2/powi
+    let (lo, hi) = if mag < lo { (lo / 2.0, lo) } else { (lo, hi) };
+    let p_hi = (mag - lo) / (hi - lo);
+    let mag_q = if (rng.uniform() as f32) < p_hi { hi } else { lo };
+    mag_q.copysign(x)
+}
+
+impl Compressor for Natural {
+    fn name(&self) -> String {
+        "natural".into()
+    }
+
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        let val = v.iter().map(|x| natural_round(*x, rng)).collect();
+        Compressed {
+            payload: Payload::Quantized {
+                val,
+                bits_per_elem: 9.0, // sign + f32 exponent
+                overhead_bits: 0,
+            },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measure;
+
+    #[test]
+    fn rounds_to_powers_of_two() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = rng.normal() as f32 * 10.0;
+            if x == 0.0 {
+                continue;
+            }
+            let q = natural_round(x, &mut rng);
+            let l = q.abs().log2();
+            assert!((l - l.round()).abs() < 1e-5, "{x} -> {q}");
+            assert_eq!(q.signum(), x.signum());
+            // neighbouring powers: q/|x| ∈ [1/2, 2]
+            let r = q.abs() / x.abs();
+            assert!((0.5..=2.0).contains(&r), "{x} -> {q}");
+        }
+    }
+
+    #[test]
+    fn unbiased_per_element() {
+        let mut rng = Rng::new(2);
+        for &x in &[0.3f32, 1.0, 1.5, -2.7, 100.0, -1e-4] {
+            let n = 60_000;
+            let mean: f64 = (0..n).map(|_| natural_round(x, &mut rng) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.02 * x.abs() as f64 + 1e-7,
+                "x={x} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn omega_bound() {
+        // Horváth et al.: E‖C(v) − v‖² ≤ (1/8)‖v‖²
+        let mut rng = Rng::new(3);
+        let v: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let s = measure(&Natural, &v, 3000, 5);
+        assert!(s.rel_distortion <= 0.125 + 0.01, "{}", s.rel_distortion);
+        assert!(s.rel_bias < 0.05);
+    }
+
+    #[test]
+    fn wire_cost_9_bits() {
+        let v = vec![1.0f32; 100];
+        let mut rng = Rng::new(0);
+        assert_eq!(Natural.compress(&v, &mut rng).wire_bits(), 900);
+    }
+
+    #[test]
+    fn exact_powers_fixed_points() {
+        let mut rng = Rng::new(4);
+        for &x in &[1.0f32, 2.0, 0.5, -4.0] {
+            assert_eq!(natural_round(x, &mut rng), x);
+        }
+    }
+}

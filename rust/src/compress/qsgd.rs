@@ -1,0 +1,118 @@
+//! QSGD (Alistarh et al. 2017): unbiased stochastic quantization.
+//!
+//! Each coordinate is quantized to one of `s+1` magnitude levels of
+//! `‖v‖₂` with stochastic rounding, which makes the estimator exactly
+//! unbiased. `s = 1` is the "2-bit QSGD" comparator of Fig. 3
+//! (1 sign bit + 1 magnitude bit per element + the 32-bit norm).
+
+use super::{Compressed, Compressor, Payload};
+use crate::tensor::{norm, Rng};
+
+#[derive(Clone, Debug)]
+pub struct Qsgd {
+    /// number of positive quantization intervals
+    pub s: u32,
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd(s={})", self.s)
+    }
+
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        let n = norm(v) as f32;
+        let s = self.s.max(1) as f32;
+        let val: Vec<f32> = if n == 0.0 {
+            vec![0.0; v.len()]
+        } else {
+            v.iter()
+                .map(|x| {
+                    let r = x.abs() / n * s; // in [0, s]
+                    let lo = r.floor();
+                    let p = r - lo;
+                    let q = if (rng.uniform() as f32) < p { lo + 1.0 } else { lo };
+                    x.signum() * n * q / s
+                })
+                .collect()
+        };
+        // ceil(log2(s+1)) magnitude bits + 1 sign bit per element
+        let mag_bits = (32 - self.s.max(1).leading_zeros()) as f64;
+        Compressed {
+            payload: Payload::Quantized {
+                val,
+                bits_per_elem: mag_bits + 1.0,
+                overhead_bits: 32,
+            },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measure;
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn qsgd_unbiased() {
+        let v = test_vec(64, 1);
+        let s = measure(&Qsgd { s: 1 }, &v, 6000, 3);
+        assert!(s.rel_bias < 0.05, "bias {}", s.rel_bias);
+    }
+
+    #[test]
+    fn qsgd_levels_on_grid() {
+        let v = test_vec(128, 2);
+        let mut rng = Rng::new(0);
+        let q = Qsgd { s: 4 };
+        let n = norm(&v) as f32;
+        let dec = q.compress(&v, &mut rng).decode();
+        for x in &dec {
+            let units = x.abs() / n * 4.0;
+            assert!((units - units.round()).abs() < 1e-5, "{units}");
+            assert!(units.round() <= 4.0);
+        }
+    }
+
+    #[test]
+    fn qsgd_two_bit_cost() {
+        let v = test_vec(100, 3);
+        let mut rng = Rng::new(0);
+        let c = Qsgd { s: 1 }.compress(&v, &mut rng);
+        assert_eq!(c.wire_bits(), 2 * 100 + 32); // "2-bit QSGD"
+    }
+
+    #[test]
+    fn qsgd_finer_grid_lower_distortion() {
+        let v = test_vec(256, 5);
+        let coarse = measure(&Qsgd { s: 1 }, &v, 500, 7).rel_distortion;
+        let fine = measure(&Qsgd { s: 16 }, &v, 500, 7).rel_distortion;
+        assert!(fine < coarse, "{fine} !< {coarse}");
+    }
+
+    #[test]
+    fn qsgd_zero_vector() {
+        let v = vec![0.0f32; 8];
+        let mut rng = Rng::new(0);
+        assert_eq!(Qsgd { s: 2 }.compress(&v, &mut rng).decode(), v);
+    }
+
+    #[test]
+    fn qsgd_variance_bound() {
+        // E||C(v) − v||² ≤ min(d/s², √d/s)||v||² (QSGD paper Lemma 3.1)
+        let v = test_vec(64, 9);
+        let s = measure(&Qsgd { s: 2 }, &v, 2000, 11);
+        let d = 64.0f64;
+        let bound = (d / 4.0).min(d.sqrt() / 2.0);
+        assert!(s.rel_distortion <= bound, "{} > {bound}", s.rel_distortion);
+    }
+}

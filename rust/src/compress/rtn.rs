@@ -1,0 +1,151 @@
+//! Round-to-Nearest (RTN) structured quantization (paper §3.2, App. G.2).
+//!
+//! `C_RTN^l(v) = δ^l · clip(round(v/δ^l), −c, c)`. We use the *odd
+//! symmetric* grid: `2^l − 1` codes (`c = 2^{l−1} − 1` integer grid
+//! units, `δ^l = c_val / c`), which covers `[−c_val, c_val]` exactly and
+//! keeps every clipped value on the grid — the paper's
+//! `δ^l = 2c/(2^l − 1)` differs only in how the even/odd endpoint is
+//! handled. Wire accounting charges `l` bits/element as in the paper.
+//! Level 1 has a single code {0} and degenerates to the zero compressor
+//! (the paper evaluates RTN at l ≥ 2 only).
+//!
+//! Rounding is **half-to-even** to match `jnp.round` in the L1 Pallas
+//! kernel (`python/compile/kernels/rtn.py`).
+
+use super::{Compressed, Compressor, Payload};
+use crate::tensor::{max_abs, Rng};
+
+/// RTN at a fixed level, clip range taken from the vector max.
+#[derive(Clone, Debug)]
+pub struct Rtn {
+    pub level: u32,
+}
+
+impl Rtn {
+    /// Positive grid extent in integer units: `2^{l−1} − 1` (0 for l = 1).
+    pub fn c_units(level: u32) -> f32 {
+        if level <= 1 {
+            0.0
+        } else {
+            ((1u64 << (level - 1)) - 1) as f32
+        }
+    }
+
+    /// Grid spacing over value range `[-c_val, c_val]`.
+    pub fn delta(level: u32, c_val: f32) -> f32 {
+        c_val / Self::c_units(level).max(1.0)
+    }
+
+    /// Apply RTN at (level, c_val) to every element.
+    pub fn apply(v: &[f32], level: u32, c_val: f32) -> Vec<f32> {
+        let c_units = Self::c_units(level);
+        if c_val == 0.0 || c_units == 0.0 {
+            return vec![0.0; v.len()];
+        }
+        let d = Self::delta(level, c_val);
+        v.iter()
+            .map(|x| d * (x / d).round_ties_even().clamp(-c_units, c_units))
+            .collect()
+    }
+}
+
+impl Compressor for Rtn {
+    fn name(&self) -> String {
+        format!("rtn(l={})", self.level)
+    }
+
+    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+        let c_val = max_abs(v);
+        Compressed {
+            payload: Payload::Quantized {
+                val: Self::apply(v, self.level, c_val),
+                bits_per_elem: self.level as f64,
+                overhead_bits: 32,
+            },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn rtn_error_half_delta_in_range() {
+        let v = test_vec(512, 1);
+        let c_val = max_abs(&v);
+        for level in [2u32, 4, 8] {
+            let dec = Rtn::apply(&v, level, c_val);
+            let half = Rtn::delta(level, c_val) / 2.0;
+            for (a, b) in dec.iter().zip(&v) {
+                assert!((a - b).abs() <= half + 1e-6, "l={level}");
+            }
+        }
+    }
+
+    #[test]
+    fn rtn_on_grid() {
+        let v = test_vec(128, 2);
+        let c_val = max_abs(&v);
+        let dec = Rtn::apply(&v, 3, c_val);
+        let d = Rtn::delta(3, c_val);
+        for x in &dec {
+            let units = x / d;
+            assert!((units - units.round()).abs() < 1e-4);
+            assert!(units.abs() <= Rtn::c_units(3) + 1e-4);
+        }
+    }
+
+    #[test]
+    fn rtn_level1_degenerates_to_zero() {
+        let v = test_vec(16, 6);
+        assert_eq!(Rtn::apply(&v, 1, max_abs(&v)), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn rtn_round_half_to_even_matches_pallas_oracle() {
+        // mirrors python/tests/test_kernels.py::test_rtn_clip
+        let v = [100.0f32, -100.0, 0.06, 0.05];
+        let dec: Vec<f32> = v
+            .iter()
+            .map(|x| 0.1 * (x / 0.1).round_ties_even().clamp(-3.0, 3.0))
+            .collect();
+        assert!((dec[0] - 0.3).abs() < 1e-6);
+        assert!((dec[1] + 0.3).abs() < 1e-6);
+        assert!((dec[2] - 0.1).abs() < 1e-6);
+        assert_eq!(dec[3], 0.0); // 0.5 rounds to even 0
+    }
+
+    #[test]
+    fn rtn_finer_levels_nested_improvement() {
+        let v = test_vec(256, 3);
+        let c_val = max_abs(&v);
+        let mut prev = f64::INFINITY;
+        for level in [2u32, 4, 8, 16] {
+            let dec = Rtn::apply(&v, level, c_val);
+            let err = crate::tensor::sq_dist(&dec, &v);
+            assert!(err <= prev + 1e-12, "level {level}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn rtn_wire_cost_and_zero() {
+        let v = test_vec(100, 4);
+        let mut rng = Rng::new(0);
+        let c = Rtn { level: 4 }.compress(&v, &mut rng);
+        assert_eq!(c.wire_bits(), 4 * 100 + 32);
+        assert_eq!(Rtn::apply(&[0.0; 5], 4, 0.0), vec![0.0; 5]);
+    }
+}

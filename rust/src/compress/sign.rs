@@ -1,0 +1,66 @@
+//! SignSGD with l1 scaling (Bernstein et al. 2018; Seide et al. 2014):
+//! `C(v) = sign(v) · ‖v‖₁/d` — 1 bit per element + one 32-bit scale.
+//! Biased; the classic EF use case.
+
+use super::{Compressed, Compressor, Payload};
+use crate::tensor::{l1_norm, Rng};
+
+#[derive(Clone, Debug, Default)]
+pub struct SignSgd;
+
+impl Compressor for SignSgd {
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+        let d = v.len();
+        let mag = if d == 0 { 0.0 } else { (l1_norm(v) / d as f64) as f32 };
+        let val = v
+            .iter()
+            .map(|x| if *x >= 0.0 { mag } else { -mag })
+            .collect();
+        Compressed {
+            payload: Payload::Quantized { val, bits_per_elem: 1.0, overhead_bits: 32 },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_magnitude_and_cost() {
+        let v = [1.0f32, -3.0, 2.0, -2.0];
+        let mut rng = Rng::new(0);
+        let c = SignSgd.compress(&v, &mut rng);
+        let dec = c.decode();
+        assert_eq!(dec, vec![2.0, -2.0, 2.0, -2.0]);
+        assert_eq!(c.wire_bits(), 4 + 32);
+    }
+
+    #[test]
+    fn sign_contraction_property() {
+        // ||C(v) − v||² < ||v||² for any v with ‖v‖₁ > 0 (δ-compressor)
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            let dec = SignSgd.compress(&v, &mut rng).decode();
+            assert!(crate::tensor::sq_dist(&dec, &v) < crate::tensor::sq_norm(&v));
+        }
+    }
+
+    #[test]
+    fn sign_empty_and_zero() {
+        let mut rng = Rng::new(0);
+        assert!(SignSgd.compress(&[], &mut rng).decode().is_empty());
+        let dec = SignSgd.compress(&[0.0, 0.0], &mut rng).decode();
+        assert_eq!(dec, vec![0.0, 0.0]);
+    }
+}

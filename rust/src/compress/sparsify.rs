@@ -1,0 +1,218 @@
+//! Sparsification compressors: Top-k (biased), s-Top-k (biased,
+//! the paper's segmented generalization, §2.2), Rand-k (unbiased).
+
+use super::{Compressed, Compressor, Payload};
+use crate::tensor::select::{argsort_desc_abs, num_segments, segment_bounds, top_k_indices};
+use crate::tensor::Rng;
+
+/// Top-k: keep the k largest-magnitude coordinates (biased, α = k/d).
+#[derive(Clone, Debug)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("topk(k={})", self.k)
+    }
+
+    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+        let idx = top_k_indices(v, self.k);
+        let val = idx.iter().map(|&i| v[i as usize]).collect();
+        Compressed {
+            payload: Payload::Sparse { d: v.len() as u32, idx, val },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+}
+
+/// s-Top-k: sort by |v|, split into segments of length s, keep the k
+/// segments with largest norm (biased, α = sk/d). With s = 1 this is
+/// exactly Top-k.
+#[derive(Clone, Debug)]
+pub struct STopK {
+    pub s: usize,
+    pub k: usize,
+}
+
+impl Compressor for STopK {
+    fn name(&self) -> String {
+        format!("stopk(s={},k={})", self.s, self.k)
+    }
+
+    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+        let d = v.len();
+        let order = argsort_desc_abs(v);
+        // segments of the sorted order are nested by construction: the
+        // k top-norm segments are just the first k segments.
+        let take = (self.k * self.s).min(d);
+        let idx: Vec<u32> = order[..take].to_vec();
+        let val: Vec<f32> = idx.iter().map(|&i| v[i as usize]).collect();
+        Compressed {
+            payload: Payload::Sparse { d: d as u32, idx, val },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+}
+
+impl STopK {
+    /// Number of levels when used as a multilevel compressor.
+    pub fn levels(&self, d: usize) -> usize {
+        num_segments(d, self.s)
+    }
+
+    /// The l-th segment (1-based) of the sorted order: `(indices, values)`.
+    pub fn segment(&self, v: &[f32], order: &[u32], l: usize) -> (Vec<u32>, Vec<f32>) {
+        let (lo, hi) = segment_bounds(v.len(), self.s, l);
+        let idx: Vec<u32> = order[lo..hi].to_vec();
+        let val: Vec<f32> = idx.iter().map(|&i| v[i as usize]).collect();
+        (idx, val)
+    }
+}
+
+/// Rand-k: keep k uniformly random coordinates scaled by d/k (unbiased,
+/// ω = d/k − 1).
+#[derive(Clone, Debug)]
+pub struct RandK {
+    pub k: usize,
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("randk(k={})", self.k)
+    }
+
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        let d = v.len();
+        let k = self.k.min(d);
+        let idx = rng.choose_k(d, k);
+        let scale = d as f32 / k as f32;
+        let val = idx.iter().map(|&i| v[i as usize] * scale).collect();
+        Compressed {
+            payload: Payload::Sparse { d: d as u32, idx, val },
+            extra_bits: 0,
+        }
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measure;
+    use crate::tensor::{sq_dist, sq_norm, Rng};
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let v = vec![0.1f32, -9.0, 0.2, 5.0, -0.3];
+        let mut rng = Rng::new(0);
+        let dec = TopK { k: 2 }.compress(&v, &mut rng).decode();
+        assert_eq!(dec, vec![0.0, -9.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_distortion_bound() {
+        // Eq. (9): ||C(v) − v||² ≤ (1 − k/d) ||v||²
+        let v = test_vec(300, 3);
+        let mut rng = Rng::new(0);
+        for k in [1, 10, 100, 300] {
+            let dec = TopK { k }.compress(&v, &mut rng).decode();
+            let lhs = sq_dist(&dec, &v);
+            let bound = (1.0 - k as f64 / 300.0) * sq_norm(&v);
+            assert!(lhs <= bound + 1e-9, "k={k}: {lhs} > {bound}");
+        }
+    }
+
+    #[test]
+    fn topk_full_is_identity() {
+        let v = test_vec(32, 1);
+        let mut rng = Rng::new(0);
+        let dec = TopK { k: 32 }.compress(&v, &mut rng).decode();
+        assert_eq!(dec, v);
+    }
+
+    #[test]
+    fn stopk_s1_equals_topk() {
+        let v = test_vec(100, 5);
+        let mut rng = Rng::new(0);
+        let a = STopK { s: 1, k: 7 }.compress(&v, &mut rng).decode();
+        let b = TopK { k: 7 }.compress(&v, &mut rng).decode();
+        // same retained energy even if tie order differs
+        assert!((sq_norm(&a) - sq_norm(&b)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stopk_distortion_bound() {
+        // α = sk/d
+        let v = test_vec(257, 7);
+        let mut rng = Rng::new(0);
+        let (s, k) = (16, 5);
+        let dec = STopK { s, k }.compress(&v, &mut rng).decode();
+        let lhs = sq_dist(&dec, &v);
+        let bound = (1.0 - (s * k) as f64 / 257.0) * sq_norm(&v);
+        assert!(lhs <= bound + 1e-9);
+    }
+
+    #[test]
+    fn stopk_segments_partition() {
+        let v = test_vec(103, 9);
+        let st = STopK { s: 10, k: 0 };
+        let order = argsort_desc_abs(&v);
+        let nl = st.levels(103);
+        assert_eq!(nl, 11);
+        let mut all: Vec<u32> = Vec::new();
+        for l in 1..=nl {
+            let (idx, val) = st.segment(&v, &order, l);
+            assert_eq!(idx.len(), val.len());
+            if l < nl {
+                assert_eq!(idx.len(), 10);
+            } else {
+                assert_eq!(idx.len(), 3);
+            }
+            all.extend(&idx);
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn randk_unbiased_and_scaled() {
+        let v = test_vec(64, 11);
+        let s = measure(&RandK { k: 8 }, &v, 8000, 17);
+        assert!(s.rel_bias < 0.06, "bias {}", s.rel_bias);
+        // ω = d/k − 1 = 7: E||C(v)−v||² = (d/k −1)||v||²... check loose
+        assert!(s.rel_distortion > 3.0 && s.rel_distortion < 12.0, "{}", s.rel_distortion);
+    }
+
+    #[test]
+    fn randk_wire_cost() {
+        let v = test_vec(1024, 2);
+        let mut rng = Rng::new(0);
+        let c = RandK { k: 16 }.compress(&v, &mut rng);
+        assert_eq!(c.wire_bits(), 16 * (32 + 10));
+    }
+
+    #[test]
+    fn randk_k_ge_d() {
+        let v = test_vec(8, 0);
+        let mut rng = Rng::new(0);
+        let dec = RandK { k: 100 }.compress(&v, &mut rng).decode();
+        assert_eq!(dec, v); // scale = 1, all coordinates
+    }
+}

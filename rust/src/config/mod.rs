@@ -1,0 +1,304 @@
+//! Config system: a minimal TOML-subset parser ([`toml`]) plus the typed
+//! run configuration ([`TrainConfig`]) consumed by the launcher.
+//!
+//! Launch precedence (Megatron-style): defaults < config file < CLI
+//! `--key=value` overrides.
+
+pub mod toml;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+pub use toml::TomlValue;
+
+/// Which gradient-encoding method the run uses (paper §5 comparators).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// uncompressed data-parallel SGD (Alg. 1)
+    Sgd,
+    /// biased Top-k baseline
+    TopK,
+    /// unbiased Rand-k baseline
+    RandK,
+    /// EF21-SGDM over Top-k (Fatkhullin et al. 2023)
+    Ef21Sgdm,
+    /// EF14 over Top-k (classic error feedback)
+    Ef14,
+    /// Alg. 3: Adaptive MLMC over s-Top-k (s = k)
+    MlmcTopK,
+    /// Alg. 2: MLMC over s-Top-k with the static geometric schedule
+    MlmcTopKStatic,
+    /// biased fixed-point quantization at `quant_bits` info bits
+    FixedPoint,
+    /// unbiased QSGD ("2-bit" at s = 1)
+    Qsgd,
+    /// Alg. 2: MLMC over fixed-point bit-planes (Lemma 3.3 schedule)
+    MlmcFixedPoint,
+    /// Alg. 2: MLMC over floating-point mantissa planes (Lemma B.1)
+    MlmcFloatPoint,
+    /// biased RTN at `quant_bits` levels
+    Rtn,
+    /// Alg. 3: adaptive MLMC over RTN grids
+    MlmcRtn,
+    /// signSGD with l1 scaling
+    Sign,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "sgd" => Method::Sgd,
+            "topk" => Method::TopK,
+            "randk" => Method::RandK,
+            "ef21-sgdm" | "ef21sgdm" => Method::Ef21Sgdm,
+            "ef14" => Method::Ef14,
+            "mlmc-topk" | "mlmc" => Method::MlmcTopK,
+            "mlmc-topk-static" => Method::MlmcTopKStatic,
+            "fxp" | "fixed-point" => Method::FixedPoint,
+            "qsgd" => Method::Qsgd,
+            "mlmc-fxp" => Method::MlmcFixedPoint,
+            "mlmc-flp" => Method::MlmcFloatPoint,
+            "rtn" => Method::Rtn,
+            "mlmc-rtn" => Method::MlmcRtn,
+            "sign" => Method::Sign,
+            _ => return None,
+        })
+    }
+
+    pub fn all_names() -> &'static [&'static str] {
+        &[
+            "sgd", "topk", "randk", "ef21-sgdm", "ef14", "mlmc-topk",
+            "mlmc-topk-static", "fxp", "qsgd", "mlmc-fxp", "mlmc-flp",
+            "rtn", "mlmc-rtn", "sign",
+        ]
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Method::Sgd => "sgd",
+            Method::TopK => "topk",
+            Method::RandK => "randk",
+            Method::Ef21Sgdm => "ef21-sgdm",
+            Method::Ef14 => "ef14",
+            Method::MlmcTopK => "mlmc-topk",
+            Method::MlmcTopKStatic => "mlmc-topk-static",
+            Method::FixedPoint => "fxp",
+            Method::Qsgd => "qsgd",
+            Method::MlmcFixedPoint => "mlmc-fxp",
+            Method::MlmcFloatPoint => "mlmc-flp",
+            Method::Rtn => "rtn",
+            Method::MlmcRtn => "mlmc-rtn",
+            Method::Sign => "sign",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// model name from artifacts/metadata.json ("tx-tiny", "cnn-tiny", …)
+    pub model: String,
+    pub method: Method,
+    /// number of workers M
+    pub workers: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// sparsification fraction k/n (drives s-Top-k segment size and the
+    /// segstats artifact choice); per-mille granularity
+    pub frac_pm: u32,
+    /// info bits for quantization baselines (fxp/rtn levels)
+    pub quant_bits: usize,
+    /// evaluate every N steps (0 = never)
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// "channel" (in-proc) or "tcp"
+    pub transport: String,
+    /// optimizer: "sgd" | "momentum" | "adam"
+    pub optimizer: String,
+    /// EF21-SGDM momentum β
+    pub momentum_beta: f32,
+    /// Dirichlet α for heterogeneous sharding (0 = IID)
+    pub dirichlet_alpha: f32,
+    /// use the L1 segstats artifact for adaptive MLMC (vs rust-side sort)
+    pub use_l1_stats: bool,
+    /// run tag for logs/CSV
+    pub tag: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "tx-tiny".into(),
+            method: Method::MlmcTopK,
+            workers: 4,
+            steps: 100,
+            lr: 0.05,
+            seed: 1,
+            frac_pm: 50,
+            quant_bits: 1,
+            eval_every: 20,
+            eval_batches: 8,
+            transport: "channel".into(),
+            optimizer: "sgd".into(),
+            momentum_beta: 0.1,
+            dirichlet_alpha: 0.0,
+            use_l1_stats: true,
+            tag: String::new(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply one `key=value` assignment (from TOML or CLI `--key=value`).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(v: &str, key: &str) -> Result<T, String> {
+            v.parse().map_err(|_| format!("bad value {v:?} for {key}"))
+        }
+        match key {
+            "model" => self.model = val.to_string(),
+            "method" => {
+                self.method = Method::parse(val)
+                    .ok_or_else(|| format!("unknown method {val:?} (known: {:?})", Method::all_names()))?
+            }
+            "workers" => self.workers = p(val, key)?,
+            "steps" => self.steps = p(val, key)?,
+            "lr" => self.lr = p(val, key)?,
+            "seed" => self.seed = p(val, key)?,
+            "frac_pm" => self.frac_pm = p(val, key)?,
+            "quant_bits" => self.quant_bits = p(val, key)?,
+            "eval_every" => self.eval_every = p(val, key)?,
+            "eval_batches" => self.eval_batches = p(val, key)?,
+            "transport" => self.transport = val.to_string(),
+            "optimizer" => self.optimizer = val.to_string(),
+            "momentum_beta" => self.momentum_beta = p(val, key)?,
+            "dirichlet_alpha" => self.dirichlet_alpha = p(val, key)?,
+            "use_l1_stats" => self.use_l1_stats = p(val, key)?,
+            "tag" => self.tag = val.to_string(),
+            other => return Err(format!("unknown config key {other:?}")),
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file's `[train]` table (or top level), then apply
+    /// CLI overrides.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let table = toml::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = TrainConfig::default();
+        let scope: &BTreeMap<String, TomlValue> = match table.get("train") {
+            Some(TomlValue::Table(t)) => t,
+            _ => &table,
+        };
+        for (k, v) in scope {
+            if let TomlValue::Table(_) = v {
+                continue;
+            }
+            cfg.set(k, &v.to_string_raw())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Sanity-check invariants before launch.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if self.steps == 0 {
+            return Err("steps must be >= 1".into());
+        }
+        if !(self.lr > 0.0) {
+            return Err("lr must be > 0".into());
+        }
+        if self.frac_pm == 0 || self.frac_pm > 1000 {
+            return Err("frac_pm must be in 1..=1000".into());
+        }
+        if self.quant_bits == 0 || self.quant_bits > 23 {
+            return Err("quant_bits must be in 1..=23".into());
+        }
+        if self.transport != "channel" && self.transport != "tcp" {
+            return Err(format!("unknown transport {:?}", self.transport));
+        }
+        if !(0.0..=1.0).contains(&self.momentum_beta) {
+            return Err("momentum_beta must be in [0,1]".into());
+        }
+        Ok(())
+    }
+
+    /// Stable identifier used in CSV/log paths.
+    pub fn run_id(&self) -> String {
+        let tag = if self.tag.is_empty() { String::new() } else { format!("_{}", self.tag) };
+        format!(
+            "{}_{}_m{}_pm{}_s{}{}",
+            self.model, self.method, self.workers, self.frac_pm, self.seed, tag
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_and_parse_methods() {
+        let mut c = TrainConfig::default();
+        for name in Method::all_names() {
+            c.set("method", name).unwrap();
+            assert_eq!(c.method.to_string(), *name);
+        }
+        assert!(c.set("method", "bogus").is_err());
+    }
+
+    #[test]
+    fn set_rejects_unknown_key_and_bad_value() {
+        let mut c = TrainConfig::default();
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("workers", "banana").is_err());
+        c.set("workers", "32").unwrap();
+        assert_eq!(c.workers, 32);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = TrainConfig::default();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.frac_pm = 2000;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.transport = "carrier-pigeon".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_with_train_table() {
+        let cfg = TrainConfig::from_toml(
+            "[train]\nmodel = \"cnn-tiny\"\nworkers = 32\nlr = 0.1\nmethod = \"mlmc-fxp\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "cnn-tiny");
+        assert_eq!(cfg.workers, 32);
+        assert_eq!(cfg.method, Method::MlmcFixedPoint);
+    }
+
+    #[test]
+    fn from_toml_top_level() {
+        let cfg = TrainConfig::from_toml("steps = 7\nseed = 9\n").unwrap();
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn run_id_stable() {
+        let c = TrainConfig::default();
+        assert_eq!(c.run_id(), "tx-tiny_mlmc-topk_m4_pm50_s1");
+    }
+}

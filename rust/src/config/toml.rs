@@ -1,0 +1,254 @@
+//! Minimal TOML-subset parser (no serde in the offline vendor set).
+//!
+//! Supports what run configs need: `[section]` / `[a.b]` tables,
+//! `key = value` with strings, integers, floats, booleans, and flat
+//! arrays; `#` comments. Unsupported TOML (multi-line strings, inline
+//! tables, dates) is rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    /// Render the scalar back as the raw string `TrainConfig::set` expects.
+    pub fn to_string_raw(&self) -> String {
+        match self {
+            TomlValue::Str(s) => s.clone(),
+            TomlValue::Int(i) => i.to_string(),
+            TomlValue::Float(f) => f.to_string(),
+            TomlValue::Bool(b) => b.to_string(),
+            TomlValue::Array(a) => a
+                .iter()
+                .map(|v| v.to_string_raw())
+                .collect::<Vec<_>>()
+                .join(","),
+            TomlValue::Table(_) => "<table>".into(),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a config into a nested table.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = ln + 1;
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            // ensure the table path exists
+            let _ = table_at(&mut root, &section, lineno)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let val = parse_value(line[eq + 1..].trim(), lineno)?;
+        let tbl = table_at(&mut root, &section, lineno)?;
+        tbl.insert(key.trim_matches('"').to_string(), val);
+    }
+    Ok(root)
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError { line, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, TomlValue>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        match entry {
+            TomlValue::Table(t) => cur = t,
+            _ => return Err(err(lineno, "section name collides with a key")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value {s:?}")))
+}
+
+/// Split on commas not inside quotes (arrays of strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let t = parse(
+            "# run config\ntitle = \"demo\"\n[train]\nworkers = 32\nlr = 5e-2\nuse_l1_stats = true\n",
+        )
+        .unwrap();
+        assert_eq!(t["title"], TomlValue::Str("demo".into()));
+        let train = match &t["train"] {
+            TomlValue::Table(t) => t,
+            _ => panic!(),
+        };
+        assert_eq!(train["workers"], TomlValue::Int(32));
+        assert_eq!(train["lr"], TomlValue::Float(0.05));
+        assert_eq!(train["use_l1_stats"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn nested_sections() {
+        let t = parse("[a.b]\nx = 1\n[a.c]\ny = 2\n").unwrap();
+        let a = match &t["a"] {
+            TomlValue::Table(t) => t,
+            _ => panic!(),
+        };
+        assert!(matches!(&a["b"], TomlValue::Table(b) if b["x"] == TomlValue::Int(1)));
+        assert!(matches!(&a["c"], TomlValue::Table(c) if c["y"] == TomlValue::Int(2)));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("ks = [10, 50, 100, 500]\nnames = [\"a\", \"b,c\"]\nempty = []\n").unwrap();
+        assert_eq!(
+            t["ks"],
+            TomlValue::Array(vec![
+                TomlValue::Int(10),
+                TomlValue::Int(50),
+                TomlValue::Int(100),
+                TomlValue::Int(500)
+            ])
+        );
+        match &t["names"] {
+            TomlValue::Array(a) => {
+                assert_eq!(a[1], TomlValue::Str("b,c".into()));
+            }
+            _ => panic!(),
+        }
+        assert_eq!(t["empty"], TomlValue::Array(vec![]));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let t = parse("n = 1_000_000  # one million\n").unwrap();
+        assert_eq!(t["n"], TomlValue::Int(1_000_000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("x = \"oops\n").is_err());
+        assert!(parse("x = 2026-07-11\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let t = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(t["s"], TomlValue::Str("a#b".into()));
+    }
+}

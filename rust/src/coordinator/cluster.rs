@@ -1,0 +1,163 @@
+//! Multi-process TCP cluster mode: a leader process and M worker
+//! processes, each worker with its own PJRT runtime, speaking the framed
+//! wire protocol. This is the "real distribution" path — the in-process
+//! driver in [`crate::train`] runs the identical round protocol with
+//! logical workers.
+//!
+//! Frame protocol per round:
+//!   leader → workers: `FRAME_PARAMS` carrying the flat model
+//!   worker → leader:  `FRAME_GRAD` carrying `loss(f32) | wire::encode(msg)`
+//!   leader → workers: `FRAME_SHUTDOWN` at the end.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::{agg_kind, Server};
+use crate::data::{dirichlet_class_probs, Task};
+use crate::runtime::{ArgValue, Runtime};
+use crate::tensor::Rng;
+use crate::train::{build_codec, evaluate};
+use crate::transport::tcp::{TcpLeader, TcpWorker};
+use crate::transport::{params_from_bytes, params_to_bytes, Frame, FRAME_PARAMS, FRAME_SHUTDOWN};
+
+fn split_addr_args(args: &[String]) -> Result<(String, u32, Vec<String>)> {
+    let mut addr = None;
+    let mut id = 0u32;
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--addr" => {
+                addr = Some(args.get(i + 1).ok_or_else(|| anyhow!("--addr needs a value"))?.clone());
+                i += 2;
+            }
+            "--id" => {
+                id = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--id needs a value"))?
+                    .parse()
+                    .map_err(|_| anyhow!("bad --id"))?;
+                i += 2;
+            }
+            _ => {
+                rest.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    Ok((addr.ok_or_else(|| anyhow!("--addr is required"))?, id, rest))
+}
+
+fn cfg_from(rest: &[String]) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    for a in rest {
+        let kv = a
+            .strip_prefix("--")
+            .and_then(|r| r.split_once('='))
+            .ok_or_else(|| anyhow!("expected --key=value, got {a:?}"))?;
+        cfg.set(kv.0, kv.1).map_err(|e| anyhow!(e))?;
+    }
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    Ok(cfg)
+}
+
+/// Leader process: owns the parameters and the optimizer, drives rounds.
+pub fn leader_main(args: &[String]) -> Result<()> {
+    let (addr, _, rest) = split_addr_args(args)?;
+    let cfg = cfg_from(&rest)?;
+    let rt = Runtime::load_default()?;
+    let model = rt
+        .meta
+        .models
+        .get(&cfg.model)
+        .ok_or_else(|| anyhow!("unknown model {:?}", cfg.model))?
+        .clone();
+    let task = Task::for_model(&model, 42);
+
+    println!("leader: waiting for {} workers on {addr}", cfg.workers);
+    let (mut leader, local) = TcpLeader::bind_and_accept(&addr, cfg.workers)?;
+    println!("leader: cluster up at {local}");
+
+    let mut server = Server::new(
+        model.init_params(cfg.seed),
+        crate::optim::build(&cfg.optimizer, cfg.lr, model.param_count),
+        agg_kind(&cfg.method),
+    );
+    for step in 0..cfg.steps {
+        leader.broadcast(&Frame::params(params_to_bytes(&server.params)))?;
+        let frames = leader.gather()?;
+        let mut msgs = Vec::with_capacity(frames.len());
+        let mut loss_sum = 0.0f64;
+        for f in frames {
+            let loss = f32::from_le_bytes(f.payload[..4].try_into().unwrap());
+            loss_sum += loss as f64;
+            msgs.push(crate::wire::decode(&f.payload[4..]).comp);
+        }
+        server.apply_round(&msgs);
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let (el, ea) = evaluate(&rt, &model, &task, &server.params, cfg.eval_batches)?;
+            println!(
+                "step {:>5}  train_loss {:.4}  eval_loss {:.4}  eval_acc {:.4}  bits {}",
+                step + 1,
+                loss_sum / cfg.workers as f64,
+                el,
+                ea,
+                crate::util::fmt_bits(server.total_bits)
+            );
+        }
+    }
+    leader.broadcast(&Frame::shutdown())?;
+    println!("leader: done, total uplink {}", crate::util::fmt_bits(server.total_bits));
+    Ok(())
+}
+
+/// Worker process: computes gradients with its own PJRT runtime and
+/// streams compressed messages to the leader.
+pub fn worker_main(args: &[String]) -> Result<()> {
+    let (addr, id, rest) = split_addr_args(args)?;
+    let cfg = cfg_from(&rest)?;
+    let rt = Runtime::load_default()?;
+    let model = rt
+        .meta
+        .models
+        .get(&cfg.model)
+        .ok_or_else(|| anyhow!("unknown model {:?}", cfg.model))?
+        .clone();
+    let task = Task::for_model(&model, 42);
+    let class_probs =
+        dirichlet_class_probs(cfg.dirichlet_alpha, task.n_classes().max(1), cfg.workers, 42);
+    let hetero = cfg.dirichlet_alpha > 0.0 && task.n_classes() > 0;
+    let mut codec = build_codec(&cfg, &model);
+
+    let mut worker = TcpWorker::connect(&addr, id)?;
+    println!("worker {id}: connected to {addr}");
+    let mut step = 0u64;
+    loop {
+        let frame = worker.recv()?;
+        match frame.kind {
+            FRAME_PARAMS => {
+                let params = params_from_bytes(&frame.payload);
+                let probs = if hetero { Some(class_probs[id as usize].as_slice()) } else { None };
+                let b = task.train_batch(cfg.seed, id as u64, step, probs);
+                let x = if model.is_image() {
+                    ArgValue::F32(&b.x_f32)
+                } else {
+                    ArgValue::I32(&b.x_i32)
+                };
+                let (loss, grad) = rt.grad_step(&model, &params, &x, &b.y)?;
+                let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
+                let comp = codec.encode(&rt, &model, &grad, &mut rng)?;
+                let msg = crate::wire::WorkerMsg { step: step as u32, worker: id, comp };
+                let mut payload = loss.to_le_bytes().to_vec();
+                payload.extend_from_slice(&crate::wire::encode(&msg));
+                worker.send(&Frame::grad(payload))?;
+                step += 1;
+            }
+            FRAME_SHUTDOWN => {
+                println!("worker {id}: shutdown after {step} steps");
+                return Ok(());
+            }
+            other => return Err(anyhow!("worker {id}: unexpected frame kind {other}")),
+        }
+    }
+}

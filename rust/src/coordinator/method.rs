@@ -1,0 +1,162 @@
+//! Method registry: instantiate every comparator of the paper's
+//! experiments (§5, App. G) from a [`TrainConfig`].
+
+use crate::compress::{FixedPoint, Identity, Qsgd, RandK, Rtn, SignSgd, TopK};
+use crate::config::{Method, TrainConfig};
+use crate::ef::{AggKind, Ef14, Ef21Sgdm, GradientEncoder, Plain};
+use crate::mlmc::{MlFixedPoint, MlFloatPoint, MlRtn, MlSTopK, Mlmc, Schedule};
+
+/// Sparsification budget k (elements per message) for a model dimension
+/// and per-mille fraction.
+pub fn sparsify_k(d: usize, frac_pm: u32) -> usize {
+    ((d as u64 * frac_pm as u64 + 500) / 1000).max(1) as usize
+}
+
+/// QSGD positive-interval count for a bit budget (sign + mag bits):
+/// "2-bit QSGD" (Fig. 3) is s = 1.
+pub fn qsgd_s(quant_bits: usize) -> u32 {
+    if quant_bits <= 1 {
+        1
+    } else {
+        ((1u32 << (quant_bits - 1)) - 1).max(1)
+    }
+}
+
+/// Build the worker-side encoder for a method. `d` is the model
+/// dimension. This covers every method except the L1-artifact-backed
+/// adaptive MLMC, which the training driver wires directly to the
+/// runtime (see `train::Codec`).
+pub fn build_encoder(cfg: &TrainConfig, d: usize) -> Box<dyn GradientEncoder> {
+    let k = sparsify_k(d, cfg.frac_pm);
+    match cfg.method {
+        Method::Sgd => Box::new(Plain(Box::new(Identity))),
+        Method::TopK => Box::new(Plain(Box::new(TopK { k }))),
+        Method::RandK => Box::new(Plain(Box::new(RandK { k }))),
+        Method::Ef14 => Box::new(Ef14::new(Box::new(TopK { k }), d)),
+        Method::Ef21Sgdm => {
+            Box::new(Ef21Sgdm::new(Box::new(TopK { k }), d, cfg.momentum_beta))
+        }
+        Method::MlmcTopK => Box::new(Plain(Box::new(Mlmc::new(
+            Box::new(MlSTopK { s: k }),
+            Schedule::Adaptive,
+        )))),
+        Method::MlmcTopKStatic => Box::new(Plain(Box::new(Mlmc::new(
+            Box::new(MlSTopK { s: k }),
+            Schedule::Default,
+        )))),
+        Method::FixedPoint => Box::new(Plain(Box::new(FixedPoint { f: cfg.quant_bits }))),
+        Method::Qsgd => Box::new(Plain(Box::new(Qsgd { s: qsgd_s(cfg.quant_bits.max(1) + 1) }))),
+        Method::MlmcFixedPoint => Box::new(Plain(Box::new(Mlmc::new(
+            Box::new(MlFixedPoint::default()),
+            Schedule::Default,
+        )))),
+        Method::MlmcFloatPoint => Box::new(Plain(Box::new(Mlmc::new(
+            Box::new(MlFloatPoint::default()),
+            Schedule::Default,
+        )))),
+        Method::Rtn => Box::new(Plain(Box::new(Rtn { level: cfg.quant_bits as u32 + 1 }))),
+        Method::MlmcRtn => Box::new(Plain(Box::new(Mlmc::new(
+            Box::new(MlRtn::default()),
+            Schedule::Adaptive,
+        )))),
+        Method::Sign => Box::new(Plain(Box::new(SignSgd))),
+    }
+}
+
+/// The aggregation semantics each method needs server-side.
+pub fn agg_kind(method: &Method) -> AggKind {
+    match method {
+        Method::Ef21Sgdm => AggKind::Accumulate,
+        _ => AggKind::Fresh,
+    }
+}
+
+/// Human label used in figure legends (matches the paper's naming).
+pub fn legend(method: &Method) -> &'static str {
+    match method {
+        Method::Sgd => "SGD (uncompressed)",
+        Method::TopK => "Top-k",
+        Method::RandK => "Rand-k",
+        Method::Ef21Sgdm => "EF21-SGDM",
+        Method::Ef14 => "EF14",
+        Method::MlmcTopK => "Adaptive MLMC-Top-k (ours)",
+        Method::MlmcTopKStatic => "MLMC-Top-k static (ours)",
+        Method::FixedPoint => "Fixed-point quantization",
+        Method::Qsgd => "QSGD",
+        Method::MlmcFixedPoint => "MLMC Fixed-point (ours)",
+        Method::MlmcFloatPoint => "MLMC Float-point (ours)",
+        Method::Rtn => "RTN",
+        Method::MlmcRtn => "Adaptive MLMC-RTN (ours)",
+        Method::Sign => "SignSGD",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn grad(d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(3);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn every_method_builds_and_encodes() {
+        let g = grad(200);
+        for name in Method::all_names() {
+            let mut cfg = TrainConfig::default();
+            cfg.set("method", name).unwrap();
+            let mut enc = build_encoder(&cfg, g.len());
+            let mut rng = Rng::new(1);
+            let msg = enc.encode(&g, &mut rng);
+            assert_eq!(msg.dim(), g.len(), "{name}");
+            assert!(msg.wire_bits() > 0, "{name}");
+            // a second step must also work (stateful encoders)
+            let msg2 = enc.encode(&g, &mut rng);
+            assert_eq!(msg2.dim(), g.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn sparsify_k_rounding() {
+        assert_eq!(sparsify_k(1000, 10), 10);
+        assert_eq!(sparsify_k(1000, 500), 500);
+        assert_eq!(sparsify_k(3, 1), 1); // clamped to 1
+        assert_eq!(sparsify_k(118658, 50), 5933);
+    }
+
+    #[test]
+    fn qsgd_levels() {
+        assert_eq!(qsgd_s(1), 1);
+        assert_eq!(qsgd_s(2), 1); // 2-bit QSGD
+        assert_eq!(qsgd_s(3), 3);
+        assert_eq!(qsgd_s(4), 7);
+    }
+
+    #[test]
+    fn compressed_methods_beat_sgd_on_bits() {
+        // every compressing method must ship fewer bits than raw SGD
+        let g = grad(4096);
+        let mut rng = Rng::new(5);
+        let sgd_bits = {
+            let mut cfg = TrainConfig::default();
+            cfg.set("method", "sgd").unwrap();
+            build_encoder(&cfg, g.len()).encode(&g, &mut rng).wire_bits()
+        };
+        for name in ["topk", "randk", "ef21-sgdm", "mlmc-topk", "fxp", "qsgd", "rtn", "sign"] {
+            let mut cfg = TrainConfig::default();
+            cfg.set("method", name).unwrap();
+            cfg.frac_pm = 10;
+            let bits = build_encoder(&cfg, g.len()).encode(&g, &mut rng).wire_bits();
+            assert!(bits < sgd_bits, "{name}: {bits} !< {sgd_bits}");
+        }
+    }
+
+    #[test]
+    fn agg_kinds() {
+        assert_eq!(agg_kind(&Method::Ef21Sgdm), AggKind::Accumulate);
+        assert_eq!(agg_kind(&Method::MlmcTopK), AggKind::Fresh);
+        assert_eq!(agg_kind(&Method::Sgd), AggKind::Fresh);
+    }
+}

@@ -1,0 +1,144 @@
+//! The distributed coordinator: server-side aggregation + model update
+//! (the leader of the paper's master-server topology, Alg. 1/2/3), and
+//! the method registry that instantiates every comparator of §5.
+
+pub mod cluster;
+pub mod method;
+
+pub use method::{agg_kind, build_encoder, legend, sparsify_k};
+
+use crate::compress::Compressed;
+use crate::ef::AggKind;
+use crate::optim::Optimizer;
+
+/// The leader: owns the parameters, aggregates worker messages, applies
+/// the optimizer. Supports both aggregation semantics:
+///
+/// * [`AggKind::Fresh`] — messages are this step's gradient estimates:
+///   `x ← opt(x, (1/M) Σ decode(msg_i))` (SGD/Top-k/Rand-k/MLMC…)
+/// * [`AggKind::Accumulate`] — messages are EF21-style increments into a
+///   persistent aggregate `G`: `G += (1/M) Σ decode(msg_i)`, then
+///   `x ← opt(x, G)`.
+pub struct Server {
+    pub params: Vec<f32>,
+    opt: Box<dyn Optimizer>,
+    agg: AggKind,
+    /// EF21 aggregate G (Accumulate only)
+    shadow: Vec<f32>,
+    scratch: Vec<f32>,
+    /// cumulative uplink bits across all workers and rounds
+    pub total_bits: u64,
+    pub rounds: u64,
+}
+
+impl Server {
+    pub fn new(params: Vec<f32>, opt: Box<dyn Optimizer>, agg: AggKind) -> Self {
+        let d = params.len();
+        Server {
+            params,
+            opt,
+            agg,
+            shadow: vec![0.0; d],
+            scratch: vec![0.0; d],
+            total_bits: 0,
+            rounds: 0,
+        }
+    }
+
+    /// Apply one synchronous round of `m` worker messages. Returns the
+    /// uplink bits consumed this round.
+    pub fn apply_round(&mut self, msgs: &[Compressed]) -> u64 {
+        let m = msgs.len().max(1);
+        crate::tensor::zero(&mut self.scratch);
+        let mut bits = 0u64;
+        for msg in msgs {
+            debug_assert_eq!(msg.dim(), self.params.len());
+            msg.add_into(&mut self.scratch, 1.0 / m as f32);
+            bits += msg.wire_bits();
+        }
+        match self.agg {
+            AggKind::Fresh => {
+                self.opt.step(&mut self.params, &self.scratch);
+            }
+            AggKind::Accumulate => {
+                crate::tensor::axpy(&mut self.shadow, 1.0, &self.scratch);
+                let shadow = std::mem::take(&mut self.shadow);
+                self.opt.step(&mut self.params, &shadow);
+                self.shadow = shadow;
+            }
+        }
+        self.total_bits += bits;
+        self.rounds += 1;
+        bits
+    }
+
+    /// Adjust the optimizer step size mid-run (lr schedules).
+    pub fn set_lr(&mut self, lr: f32) {
+        self.opt.set_lr(lr);
+    }
+
+    /// Current EF21 aggregate (tests/diagnostics).
+    pub fn shadow(&self) -> &[f32] {
+        &self.shadow
+    }
+
+    pub fn agg(&self) -> AggKind {
+        self.agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressed, Payload};
+    use crate::optim::Sgd;
+
+    fn sparse(d: u32, idx: Vec<u32>, val: Vec<f32>) -> Compressed {
+        Compressed { payload: Payload::Sparse { d, idx, val }, extra_bits: 0 }
+    }
+
+    #[test]
+    fn fresh_round_averages_and_steps() {
+        let mut s = Server::new(vec![0.0; 3], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        let msgs = vec![
+            Compressed::dense(vec![2.0, 0.0, 0.0]),
+            Compressed::dense(vec![0.0, 4.0, 0.0]),
+        ];
+        let bits = s.apply_round(&msgs);
+        // x ← 0 − 1.0 * mean = −(1, 2, 0)
+        assert_eq!(s.params, vec![-1.0, -2.0, 0.0]);
+        assert_eq!(bits, 2 * 96);
+        assert_eq!(s.total_bits, 192);
+        assert_eq!(s.rounds, 1);
+    }
+
+    #[test]
+    fn accumulate_round_keeps_shadow() {
+        let mut s = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Accumulate);
+        // two rounds of constant increments: G grows, steps compound
+        s.apply_round(&[sparse(2, vec![0], vec![1.0])]);
+        assert_eq!(s.shadow(), &[1.0, 0.0]);
+        assert_eq!(s.params, vec![-1.0, 0.0]);
+        s.apply_round(&[sparse(2, vec![1], vec![2.0])]);
+        assert_eq!(s.shadow(), &[1.0, 2.0]);
+        assert_eq!(s.params, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn empty_round_is_noop_step() {
+        let mut s = Server::new(vec![1.0; 2], Box::new(Sgd { lr: 0.5 }), AggKind::Fresh);
+        let bits = s.apply_round(&[]);
+        assert_eq!(bits, 0);
+        assert_eq!(s.params, vec![1.0, 1.0]); // zero gradient
+    }
+
+    #[test]
+    fn sparse_messages_aggregate() {
+        let mut s = Server::new(vec![0.0; 4], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        s.apply_round(&[
+            sparse(4, vec![0, 2], vec![4.0, 8.0]),
+            sparse(4, vec![0], vec![-4.0]),
+        ]);
+        assert_eq!(s.params, vec![0.0, 0.0, -4.0, 0.0]);
+    }
+}

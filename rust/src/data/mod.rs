@@ -1,0 +1,536 @@
+//! Synthetic data pipeline (the GLUE-SST2 / CIFAR-10 stand-ins — see
+//! DESIGN.md §3 for the substitution rationale).
+//!
+//! * [`TextTask`] — two-class byte sequences: each class plants a
+//!   class-specific byte vocabulary + bigram structure; a mean-pooled
+//!   transformer classifier separates them, with enough residual overlap
+//!   that accuracy grows gradually over training (like SST-2 finetuning).
+//! * [`ImageTask`] — 10-class 32×32×3 images: class-specific Gaussian
+//!   blobs + sinusoid texture + pixel noise (CIFAR-like difficulty shape).
+//! * [`LmTask`] — byte-level language modelling over a seeded Markov
+//!   corpus with Zipf-ish transitions (e2e LM driver).
+//!
+//! Sharding: IID (per-worker independent streams) or Dirichlet(α)
+//! class-skew per worker — the heterogeneity knob of App. F.4.
+
+use crate::runtime::ModelMeta;
+use crate::tensor::Rng;
+
+/// One batch, model-layout ready.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// token inputs (tx/lm models)
+    pub x_i32: Vec<i32>,
+    /// image inputs (cnn models)
+    pub x_f32: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+/// A synthetic task bound to a model's shapes.
+pub enum Task {
+    Text(TextTask),
+    Image(ImageTask),
+    Lm(LmTask),
+}
+
+impl Task {
+    pub fn for_model(meta: &ModelMeta, seed: u64) -> Task {
+        if meta.is_image() {
+            Task::Image(ImageTask::new(meta, seed))
+        } else if meta.is_lm() {
+            Task::Lm(LmTask::new(meta, seed))
+        } else {
+            Task::Text(TextTask::new(meta, seed))
+        }
+    }
+
+    /// Training batch for `(run_seed, worker, step)`; `class_probs` skews
+    /// the class mixture for heterogeneous sharding (ignored by the LM
+    /// task). The task *structure* (templates, vocab sets) is fixed by
+    /// the construction seed so different run seeds share one task and
+    /// differ only in sample order — the paper's seed-averaging protocol.
+    pub fn train_batch(
+        &self,
+        run_seed: u64,
+        worker: u64,
+        step: u64,
+        class_probs: Option<&[f32]>,
+    ) -> Batch {
+        let mut rng = Rng::for_stream(self.seed() ^ 0x7281 ^ run_seed.wrapping_mul(0x9E37), worker, step);
+        self.sample(&mut rng, class_probs)
+    }
+
+    /// Deterministic held-out batch `idx` (shared across methods/seeds so
+    /// eval accuracy is comparable).
+    pub fn eval_batch(&self, idx: u64) -> Batch {
+        let mut rng = Rng::for_stream(self.seed() ^ 0xE7A1, 0xFFFF, idx);
+        self.sample(&mut rng, None)
+    }
+
+    fn seed(&self) -> u64 {
+        match self {
+            Task::Text(t) => t.seed,
+            Task::Image(t) => t.seed,
+            Task::Lm(t) => t.seed,
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng, class_probs: Option<&[f32]>) -> Batch {
+        match self {
+            Task::Text(t) => t.sample(rng, class_probs),
+            Task::Image(t) => t.sample(rng, class_probs),
+            Task::Lm(t) => t.sample(rng),
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Text(t) => t.n_classes,
+            Task::Image(t) => t.n_classes,
+            Task::Lm(_) => 0,
+        }
+    }
+}
+
+fn draw_class(rng: &mut Rng, n: usize, probs: Option<&[f32]>) -> usize {
+    match probs {
+        Some(p) => rng.categorical(p),
+        None => rng.below(n),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Text classification
+// ---------------------------------------------------------------------------
+
+pub struct TextTask {
+    pub seed: u64,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_classes: usize,
+    /// per-class preferred byte sets
+    class_vocab: Vec<Vec<i32>>,
+    /// per-class bigram successor table over the preferred set
+    class_next: Vec<Vec<i32>>,
+}
+
+impl TextTask {
+    pub fn new(meta: &ModelMeta, seed: u64) -> Self {
+        let n_classes = meta.n_classes.max(2);
+        let vocab = meta.vocab.max(2);
+        let mut gen = Rng::for_stream(seed, 0x7E97, 0);
+        let set_size = (vocab / 4).max(2);
+        let mut class_vocab = Vec::new();
+        let mut class_next = Vec::new();
+        for _ in 0..n_classes {
+            let set: Vec<i32> = gen.choose_k(vocab, set_size).iter().map(|v| *v as i32).collect();
+            // bigram: each preferred byte has a preferred successor
+            let next: Vec<i32> = (0..set_size).map(|_| set[gen.below(set_size)]).collect();
+            class_vocab.push(set);
+            class_next.push(next);
+        }
+        TextTask {
+            seed,
+            batch: meta.batch,
+            seq_len: meta.seq_len,
+            vocab,
+            n_classes,
+            class_vocab,
+            class_next,
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng, class_probs: Option<&[f32]>) -> Batch {
+        let mut x = Vec::with_capacity(self.batch * self.seq_len);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let c = draw_class(rng, self.n_classes, class_probs);
+            y.push(c as i32);
+            let set = &self.class_vocab[c];
+            let next = &self.class_next[c];
+            let mut prev_slot: Option<usize> = None;
+            for _ in 0..self.seq_len {
+                // 60%: class-preferred byte (with bigram chaining), else noise
+                let tok = if rng.uniform() < 0.6 {
+                    let slot = match prev_slot {
+                        // 50% chance to follow the bigram chain
+                        Some(s) if rng.uniform() < 0.5 => {
+                            set.iter().position(|b| *b == next[s]).unwrap_or(s)
+                        }
+                        _ => rng.below(set.len()),
+                    };
+                    prev_slot = Some(slot);
+                    set[slot]
+                } else {
+                    prev_slot = None;
+                    rng.below(self.vocab) as i32
+                };
+                x.push(tok);
+            }
+        }
+        Batch { x_i32: x, x_f32: Vec::new(), y }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Image classification
+// ---------------------------------------------------------------------------
+
+pub struct ImageTask {
+    pub seed: u64,
+    pub batch: usize,
+    pub image: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    /// per-class template image (image*image*channels)
+    templates: Vec<Vec<f32>>,
+}
+
+impl ImageTask {
+    pub fn new(meta: &ModelMeta, seed: u64) -> Self {
+        let n_classes = meta.n_classes.max(2);
+        let (hw, ch) = (meta.image.max(8), meta.in_channels.max(1));
+        let mut gen = Rng::for_stream(seed, 0x1446, 0);
+        let mut templates = Vec::new();
+        for _ in 0..n_classes {
+            let mut t = vec![0.0f32; hw * hw * ch];
+            // 3 Gaussian blobs at class-specific positions with class colors
+            for _ in 0..3 {
+                let (cx, cy) = (gen.uniform() * hw as f64, gen.uniform() * hw as f64);
+                let sigma = 2.0 + gen.uniform() * 4.0;
+                let color: Vec<f32> = (0..ch).map(|_| gen.normal() as f32).collect();
+                for yy in 0..hw {
+                    for xx in 0..hw {
+                        let dx = xx as f64 - cx;
+                        let dy = yy as f64 - cy;
+                        let g = (-(dx * dx + dy * dy) / (2.0 * sigma * sigma)).exp() as f32;
+                        for (c, col) in color.iter().enumerate() {
+                            t[(yy * hw + xx) * ch + c] += g * col;
+                        }
+                    }
+                }
+            }
+            // class-specific sinusoid texture
+            let (fx, fy) = (1.0 + gen.below(4) as f32, 1.0 + gen.below(4) as f32);
+            let phase = gen.uniform() as f32 * std::f32::consts::TAU;
+            for yy in 0..hw {
+                for xx in 0..hw {
+                    let s = (fx * xx as f32 * std::f32::consts::TAU / hw as f32
+                        + fy * yy as f32 * std::f32::consts::TAU / hw as f32
+                        + phase)
+                        .sin()
+                        * 0.3;
+                    for c in 0..ch {
+                        t[(yy * hw + xx) * ch + c] += s;
+                    }
+                }
+            }
+            templates.push(t);
+        }
+        ImageTask { seed, batch: meta.batch, image: hw, channels: ch, n_classes, templates }
+    }
+
+    fn sample(&self, rng: &mut Rng, class_probs: Option<&[f32]>) -> Batch {
+        let px = self.image * self.image * self.channels;
+        let mut x = Vec::with_capacity(self.batch * px);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let c = draw_class(rng, self.n_classes, class_probs);
+            y.push(c as i32);
+            let t = &self.templates[c];
+            // per-sample brightness/contrast jitter + pixel noise
+            let gain = 0.8 + 0.4 * rng.uniform() as f32;
+            let bias = 0.2 * rng.normal() as f32;
+            for v in t {
+                x.push(gain * v + bias + 0.6 * rng.normal() as f32);
+            }
+        }
+        Batch { x_i32: Vec::new(), x_f32: x, y }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Language modelling
+// ---------------------------------------------------------------------------
+
+pub struct LmTask {
+    pub seed: u64,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// Markov successor candidates: vocab x FANOUT preferred successors
+    succ: Vec<i32>,
+}
+
+const FANOUT: usize = 4;
+
+impl LmTask {
+    pub fn new(meta: &ModelMeta, seed: u64) -> Self {
+        let vocab = meta.vocab.max(2);
+        let mut gen = Rng::for_stream(seed, 0x11A9, 0);
+        let mut succ = Vec::with_capacity(vocab * FANOUT);
+        for _ in 0..vocab {
+            for _ in 0..FANOUT {
+                succ.push(gen.below(vocab) as i32);
+            }
+        }
+        LmTask { seed, batch: meta.batch, seq_len: meta.seq_len, vocab, succ }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Batch {
+        let mut x = Vec::with_capacity(self.batch * self.seq_len);
+        let mut y = Vec::with_capacity(self.batch * self.seq_len);
+        for _ in 0..self.batch {
+            let mut tok = rng.below(self.vocab) as i32;
+            let mut seq = Vec::with_capacity(self.seq_len + 1);
+            seq.push(tok);
+            for _ in 0..self.seq_len {
+                // 85%: Markov successor (Zipf-ish: earlier fanout slots
+                // more likely), else uniform noise
+                tok = if rng.uniform() < 0.85 {
+                    let w = [8.0f32, 4.0, 2.0, 1.0];
+                    let slot = rng.categorical(&w[..FANOUT]);
+                    self.succ[tok as usize * FANOUT + slot]
+                } else {
+                    rng.below(self.vocab) as i32
+                };
+                seq.push(tok);
+            }
+            x.extend_from_slice(&seq[..self.seq_len]);
+            y.extend_from_slice(&seq[1..=self.seq_len]);
+        }
+        Batch { x_i32: x, x_f32: Vec::new(), y }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heterogeneous sharding
+// ---------------------------------------------------------------------------
+
+/// Gamma(shape, 1) via Marsaglia–Tsang (with the α<1 boost).
+fn gamma(rng: &mut Rng, shape: f64) -> f64 {
+    if shape < 1.0 {
+        let u = rng.uniform().max(1e-12);
+        return gamma(rng, shape + 1.0) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.uniform().max(1e-300);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+/// Per-worker class distributions: Dirichlet(α) rows (α → ∞ ⇒ IID;
+/// small α ⇒ near single-class workers). `alpha <= 0` returns uniform.
+pub fn dirichlet_class_probs(
+    alpha: f32,
+    n_classes: usize,
+    workers: usize,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(workers);
+    for w in 0..workers {
+        if alpha <= 0.0 || n_classes == 0 {
+            out.push(vec![1.0 / n_classes.max(1) as f32; n_classes.max(1)]);
+            continue;
+        }
+        let mut rng = Rng::for_stream(seed ^ 0xD141, w as u64, 0);
+        let draws: Vec<f64> = (0..n_classes).map(|_| gamma(&mut rng, alpha as f64)).collect();
+        let total: f64 = draws.iter().sum();
+        out.push(draws.iter().map(|g| (g / total.max(1e-300)) as f32).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Metadata;
+
+    fn tx_meta() -> ModelMeta {
+        let text = r#"{
+          "elemwise_chunk": 1, "artifacts": {},
+          "models": {"t": {"kind": "tx", "param_count": 10, "batch": 4,
+            "seq_len": 16, "vocab": 256, "n_classes": 2, "grad": "g",
+            "eval": "e", "segstats": {}, "params": []}}}"#;
+        Metadata::parse(text).unwrap().models["t"].clone()
+    }
+
+    fn cnn_meta() -> ModelMeta {
+        let text = r#"{
+          "elemwise_chunk": 1, "artifacts": {},
+          "models": {"c": {"kind": "cnn", "param_count": 10, "batch": 3,
+            "image": 16, "in_channels": 3, "n_classes": 10, "grad": "g",
+            "eval": "e", "segstats": {}, "params": []}}}"#;
+        Metadata::parse(text).unwrap().models["c"].clone()
+    }
+
+    fn lm_meta() -> ModelMeta {
+        let text = r#"{
+          "elemwise_chunk": 1, "artifacts": {},
+          "models": {"l": {"kind": "lm", "param_count": 10, "batch": 2,
+            "seq_len": 8, "vocab": 256, "n_classes": 0, "grad": "g",
+            "eval": "e", "segstats": {}, "params": []}}}"#;
+        Metadata::parse(text).unwrap().models["l"].clone()
+    }
+
+    #[test]
+    fn text_batch_shapes_and_determinism() {
+        let t = Task::for_model(&tx_meta(), 5);
+        let b = t.train_batch(0, 0, 0, None);
+        assert_eq!(b.x_i32.len(), 4 * 16);
+        assert_eq!(b.y.len(), 4);
+        assert!(b.x_i32.iter().all(|t| (0..256).contains(t)));
+        assert!(b.y.iter().all(|c| *c == 0 || *c == 1));
+        // determinism + stream separation
+        let b2 = t.train_batch(0, 0, 0, None);
+        assert_eq!(b.x_i32, b2.x_i32);
+        let b3 = t.train_batch(0, 1, 0, None);
+        assert_ne!(b.x_i32, b3.x_i32);
+        let b4 = t.train_batch(0, 0, 1, None);
+        assert_ne!(b.x_i32, b4.x_i32);
+    }
+
+    #[test]
+    fn text_classes_are_separable() {
+        // nearest-template byte-histogram classification should beat chance
+        let meta = tx_meta();
+        let task = TextTask::new(&meta, 5);
+        let mut hist = vec![vec![0f64; 256]; 2];
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let b = task.sample(&mut rng, None);
+            for (i, &c) in b.y.iter().enumerate() {
+                for t in &b.x_i32[i * 16..(i + 1) * 16] {
+                    hist[c as usize][*t as usize] += 1.0;
+                }
+            }
+        }
+        // classify fresh samples by histogram dot product
+        let mut correct = 0;
+        let mut total = 0;
+        for _ in 0..100 {
+            let b = task.sample(&mut rng, None);
+            for (i, &c) in b.y.iter().enumerate() {
+                let mut scores = [0f64; 2];
+                for t in &b.x_i32[i * 16..(i + 1) * 16] {
+                    for k in 0..2 {
+                        scores[k] += hist[k][*t as usize];
+                    }
+                }
+                let pred = if scores[0] >= scores[1] { 0 } else { 1 };
+                correct += (pred == c as usize) as usize;
+                total += 1;
+            }
+        }
+        let acc = correct as f64 / total as f64;
+        assert!(acc > 0.75, "histogram classifier acc {acc}");
+    }
+
+    #[test]
+    fn image_batch_shapes() {
+        let t = Task::for_model(&cnn_meta(), 3);
+        let b = t.train_batch(0, 0, 0, None);
+        assert_eq!(b.x_f32.len(), 3 * 16 * 16 * 3);
+        assert_eq!(b.y.len(), 3);
+        assert!(b.y.iter().all(|c| (0..10).contains(c)));
+        assert!(b.x_f32.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn image_templates_differ_across_classes() {
+        let task = ImageTask::new(&cnn_meta(), 3);
+        let d = crate::tensor::sq_dist(&task.templates[0], &task.templates[1]);
+        assert!(d > 1.0, "{d}");
+    }
+
+    #[test]
+    fn lm_targets_are_shifted_inputs() {
+        let t = Task::for_model(&lm_meta(), 9);
+        let b = t.train_batch(0, 2, 7, None);
+        assert_eq!(b.x_i32.len(), 2 * 8);
+        assert_eq!(b.y.len(), 2 * 8);
+        for s in 0..2 {
+            let x = &b.x_i32[s * 8..(s + 1) * 8];
+            let y = &b.y[s * 8..(s + 1) * 8];
+            assert_eq!(&x[1..], &y[..7], "y is x shifted by one");
+        }
+    }
+
+    #[test]
+    fn lm_has_predictable_structure() {
+        // successors repeat: next-token entropy is well below uniform
+        let meta = lm_meta();
+        let task = LmTask::new(&meta, 9);
+        let mut rng = Rng::new(0);
+        let mut follows_markov = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let b = task.sample(&mut rng);
+            for s in 0..task.batch {
+                let x = &b.x_i32[s * 8..(s + 1) * 8];
+                let y = &b.y[s * 8..(s + 1) * 8];
+                for (xi, yi) in x.iter().zip(y) {
+                    let cands = &task.succ[*xi as usize * FANOUT..(*xi as usize + 1) * FANOUT];
+                    follows_markov += cands.contains(yi) as usize;
+                    total += 1;
+                }
+            }
+        }
+        let frac = follows_markov as f64 / total as f64;
+        assert!(frac > 0.75, "markov fraction {frac}");
+    }
+
+    #[test]
+    fn eval_batches_fixed() {
+        let t = Task::for_model(&tx_meta(), 5);
+        assert_eq!(t.eval_batch(3).x_i32, t.eval_batch(3).x_i32);
+        assert_ne!(t.eval_batch(3).x_i32, t.eval_batch(4).x_i32);
+        // eval stream differs from every train stream
+        assert_ne!(t.eval_batch(0).x_i32, t.train_batch(0, 0, 0, None).x_i32);
+    }
+
+    #[test]
+    fn dirichlet_rows_are_distributions() {
+        for alpha in [0.0f32, 0.1, 1.0, 100.0] {
+            let rows = dirichlet_class_probs(alpha, 10, 8, 1);
+            assert_eq!(rows.len(), 8);
+            for r in &rows {
+                let s: f64 = r.iter().map(|x| *x as f64).sum();
+                assert!((s - 1.0).abs() < 1e-5, "alpha={alpha} sum={s}");
+                assert!(r.iter().all(|p| *p >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_is_skewed() {
+        let skewed = dirichlet_class_probs(0.05, 10, 16, 2);
+        let uniform = dirichlet_class_probs(100.0, 10, 16, 2);
+        let max_skew: f32 = skewed.iter().map(|r| r.iter().cloned().fold(0.0, f32::max)).sum::<f32>() / 16.0;
+        let max_uni: f32 = uniform.iter().map(|r| r.iter().cloned().fold(0.0, f32::max)).sum::<f32>() / 16.0;
+        assert!(max_skew > 0.6, "{max_skew}");
+        assert!(max_uni < 0.3, "{max_uni}");
+    }
+
+    #[test]
+    fn class_probs_skew_batches() {
+        let t = Task::for_model(&tx_meta(), 5);
+        let probs = vec![1.0f32, 0.0];
+        let mut zeros = 0;
+        for step in 0..50 {
+            let b = t.train_batch(0, 0, step, Some(&probs));
+            zeros += b.y.iter().filter(|c| **c == 0).count();
+        }
+        assert_eq!(zeros, 50 * 4, "all samples class 0 under point-mass probs");
+    }
+}

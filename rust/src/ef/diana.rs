@@ -1,0 +1,189 @@
+//! DIANA (Mishchenko et al. 2023; Horváth et al. 2019 — paper §1.1):
+//! compress gradient *differences* against a learned per-worker shift.
+//!
+//! Worker i keeps `h_i`; each step sends `m = Q(g_i − h_i)` with an
+//! *unbiased* quantizer Q and updates `h_i += α·decode(m)`. The server
+//! mirrors `H = mean h_i` and reconstructs `ĝ = H + mean decode(m)`,
+//! then `H += α·mean(m)`. As training converges, `g_i − h_i → 0` and the
+//! quantization variance vanishes — variance reduction without bias.
+//!
+//! Server semantics are [`AggKind`]-style but need the shift state, so
+//! DIANA gets its own [`DianaServer`] wrapper; the method registry wires
+//! it through the standard coordinator when selected programmatically.
+
+use super::GradientEncoder;
+use crate::compress::{Compressed, Compressor};
+use crate::optim::Optimizer;
+use crate::tensor::{axpy, Rng};
+
+/// Worker side.
+pub struct Diana {
+    inner: Box<dyn Compressor>,
+    shift: Vec<f32>,
+    alpha: f32,
+    scratch: Vec<f32>,
+}
+
+impl Diana {
+    pub fn new(inner: Box<dyn Compressor>, d: usize, alpha: f32) -> Self {
+        assert!(inner.unbiased(), "DIANA requires an unbiased quantizer");
+        Diana { inner, shift: vec![0.0; d], alpha, scratch: vec![0.0; d] }
+    }
+
+    pub fn shift(&self) -> &[f32] {
+        &self.shift
+    }
+}
+
+impl GradientEncoder for Diana {
+    fn name(&self) -> String {
+        format!("diana[{}]", self.inner.name())
+    }
+
+    fn encode(&mut self, grad: &[f32], rng: &mut Rng) -> Compressed {
+        self.scratch.copy_from_slice(grad);
+        axpy(&mut self.scratch, -1.0, &self.shift);
+        let msg = self.inner.compress(&self.scratch, rng);
+        msg.add_into(&mut self.shift, self.alpha);
+        msg
+    }
+
+    fn agg(&self) -> super::AggKind {
+        // messages are *differences*; DianaServer adds the shift back
+        super::AggKind::Fresh
+    }
+}
+
+/// Server side: owns params + mirrored mean shift H.
+pub struct DianaServer {
+    pub params: Vec<f32>,
+    opt: Box<dyn Optimizer>,
+    shift: Vec<f32>,
+    alpha: f32,
+    scratch: Vec<f32>,
+    pub total_bits: u64,
+}
+
+impl DianaServer {
+    pub fn new(params: Vec<f32>, opt: Box<dyn Optimizer>, alpha: f32) -> Self {
+        let d = params.len();
+        DianaServer { params, opt, shift: vec![0.0; d], alpha, scratch: vec![0.0; d], total_bits: 0 }
+    }
+
+    pub fn apply_round(&mut self, msgs: &[Compressed]) -> u64 {
+        let m = msgs.len().max(1);
+        // scratch = mean decode(msgs)
+        crate::tensor::zero(&mut self.scratch);
+        let mut bits = 0;
+        for msg in msgs {
+            msg.add_into(&mut self.scratch, 1.0 / m as f32);
+            bits += msg.wire_bits();
+        }
+        // ĝ = H + mean diff
+        let mut ghat = self.shift.clone();
+        axpy(&mut ghat, 1.0, &self.scratch);
+        self.opt.step(&mut self.params, &ghat);
+        // H += α mean diff (mirrors the workers exactly)
+        axpy(&mut self.shift, self.alpha, &self.scratch);
+        self.total_bits += bits;
+        bits
+    }
+
+    pub fn shift(&self) -> &[f32] {
+        &self.shift
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Natural, Qsgd};
+    use crate::optim::Sgd;
+    use crate::tensor::{sq_dist, Rng};
+
+    #[test]
+    #[should_panic(expected = "unbiased")]
+    fn rejects_biased_inner() {
+        Diana::new(Box::new(crate::compress::TopK { k: 1 }), 4, 0.1);
+    }
+
+    #[test]
+    fn server_shift_mirrors_workers() {
+        let d = 16;
+        let m = 3;
+        let mut workers: Vec<Diana> =
+            (0..m).map(|_| Diana::new(Box::new(Qsgd { s: 4 }), d, 0.25)).collect();
+        let mut server = DianaServer::new(vec![0.0; d], Box::new(Sgd { lr: 0.0 }), 0.25);
+        let mut grng = Rng::new(5);
+        for step in 0..40 {
+            let msgs: Vec<Compressed> = workers
+                .iter_mut()
+                .enumerate()
+                .map(|(w, enc)| {
+                    let g: Vec<f32> = (0..d).map(|_| grng.normal() as f32).collect();
+                    let mut rng = Rng::for_stream(1, w as u64, step);
+                    enc.encode(&g, &mut rng)
+                })
+                .collect();
+            server.apply_round(&msgs);
+            // H == mean h_i exactly at every step
+            let mut mean_shift = vec![0.0f32; d];
+            for w in &workers {
+                axpy(&mut mean_shift, 1.0 / m as f32, w.shift());
+            }
+            assert!(sq_dist(server.shift(), &mean_shift) < 1e-10, "step {step}");
+        }
+    }
+
+    #[test]
+    fn diana_converges_and_shift_learns_gradient() {
+        // constant gradient field: shift → g, residual variance → 0
+        let d = 8;
+        let g: Vec<f32> = (0..d).map(|i| (i as f32 - 3.5) * 0.5).collect();
+        let mut enc = Diana::new(Box::new(Natural), d, 0.5);
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            enc.encode(&g, &mut rng);
+        }
+        assert!(sq_dist(enc.shift(), &g) < 1e-3, "{:?}", enc.shift());
+        // once the shift has converged, messages are near-zero
+        let last = enc.encode(&g, &mut rng).decode();
+        assert!(crate::tensor::sq_norm(&last) < 1e-3);
+    }
+
+    #[test]
+    fn diana_trains_quadratic() {
+        // full loop: heterogeneous quadratic, DIANA with QSGD
+        let d = 24;
+        let m = 4;
+        let mut trng = Rng::new(11);
+        let targets: Vec<Vec<f32>> =
+            (0..m).map(|_| (0..d).map(|_| trng.normal() as f32).collect()).collect();
+        let mut opt = vec![0.0f32; d];
+        for t in &targets {
+            axpy(&mut opt, 1.0 / m as f32, t);
+        }
+        let mut workers: Vec<Diana> =
+            (0..m).map(|_| Diana::new(Box::new(Qsgd { s: 4 }), d, 0.3)).collect();
+        let mut server = DianaServer::new(vec![0.0; d], Box::new(Sgd { lr: 0.2 }), 0.3);
+        for step in 0..400 {
+            if step == 300 {
+                server.opt.set_lr(0.02);
+            }
+            let params = server.params.clone();
+            let msgs: Vec<Compressed> = workers
+                .iter_mut()
+                .enumerate()
+                .map(|(w, enc)| {
+                    let g: Vec<f32> =
+                        params.iter().zip(&targets[w]).map(|(x, a)| x - a).collect();
+                    let mut rng = Rng::for_stream(2, w as u64, step);
+                    enc.encode(&g, &mut rng)
+                })
+                .collect();
+            server.apply_round(&msgs);
+        }
+        let err = sq_dist(&server.params, &opt);
+        assert!(err < 0.05, "distance {err}");
+    }
+}

@@ -1,0 +1,225 @@
+//! Figure-regeneration harness: one runner per figure in the paper's
+//! evaluation (Figs. 1–6) plus the lemma/theorem validation suite
+//! ([`validate`]). Each runner writes `results/figN.csv` and prints the
+//! series summary; the DESIGN.md §5 table maps figures to runners.
+//!
+//! Scale knobs (env): `MLMC_FIG_STEPS`, `MLMC_FIG_SEEDS`,
+//! `MLMC_FIG_WORKERS` (comma-separated), or pass `--quick` for a
+//! minutes-scale pass on this single-core testbed (shape-preserving:
+//! fewer seeds/steps/worker counts, same grids).
+
+pub mod quantization;
+pub mod sparsification;
+pub mod validate;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Method, TrainConfig};
+use crate::metrics::mean_std;
+use crate::runtime::Runtime;
+use crate::train;
+
+/// Scale parameters for figure runs.
+#[derive(Clone, Debug)]
+pub struct FigScale {
+    pub steps: usize,
+    pub seeds: Vec<u64>,
+    pub workers: Vec<usize>,
+    pub eval_every: usize,
+}
+
+impl FigScale {
+    pub fn from_env(quick: bool) -> Self {
+        let steps = env_usize("MLMC_FIG_STEPS", if quick { 60 } else { 200 });
+        let n_seeds = env_usize("MLMC_FIG_SEEDS", if quick { 1 } else { 3 });
+        let workers = std::env::var("MLMC_FIG_WORKERS")
+            .ok()
+            .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+            .unwrap_or_else(|| if quick { vec![4] } else { vec![4, 32] });
+        FigScale {
+            steps,
+            seeds: (1..=n_seeds as u64).collect(),
+            workers,
+            eval_every: (steps / 10).max(1),
+        }
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One seed-averaged training curve for a figure legend entry.
+pub struct FigSeries {
+    pub method: Method,
+    pub workers: usize,
+    pub frac_pm: u32,
+    pub quant_bits: usize,
+    /// (step, mean bits, mean eval acc, std eval acc, mean train loss)
+    pub points: Vec<(u64, f64, f64, f64, f64)>,
+}
+
+impl FigSeries {
+    pub fn final_acc(&self) -> f64 {
+        self.points
+            .iter()
+            .rev()
+            .find(|p| !p.2.is_nan())
+            .map(|p| p.2)
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn total_bits(&self) -> f64 {
+        self.points.last().map(|p| p.1).unwrap_or(0.0)
+    }
+
+    /// Mean bits to reach accuracy ≥ target (None if never).
+    pub fn bits_to_acc(&self, target: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.2 >= target).map(|p| p.1)
+    }
+}
+
+/// Run one (method, workers, pm, quant_bits) cell averaged over seeds.
+pub fn run_cell(
+    rt: &Runtime,
+    base: &TrainConfig,
+    method: Method,
+    workers: usize,
+    scale: &FigScale,
+) -> Result<FigSeries> {
+    let mut curves = Vec::new();
+    for &seed in &scale.seeds {
+        let mut cfg = base.clone();
+        cfg.method = method.clone();
+        cfg.workers = workers;
+        cfg.steps = scale.steps;
+        cfg.eval_every = scale.eval_every;
+        cfg.seed = seed;
+        let r = train::run(rt, &cfg)?;
+        curves.push(r.curve);
+    }
+    // seed-average pointwise (all curves share the step grid)
+    let n = curves[0].points.len();
+    let mut points = Vec::with_capacity(n);
+    for i in 0..n {
+        let step = curves[0].points[i].step;
+        let bits: Vec<f64> = curves.iter().map(|c| c.points[i].bits as f64).collect();
+        let accs: Vec<f64> = curves
+            .iter()
+            .map(|c| c.points[i].eval_acc)
+            .filter(|a| !a.is_nan())
+            .collect();
+        let losses: Vec<f64> = curves.iter().map(|c| c.points[i].train_loss).collect();
+        let (acc_m, acc_s) = if accs.is_empty() { (f64::NAN, f64::NAN) } else { mean_std(&accs) };
+        points.push((step, mean_std(&bits).0, acc_m, acc_s, mean_std(&losses).0));
+    }
+    Ok(FigSeries {
+        method,
+        workers,
+        frac_pm: base.frac_pm,
+        quant_bits: base.quant_bits,
+        points,
+    })
+}
+
+/// Write a set of series as a long-format CSV.
+pub fn write_series_csv(path: &std::path::Path, series: &[FigSeries]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "method,workers,frac_pm,quant_bits,step,bits,eval_acc,eval_acc_std,train_loss")?;
+    for s in series {
+        for (step, bits, acc, acc_std, loss) in &s.points {
+            writeln!(
+                f,
+                "{},{},{},{},{},{:.0},{:.5},{:.5},{:.5}",
+                s.method, s.workers, s.frac_pm, s.quant_bits, step, bits, acc, acc_std, loss
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Print the per-series summary block (the "figure" in text form).
+pub fn print_summary(title: &str, series: &[FigSeries], acc_target: f64) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<28} {:>3} {:>6} {:>9} {:>9} {:>14}",
+        "method", "M", "pm", "final_acc", "loss", format!("bits@acc>{acc_target}")
+    );
+    for s in series {
+        let bta = s
+            .bits_to_acc(acc_target)
+            .map(|b| crate::util::fmt_bits(b as u64))
+            .unwrap_or_else(|| "—".into());
+        let loss = s.points.last().map(|p| p.4).unwrap_or(f64::NAN);
+        println!(
+            "{:<28} {:>3} {:>6} {:>9.4} {:>9.4} {:>14}",
+            crate::coordinator::legend(&s.method),
+            s.workers,
+            s.frac_pm,
+            s.final_acc(),
+            loss,
+            bta
+        );
+    }
+}
+
+/// `mlmc-dist figure <id>` entry point.
+pub fn cli(args: &[String]) -> Result<()> {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let quick = args.iter().any(|a| a == "--quick");
+    let scale = FigScale::from_env(quick);
+    let rt = Runtime::load_default()?;
+    println!(
+        "figure scale: steps={} seeds={:?} workers={:?}{}",
+        scale.steps,
+        scale.seeds,
+        scale.workers,
+        if quick { " (quick)" } else { "" }
+    );
+    match which {
+        "fig1" | "fig2" => sparsification::run(&rt, &scale, "tx-tiny", &[10, 50, 100, 500], "fig1", "fig2"),
+        "fig3" => quantization::run_bitwise(&rt, &scale),
+        "fig4" | "fig5" => sparsification::run(&rt, &scale, "cnn-tiny", &[1, 5, 10, 50], "fig4", "fig5"),
+        "fig6" => quantization::run_rtn(&rt, &scale),
+        "all" => {
+            sparsification::run(&rt, &scale, "tx-tiny", &[10, 50, 100, 500], "fig1", "fig2")?;
+            quantization::run_bitwise(&rt, &scale)?;
+            sparsification::run(&rt, &scale, "cnn-tiny", &[1, 5, 10, 50], "fig4", "fig5")?;
+            quantization::run_rtn(&rt, &scale)
+        }
+        other => bail!("unknown figure {other:?} (fig1..fig6|all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_from_env_quick() {
+        let s = FigScale::from_env(true);
+        assert!(s.steps <= 200);
+        assert!(!s.seeds.is_empty());
+        assert!(!s.workers.is_empty());
+    }
+
+    #[test]
+    fn series_queries() {
+        let s = FigSeries {
+            method: Method::Sgd,
+            workers: 4,
+            frac_pm: 10,
+            quant_bits: 1,
+            points: vec![
+                (1, 100.0, f64::NAN, f64::NAN, 2.0),
+                (2, 200.0, 0.6, 0.0, 1.5),
+                (3, 300.0, 0.8, 0.0, 1.0),
+            ],
+        };
+        assert_eq!(s.final_acc(), 0.8);
+        assert_eq!(s.total_bits(), 300.0);
+        assert_eq!(s.bits_to_acc(0.7), Some(300.0));
+        assert_eq!(s.bits_to_acc(0.9), None);
+    }
+}

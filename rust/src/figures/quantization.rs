@@ -1,0 +1,86 @@
+//! Fig. 3 (bit-wise quantization on the CIFAR stand-in) and Fig. 6
+//! (RTN on the SST-2 stand-in).
+
+use anyhow::Result;
+
+use super::{print_summary, run_cell, write_series_csv, FigScale, FigSeries};
+use crate::config::{Method, TrainConfig};
+use crate::runtime::Runtime;
+
+/// Fig. 3: MLMC fixed-point (Alg. 2) vs biased 2-bit fixed-point vs
+/// unbiased 2-bit QSGD vs uncompressed SGD.
+pub fn run_bitwise(rt: &Runtime, scale: &FigScale) -> Result<()> {
+    let model = "cnn-tiny";
+    let cells: Vec<(Method, usize, f32)> = vec![
+        // (method, quant_bits (info bits: 1 → "2-bit"), lr)
+        (Method::MlmcFixedPoint, 1, 0.05),
+        (Method::FixedPoint, 1, 0.05),
+        (Method::Qsgd, 1, 0.03),
+        (Method::Sgd, 1, 0.05),
+    ];
+    let mut series: Vec<FigSeries> = Vec::new();
+    for &workers in &scale.workers {
+        for (method, qb, lr) in &cells {
+            let mut base = TrainConfig {
+                model: model.into(),
+                quant_bits: *qb,
+                lr: *lr,
+                eval_batches: 4,
+                ..TrainConfig::default()
+            };
+            base.method = method.clone();
+            let t = std::time::Instant::now();
+            let cell = run_cell(rt, &base, method.clone(), workers, scale)?;
+            println!(
+                "  [fig3 M={workers}] {:<10} acc={:.3} bits={} ({:.1}s)",
+                method.to_string(),
+                cell.final_acc(),
+                crate::util::fmt_bits(cell.total_bits() as u64),
+                t.elapsed().as_secs_f64()
+            );
+            series.push(cell);
+        }
+    }
+    write_series_csv(&crate::util::results_dir().join("fig3.csv"), &series)?;
+    print_summary("fig3: CNN bit-wise quantization comparison", &series, 0.5);
+    Ok(())
+}
+
+/// Fig. 6: adaptive MLMC-RTN vs RTN at l ∈ {2,4,8,16} vs SGD.
+pub fn run_rtn(rt: &Runtime, scale: &FigScale) -> Result<()> {
+    let model = "tx-tiny";
+    let mut cells: Vec<(Method, usize, f32)> = vec![(Method::MlmcRtn, 1, 0.1)];
+    for l in [2usize, 4, 8, 16] {
+        // TrainConfig.quant_bits holds l−1 for the biased RTN baseline
+        // (method.rs adds 1 to avoid the degenerate l=1 grid)
+        cells.push((Method::Rtn, l - 1, 0.2));
+    }
+    cells.push((Method::Sgd, 1, 0.2));
+    let mut series: Vec<FigSeries> = Vec::new();
+    for &workers in &scale.workers {
+        for (method, qb, lr) in &cells {
+            let mut base = TrainConfig {
+                model: model.into(),
+                quant_bits: *qb,
+                lr: *lr,
+                eval_batches: 4,
+                ..TrainConfig::default()
+            };
+            base.method = method.clone();
+            let t = std::time::Instant::now();
+            let cell = run_cell(rt, &base, method.clone(), workers, scale)?;
+            println!(
+                "  [fig6 M={workers}] {:<10} l={:<2} acc={:.3} bits={} ({:.1}s)",
+                method.to_string(),
+                qb + 1,
+                cell.final_acc(),
+                crate::util::fmt_bits(cell.total_bits() as u64),
+                t.elapsed().as_secs_f64()
+            );
+            series.push(cell);
+        }
+    }
+    write_series_csv(&crate::util::results_dir().join("fig6.csv"), &series)?;
+    print_summary("fig6: RTN quantization comparison", &series, 0.75);
+    Ok(())
+}

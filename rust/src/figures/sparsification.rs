@@ -1,0 +1,106 @@
+//! Figs. 1/2 (BERT/SST-2 stand-in) and Figs. 4/5 (ResNet/CIFAR stand-in):
+//! sparsification-compressor comparison across sparsification levels
+//! `k/n` and worker counts, on both the communication axis (figs 1/4)
+//! and the iteration axis (figs 2/5). One run set feeds both axes, as in
+//! the paper.
+
+use anyhow::Result;
+
+use super::{print_summary, run_cell, write_series_csv, FigScale, FigSeries};
+use crate::config::{Method, TrainConfig};
+use crate::runtime::Runtime;
+
+/// Comparators of Figs. 1/2/4/5 (paper §5.1, App. G.1).
+pub fn methods() -> Vec<Method> {
+    vec![
+        Method::MlmcTopK,
+        Method::TopK,
+        Method::Ef21Sgdm,
+        Method::RandK,
+        Method::Sgd,
+    ]
+}
+
+/// Per-(model, method) learning rate. The paper tunes the lr per method
+/// (§5.1); these come from the coarse sweep recorded in EXPERIMENTS.md.
+pub fn lr_for(model: &str, method: &Method) -> f32 {
+    let tx = model.starts_with("tx");
+    match method {
+        Method::Sgd => {
+            if tx {
+                0.2
+            } else {
+                0.05
+            }
+        }
+        Method::TopK | Method::Ef21Sgdm => {
+            if tx {
+                0.2
+            } else {
+                0.05
+            }
+        }
+        // unbiased high-variance estimators need smaller steps (ω = d/k−1)
+        Method::RandK => {
+            if tx {
+                0.02
+            } else {
+                0.01
+            }
+        }
+        Method::MlmcTopK | Method::MlmcTopKStatic => {
+            if tx {
+                0.1
+            } else {
+                0.03
+            }
+        }
+        _ => 0.05,
+    }
+}
+
+pub fn run(
+    rt: &Runtime,
+    scale: &FigScale,
+    model: &str,
+    pms: &[u32],
+    comm_fig: &str,
+    iter_fig: &str,
+) -> Result<()> {
+    let mut series: Vec<FigSeries> = Vec::new();
+    for &workers in &scale.workers {
+        for &pm in pms {
+            for method in methods() {
+                let mut base = TrainConfig {
+                    model: model.into(),
+                    frac_pm: pm,
+                    lr: lr_for(model, &method),
+                    eval_batches: 4,
+                    ..TrainConfig::default()
+                };
+                base.method = method.clone();
+                let t = std::time::Instant::now();
+                let cell = run_cell(rt, &base, method.clone(), workers, scale)?;
+                println!(
+                    "  [{model} pm={pm} M={workers}] {:<12} acc={:.3} bits={} ({:.1}s)",
+                    method.to_string(),
+                    cell.final_acc(),
+                    crate::util::fmt_bits(cell.total_bits() as u64),
+                    t.elapsed().as_secs_f64()
+                );
+                series.push(cell);
+            }
+        }
+    }
+    let dir = crate::util::results_dir();
+    write_series_csv(&dir.join(format!("{comm_fig}.csv")), &series)?;
+    // the iteration-axis figure is the same data keyed by step — emit a
+    // marker CSV so both figure ids resolve to files
+    write_series_csv(&dir.join(format!("{iter_fig}.csv")), &series)?;
+    print_summary(
+        &format!("{comm_fig}/{iter_fig}: {model} sparsification comparison"),
+        &series,
+        if model.starts_with("tx") { 0.75 } else { 0.5 },
+    );
+    Ok(())
+}

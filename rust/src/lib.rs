@@ -1,0 +1,41 @@
+//! # mlmc-dist
+//!
+//! Reproduction of *"Beyond Communication Overhead: A Multilevel Monte
+//! Carlo Approach for Mitigating Compression Bias in Distributed
+//! Learning"* (ICML 2025) as a three-layer rust + JAX/Pallas system:
+//!
+//! * **L3 (this crate)** — the distributed coordinator: leader/worker
+//!   data-parallel SGD, the compressor library, the MLMC estimator
+//!   (Alg. 2) and its adaptive variant (Alg. 3), error-feedback baselines,
+//!   a bit-exact wire protocol, transports, metrics, config, CLI, and the
+//!   figure-regeneration harness.
+//! * **L2** — JAX models (`python/compile/model.py`) AOT-lowered to HLO
+//!   text, loaded and executed here via PJRT ([`runtime`]).
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) fused into the
+//!   L2 graphs (segment energies for Lemma 3.4, fixed-point / RTN
+//!   quantizers).
+//!
+//! Python never runs on the training path: `make artifacts` emits
+//! everything up front and the rust binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for measured results.
+
+pub mod benchlib;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod ef;
+pub mod figures;
+pub mod metrics;
+pub mod mlmc;
+pub mod netsim;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod transport;
+pub mod util;
+pub mod wire;

@@ -1,0 +1,137 @@
+//! `mlmc-dist` CLI — the launcher.
+//!
+//! ```text
+//! mlmc-dist train [--config run.toml] [--key=value ...]
+//! mlmc-dist figure <fig1|fig2|fig3|fig4|fig5|fig6|all> [--quick]
+//! mlmc-dist validate [lem32|lem33|lem34|lem36|thm41|comm|all]
+//! mlmc-dist info
+//! mlmc-dist worker --addr H:P --id N ...   (TCP cluster worker)
+//! mlmc-dist leader --addr H:P ...          (TCP cluster leader)
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use mlmc_dist::config::TrainConfig;
+use mlmc_dist::runtime::Runtime;
+use mlmc_dist::{figures, train, util};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args[1..]),
+        "figure" => figures::cli(&args[1..]),
+        "validate" => figures::validate::cli(&args[1..]),
+        "info" => cmd_info(),
+        "leader" => mlmc_dist::coordinator::cluster::leader_main(&args[1..]),
+        "worker" => mlmc_dist::coordinator::cluster::worker_main(&args[1..]),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `mlmc-dist help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mlmc-dist — MLMC compression for distributed learning (ICML 2025 reproduction)\n\n\
+         commands:\n\
+         \x20 train    [--config FILE] [--key=value ...]   run one training config\n\
+         \x20 figure   <fig1..fig6|all> [--quick]          regenerate a paper figure\n\
+         \x20 validate [lem32|lem33|lem34|lem36|thm41|comm|all]  lemma/theorem checks\n\
+         \x20 leader   --addr H:P [--key=value ...]        TCP cluster leader\n\
+         \x20 worker   --addr H:P --id N [--key=value ...] TCP cluster worker\n\
+         \x20 info                                         list artifacts/models\n\n\
+         config keys: {}\n",
+        [
+            "model", "method", "workers", "steps", "lr", "seed", "frac_pm",
+            "quant_bits", "eval_every", "eval_batches", "transport",
+            "optimizer", "momentum_beta", "dirichlet_alpha", "use_l1_stats", "tag",
+        ]
+        .join(", ")
+    );
+}
+
+/// Parse `--config FILE` plus `--key=value` overrides.
+pub fn parse_cfg(args: &[String]) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--config" {
+            let path = args.get(i + 1).ok_or_else(|| anyhow!("--config needs a path"))?;
+            let text = std::fs::read_to_string(path)?;
+            cfg = TrainConfig::from_toml(&text).map_err(|e| anyhow!(e))?;
+            i += 2;
+            continue;
+        }
+        let rest = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --key=value, got {a:?}"))?;
+        let (k, v) = rest
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected --key=value, got {a:?}"))?;
+        cfg.set(k, v).map_err(|e| anyhow!(e))?;
+        i += 1;
+    }
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let rt = Runtime::load_default()?;
+    let csv = util::results_dir().join(format!("train_{}.csv", cfg.run_id()));
+    println!("run {}: model={} method={} M={} steps={} lr={}",
+        cfg.run_id(), cfg.model, cfg.method, cfg.workers, cfg.steps, cfg.lr);
+    let t = std::time::Instant::now();
+    let r = train::run_with_csv(&rt, &cfg, Some(&csv))?;
+    let (el, ea) = r
+        .curve
+        .points
+        .iter()
+        .rev()
+        .find(|p| !p.eval_acc.is_nan())
+        .map(|p| (p.eval_loss, p.eval_acc))
+        .unwrap_or((f64::NAN, f64::NAN));
+    println!(
+        "done in {:.1}s: codec={} final_train_loss={:.4} eval_loss={:.4} eval_acc={:.4} bits={}",
+        t.elapsed().as_secs_f64(),
+        r.codec_name,
+        r.curve.tail_loss(5),
+        el,
+        ea,
+        util::fmt_bits(r.total_bits)
+    );
+    println!("curve: {}", csv.display());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    println!("artifacts dir: {}", util::artifacts_dir().display());
+    println!("\nmodels:");
+    for (name, m) in &rt.meta.models {
+        println!(
+            "  {:<10} kind={:<4} params={:>9}  batch={}  segstats@pm{:?}",
+            name,
+            m.kind,
+            m.param_count,
+            m.batch,
+            m.segstats.keys().collect::<Vec<_>>()
+        );
+    }
+    println!("\nartifacts:");
+    for (name, a) in &rt.meta.artifacts {
+        println!("  {:<28} kind={:<11} file={}", name, a.kind, a.file);
+    }
+    Ok(())
+}

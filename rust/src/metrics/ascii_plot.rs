@@ -1,0 +1,117 @@
+//! Terminal line plots: render figure series as ASCII so
+//! `mlmc-dist figure` output is readable without leaving the shell
+//! (the CSVs remain the source of truth for real plotting).
+
+/// One named series of (x, y) points.
+pub struct Series<'a> {
+    pub label: &'a str,
+    pub points: Vec<(f64, f64)>,
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render series into a `width x height` character grid with axis
+/// annotations. `log_x` plots x on a log10 scale (bits axes span decades).
+pub fn render(series: &[Series], width: usize, height: usize, log_x: bool) -> String {
+    let (width, height) = (width.max(16), height.max(4));
+    let xf = |x: f64| if log_x { x.max(1.0).log10() } else { x };
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for s in series {
+        for &(x, y) in &s.points {
+            if !y.is_finite() {
+                continue;
+            }
+            xmin = xmin.min(xf(x));
+            xmax = xmax.max(xf(x));
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || !ymin.is_finite() {
+        return "(no finite points)\n".into();
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            if !y.is_finite() {
+                continue;
+            }
+            let cx = ((xf(x) - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = g;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let ylabel = if i == 0 {
+            format!("{ymax:>8.3} |")
+        } else if i == height - 1 {
+            format!("{ymin:>8.3} |")
+        } else {
+            format!("{:>8} |", "")
+        };
+        out.push_str(&ylabel);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9}+{}\n", "", "-".repeat(width)));
+    let xl = if log_x { format!("1e{xmin:.1}") } else { format!("{xmin:.1}") };
+    let xr = if log_x { format!("1e{xmax:.1}") } else { format!("{xmax:.1}") };
+    out.push_str(&format!("{:>10}{}{:>w$}\n", xl, "", xr, w = width.saturating_sub(xl.len())));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_two_series() {
+        let s = vec![
+            Series { label: "up", points: (0..20).map(|i| (i as f64, i as f64)).collect() },
+            Series { label: "down", points: (0..20).map(|i| (i as f64, 20.0 - i as f64)).collect() },
+        ];
+        let out = render(&s, 40, 10, false);
+        assert!(out.contains('*'));
+        assert!(out.contains('o'));
+        assert!(out.contains("up"));
+        assert!(out.contains("down"));
+        assert!(out.lines().count() >= 12);
+    }
+
+    #[test]
+    fn handles_empty_and_nan() {
+        let s = vec![Series { label: "nan", points: vec![(1.0, f64::NAN)] }];
+        assert!(render(&s, 30, 8, false).contains("no finite points"));
+        let s = vec![Series { label: "one", points: vec![(1.0, 2.0)] }];
+        let out = render(&s, 30, 8, true);
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn log_x_compresses_decades() {
+        let s = vec![Series {
+            label: "bits",
+            points: vec![(1e3, 0.5), (1e6, 0.8), (1e9, 0.95)],
+        }];
+        let out = render(&s, 60, 10, true);
+        // three distinct plotted columns despite the 1e6x range
+        // (+1 star for the legend glyph line)
+        let stars: usize = out.matches('*').count();
+        assert_eq!(stars, 3 + 1, "{out}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Run metrics: CSV logging of training curves (the raw material for
+//! every figure) and simple timing helpers.
+
+pub mod ascii_plot;
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+/// One logged training-curve point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Point {
+    pub step: u64,
+    /// cumulative uplink bits across all workers (figure x-axis)
+    pub bits: u64,
+    pub train_loss: f64,
+    pub eval_loss: f64,
+    pub eval_acc: f64,
+    pub wall_ms: f64,
+}
+
+/// In-memory training curve with optional CSV sink.
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<Point>,
+    sink: Option<BufWriter<File>>,
+    start: Instant,
+}
+
+impl Curve {
+    pub fn new(name: impl Into<String>) -> Self {
+        Curve { name: name.into(), points: Vec::new(), sink: None, start: Instant::now() }
+    }
+
+    /// Also stream points to a CSV file (header written immediately).
+    pub fn with_csv(name: impl Into<String>, path: &Path) -> std::io::Result<Self> {
+        let mut c = Curve::new(name);
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "step,bits,train_loss,eval_loss,eval_acc,wall_ms")?;
+        c.sink = Some(w);
+        Ok(c)
+    }
+
+    pub fn log(&mut self, step: u64, bits: u64, train_loss: f64, eval_loss: f64, eval_acc: f64) {
+        let p = Point {
+            step,
+            bits,
+            train_loss,
+            eval_loss,
+            eval_acc,
+            wall_ms: self.start.elapsed().as_secs_f64() * 1e3,
+        };
+        if let Some(w) = &mut self.sink {
+            let _ = writeln!(
+                w,
+                "{},{},{:.6},{:.6},{:.6},{:.1}",
+                p.step, p.bits, p.train_loss, p.eval_loss, p.eval_acc, p.wall_ms
+            );
+        }
+        self.points.push(p);
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(w) = &mut self.sink {
+            let _ = w.flush();
+        }
+    }
+
+    /// Best (max) eval accuracy seen.
+    pub fn best_acc(&self) -> f64 {
+        self.points.iter().map(|p| p.eval_acc).fold(0.0, f64::max)
+    }
+
+    /// Final logged train loss.
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.train_loss).unwrap_or(f64::NAN)
+    }
+
+    /// Bits needed to first reach an eval accuracy ≥ `target`
+    /// (communication efficiency — the Fig. 1/4 summary statistic).
+    pub fn bits_to_acc(&self, target: f64) -> Option<u64> {
+        self.points.iter().find(|p| p.eval_acc >= target).map(|p| p.bits)
+    }
+
+    /// Mean train loss over the last `n` points (noise-robust endpoint).
+    pub fn tail_loss(&self, n: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(n)..];
+        tail.iter().map(|p| p.train_loss).sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Mean/std over a slice (for seed-averaged figure series).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_accumulates_and_queries() {
+        let mut c = Curve::new("t");
+        c.log(0, 0, 2.0, 2.0, 0.5);
+        c.log(10, 1000, 1.0, 1.2, 0.7);
+        c.log(20, 2000, 0.5, 0.9, 0.9);
+        assert_eq!(c.points.len(), 3);
+        assert_eq!(c.best_acc(), 0.9);
+        assert_eq!(c.final_loss(), 0.5);
+        assert_eq!(c.bits_to_acc(0.65), Some(1000));
+        assert_eq!(c.bits_to_acc(0.95), None);
+        assert!((c.tail_loss(2) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_sink_writes() {
+        let dir = std::env::temp_dir().join("mlmc_dist_test_metrics");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("curve.csv");
+        {
+            let mut c = Curve::with_csv("t", &path).unwrap();
+            c.log(1, 64, 1.5, 1.4, 0.6);
+            c.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,bits"));
+        assert!(text.lines().count() == 2);
+        assert!(text.contains("1,64,1.5"));
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(s, 1.0);
+        assert!(mean_std(&[]).0.is_nan());
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        assert!(t.ms() >= 0.0);
+    }
+}

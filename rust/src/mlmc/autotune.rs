@@ -1,0 +1,150 @@
+//! Segment-size auto-tuning from the gradient's decay structure
+//! (Lemma 3.6 / Assumption 3.5 operationalized).
+//!
+//! §3.3 observes deep-net gradients decay ~exponentially when sorted by
+//! magnitude: `|v_(j)| ≈ |v_(0)| e^{-rj/2}`. Lemma 3.6 then gives the
+//! adaptive MLMC variance `O(1/(r·s))` *provided* `s·r ≤ 1`. This module
+//! estimates r̂ from a sorted gradient (log-magnitude least squares over
+//! the energy-carrying prefix) and picks the largest segment size with
+//! `s·r̂ ≤ 1` — maximum communication savings without leaving the
+//! low-variance regime. Exposed as a library feature (the paper lists
+//! per-sample adaptivity as the enhancement direction; this is the
+//! natural next step and is exercised in `examples/` + tests).
+
+use crate::tensor::select::argsort_desc_abs;
+
+/// Least-squares estimate of the decay rate r in
+/// `|v_(j)| = |v_(0)| e^{-r j / 2}` from the sorted magnitudes.
+/// Fits over the prefix holding 99% of the energy (the tail is noise).
+pub fn estimate_decay_rate(v: &[f32]) -> f64 {
+    let order = argsort_desc_abs(v);
+    let mags: Vec<f64> = order.iter().map(|&i| v[i as usize].abs() as f64).collect();
+    estimate_decay_rate_sorted(&mags)
+}
+
+/// As [`estimate_decay_rate`] but over already-sorted (descending)
+/// magnitudes — e.g. straight from the L1 segstats permutation.
+pub fn estimate_decay_rate_sorted(mags: &[f64]) -> f64 {
+    let total: f64 = mags.iter().map(|m| m * m).sum();
+    if total <= 0.0 || mags.len() < 4 {
+        return 0.0;
+    }
+    // prefix covering 99% of energy
+    let mut acc = 0.0;
+    let mut n = mags.len();
+    for (j, m) in mags.iter().enumerate() {
+        acc += m * m;
+        if acc >= 0.99 * total {
+            n = (j + 1).max(4);
+            break;
+        }
+    }
+    // least squares on ln|v_(j)| = ln|v_(0)| − (r/2) j over j < n,
+    // skipping exact zeros
+    let mut sx = 0.0f64;
+    let mut sy = 0.0f64;
+    let mut sxx = 0.0f64;
+    let mut sxy = 0.0f64;
+    let mut cnt = 0.0f64;
+    for (j, m) in mags.iter().take(n).enumerate() {
+        if *m <= 0.0 {
+            break;
+        }
+        let x = j as f64;
+        let y = m.ln();
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+        cnt += 1.0;
+    }
+    if cnt < 4.0 {
+        return 0.0;
+    }
+    let denom = cnt * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return 0.0;
+    }
+    let slope = (cnt * sxy - sx * sy) / denom; // = −r/2
+    (-2.0 * slope).max(0.0)
+}
+
+/// Largest segment size with `s·r̂ ≤ 1` (Lemma 3.6's regime), clamped to
+/// `[min_s, d]`. Returns `fallback` when no decay is detectable
+/// (r̂·d < 1 — the paper's regime (1), where segment size barely matters).
+pub fn suggest_segment_size(v: &[f32], min_s: usize, fallback: usize) -> usize {
+    let r = estimate_decay_rate(v);
+    let d = v.len();
+    if r * d as f64 <= 1.0 {
+        return fallback.clamp(min_s.max(1), d.max(1));
+    }
+    ((1.0 / r).floor() as usize).clamp(min_s.max(1), d.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn decay_vec(d: usize, r: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v: Vec<f32> = (0..d).map(|j| (-0.5 * r * j as f64).exp() as f32).collect();
+        // random signs + shuffle (estimation must be permutation-invariant)
+        let perm = rng.permutation(d);
+        let mut out = vec![0.0f32; d];
+        for (j, p) in perm.iter().enumerate() {
+            out[*p as usize] = if rng.uniform() < 0.5 { -v[j] } else { v[j] };
+        }
+        v.clear();
+        out
+    }
+
+    #[test]
+    fn recovers_known_rates() {
+        for r in [0.02f64, 0.1, 0.5] {
+            let v = decay_vec(2000, r, 1);
+            let r_hat = estimate_decay_rate(&v);
+            assert!((r_hat - r).abs() / r < 0.1, "r={r} r̂={r_hat}");
+        }
+    }
+
+    #[test]
+    fn suggest_matches_lemma36_regime() {
+        let v = decay_vec(2000, 0.1, 2);
+        let s = suggest_segment_size(&v, 1, 100);
+        // 1/r = 10
+        assert!((8..=12).contains(&s), "{s}");
+        // and the suggested s keeps the Lemma 3.6 variance bound small
+        let ml = crate::mlmc::MlSTopK { s };
+        use crate::mlmc::Multilevel;
+        let ctx = ml.prepare(&v);
+        let var = crate::mlmc::adaptive_variance(&ctx.deltas(), &v);
+        let bound = 4.0 / (0.1 * s as f64) * crate::tensor::sq_norm(&v);
+        assert!(var <= bound, "{var} > {bound}");
+    }
+
+    #[test]
+    fn flat_vectors_fall_back() {
+        let v = vec![1.0f32; 500];
+        assert_eq!(suggest_segment_size(&v, 4, 77), 77);
+        let r = estimate_decay_rate(&v);
+        assert!(r < 1e-6, "{r}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(estimate_decay_rate(&[]), 0.0);
+        assert_eq!(estimate_decay_rate(&[1.0, 2.0]), 0.0);
+        assert_eq!(estimate_decay_rate(&[0.0; 100]), 0.0);
+        assert_eq!(suggest_segment_size(&[0.0; 10], 2, 5), 5);
+    }
+
+    #[test]
+    fn gaussian_has_mild_rate() {
+        // gaussian magnitudes decay much slower than exp(-0.1 j)
+        let mut rng = Rng::new(9);
+        let v: Vec<f32> = (0..2000).map(|_| rng.normal() as f32).collect();
+        let r = estimate_decay_rate(&v);
+        assert!(r < 0.01, "{r}");
+    }
+}

@@ -1,0 +1,377 @@
+//! Multilevel bit-wise compressors (paper §3.1, App. B/C).
+//!
+//! * [`MlFixedPoint`] — level l keeps the first l fractional bits of the
+//!   max-normalized entries; the residual between consecutive levels is a
+//!   single *bit-plane*: 2 bits/element (sign + info), Lemma 3.3's
+//!   optimal static schedule is `p^l = 2^-l / (1 − 2^-L)`.
+//! * [`MlFloatPoint`] — level l keeps l mantissa bits; the residual is one
+//!   mantissa bit-plane with its sign+exponent: (1+8+1) bits/element for
+//!   f32 (the paper's f64 analysis gives 1+11+1 = 13, App. B), schedule
+//!   `p^l = 2^-l / (1 − 2^-L)` (Lemma B.1).
+//!
+//! For f32 gradients the fixed-point depth tops out at L = 23; because a
+//! 23-bit fixed-point grid cannot represent every f32 exactly, the
+//! *top level is defined as the identity* (Definition 3.1 demands
+//! `C^L = id`) and its residual ships exact f32 leftovers at 32
+//! bits/element — a level drawn with probability ≈ 2^-23, so the expected
+//! cost impact is nil. Floating-point at l = 23 is exactly lossless, so no
+//! special casing is needed there.
+
+use super::{MlCtx, Multilevel};
+use crate::compress::bitwise::{FixedPoint, FloatPoint, FP_MANTISSA_BITS, FX_MAX_LEVELS};
+use crate::compress::{Compressed, Payload};
+use crate::tensor::max_abs;
+
+/// Geometric schedule `p^l ∝ 2^-l`, normalized (Lemma 3.3 / B.1 form).
+pub fn geometric_probs(levels: usize) -> Vec<f32> {
+    let mut w = Vec::with_capacity(levels);
+    let mut x = 0.5f64;
+    for _ in 0..levels {
+        w.push(x as f32);
+        x *= 0.5;
+    }
+    super::normalize_probs(w)
+}
+
+// ---------------------------------------------------------------------------
+// Fixed point
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct MlFixedPoint {
+    pub max_levels: usize,
+}
+
+impl Default for MlFixedPoint {
+    fn default() -> Self {
+        MlFixedPoint { max_levels: FX_MAX_LEVELS }
+    }
+}
+
+pub struct FxCtx<'a> {
+    v: &'a [f32],
+    scale: f32,
+    levels: usize,
+}
+
+impl FxCtx<'_> {
+    fn truncated(&self, l: usize) -> Vec<f32> {
+        if l == 0 {
+            return vec![0.0; self.v.len()];
+        }
+        if l >= self.levels {
+            return self.v.to_vec(); // C^L = id
+        }
+        FixedPoint::apply_with_scale(self.v, l, self.scale)
+    }
+}
+
+impl MlCtx for FxCtx<'_> {
+    fn levels(&self) -> usize {
+        self.levels
+    }
+
+    fn deltas(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.levels);
+        let mut prev = self.truncated(0);
+        for l in 1..=self.levels {
+            let cur = self.truncated(l);
+            out.push(crate::tensor::sq_dist(&cur, &prev).sqrt() as f32);
+            prev = cur;
+        }
+        out
+    }
+
+    fn residual(&self, l: usize) -> Compressed {
+        let cur = self.truncated(l);
+        let prev = self.truncated(l - 1);
+        let val: Vec<f32> = cur.iter().zip(&prev).map(|(a, b)| a - b).collect();
+        let bits_per_elem = if l >= self.levels { 32.0 } else { 2.0 };
+        Compressed {
+            payload: Payload::Quantized { val, bits_per_elem, overhead_bits: 32 },
+            extra_bits: 0,
+        }
+    }
+
+    fn apply(&self, l: usize) -> Vec<f32> {
+        self.truncated(l)
+    }
+}
+
+impl Multilevel for MlFixedPoint {
+    fn name(&self) -> String {
+        "ml-fxp".into()
+    }
+
+    fn levels(&self, _d: usize) -> usize {
+        self.max_levels
+    }
+
+    fn prepare<'a>(&'a self, v: &'a [f32]) -> Box<dyn MlCtx + 'a> {
+        Box::new(FxCtx { v, scale: max_abs(v), levels: self.max_levels })
+    }
+
+    /// Lemma 3.3: `p^l = 2^-l / (1 − 2^-L)`.
+    fn default_probs(&self, _d: usize) -> Vec<f32> {
+        geometric_probs(self.max_levels)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Floating point
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct MlFloatPoint {
+    pub max_levels: usize,
+}
+
+impl Default for MlFloatPoint {
+    fn default() -> Self {
+        MlFloatPoint { max_levels: FP_MANTISSA_BITS }
+    }
+}
+
+pub struct FpCtx<'a> {
+    v: &'a [f32],
+    levels: usize,
+}
+
+impl FpCtx<'_> {
+    fn truncated(&self, l: usize) -> Vec<f32> {
+        if l == 0 {
+            return vec![0.0; self.v.len()];
+        }
+        FloatPoint::apply(self.v, l)
+    }
+}
+
+impl MlCtx for FpCtx<'_> {
+    fn levels(&self) -> usize {
+        self.levels
+    }
+
+    fn deltas(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.levels);
+        let mut prev = self.truncated(0);
+        for l in 1..=self.levels {
+            let cur = self.truncated(l);
+            out.push(crate::tensor::sq_dist(&cur, &prev).sqrt() as f32);
+            prev = cur;
+        }
+        out
+    }
+
+    fn residual(&self, l: usize) -> Compressed {
+        let cur = self.truncated(l);
+        let prev = self.truncated(l - 1);
+        let val: Vec<f32> = cur.iter().zip(&prev).map(|(a, b)| a - b).collect();
+        // level 1 ships sign+exponent+1 bit; higher levels only need the
+        // new mantissa bit relative to the already-known exponent — but
+        // the paper's accounting (App. B) charges sign+exp+bit per
+        // residual element uniformly, so we match it.
+        Compressed {
+            payload: Payload::Quantized { val, bits_per_elem: (1 + 8 + 1) as f64, overhead_bits: 0 },
+            extra_bits: 0,
+        }
+    }
+
+    fn apply(&self, l: usize) -> Vec<f32> {
+        self.truncated(l)
+    }
+}
+
+impl Multilevel for MlFloatPoint {
+    fn name(&self) -> String {
+        "ml-flp".into()
+    }
+
+    fn levels(&self, _d: usize) -> usize {
+        self.max_levels
+    }
+
+    fn prepare<'a>(&'a self, v: &'a [f32]) -> Box<dyn MlCtx + 'a> {
+        Box::new(FpCtx { v, levels: self.max_levels })
+    }
+
+    /// Lemma B.1: `p^l = 2^-l / (1 − 2^-L)`.
+    fn default_probs(&self, _d: usize) -> Vec<f32> {
+        geometric_probs(self.max_levels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compressor;
+    use crate::mlmc::{Mlmc, Schedule};
+    use crate::tensor::{sq_dist, sq_norm, Rng};
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32 * 0.1).collect()
+    }
+
+    #[test]
+    fn geometric_probs_lemma33_form() {
+        let p = geometric_probs(23);
+        // p^l = 2^-l / (1 − 2^-23)
+        let norm = 1.0 - 2f64.powi(-23);
+        for (i, pi) in p.iter().enumerate() {
+            let want = 2f64.powi(-(i as i32 + 1)) / norm;
+            assert!((*pi as f64 - want).abs() < 1e-9, "l={} {} {}", i + 1, pi, want);
+        }
+        let total: f64 = p.iter().map(|x| *x as f64).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fx_telescoping_exact() {
+        let v = test_vec(200, 1);
+        let ml = MlFixedPoint::default();
+        let ctx = ml.prepare(&v);
+        let mut acc = vec![0.0f32; v.len()];
+        for l in 1..=ctx.levels() {
+            ctx.residual(l).add_into(&mut acc, 1.0);
+        }
+        assert!(sq_dist(&acc, &v) < 1e-12, "{}", sq_dist(&acc, &v));
+    }
+
+    #[test]
+    fn fx_residual_is_bitplane() {
+        // residual elements at level l < L are in {0, ±2^-l · scale}; the
+        // one exception is the max element, whose normalized value is
+        // exactly 1.0 (an integer, not a binary fraction) and therefore
+        // lands entirely in the level-1 residual with value 1·scale —
+        // the paper's scheme transmits the max entry alongside anyway.
+        let v = test_vec(128, 2);
+        let scale = max_abs(&v);
+        let ml = MlFixedPoint::default();
+        let ctx = ml.prepare(&v);
+        for l in [1usize, 2, 5, 10] {
+            let r = ctx.residual(l).decode();
+            let unit = 2f32.powi(-(l as i32)) * scale;
+            for (i, x) in r.iter().enumerate() {
+                if l == 1 && v[i].abs() == scale {
+                    assert!((x.abs() - scale).abs() < 1e-6, "max elem at l=1");
+                    continue;
+                }
+                let ratio = x.abs() / unit;
+                assert!(ratio < 1e-4 || (ratio - 1.0).abs() < 1e-3, "l={l} x={x} unit={unit}");
+            }
+        }
+    }
+
+    #[test]
+    fn fx_top_level_is_identity() {
+        let v = test_vec(64, 3);
+        let ml = MlFixedPoint::default();
+        let ctx = ml.prepare(&v);
+        assert_eq!(ctx.apply(ctx.levels()), v);
+    }
+
+    #[test]
+    fn fx_mlmc_unbiased() {
+        let v = test_vec(32, 4);
+        let mlmc = Mlmc::new(Box::new(MlFixedPoint::default()), Schedule::Default);
+        let mut rng = Rng::new(11);
+        let n = 40_000;
+        let mut mean = vec![0.0f64; v.len()];
+        for _ in 0..n {
+            let est = mlmc.compress(&v, &mut rng).decode();
+            for (m, e) in mean.iter_mut().zip(&est) {
+                *m += *e as f64;
+            }
+        }
+        let mut err = 0.0;
+        for (m, x) in mean.iter().zip(&v) {
+            let e = m / n as f64 - *x as f64;
+            err += e * e;
+        }
+        assert!((err / sq_norm(&v)).sqrt() < 0.07, "{}", (err / sq_norm(&v)).sqrt());
+    }
+
+    #[test]
+    fn fx_expected_wire_cost_near_2d() {
+        // §3.1: expected cost ≈ 2 bits/element under the Lemma 3.3 schedule
+        let v = test_vec(1000, 5);
+        let mlmc = Mlmc::new(Box::new(MlFixedPoint::default()), Schedule::Default);
+        let mut rng = Rng::new(3);
+        let n = 2000;
+        let mean_bits: f64 =
+            (0..n).map(|_| mlmc.compress(&v, &mut rng).wire_bits() as f64).sum::<f64>() / n as f64;
+        // 2d + 32 (scale) + 5 (level id); the rare exact top level adds noise
+        let ideal = 2.0 * 1000.0 + 32.0 + 5.0;
+        assert!((mean_bits - ideal).abs() / ideal < 0.05, "{mean_bits} vs {ideal}");
+    }
+
+    #[test]
+    fn fx_lemma33_schedule_beats_uniform() {
+        // Lemma 3.3: geometric minimizes variance; uniform should be worse
+        let v = test_vec(256, 6);
+        let ml = MlFixedPoint::default();
+        let ctx = ml.prepare(&v);
+        let deltas = ctx.deltas();
+        let geo = crate::mlmc::schedule_variance(&deltas, &geometric_probs(23), &v);
+        let uni = crate::mlmc::schedule_variance(&deltas, &vec![1.0 / 23.0; 23], &v);
+        assert!(geo < uni, "{geo} !< {uni}");
+    }
+
+    #[test]
+    fn fp_telescoping_exact_and_lossless_top() {
+        let v = test_vec(150, 7);
+        let ml = MlFloatPoint::default();
+        let ctx = ml.prepare(&v);
+        assert_eq!(ctx.apply(ctx.levels()), v); // f=23 mantissa bits = exact
+        let mut acc = vec![0.0f32; v.len()];
+        for l in 1..=ctx.levels() {
+            ctx.residual(l).add_into(&mut acc, 1.0);
+        }
+        assert!(sq_dist(&acc, &v) < 1e-14);
+    }
+
+    #[test]
+    fn fp_mlmc_unbiased() {
+        let v = test_vec(32, 8);
+        let mlmc = Mlmc::new(Box::new(MlFloatPoint::default()), Schedule::Default);
+        let mut rng = Rng::new(13);
+        let n = 40_000;
+        let mut mean = vec![0.0f64; v.len()];
+        for _ in 0..n {
+            let est = mlmc.compress(&v, &mut rng).decode();
+            for (m, e) in mean.iter_mut().zip(&est) {
+                *m += *e as f64;
+            }
+        }
+        let mut err = 0.0;
+        for (m, x) in mean.iter().zip(&v) {
+            let e = m / n as f64 - *x as f64;
+            err += e * e;
+        }
+        assert!((err / sq_norm(&v)).sqrt() < 0.07);
+    }
+
+    #[test]
+    fn fp_wire_cost_10_bits_per_elem() {
+        let v = test_vec(500, 9);
+        let ml = MlFloatPoint::default();
+        let ctx = ml.prepare(&v);
+        let r = ctx.residual(4);
+        assert_eq!(r.wire_bits(), 10 * 500);
+    }
+
+    #[test]
+    fn fx_deltas_decay_geometrically() {
+        let v = test_vec(512, 10);
+        let ml = MlFixedPoint::default();
+        let ctx = ml.prepare(&v);
+        let deltas = ctx.deltas();
+        // Δ^l ≈ scale·2^-l·sqrt(#set bits): halving trend over middle levels
+        for l in 2..15 {
+            if deltas[l] > 0.0 && deltas[l - 1] > 0.0 {
+                let ratio = deltas[l] / deltas[l - 1];
+                assert!(ratio < 1.0, "l={l} ratio={ratio}");
+            }
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Multilevel Monte Carlo compression (paper §3 — the core contribution).
+//!
+//! Given a *multilevel compressor* `C^l`, `l = 1..L` with `C^L = id` and
+//! `C^0 = 0` (Definition 3.1), and nonzero level probabilities `p^l`, the
+//! MLMC estimate of a gradient `v` is
+//!
+//! ```text
+//!   g̃ = C^0(v) + (1/p^l) (C^l(v) − C^{l−1}(v)),   l ~ p^l        (Eq. 6)
+//! ```
+//!
+//! which is **conditionally unbiased** regardless of how biased each
+//! `C^l` is (Lemma 3.2) — the bias is transduced into variance, and the
+//! variance is minimized by `p^l ∝ Δ^l = ‖C^l(v) − C^{l−1}(v)‖`
+//! (Lemma 3.4, the *adaptive* schedule of Alg. 3), or by closed-form
+//! static schedules (Lemma 3.3 / B.1 for bit-wise compressors).
+//!
+//! Crucially, only the **residual** `C^l(v) − C^{l−1}(v)` crosses the
+//! wire: one segment for s-Top-k, one bit-plane for fixed-point, one
+//! mantissa bit-plane for floating-point.
+
+pub mod autotune;
+pub mod bitwise;
+pub mod rtn;
+pub mod stopk;
+
+pub use bitwise::{MlFixedPoint, MlFloatPoint};
+pub use rtn::MlRtn;
+pub use stopk::MlSTopK;
+
+use crate::compress::{Compressed, Compressor};
+use crate::tensor::Rng;
+
+/// Per-vector prepared state of a multilevel compressor: whatever is
+/// needed to produce residuals and level statistics without recomputing
+/// (the sort order for s-Top-k, the max-scale for bit-wise, …).
+pub trait MlCtx {
+    /// Number of levels L (highest = lossless).
+    fn levels(&self) -> usize;
+    /// `Δ^l = ‖C^l(v) − C^{l−1}(v)‖` for l = 1..=L (Lemma 3.4 weights).
+    fn deltas(&self) -> Vec<f32>;
+    /// The residual `C^l(v) − C^{l−1}(v)` in its exact wire form.
+    fn residual(&self, l: usize) -> Compressed;
+    /// Full compression at level l (0 => zeros, L => exact). Test path.
+    fn apply(&self, l: usize) -> Vec<f32>;
+}
+
+/// A multilevel compressor family (Definition 3.1).
+pub trait Multilevel: Send + Sync {
+    fn name(&self) -> String;
+    fn levels(&self, d: usize) -> usize;
+    /// Prepare per-vector state (sorting, scaling, …).
+    fn prepare<'a>(&'a self, v: &'a [f32]) -> Box<dyn MlCtx + 'a>;
+    /// The family's variance-minimizing *static* schedule
+    /// (Lemma 3.3 / B.1), independent of the vector.
+    fn default_probs(&self, d: usize) -> Vec<f32>;
+}
+
+/// Level-probability schedule.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    /// The family's closed-form static optimum (Lemma 3.3 / B.1).
+    Default,
+    /// Uniform over levels (ablation baseline).
+    Uniform,
+    /// Explicit probabilities (must be positive where Δ^l can be > 0).
+    Custom(Vec<f32>),
+    /// Per-sample optimum `p^l ∝ Δ^l` (Lemma 3.4, Alg. 3).
+    Adaptive,
+}
+
+impl Schedule {
+    /// Resolve into a probability vector for this draw.
+    /// Adaptive resolution needs the ctx Δ table.
+    pub fn resolve(&self, ml: &dyn Multilevel, ctx: &dyn MlCtx, d: usize) -> Vec<f32> {
+        match self {
+            Schedule::Default => ml.default_probs(d),
+            Schedule::Uniform => {
+                let l = ctx.levels();
+                vec![1.0 / l as f32; l]
+            }
+            Schedule::Custom(p) => p.clone(),
+            Schedule::Adaptive => normalize_probs(ctx.deltas()),
+        }
+    }
+}
+
+/// Normalize non-negative weights into probabilities; all-zero weights
+/// map to a point mass on the last (lossless) level.
+pub fn normalize_probs(w: Vec<f32>) -> Vec<f32> {
+    let total: f64 = w.iter().map(|x| *x as f64).sum();
+    if total <= 0.0 {
+        let mut p = vec![0.0; w.len()];
+        if let Some(last) = p.last_mut() {
+            *last = 1.0;
+        }
+        return p;
+    }
+    w.iter().map(|x| (*x as f64 / total) as f32).collect()
+}
+
+/// Closed-form compression variance of the *adaptive* MLMC estimator
+/// (App. D Eq. (55)): `(Σ_l Δ^l)² − ‖v‖²`.
+pub fn adaptive_variance(deltas: &[f32], v: &[f32]) -> f64 {
+    let s: f64 = deltas.iter().map(|d| *d as f64).sum();
+    s * s - crate::tensor::sq_norm(v)
+}
+
+/// Variance of the MLMC estimator under an arbitrary schedule
+/// (`Σ_l Δ_l²/p_l − ‖v‖²`, from Eq. (48)).
+pub fn schedule_variance(deltas: &[f32], probs: &[f32], v: &[f32]) -> f64 {
+    let mut second = 0.0f64;
+    for (d, p) in deltas.iter().zip(probs) {
+        let d = *d as f64;
+        if d > 0.0 {
+            assert!(*p > 0.0, "zero probability on a level with Δ > 0");
+            second += d * d / *p as f64;
+        }
+    }
+    second - crate::tensor::sq_norm(v)
+}
+
+/// The MLMC compression scheme (Alg. 2 with a static [`Schedule`],
+/// Alg. 3 with [`Schedule::Adaptive`]), packaged as a [`Compressor`] so
+/// it drops into the coordinator like any baseline.
+pub struct Mlmc {
+    pub ml: Box<dyn Multilevel>,
+    pub schedule: Schedule,
+}
+
+/// One MLMC draw with its diagnostics.
+pub struct MlmcDraw {
+    pub level: usize,
+    pub prob: f32,
+    pub message: Compressed,
+}
+
+impl Mlmc {
+    pub fn new(ml: Box<dyn Multilevel>, schedule: Schedule) -> Self {
+        Mlmc { ml, schedule }
+    }
+
+    /// Bits to transmit the sampled level id.
+    fn level_bits(levels: usize) -> u64 {
+        crate::compress::index_bits(levels.max(2))
+    }
+
+    /// Draw an MLMC estimate using an externally prepared ctx (lets the
+    /// coordinator inject L1-kernel segment stats instead of re-sorting).
+    pub fn draw_with_ctx(&self, ctx: &dyn MlCtx, d: usize, rng: &mut Rng) -> MlmcDraw {
+        let probs = self.schedule.resolve(self.ml.as_ref(), ctx, d);
+        assert_eq!(probs.len(), ctx.levels(), "schedule/levels mismatch");
+        let li = rng.categorical(&probs);
+        let l = li + 1;
+        let p = probs[li];
+        let mut message = ctx.residual(l);
+        message.payload.scale_values(1.0 / p);
+        message.extra_bits += Self::level_bits(ctx.levels());
+        MlmcDraw { level: l, prob: p, message }
+    }
+
+    pub fn draw(&self, v: &[f32], rng: &mut Rng) -> MlmcDraw {
+        let ctx = self.ml.prepare(v);
+        self.draw_with_ctx(ctx.as_ref(), v.len(), rng)
+    }
+}
+
+impl Compressor for Mlmc {
+    fn name(&self) -> String {
+        let sched = match &self.schedule {
+            Schedule::Default => "static",
+            Schedule::Uniform => "uniform",
+            Schedule::Custom(_) => "custom",
+            Schedule::Adaptive => "adaptive",
+        };
+        format!("mlmc-{}[{}]", sched, self.ml.name())
+    }
+
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        self.draw(v, rng).message
+    }
+
+    /// Lemma 3.2: the MLMC estimator is unbiased by construction.
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_handles_zeros() {
+        let p = normalize_probs(vec![0.0, 0.0, 0.0]);
+        assert_eq!(p, vec![0.0, 0.0, 1.0]);
+        let p = normalize_probs(vec![1.0, 3.0]);
+        assert!((p[0] - 0.25).abs() < 1e-7 && (p[1] - 0.75).abs() < 1e-7);
+    }
+
+    #[test]
+    fn adaptive_variance_formula() {
+        // Δ = (3, 4), ||v||² = 25 → (3+4)² − 25 = 24
+        let v = [3.0f32, 4.0];
+        assert_eq!(adaptive_variance(&[3.0, 4.0], &v), 24.0);
+    }
+
+    #[test]
+    fn schedule_variance_matches_adaptive_at_optimum() {
+        // at p ∝ Δ the schedule variance equals the adaptive closed form
+        let v = [1.0f32, 2.0, 2.0];
+        let deltas = vec![2.0f32, 1.0, 0.5];
+        let probs = normalize_probs(deltas.clone());
+        let a = adaptive_variance(&deltas, &v);
+        let s = schedule_variance(&deltas, &probs, &v);
+        assert!((a - s).abs() < 1e-6, "{a} vs {s}");
+    }
+
+    #[test]
+    fn adaptive_is_optimal_among_schedules() {
+        let v = [1.0f32; 9];
+        let deltas = vec![3.0f32, 1.0, 0.25, 0.05];
+        let opt = schedule_variance(&deltas, &normalize_probs(deltas.clone()), &v);
+        for other in [
+            vec![0.25f32; 4],
+            vec![0.7, 0.1, 0.1, 0.1],
+            vec![0.1, 0.2, 0.3, 0.4],
+        ] {
+            let var = schedule_variance(&deltas, &other, &v);
+            assert!(opt <= var + 1e-6, "opt {opt} > {var}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "zero probability")]
+    fn schedule_variance_rejects_zero_prob_on_active_level() {
+        schedule_variance(&[1.0, 1.0], &[1.0, 0.0], &[1.0, 1.0]);
+    }
+}

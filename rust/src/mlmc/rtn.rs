@@ -1,0 +1,176 @@
+//! Multilevel Round-to-Nearest (paper §3.2, App. G.2).
+//!
+//! Level l is RTN on a `2^l`-point grid over `[−max|v|, max|v|]`; the top
+//! level is the identity (Definition 3.1). Unlike Top-k, the residual
+//! `C^l − C^{l−1}` has *no sparse/importance-sampling structure* — this is
+//! exactly the example the paper gives of a compressor family where MLMC
+//! applies but IS does not (§3.2). The residual therefore ships both grid
+//! codes: `l + (l−1)` bits per element.
+
+use super::{MlCtx, Multilevel};
+use crate::compress::rtn::Rtn;
+use crate::compress::{Compressed, Payload};
+use crate::tensor::max_abs;
+
+#[derive(Clone, Debug)]
+pub struct MlRtn {
+    /// levels 1..max_levels are RTN grids; level max_levels+1 == identity
+    pub max_grid_level: u32,
+}
+
+impl Default for MlRtn {
+    fn default() -> Self {
+        MlRtn { max_grid_level: 16 }
+    }
+}
+
+pub struct RtnCtx<'a> {
+    v: &'a [f32],
+    c_val: f32,
+    grid_levels: u32,
+}
+
+impl RtnCtx<'_> {
+    fn quantized(&self, l: usize) -> Vec<f32> {
+        if l == 0 {
+            return vec![0.0; self.v.len()];
+        }
+        if l > self.grid_levels as usize {
+            return self.v.to_vec(); // identity top level
+        }
+        Rtn::apply(self.v, l as u32, self.c_val)
+    }
+}
+
+impl MlCtx for RtnCtx<'_> {
+    fn levels(&self) -> usize {
+        self.grid_levels as usize + 1
+    }
+
+    fn deltas(&self) -> Vec<f32> {
+        let levels = self.levels();
+        let mut out = Vec::with_capacity(levels);
+        let mut prev = self.quantized(0);
+        for l in 1..=levels {
+            let cur = self.quantized(l);
+            out.push(crate::tensor::sq_dist(&cur, &prev).sqrt() as f32);
+            prev = cur;
+        }
+        out
+    }
+
+    fn residual(&self, l: usize) -> Compressed {
+        let cur = self.quantized(l);
+        let prev = self.quantized(l - 1);
+        let val: Vec<f32> = cur.iter().zip(&prev).map(|(a, b)| a - b).collect();
+        let bits_per_elem = if l > self.grid_levels as usize {
+            32.0 // exact residual at the identity level
+        } else {
+            (l + (l - 1)) as f64 // both grid codes (no joint structure, §3.2)
+        };
+        Compressed {
+            payload: Payload::Quantized { val, bits_per_elem, overhead_bits: 32 },
+            extra_bits: 0,
+        }
+    }
+
+    fn apply(&self, l: usize) -> Vec<f32> {
+        self.quantized(l)
+    }
+}
+
+impl Multilevel for MlRtn {
+    fn name(&self) -> String {
+        "ml-rtn".into()
+    }
+
+    fn levels(&self, _d: usize) -> usize {
+        self.max_grid_level as usize + 1
+    }
+
+    fn prepare<'a>(&'a self, v: &'a [f32]) -> Box<dyn MlCtx + 'a> {
+        Box::new(RtnCtx { v, c_val: max_abs(v), grid_levels: self.max_grid_level })
+    }
+
+    /// RTN distortion halves per level (δ^l ∝ 2^-l) so the static optimum
+    /// is geometric, mirroring Lemma 3.3's argument.
+    fn default_probs(&self, d: usize) -> Vec<f32> {
+        super::bitwise::geometric_probs(self.levels(d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compressor;
+    use crate::mlmc::{Mlmc, Schedule};
+    use crate::tensor::{sq_dist, sq_norm, Rng};
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn telescoping_exact() {
+        let v = test_vec(80, 1);
+        let ml = MlRtn { max_grid_level: 8 };
+        let ctx = ml.prepare(&v);
+        let mut acc = vec![0.0f32; v.len()];
+        for l in 1..=ctx.levels() {
+            ctx.residual(l).add_into(&mut acc, 1.0);
+        }
+        assert!(sq_dist(&acc, &v) < 1e-10);
+    }
+
+    #[test]
+    fn top_level_identity() {
+        let v = test_vec(33, 2);
+        let ml = MlRtn { max_grid_level: 6 };
+        let ctx = ml.prepare(&v);
+        assert_eq!(ctx.levels(), 7);
+        assert_eq!(ctx.apply(7), v);
+    }
+
+    #[test]
+    fn mlmc_rtn_unbiased() {
+        let v = test_vec(24, 3);
+        let mlmc = Mlmc::new(Box::new(MlRtn { max_grid_level: 8 }), Schedule::Adaptive);
+        let mut rng = Rng::new(5);
+        let n = 30_000;
+        let mut mean = vec![0.0f64; v.len()];
+        for _ in 0..n {
+            let est = mlmc.compress(&v, &mut rng).decode();
+            for (m, e) in mean.iter_mut().zip(&est) {
+                *m += *e as f64;
+            }
+        }
+        let mut err = 0.0;
+        for (m, x) in mean.iter().zip(&v) {
+            let e = m / n as f64 - *x as f64;
+            err += e * e;
+        }
+        assert!((err / sq_norm(&v)).sqrt() < 0.07);
+    }
+
+    #[test]
+    fn deltas_decay() {
+        let v = test_vec(256, 4);
+        let ml = MlRtn::default();
+        let ctx = ml.prepare(&v);
+        let d = ctx.deltas();
+        // after the first couple of levels, residual norms shrink ~2x
+        for l in 3..10 {
+            assert!(d[l] <= d[l - 1] * 0.75 + 1e-6, "l={l}: {} vs {}", d[l], d[l - 1]);
+        }
+    }
+
+    #[test]
+    fn residual_cost_model() {
+        let v = test_vec(100, 5);
+        let ml = MlRtn { max_grid_level: 8 };
+        let ctx = ml.prepare(&v);
+        assert_eq!(ctx.residual(4).wire_bits(), 7 * 100 + 32);
+        assert_eq!(ctx.residual(9).wire_bits(), 32 * 100 + 32); // identity level
+    }
+}

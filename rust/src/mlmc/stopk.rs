@@ -1,0 +1,253 @@
+//! Multilevel s-Top-k (paper §3.2): level l keeps the l·s
+//! largest-magnitude coordinates; the residual between levels l and l−1
+//! is exactly the l-th largest segment — s values + s indices on the wire.
+//!
+//! With s = 1 this is multilevel Top-k (residual = the l-th largest
+//! element). `Δ^l = sqrt(α^l − α^{l−1}) ‖v‖` (App. D Eq. (59)), which the
+//! L1 Pallas `seg_energy` kernel computes as per-segment energies of the
+//! sorted gradient; [`StopkCtx::from_stats`] ingests that artifact output
+//! so the hot path never re-sorts in rust.
+
+use super::{MlCtx, Multilevel};
+use crate::compress::{Compressed, Payload};
+use crate::tensor::select::{argsort_desc_abs, num_segments, segment_bounds, segment_sq_norms};
+
+#[derive(Clone, Debug)]
+pub struct MlSTopK {
+    pub s: usize,
+}
+
+/// Prepared state: the descending-|v| order and per-segment energies.
+pub struct StopkCtx<'a> {
+    v: &'a [f32],
+    s: usize,
+    /// original indices ordered by |v| descending
+    order: Vec<u32>,
+    /// (Δ^l)² = energy of segment l of the sorted vector
+    seg_sq: Vec<f32>,
+}
+
+impl<'a> StopkCtx<'a> {
+    /// Build by sorting in rust (fallback path; O(d log d)).
+    pub fn by_sorting(v: &'a [f32], s: usize) -> Self {
+        let order = argsort_desc_abs(v);
+        let sorted_abs: Vec<f32> = order.iter().map(|&i| v[i as usize].abs()).collect();
+        let seg_sq = segment_sq_norms(&sorted_abs, s);
+        StopkCtx { v, s, order, seg_sq }
+    }
+
+    /// Build from the L1 `segstats` artifact outputs: the Pallas
+    /// per-segment energies and the XLA sort permutation.
+    pub fn from_stats(v: &'a [f32], s: usize, seg_sq: Vec<f32>, order: Vec<u32>) -> Self {
+        debug_assert_eq!(order.len(), v.len());
+        debug_assert_eq!(seg_sq.len(), num_segments(v.len(), s));
+        StopkCtx { v, s, order, seg_sq }
+    }
+}
+
+impl MlCtx for StopkCtx<'_> {
+    fn levels(&self) -> usize {
+        self.seg_sq.len()
+    }
+
+    fn deltas(&self) -> Vec<f32> {
+        self.seg_sq.iter().map(|e| e.max(0.0).sqrt()).collect()
+    }
+
+    fn residual(&self, l: usize) -> Compressed {
+        debug_assert!(l >= 1 && l <= self.levels());
+        let (lo, hi) = segment_bounds(self.v.len(), self.s, l);
+        let idx: Vec<u32> = self.order[lo..hi].to_vec();
+        let val: Vec<f32> = idx.iter().map(|&i| self.v[i as usize]).collect();
+        Compressed {
+            payload: Payload::Sparse { d: self.v.len() as u32, idx, val },
+            extra_bits: 0,
+        }
+    }
+
+    fn apply(&self, l: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.v.len()];
+        let take = (l * self.s).min(self.v.len());
+        for &i in &self.order[..take] {
+            out[i as usize] = self.v[i as usize];
+        }
+        out
+    }
+}
+
+impl Multilevel for MlSTopK {
+    fn name(&self) -> String {
+        if self.s == 1 {
+            "ml-topk".into()
+        } else {
+            format!("ml-stopk(s={})", self.s)
+        }
+    }
+
+    fn levels(&self, d: usize) -> usize {
+        num_segments(d, self.s)
+    }
+
+    fn prepare<'a>(&'a self, v: &'a [f32]) -> Box<dyn MlCtx + 'a> {
+        Box::new(StopkCtx::by_sorting(v, self.s))
+    }
+
+    /// Without per-sample information the best static prior mirrors the
+    /// typical heavy-tail decay of deep-net gradients (§3.3): geometric
+    /// over segments.
+    fn default_probs(&self, d: usize) -> Vec<f32> {
+        let l = self.levels(d);
+        let mut w = Vec::with_capacity(l);
+        let mut x = 1.0f32;
+        for _ in 0..l {
+            w.push(x);
+            x *= 0.5;
+            if x < 1e-20 {
+                x = 1e-20;
+            }
+        }
+        super::normalize_probs(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compressor;
+    use crate::mlmc::{adaptive_variance, Mlmc, Schedule};
+    use crate::tensor::{sq_dist, sq_norm, Rng};
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn telescoping_exact() {
+        // Σ_l residual(l) == v  (the heart of Lemma 3.2)
+        let v = test_vec(103, 1);
+        let ml = MlSTopK { s: 10 };
+        let ctx = ml.prepare(&v);
+        let mut acc = vec![0.0f32; v.len()];
+        for l in 1..=ctx.levels() {
+            ctx.residual(l).add_into(&mut acc, 1.0);
+        }
+        assert!(sq_dist(&acc, &v) < 1e-10);
+    }
+
+    #[test]
+    fn apply_nested_and_lossless_at_top() {
+        let v = test_vec(64, 2);
+        let ml = MlSTopK { s: 7 };
+        let ctx = ml.prepare(&v);
+        let top = ctx.apply(ctx.levels());
+        assert_eq!(top, v);
+        assert_eq!(ctx.apply(0), vec![0.0; 64]);
+        // nested supports: energy non-decreasing in l
+        let mut prev = -1.0f64;
+        for l in 0..=ctx.levels() {
+            let e = sq_norm(&ctx.apply(l));
+            assert!(e >= prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn deltas_match_residual_norms() {
+        let v = test_vec(77, 3);
+        let ml = MlSTopK { s: 9 };
+        let ctx = ml.prepare(&v);
+        let deltas = ctx.deltas();
+        for l in 1..=ctx.levels() {
+            let rn = sq_norm(&ctx.residual(l).decode()).sqrt();
+            assert!((rn - deltas[l - 1] as f64).abs() < 1e-4, "l={l}");
+        }
+    }
+
+    #[test]
+    fn from_stats_matches_by_sorting() {
+        let v = test_vec(50, 4);
+        let by_sort = StopkCtx::by_sorting(&v, 8);
+        let ctx2 = StopkCtx::from_stats(&v, 8, by_sort.seg_sq.clone(), by_sort.order.clone());
+        assert_eq!(ctx2.deltas(), by_sort.deltas());
+        for l in 1..=ctx2.levels() {
+            assert_eq!(ctx2.residual(l).decode(), by_sort.residual(l).decode());
+        }
+    }
+
+    #[test]
+    fn mlmc_stopk_unbiased_statistically() {
+        // Lemma 3.2: mean over many draws converges to v
+        let v = test_vec(40, 5);
+        let mlmc = Mlmc::new(Box::new(MlSTopK { s: 5 }), Schedule::Adaptive);
+        let mut rng = Rng::new(99);
+        let n = 20_000;
+        let mut mean = vec![0.0f64; v.len()];
+        for _ in 0..n {
+            let est = mlmc.compress(&v, &mut rng).decode();
+            for (m, e) in mean.iter_mut().zip(&est) {
+                *m += *e as f64;
+            }
+        }
+        let mut err = 0.0f64;
+        for (m, x) in mean.iter().zip(&v) {
+            let e = m / n as f64 - *x as f64;
+            err += e * e;
+        }
+        let rel = (err / sq_norm(&v)).sqrt();
+        assert!(rel < 0.05, "relative bias {rel}");
+    }
+
+    #[test]
+    fn empirical_variance_matches_closed_form() {
+        // App. D Eq. (55): Var = (Σ Δ)² − ‖v‖² under adaptive probs
+        let v = test_vec(30, 6);
+        let ml = MlSTopK { s: 3 };
+        let ctx = ml.prepare(&v);
+        let want = adaptive_variance(&ctx.deltas(), &v);
+        let mlmc = Mlmc::new(Box::new(MlSTopK { s: 3 }), Schedule::Adaptive);
+        let mut rng = Rng::new(7);
+        let n = 30_000;
+        let mut sum_sq = 0.0f64;
+        for _ in 0..n {
+            let est = mlmc.compress(&v, &mut rng).decode();
+            sum_sq += sq_dist(&est, &v);
+        }
+        let got = sum_sq / n as f64;
+        assert!((got - want).abs() / want.max(1.0) < 0.05, "emp {got} vs closed {want}");
+    }
+
+    #[test]
+    fn residual_wire_cost_is_one_segment() {
+        let v = test_vec(1000, 8);
+        let ml = MlSTopK { s: 25 };
+        let ctx = ml.prepare(&v);
+        let r = ctx.residual(3);
+        // 25 values * (32 + ceil(log2 1000)) bits
+        assert_eq!(r.wire_bits(), 25 * (32 + 10));
+    }
+
+    #[test]
+    fn s1_residual_is_single_element() {
+        let v = test_vec(100, 9);
+        let ml = MlSTopK { s: 1 };
+        let ctx = ml.prepare(&v);
+        assert_eq!(ctx.levels(), 100);
+        let r = ctx.residual(1).decode();
+        let nz: Vec<usize> = r.iter().enumerate().filter(|(_, x)| **x != 0.0).map(|(i, _)| i).collect();
+        assert_eq!(nz.len(), 1);
+        // it is the largest-|v| element
+        let max_i = (0..100).max_by(|&a, &b| v[a].abs().partial_cmp(&v[b].abs()).unwrap()).unwrap();
+        assert_eq!(nz[0], max_i);
+    }
+
+    #[test]
+    fn default_probs_sum_to_one() {
+        let ml = MlSTopK { s: 10 };
+        let p = ml.default_probs(1000);
+        assert_eq!(p.len(), 100);
+        let total: f64 = p.iter().map(|x| *x as f64).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(p.iter().all(|x| *x > 0.0));
+    }
+}

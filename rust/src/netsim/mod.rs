@@ -1,0 +1,83 @@
+//! Network cost model: converts the bit-exact communication counts into
+//! wall-clock communication time for a parameterized link, so the
+//! bits-x-axis figures can also be read as time-x-axis (the paper's
+//! motivation: communication is the bottleneck, §1).
+
+/// A simple star-topology link model (every worker has an identical
+/// uplink to the server).
+#[derive(Clone, Debug)]
+pub struct LinkModel {
+    /// uplink bandwidth, bits/second
+    pub uplink_bps: f64,
+    /// downlink (broadcast) bandwidth, bits/second
+    pub downlink_bps: f64,
+    /// per-message latency, seconds
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    /// Datacenter-ish 10 Gb/s symmetric link.
+    pub fn datacenter() -> Self {
+        LinkModel { uplink_bps: 10e9, downlink_bps: 10e9, latency_s: 50e-6 }
+    }
+
+    /// Federated/edge-ish 20 Mb/s up, 100 Mb/s down, 20 ms RTT.
+    pub fn edge() -> Self {
+        LinkModel { uplink_bps: 20e6, downlink_bps: 100e6, latency_s: 20e-3 }
+    }
+
+    /// Time for one worker to ship `bits` uplink.
+    pub fn uplink_time(&self, bits: u64) -> f64 {
+        self.latency_s + bits as f64 / self.uplink_bps
+    }
+
+    /// Time for the server to broadcast `bits` to M workers
+    /// (sequential unicast model — the paper's master-server setting).
+    pub fn broadcast_time(&self, bits: u64, workers: usize) -> f64 {
+        self.latency_s + workers as f64 * bits as f64 / self.downlink_bps
+    }
+
+    /// One synchronous round: all M uplinks share the server's ingress
+    /// (serialized), then a broadcast of the (uncompressed) model.
+    pub fn round_time(&self, uplink_bits_per_worker: u64, model_bits: u64, workers: usize) -> f64 {
+        let up: f64 = workers as f64 * (uplink_bits_per_worker as f64 / self.uplink_bps)
+            + self.latency_s;
+        up + self.broadcast_time(model_bits, workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uplink_scales_with_bits() {
+        let l = LinkModel { uplink_bps: 1e6, downlink_bps: 1e6, latency_s: 0.01 };
+        assert!((l.uplink_time(1_000_000) - 1.01).abs() < 1e-9);
+        assert!((l.uplink_time(0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn broadcast_scales_with_workers() {
+        let l = LinkModel { uplink_bps: 1e6, downlink_bps: 2e6, latency_s: 0.0 };
+        let t4 = l.broadcast_time(1_000_000, 4);
+        let t8 = l.broadcast_time(1_000_000, 8);
+        assert!((t8 / t4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_reduces_round_time() {
+        let l = LinkModel::edge();
+        let model_bits = 32 * 100_000;
+        let full = l.round_time(32 * 100_000, model_bits, 8);
+        let comp = l.round_time(2 * 100_000, model_bits, 8); // fixed-point MLMC
+        assert!(comp < full);
+        // uplink-bound regime: the gap should be substantial
+        assert!(full / comp > 2.0, "{} / {}", full, comp);
+    }
+
+    #[test]
+    fn presets_sane() {
+        assert!(LinkModel::datacenter().uplink_bps > LinkModel::edge().uplink_bps);
+    }
+}

@@ -1,0 +1,187 @@
+//! Server-side optimizers over flat parameter vectors.
+//!
+//! The paper's experiments use plain SGD with per-method tuned learning
+//! rates; momentum and Adam are provided for the finetuning-style figure
+//! runs and the e2e LM driver.
+
+/// A first-order optimizer over a flat parameter vector.
+pub trait Optimizer: Send {
+    fn name(&self) -> String;
+    /// Apply one update given the aggregated gradient estimate.
+    fn step(&mut self, params: &mut [f32], grad: &[f32]);
+    fn lr(&self) -> f32;
+    fn set_lr(&mut self, lr: f32);
+}
+
+/// Plain SGD: `x ← x − η g`.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        format!("sgd(lr={})", self.lr)
+    }
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        crate::tensor::axpy(params, -self.lr, grad);
+    }
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Heavy-ball momentum: `m ← β m + g; x ← x − η m`.
+pub struct Momentum {
+    pub lr: f32,
+    pub beta: f32,
+    m: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(lr: f32, beta: f32, d: usize) -> Self {
+        Momentum { lr, beta, m: vec![0.0; d] }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn name(&self) -> String {
+        format!("momentum(lr={},beta={})", self.lr, self.beta)
+    }
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        for ((m, p), g) in self.m.iter_mut().zip(params.iter_mut()).zip(grad) {
+            *m = self.beta * *m + *g;
+            *p -= self.lr * *m;
+        }
+    }
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f32, d: usize) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; d], v: vec![0.0; d], t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> String {
+        format!("adam(lr={})", self.lr)
+    }
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for ((m, v), (p, g)) in self
+            .m
+            .iter_mut()
+            .zip(self.v.iter_mut())
+            .zip(params.iter_mut().zip(grad))
+        {
+            *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+            *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+            let mhat = *m / bc1;
+            let vhat = *v / bc2;
+            *p -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Build an optimizer by name ("sgd" | "momentum" | "adam").
+pub fn build(name: &str, lr: f32, d: usize) -> Box<dyn Optimizer> {
+    match name {
+        "sgd" => Box::new(Sgd { lr }),
+        "momentum" => Box::new(Momentum::new(lr, 0.9, d)),
+        "adam" => Box::new(Adam::new(lr, d)),
+        other => panic!("unknown optimizer {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// minimize f(x) = 0.5 Σ a_i x_i² with exact gradients
+    fn quad_grad(x: &[f32], a: &[f32]) -> Vec<f32> {
+        x.iter().zip(a).map(|(xi, ai)| ai * xi).collect()
+    }
+
+    fn run(opt: &mut dyn Optimizer, steps: usize) -> f64 {
+        let a = [1.0f32, 4.0, 0.5, 2.0];
+        let mut x = vec![1.0f32; 4];
+        for _ in 0..steps {
+            let g = quad_grad(&x, &a);
+            opt.step(&mut x, &g);
+        }
+        crate::tensor::sq_norm(&x)
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut opt = Sgd { lr: 0.1 };
+        assert!(run(&mut opt, 200) < 1e-6);
+    }
+
+    #[test]
+    fn momentum_converges_on_quadratic() {
+        let mut opt = Momentum::new(0.05, 0.9, 4);
+        assert!(run(&mut opt, 300) < 1e-6);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut opt = Adam::new(0.05, 4);
+        assert!(run(&mut opt, 800) < 1e-4);
+    }
+
+    #[test]
+    fn sgd_step_exact() {
+        let mut opt = Sgd { lr: 0.5 };
+        let mut x = vec![1.0f32, 2.0];
+        opt.step(&mut x, &[2.0, -2.0]);
+        assert_eq!(x, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn build_by_name() {
+        assert!(build("sgd", 0.1, 4).name().starts_with("sgd"));
+        assert!(build("momentum", 0.1, 4).name().starts_with("momentum"));
+        assert!(build("adam", 0.1, 4).name().starts_with("adam"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn build_unknown_panics() {
+        build("lbfgs", 0.1, 4);
+    }
+
+    #[test]
+    fn set_lr_roundtrip() {
+        let mut o = Sgd { lr: 0.1 };
+        o.set_lr(0.2);
+        assert_eq!(o.lr(), 0.2);
+    }
+}

@@ -1,0 +1,333 @@
+//! Typed view of `artifacts/metadata.json` (emitted by
+//! `python/compile/aot.py`), parsed with the in-tree JSON parser.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype, String> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(format!("unknown dtype {other:?}")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec, String> {
+        let dtype = Dtype::parse(j.req("dtype").as_str().ok_or("dtype not a string")?)?;
+        let shape = j
+            .req("shape")
+            .as_arr()
+            .ok_or("shape not an array")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| "bad dim".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub model: Option<String>,
+    pub seg_size: Option<usize>,
+    pub n_segs: Option<usize>,
+    pub frac_pm: Option<u32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+    /// "normal" | "zeros" | "ones"
+    pub init: String,
+    pub std: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    /// "tx" | "lm" | "cnn"
+    pub kind: String,
+    pub param_count: usize,
+    pub batch: usize,
+    /// tx/lm only
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// cnn only
+    pub image: usize,
+    pub in_channels: usize,
+    pub n_classes: usize,
+    pub grad: String,
+    pub eval: String,
+    /// frac (per-mille) -> segstats artifact name
+    pub segstats: BTreeMap<u32, String>,
+    /// frac (per-mille) -> fused grad+stats artifact name (perf path)
+    pub gradstats: BTreeMap<u32, String>,
+    pub params: Vec<ParamMeta>,
+}
+
+impl ModelMeta {
+    pub fn is_lm(&self) -> bool {
+        self.kind == "lm"
+    }
+    pub fn is_image(&self) -> bool {
+        self.kind == "cnn"
+    }
+
+    /// Number of label entries per batch (LM labels are per-token).
+    pub fn y_len(&self) -> usize {
+        if self.is_lm() {
+            self.batch * self.seq_len
+        } else {
+            self.batch
+        }
+    }
+
+    /// Number of x entries per batch.
+    pub fn x_len(&self) -> usize {
+        if self.is_image() {
+            self.batch * self.image * self.image * self.in_channels
+        } else {
+            self.batch * self.seq_len
+        }
+    }
+
+    /// Initialize a flat parameter vector per the build-time spec
+    /// (mirrors `python/compile/model.py::init_flat` semantics; the exact
+    /// draws differ — only the distribution matters).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.param_count];
+        let mut rng = crate::tensor::Rng::for_stream(seed, 0x1417, 0);
+        for p in &self.params {
+            let dst = &mut out[p.offset..p.offset + p.numel];
+            match p.init.as_str() {
+                "normal" => rng.fill_normal(dst, p.std),
+                "ones" => dst.fill(1.0),
+                _ => dst.fill(0.0),
+            }
+        }
+        out
+    }
+
+    /// Segment size for a per-mille sparsification fraction.
+    pub fn seg_size(&self, frac_pm: u32) -> usize {
+        ((self.param_count as u64 * frac_pm as u64 + 500) / 1000).max(1) as usize
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Metadata {
+    pub elemwise_chunk: usize,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Metadata {
+    pub fn parse(text: &str) -> Result<Metadata, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let elemwise_chunk = j.req("elemwise_chunk").as_usize().ok_or("bad elemwise_chunk")?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts").as_obj().ok_or("artifacts not an object")? {
+            let inputs = a
+                .req("inputs")
+                .as_arr()
+                .ok_or("inputs not an array")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>, _>>()?;
+            let outputs = a
+                .req("outputs")
+                .as_arr()
+                .ok_or("outputs not an array")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>, _>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: a.req("file").as_str().ok_or("bad file")?.to_string(),
+                    kind: a.req("kind").as_str().ok_or("bad kind")?.to_string(),
+                    inputs,
+                    outputs,
+                    model: a.get("model").and_then(|v| v.as_str()).map(String::from),
+                    seg_size: a.get("seg_size").and_then(|v| v.as_usize()),
+                    n_segs: a.get("n_segs").and_then(|v| v.as_usize()),
+                    frac_pm: a.get("frac_pm").and_then(|v| v.as_usize()).map(|v| v as u32),
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").as_obj().ok_or("models not an object")? {
+            let mut segstats = BTreeMap::new();
+            if let Some(ss) = m.get("segstats").and_then(|v| v.as_obj()) {
+                for (pm, art) in ss {
+                    let pm: u32 = pm.parse().map_err(|_| "bad frac_pm key")?;
+                    segstats.insert(pm, art.as_str().ok_or("bad segstats entry")?.to_string());
+                }
+            }
+            let mut gradstats = BTreeMap::new();
+            if let Some(gs) = m.get("gradstats").and_then(|v| v.as_obj()) {
+                for (pm, art) in gs {
+                    let pm: u32 = pm.parse().map_err(|_| "bad frac_pm key")?;
+                    gradstats.insert(pm, art.as_str().ok_or("bad gradstats entry")?.to_string());
+                }
+            }
+            let params = m
+                .req("params")
+                .as_arr()
+                .ok_or("params not an array")?
+                .iter()
+                .map(|p| {
+                    Ok::<_, String>(ParamMeta {
+                        name: p.req("name").as_str().ok_or("bad param name")?.to_string(),
+                        shape: p
+                            .req("shape")
+                            .as_arr()
+                            .ok_or("bad param shape")?
+                            .iter()
+                            .map(|v| v.as_usize().ok_or_else(|| "bad dim".to_string()))
+                            .collect::<Result<Vec<_>, _>>()?,
+                        offset: p.req("offset").as_usize().ok_or("bad offset")?,
+                        numel: p.req("numel").as_usize().ok_or("bad numel")?,
+                        init: p.req("init").as_str().ok_or("bad init")?.to_string(),
+                        std: p.req("std").as_f64().ok_or("bad std")? as f32,
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let get_usize = |key: &str| m.get(key).and_then(|v| v.as_usize()).unwrap_or(0);
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    kind: m.req("kind").as_str().ok_or("bad model kind")?.to_string(),
+                    param_count: m.req("param_count").as_usize().ok_or("bad param_count")?,
+                    batch: m.req("batch").as_usize().ok_or("bad batch")?,
+                    seq_len: get_usize("seq_len"),
+                    vocab: get_usize("vocab"),
+                    image: get_usize("image"),
+                    in_channels: get_usize("in_channels"),
+                    n_classes: get_usize("n_classes"),
+                    grad: m.req("grad").as_str().ok_or("bad grad")?.to_string(),
+                    eval: m.req("eval").as_str().ok_or("bad eval")?.to_string(),
+                    segstats,
+                    gradstats,
+                    params,
+                },
+            );
+        }
+        Ok(Metadata { elemwise_chunk, models, artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "elemwise_chunk": 1024,
+      "artifacts": {
+        "m_grad": {"file": "m_grad.hlo.txt", "kind": "grad", "model": "m",
+          "param_count": 6,
+          "inputs": [{"dtype": "f32", "shape": [6]},
+                     {"dtype": "i32", "shape": [2, 3]},
+                     {"dtype": "i32", "shape": [2]}],
+          "outputs": [{"dtype": "f32", "shape": []},
+                      {"dtype": "f32", "shape": [6]}]},
+        "m_ss": {"file": "m_ss.hlo.txt", "kind": "segstats", "model": "m",
+          "seg_size": 2, "n_segs": 3, "frac_pm": 333,
+          "inputs": [{"dtype": "f32", "shape": [6]}],
+          "outputs": [{"dtype": "f32", "shape": [3]}, {"dtype": "i32", "shape": [6]}]}
+      },
+      "models": {
+        "m": {"kind": "tx", "param_count": 6, "batch": 2, "seq_len": 3,
+          "vocab": 256, "n_classes": 2, "grad": "m_grad", "eval": "m_grad",
+          "segstats": {"333": "m_ss"},
+          "params": [
+            {"name": "a", "shape": [2, 2], "offset": 0, "numel": 4, "init": "normal", "std": 0.5},
+            {"name": "b", "shape": [2], "offset": 4, "numel": 2, "init": "ones", "std": 0.0}
+          ]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let meta = Metadata::parse(SAMPLE).unwrap();
+        assert_eq!(meta.elemwise_chunk, 1024);
+        let m = &meta.models["m"];
+        assert_eq!(m.param_count, 6);
+        assert_eq!(m.segstats[&333], "m_ss");
+        assert_eq!(m.y_len(), 2);
+        assert_eq!(m.x_len(), 6);
+        let art = &meta.artifacts["m_grad"];
+        assert_eq!(art.inputs[1].numel(), 6);
+        assert_eq!(art.outputs[0].shape.len(), 0);
+        assert_eq!(art.outputs[0].numel(), 1); // scalar
+    }
+
+    #[test]
+    fn init_params_follows_spec() {
+        let meta = Metadata::parse(SAMPLE).unwrap();
+        let m = &meta.models["m"];
+        let p = m.init_params(7);
+        assert_eq!(p.len(), 6);
+        // "ones" block
+        assert_eq!(&p[4..6], &[1.0, 1.0]);
+        // "normal" block is nonzero and bounded-ish
+        assert!(p[..4].iter().any(|x| *x != 0.0));
+        assert!(p[..4].iter().all(|x| x.abs() < 0.5 * 6.0));
+        // deterministic
+        assert_eq!(p, m.init_params(7));
+        assert_ne!(p, m.init_params(8));
+    }
+
+    #[test]
+    fn seg_size_rounding() {
+        let meta = Metadata::parse(SAMPLE).unwrap();
+        let m = &meta.models["m"];
+        assert_eq!(m.seg_size(500), 3); // 6 * 0.5
+        assert_eq!(m.seg_size(1), 1); // floor would be 0 → clamped
+    }
+
+    #[test]
+    fn parse_real_metadata_if_present() {
+        let path = crate::util::artifacts_dir().join("metadata.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let meta = Metadata::parse(&text).unwrap();
+            assert!(meta.models.contains_key("tx-tiny"));
+            let m = &meta.models["tx-tiny"];
+            assert_eq!(m.param_count, 118658);
+            assert_eq!(m.segstats.len(), 4);
+            let p = m.init_params(1);
+            assert_eq!(p.len(), m.param_count);
+        }
+    }
+}

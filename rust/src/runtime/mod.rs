@@ -1,0 +1,267 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `metadata.json`, emitted once by `python/compile/aot.py`) and execute
+//! them from the training hot path. Python never runs here.
+//!
+//! Pattern (see /opt/xla-example): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are compiled lazily and
+//! cached per artifact name.
+//!
+//! NOTE: the `xla` crate's wrappers hold raw pointers and are `!Send`;
+//! the runtime therefore lives on the thread that created it. Logical
+//! workers share it sequentially (this testbed is single-core), and the
+//! TCP cluster mode runs one runtime per worker *process*.
+
+pub mod meta;
+
+pub use meta::{ArtifactMeta, Dtype, Metadata, ModelMeta, ParamMeta, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Argument to an artifact execution.
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl ArgValue<'_> {
+    fn len(&self) -> usize {
+        match self {
+            ArgValue::F32(v) => v.len(),
+            ArgValue::I32(v) => v.len(),
+        }
+    }
+    fn dtype(&self) -> Dtype {
+        match self {
+            ArgValue::F32(_) => Dtype::F32,
+            ArgValue::I32(_) => Dtype::I32,
+        }
+    }
+}
+
+/// Output of an artifact execution.
+#[derive(Clone, Debug)]
+pub enum OutValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutValue {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            OutValue::F32(v) => v,
+            OutValue::I32(_) => panic!("expected f32 output"),
+        }
+    }
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            OutValue::I32(v) => v,
+            OutValue::F32(_) => panic!("expected i32 output"),
+        }
+    }
+    /// Scalar f32 convenience (loss outputs).
+    pub fn scalar(&self) -> f32 {
+        let v = self.as_f32();
+        assert_eq!(v.len(), 1, "not a scalar");
+        v[0]
+    }
+}
+
+/// The PJRT-backed artifact executor.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: Metadata,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// executions per artifact (perf introspection)
+    exec_counts: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Load metadata from the artifacts directory and stand up a CPU
+    /// PJRT client. Compilation happens lazily per artifact.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let meta_path = dir.join("metadata.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", meta_path.display()))?;
+        let meta = Metadata::parse(&text).map_err(|e| anyhow!("parsing metadata: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            meta,
+            cache: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the default `<repo>/artifacts` directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(crate::util::artifacts_dir())
+    }
+
+    /// Ensure an artifact is compiled (warms the cache).
+    pub fn compile(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let art = self
+            .meta
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with shape/dtype checking against metadata.
+    pub fn exec(&self, name: &str, args: &[ArgValue]) -> Result<Vec<OutValue>> {
+        let art = self
+            .meta
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        if args.len() != art.inputs.len() {
+            bail!("{name}: expected {} args, got {}", art.inputs.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&art.inputs).enumerate() {
+            if arg.dtype() != spec.dtype {
+                bail!("{name}: arg {i} dtype mismatch (expected {:?})", spec.dtype);
+            }
+            if arg.len() != spec.numel() {
+                bail!(
+                    "{name}: arg {i} has {} elements, expected {} (shape {:?})",
+                    arg.len(),
+                    spec.numel(),
+                    spec.shape
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+            let lit = match arg {
+                ArgValue::F32(v) => xla::Literal::vec1(v),
+                ArgValue::I32(v) => xla::Literal::vec1(v),
+            };
+            let lit = if spec.shape.len() == 1 { lit } else { lit.reshape(&dims)? };
+            literals.push(lit);
+        }
+        self.compile(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        drop(cache);
+        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        // aot.py lowers with return_tuple=True: always a tuple literal
+        let parts = result.to_tuple()?;
+        if parts.len() != art.outputs.len() {
+            bail!("{name}: got {} outputs, expected {}", parts.len(), art.outputs.len());
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&art.outputs) {
+            let out = match spec.dtype {
+                Dtype::F32 => OutValue::F32(lit.to_vec::<f32>()?),
+                Dtype::I32 => OutValue::I32(lit.to_vec::<i32>()?),
+            };
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
+    /// Gradient step helper: `(loss, grad)` for a model artifact.
+    pub fn grad_step(
+        &self,
+        model: &ModelMeta,
+        params: &[f32],
+        x: &ArgValue,
+        y: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let outs =
+            self.exec(&model.grad, &[ArgValue::F32(params), reborrow(x), ArgValue::I32(y)])?;
+        let loss = outs[0].scalar();
+        let grad = match &outs[1] {
+            OutValue::F32(g) => g.clone(),
+            _ => bail!("grad output not f32"),
+        };
+        Ok((loss, grad))
+    }
+
+    /// Eval helper: `(loss, n_correct)`.
+    pub fn eval_step(
+        &self,
+        model: &ModelMeta,
+        params: &[f32],
+        x: &ArgValue,
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let outs =
+            self.exec(&model.eval, &[ArgValue::F32(params), reborrow(x), ArgValue::I32(y)])?;
+        Ok((outs[0].scalar(), outs[1].scalar()))
+    }
+
+    /// Segment-stats helper (the L1 Pallas path of Alg. 3):
+    /// returns `(seg_sq, perm)` from the model's `frac_pm` stats artifact.
+    pub fn seg_stats(
+        &self,
+        model: &ModelMeta,
+        frac_pm: u32,
+        grad: &[f32],
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        let art_name = model
+            .segstats
+            .get(&frac_pm)
+            .ok_or_else(|| anyhow!("model {} has no segstats for pm{}", model.name, frac_pm))?;
+        let outs = self.exec(art_name, &[ArgValue::F32(grad)])?;
+        let seg_sq = outs[0].as_f32().to_vec();
+        let perm: Vec<u32> = outs[1].as_i32().iter().map(|i| *i as u32).collect();
+        Ok((seg_sq, perm))
+    }
+
+    /// Fused gradient + segment-stats step (one PJRT dispatch — the
+    /// Alg. 3 perf path, see EXPERIMENTS.md §Perf):
+    /// `(loss, grad, seg_sq, perm)`.
+    pub fn grad_stats_step(
+        &self,
+        model: &ModelMeta,
+        frac_pm: u32,
+        params: &[f32],
+        x: &ArgValue,
+        y: &[i32],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>, Vec<u32>)> {
+        let art_name = model
+            .gradstats
+            .get(&frac_pm)
+            .ok_or_else(|| anyhow!("model {} has no gradstats for pm{}", model.name, frac_pm))?;
+        let outs =
+            self.exec(art_name, &[ArgValue::F32(params), reborrow(x), ArgValue::I32(y)])?;
+        let loss = outs[0].scalar();
+        let grad = outs[1].as_f32().to_vec();
+        let seg_sq = outs[2].as_f32().to_vec();
+        let perm: Vec<u32> = outs[3].as_i32().iter().map(|i| *i as u32).collect();
+        Ok((loss, grad, seg_sq, perm))
+    }
+
+    /// How many times each artifact has executed (perf logging).
+    pub fn exec_counts(&self) -> HashMap<String, u64> {
+        self.exec_counts.borrow().clone()
+    }
+}
+
+/// Re-borrow an [`ArgValue`] (they are cheap views).
+pub fn reborrow<'a>(x: &'a ArgValue<'a>) -> ArgValue<'a> {
+    match x {
+        ArgValue::F32(v) => ArgValue::F32(v),
+        ArgValue::I32(v) => ArgValue::I32(v),
+    }
+}

@@ -1,0 +1,139 @@
+//! Flat-vector math substrate.
+//!
+//! Everything in the coordinator operates on flat `f32` vectors (the L2
+//! models expose a single flat parameter/gradient vector — see
+//! `python/compile/model.py`), so this module is the numeric workhorse:
+//! BLAS-1 style ops, norms, and magnitude-selection utilities.
+
+pub mod rng;
+pub mod select;
+
+pub use rng::Rng;
+
+/// `y += alpha * x`
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = alpha * x` (overwrites)
+pub fn scaled_copy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = alpha * xi;
+    }
+}
+
+/// `x *= alpha`
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+/// Dot product (f64 accumulation for stability on long vectors).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// Squared l2 norm, f64 accumulated.
+pub fn sq_norm(x: &[f32]) -> f64 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum()
+}
+
+/// l2 norm.
+pub fn norm(x: &[f32]) -> f64 {
+    sq_norm(x).sqrt()
+}
+
+/// l1 norm.
+pub fn l1_norm(x: &[f32]) -> f64 {
+    x.iter().map(|v| v.abs() as f64).sum()
+}
+
+/// Largest magnitude entry (0.0 for an empty slice).
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Elementwise difference `a - b` into a fresh vector.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Zero the buffer.
+pub fn zero(x: &mut [f32]) {
+    for v in x {
+        *v = 0.0;
+    }
+}
+
+/// Squared l2 distance between two vectors.
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0, 30.0]);
+        assert_eq!(y, vec![21.0, 42.0, 63.0]);
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let a = [3.0f32, 4.0];
+        assert_eq!(dot(&a, &a), 25.0);
+        assert_eq!(sq_norm(&a), 25.0);
+        assert_eq!(norm(&a), 5.0);
+        assert_eq!(l1_norm(&a), 7.0);
+        assert_eq!(max_abs(&[-9.0, 2.0]), 9.0);
+    }
+
+    #[test]
+    fn sq_dist_symmetric() {
+        let a = [1.0f32, 2.0, -1.0];
+        let b = [0.0f32, 4.0, 1.0];
+        assert_eq!(sq_dist(&a, &b), sq_dist(&b, &a));
+        assert_eq!(sq_dist(&a, &b), 1.0 + 4.0 + 4.0);
+    }
+
+    #[test]
+    fn scaled_copy_and_scale() {
+        let mut y = vec![0.0; 3];
+        scaled_copy(&mut y, 0.5, &[2.0, 4.0, 6.0]);
+        assert_eq!(y, vec![1.0, 2.0, 3.0]);
+        scale(&mut y, 2.0);
+        assert_eq!(y, vec![2.0, 4.0, 6.0]);
+        zero(&mut y);
+        assert_eq!(y, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn sub_elementwise() {
+        assert_eq!(sub(&[3.0, 2.0], &[1.0, 5.0]), vec![2.0, -3.0]);
+    }
+
+    #[test]
+    fn f64_accumulation_is_stable() {
+        // 1M small values whose f32 running sum would drift
+        let x = vec![1e-4f32; 1_000_000];
+        let n = sq_norm(&x);
+        assert!((n - 1e-8 * 1e6).abs() < 1e-9, "{n}");
+    }
+}

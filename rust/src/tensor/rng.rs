@@ -1,0 +1,260 @@
+//! Deterministic RNG substrate: xoshiro256** with splitmix64 seeding.
+//!
+//! The paper averages every experiment over 5 seeds; reproducibility of
+//! those runs (and of the MLMC level draws inside them) demands fully
+//! deterministic, stream-splittable randomness. Streams are derived per
+//! `(seed, worker, step)` so worker order / thread scheduling never
+//! changes the numbers.
+
+/// splitmix64 — used to expand a single u64 seed into xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal from Box-Muller
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed from a single u64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream for `(seed, worker, step)`.
+    /// Mixing through splitmix decorrelates nearby tuples.
+    pub fn for_stream(seed: u64, worker: u64, step: u64) -> Self {
+        let mut sm = seed ^ worker.wrapping_mul(0xA24BAED4963EE407) ^ step.wrapping_mul(0x9FB21C651E98DF25);
+        let _ = splitmix64(&mut sm);
+        Self::new(splitmix64(&mut sm))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply avoids modulo bias well below detectable levels
+        (((self.next_u64() as u128) * (n as u128)) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Fill a buffer with N(0, std^2) f32s.
+    pub fn fill_normal(&mut self, buf: &mut [f32], std: f32) {
+        for v in buf {
+            *v = self.normal() as f32 * std;
+        }
+    }
+
+    /// Sample an index from an (unnormalized, non-negative) weight vector.
+    /// Returns `weights.len() - 1` on accumulated-rounding fall-through.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        debug_assert!(!weights.is_empty());
+        let total: f64 = weights.iter().map(|w| *w as f64).sum();
+        debug_assert!(total > 0.0, "categorical with all-zero weights");
+        let mut u = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= *w as f64;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// k distinct indices from [0, n) via partial Fisher-Yates over a
+    /// lazily-materialized permutation (O(k) memory in the map).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<u32> {
+        debug_assert!(k <= n);
+        let mut swaps: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            let vi = *swaps.get(&i).unwrap_or(&i);
+            let vj = *swaps.get(&j).unwrap_or(&j);
+            out.push(vj as u32);
+            swaps.insert(j, vi);
+        }
+        out
+    }
+
+    /// Random permutation of [0, n).
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let a = Rng::for_stream(1, 0, 0).next_u64();
+        let b = Rng::for_stream(1, 1, 0).next_u64();
+        let c = Rng::for_stream(1, 0, 1).next_u64();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.03, "{var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(13);
+        let w = [1.0f32, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let frac0 = counts[0] as f64 / 40_000.0;
+        assert!((frac0 - 0.25).abs() < 0.02, "{frac0}");
+    }
+
+    #[test]
+    fn choose_k_distinct_and_uniformish() {
+        let mut r = Rng::new(17);
+        for _ in 0..50 {
+            let ks = r.choose_k(100, 10);
+            let mut s = ks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 10);
+            assert!(ks.iter().all(|&i| i < 100));
+        }
+        // edge cases
+        assert_eq!(r.choose_k(5, 5).len(), 5);
+        assert!(r.choose_k(5, 0).is_empty());
+        // coverage: over many draws every index appears
+        let mut seen = [false; 20];
+        for _ in 0..200 {
+            for i in r.choose_k(20, 3) {
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(23);
+        let p = r.permutation(64);
+        let mut s = p.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,148 @@
+//! Property-testing substrate (proptest is not in the offline vendor
+//! set): seeded random-case generation with failure-case reporting and a
+//! greedy shrink pass for vector inputs.
+
+use crate::tensor::Rng;
+
+/// Run `prop` on `cases` random inputs drawn by `gen`. On failure,
+/// panics with the seed and case index so the exact case replays.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::for_stream(seed, 0xF0F0, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Random-vector property with greedy shrinking: on failure, tries to
+/// zero out / truncate parts of the vector while preserving failure and
+/// reports the smallest failing vector found.
+pub fn forall_vec(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    max_len: usize,
+    mut prop: impl FnMut(&[f32]) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::for_stream(seed, 0xECu64, case as u64);
+        let len = 1 + rng.below(max_len);
+        let heavy = rng.uniform() < 0.3;
+        let v: Vec<f32> = (0..len)
+            .map(|_| {
+                let base = rng.normal() as f32;
+                if heavy {
+                    base * base * base // heavy-tailed
+                } else {
+                    base
+                }
+            })
+            .collect();
+        if let Err(msg) = prop(&v) {
+            let shrunk = shrink_vec(&v, &mut prop);
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case}): {msg}\nshrunk input ({} elems): {:?}",
+                shrunk.len(),
+                &shrunk[..shrunk.len().min(32)]
+            );
+        }
+    }
+}
+
+fn shrink_vec(v: &[f32], prop: &mut impl FnMut(&[f32]) -> Result<(), String>) -> Vec<f32> {
+    let mut cur = v.to_vec();
+    // try halving length
+    loop {
+        if cur.len() <= 1 {
+            break;
+        }
+        let half = cur[..cur.len() / 2].to_vec();
+        if prop(&half).is_err() {
+            cur = half;
+            continue;
+        }
+        let back = cur[cur.len() / 2..].to_vec();
+        if prop(&back).is_err() {
+            cur = back;
+            continue;
+        }
+        break;
+    }
+    // try zeroing single entries
+    for i in 0..cur.len() {
+        let old = cur[i];
+        if old == 0.0 {
+            continue;
+        }
+        cur[i] = 0.0;
+        if prop(&cur).is_ok() {
+            cur[i] = old;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_good_property() {
+        forall(
+            "abs-nonneg",
+            1,
+            100,
+            |rng| rng.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn forall_reports_failures() {
+        forall("always-fails", 1, 10, |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn forall_vec_passes_norm_property() {
+        forall_vec("norm-nonneg", 2, 50, 200, |v| {
+            if crate::tensor::norm(v) >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative norm".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_finds_small_case() {
+        // property fails iff the vector contains a value > 10
+        let mut prop = |v: &[f32]| {
+            if v.iter().any(|x| *x > 10.0) {
+                Err("big".into())
+            } else {
+                Ok(())
+            }
+        };
+        let v = vec![1.0, 2.0, 50.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let s = shrink_vec(&v, &mut prop);
+        assert!(s.len() <= 2, "{s:?}");
+        assert!(s.iter().any(|x| *x > 10.0));
+    }
+}

@@ -1,0 +1,96 @@
+//! Per-method learning-rate tuning (paper §5.1: "optimized the learning
+//! rate for each one individually"). Geometric grid sweep on the
+//! synthetic-objective harness (fast, no XLA) or on real models via the
+//! training driver; selects by tail loss / final suboptimality.
+
+use crate::config::{Method, TrainConfig};
+use crate::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
+
+/// Result of one lr trial.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub lr: f32,
+    pub score: f64,
+}
+
+/// Sweep a geometric lr grid on a quadratic proxy; returns trials sorted
+/// by score (ascending = better) and the best lr.
+pub fn sweep_quadratic(
+    method: Method,
+    workers: usize,
+    steps: usize,
+    frac_pm: u32,
+    sigma: f32,
+    grid: &[f32],
+) -> (f32, Vec<Trial>) {
+    let problem = Quadratic::new(50, workers, sigma, 0.3, 1234);
+    let mut trials: Vec<Trial> = grid
+        .iter()
+        .map(|&lr| {
+            let cfg = synth_cfg(method.clone(), workers, steps, lr, frac_pm, 7);
+            let r = run_quadratic(&problem, &cfg);
+            let score = if r.tail_suboptimality.is_finite() {
+                r.tail_suboptimality
+            } else {
+                f64::INFINITY
+            };
+            Trial { lr, score }
+        })
+        .collect();
+    trials.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
+    (trials[0].lr, trials)
+}
+
+/// Default geometric grid (half-decade spacing), the paper's usual sweep.
+pub fn default_grid() -> Vec<f32> {
+    vec![0.003, 0.01, 0.03, 0.1, 0.3, 1.0]
+}
+
+/// Sweep on a real model through the training driver (slow path; used by
+/// `figures` when `MLMC_FIG_TUNE=1`). Scores by tail train loss.
+pub fn sweep_model(
+    rt: &crate::runtime::Runtime,
+    base: &TrainConfig,
+    grid: &[f32],
+) -> anyhow::Result<(f32, Vec<Trial>)> {
+    let mut trials = Vec::new();
+    for &lr in grid {
+        let mut cfg = base.clone();
+        cfg.lr = lr;
+        cfg.eval_every = 0;
+        let r = crate::train::run(rt, &cfg)?;
+        let tail = r.curve.tail_loss(cfg.steps / 5 + 1);
+        trials.push(Trial { lr, score: if tail.is_finite() { tail } else { f64::INFINITY } });
+    }
+    trials.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
+    Ok((trials[0].lr, trials))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_finds_interior_optimum_for_sgd() {
+        let (best, trials) = sweep_quadratic(Method::Sgd, 4, 200, 100, 0.1, &default_grid());
+        assert_eq!(trials.len(), 6);
+        // huge lr must lose to the best (divergence shows in the score)
+        assert!(best < 1.0, "{best}");
+        let worst = trials.last().unwrap();
+        assert!(worst.score > trials[0].score);
+    }
+
+    #[test]
+    fn randk_prefers_smaller_lr_than_sgd() {
+        // ω = d/k − 1 inflates variance: the tuned Rand-k lr is ≤ SGD's
+        let (sgd, _) = sweep_quadratic(Method::Sgd, 4, 300, 100, 0.3, &default_grid());
+        let (randk, _) = sweep_quadratic(Method::RandK, 4, 300, 100, 0.3, &default_grid());
+        assert!(randk <= sgd, "randk {randk} !<= sgd {sgd}");
+    }
+
+    #[test]
+    fn scores_are_finite_for_stable_range() {
+        let (_, trials) = sweep_quadratic(Method::MlmcTopK, 8, 150, 200, 0.1, &[0.01, 0.05]);
+        assert!(trials.iter().all(|t| t.score.is_finite()));
+    }
+}

@@ -1,0 +1,221 @@
+//! Training driver: glues runtime (L2/L1 artifacts) + coordinator +
+//! data + metrics into the synchronous data-parallel loop of
+//! Alg. 1/2/3.
+//!
+//! Workers are *logical* within one process: each has its own data
+//! stream, RNG stream, and (possibly stateful) encoder, and they share
+//! the PJRT runtime sequentially (single-core testbed; the xla wrappers
+//! are `!Send` — see [`crate::runtime`]). The multi-process TCP mode in
+//! `examples/tcp_cluster.rs` runs the same protocol over sockets.
+
+pub mod lr_sweep;
+pub mod synthetic;
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::Compressed;
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::{agg_kind, build_encoder, Server};
+use crate::data::{dirichlet_class_probs, Batch, Task};
+use crate::ef::GradientEncoder;
+use crate::metrics::Curve;
+use crate::mlmc::{stopk::StopkCtx, MlSTopK, Mlmc, Schedule};
+use crate::runtime::{ArgValue, ModelMeta, Runtime};
+use crate::tensor::Rng;
+
+/// Worker-side codec: either a self-contained encoder, or the adaptive
+/// MLMC path that consumes the **L1 Pallas segment statistics** artifact
+/// (Alg. 3 with Lemma 3.4 probabilities computed on-device).
+pub enum Codec {
+    Enc(Box<dyn GradientEncoder>),
+    MlmcL1 { mlmc: Mlmc, seg_size: usize, frac_pm: u32 },
+}
+
+impl Codec {
+    pub fn name(&self) -> String {
+        match self {
+            Codec::Enc(e) => e.name(),
+            Codec::MlmcL1 { mlmc, .. } => format!("{}+l1stats", crate::compress::Compressor::name(mlmc)),
+        }
+    }
+
+    pub fn encode(&mut self, rt: &Runtime, model: &ModelMeta, grad: &[f32], rng: &mut Rng) -> Result<Compressed> {
+        match self {
+            Codec::Enc(e) => Ok(e.encode(grad, rng)),
+            Codec::MlmcL1 { mlmc, seg_size, frac_pm } => {
+                let (seg_sq, perm) = rt.seg_stats(model, *frac_pm, grad)?;
+                let ctx = StopkCtx::from_stats(grad, *seg_size, seg_sq, perm);
+                Ok(mlmc.draw_with_ctx(&ctx, grad.len(), rng).message)
+            }
+        }
+    }
+
+    /// Encode from precomputed (seg_sq, perm) — the fused-dispatch path.
+    pub fn encode_with_stats(
+        &mut self,
+        grad: &[f32],
+        seg_sq: Vec<f32>,
+        perm: Vec<u32>,
+        rng: &mut Rng,
+    ) -> Compressed {
+        match self {
+            Codec::Enc(e) => e.encode(grad, rng),
+            Codec::MlmcL1 { mlmc, seg_size, .. } => {
+                let ctx = StopkCtx::from_stats(grad, *seg_size, seg_sq, perm);
+                mlmc.draw_with_ctx(&ctx, grad.len(), rng).message
+            }
+        }
+    }
+
+    /// Does this codec want the fused grad+stats artifact?
+    pub fn fused_frac(&self) -> Option<u32> {
+        match self {
+            Codec::MlmcL1 { frac_pm, .. } => Some(*frac_pm),
+            Codec::Enc(_) => None,
+        }
+    }
+}
+
+/// Build the per-worker codec for a config.
+pub fn build_codec(cfg: &TrainConfig, model: &ModelMeta) -> Codec {
+    let use_l1 = cfg.use_l1_stats
+        && matches!(cfg.method, Method::MlmcTopK | Method::MlmcTopKStatic)
+        && model.segstats.contains_key(&cfg.frac_pm);
+    if use_l1 {
+        let seg_size = model.seg_size(cfg.frac_pm);
+        let schedule = if cfg.method == Method::MlmcTopK {
+            Schedule::Adaptive
+        } else {
+            Schedule::Default
+        };
+        Codec::MlmcL1 {
+            mlmc: Mlmc::new(Box::new(MlSTopK { s: seg_size }), schedule),
+            seg_size,
+            frac_pm: cfg.frac_pm,
+        }
+    } else {
+        Codec::Enc(build_encoder(cfg, model.param_count))
+    }
+}
+
+/// Outcome of a training run.
+pub struct TrainResult {
+    pub cfg: TrainConfig,
+    pub curve: Curve,
+    pub total_bits: u64,
+    pub final_params: Vec<f32>,
+    pub codec_name: String,
+}
+
+fn batch_x<'a>(model: &ModelMeta, b: &'a Batch) -> ArgValue<'a> {
+    if model.is_image() {
+        ArgValue::F32(&b.x_f32)
+    } else {
+        ArgValue::I32(&b.x_i32)
+    }
+}
+
+/// Evaluate on `n` fixed held-out batches: `(mean_loss, accuracy)`.
+pub fn evaluate(rt: &Runtime, model: &ModelMeta, task: &Task, params: &[f32], n: usize) -> Result<(f64, f64)> {
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut total = 0.0f64;
+    for i in 0..n.max(1) {
+        let b = task.eval_batch(i as u64);
+        let (l, nc) = rt.eval_step(model, params, &batch_x(model, &b), &b.y)?;
+        loss += l as f64;
+        correct += nc as f64;
+        total += model.y_len() as f64;
+    }
+    Ok((loss / n.max(1) as f64, correct / total))
+}
+
+/// Run one training configuration end-to-end (the workhorse behind the
+/// CLI `train` command, the figure harness, and the e2e example).
+pub fn run(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainResult> {
+    run_with_csv(rt, cfg, None)
+}
+
+/// Like [`run`], optionally streaming the curve to a CSV path.
+pub fn run_with_csv(
+    rt: &Runtime,
+    cfg: &TrainConfig,
+    csv: Option<&std::path::Path>,
+) -> Result<TrainResult> {
+    cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
+    let model = rt
+        .meta
+        .models
+        .get(&cfg.model)
+        .ok_or_else(|| anyhow!("unknown model {:?} (re-run `make artifacts`)", cfg.model))?
+        .clone();
+
+    // fixed task structure (seed 42) shared across run seeds and methods
+    let task = Task::for_model(&model, 42);
+    let class_probs = dirichlet_class_probs(
+        cfg.dirichlet_alpha,
+        task.n_classes().max(1),
+        cfg.workers,
+        42,
+    );
+    let hetero = cfg.dirichlet_alpha > 0.0 && task.n_classes() > 0;
+
+    let mut codecs: Vec<Codec> = (0..cfg.workers).map(|_| build_codec(cfg, &model)).collect();
+    let codec_name = codecs[0].name();
+
+    let params = model.init_params(cfg.seed);
+    let mut server = Server::new(
+        params,
+        crate::optim::build(&cfg.optimizer, cfg.lr, model.param_count),
+        agg_kind(&cfg.method),
+    );
+
+    let mut curve = match csv {
+        Some(path) => Curve::with_csv(cfg.run_id(), path)?,
+        None => Curve::new(cfg.run_id()),
+    };
+
+    let mut msgs: Vec<Compressed> = Vec::with_capacity(cfg.workers);
+    for step in 0..cfg.steps {
+        msgs.clear();
+        let mut loss_sum = 0.0f64;
+        for (w, codec) in codecs.iter_mut().enumerate() {
+            let probs = if hetero { Some(class_probs[w].as_slice()) } else { None };
+            let b = task.train_batch(cfg.seed, w as u64, step as u64, probs);
+            let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, w as u64, step as u64);
+            // fused single-dispatch path when the artifact exists
+            let fused = codec.fused_frac().filter(|pm| model.gradstats.contains_key(pm));
+            let msg = if let Some(pm) = fused {
+                let (loss, grad, seg_sq, perm) =
+                    rt.grad_stats_step(&model, pm, &server.params, &batch_x(&model, &b), &b.y)?;
+                loss_sum += loss as f64;
+                codec.encode_with_stats(&grad, seg_sq, perm, &mut rng)
+            } else {
+                let (loss, grad) =
+                    rt.grad_step(&model, &server.params, &batch_x(&model, &b), &b.y)?;
+                loss_sum += loss as f64;
+                codec.encode(rt, &model, &grad, &mut rng)?
+            };
+            msgs.push(msg);
+        }
+        server.apply_round(&msgs);
+        let train_loss = loss_sum / cfg.workers as f64;
+
+        let last = step + 1 == cfg.steps;
+        if (cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0) || last {
+            let (el, ea) = evaluate(rt, &model, &task, &server.params, cfg.eval_batches)?;
+            curve.log(step as u64 + 1, server.total_bits, train_loss, el, ea);
+        } else {
+            curve.log(step as u64 + 1, server.total_bits, train_loss, f64::NAN, f64::NAN);
+        }
+    }
+    curve.flush();
+
+    Ok(TrainResult {
+        cfg: cfg.clone(),
+        curve,
+        total_bits: server.total_bits,
+        final_params: server.params,
+        codec_name,
+    })
+}

@@ -1,0 +1,114 @@
+//! In-process mpsc star transport: M worker ports, one leader.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::Frame;
+
+/// Leader side: receives tagged frames from all workers, can broadcast.
+pub struct Leader {
+    rx: Receiver<(u32, Frame)>,
+    txs: Vec<Sender<Frame>>,
+}
+
+/// Worker side: send to the leader, receive broadcasts.
+pub struct WorkerPort {
+    pub id: u32,
+    tx: Sender<(u32, Frame)>,
+    rx: Receiver<Frame>,
+}
+
+/// Build a star with `m` workers.
+pub fn star(m: usize) -> (Leader, Vec<WorkerPort>) {
+    let (up_tx, up_rx) = channel();
+    let mut txs = Vec::with_capacity(m);
+    let mut ports = Vec::with_capacity(m);
+    for id in 0..m {
+        let (down_tx, down_rx) = channel();
+        txs.push(down_tx);
+        ports.push(WorkerPort { id: id as u32, tx: up_tx.clone(), rx: down_rx });
+    }
+    (Leader { rx: up_rx, txs }, ports)
+}
+
+impl Leader {
+    /// Broadcast a frame to every worker.
+    pub fn broadcast(&self, frame: &Frame) {
+        for tx in &self.txs {
+            // a dropped worker is a shutdown signal, not an error
+            let _ = tx.send(frame.clone());
+        }
+    }
+
+    /// Collect exactly one frame from each of the `m` workers
+    /// (synchronous round barrier).
+    pub fn gather(&self, m: usize) -> Vec<(u32, Frame)> {
+        let mut out = Vec::with_capacity(m);
+        for _ in 0..m {
+            match self.rx.recv() {
+                Ok(item) => out.push(item),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+}
+
+impl WorkerPort {
+    pub fn send(&self, frame: Frame) {
+        let _ = self.tx.send((self.id, frame));
+    }
+
+    pub fn recv(&self) -> Option<Frame> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{params_from_bytes, params_to_bytes, FRAME_SHUTDOWN};
+
+    #[test]
+    fn star_round() {
+        let (leader, ports) = star(4);
+        let handles: Vec<_> = ports
+            .into_iter()
+            .map(|p| {
+                std::thread::spawn(move || {
+                    // worker: wait for params, reply with 2x params
+                    let f = p.recv().unwrap();
+                    let params = params_from_bytes(&f.payload);
+                    let doubled: Vec<f32> = params.iter().map(|x| 2.0 * x).collect();
+                    p.send(Frame::grad(params_to_bytes(&doubled)));
+                    // then expect shutdown
+                    assert_eq!(p.recv().unwrap().kind, FRAME_SHUTDOWN);
+                })
+            })
+            .collect();
+
+        leader.broadcast(&Frame::params(params_to_bytes(&[1.0, 2.0])));
+        let replies = leader.gather(4);
+        assert_eq!(replies.len(), 4);
+        let mut ids: Vec<u32> = replies.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        for (_, f) in &replies {
+            assert_eq!(params_from_bytes(&f.payload), vec![2.0, 4.0]);
+        }
+        leader.broadcast(&Frame::shutdown());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn gather_survives_dead_worker() {
+        let (leader, mut ports) = star(2);
+        let p0 = ports.remove(0);
+        p0.send(Frame::grad(vec![1]));
+        drop(p0);
+        drop(ports); // second worker never sends
+        let got = leader.gather(2);
+        assert_eq!(got.len(), 1); // no deadlock: channel closed ends gather
+    }
+}

@@ -1,0 +1,74 @@
+//! Transports for the leader/worker star topology (paper §2.1's
+//! master-server model).
+//!
+//! * [`channel`] — in-process mpsc star for threaded coordination tests
+//!   and the single-process simulator.
+//! * [`tcp`] — real sockets with length-framed messages for the
+//!   multi-process cluster mode (`examples/tcp_cluster.rs`); one PJRT
+//!   runtime per worker process.
+
+pub mod channel;
+pub mod tcp;
+
+/// Frame kinds exchanged on the wire.
+pub const FRAME_PARAMS: u8 = 1;
+pub const FRAME_GRAD: u8 = 2;
+pub const FRAME_SHUTDOWN: u8 = 3;
+
+/// A framed transport message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: u8,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn params(payload: Vec<u8>) -> Self {
+        Frame { kind: FRAME_PARAMS, payload }
+    }
+    pub fn grad(payload: Vec<u8>) -> Self {
+        Frame { kind: FRAME_GRAD, payload }
+    }
+    pub fn shutdown() -> Self {
+        Frame { kind: FRAME_SHUTDOWN, payload: Vec::new() }
+    }
+}
+
+/// Serialize a flat f32 vector (params broadcast payload).
+pub fn params_to_bytes(params: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + params.len() * 4);
+    out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for p in params {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out
+}
+
+pub fn params_from_bytes(bytes: &[u8]) -> Vec<f32> {
+    let n = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let o = 4 + i * 4;
+        out.push(f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip() {
+        let p = vec![1.0f32, -2.5, 0.0, 3.25];
+        assert_eq!(params_from_bytes(&params_to_bytes(&p)), p);
+        assert!(params_from_bytes(&params_to_bytes(&[])).is_empty());
+    }
+
+    #[test]
+    fn frame_constructors() {
+        assert_eq!(Frame::shutdown().kind, FRAME_SHUTDOWN);
+        assert_eq!(Frame::params(vec![1]).kind, FRAME_PARAMS);
+        assert_eq!(Frame::grad(vec![2]).payload, vec![2]);
+    }
+}

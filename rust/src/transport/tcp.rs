@@ -1,0 +1,170 @@
+//! TCP transport: length-framed frames over `std::net` sockets for the
+//! multi-process cluster mode. Frame layout: `kind(1) | len(4, LE) | payload`.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{bail, Context, Result};
+
+use super::Frame;
+
+pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
+    let mut header = [0u8; 5];
+    header[0] = frame.kind;
+    header[1..5].copy_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(&frame.payload)?;
+    Ok(())
+}
+
+pub fn read_frame(stream: &mut TcpStream) -> Result<Frame> {
+    let mut header = [0u8; 5];
+    stream.read_exact(&mut header).context("reading frame header")?;
+    let kind = header[0];
+    let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+    if len > 1 << 30 {
+        bail!("frame too large: {len}");
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(Frame { kind, payload })
+}
+
+/// Leader: binds and accepts exactly `m` worker connections. Workers
+/// identify themselves with a hello byte-frame carrying their id.
+pub struct TcpLeader {
+    streams: Vec<TcpStream>,
+}
+
+impl TcpLeader {
+    /// Assemble a leader from already-accepted worker streams (ordered by
+    /// worker id) — used when the caller owns the accept loop.
+    pub fn from_streams(streams: Vec<TcpStream>) -> Self {
+        TcpLeader { streams }
+    }
+
+    pub fn bind_and_accept(addr: &str, m: usize) -> Result<(Self, String)> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?.to_string();
+        let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
+        for _ in 0..m {
+            let (mut s, _) = listener.accept()?;
+            s.set_nodelay(true)?;
+            let hello = read_frame(&mut s)?;
+            let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
+            if id >= m || streams[id].is_some() {
+                bail!("bad worker hello id {id}");
+            }
+            streams[id] = Some(s);
+        }
+        Ok((TcpLeader { streams: streams.into_iter().map(Option::unwrap).collect() }, local))
+    }
+
+    pub fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        for s in &mut self.streams {
+            write_frame(s, frame)?;
+        }
+        Ok(())
+    }
+
+    /// One frame from every worker (in worker order).
+    pub fn gather(&mut self) -> Result<Vec<Frame>> {
+        let mut out = Vec::with_capacity(self.streams.len());
+        for s in &mut self.streams {
+            out.push(read_frame(s)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Worker: connects and sends its id as a hello.
+pub struct TcpWorker {
+    stream: TcpStream,
+}
+
+impl TcpWorker {
+    pub fn connect(addr: &str, id: u32) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        write_frame(&mut stream, &Frame { kind: 0, payload: id.to_le_bytes().to_vec() })?;
+        Ok(TcpWorker { stream })
+    }
+
+    pub fn send(&mut self, frame: &Frame) -> Result<()> {
+        write_frame(&mut self.stream, frame)
+    }
+
+    pub fn recv(&mut self) -> Result<Frame> {
+        read_frame(&mut self.stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{params_from_bytes, params_to_bytes, FRAME_SHUTDOWN};
+
+    #[test]
+    fn loopback_round() {
+        // leader thread owns accept; workers connect from spawned threads
+        let listener_thread = std::thread::spawn(|| {
+            let (leader, addr) = {
+                // bind on an ephemeral port, then share it via a channel
+                let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap().to_string();
+                (listener, addr)
+            };
+            // hand the address to workers
+            let addr2 = addr.clone();
+            let workers: Vec<_> = (0..3u32)
+                .map(|id| {
+                    let a = addr2.clone();
+                    std::thread::spawn(move || {
+                        let mut w = TcpWorker::connect(&a, id).unwrap();
+                        let f = w.recv().unwrap();
+                        let p = params_from_bytes(&f.payload);
+                        let sum: f32 = p.iter().sum();
+                        w.send(&Frame::grad(params_to_bytes(&[sum + id as f32]))).unwrap();
+                        assert_eq!(w.recv().unwrap().kind, FRAME_SHUTDOWN);
+                    })
+                })
+                .collect();
+            // accept exactly 3
+            let mut streams: Vec<Option<TcpStream>> = vec![None, None, None];
+            for _ in 0..3 {
+                let (mut s, _) = leader.accept().unwrap();
+                let hello = read_frame(&mut s).unwrap();
+                let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
+                streams[id] = Some(s);
+            }
+            let mut tl = TcpLeader { streams: streams.into_iter().map(Option::unwrap).collect() };
+            tl.broadcast(&Frame::params(params_to_bytes(&[1.0, 2.0]))).unwrap();
+            let replies = tl.gather().unwrap();
+            for (id, f) in replies.iter().enumerate() {
+                assert_eq!(params_from_bytes(&f.payload), vec![3.0 + id as f32]);
+            }
+            tl.broadcast(&Frame::shutdown()).unwrap();
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+        listener_thread.join().unwrap();
+    }
+
+    #[test]
+    fn frame_roundtrip_over_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let f = read_frame(&mut s).unwrap();
+            write_frame(&mut s, &f).unwrap(); // echo
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let sent = Frame { kind: 7, payload: (0..255u8).collect() };
+        write_frame(&mut c, &sent).unwrap();
+        let got = read_frame(&mut c).unwrap();
+        assert_eq!(got, sent);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,78 @@
+//! Small self-contained utilities: a JSON parser (for `artifacts/metadata.json`),
+//! and filesystem/formatting helpers. The offline vendor set has no serde,
+//! so these are built in-tree (see DESIGN.md).
+
+pub mod json;
+
+use std::path::{Path, PathBuf};
+
+/// Repo-relative path resolution: honours `MLMC_DIST_ROOT`, else walks up
+/// from the current dir looking for `Cargo.toml`.
+pub fn repo_root() -> PathBuf {
+    if let Ok(r) = std::env::var("MLMC_DIST_ROOT") {
+        return PathBuf::from(r);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return PathBuf::from(".");
+        }
+    }
+}
+
+/// Default artifacts directory (`<root>/artifacts`), overridable via
+/// `MLMC_DIST_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("MLMC_DIST_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    repo_root().join("artifacts")
+}
+
+/// `<root>/results` (created on demand).
+pub fn results_dir() -> PathBuf {
+    let d = repo_root().join("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Human-readable bit counts ("1.25 Gb").
+pub fn fmt_bits(bits: u64) -> String {
+    let b = bits as f64;
+    if b >= 1e9 {
+        format!("{:.2} Gb", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} Mb", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} kb", b / 1e3)
+    } else {
+        format!("{bits} b")
+    }
+}
+
+/// Does a file exist and is non-empty?
+pub fn usable_file(p: &Path) -> bool {
+    std::fs::metadata(p).map(|m| m.is_file() && m.len() > 0).unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bits_scales() {
+        assert_eq!(fmt_bits(12), "12 b");
+        assert_eq!(fmt_bits(1500), "1.50 kb");
+        assert_eq!(fmt_bits(2_500_000), "2.50 Mb");
+        assert_eq!(fmt_bits(3_000_000_000), "3.00 Gb");
+    }
+
+    #[test]
+    fn repo_root_finds_cargo_toml() {
+        let r = repo_root();
+        assert!(r.join("Cargo.toml").exists());
+    }
+}

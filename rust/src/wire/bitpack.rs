@@ -1,0 +1,158 @@
+//! Bit-level packing for sparse index streams: indices of a length-d
+//! vector cost exactly `⌈log₂ d⌉` bits each on the wire, matching the
+//! accounting in [`crate::compress::index_bits`].
+
+/// MSB-first bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bits used in the last byte (0 means last byte is full / empty buf)
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `n` bits of `v` (n ≤ 64), MSB first.
+    pub fn push(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            let bit = ((v >> i) & 1) as u8;
+            if self.used == 0 {
+                self.buf.push(0);
+                self.used = 8;
+            }
+            let last = self.buf.last_mut().unwrap();
+            self.used -= 1;
+            *last |= bit << self.used;
+            if self.used == 0 {
+                // next push starts a fresh byte
+            }
+        }
+        if self.used == 0 {
+            self.used = 0;
+        }
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        if self.buf.is_empty() {
+            0
+        } else {
+            (self.buf.len() as u64) * 8 - self.used as u64
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// MSB-first bit reader.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `n` bits (n ≤ 64), MSB first. Reads past the end return 0 bits.
+    pub fn pull(&mut self, n: u32) -> u64 {
+        let mut v = 0u64;
+        for _ in 0..n {
+            let byte = (self.pos / 8) as usize;
+            let bit = 7 - (self.pos % 8) as u32;
+            let b = if byte < self.buf.len() {
+                (self.buf[byte] >> bit) & 1
+            } else {
+                0
+            };
+            v = (v << 1) | b as u64;
+            self.pos += 1;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn roundtrip_fixed_width() {
+        let mut w = BitWriter::new();
+        let vals = [0u64, 1, 5, 1023, 512, 7];
+        for v in vals {
+            w.push(v, 10);
+        }
+        assert_eq!(w.bit_len(), 60);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 8); // ceil(60/8)
+        let mut r = BitReader::new(&bytes);
+        for v in vals {
+            assert_eq!(r.pull(10), v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_width() {
+        let mut w = BitWriter::new();
+        w.push(1, 1);
+        w.push(0b101, 3);
+        w.push(0xDEADBEEF, 32);
+        w.push(0x1FFFFFFFFFFFFF, 53);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.pull(1), 1);
+        assert_eq!(r.pull(3), 0b101);
+        assert_eq!(r.pull(32), 0xDEADBEEF);
+        assert_eq!(r.pull(53), 0x1FFFFFFFFFFFFF);
+    }
+
+    #[test]
+    fn random_streams() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let n = 1 + rng.below(200);
+            let widths: Vec<u32> = (0..n).map(|_| 1 + rng.below(24) as u32).collect();
+            let vals: Vec<u64> = widths
+                .iter()
+                .map(|w| rng.next_u64() & ((1u64 << w) - 1))
+                .collect();
+            let mut bw = BitWriter::new();
+            for (v, w) in vals.iter().zip(&widths) {
+                bw.push(*v, *w);
+            }
+            let total: u64 = widths.iter().map(|w| *w as u64).sum();
+            assert_eq!(bw.bit_len(), total);
+            let bytes = bw.finish();
+            let mut br = BitReader::new(&bytes);
+            for (v, w) in vals.iter().zip(&widths) {
+                assert_eq!(br.pull(*w), *v);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_overread() {
+        let w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        let bytes = w.finish();
+        assert!(bytes.is_empty());
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.pull(13), 0);
+    }
+
+    #[test]
+    fn zero_width_push() {
+        let mut w = BitWriter::new();
+        w.push(0xFF, 0);
+        assert_eq!(w.bit_len(), 0);
+    }
+}

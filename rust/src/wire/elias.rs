@@ -1,0 +1,174 @@
+//! Elias universal codes (gamma / delta) for positive integers.
+//!
+//! QSGD's headline bit counts (Alistarh et al. 2017, §3.2) come from
+//! Elias-coding the integer quantization levels rather than fixed-width
+//! packing; this module supplies the exact variable-length costs so the
+//! QSGD comparator's wire accounting can use the paper-accurate codec
+//! (`Qsgd::elias_bits`), and provides a full encode/decode pair on top of
+//! [`super::bitpack`].
+
+use super::bitpack::{BitReader, BitWriter};
+
+/// Bits used by Elias-gamma for n ≥ 1: `2⌊log₂n⌋ + 1`.
+pub fn gamma_bits(n: u64) -> u64 {
+    debug_assert!(n >= 1);
+    2 * (63 - n.leading_zeros() as u64) + 1
+}
+
+/// Bits used by Elias-delta for n ≥ 1: `⌊log₂n⌋ + 2⌊log₂(⌊log₂n⌋+1)⌋ + 1`.
+pub fn delta_bits(n: u64) -> u64 {
+    debug_assert!(n >= 1);
+    let nbits = 64 - n.leading_zeros() as u64; // ⌊log₂n⌋+1
+    nbits - 1 + gamma_bits(nbits)
+}
+
+/// Append the Elias-gamma code of `n ≥ 1`.
+pub fn gamma_encode(w: &mut BitWriter, n: u64) {
+    debug_assert!(n >= 1);
+    let len = 64 - n.leading_zeros(); // bit length of n
+    w.push(0, len - 1); // len-1 zeros
+    w.push(n, len); // n itself (leading bit is the 1 separator)
+}
+
+/// Read one Elias-gamma code.
+pub fn gamma_decode(r: &mut BitReader) -> u64 {
+    let mut zeros = 0u32;
+    while r.pull(1) == 0 {
+        zeros += 1;
+        if zeros > 64 {
+            return 0; // corrupt / end of stream
+        }
+    }
+    // we've consumed the leading 1; read the remaining `zeros` bits
+    (1 << zeros) | r.pull(zeros)
+}
+
+/// Append the Elias-delta code of `n ≥ 1`.
+pub fn delta_encode(w: &mut BitWriter, n: u64) {
+    debug_assert!(n >= 1);
+    let len = 64 - n.leading_zeros(); // bit length of n
+    gamma_encode(w, len as u64);
+    if len > 1 {
+        w.push(n & !(1u64 << (len - 1)), len - 1); // n without its top bit
+    }
+}
+
+/// Read one Elias-delta code.
+pub fn delta_decode(r: &mut BitReader) -> u64 {
+    let len = gamma_decode(r);
+    if len == 0 {
+        return 0;
+    }
+    if len == 1 {
+        return 1;
+    }
+    (1 << (len - 1)) | r.pull(len as u32 - 1)
+}
+
+/// Exact Elias-gamma cost of a QSGD level vector (levels are ≥ 0;
+/// QSGD codes level u as u+1, plus one sign bit for nonzero levels —
+/// the convention in Alistarh et al. Appendix A).
+pub fn qsgd_stream_bits(levels: &[u32]) -> u64 {
+    levels
+        .iter()
+        .map(|&u| gamma_bits(u as u64 + 1) + if u > 0 { 1 } else { 0 })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_known_lengths() {
+        // classic table: 1→1 bit, 2..3→3, 4..7→5, 8..15→7
+        assert_eq!(gamma_bits(1), 1);
+        assert_eq!(gamma_bits(2), 3);
+        assert_eq!(gamma_bits(3), 3);
+        assert_eq!(gamma_bits(4), 5);
+        assert_eq!(gamma_bits(15), 7);
+        assert_eq!(gamma_bits(16), 9);
+    }
+
+    #[test]
+    fn delta_known_lengths() {
+        // 1→1, 2..3→4, 4..7→5, 8..15→8
+        assert_eq!(delta_bits(1), 1);
+        assert_eq!(delta_bits(2), 4);
+        assert_eq!(delta_bits(3), 4);
+        assert_eq!(delta_bits(4), 5);
+        assert_eq!(delta_bits(8), 8);
+    }
+
+    #[test]
+    fn gamma_roundtrip() {
+        let vals: Vec<u64> = vec![1, 2, 3, 4, 5, 7, 8, 100, 1023, 1024, 987654321];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            gamma_encode(&mut w, v);
+        }
+        let total: u64 = vals.iter().map(|&v| gamma_bits(v)).sum();
+        assert_eq!(w.bit_len(), total);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(gamma_decode(&mut r), v);
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let vals: Vec<u64> = vec![1, 2, 3, 4, 5, 16, 17, 255, 256, 65535, 1 << 40];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            delta_encode(&mut w, v);
+        }
+        let total: u64 = vals.iter().map(|&v| delta_bits(v)).sum();
+        assert_eq!(w.bit_len(), total);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(delta_decode(&mut r), v);
+        }
+    }
+
+    #[test]
+    fn random_roundtrip_both_codes() {
+        let mut rng = crate::tensor::Rng::new(7);
+        for _ in 0..50 {
+            let vals: Vec<u64> = (0..200).map(|_| 1 + (rng.next_u64() >> (rng.below(50) + 14))).collect();
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                gamma_encode(&mut w, v);
+                delta_encode(&mut w, v);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &v in &vals {
+                assert_eq!(gamma_decode(&mut r), v);
+                assert_eq!(delta_decode(&mut r), v);
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_stream_cost_sparse_is_cheap() {
+        // mostly-zero level vectors (the QSGD regime) cost ~1 bit/elem
+        let levels = vec![0u32; 1000];
+        assert_eq!(qsgd_stream_bits(&levels), 1000);
+        let mut l2 = levels.clone();
+        l2[3] = 1;
+        l2[500] = 3;
+        // u=1 → γ(2)+sign = 4 bits; u=3 → γ(4)+sign = 6 bits
+        assert_eq!(qsgd_stream_bits(&l2), 998 + 4 + 6);
+    }
+
+    #[test]
+    fn delta_never_longer_than_gamma_asymptotically() {
+        for n in [1u64, 2, 100, 10_000, 1 << 30, 1 << 50] {
+            if n >= 32 {
+                assert!(delta_bits(n) <= gamma_bits(n), "n={n}");
+            }
+        }
+    }
+}

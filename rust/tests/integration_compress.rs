@@ -1,0 +1,139 @@
+//! Cross-compressor integration: the contracts every compressor must
+//! satisfy jointly (decode dimension, wire-cost monotonicity, bias
+//! classification) plus compressor-vs-compressor orderings the paper
+//! relies on (biased compressors retain more energy than unbiased ones
+//! at equal budget).
+
+use mlmc_dist::compress::{
+    measure, Compressor, FixedPoint, FloatPoint, Identity, Qsgd, RandK, Rtn, SignSgd, STopK, TopK,
+};
+use mlmc_dist::tensor::{sq_norm, Rng};
+
+fn all_compressors(d: usize) -> Vec<Box<dyn Compressor>> {
+    let k = (d / 10).max(1);
+    vec![
+        Box::new(Identity),
+        Box::new(TopK { k }),
+        Box::new(STopK { s: 4, k: k / 4 + 1 }),
+        Box::new(RandK { k }),
+        Box::new(FixedPoint { f: 2 }),
+        Box::new(FloatPoint { f: 3 }),
+        Box::new(Rtn { level: 4 }),
+        Box::new(Qsgd { s: 2 }),
+        Box::new(SignSgd),
+    ]
+}
+
+fn gvec(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..d).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn decode_dimension_contract() {
+    let v = gvec(333, 1);
+    let mut rng = Rng::new(0);
+    for c in all_compressors(v.len()) {
+        let comp = c.compress(&v, &mut rng);
+        assert_eq!(comp.dim(), v.len(), "{}", c.name());
+        assert_eq!(comp.decode().len(), v.len(), "{}", c.name());
+        assert!(comp.decode().iter().all(|x| x.is_finite()), "{}", c.name());
+    }
+}
+
+#[test]
+fn unbiased_claims_are_true() {
+    let v = gvec(64, 2);
+    for c in all_compressors(v.len()) {
+        let stats = measure(c.as_ref(), &v, 4000, 7);
+        if c.unbiased() {
+            assert!(stats.rel_bias < 0.08, "{} claims unbiased, bias={}", c.name(), stats.rel_bias);
+        }
+    }
+}
+
+#[test]
+fn biased_compressors_satisfy_eq4_contraction() {
+    // Eq. (4): E||C(v) − v||² ≤ (1−α)||v||² with α > 0 — i.e. strictly
+    // contractive. Every biased compressor here must contract.
+    let v = gvec(256, 3);
+    let vn = sq_norm(&v);
+    let mut rng = Rng::new(1);
+    for c in all_compressors(v.len()) {
+        if c.unbiased() {
+            continue;
+        }
+        let dec = c.compress(&v, &mut rng).decode();
+        let dist = mlmc_dist::tensor::sq_dist(&dec, &v);
+        assert!(dist < vn, "{}: {dist} !< {vn}", c.name());
+    }
+}
+
+#[test]
+fn topk_retains_more_energy_than_randk() {
+    // the paper's central empirical motivation (§2.2): at equal budget k,
+    // Top-k retains the most energy of any k-sparse selection
+    let v = gvec(1000, 5);
+    let mut rng = Rng::new(2);
+    for k in [10usize, 50, 200] {
+        let top = TopK { k }.compress(&v, &mut rng).decode();
+        // rand-k unscaled retention: use the raw selection (undo the d/k scale)
+        let rnd = RandK { k }.compress(&v, &mut rng).decode();
+        let scale = 1000.0 / k as f32;
+        let rnd_raw: Vec<f32> = rnd.iter().map(|x| x / scale).collect();
+        assert!(sq_norm(&top) > sq_norm(&rnd_raw), "k={k}");
+    }
+}
+
+#[test]
+fn wire_cost_ordering_matches_aggressiveness() {
+    let v = gvec(4096, 7);
+    let bits = |c: &dyn Compressor| {
+        let mut rng = Rng::new(3);
+        c.compress(&v, &mut rng).wire_bits()
+    };
+    // identity is the most expensive
+    let full = bits(&Identity);
+    assert!(bits(&TopK { k: 40 }) < full / 10);
+    assert!(bits(&SignSgd) < full / 16);
+    assert!(bits(&FixedPoint { f: 1 }) < full / 10);
+    // finer quantization costs more
+    assert!(bits(&FixedPoint { f: 8 }) > bits(&FixedPoint { f: 1 }));
+    assert!(bits(&Rtn { level: 8 }) > bits(&Rtn { level: 2 }));
+    assert!(bits(&TopK { k: 100 }) > bits(&TopK { k: 10 }));
+}
+
+#[test]
+fn alpha_grows_with_budget() {
+    // Top-k distortion shrinks as k grows (α = k/d in Eq. (9))
+    let v = gvec(500, 11);
+    let vn = sq_norm(&v);
+    let mut rng = Rng::new(4);
+    let mut prev = f64::INFINITY;
+    for k in [5usize, 25, 125, 500] {
+        let dec = TopK { k }.compress(&v, &mut rng).decode();
+        let dist = mlmc_dist::tensor::sq_dist(&dec, &v) / vn;
+        assert!(dist <= prev + 1e-12);
+        assert!(dist <= 1.0 - k as f64 / 500.0 + 1e-9);
+        prev = dist;
+    }
+}
+
+#[test]
+fn compressors_handle_degenerate_inputs() {
+    let mut rng = Rng::new(5);
+    for c in all_compressors(16) {
+        // all-zero vector
+        let z = vec![0.0f32; 16];
+        let dec = c.compress(&z, &mut rng).decode();
+        assert!(dec.iter().all(|x| *x == 0.0), "{} on zeros", c.name());
+        // single element
+        let one = vec![2.5f32];
+        let dec = c.compress(&one, &mut rng).decode();
+        assert_eq!(dec.len(), 1, "{}", c.name());
+        // constant vector
+        let cst = vec![1.0f32; 16];
+        let dec = c.compress(&cst, &mut rng).decode();
+        assert!(dec.iter().all(|x| x.is_finite()), "{}", c.name());
+    }
+}

@@ -1,0 +1,136 @@
+//! End-to-end training integration over real artifacts: the full
+//! Alg. 1/2/3 loop (runtime + coordinator + data + metrics) on the
+//! figure-scale models. Tests no-op when artifacts are absent.
+
+use mlmc_dist::config::{Method, TrainConfig};
+use mlmc_dist::runtime::Runtime;
+use mlmc_dist::train;
+
+fn runtime() -> Option<Runtime> {
+    let dir = mlmc_dist::util::artifacts_dir();
+    if !dir.join("metadata.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime loads"))
+}
+
+fn base_cfg(model: &str, method: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = model.into();
+    cfg.set("method", method).unwrap();
+    cfg.workers = 2;
+    cfg.steps = 12;
+    cfg.lr = 0.1;
+    cfg.eval_every = 6;
+    cfg.eval_batches = 2;
+    cfg.frac_pm = 50;
+    cfg
+}
+
+#[test]
+fn sgd_loss_decreases_tx() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_cfg("tx-tiny", "sgd");
+    // plain SGD on this task sits near a chaotic lr edge at small step
+    // counts (see the EXPERIMENTS.md lr sweep); Adam descends robustly,
+    // and this test pins the *loop correctness*, not the tuning
+    cfg.steps = 80;
+    cfg.optimizer = "adam".into();
+    cfg.lr = 3e-3;
+    let r = train::run(&rt, &cfg).unwrap();
+    let first = r.curve.points[0].train_loss;
+    let last = r.curve.tail_loss(10);
+    assert!(last < first, "{last} !< {first}");
+    assert!(last < 0.3, "should be well below ln2, got {last}");
+    assert_eq!(r.curve.points.len(), 80);
+    assert!(r.total_bits > 0);
+}
+
+#[test]
+fn mlmc_topk_l1_stats_path_runs() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_cfg("tx-tiny", "mlmc-topk");
+    cfg.use_l1_stats = true;
+    let r = train::run(&rt, &cfg).unwrap();
+    assert!(r.codec_name.contains("l1stats"), "{}", r.codec_name);
+    assert!(r.curve.points.iter().all(|p| p.train_loss.is_finite()));
+    // MLMC ships ~one segment per step per worker: far fewer bits than SGD
+    let d = rt.meta.models["tx-tiny"].param_count as u64;
+    let sgd_bits = 32 * d * 2 * 12;
+    assert!(r.total_bits < sgd_bits / 5, "{} vs {}", r.total_bits, sgd_bits);
+}
+
+#[test]
+fn mlmc_rust_sort_path_matches_semantics() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_cfg("tx-tiny", "mlmc-topk");
+    cfg.use_l1_stats = false;
+    let r = train::run(&rt, &cfg).unwrap();
+    assert!(!r.codec_name.contains("l1stats"));
+    assert!(r.curve.points.iter().all(|p| p.train_loss.is_finite()));
+}
+
+#[test]
+fn ef21_sgdm_runs_with_accumulate_agg() {
+    let Some(rt) = runtime() else { return };
+    let cfg = base_cfg("tx-tiny", "ef21-sgdm");
+    let r = train::run(&rt, &cfg).unwrap();
+    assert!(r.curve.final_loss().is_finite());
+}
+
+#[test]
+fn cnn_model_trains() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_cfg("cnn-tiny", "mlmc-fxp");
+    cfg.steps = 15;
+    cfg.lr = 0.05;
+    let r = train::run(&rt, &cfg).unwrap();
+    assert!(r.curve.final_loss().is_finite());
+    // fixed-point MLMC: ~2 bits/elem vs 32 uncompressed
+    let d = rt.meta.models["cnn-tiny"].param_count as u64;
+    let per_msg = r.total_bits / (15 * 2);
+    assert!(per_msg < 4 * d, "per-message bits {per_msg} vs d={d}");
+}
+
+#[test]
+fn heterogeneous_sharding_runs() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_cfg("tx-tiny", "mlmc-topk");
+    cfg.dirichlet_alpha = 0.1;
+    cfg.workers = 4;
+    cfg.steps = 8;
+    let r = train::run(&rt, &cfg).unwrap();
+    assert!(r.curve.final_loss().is_finite());
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(rt) = runtime() else { return };
+    let cfg = base_cfg("tx-tiny", "mlmc-topk");
+    let a = train::run(&rt, &cfg).unwrap();
+    let b = train::run(&rt, &cfg).unwrap();
+    assert_eq!(a.total_bits, b.total_bits);
+    assert_eq!(a.final_params, b.final_params);
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = 99;
+    let c = train::run(&rt, &cfg2).unwrap();
+    assert_ne!(a.final_params, c.final_params);
+}
+
+#[test]
+fn every_method_trains_a_few_steps() {
+    let Some(rt) = runtime() else { return };
+    for name in Method::all_names() {
+        let mut cfg = base_cfg("tx-tiny", name);
+        cfg.steps = 3;
+        cfg.eval_every = 0;
+        cfg.lr = 0.05;
+        let r = train::run(&rt, &cfg)
+            .unwrap_or_else(|e| panic!("method {name} failed: {e}"));
+        assert!(
+            r.curve.points.iter().all(|p| p.train_loss.is_finite()),
+            "method {name} produced non-finite loss"
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Property-based invariants (in-tree harness, `testing::forall_vec`):
+//! randomized vectors — including heavy-tailed ones — against the
+//! paper's algebraic invariants. Each property runs on hundreds of
+//! random shapes; failures shrink and report the minimal vector.
+
+use mlmc_dist::compress::{Compressor, FixedPoint, RandK, Rtn, SignSgd, TopK};
+use mlmc_dist::mlmc::{MlFixedPoint, MlRtn, MlSTopK, Multilevel};
+use mlmc_dist::tensor::{max_abs, sq_dist, sq_norm, Rng};
+use mlmc_dist::testing::forall_vec;
+
+#[test]
+fn prop_topk_contraction() {
+    // Eq. (9): ‖C(v) − v‖² ≤ (1 − k/d)‖v‖² for every v and k
+    forall_vec("topk-contraction", 1, 300, 400, |v| {
+        let d = v.len();
+        let mut rng = Rng::new(0);
+        for k in [1, d / 7 + 1, d / 2 + 1, d] {
+            let dec = TopK { k }.compress(v, &mut rng).decode();
+            let lhs = sq_dist(&dec, v);
+            let bound = (1.0 - k.min(d) as f64 / d as f64) * sq_norm(v);
+            if lhs > bound + 1e-6 * sq_norm(v).max(1.0) {
+                return Err(format!("k={k}: {lhs} > {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_telescoping_all_families() {
+    forall_vec("mlmc-telescoping", 2, 150, 250, |v| {
+        let families: Vec<Box<dyn Multilevel>> = vec![
+            Box::new(MlSTopK { s: v.len() / 9 + 1 }),
+            Box::new(MlFixedPoint::default()),
+            Box::new(MlRtn { max_grid_level: 8 }),
+        ];
+        for ml in &families {
+            let ctx = ml.prepare(v);
+            let mut acc = vec![0.0f32; v.len()];
+            for l in 1..=ctx.levels() {
+                ctx.residual(l).add_into(&mut acc, 1.0);
+            }
+            let err = sq_dist(&acc, v);
+            if err > 1e-7 * sq_norm(v).max(1e-12) + 1e-10 {
+                return Err(format!("{}: telescoping err {err}", ml.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deltas_nonnegative_and_match_residuals() {
+    forall_vec("mlmc-deltas", 3, 100, 200, |v| {
+        let ml = MlSTopK { s: v.len() / 5 + 1 };
+        let ctx = ml.prepare(v);
+        let deltas = ctx.deltas();
+        for (i, d) in deltas.iter().enumerate() {
+            if *d < 0.0 || !d.is_finite() {
+                return Err(format!("delta[{i}] = {d}"));
+            }
+            let rn = sq_norm(&ctx.residual(i + 1).decode()).sqrt();
+            if (rn - *d as f64).abs() > 1e-3 * (1.0 + rn) {
+                return Err(format!("delta[{i}] {d} vs residual norm {rn}"));
+            }
+        }
+        // sorted segments ⇒ non-increasing deltas
+        for w in deltas.windows(2) {
+            if w[1] > w[0] * (1.0 + 1e-4) + 1e-6 {
+                return Err(format!("deltas not monotone: {w:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizers_bounded_distortion() {
+    forall_vec("quantizer-distortion", 4, 200, 300, |v| {
+        let mut rng = Rng::new(0);
+        let scale = max_abs(v);
+        // fixed-point: per-element error ≤ 2^-f · scale (+ fp eps)
+        let dec = FixedPoint { f: 3 }.compress(v, &mut rng).decode();
+        for (a, b) in dec.iter().zip(v) {
+            if (a - b).abs() > scale / 8.0 + 1e-5 * scale.max(1.0) {
+                return Err(format!("fxp err {} > {}", (a - b).abs(), scale / 8.0));
+            }
+        }
+        // RTN: in-range error ≤ δ/2
+        let dec = Rtn { level: 5 }.compress(v, &mut rng).decode();
+        let half = mlmc_dist::compress::rtn::Rtn::delta(5, scale) / 2.0;
+        for (a, b) in dec.iter().zip(v) {
+            if (a - b).abs() > half + 1e-5 * scale.max(1.0) {
+                return Err(format!("rtn err {} > {half}", (a - b).abs()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sign_and_randk_basics() {
+    forall_vec("sign-randk", 5, 200, 300, |v| {
+        let mut rng = Rng::new(0);
+        // sign: all outputs share one magnitude
+        let dec = SignSgd.compress(v, &mut rng).decode();
+        let mags: Vec<f32> = dec.iter().map(|x| x.abs()).collect();
+        if let Some(first) = mags.first() {
+            if mags.iter().any(|m| (m - first).abs() > 1e-6 * (1.0 + first)) {
+                return Err("sign magnitudes differ".into());
+            }
+        }
+        // rand-k: exactly min(k,d) nonzero slots at most
+        let k = v.len() / 3 + 1;
+        let dec = RandK { k }.compress(v, &mut rng).decode();
+        let nz = dec.iter().filter(|x| **x != 0.0).count();
+        if nz > k {
+            return Err(format!("randk produced {nz} > k={k} nonzeros"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_random_payloads() {
+    forall_vec("wire-roundtrip", 6, 150, 500, |v| {
+        let mut rng = Rng::new(0);
+        for c in [
+            &TopK { k: v.len() / 4 + 1 } as &dyn Compressor,
+            &FixedPoint { f: 2 },
+            &SignSgd,
+        ] {
+            let comp = c.compress(v, &mut rng);
+            let msg = mlmc_dist::wire::WorkerMsg { step: 0, worker: 0, comp };
+            let got = mlmc_dist::wire::decode(&mlmc_dist::wire::encode(&msg));
+            if got.comp.decode() != msg.comp.decode() {
+                return Err(format!("{} roundtrip mismatch", c.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_server_round_is_linear() {
+    // apply_round(msgs) with SGD == x − η · mean(decoded) exactly
+    use mlmc_dist::coordinator::Server;
+    use mlmc_dist::ef::AggKind;
+    forall_vec("server-linearity", 7, 100, 100, |v| {
+        let d = v.len();
+        let mut rng = Rng::new(1);
+        let m = 1 + rng.below(5);
+        let msgs: Vec<_> = (0..m)
+            .map(|_| {
+                let g: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                mlmc_dist::compress::Compressed::dense(g)
+            })
+            .collect();
+        let mut server = Server::new(
+            v.to_vec(),
+            Box::new(mlmc_dist::optim::Sgd { lr: 0.25 }),
+            AggKind::Fresh,
+        );
+        server.apply_round(&msgs);
+        let mut want = v.to_vec();
+        for msg in &msgs {
+            msg.add_into(&mut want, -0.25 / m as f32);
+        }
+        if sq_dist(&server.params, &want) > 1e-10 {
+            return Err("server round not linear".into());
+        }
+        Ok(())
+    });
+}
