@@ -1,0 +1,152 @@
+//! Sharded pipeline benchmarks: single-thread vs multi-thread round
+//! throughput for the compressor path ([`ParCompressor`]) and the
+//! leader aggregation path (`Server::apply_round`) on a >= 1M-dim
+//! gradient — the tentpole perf row the repo tracks per commit.
+//!
+//! Emits `results/bench_sharded.csv` (benchlib) plus
+//! `results/BENCH_sharded.json`, the machine-readable record CI uploads
+//! so the perf trajectory is visible from this PR onward.
+//!
+//! Smoke mode (CI): `MLMC_BENCH_MS=60 cargo bench -p mlmc-dist --bench sharded`.
+//! `SHARDED_BENCH_D` overrides the gradient dimension.
+
+use mlmc_dist::benchlib::{black_box, Bench, Stats};
+use mlmc_dist::compress::{Compressed, Compressor, ParCompressor, TopK};
+use mlmc_dist::coordinator::Server;
+use mlmc_dist::ef::AggKind;
+use mlmc_dist::mlmc::{MlSTopK, Mlmc, Schedule};
+use mlmc_dist::optim::Sgd;
+use mlmc_dist::tensor::Rng;
+
+struct Case {
+    stats: Stats,
+    threads: usize,
+    path: &'static str,
+}
+
+fn main() {
+    let d: usize = std::env::var("SHARDED_BENCH_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let shard = 65_536usize;
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut thread_counts = vec![1usize, 2, 4, hw];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    let mut rng = Rng::new(1);
+    let mut grad = vec![0.0f32; d];
+    rng.fill_normal(&mut grad, 1.0);
+
+    let mut b = Bench::new("sharded");
+    println!("d={d} shard_size={shard} hw_threads={hw}");
+    let mut cases: Vec<Case> = Vec::new();
+
+    // ---- compressor path ------------------------------------------------
+    let k_per_shard = (shard / 100).max(1); // 1% budget per shard
+    for &t in &thread_counts {
+        let par = ParCompressor::new(Box::new(TopK { k: k_per_shard }), shard, t);
+        let mut crng = Rng::new(7);
+        let s = b.case_elems(&format!("compress_topk1pc d={d} t={t}"), d as u64, || {
+            black_box(par.compress(&grad, &mut crng).wire_bits())
+        });
+        cases.push(Case { stats: s.clone(), threads: t, path: "compress_topk" });
+    }
+    for &t in &thread_counts {
+        let par = ParCompressor::new(
+            Box::new(Mlmc::new(Box::new(MlSTopK { s: k_per_shard }), Schedule::Adaptive)),
+            shard,
+            t,
+        );
+        let mut crng = Rng::new(7);
+        let s = b.case_elems(&format!("compress_mlmc_stopk d={d} t={t}"), d as u64, || {
+            black_box(par.compress(&grad, &mut crng).wire_bits())
+        });
+        cases.push(Case { stats: s.clone(), threads: t, path: "compress_mlmc" });
+    }
+
+    // ---- leader aggregation path ----------------------------------------
+    let m = 8usize;
+    let msgs: Vec<Compressed> = (0..m)
+        .map(|w| {
+            let par = ParCompressor::new(Box::new(TopK { k: k_per_shard }), shard, hw);
+            let mut wrng = Rng::for_stream(9, w as u64, 0);
+            par.compress(&grad, &mut wrng)
+        })
+        .collect();
+    for &t in &thread_counts {
+        let mut server =
+            Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.01 }), AggKind::Fresh).with_threads(t);
+        let s = b.case_elems(&format!("apply_round M={m} d={d} t={t}"), (m * d) as u64, || {
+            black_box(server.apply_round(&msgs))
+        });
+        cases.push(Case { stats: s.clone(), threads: t, path: "round_sharded" });
+    }
+
+    // ---- end-to-end round: M compressions + one aggregation -------------
+    for &t in &thread_counts {
+        let encoders: Vec<ParCompressor> = (0..m)
+            .map(|_| ParCompressor::new(Box::new(TopK { k: k_per_shard }), shard, t))
+            .collect();
+        let mut server =
+            Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.01 }), AggKind::Fresh).with_threads(t);
+        let mut wrng = Rng::new(11);
+        let s = b.case_elems(&format!("e2e_round M={m} d={d} t={t}"), (m * d) as u64, || {
+            let round: Vec<Compressed> =
+                encoders.iter().map(|e| e.compress(&grad, &mut wrng)).collect();
+            black_box(server.apply_round(&round))
+        });
+        cases.push(Case { stats: s.clone(), threads: t, path: "e2e_round" });
+    }
+
+    b.write_csv();
+    write_json(d, shard, hw, &thread_counts, &cases);
+}
+
+fn write_json(d: usize, shard: usize, hw: usize, threads: &[usize], cases: &[Case]) {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"suite\": \"sharded\",");
+    let _ = writeln!(s, "  \"d\": {d},");
+    let _ = writeln!(s, "  \"shard_size\": {shard},");
+    let _ = writeln!(s, "  \"hw_threads\": {hw},");
+    let _ = writeln!(s, "  \"thread_counts\": {threads:?},");
+    s.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let gelem = c.stats.throughput_gelem_s().unwrap_or(0.0);
+        let comma = if i + 1 < cases.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"name\": {:?}, \"path\": {:?}, \"threads\": {}, \"mean_ns\": {:.1}, \
+             \"gelem_per_s\": {:.4}}}{}",
+            c.stats.name, c.path, c.threads, c.stats.mean_ns, gelem, comma
+        );
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"speedup_vs_1t\": {\n");
+    let paths = ["compress_topk", "compress_mlmc", "round_sharded", "e2e_round"];
+    for (i, p) in paths.iter().enumerate() {
+        let base = cases.iter().find(|c| c.path == *p && c.threads == 1).map(|c| c.stats.mean_ns);
+        // best multi-thread run only, so a slowdown reports < 1.0 instead
+        // of being masked by the single-thread baseline itself
+        let best = cases
+            .iter()
+            .filter(|c| c.path == *p && c.threads > 1)
+            .map(|c| c.stats.mean_ns)
+            .fold(f64::INFINITY, f64::min);
+        let sp = match base {
+            Some(b) if best > 0.0 && best.is_finite() => b / best,
+            _ => 0.0,
+        };
+        let comma = if i + 1 < paths.len() { "," } else { "" };
+        let _ = writeln!(s, "    {p:?}: {sp:.3}{comma}");
+    }
+    s.push_str("  }\n}\n");
+    let path = mlmc_dist::util::results_dir().join("BENCH_sharded.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

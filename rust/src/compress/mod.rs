@@ -12,6 +12,7 @@
 
 pub mod bitwise;
 pub mod natural;
+pub mod par;
 pub mod qsgd;
 pub mod rtn;
 pub mod sign;
@@ -19,6 +20,7 @@ pub mod sparsify;
 
 pub use bitwise::{FixedPoint, FloatPoint};
 pub use natural::Natural;
+pub use par::ParCompressor;
 pub use qsgd::Qsgd;
 pub use rtn::Rtn;
 pub use sign::SignSgd;
@@ -50,6 +52,26 @@ pub enum Payload {
         bits_per_elem: f64,
         overhead_bits: u64,
     },
+    /// Concatenation of independently compressed contiguous shards
+    /// (the sharded pipeline — [`ParCompressor`]). Shard `i` covers the
+    /// global index range `[Σ_{j<i} d_j, Σ_{j<=i} d_j)`. Framing
+    /// overhead is accounted in the enclosing [`Compressed::extra_bits`]
+    /// via [`shard_framing_bits`]; see [`Compressed::sharded`]. Shards
+    /// must be flat payloads — nesting is not produced by any encoder
+    /// and the wire decoder rejects nested sharded frames.
+    Sharded(Vec<Payload>),
+}
+
+/// Accounted framing overhead of a sharded message — an accounting
+/// *convention*, not a byte-exact transport size: one 32-bit shard
+/// count plus a 32-bit per-shard allowance for the shard's
+/// self-description. The transport ([`crate::wire`]) ships whatever
+/// per-kind headers each shard needs (a Sparse shard carries d/k/len
+/// fields, a Quantized shard its scale metadata); headers beyond this
+/// allowance are excluded from accounting, exactly like the unsharded
+/// convention where top-level kind/dim headers are never accounted.
+pub fn shard_framing_bits(n_shards: usize) -> u64 {
+    32 + 32 * n_shards as u64
 }
 
 impl Payload {
@@ -59,6 +81,7 @@ impl Payload {
             Payload::Dense(v) => v.len(),
             Payload::Sparse { d, .. } => *d as usize,
             Payload::Quantized { val, .. } => val.len(),
+            Payload::Sharded(parts) => parts.iter().map(Payload::dim).sum(),
         }
     }
 
@@ -72,6 +95,7 @@ impl Payload {
             Payload::Quantized { val, bits_per_elem, overhead_bits } => {
                 (bits_per_elem * val.len() as f64).ceil() as u64 + overhead_bits
             }
+            Payload::Sharded(parts) => parts.iter().map(Payload::wire_bits).sum(),
         }
     }
 
@@ -87,6 +111,13 @@ impl Payload {
                 out
             }
             Payload::Quantized { val, .. } => val.clone(),
+            Payload::Sharded(parts) => {
+                let mut out = Vec::with_capacity(self.dim());
+                for p in parts {
+                    out.extend(p.decode());
+                }
+                out
+            }
         }
     }
 
@@ -105,6 +136,55 @@ impl Payload {
                     acc[*i as usize] += scale * x;
                 }
             }
+            Payload::Sharded(parts) => {
+                debug_assert_eq!(acc.len(), self.dim());
+                let mut off = 0;
+                for p in parts {
+                    let pd = p.dim();
+                    p.add_into(&mut acc[off..off + pd], scale);
+                    off += pd;
+                }
+            }
+        }
+    }
+
+    /// `acc += scale * decode(self)[start..start + acc.len()]` — the
+    /// range-restricted form of [`Payload::add_into`] used by the
+    /// sharded server reduction, where each thread owns a contiguous
+    /// range of the accumulator. `acc` covers the payload's coordinates
+    /// `[start, start + acc.len())`. Per coordinate, contributions are
+    /// applied in exactly the order [`Payload::add_into`] applies them,
+    /// so a range-partitioned reduction is bit-identical to the serial
+    /// full-vector one.
+    pub fn add_range_into(&self, acc: &mut [f32], scale: f32, start: usize) {
+        let end = start + acc.len();
+        debug_assert!(end <= self.dim());
+        match self {
+            Payload::Dense(v) | Payload::Quantized { val: v, .. } => {
+                for (a, x) in acc.iter_mut().zip(&v[start..end]) {
+                    *a += scale * x;
+                }
+            }
+            Payload::Sparse { idx, val, .. } => {
+                for (i, x) in idx.iter().zip(val) {
+                    let i = *i as usize;
+                    if (start..end).contains(&i) {
+                        acc[i - start] += scale * x;
+                    }
+                }
+            }
+            Payload::Sharded(parts) => {
+                let mut off = 0;
+                for p in parts {
+                    let pd = p.dim();
+                    let lo = off.max(start);
+                    let hi = (off + pd).min(end);
+                    if lo < hi {
+                        p.add_range_into(&mut acc[lo - start..hi - start], scale, lo - off);
+                    }
+                    off += pd;
+                }
+            }
         }
     }
 
@@ -119,6 +199,11 @@ impl Payload {
             Payload::Sparse { val, .. } => {
                 for x in val {
                     *x *= s;
+                }
+            }
+            Payload::Sharded(parts) => {
+                for p in parts {
+                    p.scale_values(s);
                 }
             }
         }
@@ -136,6 +221,18 @@ pub struct Compressed {
 impl Compressed {
     pub fn dense(v: Vec<f32>) -> Self {
         Compressed { payload: Payload::Dense(v), extra_bits: 0 }
+    }
+
+    /// Assemble per-shard messages into one framed multi-shard message:
+    /// per-shard `extra_bits` are accumulated into the container's,
+    /// plus the shard framing overhead ([`shard_framing_bits`]).
+    pub fn sharded(parts: Vec<Compressed>) -> Self {
+        let extra: u64 =
+            parts.iter().map(|c| c.extra_bits).sum::<u64>() + shard_framing_bits(parts.len());
+        Compressed {
+            payload: Payload::Sharded(parts.into_iter().map(|c| c.payload).collect()),
+            extra_bits: extra,
+        }
     }
 
     pub fn dim(&self) -> usize {
@@ -255,6 +352,78 @@ mod tests {
         q.scale_values(3.0);
         assert_eq!(q.decode(), vec![3.0, 6.0]);
         assert_eq!(q.wire_bits(), 4 + 8);
+    }
+
+    #[test]
+    fn payload_sharded_concatenates() {
+        let p = Payload::Sharded(vec![
+            Payload::Dense(vec![1.0, 2.0]),
+            Payload::Sparse { d: 3, idx: vec![2], val: vec![5.0] },
+            Payload::Quantized { val: vec![-1.0], bits_per_elem: 4.0, overhead_bits: 8 },
+        ]);
+        assert_eq!(p.dim(), 6);
+        assert_eq!(p.decode(), vec![1.0, 2.0, 0.0, 0.0, 5.0, -1.0]);
+        assert_eq!(p.wire_bits(), 64 + (32 + 2) + (4 + 8));
+        let mut acc = vec![0.0; 6];
+        p.add_into(&mut acc, 2.0);
+        assert_eq!(acc, vec![2.0, 4.0, 0.0, 0.0, 10.0, -2.0]);
+        let mut q = p.clone();
+        q.scale_values(0.5);
+        assert_eq!(q.decode(), vec![0.5, 1.0, 0.0, 0.0, 2.5, -0.5]);
+    }
+
+    #[test]
+    fn add_range_into_matches_add_into_on_every_split() {
+        let p = Payload::Sharded(vec![
+            Payload::Sparse { d: 4, idx: vec![0, 3], val: vec![1.0, -2.0] },
+            Payload::Dense(vec![3.0, 4.0, 5.0]),
+            Payload::Sparse { d: 2, idx: vec![1], val: vec![7.0] },
+        ]);
+        let d = p.dim();
+        let mut want = vec![0.5; d];
+        p.add_into(&mut want, 1.5);
+        for chunk in 1..=d {
+            let mut got = vec![0.5; d];
+            let mut start = 0;
+            while start < d {
+                let end = (start + chunk).min(d);
+                p.add_range_into(&mut got[start..end], 1.5, start);
+                start = end;
+            }
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+        // also exercise the flat variants through the range path
+        for flat in [
+            Payload::Dense(vec![1.0, -1.0, 2.0, 0.5, 9.0]),
+            Payload::Sparse { d: 5, idx: vec![4, 0], val: vec![2.0, 3.0] },
+        ] {
+            let mut want = vec![0.0; 5];
+            flat.add_into(&mut want, 2.0);
+            let mut got = vec![0.0; 5];
+            flat.add_range_into(&mut got[0..2], 2.0, 0);
+            flat.add_range_into(&mut got[2..5], 2.0, 2);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn compressed_sharded_accounting() {
+        let parts = vec![
+            Compressed { payload: Payload::Dense(vec![1.0, 2.0]), extra_bits: 3 },
+            Compressed {
+                payload: Payload::Sparse { d: 8, idx: vec![1], val: vec![4.0] },
+                extra_bits: 5,
+            },
+        ];
+        let part_bits: u64 = parts.iter().map(Compressed::wire_bits).sum();
+        let c = Compressed::sharded(parts);
+        assert_eq!(c.dim(), 10);
+        assert_eq!(c.wire_bits(), part_bits + shard_framing_bits(2));
+        assert_eq!(c.extra_bits, 3 + 5 + shard_framing_bits(2));
+        // empty message is well-formed
+        let e = Compressed::sharded(Vec::new());
+        assert_eq!(e.dim(), 0);
+        assert_eq!(e.wire_bits(), shard_framing_bits(0));
     }
 
     #[test]

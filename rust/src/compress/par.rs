@@ -1,0 +1,155 @@
+//! Sharded, multi-threaded compression: run any [`Compressor`] per-shard
+//! across a scoped thread pool.
+//!
+//! [`ParCompressor`] splits the gradient into [`ShardSpec`] chunks,
+//! derives one deterministic RNG stream per shard
+//! ([`Rng::shard_streams`] — the `(seed, worker, step, shard)` stream
+//! contract), compresses every shard independently, and reassembles the
+//! per-shard messages into a single framed [`super::Payload::Sharded`]
+//! message via [`Compressed::sharded`].
+//!
+//! Because shard boundaries and per-shard RNG streams are pure functions
+//! of the input — never of the thread schedule — the output is
+//! **bit-identical for any thread count** (property-tested in
+//! `tests/prop_invariants.rs`).
+//!
+//! Semantics note: per-shard compression is *not* the same operator as
+//! whole-vector compression. Per-shard Top-k keeps k coordinates in
+//! every shard — a block-compression scheme in the sense of the
+//! shifted/block compression literature (Shulgin & Richtárik 2022) —
+//! and quantizers compute their scales per shard. What *is* preserved
+//! is unbiasedness: if the inner compressor is unbiased on each shard
+//! (Eq. (3), or MLMC's Lemma 3.2 per shard), the concatenated estimate
+//! is unbiased on the full vector, since expectation acts coordinatewise.
+
+use super::{Compressed, Compressor};
+use crate::tensor::{Rng, ShardSpec};
+
+/// Adapter that runs `inner` independently on every shard of the input.
+pub struct ParCompressor {
+    inner: Box<dyn Compressor>,
+    shard_size: usize,
+    threads: usize,
+}
+
+impl ParCompressor {
+    /// `shard_size` and `threads` are clamped to `>= 1`.
+    pub fn new(inner: Box<dyn Compressor>, shard_size: usize, threads: usize) -> Self {
+        ParCompressor { inner, shard_size: shard_size.max(1), threads: threads.max(1) }
+    }
+
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The shard geometry this compressor applies to a length-`d` input.
+    pub fn spec(&self, d: usize) -> ShardSpec {
+        ShardSpec::new(d, self.shard_size)
+    }
+}
+
+impl Compressor for ParCompressor {
+    fn name(&self) -> String {
+        format!("sharded[{} s={} t={}]", self.inner.name(), self.shard_size, self.threads)
+    }
+
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        let spec = self.spec(v.len());
+        let n = spec.num_shards();
+        let mut rngs = rng.shard_streams(n);
+        let mut parts: Vec<Option<Compressed>> = vec![None; n];
+        let threads = self.threads.min(n.max(1));
+        if threads <= 1 {
+            for (i, (slot, r)) in parts.iter_mut().zip(rngs.iter_mut()).enumerate() {
+                *slot = Some(self.inner.compress(&v[spec.range(i)], r));
+            }
+        } else {
+            let chunk = n.div_ceil(threads);
+            let inner: &dyn Compressor = &*self.inner;
+            std::thread::scope(|s| {
+                for ((t, slots), shard_rngs) in
+                    parts.chunks_mut(chunk).enumerate().zip(rngs.chunks_mut(chunk))
+                {
+                    s.spawn(move || {
+                        for (j, (slot, r)) in
+                            slots.iter_mut().zip(shard_rngs.iter_mut()).enumerate()
+                        {
+                            let i = t * chunk + j;
+                            *slot = Some(inner.compress(&v[spec.range(i)], r));
+                        }
+                    });
+                }
+            });
+        }
+        Compressed::sharded(parts.into_iter().map(|p| p.expect("all shards compressed")).collect())
+    }
+
+    fn unbiased(&self) -> bool {
+        self.inner.unbiased()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{shard_framing_bits, Identity, TopK};
+
+    fn grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn identity_sharded_is_exact() {
+        let v = grad(103, 1);
+        let par = ParCompressor::new(Box::new(Identity), 16, 3);
+        let mut rng = Rng::new(0);
+        let c = par.compress(&v, &mut rng);
+        assert_eq!(c.decode(), v);
+        assert_eq!(c.dim(), v.len());
+        // 7 shards of dense f32 + framing
+        assert_eq!(c.wire_bits(), 32 * 103 + shard_framing_bits(7));
+        assert!(par.unbiased());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let v = grad(501, 2);
+        for shard in [1usize, 7, 64, 501, 1000] {
+            let mut decs: Vec<Vec<f32>> = Vec::new();
+            for threads in [1usize, 2, 5] {
+                let par = ParCompressor::new(Box::new(TopK { k: 3 }), shard, threads);
+                let mut rng = Rng::new(42);
+                decs.push(par.compress(&v, &mut rng).decode());
+            }
+            for d in &decs[1..] {
+                assert_eq!(&decs[0], d, "shard={shard}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_shard_topk_keeps_k_per_shard() {
+        let v = grad(100, 3);
+        let par = ParCompressor::new(Box::new(TopK { k: 2 }), 25, 2);
+        let mut rng = Rng::new(0);
+        let dec = par.compress(&v, &mut rng).decode();
+        for (s, range) in par.spec(v.len()).ranges().enumerate() {
+            let nz = dec[range].iter().filter(|x| **x != 0.0).count();
+            assert_eq!(nz, 2, "shard {s}");
+        }
+    }
+
+    #[test]
+    fn empty_input_yields_empty_message() {
+        let par = ParCompressor::new(Box::new(Identity), 8, 4);
+        let mut rng = Rng::new(0);
+        let c = par.compress(&[], &mut rng);
+        assert_eq!(c.dim(), 0);
+        assert!(c.decode().is_empty());
+    }
+}

@@ -125,6 +125,13 @@ pub struct TrainConfig {
     pub dirichlet_alpha: f32,
     /// use the L1 segstats artifact for adaptive MLMC (vs rust-side sort)
     pub use_l1_stats: bool,
+    /// elements per shard for the sharded compression/aggregation
+    /// pipeline (0 = unsharded single-message path)
+    pub shard_size: usize,
+    /// worker threads for per-shard compression and the server-side
+    /// sharded reduction (1 = serial; results are bit-identical across
+    /// thread counts)
+    pub threads: usize,
     /// run tag for logs/CSV
     pub tag: String,
 }
@@ -147,6 +154,8 @@ impl Default for TrainConfig {
             momentum_beta: 0.1,
             dirichlet_alpha: 0.0,
             use_l1_stats: true,
+            shard_size: 0,
+            threads: 1,
             tag: String::new(),
         }
     }
@@ -177,6 +186,8 @@ impl TrainConfig {
             "momentum_beta" => self.momentum_beta = p(val, key)?,
             "dirichlet_alpha" => self.dirichlet_alpha = p(val, key)?,
             "use_l1_stats" => self.use_l1_stats = p(val, key)?,
+            "shard_size" => self.shard_size = p(val, key)?,
+            "threads" => self.threads = p(val, key)?,
             "tag" => self.tag = val.to_string(),
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -223,6 +234,28 @@ impl TrainConfig {
         }
         if !(0.0..=1.0).contains(&self.momentum_beta) {
             return Err("momentum_beta must be in [0,1]".into());
+        }
+        if self.threads == 0 {
+            return Err("threads must be >= 1".into());
+        }
+        // per-shard sparsification budgets floor at k = 1; a shard so
+        // small that round(shard_size * frac_pm / 1000) == 0 would
+        // silently inflate the keep fraction on every shard
+        let k_budgeted = matches!(
+            self.method,
+            Method::TopK
+                | Method::RandK
+                | Method::Ef14
+                | Method::Ef21Sgdm
+                | Method::MlmcTopK
+                | Method::MlmcTopKStatic
+        );
+        if k_budgeted && self.shard_size > 0 && self.shard_size as u64 * self.frac_pm as u64 < 500 {
+            return Err(format!(
+                "shard_size {} too small for frac_pm {}: per-shard k floors to 1, \
+                 inflating the keep fraction (need shard_size * frac_pm >= 500)",
+                self.shard_size, self.frac_pm
+            ));
         }
         Ok(())
     }
@@ -276,6 +309,29 @@ mod tests {
         let mut c = TrainConfig::default();
         c.transport = "carrier-pigeon".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn shard_knobs_parse_and_validate() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.shard_size, 0);
+        assert_eq!(c.threads, 1);
+        c.set("shard_size", "65536").unwrap();
+        c.set("threads", "8").unwrap();
+        assert_eq!(c.shard_size, 65536);
+        assert_eq!(c.threads, 8);
+        c.validate().unwrap();
+        c.threads = 0;
+        assert!(c.validate().is_err());
+        // floored per-shard budget is rejected for k-budgeted methods…
+        let mut c = TrainConfig::default();
+        c.set("method", "topk").unwrap();
+        c.set("frac_pm", "1").unwrap();
+        c.set("shard_size", "64").unwrap();
+        assert!(c.validate().is_err());
+        // …but not for quantizers, which carry no k budget
+        c.set("method", "rtn").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]

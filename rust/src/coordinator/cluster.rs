@@ -82,7 +82,8 @@ pub fn leader_main(args: &[String]) -> Result<()> {
         model.init_params(cfg.seed),
         crate::optim::build(&cfg.optimizer, cfg.lr, model.param_count),
         agg_kind(&cfg.method),
-    );
+    )
+    .with_threads(cfg.threads);
     for step in 0..cfg.steps {
         leader.broadcast(&Frame::params(params_to_bytes(&server.params)))?;
         let frames = leader.gather()?;

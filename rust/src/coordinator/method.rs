@@ -1,7 +1,9 @@
 //! Method registry: instantiate every comparator of the paper's
 //! experiments (§5, App. G) from a [`TrainConfig`].
 
-use crate::compress::{FixedPoint, Identity, Qsgd, RandK, Rtn, SignSgd, TopK};
+use crate::compress::{
+    Compressor, FixedPoint, Identity, ParCompressor, Qsgd, RandK, Rtn, SignSgd, TopK,
+};
 use crate::config::{Method, TrainConfig};
 use crate::ef::{AggKind, Ef14, Ef21Sgdm, GradientEncoder, Plain};
 use crate::mlmc::{MlFixedPoint, MlFloatPoint, MlRtn, MlSTopK, Mlmc, Schedule};
@@ -22,44 +24,84 @@ pub fn qsgd_s(quant_bits: usize) -> u32 {
     }
 }
 
+/// Effective per-shard length for a length-`d` gradient — the single
+/// source of truth shared by the shard geometry ([`maybe_shard`]) and
+/// the per-shard sparsification budget in [`build_encoder`].
+fn effective_shard_size(cfg: &TrainConfig, d: usize) -> usize {
+    cfg.shard_size.min(d.max(1))
+}
+
+/// Wrap a compressor in the sharded parallel pipeline when
+/// `cfg.shard_size > 0` ([`ParCompressor`]); pass through otherwise.
+fn maybe_shard(cfg: &TrainConfig, d: usize, c: Box<dyn Compressor>) -> Box<dyn Compressor> {
+    if cfg.shard_size > 0 {
+        Box::new(ParCompressor::new(c, effective_shard_size(cfg, d), cfg.threads))
+    } else {
+        c
+    }
+}
+
 /// Build the worker-side encoder for a method. `d` is the model
 /// dimension. This covers every method except the L1-artifact-backed
 /// adaptive MLMC, which the training driver wires directly to the
 /// runtime (see `train::Codec`).
+///
+/// When the sharded pipeline is enabled (`cfg.shard_size > 0`) the
+/// inner compressor sees one shard at a time, so the sparsification /
+/// segment budget `k` is computed against the shard length rather than
+/// `d` — keeping the per-element budget `frac_pm` invariant (the last,
+/// possibly shorter, shard is slightly over-budgeted, like any ragged
+/// block scheme).
 pub fn build_encoder(cfg: &TrainConfig, d: usize) -> Box<dyn GradientEncoder> {
-    let k = sparsify_k(d, cfg.frac_pm);
+    let k_basis = if cfg.shard_size > 0 { effective_shard_size(cfg, d) } else { d };
+    let k = sparsify_k(k_basis, cfg.frac_pm);
     match cfg.method {
-        Method::Sgd => Box::new(Plain(Box::new(Identity))),
-        Method::TopK => Box::new(Plain(Box::new(TopK { k }))),
-        Method::RandK => Box::new(Plain(Box::new(RandK { k }))),
-        Method::Ef14 => Box::new(Ef14::new(Box::new(TopK { k }), d)),
-        Method::Ef21Sgdm => {
-            Box::new(Ef21Sgdm::new(Box::new(TopK { k }), d, cfg.momentum_beta))
+        Method::Sgd => Box::new(Plain(maybe_shard(cfg, d, Box::new(Identity)))),
+        Method::TopK => Box::new(Plain(maybe_shard(cfg, d, Box::new(TopK { k })))),
+        Method::RandK => Box::new(Plain(maybe_shard(cfg, d, Box::new(RandK { k })))),
+        Method::Ef14 => Box::new(Ef14::new(maybe_shard(cfg, d, Box::new(TopK { k })), d)),
+        Method::Ef21Sgdm => Box::new(Ef21Sgdm::new(
+            maybe_shard(cfg, d, Box::new(TopK { k })),
+            d,
+            cfg.momentum_beta,
+        )),
+        Method::MlmcTopK => Box::new(Plain(maybe_shard(
+            cfg,
+            d,
+            Box::new(Mlmc::new(Box::new(MlSTopK { s: k }), Schedule::Adaptive)),
+        ))),
+        Method::MlmcTopKStatic => Box::new(Plain(maybe_shard(
+            cfg,
+            d,
+            Box::new(Mlmc::new(Box::new(MlSTopK { s: k }), Schedule::Default)),
+        ))),
+        Method::FixedPoint => {
+            Box::new(Plain(maybe_shard(cfg, d, Box::new(FixedPoint { f: cfg.quant_bits }))))
         }
-        Method::MlmcTopK => Box::new(Plain(Box::new(Mlmc::new(
-            Box::new(MlSTopK { s: k }),
-            Schedule::Adaptive,
-        )))),
-        Method::MlmcTopKStatic => Box::new(Plain(Box::new(Mlmc::new(
-            Box::new(MlSTopK { s: k }),
-            Schedule::Default,
-        )))),
-        Method::FixedPoint => Box::new(Plain(Box::new(FixedPoint { f: cfg.quant_bits }))),
-        Method::Qsgd => Box::new(Plain(Box::new(Qsgd { s: qsgd_s(cfg.quant_bits.max(1) + 1) }))),
-        Method::MlmcFixedPoint => Box::new(Plain(Box::new(Mlmc::new(
-            Box::new(MlFixedPoint::default()),
-            Schedule::Default,
-        )))),
-        Method::MlmcFloatPoint => Box::new(Plain(Box::new(Mlmc::new(
-            Box::new(MlFloatPoint::default()),
-            Schedule::Default,
-        )))),
-        Method::Rtn => Box::new(Plain(Box::new(Rtn { level: cfg.quant_bits as u32 + 1 }))),
-        Method::MlmcRtn => Box::new(Plain(Box::new(Mlmc::new(
-            Box::new(MlRtn::default()),
-            Schedule::Adaptive,
-        )))),
-        Method::Sign => Box::new(Plain(Box::new(SignSgd))),
+        Method::Qsgd => Box::new(Plain(maybe_shard(
+            cfg,
+            d,
+            Box::new(Qsgd { s: qsgd_s(cfg.quant_bits.max(1) + 1) }),
+        ))),
+        Method::MlmcFixedPoint => Box::new(Plain(maybe_shard(
+            cfg,
+            d,
+            Box::new(Mlmc::new(Box::new(MlFixedPoint::default()), Schedule::Default)),
+        ))),
+        Method::MlmcFloatPoint => Box::new(Plain(maybe_shard(
+            cfg,
+            d,
+            Box::new(Mlmc::new(Box::new(MlFloatPoint::default()), Schedule::Default)),
+        ))),
+        Method::Rtn => {
+            Box::new(Plain(maybe_shard(cfg, d, Box::new(Rtn { level: cfg.quant_bits as u32 + 1 }))))
+        }
+        Method::MlmcRtn => Box::new(Plain(maybe_shard(
+            cfg,
+            d,
+            Box::new(Mlmc::new(Box::new(MlRtn::default()), Schedule::Adaptive)),
+        ))),
+        Method::Sign => Box::new(Plain(maybe_shard(cfg, d, Box::new(SignSgd)))),
     }
 }
 
@@ -113,6 +155,25 @@ mod tests {
             assert_eq!(msg.dim(), g.len(), "{name}");
             assert!(msg.wire_bits() > 0, "{name}");
             // a second step must also work (stateful encoders)
+            let msg2 = enc.encode(&g, &mut rng);
+            assert_eq!(msg2.dim(), g.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn sharded_encoders_cover_method_matrix() {
+        let g = grad(300);
+        for name in Method::all_names() {
+            let mut cfg = TrainConfig::default();
+            cfg.set("method", name).unwrap();
+            cfg.set("shard_size", "64").unwrap();
+            cfg.set("threads", "2").unwrap();
+            let mut enc = build_encoder(&cfg, g.len());
+            let mut rng = Rng::new(2);
+            let msg = enc.encode(&g, &mut rng);
+            assert_eq!(msg.dim(), g.len(), "{name}");
+            assert!(msg.wire_bits() > 0, "{name}");
+            // stateful encoders must survive a second sharded step
             let msg2 = enc.encode(&g, &mut rng);
             assert_eq!(msg2.dim(), g.len(), "{name}");
         }

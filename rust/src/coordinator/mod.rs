@@ -26,6 +26,8 @@ pub struct Server {
     /// EF21 aggregate G (Accumulate only)
     shadow: Vec<f32>,
     scratch: Vec<f32>,
+    /// aggregation threads (1 = the serial path)
+    threads: usize,
     /// cumulative uplink bits across all workers and rounds
     pub total_bits: u64,
     pub rounds: u64,
@@ -40,28 +42,78 @@ impl Server {
             agg,
             shadow: vec![0.0; d],
             scratch: vec![0.0; d],
+            threads: 1,
             total_bits: 0,
             rounds: 0,
         }
+    }
+
+    /// Enable sharded multi-threaded aggregation (clamped to `>= 1`):
+    /// each thread owns a contiguous range of `scratch`/`shadow` and
+    /// reduces every worker message over its own range
+    /// (owner-computes reduction). Bit-identical to the serial path for
+    /// any thread count: per coordinate, contributions are applied in
+    /// message order either way (see [`crate::compress::Payload::add_range_into`]).
+    ///
+    /// Flat (non-sharded) `Sparse` payloads are rescanned by every range
+    /// owner — O(threads · k) total, which is negligible against the
+    /// O(d) dense work but means sparse-only rounds gain little from
+    /// threading; the sharded message format is the intended fast path.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Apply one synchronous round of `m` worker messages. Returns the
     /// uplink bits consumed this round.
     pub fn apply_round(&mut self, msgs: &[Compressed]) -> u64 {
         let m = msgs.len().max(1);
-        crate::tensor::zero(&mut self.scratch);
+        let scale = 1.0 / m as f32;
         let mut bits = 0u64;
         for msg in msgs {
             debug_assert_eq!(msg.dim(), self.params.len());
-            msg.add_into(&mut self.scratch, 1.0 / m as f32);
             bits += msg.wire_bits();
+        }
+        let d = self.params.len();
+        let threads = self.threads.min(d.max(1));
+        if threads <= 1 {
+            crate::tensor::zero(&mut self.scratch);
+            for msg in msgs {
+                msg.add_into(&mut self.scratch, scale);
+            }
+        } else {
+            let chunk = d.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (t, out) in self.scratch.chunks_mut(chunk).enumerate() {
+                    s.spawn(move || {
+                        crate::tensor::zero(out);
+                        for msg in msgs {
+                            msg.payload.add_range_into(out, scale, t * chunk);
+                        }
+                    });
+                }
+            });
         }
         match self.agg {
             AggKind::Fresh => {
                 self.opt.step(&mut self.params, &self.scratch);
             }
             AggKind::Accumulate => {
-                crate::tensor::axpy(&mut self.shadow, 1.0, &self.scratch);
+                if threads <= 1 {
+                    crate::tensor::axpy(&mut self.shadow, 1.0, &self.scratch);
+                } else {
+                    let chunk = d.div_ceil(threads);
+                    std::thread::scope(|s| {
+                        let chunks = self.shadow.chunks_mut(chunk).zip(self.scratch.chunks(chunk));
+                        for (sh, sc) in chunks {
+                            s.spawn(move || crate::tensor::axpy(sh, 1.0, sc));
+                        }
+                    });
+                }
                 let shadow = std::mem::take(&mut self.shadow);
                 self.opt.step(&mut self.params, &shadow);
                 self.shadow = shadow;
@@ -130,6 +182,44 @@ mod tests {
         let bits = s.apply_round(&[]);
         assert_eq!(bits, 0);
         assert_eq!(s.params, vec![1.0, 1.0]); // zero gradient
+    }
+
+    #[test]
+    fn threaded_round_bit_identical_to_serial() {
+        let d = 1003;
+        let mut rng = crate::tensor::Rng::new(5);
+        let msgs: Vec<Compressed> = (0..3)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                crate::compress::Compressor::compress(
+                    &crate::compress::ParCompressor::new(
+                        Box::new(crate::compress::TopK { k: 40 }),
+                        128,
+                        2,
+                    ),
+                    &g,
+                    &mut rng,
+                )
+            })
+            .collect();
+        for agg in [AggKind::Fresh, AggKind::Accumulate] {
+            let mut serial = Server::new(vec![0.1; d], Box::new(Sgd { lr: 0.3 }), agg);
+            let mut threaded =
+                Server::new(vec![0.1; d], Box::new(Sgd { lr: 0.3 }), agg).with_threads(4);
+            assert_eq!(threaded.threads(), 4);
+            for _ in 0..2 {
+                let b1 = serial.apply_round(&msgs);
+                let b4 = threaded.apply_round(&msgs);
+                assert_eq!(b1, b4);
+            }
+            for (a, b) in serial.params.iter().zip(&threaded.params) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{agg:?}");
+            }
+            for (a, b) in serial.shadow().iter().zip(threaded.shadow()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{agg:?}");
+            }
+        }
     }
 
     #[test]

@@ -54,7 +54,8 @@ fn print_help() {
         [
             "model", "method", "workers", "steps", "lr", "seed", "frac_pm",
             "quant_bits", "eval_every", "eval_batches", "transport",
-            "optimizer", "momentum_beta", "dirichlet_alpha", "use_l1_stats", "tag",
+            "optimizer", "momentum_beta", "dirichlet_alpha", "use_l1_stats",
+            "shard_size", "threads", "tag",
         ]
         .join(", ")
     );

@@ -7,8 +7,10 @@
 
 pub mod rng;
 pub mod select;
+pub mod shard;
 
 pub use rng::Rng;
+pub use shard::ShardSpec;
 
 /// `y += alpha * x`
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {

@@ -1,0 +1,93 @@
+//! Gradient sharding: fixed-size contiguous chunks of a flat vector.
+//!
+//! The sharded compression/aggregation pipeline splits `v ∈ R^d` into
+//! `⌈d / shard_size⌉` contiguous shards. Shard boundaries are a pure
+//! function of `(d, shard_size)` — never of the thread count — which is
+//! one half of the bit-reproducibility contract of the parallel paths
+//! (the other half is the per-shard RNG stream derivation in
+//! [`crate::tensor::Rng::shard_streams`]). See
+//! [`crate::compress::ParCompressor`] and
+//! `coordinator::Server::apply_round`.
+
+use std::ops::Range;
+
+/// Shard geometry for a length-`d` vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// total vector length
+    pub d: usize,
+    /// elements per shard (the last shard may be shorter); always >= 1
+    pub shard_size: usize,
+}
+
+impl ShardSpec {
+    /// `shard_size` is clamped to `>= 1`; `d = 0` yields zero shards.
+    pub fn new(d: usize, shard_size: usize) -> ShardSpec {
+        ShardSpec { d, shard_size: shard_size.max(1) }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.d.div_ceil(self.shard_size)
+    }
+
+    /// Global index range `[start, end)` of shard `i`.
+    pub fn range(&self, i: usize) -> Range<usize> {
+        debug_assert!(i < self.num_shards());
+        let start = i * self.shard_size;
+        start..(start + self.shard_size).min(self.d)
+    }
+
+    /// Length of shard `i`.
+    pub fn len(&self, i: usize) -> usize {
+        let r = self.range(i);
+        r.end - r.start
+    }
+
+    /// All shard ranges, in order.
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.num_shards()).map(|i| self.range(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_division() {
+        let s = ShardSpec::new(100, 25);
+        assert_eq!(s.num_shards(), 4);
+        assert_eq!(s.range(0), 0..25);
+        assert_eq!(s.range(3), 75..100);
+        assert_eq!(s.len(3), 25);
+    }
+
+    #[test]
+    fn ragged_tail() {
+        let s = ShardSpec::new(103, 25);
+        assert_eq!(s.num_shards(), 5);
+        assert_eq!(s.range(4), 100..103);
+        assert_eq!(s.len(4), 3);
+    }
+
+    #[test]
+    fn ranges_partition_exactly() {
+        for (d, sz) in [(1usize, 1usize), (7, 3), (64, 64), (64, 65), (1000, 1)] {
+            let s = ShardSpec::new(d, sz);
+            let mut covered = 0;
+            for (i, r) in s.ranges().enumerate() {
+                assert_eq!(r.start, covered, "d={d} sz={sz} i={i}");
+                covered = r.end;
+            }
+            assert_eq!(covered, d, "d={d} sz={sz}");
+        }
+    }
+
+    #[test]
+    fn zero_and_clamp_edges() {
+        assert_eq!(ShardSpec::new(0, 8).num_shards(), 0);
+        // shard_size 0 clamps to 1
+        assert_eq!(ShardSpec::new(3, 0).num_shards(), 3);
+        assert_eq!(ShardSpec::new(3, 0).range(2), 2..3);
+    }
+}

@@ -77,8 +77,14 @@ impl Codec {
 }
 
 /// Build the per-worker codec for a config.
+///
+/// The L1-segstats codec operates on the whole gradient at once, so the
+/// sharded pipeline (`cfg.shard_size > 0`) takes precedence over it:
+/// sharding falls back to the encoder registry (rust-side sort wrapped
+/// in `ParCompressor`) rather than silently ignoring the shard knobs.
 pub fn build_codec(cfg: &TrainConfig, model: &ModelMeta) -> Codec {
     let use_l1 = cfg.use_l1_stats
+        && cfg.shard_size == 0
         && matches!(cfg.method, Method::MlmcTopK | Method::MlmcTopKStatic)
         && model.segstats.contains_key(&cfg.frac_pm);
     if use_l1 {
@@ -168,7 +174,8 @@ pub fn run_with_csv(
         params,
         crate::optim::build(&cfg.optimizer, cfg.lr, model.param_count),
         agg_kind(&cfg.method),
-    );
+    )
+    .with_threads(cfg.threads);
 
     let mut curve = match csv {
         Some(path) => Curve::with_csv(cfg.run_id(), path)?,

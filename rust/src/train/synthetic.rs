@@ -71,7 +71,8 @@ pub fn run_quadratic(problem: &Quadratic, cfg: &TrainConfig) -> SynthResult {
         vec![0.0; d],
         Box::new(crate::optim::Sgd { lr: cfg.lr }),
         agg_kind(&cfg.method),
-    );
+    )
+    .with_threads(cfg.threads);
     let mut tail = Vec::new();
     let tail_start = cfg.steps - cfg.steps / 4;
     for step in 0..cfg.steps {

@@ -7,18 +7,31 @@ pub mod json;
 use std::path::{Path, PathBuf};
 
 /// Repo-relative path resolution: honours `MLMC_DIST_ROOT`, else walks up
-/// from the current dir looking for `Cargo.toml`.
+/// from the current dir and returns the *outermost* directory containing
+/// a `Cargo.toml` — the workspace root, not the member crate root (cargo
+/// runs test/bench binaries with cwd at the member, `rust/`). A `.git`
+/// directory marks the repository boundary: the walk never escapes it,
+/// so an unrelated `Cargo.toml` in some ancestor cannot hijack the root.
 pub fn repo_root() -> PathBuf {
     if let Ok(r) = std::env::var("MLMC_DIST_ROOT") {
         return PathBuf::from(r);
     }
     let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut innermost: Option<PathBuf> = None;
+    let mut outermost: Option<PathBuf> = None;
     loop {
         if dir.join("Cargo.toml").exists() {
-            return dir;
+            innermost.get_or_insert_with(|| dir.clone());
+            outermost = Some(dir.clone());
+        }
+        if dir.join(".git").exists() {
+            // repo boundary: the widest manifest inside it is the workspace root
+            return outermost.unwrap_or(dir);
         }
         if !dir.pop() {
-            return PathBuf::from(".");
+            // no boundary anywhere (exported tree): fall back to the
+            // innermost match so a stray ancestor manifest cannot hijack
+            return innermost.unwrap_or_else(|| PathBuf::from("."));
         }
     }
 }

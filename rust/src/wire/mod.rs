@@ -35,6 +35,7 @@ const MAGIC: u8 = 0xA7;
 const KIND_DENSE: u8 = 0;
 const KIND_SPARSE: u8 = 1;
 const KIND_QUANT: u8 = 2;
+const KIND_SHARDED: u8 = 3;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -88,63 +89,69 @@ impl<'a> Cursor<'a> {
         self.i += n;
         s
     }
+    /// Bound an untrusted size field against the remaining buffer BEFORE
+    /// any allocation sized by it — a corrupt count must stay a catchable
+    /// panic, not a multi-gigabyte preallocation and OOM abort.
+    fn check_remaining(&self, need: u64) {
+        let have = (self.b.len() - self.i) as u64;
+        assert!(need <= have, "frame truncated: need {need} bytes, have {have}");
+    }
 }
 
-/// Serialize a message for the TCP transport.
-pub fn encode(msg: &WorkerMsg) -> Vec<u8> {
-    let mut buf = Vec::new();
-    buf.push(MAGIC);
-    put_u32(&mut buf, msg.step);
-    put_u32(&mut buf, msg.worker);
-    put_u64(&mut buf, msg.comp.extra_bits);
-    match &msg.comp.payload {
+fn encode_payload(buf: &mut Vec<u8>, payload: &Payload) {
+    match payload {
         Payload::Dense(v) => {
             buf.push(KIND_DENSE);
-            put_u32(&mut buf, v.len() as u32);
-            put_f32s(&mut buf, v);
+            put_u32(buf, v.len() as u32);
+            put_f32s(buf, v);
         }
         Payload::Sparse { d, idx, val } => {
             buf.push(KIND_SPARSE);
-            put_u32(&mut buf, *d);
-            put_u32(&mut buf, idx.len() as u32);
+            put_u32(buf, *d);
+            put_u32(buf, idx.len() as u32);
             let ib = index_bits(*d as usize) as u32;
             let mut bw = BitWriter::new();
             for i in idx {
                 bw.push(*i as u64, ib);
             }
             let packed = bw.finish();
-            put_u32(&mut buf, packed.len() as u32);
+            put_u32(buf, packed.len() as u32);
             buf.extend_from_slice(&packed);
-            put_f32s(&mut buf, val);
+            put_f32s(buf, val);
         }
         Payload::Quantized { val, bits_per_elem, overhead_bits } => {
             buf.push(KIND_QUANT);
-            put_u32(&mut buf, val.len() as u32);
-            put_u64(&mut buf, bits_per_elem.to_bits());
-            put_u64(&mut buf, *overhead_bits);
-            put_f32s(&mut buf, val);
+            put_u32(buf, val.len() as u32);
+            put_u64(buf, bits_per_elem.to_bits());
+            put_u64(buf, *overhead_bits);
+            put_f32s(buf, val);
+        }
+        Payload::Sharded(parts) => {
+            // shard framing: count, then each shard's self-describing
+            // payload in global coordinate order (the accounted cost of
+            // this framing is `compress::shard_framing_bits`)
+            buf.push(KIND_SHARDED);
+            put_u32(buf, parts.len() as u32);
+            for p in parts {
+                encode_payload(buf, p);
+            }
         }
     }
-    buf
 }
 
-/// Deserialize a message. Panics on malformed input (internal protocol).
-pub fn decode(bytes: &[u8]) -> WorkerMsg {
-    let mut c = Cursor { b: bytes, i: 0 };
-    assert_eq!(c.u8(), MAGIC, "bad magic");
-    let step = c.u32();
-    let worker = c.u32();
-    let extra_bits = c.u64();
+fn decode_payload(c: &mut Cursor<'_>, allow_sharded: bool) -> Payload {
     let kind = c.u8();
-    let payload = match kind {
+    match kind {
         KIND_DENSE => {
             let d = c.u32() as usize;
+            c.check_remaining(4 * d as u64);
             Payload::Dense(c.f32s(d))
         }
         KIND_SPARSE => {
             let d = c.u32();
             let k = c.u32() as usize;
             let packed_len = c.u32() as usize;
+            c.check_remaining(packed_len as u64 + 4 * k as u64);
             let ib = index_bits(d as usize) as u32;
             let packed = c.bytes(packed_len);
             let mut br = BitReader::new(packed);
@@ -156,10 +163,42 @@ pub fn decode(bytes: &[u8]) -> WorkerMsg {
             let d = c.u32() as usize;
             let bits_per_elem = c.f64();
             let overhead_bits = c.u64();
+            c.check_remaining(4 * d as u64);
             Payload::Quantized { val: c.f32s(d), bits_per_elem, overhead_bits }
         }
+        KIND_SHARDED => {
+            // legitimate encoders never nest shards; rejecting nesting
+            // keeps malformed/hostile input a catchable panic instead of
+            // unbounded recursion (stack-overflow abort)
+            assert!(allow_sharded, "nested sharded payload");
+            let n = c.u32() as usize;
+            // every shard occupies at least its 1-byte kind header
+            c.check_remaining(n as u64);
+            Payload::Sharded((0..n).map(|_| decode_payload(c, false)).collect())
+        }
         other => panic!("bad payload kind {other}"),
-    };
+    }
+}
+
+/// Serialize a message for the TCP transport.
+pub fn encode(msg: &WorkerMsg) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.push(MAGIC);
+    put_u32(&mut buf, msg.step);
+    put_u32(&mut buf, msg.worker);
+    put_u64(&mut buf, msg.comp.extra_bits);
+    encode_payload(&mut buf, &msg.comp.payload);
+    buf
+}
+
+/// Deserialize a message. Panics on malformed input (internal protocol).
+pub fn decode(bytes: &[u8]) -> WorkerMsg {
+    let mut c = Cursor { b: bytes, i: 0 };
+    assert_eq!(c.u8(), MAGIC, "bad magic");
+    let step = c.u32();
+    let worker = c.u32();
+    let extra_bits = c.u64();
+    let payload = decode_payload(&mut c, true);
     WorkerMsg { step, worker, comp: Compressed { payload, extra_bits } }
 }
 
@@ -266,9 +305,93 @@ mod tests {
     }
 
     #[test]
+    fn sharded_roundtrip_preserves_structure_and_bits() {
+        let comp = Compressed::sharded(vec![
+            Compressed {
+                payload: Payload::Sparse { d: 500, idx: vec![3, 499], val: vec![1.5, -2.0] },
+                extra_bits: 4,
+            },
+            Compressed::dense(vec![9.0, -8.0, 7.0]),
+            Compressed {
+                payload: Payload::Quantized {
+                    val: vec![0.25; 6],
+                    bits_per_elem: 3.0,
+                    overhead_bits: 16,
+                },
+                extra_bits: 2,
+            },
+        ]);
+        let want_dec = comp.decode();
+        let want_bits = comp.wire_bits();
+        let got = roundtrip(&WorkerMsg { step: 11, worker: 2, comp });
+        assert_eq!(got.step, 11);
+        assert_eq!(got.comp.decode(), want_dec);
+        assert_eq!(got.comp.wire_bits(), want_bits);
+        match &got.comp.payload {
+            Payload::Sharded(parts) => {
+                assert_eq!(parts.len(), 3);
+                assert_eq!(parts[0].dim(), 500);
+                assert_eq!(parts[1].dim(), 3);
+                assert_eq!(parts[2].dim(), 6);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_transport_close_to_accounted() {
+        // sharded sparse payloads stay within header slack of the
+        // accounted bits, mirroring `sparse_transport_close_to_accounted`
+        let mut rng = Rng::new(3);
+        let shard_d = 10_000u32;
+        let parts: Vec<Compressed> = (0..8)
+            .map(|_| {
+                let k = 200;
+                let idx: Vec<u32> = (0..k).map(|_| rng.below(shard_d as usize) as u32).collect();
+                let val: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+                Compressed { payload: Payload::Sparse { d: shard_d, idx, val }, extra_bits: 0 }
+            })
+            .collect();
+        let comp = Compressed::sharded(parts);
+        let accounted = comp.wire_bits();
+        let transported = 8 * encode(&WorkerMsg { step: 0, worker: 0, comp }).len() as u64;
+        // top-level headers + per-shard kind/k/packed-len headers + padding
+        let headers = 8 * 30 + 8 * (8 * (1 + 4 + 4 + 1));
+        assert!(
+            transported <= accounted + headers,
+            "{transported} > {accounted} + {headers}"
+        );
+    }
+
+    #[test]
     #[should_panic(expected = "bad magic")]
     fn rejects_garbage() {
         decode(&[0u8; 32]);
+    }
+
+    #[test]
+    #[should_panic(expected = "frame truncated")]
+    fn rejects_huge_forged_counts_before_allocating() {
+        // valid header, kind=sharded, shard count u32::MAX, no body:
+        // must be a catchable panic, not a ~200 GB preallocation
+        let mut bytes = vec![MAGIC];
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // step
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // worker
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // extra_bits
+        bytes.push(KIND_SHARDED);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        decode(&bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "nested sharded payload")]
+    fn rejects_nested_sharded_frames() {
+        let comp = Compressed {
+            payload: Payload::Sharded(vec![Payload::Sharded(vec![])]),
+            extra_bits: 0,
+        };
+        let bytes = encode(&WorkerMsg { step: 0, worker: 0, comp });
+        decode(&bytes);
     }
 
     #[test]

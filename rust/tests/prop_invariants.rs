@@ -3,9 +3,12 @@
 //! paper's algebraic invariants. Each property runs on hundreds of
 //! random shapes; failures shrink and report the minimal vector.
 
-use mlmc_dist::compress::{Compressor, FixedPoint, RandK, Rtn, SignSgd, TopK};
-use mlmc_dist::mlmc::{MlFixedPoint, MlRtn, MlSTopK, Multilevel};
-use mlmc_dist::tensor::{max_abs, sq_dist, sq_norm, Rng};
+use mlmc_dist::compress::{
+    shard_framing_bits, Compressed, Compressor, FixedPoint, ParCompressor, Payload, RandK, Rtn,
+    SignSgd, TopK,
+};
+use mlmc_dist::mlmc::{MlFixedPoint, MlRtn, MlSTopK, Mlmc, Multilevel, Schedule};
+use mlmc_dist::tensor::{max_abs, sq_dist, sq_norm, Rng, ShardSpec};
 use mlmc_dist::testing::forall_vec;
 
 #[test]
@@ -135,6 +138,158 @@ fn prop_wire_roundtrip_random_payloads() {
             let got = mlmc_dist::wire::decode(&mlmc_dist::wire::encode(&msg));
             if got.comp.decode() != msg.comp.decode() {
                 return Err(format!("{} roundtrip mismatch", c.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bitwise equality of two f32 vectors (NaN-free by construction here).
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_sharded_parallel_matches_serial_bit_exact() {
+    // (a) the parallel sharded pipeline decodes bit-exactly to the
+    // serial sharded reference for every compressor family, and the
+    // thread count never changes the bits
+    type Mk = fn(usize) -> Box<dyn Compressor>;
+    let mks: Vec<(&str, Mk)> = vec![
+        ("topk", |s| Box::new(TopK { k: s / 2 + 1 })),
+        ("randk", |s| Box::new(RandK { k: s / 2 + 1 })),
+        ("fxp", |_| Box::new(FixedPoint { f: 2 })),
+        ("rtn", |_| Box::new(Rtn { level: 4 })),
+        ("sign", |_| Box::new(SignSgd)),
+        ("mlmc-stopk", |s| {
+            Box::new(Mlmc::new(Box::new(MlSTopK { s: s / 4 + 1 }), Schedule::Adaptive))
+        }),
+    ];
+    forall_vec("sharded-parallel-serial", 8, 40, 600, |v| {
+        let shard = v.len() / 3 + 1;
+        for (name, mk) in &mks {
+            let p1 = ParCompressor::new(mk(shard), shard, 1);
+            let p4 = ParCompressor::new(mk(shard), shard, 4);
+            let mut r1 = Rng::new(31);
+            let mut r4 = Rng::new(31);
+            let a = p1.compress(v, &mut r1);
+            let b = p4.compress(v, &mut r4);
+            if !bits_equal(&a.decode(), &b.decode()) {
+                return Err(format!("{name}: thread count changed bits"));
+            }
+            if a.wire_bits() != b.wire_bits() {
+                return Err(format!("{name}: thread count changed wire bits"));
+            }
+            // hand-rolled serial reference over explicit shard ranges,
+            // exercising the (seed, worker, step, shard) stream contract
+            let spec = ShardSpec::new(v.len(), shard);
+            let mut r = Rng::new(31);
+            let mut rngs = r.shard_streams(spec.num_shards());
+            let inner = mk(shard);
+            let parts: Vec<Compressed> = spec
+                .ranges()
+                .zip(rngs.iter_mut())
+                .map(|(range, rr)| inner.compress(&v[range], rr))
+                .collect();
+            let c = Compressed::sharded(parts);
+            if !bits_equal(&a.decode(), &c.decode()) {
+                return Err(format!("{name}: parallel differs from serial reference"));
+            }
+            if a.wire_bits() != c.wire_bits() {
+                return Err(format!("{name}: accounting differs from serial reference"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_mlmc_unbiased() {
+    // (b) Lemma 3.2 survives sharding: each shard's MLMC estimate is
+    // unbiased, so the concatenated estimate is unbiased on the full
+    // vector — the empirical mean over draws converges to v
+    let mut rng = Rng::new(77);
+    let v: Vec<f32> = (0..96).map(|_| rng.normal() as f32).collect();
+    let par = ParCompressor::new(
+        Box::new(Mlmc::new(Box::new(MlSTopK { s: 7 }), Schedule::Adaptive)),
+        25,
+        3,
+    );
+    assert!(par.unbiased());
+    let s = mlmc_dist::compress::measure(&par, &v, 8000, 5);
+    assert!(s.rel_bias < 0.06, "sharded MLMC bias {}", s.rel_bias);
+    // sanity: biased compressors stay flagged biased through the adapter
+    assert!(!ParCompressor::new(Box::new(TopK { k: 2 }), 25, 3).unbiased());
+}
+
+#[test]
+fn prop_sharded_wire_accounting_matches_framing() {
+    // (c) wire_bits accounting of a sharded message equals the framed
+    // shard encoding: Σ per-shard wire cost + shard_framing_bits, and
+    // the transport roundtrip preserves bits and values exactly
+    forall_vec("sharded-wire-accounting", 9, 40, 500, |v| {
+        let shard = v.len() / 4 + 1;
+        let spec = ShardSpec::new(v.len(), shard);
+        let mk = || Mlmc::new(Box::new(MlSTopK { s: shard / 3 + 1 }), Schedule::Adaptive);
+        let par = ParCompressor::new(Box::new(mk()), shard, 2);
+        let mut rng = Rng::new(13);
+        let comp = par.compress(v, &mut rng);
+        let mut r = Rng::new(13);
+        let mut rngs = r.shard_streams(spec.num_shards());
+        let inner = mk();
+        let mut want = shard_framing_bits(spec.num_shards());
+        for (range, rr) in spec.ranges().zip(rngs.iter_mut()) {
+            want += inner.compress(&v[range], rr).wire_bits();
+        }
+        if comp.wire_bits() != want {
+            return Err(format!("accounting {} != framed {}", comp.wire_bits(), want));
+        }
+        if !matches!(comp.payload, Payload::Sharded(_)) {
+            return Err("expected a sharded payload".into());
+        }
+        let msg = mlmc_dist::wire::WorkerMsg { step: 3, worker: 1, comp };
+        let got = mlmc_dist::wire::decode(&mlmc_dist::wire::encode(&msg));
+        if !bits_equal(&msg.comp.decode(), &got.comp.decode()) {
+            return Err("sharded wire roundtrip not bit-exact".into());
+        }
+        if got.comp.wire_bits() != msg.comp.wire_bits() {
+            return Err("wire_bits not preserved across transport".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_server_threaded_reduction_bit_identical() {
+    // threaded owner-computes reduction == serial reduction, bit for
+    // bit, over mixed dense/sparse/sharded messages and both agg kinds
+    use mlmc_dist::coordinator::Server;
+    use mlmc_dist::ef::AggKind;
+    forall_vec("server-threads", 10, 30, 400, |v| {
+        let d = v.len();
+        let mut rng = Rng::new(2);
+        let m = 1 + rng.below(4);
+        let msgs: Vec<Compressed> = (0..m)
+            .map(|_| match rng.below(3) {
+                0 => Compressed::dense((0..d).map(|_| rng.normal() as f32).collect()),
+                1 => TopK { k: d / 3 + 1 }.compress(v, &mut rng),
+                _ => ParCompressor::new(Box::new(TopK { k: d / 5 + 1 }), d / 3 + 1, 2)
+                    .compress(v, &mut rng),
+            })
+            .collect();
+        for agg in [AggKind::Fresh, AggKind::Accumulate] {
+            let mut s1 = Server::new(v.to_vec(), Box::new(mlmc_dist::optim::Sgd { lr: 0.5 }), agg);
+            let mut s4 = Server::new(v.to_vec(), Box::new(mlmc_dist::optim::Sgd { lr: 0.5 }), agg)
+                .with_threads(4);
+            for round in 0..2 {
+                s1.apply_round(&msgs);
+                s4.apply_round(&msgs);
+                if !bits_equal(&s1.params, &s4.params) {
+                    return Err(format!("{agg:?}: round {round} params differ"));
+                }
+                if !bits_equal(s1.shadow(), s4.shadow()) {
+                    return Err(format!("{agg:?}: round {round} shadow differs"));
+                }
             }
         }
         Ok(())
