@@ -2,7 +2,9 @@
 //! worker with its **own PJRT runtime** (the `xla` wrappers are !Send, so
 //! every worker thread constructs its runtime locally — process-equivalent
 //! isolation in one binary; `mlmc-dist leader/worker` run the same
-//! protocol across actual processes/hosts).
+//! protocol across actual processes/hosts). Both sides delegate the
+//! round protocol to the unified `engine`: the leader drives a
+//! `RoundEngine` over the TCP transport, workers run `engine::run_worker`.
 //!
 //!     make artifacts && cargo run --release --example tcp_cluster
 
@@ -11,12 +13,12 @@ use std::net::TcpListener;
 use mlmc_dist::config::TrainConfig;
 use mlmc_dist::coordinator::{agg_kind, Server};
 use mlmc_dist::data::Task;
+use mlmc_dist::engine::{self, RoundEngine};
 use mlmc_dist::runtime::{ArgValue, Runtime};
 use mlmc_dist::tensor::Rng;
 use mlmc_dist::train::build_codec;
 use mlmc_dist::transport::tcp::{read_frame, TcpLeader, TcpWorker};
-use mlmc_dist::transport::{params_from_bytes, params_to_bytes, Frame, FRAME_SHUTDOWN};
-use mlmc_dist::{util, wire};
+use mlmc_dist::util;
 
 const M: usize = 4;
 const STEPS: usize = 60;
@@ -32,23 +34,13 @@ fn worker(addr: String, id: u32) -> anyhow::Result<()> {
     let mut codec = build_codec(&cfg, &model);
 
     let mut port = TcpWorker::connect(&addr, id)?;
-    let mut step = 0u64;
-    loop {
-        let frame = port.recv()?;
-        if frame.kind == FRAME_SHUTDOWN {
-            return Ok(());
-        }
-        let params = params_from_bytes(&frame.payload);
+    engine::run_worker(&mut port, |step, params| {
         let b = task.train_batch(cfg.seed, id as u64, step, None);
-        let (loss, grad) = rt.grad_step(&model, &params, &ArgValue::I32(&b.x_i32), &b.y)?;
+        let (loss, grad) = rt.grad_step(&model, params, &ArgValue::I32(&b.x_i32), &b.y)?;
         let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
-        let comp = codec.encode(&rt, &model, &grad, &mut rng)?;
-        let msg = wire::WorkerMsg { step: step as u32, worker: id, comp };
-        let mut payload = loss.to_le_bytes().to_vec();
-        payload.extend_from_slice(&wire::encode(&msg));
-        port.send(&Frame::grad(payload))?;
-        step += 1;
-    }
+        Ok((loss, codec.encode(&rt, &model, &grad, &mut rng)?))
+    })?;
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -71,43 +63,42 @@ fn main() -> anyhow::Result<()> {
         let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
         streams[id] = Some(s);
     }
-    let mut leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect());
+    let leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect());
 
     // the leader needs only metadata (for params/init), not XLA execution
     let rt = Runtime::load_default()?;
     let model = rt.meta.models["tx-tiny"].clone();
-    let mut server = Server::new(
+    let mut cfg = TrainConfig::default();
+    cfg.set("method", "mlmc-topk").unwrap();
+    cfg.workers = M;
+    cfg.lr = 0.1;
+    let server = Server::new(
         model.init_params(1),
-        Box::new(mlmc_dist::optim::Sgd { lr: 0.1 }),
-        agg_kind(&mlmc_dist::config::Method::MlmcTopK),
+        Box::new(mlmc_dist::optim::Sgd { lr: cfg.lr }),
+        agg_kind(&cfg.method),
     );
+    let mut eng = RoundEngine::from_cfg(leader, server, &cfg)?;
 
     let t0 = std::time::Instant::now();
     for step in 0..STEPS {
-        leader.broadcast(&Frame::params(params_to_bytes(&server.params)))?;
-        let frames = leader.gather()?;
-        let mut msgs = Vec::with_capacity(frames.len());
-        let mut loss = 0.0f64;
-        for f in &frames {
-            loss += f32::from_le_bytes(f.payload[..4].try_into().unwrap()) as f64;
-            msgs.push(wire::decode(&f.payload[4..]).comp);
-        }
-        server.apply_round(&msgs);
+        let rep = eng.run_round()?;
         if (step + 1) % 15 == 0 {
             println!(
-                "step {:>3}  mean loss {:.4}  uplink {}",
+                "step {:>3}  mean loss {:.4}  uplink {}  sim_t {:.4}s",
                 step + 1,
-                loss / M as f64,
-                util::fmt_bits(server.total_bits)
+                rep.mean_loss,
+                util::fmt_bits(rep.total_bits),
+                rep.sim_now_s
             );
         }
     }
-    leader.broadcast(&Frame::shutdown())?;
+    let sim = eng.sim_now_s();
+    let server = eng.finish()?;
     for w in workers {
         w.join().unwrap();
     }
     println!(
-        "cluster done: {STEPS} rounds in {:.1}s, total uplink {}",
+        "cluster done: {STEPS} rounds in {:.1}s wall, {sim:.4}s simulated, total uplink {}",
         t0.elapsed().as_secs_f64(),
         util::fmt_bits(server.total_bits)
     );

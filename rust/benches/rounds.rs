@@ -1,0 +1,164 @@
+//! Round-engine benchmarks: full protocol rounds (broadcast → compute →
+//! wire round-trip → policy split → aggregate → optimizer step) through
+//! the unified `RoundEngine` over the inline transport, FullSync vs
+//! Quorum at 1 and N threads, plus the simulated round time of every
+//! netsim LinkModel preset.
+//!
+//! Emits `results/bench_rounds.csv` (benchlib) plus
+//! `results/BENCH_rounds.json`, the machine-readable record CI uploads
+//! so the rounds/sec trajectory is tracked per commit.
+//!
+//! Smoke mode (CI): `MLMC_BENCH_MS=60 ROUNDS_BENCH_D=50000 cargo bench
+//! -p mlmc-dist --bench rounds`.
+
+use mlmc_dist::benchlib::{black_box, Bench, Stats};
+use mlmc_dist::compress::Compressed;
+use mlmc_dist::config::{Method, TrainConfig};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
+use mlmc_dist::engine::{local_star, Compute, RoundEngine};
+use mlmc_dist::netsim::clock;
+use mlmc_dist::tensor::Rng;
+
+const M: usize = 8;
+
+fn base_cfg(d: usize, threads: usize, participation: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.method = Method::TopK;
+    cfg.workers = M;
+    cfg.frac_pm = 10;
+    cfg.shard_size = (d / 8).max(64);
+    cfg.threads = threads;
+    cfg.set("participation", participation).unwrap();
+    cfg.set("quorum", &(M / 2).to_string()).unwrap();
+    cfg.set("link", "hetero").unwrap();
+    cfg.set("straggler", "0.01").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Engine over the inline star with a fixed synthetic gradient: isolates
+/// protocol + compression + aggregation cost (no XLA).
+fn build_engine<'a>(
+    cfg: &'a TrainConfig,
+    grad: &'a [f32],
+) -> RoundEngine<mlmc_dist::transport::LocalStar<'a>> {
+    let d = grad.len();
+    let computes: Vec<Compute<'a>> = (0..cfg.workers)
+        .map(|w| {
+            let mut enc = build_encoder(cfg, d);
+            Box::new(move |step: u64, _params: &[f32]| -> anyhow::Result<(f32, Compressed)> {
+                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                Ok((0.0, enc.encode(grad, &mut rng)))
+            }) as Compute<'a>
+        })
+        .collect();
+    let server = Server::new(
+        vec![0.0; d],
+        Box::new(mlmc_dist::optim::Sgd { lr: 0.01 }),
+        agg_kind(&cfg.method),
+    )
+    .with_threads(cfg.threads);
+    RoundEngine::from_cfg(local_star(computes), server, cfg).unwrap()
+}
+
+struct Case {
+    stats: Stats,
+    policy: &'static str,
+    threads: usize,
+}
+
+fn main() {
+    let d: usize = std::env::var("ROUNDS_BENCH_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500_000);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut rng = Rng::new(1);
+    let mut grad = vec![0.0f32; d];
+    rng.fill_normal(&mut grad, 1.0);
+
+    let mut b = Bench::new("rounds");
+    println!("d={d} M={M} hw_threads={hw}");
+
+    let mut thread_counts = vec![1usize, hw];
+    thread_counts.dedup();
+    let mut cases: Vec<Case> = Vec::new();
+    for policy in ["full", "quorum"] {
+        for &t in &thread_counts {
+            let cfg = base_cfg(d, t, policy);
+            let mut eng = build_engine(&cfg, &grad);
+            let s = b.case_elems(&format!("round {policy} M={M} d={d} t={t}"), (M * d) as u64, || {
+                black_box(eng.run_round().unwrap().bits)
+            });
+            cases.push(Case { stats: s.clone(), policy, threads: t });
+        }
+    }
+
+    // simulated round time per LinkModel preset (FullSync, one round's
+    // deadline; deterministic, so measured once — not a wall-clock case)
+    let mut preset_rows: Vec<(String, f64)> = Vec::new();
+    for preset in clock::preset_names() {
+        let mut cfg = base_cfg(d, 1, "full");
+        cfg.set("link", preset).unwrap();
+        cfg.set("straggler", "0").unwrap();
+        let mut eng = build_engine(&cfg, &grad);
+        let rep = eng.run_round().unwrap();
+        println!("sim_round {preset:<11} {:.6}s", rep.sim_round_s);
+        preset_rows.push((preset.to_string(), rep.sim_round_s));
+    }
+
+    b.write_csv();
+    write_json(d, hw, &cases, &preset_rows);
+}
+
+fn write_json(d: usize, hw: usize, cases: &[Case], presets: &[(String, f64)]) {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"suite\": \"rounds\",");
+    let _ = writeln!(s, "  \"d\": {d},");
+    let _ = writeln!(s, "  \"workers\": {M},");
+    let _ = writeln!(s, "  \"hw_threads\": {hw},");
+    s.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let rps = if c.stats.mean_ns > 0.0 { 1e9 / c.stats.mean_ns } else { 0.0 };
+        let comma = if i + 1 < cases.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"name\": {:?}, \"policy\": {:?}, \"threads\": {}, \"mean_ns\": {:.1}, \
+             \"rounds_per_s\": {:.3}}}{}",
+            c.stats.name, c.policy, c.threads, c.stats.mean_ns, rps, comma
+        );
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"sim_round_s\": {\n");
+    for (i, (name, t)) in presets.iter().enumerate() {
+        let comma = if i + 1 < presets.len() { "," } else { "" };
+        let _ = writeln!(s, "    {name:?}: {t:.9}{comma}");
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"speedup_vs_1t\": {\n");
+    let policies = ["full", "quorum"];
+    for (i, p) in policies.iter().enumerate() {
+        let base = cases.iter().find(|c| c.policy == *p && c.threads == 1).map(|c| c.stats.mean_ns);
+        let best = cases
+            .iter()
+            .filter(|c| c.policy == *p && c.threads > 1)
+            .map(|c| c.stats.mean_ns)
+            .fold(f64::INFINITY, f64::min);
+        let sp = match base {
+            // a single-threaded machine has no multi-thread row; report 1.0
+            Some(b) if best.is_finite() && best > 0.0 => b / best,
+            Some(_) => 1.0,
+            None => 0.0,
+        };
+        let comma = if i + 1 < policies.len() { "," } else { "" };
+        let _ = writeln!(s, "    {p:?}: {sp:.3}{comma}");
+    }
+    s.push_str("  }\n}\n");
+    let path = mlmc_dist::util::results_dir().join("BENCH_rounds.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -96,6 +96,44 @@ impl fmt::Display for Method {
     }
 }
 
+/// Round participation policy (engine-level; see [`crate::engine`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Participation {
+    /// today's lock-step behavior: every worker, every round
+    Full,
+    /// proceed once `quorum` messages have (simulated-)arrived; late
+    /// messages are applied next round with staleness scaling
+    Quorum,
+    /// client sampling: a deterministic `(seed, step)` draw of
+    /// `ceil(sample_frac * M)` workers participates each round
+    Sampled,
+}
+
+impl Participation {
+    pub fn parse(s: &str) -> Option<Participation> {
+        Some(match s {
+            "full" | "fullsync" => Participation::Full,
+            "quorum" => Participation::Quorum,
+            "sampled" => Participation::Sampled,
+            _ => return None,
+        })
+    }
+
+    pub fn all_names() -> &'static [&'static str] {
+        &["full", "quorum", "sampled"]
+    }
+}
+
+impl fmt::Display for Participation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Participation::Full => "full",
+            Participation::Quorum => "quorum",
+            Participation::Sampled => "sampled",
+        })
+    }
+}
+
 /// Full training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -132,6 +170,18 @@ pub struct TrainConfig {
     /// sharded reduction (1 = serial; results are bit-identical across
     /// thread counts)
     pub threads: usize,
+    /// round participation policy ("full" | "quorum" | "sampled")
+    pub participation: Participation,
+    /// quorum size k for `participation = quorum`
+    /// (0 = majority, M/2 + 1)
+    pub quorum: usize,
+    /// participating fraction for `participation = sampled`, in (0, 1]
+    pub sample_frac: f32,
+    /// netsim link preset for the virtual clock
+    /// ("datacenter" | "edge" | "hetero")
+    pub link: String,
+    /// mean of the seeded exponential straggler delay, seconds (0 = off)
+    pub straggler: f64,
     /// run tag for logs/CSV
     pub tag: String,
 }
@@ -156,6 +206,11 @@ impl Default for TrainConfig {
             use_l1_stats: true,
             shard_size: 0,
             threads: 1,
+            participation: Participation::Full,
+            quorum: 0,
+            sample_frac: 0.5,
+            link: "datacenter".into(),
+            straggler: 0.0,
             tag: String::new(),
         }
     }
@@ -188,6 +243,18 @@ impl TrainConfig {
             "use_l1_stats" => self.use_l1_stats = p(val, key)?,
             "shard_size" => self.shard_size = p(val, key)?,
             "threads" => self.threads = p(val, key)?,
+            "participation" => {
+                self.participation = Participation::parse(val).ok_or_else(|| {
+                    format!(
+                        "unknown participation {val:?} (known: {:?})",
+                        Participation::all_names()
+                    )
+                })?
+            }
+            "quorum" => self.quorum = p(val, key)?,
+            "sample_frac" => self.sample_frac = p(val, key)?,
+            "link" => self.link = val.to_string(),
+            "straggler" => self.straggler = p(val, key)?,
             "tag" => self.tag = val.to_string(),
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -238,6 +305,27 @@ impl TrainConfig {
         if self.threads == 0 {
             return Err("threads must be >= 1".into());
         }
+        if self.quorum > self.workers {
+            return Err(format!(
+                "quorum {} exceeds workers {}",
+                self.quorum, self.workers
+            ));
+        }
+        if self.participation == Participation::Sampled
+            && !(self.sample_frac > 0.0 && self.sample_frac <= 1.0)
+        {
+            return Err("sample_frac must be in (0, 1]".into());
+        }
+        if !crate::netsim::clock::preset_names().contains(&self.link.as_str()) {
+            return Err(format!(
+                "unknown link preset {:?} (known: {:?})",
+                self.link,
+                crate::netsim::clock::preset_names()
+            ));
+        }
+        if !(self.straggler >= 0.0 && self.straggler.is_finite()) {
+            return Err("straggler must be a finite number of seconds >= 0".into());
+        }
         // per-shard sparsification budgets floor at k = 1; a shard so
         // small that round(shard_size * frac_pm / 1000) == 0 would
         // silently inflate the keep fraction on every shard
@@ -260,12 +348,46 @@ impl TrainConfig {
         Ok(())
     }
 
-    /// Stable identifier used in CSV/log paths.
+    /// Quorum size with the `0 = majority` default resolved against `m`
+    /// attached workers (normally `self.workers`). Deliberately no
+    /// clamping: an out-of-range explicit quorum must fail validation
+    /// (here or in the engine), not shrink silently.
+    pub fn effective_quorum_of(&self, m: usize) -> usize {
+        if self.quorum == 0 {
+            m / 2 + 1
+        } else {
+            self.quorum
+        }
+    }
+
+    /// [`Self::effective_quorum_of`] against the configured worker count.
+    pub fn effective_quorum(&self) -> usize {
+        self.effective_quorum_of(self.workers)
+    }
+
+    /// Stable identifier used in CSV/log paths. Round-scenario knobs are
+    /// included whenever they deviate from the lock-step default — runs
+    /// that produce different trajectories must not share a CSV path
+    /// (shard_size/threads stay excluded: they are bit-identical).
     pub fn run_id(&self) -> String {
+        let mut scenario = String::new();
+        match self.participation {
+            Participation::Full => {}
+            Participation::Quorum => scenario.push_str(&format!("_q{}", self.effective_quorum())),
+            Participation::Sampled => {
+                scenario.push_str(&format!("_samp{:.0}", self.sample_frac * 100.0))
+            }
+        }
+        if self.link != "datacenter" {
+            scenario.push_str(&format!("_{}", self.link));
+        }
+        if self.straggler > 0.0 {
+            scenario.push_str(&format!("_str{:.0}ms", self.straggler * 1e3));
+        }
         let tag = if self.tag.is_empty() { String::new() } else { format!("_{}", self.tag) };
         format!(
-            "{}_{}_m{}_pm{}_s{}{}",
-            self.model, self.method, self.workers, self.frac_pm, self.seed, tag
+            "{}_{}_m{}_pm{}_s{}{}{}",
+            self.model, self.method, self.workers, self.frac_pm, self.seed, scenario, tag
         )
     }
 }
@@ -335,6 +457,55 @@ mod tests {
     }
 
     #[test]
+    fn round_knobs_set_validate_and_roundtrip() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.participation, Participation::Full);
+        c.set("participation", "quorum").unwrap();
+        c.set("quorum", "3").unwrap();
+        c.set("link", "hetero").unwrap();
+        c.set("straggler", "0.05").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.participation, Participation::Quorum);
+        assert_eq!(c.effective_quorum(), 3);
+        assert_eq!(c.link, "hetero");
+        assert!((c.straggler - 0.05).abs() < 1e-12);
+        // quorum 0 resolves to majority
+        c.quorum = 0;
+        assert_eq!(c.effective_quorum(), c.workers / 2 + 1);
+        // bad values are loud
+        assert!(c.set("participation", "anarchy").is_err());
+        c.quorum = c.workers + 1;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.set("participation", "sampled").unwrap();
+        c.set("sample_frac", "1.5").unwrap();
+        assert!(c.validate().is_err());
+        c.set("sample_frac", "0.25").unwrap();
+        c.validate().unwrap();
+        let mut c = TrainConfig::default();
+        c.set("link", "carrier-pigeon").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.set("straggler", "-1").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn round_knobs_roundtrip_through_toml() {
+        let cfg = TrainConfig::from_toml(
+            "[train]\nparticipation = \"sampled\"\nsample_frac = 0.25\n\
+             quorum = 2\nlink = \"edge\"\nstraggler = 0.01\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.participation, Participation::Sampled);
+        assert!((cfg.sample_frac - 0.25).abs() < 1e-7);
+        assert_eq!(cfg.quorum, 2);
+        assert_eq!(cfg.link, "edge");
+        assert!((cfg.straggler - 0.01).abs() < 1e-12);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn from_toml_with_train_table() {
         let cfg = TrainConfig::from_toml(
             "[train]\nmodel = \"cnn-tiny\"\nworkers = 32\nlr = 0.1\nmethod = \"mlmc-fxp\"\n",
@@ -356,5 +527,21 @@ mod tests {
     fn run_id_stable() {
         let c = TrainConfig::default();
         assert_eq!(c.run_id(), "tx-tiny_mlmc-topk_m4_pm50_s1");
+    }
+
+    #[test]
+    fn run_id_distinguishes_round_scenarios() {
+        // runs that differ only in round knobs must not share CSV paths
+        let mut c = TrainConfig::default();
+        c.set("participation", "quorum").unwrap();
+        c.set("quorum", "3").unwrap();
+        c.set("link", "hetero").unwrap();
+        c.set("straggler", "0.05").unwrap();
+        assert_eq!(c.run_id(), "tx-tiny_mlmc-topk_m4_pm50_s1_q3_hetero_str50ms");
+        let mut c = TrainConfig::default();
+        c.set("participation", "sampled").unwrap();
+        c.set("sample_frac", "0.25").unwrap();
+        assert_eq!(c.run_id(), "tx-tiny_mlmc-topk_m4_pm50_s1_samp25");
+        assert_ne!(c.run_id(), TrainConfig::default().run_id());
     }
 }

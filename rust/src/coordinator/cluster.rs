@@ -1,24 +1,24 @@
 //! Multi-process TCP cluster mode: a leader process and M worker
 //! processes, each worker with its own PJRT runtime, speaking the framed
-//! wire protocol. This is the "real distribution" path — the in-process
-//! driver in [`crate::train`] runs the identical round protocol with
+//! wire protocol. Both sides delegate the round protocol to
+//! [`crate::engine`] — the leader drives a
+//! [`RoundEngine`](crate::engine::RoundEngine) over the
+//! [`TcpLeader`](crate::transport::tcp::TcpLeader) transport, the worker
+//! runs [`engine::run_worker`] over its socket — so this file only wires
+//! processes, configs, and the XLA runtime together. The in-process
+//! driver in [`crate::train`] runs the *identical* engine with inline
 //! logical workers.
-//!
-//! Frame protocol per round:
-//!   leader → workers: `FRAME_PARAMS` carrying the flat model
-//!   worker → leader:  `FRAME_GRAD` carrying `loss(f32) | wire::encode(msg)`
-//!   leader → workers: `FRAME_SHUTDOWN` at the end.
 
 use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::{agg_kind, Server};
 use crate::data::{dirichlet_class_probs, Task};
-use crate::runtime::{ArgValue, Runtime};
+use crate::engine::{self, RoundEngine};
+use crate::runtime::Runtime;
 use crate::tensor::Rng;
-use crate::train::{build_codec, evaluate};
+use crate::train::{batch_x, build_codec, evaluate};
 use crate::transport::tcp::{TcpLeader, TcpWorker};
-use crate::transport::{params_from_bytes, params_to_bytes, Frame, FRAME_PARAMS, FRAME_SHUTDOWN};
 
 fn split_addr_args(args: &[String]) -> Result<(String, u32, Vec<String>)> {
     let mut addr = None;
@@ -75,45 +75,44 @@ pub fn leader_main(args: &[String]) -> Result<()> {
     let task = Task::for_model(&model, 42);
 
     println!("leader: waiting for {} workers on {addr}", cfg.workers);
-    let (mut leader, local) = TcpLeader::bind_and_accept(&addr, cfg.workers)?;
+    let (leader, local) = TcpLeader::bind_and_accept(&addr, cfg.workers)?;
     println!("leader: cluster up at {local}");
 
-    let mut server = Server::new(
+    let server = Server::new(
         model.init_params(cfg.seed),
         crate::optim::build(&cfg.optimizer, cfg.lr, model.param_count),
         agg_kind(&cfg.method),
     )
     .with_threads(cfg.threads);
+    let mut eng = RoundEngine::from_cfg(leader, server, &cfg)?;
     for step in 0..cfg.steps {
-        leader.broadcast(&Frame::params(params_to_bytes(&server.params)))?;
-        let frames = leader.gather()?;
-        let mut msgs = Vec::with_capacity(frames.len());
-        let mut loss_sum = 0.0f64;
-        for f in frames {
-            let loss = f32::from_le_bytes(f.payload[..4].try_into().unwrap());
-            loss_sum += loss as f64;
-            msgs.push(crate::wire::decode(&f.payload[4..]).comp);
-        }
-        server.apply_round(&msgs);
+        let rep = eng.run_round()?;
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-            let (el, ea) = evaluate(&rt, &model, &task, &server.params, cfg.eval_batches)?;
+            let (el, ea) = evaluate(&rt, &model, &task, eng.params(), cfg.eval_batches)?;
             println!(
-                "step {:>5}  train_loss {:.4}  eval_loss {:.4}  eval_acc {:.4}  bits {}",
+                "step {:>5}  train_loss {:.4}  eval_loss {:.4}  eval_acc {:.4}  bits {}  sim_t {:.3}s",
                 step + 1,
-                loss_sum / cfg.workers as f64,
+                rep.mean_loss,
                 el,
                 ea,
-                crate::util::fmt_bits(server.total_bits)
+                crate::util::fmt_bits(rep.total_bits),
+                rep.sim_now_s
             );
         }
     }
-    leader.broadcast(&Frame::shutdown())?;
-    println!("leader: done, total uplink {}", crate::util::fmt_bits(server.total_bits));
+    let sim = eng.sim_now_s();
+    let server = eng.finish()?;
+    println!(
+        "leader: done, total uplink {}  simulated time {:.3}s",
+        crate::util::fmt_bits(server.total_bits),
+        sim
+    );
     Ok(())
 }
 
 /// Worker process: computes gradients with its own PJRT runtime and
-/// streams compressed messages to the leader.
+/// streams compressed messages to the leader via the engine's worker
+/// loop (participation, framing, and shutdown all live in the engine).
 pub fn worker_main(args: &[String]) -> Result<()> {
     let (addr, id, rest) = split_addr_args(args)?;
     let cfg = cfg_from(&rest)?;
@@ -132,33 +131,14 @@ pub fn worker_main(args: &[String]) -> Result<()> {
 
     let mut worker = TcpWorker::connect(&addr, id)?;
     println!("worker {id}: connected to {addr}");
-    let mut step = 0u64;
-    loop {
-        let frame = worker.recv()?;
-        match frame.kind {
-            FRAME_PARAMS => {
-                let params = params_from_bytes(&frame.payload);
-                let probs = if hetero { Some(class_probs[id as usize].as_slice()) } else { None };
-                let b = task.train_batch(cfg.seed, id as u64, step, probs);
-                let x = if model.is_image() {
-                    ArgValue::F32(&b.x_f32)
-                } else {
-                    ArgValue::I32(&b.x_i32)
-                };
-                let (loss, grad) = rt.grad_step(&model, &params, &x, &b.y)?;
-                let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
-                let comp = codec.encode(&rt, &model, &grad, &mut rng)?;
-                let msg = crate::wire::WorkerMsg { step: step as u32, worker: id, comp };
-                let mut payload = loss.to_le_bytes().to_vec();
-                payload.extend_from_slice(&crate::wire::encode(&msg));
-                worker.send(&Frame::grad(payload))?;
-                step += 1;
-            }
-            FRAME_SHUTDOWN => {
-                println!("worker {id}: shutdown after {step} steps");
-                return Ok(());
-            }
-            other => return Err(anyhow!("worker {id}: unexpected frame kind {other}")),
-        }
-    }
+    let rounds = engine::run_worker(&mut worker, |step, params| {
+        let probs = if hetero { Some(class_probs[id as usize].as_slice()) } else { None };
+        let b = task.train_batch(cfg.seed, id as u64, step, probs);
+        let (loss, grad) = rt.grad_step(&model, params, &batch_x(&model, &b), &b.y)?;
+        let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
+        let comp = codec.encode(&rt, &model, &grad, &mut rng)?;
+        Ok((loss, comp))
+    })?;
+    println!("worker {id}: shutdown after {rounds} rounds");
+    Ok(())
 }

@@ -4,7 +4,7 @@
 use crate::compress::{
     Compressor, FixedPoint, Identity, ParCompressor, Qsgd, RandK, Rtn, SignSgd, TopK,
 };
-use crate::config::{Method, TrainConfig};
+use crate::config::{Method, Participation, TrainConfig};
 use crate::ef::{AggKind, Ef14, Ef21Sgdm, GradientEncoder, Plain};
 use crate::mlmc::{MlFixedPoint, MlFloatPoint, MlRtn, MlSTopK, Mlmc, Schedule};
 
@@ -133,6 +133,36 @@ pub fn legend(method: &Method) -> &'static str {
     }
 }
 
+/// Figure-legend label for a full run configuration: the method label
+/// plus the round-scenario knobs (participation policy, link preset,
+/// stragglers) whenever they deviate from the lock-step default — so
+/// quorum/sampled/heterogeneous series are distinguishable in the same
+/// figure.
+pub fn scenario_legend(cfg: &TrainConfig) -> String {
+    let base = legend(&cfg.method);
+    let mut parts: Vec<String> = Vec::new();
+    match cfg.participation {
+        Participation::Full => {}
+        Participation::Quorum => {
+            parts.push(format!("quorum {}/{}", cfg.effective_quorum(), cfg.workers))
+        }
+        Participation::Sampled => {
+            parts.push(format!("sampled {:.0}%", cfg.sample_frac * 100.0))
+        }
+    }
+    if cfg.link != "datacenter" {
+        parts.push(cfg.link.clone());
+    }
+    if cfg.straggler > 0.0 {
+        parts.push(format!("straggler {:.0}ms", cfg.straggler * 1e3));
+    }
+    if parts.is_empty() {
+        base.to_string()
+    } else {
+        format!("{base} [{}]", parts.join(", "))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +242,23 @@ mod tests {
             let bits = build_encoder(&cfg, g.len()).encode(&g, &mut rng).wire_bits();
             assert!(bits < sgd_bits, "{name}: {bits} !< {sgd_bits}");
         }
+    }
+
+    #[test]
+    fn scenario_legend_reflects_round_knobs() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("method", "topk").unwrap();
+        assert_eq!(scenario_legend(&cfg), "Top-k");
+        cfg.set("participation", "quorum").unwrap();
+        cfg.set("quorum", "3").unwrap();
+        cfg.set("link", "hetero").unwrap();
+        cfg.set("straggler", "0.05").unwrap();
+        assert_eq!(scenario_legend(&cfg), "Top-k [quorum 3/4, hetero, straggler 50ms]");
+        cfg.set("participation", "sampled").unwrap();
+        cfg.set("sample_frac", "0.25").unwrap();
+        cfg.set("link", "datacenter").unwrap();
+        cfg.set("straggler", "0").unwrap();
+        assert_eq!(scenario_legend(&cfg), "Top-k [sampled 25%]");
     }
 
     #[test]

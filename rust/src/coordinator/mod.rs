@@ -5,7 +5,7 @@
 pub mod cluster;
 pub mod method;
 
-pub use method::{agg_kind, build_encoder, legend, sparsify_k};
+pub use method::{agg_kind, build_encoder, legend, scenario_legend, sparsify_k};
 
 use crate::compress::Compressed;
 use crate::ef::AggKind;

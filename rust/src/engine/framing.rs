@@ -1,0 +1,218 @@
+//! Round-frame codecs: the byte layout of the leader↔worker protocol.
+//!
+//! Downstream (leader → workers), `FRAME_PARAMS`:
+//!
+//! ```text
+//! step(u32 LE) | n_participants(u32 LE) | ids(n × u32 LE) | params_to_bytes(params)
+//! ```
+//!
+//! Upstream (worker → leader), `FRAME_GRAD`:
+//!
+//! ```text
+//! loss(f32 LE) | wire::encode(WorkerMsg { step, worker, comp })
+//! ```
+//!
+//! Both decoders validate shape *before* indexing — a truncated or
+//! forged frame from a misbehaving peer is a loud `Err`, never a panic
+//! on a slice index (the deeper `wire::decode` layer keeps its
+//! documented catchable-panic stance for the internal payload body).
+
+use anyhow::{bail, Result};
+
+use crate::compress::Compressed;
+use crate::transport::{params_from_bytes, params_to_bytes, Frame, FRAME_GRAD, FRAME_PARAMS};
+use crate::wire;
+
+/// Decoded leader→worker round announcement.
+#[derive(Clone, Debug)]
+pub struct RoundDown {
+    pub step: u64,
+    /// sorted participant ids for this round
+    pub participants: Vec<u32>,
+    pub params: Vec<f32>,
+}
+
+impl RoundDown {
+    pub fn is_participant(&self, id: u32) -> bool {
+        self.participants.binary_search(&id).is_ok()
+    }
+}
+
+/// Decoded worker→leader reply.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub step: u64,
+    pub worker: u32,
+    pub loss: f32,
+    pub comp: Compressed,
+}
+
+/// Encode the round announcement carrying the current model.
+pub fn encode_round(step: u64, participants: &[u32], params: &[f32]) -> Frame {
+    let mut payload = Vec::with_capacity(8 + 4 * participants.len() + 4 + 4 * params.len());
+    payload.extend_from_slice(&(step as u32).to_le_bytes());
+    payload.extend_from_slice(&(participants.len() as u32).to_le_bytes());
+    for id in participants {
+        payload.extend_from_slice(&id.to_le_bytes());
+    }
+    payload.extend_from_slice(&params_to_bytes(params));
+    Frame { kind: FRAME_PARAMS, payload }
+}
+
+/// Decode a round announcement, validating every declared length
+/// against the actual buffer.
+pub fn decode_round(frame: &Frame) -> Result<RoundDown> {
+    if frame.kind != FRAME_PARAMS {
+        bail!("expected params frame, got kind {}", frame.kind);
+    }
+    let b = &frame.payload;
+    if b.len() < 8 {
+        bail!("round frame truncated: {} bytes, need at least 8", b.len());
+    }
+    let step = u32::from_le_bytes(b[..4].try_into().unwrap()) as u64;
+    let n = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
+    if (b.len() as u64) < 8 + 4 * n as u64 {
+        bail!("round frame declares {n} participants but only has {} bytes", b.len());
+    }
+    let ids_end = 8 + 4 * n;
+    let participants: Vec<u32> = b[8..ids_end]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let params = params_from_bytes(&b[ids_end..])?;
+    Ok(RoundDown { step, participants, params })
+}
+
+/// Encode a worker reply: loss plus the wire-encoded compressed gradient.
+pub fn encode_reply(step: u64, worker: u32, loss: f32, comp: Compressed) -> Frame {
+    let msg = wire::WorkerMsg { step: step as u32, worker, comp };
+    let mut payload = loss.to_le_bytes().to_vec();
+    payload.extend_from_slice(&wire::encode(&msg));
+    Frame::grad(payload)
+}
+
+/// loss(4) + wire header: magic(1) + step(4) + worker(4) + extra_bits(8)
+/// + payload kind(1).
+const MIN_REPLY_BYTES: usize = 4 + 18;
+
+/// Decode and validate a worker reply. `expect_worker` is the id the
+/// *transport* attributes the frame to; a mismatch with the id embedded
+/// in the message is a protocol violation, as is a reply for the wrong
+/// step or a frame of the wrong kind — all loud errors.
+pub fn decode_reply(frame: &Frame, expect_step: u64, expect_worker: u32) -> Result<Reply> {
+    if frame.kind != FRAME_GRAD {
+        bail!(
+            "worker {expect_worker}: expected grad frame at step {expect_step}, got kind {}",
+            frame.kind
+        );
+    }
+    if frame.payload.len() < MIN_REPLY_BYTES {
+        bail!(
+            "worker {expect_worker}: grad frame too short ({} bytes, need >= {MIN_REPLY_BYTES})",
+            frame.payload.len()
+        );
+    }
+    let loss = f32::from_le_bytes(frame.payload[..4].try_into().unwrap());
+    // `wire::decode` keeps its documented catchable-panic stance for the
+    // payload body; this is where the leader actually catches it, so one
+    // forged frame downgrades from process abort to a loud Err.
+    let body = &frame.payload[4..];
+    let msg = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| wire::decode(body)))
+        .map_err(|p| {
+            let what = p
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| p.downcast_ref::<&str>().copied())
+                .unwrap_or("malformed payload");
+            anyhow::anyhow!("worker {expect_worker}: corrupt grad payload: {what}")
+        })?;
+    if msg.step as u64 != expect_step {
+        bail!(
+            "worker {expect_worker}: reply for step {} arrived at step {expect_step}",
+            msg.step
+        );
+    }
+    if msg.worker != expect_worker {
+        bail!(
+            "reply id mismatch: transport says worker {expect_worker}, message says {}",
+            msg.worker
+        );
+    }
+    Ok(Reply { step: msg.step as u64, worker: msg.worker, loss, comp: msg.comp })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Payload;
+    use crate::transport::FRAME_SHUTDOWN;
+
+    #[test]
+    fn round_frame_roundtrip() {
+        let f = encode_round(7, &[0, 2, 5], &[1.5, -2.0]);
+        let down = decode_round(&f).unwrap();
+        assert_eq!(down.step, 7);
+        assert_eq!(down.participants, vec![0, 2, 5]);
+        assert_eq!(down.params, vec![1.5, -2.0]);
+        assert!(down.is_participant(2));
+        assert!(!down.is_participant(1));
+    }
+
+    #[test]
+    fn round_frame_rejects_malformed() {
+        // wrong kind
+        assert!(decode_round(&Frame::shutdown()).is_err());
+        // truncated header
+        assert!(decode_round(&Frame::params(vec![1, 2, 3])).is_err());
+        // forged participant count
+        let mut f = encode_round(0, &[0], &[1.0]);
+        f.payload[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_round(&f).is_err());
+        // truncated params tail
+        let mut f = encode_round(0, &[0], &[1.0, 2.0]);
+        f.payload.truncate(f.payload.len() - 2);
+        assert!(decode_round(&f).is_err());
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let comp = Compressed {
+            payload: Payload::Sparse { d: 100, idx: vec![3, 50], val: vec![1.0, -2.0] },
+            extra_bits: 7,
+        };
+        let f = encode_reply(9, 4, 0.75, comp);
+        let r = decode_reply(&f, 9, 4).unwrap();
+        assert_eq!(r.step, 9);
+        assert_eq!(r.worker, 4);
+        assert_eq!(r.loss, 0.75);
+        assert_eq!(r.comp.extra_bits, 7);
+        assert_eq!(r.comp.dim(), 100);
+    }
+
+    #[test]
+    fn reply_rejects_misbehaving_worker() {
+        let good = encode_reply(3, 1, 0.0, Compressed::dense(vec![1.0]));
+        // wrong kind — the pre-refactor leader would index payload[..4]
+        let bad_kind = Frame { kind: FRAME_SHUTDOWN, payload: good.payload.clone() };
+        assert!(decode_reply(&bad_kind, 3, 1).is_err());
+        // an empty / short grad frame must not panic
+        assert!(decode_reply(&Frame::grad(vec![]), 3, 1).is_err());
+        assert!(decode_reply(&Frame::grad(vec![0u8; MIN_REPLY_BYTES - 1]), 3, 1).is_err());
+        // stale step and forged worker id
+        assert!(decode_reply(&good, 4, 1).is_err());
+        assert!(decode_reply(&good, 3, 2).is_err());
+    }
+
+    #[test]
+    fn reply_with_corrupt_wire_body_is_an_error_not_a_crash() {
+        // bad magic: long enough to clear the length check, garbage after
+        // the loss — the leader must survive this with a loud Err
+        let r = decode_reply(&Frame::grad(vec![0u8; MIN_REPLY_BYTES + 8]), 3, 1);
+        assert!(r.unwrap_err().to_string().contains("corrupt grad payload"));
+        // forged element count inside an otherwise valid frame: the dense
+        // d field sits after loss(4) + wire header(17) + kind(1)
+        let mut f = encode_reply(3, 1, 0.0, Compressed::dense(vec![1.0, 2.0]));
+        f.payload[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_reply(&f, 3, 1).is_err());
+    }
+}

@@ -1,0 +1,468 @@
+//! The unified round engine: the master–server round protocol of
+//! Alg. 1/2/3 in **exactly one place**, generic over the
+//! [`Transport`](crate::transport::Transport) that moves frames.
+//!
+//! Before this module, the protocol was implemented twice — inline in
+//! the single-process driver (`train`) and again in the TCP cluster
+//! leader/worker (`coordinator::cluster`) — and only in strict
+//! lock-step. The engine unifies both and adds the scenario knobs where
+//! biased-vs-unbiased compression trade-offs actually bite (stragglers,
+//! partial participation, heterogeneous links):
+//!
+//! * **Participation policies** ([`crate::config::Participation`]):
+//!   `Full` (bit-identical to the seed lock-step loop), `Quorum { k }`
+//!   (proceed once k messages have *simulated-arrived*; late messages
+//!   are applied next round with staleness scaling), and `Sampled`
+//!   (a deterministic `(seed, step)` draw of clients per round).
+//! * **Virtual clock** ([`crate::netsim::VirtualClock`]): per-worker
+//!   heterogeneous links plus seeded straggler delays decide simulated
+//!   message arrival order and per-round simulated wall-clock time, so
+//!   every run reports time alongside the bit-exact uplink accounting.
+//!
+//! Physically every round is still one broadcast + one blocking gather
+//! of the participants' replies — lateness is decided by the *virtual*
+//! clock, which keeps every policy fully deterministic and replayable
+//! on any transport (in-process handlers, threaded channels, TCP).
+
+pub mod framing;
+
+pub use framing::{decode_reply, decode_round, encode_reply, encode_round, Reply, RoundDown};
+
+use anyhow::{bail, Result};
+
+use crate::compress::Compressed;
+use crate::config::{Participation, TrainConfig};
+use crate::coordinator::Server;
+use crate::netsim::VirtualClock;
+use crate::tensor::Rng;
+use crate::transport::{Frame, LocalStar, Transport, WorkerLink, FRAME_PARAMS, FRAME_SHUTDOWN};
+
+/// Stream salt for the client-sampling draw.
+const SAMPLE_SALT: u64 = 0x5E1EC7;
+
+/// Deterministic participant set for `(seed, step)`: a pure function,
+/// identical on every node (workers read the set from the round frame;
+/// tests call this directly). `Full` and `Quorum` involve everyone —
+/// quorum lateness is decided at gather time, not here.
+pub fn participants(
+    participation: Participation,
+    sample_frac: f32,
+    seed: u64,
+    step: u64,
+    m: usize,
+) -> Vec<u32> {
+    match participation {
+        Participation::Full | Participation::Quorum => (0..m as u32).collect(),
+        Participation::Sampled => {
+            // ceil, as documented on `Participation::Sampled`: a 30% draw
+            // over M=4 means 2 clients, never fewer than the fraction
+            let k = ((m as f64 * sample_frac as f64).ceil() as usize).clamp(1, m);
+            let mut rng = Rng::for_stream(seed ^ SAMPLE_SALT, 0, step);
+            let mut ids = rng.choose_k(m, k);
+            ids.sort_unstable();
+            ids
+        }
+    }
+}
+
+/// Engine policy + clock bundle (usually built via
+/// [`RoundEngine::from_cfg`]).
+pub struct EngineOpts {
+    pub seed: u64,
+    pub participation: Participation,
+    /// effective quorum size k (only read when `participation == Quorum`)
+    pub quorum: usize,
+    pub sample_frac: f32,
+    pub clock: VirtualClock,
+}
+
+/// A message that missed its round's quorum deadline; applied at the
+/// start of the next round, scaled down by its staleness.
+struct LateMsg {
+    sent_step: u64,
+    comp: Compressed,
+}
+
+/// What one engine round did (metrics / logging feed).
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub step: u64,
+    /// mean worker train loss over this round's replies
+    pub mean_loss: f64,
+    /// uplink bits newly applied this round (incl. stale arrivals)
+    pub bits: u64,
+    /// cumulative uplink bits across the run
+    pub total_bits: u64,
+    pub participants: usize,
+    /// replies that made this round's (simulated) deadline
+    pub on_time: usize,
+    /// replies deferred to the next round
+    pub late: usize,
+    /// previous rounds' late messages applied (staleness-scaled) now
+    pub applied_stale: usize,
+    /// simulated duration of this round, seconds
+    pub sim_round_s: f64,
+    /// simulated wall-clock since the run started, seconds
+    pub sim_now_s: f64,
+}
+
+/// The leader side of the protocol: owns the [`Server`] (aggregation +
+/// optimizer), the participation policy, the virtual clock, and the
+/// late-message buffer.
+pub struct RoundEngine<T: Transport> {
+    transport: T,
+    server: Server,
+    opts: EngineOpts,
+    pending: Vec<LateMsg>,
+    step: u64,
+    shut: bool,
+}
+
+impl<T: Transport> RoundEngine<T> {
+    pub fn new(transport: T, server: Server, opts: EngineOpts) -> Result<Self> {
+        let m = transport.workers();
+        if m == 0 {
+            bail!("round engine needs at least one worker");
+        }
+        if opts.clock.workers() != m {
+            bail!("virtual clock has {} workers, transport has {m}", opts.clock.workers());
+        }
+        if opts.participation == Participation::Quorum && !(1..=m).contains(&opts.quorum) {
+            bail!("quorum {} out of range 1..={m}", opts.quorum);
+        }
+        if opts.participation == Participation::Sampled
+            && !(opts.sample_frac > 0.0 && opts.sample_frac <= 1.0)
+        {
+            bail!("sample_frac {} out of range (0, 1]", opts.sample_frac);
+        }
+        Ok(RoundEngine { transport, server, opts, pending: Vec::new(), step: 0, shut: false })
+    }
+
+    /// Build policy + clock from the config's round knobs
+    /// (`participation` / `quorum` / `sample_frac` / `link` /
+    /// `straggler`), sized to the transport's worker count.
+    pub fn from_cfg(transport: T, server: Server, cfg: &TrainConfig) -> Result<Self> {
+        let m = transport.workers();
+        let Some(clock) = VirtualClock::from_preset(&cfg.link, m, cfg.straggler, cfg.seed) else {
+            bail!(
+                "unknown link preset {:?} (known: {:?})",
+                cfg.link,
+                crate::netsim::clock::preset_names()
+            );
+        };
+        let opts = EngineOpts {
+            seed: cfg.seed,
+            participation: cfg.participation,
+            quorum: cfg.effective_quorum_of(m),
+            sample_frac: cfg.sample_frac,
+            clock,
+        };
+        Self::new(transport, server, opts)
+    }
+
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    pub fn server_mut(&mut self) -> &mut Server {
+        &mut self.server
+    }
+
+    /// Current model parameters (leader copy).
+    pub fn params(&self) -> &[f32] {
+        &self.server.params
+    }
+
+    /// Next round index.
+    pub fn step_index(&self) -> u64 {
+        self.step
+    }
+
+    /// Simulated wall-clock since the run started.
+    pub fn sim_now_s(&self) -> f64 {
+        self.opts.clock.now_s()
+    }
+
+    /// The participant set this engine would draw at `step`.
+    pub fn participants_at(&self, step: u64) -> Vec<u32> {
+        participants(
+            self.opts.participation,
+            self.opts.sample_frac,
+            self.opts.seed,
+            step,
+            self.transport.workers(),
+        )
+    }
+
+    /// Run one full protocol round: announce + broadcast params, gather
+    /// the participants' replies, order them by the virtual clock, split
+    /// on-time from late per the policy, aggregate, and step the
+    /// optimizer. Replies are applied in worker-id order (stale arrivals
+    /// first), so results never depend on physical arrival order.
+    pub fn run_round(&mut self) -> Result<RoundReport> {
+        let step = self.step;
+        let parts = self.participants_at(step);
+        let down = encode_round(step, &parts, &self.server.params);
+        // the model broadcast ships uncompressed f32s
+        let down_bits = 32 * self.server.params.len() as u64;
+        self.transport.broadcast(&down)?;
+
+        let mut replies = self
+            .transport
+            .gather(&parts)?
+            .into_iter()
+            .map(|(id, frame)| decode_reply(&frame, step, id))
+            .collect::<Result<Vec<Reply>>>()?;
+        replies.sort_by_key(|r| r.worker);
+        let mean_loss =
+            replies.iter().map(|r| r.loss as f64).sum::<f64>() / replies.len().max(1) as f64;
+
+        // --- virtual clock: simulated arrival of every reply ------------
+        let arrivals: Vec<f64> = replies
+            .iter()
+            .map(|r| self.opts.clock.arrival_s(step, r.worker, r.comp.wire_bits(), down_bits))
+            .collect();
+        // the round lasts until the policy's deadline: the k-th smallest
+        // arrival under quorum, the last arrival otherwise. Ties at the
+        // deadline are all on time (>= k on-time messages is fine).
+        let deadline = match self.opts.participation {
+            Participation::Quorum if self.opts.quorum < arrivals.len() => {
+                let mut sorted = arrivals.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                sorted[self.opts.quorum - 1]
+            }
+            _ => arrivals.iter().copied().fold(0.0, f64::max),
+        };
+
+        // --- assemble the application set -------------------------------
+        // stale arrivals from previous rounds first, scaled by 1/(1+age):
+        // a 1-round-late gradient enters at half weight (the usual
+        // staleness-aware damping for asynchronous SGD)
+        let mut msgs: Vec<Compressed> = Vec::with_capacity(self.pending.len() + replies.len());
+        let applied_stale = self.pending.len();
+        for late in self.pending.drain(..) {
+            let age = step.saturating_sub(late.sent_step).max(1);
+            let mut comp = late.comp;
+            comp.payload.scale_values(1.0 / (1.0 + age as f32));
+            msgs.push(comp);
+        }
+        let mut late = 0usize;
+        for (reply, arrival) in replies.into_iter().zip(&arrivals) {
+            if *arrival <= deadline {
+                msgs.push(reply.comp);
+            } else {
+                self.pending.push(LateMsg { sent_step: step, comp: reply.comp });
+                late += 1;
+            }
+        }
+        let on_time = msgs.len() - applied_stale;
+
+        let bits = self.server.apply_round(&msgs);
+        let sim_now_s = self.opts.clock.advance(deadline);
+        self.step += 1;
+        Ok(RoundReport {
+            step,
+            mean_loss,
+            bits,
+            total_bits: self.server.total_bits,
+            participants: parts.len(),
+            on_time,
+            late,
+            applied_stale,
+            sim_round_s: deadline,
+            sim_now_s,
+        })
+    }
+
+    /// Tell every worker the run is over (idempotent).
+    pub fn shutdown(&mut self) -> Result<()> {
+        if !self.shut {
+            self.transport.shutdown()?;
+            self.shut = true;
+        }
+        Ok(())
+    }
+
+    /// Shut down and hand back the server (final params, bit totals).
+    pub fn finish(mut self) -> Result<Server> {
+        self.shutdown()?;
+        Ok(self.server)
+    }
+}
+
+/// What serving one downstream frame produced on the worker side.
+pub enum ServeOutcome {
+    /// a reply frame to send upstream
+    Reply(Frame),
+    /// this worker sat the round out (not in the participant set)
+    Idle,
+    /// the leader ended the run
+    Shutdown,
+}
+
+/// Worker-side protocol step: decode one downstream frame, run `compute`
+/// if this worker participates, encode the reply. `compute` maps
+/// `(step, params)` to `(loss, compressed gradient)`.
+pub fn serve_frame(
+    frame: &Frame,
+    id: u32,
+    compute: &mut dyn FnMut(u64, &[f32]) -> Result<(f32, Compressed)>,
+) -> Result<ServeOutcome> {
+    match frame.kind {
+        FRAME_SHUTDOWN => Ok(ServeOutcome::Shutdown),
+        FRAME_PARAMS => {
+            let down = decode_round(frame)?;
+            if !down.is_participant(id) {
+                return Ok(ServeOutcome::Idle);
+            }
+            let (loss, comp) = compute(down.step, &down.params)?;
+            Ok(ServeOutcome::Reply(encode_reply(down.step, id, loss, comp)))
+        }
+        other => bail!("worker {id}: unexpected frame kind {other}"),
+    }
+}
+
+/// Blocking worker loop over any [`WorkerLink`]: serve rounds until the
+/// leader shuts the run down. Returns the number of rounds this worker
+/// actually computed.
+pub fn run_worker<L: WorkerLink>(
+    link: &mut L,
+    mut compute: impl FnMut(u64, &[f32]) -> Result<(f32, Compressed)>,
+) -> Result<u64> {
+    let id = link.id();
+    let mut served = 0u64;
+    loop {
+        let frame = link.recv()?;
+        match serve_frame(&frame, id, &mut compute)? {
+            ServeOutcome::Reply(reply) => {
+                link.send(&reply)?;
+                served += 1;
+            }
+            ServeOutcome::Idle => {}
+            ServeOutcome::Shutdown => return Ok(served),
+        }
+    }
+}
+
+/// Per-worker compute closure for the in-process transport.
+pub type Compute<'a> = Box<dyn FnMut(u64, &[f32]) -> Result<(f32, Compressed)> + 'a>;
+
+/// Build the in-process star transport from per-worker compute closures
+/// (the single-process driver path: the xla wrappers are `!Send`, so
+/// logical workers run inline on the caller's thread). Each handler is
+/// [`serve_frame`] around its closure — the protocol stays in here.
+pub fn local_star(computes: Vec<Compute<'_>>) -> LocalStar<'_> {
+    LocalStar::new(
+        computes
+            .into_iter()
+            .enumerate()
+            .map(|(id, mut compute)| {
+                Box::new(move |frame: &Frame| -> Result<Option<Frame>> {
+                    match serve_frame(frame, id as u32, &mut *compute)? {
+                        ServeOutcome::Reply(reply) => Ok(Some(reply)),
+                        ServeOutcome::Idle | ServeOutcome::Shutdown => Ok(None),
+                    }
+                }) as crate::transport::local::Handler<'_>
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ef::AggKind;
+    use crate::optim::Sgd;
+
+    fn dense_star(m: usize, d: usize) -> LocalStar<'static> {
+        // worker w replies with a constant dense "gradient" of w+1
+        local_star(
+            (0..m)
+                .map(|w| {
+                    Box::new(move |_step: u64, params: &[f32]| -> Result<(f32, Compressed)> {
+                        Ok((w as f32, Compressed::dense(vec![(w + 1) as f32; params.len()])))
+                    }) as Compute<'static>
+                })
+                .collect(),
+        )
+    }
+
+    fn cfg(m: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.workers = m;
+        cfg
+    }
+
+    #[test]
+    fn fullsync_round_averages_like_the_server() {
+        let d = 4;
+        let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        let mut eng = RoundEngine::from_cfg(dense_star(2, d), server, &cfg(2)).unwrap();
+        let rep = eng.run_round().unwrap();
+        // mean of [1,1,..] and [2,2,..] is 1.5; lr 1 step from 0
+        assert_eq!(eng.params().to_vec(), vec![-1.5f32; 4]);
+        assert_eq!(rep.participants, 2);
+        assert_eq!(rep.on_time, 2);
+        assert_eq!(rep.late, 0);
+        assert_eq!(rep.mean_loss, 0.5);
+        assert!(rep.sim_round_s > 0.0);
+        assert_eq!(rep.sim_now_s, eng.sim_now_s());
+        assert_eq!(rep.total_bits, eng.server().total_bits);
+        eng.shutdown().unwrap();
+    }
+
+    #[test]
+    fn quorum_defers_and_applies_stale_with_damping() {
+        let d = 2;
+        let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        let mut c = cfg(2);
+        c.participation = Participation::Quorum;
+        c.quorum = 1;
+        c.link = "hetero".into();
+        c.straggler = 10.0; // huge spread: exactly one message makes each deadline
+        let mut eng = RoundEngine::from_cfg(dense_star(2, d), server, &c).unwrap();
+        let r0 = eng.run_round().unwrap();
+        assert_eq!(r0.on_time + r0.late, 2);
+        assert_eq!(r0.applied_stale, 0);
+        let r1 = eng.run_round().unwrap();
+        assert_eq!(r1.applied_stale, r0.late);
+        // bits are counted exactly once per message, when applied;
+        // r1's own late message is still pending and not yet counted
+        let applied = (r0.on_time + r1.applied_stale + r1.on_time) as u64;
+        assert_eq!(r1.total_bits, applied * 2 * 32);
+        // simulated time advanced monotonically
+        assert!(r1.sim_now_s > r0.sim_now_s);
+        eng.shutdown().unwrap();
+    }
+
+    #[test]
+    fn sampled_round_only_hears_the_drawn_clients() {
+        let d = 3;
+        let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.1 }), AggKind::Fresh);
+        let mut c = cfg(8);
+        c.participation = Participation::Sampled;
+        c.sample_frac = 0.25;
+        let mut eng = RoundEngine::from_cfg(dense_star(8, d), server, &c).unwrap();
+        for step in 0..5 {
+            let parts = eng.participants_at(step);
+            assert_eq!(parts.len(), 2);
+            let rep = eng.run_round().unwrap();
+            assert_eq!(rep.participants, 2);
+            assert_eq!(rep.on_time, 2);
+        }
+        eng.shutdown().unwrap();
+    }
+
+    #[test]
+    fn engine_rejects_bad_opts() {
+        let server = || Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        let mut c = cfg(2);
+        c.link = "bogus".into();
+        assert!(RoundEngine::from_cfg(dense_star(2, 2), server(), &c).is_err());
+        let mut c = cfg(2);
+        c.participation = Participation::Quorum;
+        c.quorum = 3; // > m
+        assert!(RoundEngine::from_cfg(dense_star(2, 2), server(), &c).is_err());
+        assert!(RoundEngine::from_cfg(local_star(vec![]), server(), &cfg(1)).is_err());
+    }
+}

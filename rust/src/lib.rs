@@ -27,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod ef;
+pub mod engine;
 pub mod figures;
 pub mod metrics;
 pub mod mlmc;

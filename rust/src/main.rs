@@ -50,12 +50,19 @@ fn print_help() {
          \x20 leader   --addr H:P [--key=value ...]        TCP cluster leader\n\
          \x20 worker   --addr H:P --id N [--key=value ...] TCP cluster worker\n\
          \x20 info                                         list artifacts/models\n\n\
-         config keys: {}\n",
+         config keys: {}\n\n\
+         round-engine keys:\n\
+         \x20 participation  full | quorum | sampled        round policy\n\
+         \x20 quorum         k (0 = majority)               proceed at k arrivals; late msgs applied next round\n\
+         \x20 sample_frac    (0,1]                          client fraction for participation=sampled\n\
+         \x20 link           datacenter | edge | hetero     netsim virtual-clock preset\n\
+         \x20 straggler      seconds                        mean seeded straggler delay (0 = off)\n",
         [
             "model", "method", "workers", "steps", "lr", "seed", "frac_pm",
             "quant_bits", "eval_every", "eval_batches", "transport",
             "optimizer", "momentum_beta", "dirichlet_alpha", "use_l1_stats",
-            "shard_size", "threads", "tag",
+            "shard_size", "threads", "participation", "quorum", "sample_frac",
+            "link", "straggler", "tag",
         ]
         .join(", ")
     );
@@ -93,6 +100,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let csv = util::results_dir().join(format!("train_{}.csv", cfg.run_id()));
     println!("run {}: model={} method={} M={} steps={} lr={}",
         cfg.run_id(), cfg.model, cfg.method, cfg.workers, cfg.steps, cfg.lr);
+    println!("legend: {}", mlmc_dist::coordinator::scenario_legend(&cfg));
     let t = std::time::Instant::now();
     let r = train::run_with_csv(&rt, &cfg, Some(&csv))?;
     let (el, ea) = r
@@ -104,13 +112,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .map(|p| (p.eval_loss, p.eval_acc))
         .unwrap_or((f64::NAN, f64::NAN));
     println!(
-        "done in {:.1}s: codec={} final_train_loss={:.4} eval_loss={:.4} eval_acc={:.4} bits={}",
+        "done in {:.1}s: codec={} final_train_loss={:.4} eval_loss={:.4} eval_acc={:.4} \
+         bits={} sim_time={:.3}s",
         t.elapsed().as_secs_f64(),
         r.codec_name,
         r.curve.tail_loss(5),
         el,
         ea,
-        util::fmt_bits(r.total_bits)
+        util::fmt_bits(r.total_bits),
+        r.sim_time_s
     );
     println!("curve: {}", csv.display());
     Ok(())

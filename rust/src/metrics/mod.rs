@@ -14,6 +14,9 @@ pub struct Point {
     pub step: u64,
     /// cumulative uplink bits across all workers (figure x-axis)
     pub bits: u64,
+    /// simulated wall-clock seconds (netsim virtual clock; NaN when the
+    /// producer does not simulate time) — the figures' second x-axis
+    pub sim_s: f64,
     pub train_loss: f64,
     pub eval_loss: f64,
     pub eval_acc: f64,
@@ -37,15 +40,30 @@ impl Curve {
     pub fn with_csv(name: impl Into<String>, path: &Path) -> std::io::Result<Self> {
         let mut c = Curve::new(name);
         let mut w = BufWriter::new(File::create(path)?);
-        writeln!(w, "step,bits,train_loss,eval_loss,eval_acc,wall_ms")?;
+        writeln!(w, "step,bits,sim_s,train_loss,eval_loss,eval_acc,wall_ms")?;
         c.sink = Some(w);
         Ok(c)
     }
 
+    /// Log a point without a simulated timestamp (`sim_s = NaN`).
     pub fn log(&mut self, step: u64, bits: u64, train_loss: f64, eval_loss: f64, eval_acc: f64) {
+        self.log_at(step, bits, f64::NAN, train_loss, eval_loss, eval_acc);
+    }
+
+    /// Log a point carrying the virtual clock's simulated wall-clock.
+    pub fn log_at(
+        &mut self,
+        step: u64,
+        bits: u64,
+        sim_s: f64,
+        train_loss: f64,
+        eval_loss: f64,
+        eval_acc: f64,
+    ) {
         let p = Point {
             step,
             bits,
+            sim_s,
             train_loss,
             eval_loss,
             eval_acc,
@@ -54,8 +72,8 @@ impl Curve {
         if let Some(w) = &mut self.sink {
             let _ = writeln!(
                 w,
-                "{},{},{:.6},{:.6},{:.6},{:.1}",
-                p.step, p.bits, p.train_loss, p.eval_loss, p.eval_acc, p.wall_ms
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.1}",
+                p.step, p.bits, p.sim_s, p.train_loss, p.eval_loss, p.eval_acc, p.wall_ms
             );
         }
         self.points.push(p);
@@ -140,13 +158,22 @@ mod tests {
         let path = dir.join("curve.csv");
         {
             let mut c = Curve::with_csv("t", &path).unwrap();
-            c.log(1, 64, 1.5, 1.4, 0.6);
+            c.log_at(1, 64, 0.125, 1.5, 1.4, 0.6);
             c.flush();
         }
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.starts_with("step,bits"));
+        assert!(text.starts_with("step,bits,sim_s"));
         assert!(text.lines().count() == 2);
-        assert!(text.contains("1,64,1.5"));
+        assert!(text.contains("1,64,0.125000,1.5"));
+    }
+
+    #[test]
+    fn log_without_sim_time_records_nan() {
+        let mut c = Curve::new("t");
+        c.log(1, 10, 0.5, 0.4, 0.9);
+        assert!(c.points[0].sim_s.is_nan());
+        c.log_at(2, 20, 3.5, 0.4, 0.3, 0.95);
+        assert_eq!(c.points[1].sim_s, 3.5);
     }
 
     #[test]

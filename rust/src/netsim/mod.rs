@@ -2,6 +2,14 @@
 //! wall-clock communication time for a parameterized link, so the
 //! bits-x-axis figures can also be read as time-x-axis (the paper's
 //! motivation: communication is the bottleneck, §1).
+//!
+//! [`clock`] builds on this: a deterministic per-worker virtual clock
+//! (heterogeneous links + seeded straggler delays) that the round engine
+//! uses to decide simulated message arrival order.
+
+pub mod clock;
+
+pub use clock::VirtualClock;
 
 /// A simple star-topology link model (every worker has an identical
 /// uplink to the server).

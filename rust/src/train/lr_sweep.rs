@@ -1,7 +1,10 @@
 //! Per-method learning-rate tuning (paper §5.1: "optimized the learning
 //! rate for each one individually"). Geometric grid sweep on the
 //! synthetic-objective harness (fast, no XLA) or on real models via the
-//! training driver; selects by tail loss / final suboptimality.
+//! training driver; selects by tail loss / final suboptimality. Both
+//! paths run through the unified [`crate::engine::RoundEngine`], so a
+//! sweep can tune under any participation/link scenario by setting the
+//! round knobs on the base config.
 
 use crate::config::{Method, TrainConfig};
 use crate::train::synthetic::{run_quadratic, synth_cfg, Quadratic};

@@ -1,12 +1,14 @@
 //! Training driver: glues runtime (L2/L1 artifacts) + coordinator +
-//! data + metrics into the synchronous data-parallel loop of
-//! Alg. 1/2/3.
+//! data + metrics into the data-parallel loop of Alg. 1/2/3, driven by
+//! the unified [`crate::engine::RoundEngine`].
 //!
-//! Workers are *logical* within one process: each has its own data
-//! stream, RNG stream, and (possibly stateful) encoder, and they share
-//! the PJRT runtime sequentially (single-core testbed; the xla wrappers
-//! are `!Send` — see [`crate::runtime`]). The multi-process TCP mode in
-//! `examples/tcp_cluster.rs` runs the same protocol over sockets.
+//! Workers are *logical* within one process: each is a compute closure
+//! behind the inline [`crate::transport::LocalStar`] transport, with its
+//! own data stream, RNG stream, and (possibly stateful) encoder; they
+//! share the PJRT runtime sequentially (single-core testbed; the xla
+//! wrappers are `!Send` — see [`crate::runtime`]). The multi-process TCP
+//! mode (`mlmc-dist leader/worker`, `examples/tcp_cluster.rs`) runs the
+//! *same engine* over sockets.
 
 pub mod lr_sweep;
 pub mod synthetic;
@@ -18,6 +20,7 @@ use crate::config::{Method, TrainConfig};
 use crate::coordinator::{agg_kind, build_encoder, Server};
 use crate::data::{dirichlet_class_probs, Batch, Task};
 use crate::ef::GradientEncoder;
+use crate::engine::{self, Compute, RoundEngine};
 use crate::metrics::Curve;
 use crate::mlmc::{stopk::StopkCtx, MlSTopK, Mlmc, Schedule};
 use crate::runtime::{ArgValue, ModelMeta, Runtime};
@@ -109,11 +112,15 @@ pub struct TrainResult {
     pub cfg: TrainConfig,
     pub curve: Curve,
     pub total_bits: u64,
+    /// simulated wall-clock of the whole run (netsim virtual clock)
+    pub sim_time_s: f64,
     pub final_params: Vec<f32>,
     pub codec_name: String,
 }
 
-fn batch_x<'a>(model: &ModelMeta, b: &'a Batch) -> ArgValue<'a> {
+/// Pick the runtime argument view for a batch (image models take f32
+/// pixels, token models take i32 ids).
+pub fn batch_x<'a>(model: &ModelMeta, b: &'a Batch) -> ArgValue<'a> {
     if model.is_image() {
         ArgValue::F32(&b.x_f32)
     } else {
@@ -166,62 +173,73 @@ pub fn run_with_csv(
     );
     let hetero = cfg.dirichlet_alpha > 0.0 && task.n_classes() > 0;
 
-    let mut codecs: Vec<Codec> = (0..cfg.workers).map(|_| build_codec(cfg, &model)).collect();
-    let codec_name = codecs[0].name();
+    let codec_name = build_codec(cfg, &model).name();
 
-    let params = model.init_params(cfg.seed);
-    let mut server = Server::new(
-        params,
+    let server = Server::new(
+        model.init_params(cfg.seed),
         crate::optim::build(&cfg.optimizer, cfg.lr, model.param_count),
         agg_kind(&cfg.method),
     )
     .with_threads(cfg.threads);
+
+    // logical workers: one compute closure each behind the inline star
+    // transport; the engine owns the whole round protocol from here on
+    let model_ref = &model;
+    let task_ref = &task;
+    let computes: Vec<Compute<'_>> = (0..cfg.workers)
+        .map(|w| {
+            let mut codec = build_codec(cfg, &model);
+            let probs = if hetero { Some(class_probs[w].clone()) } else { None };
+            Box::new(move |step: u64, params: &[f32]| -> Result<(f32, Compressed)> {
+                let b = task_ref.train_batch(cfg.seed, w as u64, step, probs.as_deref());
+                let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, w as u64, step);
+                // fused single-dispatch path when the artifact exists
+                let fused = codec.fused_frac().filter(|pm| model_ref.gradstats.contains_key(pm));
+                if let Some(pm) = fused {
+                    let (loss, grad, seg_sq, perm) =
+                        rt.grad_stats_step(model_ref, pm, params, &batch_x(model_ref, &b), &b.y)?;
+                    Ok((loss, codec.encode_with_stats(&grad, seg_sq, perm, &mut rng)))
+                } else {
+                    let (loss, grad) =
+                        rt.grad_step(model_ref, params, &batch_x(model_ref, &b), &b.y)?;
+                    Ok((loss, codec.encode(rt, model_ref, &grad, &mut rng)?))
+                }
+            }) as Compute<'_>
+        })
+        .collect();
+    let mut eng = RoundEngine::from_cfg(engine::local_star(computes), server, cfg)?;
 
     let mut curve = match csv {
         Some(path) => Curve::with_csv(cfg.run_id(), path)?,
         None => Curve::new(cfg.run_id()),
     };
 
-    let mut msgs: Vec<Compressed> = Vec::with_capacity(cfg.workers);
     for step in 0..cfg.steps {
-        msgs.clear();
-        let mut loss_sum = 0.0f64;
-        for (w, codec) in codecs.iter_mut().enumerate() {
-            let probs = if hetero { Some(class_probs[w].as_slice()) } else { None };
-            let b = task.train_batch(cfg.seed, w as u64, step as u64, probs);
-            let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, w as u64, step as u64);
-            // fused single-dispatch path when the artifact exists
-            let fused = codec.fused_frac().filter(|pm| model.gradstats.contains_key(pm));
-            let msg = if let Some(pm) = fused {
-                let (loss, grad, seg_sq, perm) =
-                    rt.grad_stats_step(&model, pm, &server.params, &batch_x(&model, &b), &b.y)?;
-                loss_sum += loss as f64;
-                codec.encode_with_stats(&grad, seg_sq, perm, &mut rng)
-            } else {
-                let (loss, grad) =
-                    rt.grad_step(&model, &server.params, &batch_x(&model, &b), &b.y)?;
-                loss_sum += loss as f64;
-                codec.encode(rt, &model, &grad, &mut rng)?
-            };
-            msgs.push(msg);
-        }
-        server.apply_round(&msgs);
-        let train_loss = loss_sum / cfg.workers as f64;
-
+        let rep = eng.run_round()?;
         let last = step + 1 == cfg.steps;
         if (cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0) || last {
-            let (el, ea) = evaluate(rt, &model, &task, &server.params, cfg.eval_batches)?;
-            curve.log(step as u64 + 1, server.total_bits, train_loss, el, ea);
+            let (el, ea) = evaluate(rt, &model, &task, eng.params(), cfg.eval_batches)?;
+            curve.log_at(step as u64 + 1, rep.total_bits, rep.sim_now_s, rep.mean_loss, el, ea);
         } else {
-            curve.log(step as u64 + 1, server.total_bits, train_loss, f64::NAN, f64::NAN);
+            curve.log_at(
+                step as u64 + 1,
+                rep.total_bits,
+                rep.sim_now_s,
+                rep.mean_loss,
+                f64::NAN,
+                f64::NAN,
+            );
         }
     }
     curve.flush();
 
+    let sim_time_s = eng.sim_now_s();
+    let server = eng.finish()?;
     Ok(TrainResult {
         cfg: cfg.clone(),
         curve,
         total_bits: server.total_bits,
+        sim_time_s,
         final_params: server.params,
         codec_name,
     })

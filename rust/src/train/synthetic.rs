@@ -4,8 +4,10 @@
 //! parallelization comparison (App. F.3), all on objectives with known
 //! optima so the error is measured exactly.
 
+use crate::compress::Compressed;
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::{agg_kind, build_encoder, Server};
+use crate::engine::{self, Compute, RoundEngine};
 use crate::tensor::{self, Rng};
 
 /// A distributed least-squares problem: worker i holds
@@ -57,43 +59,55 @@ impl Quadratic {
 pub struct SynthResult {
     pub final_suboptimality: f64,
     pub total_bits: u64,
+    /// simulated wall-clock of the run (netsim virtual clock)
+    pub sim_time_s: f64,
     /// mean ‖x − x*‖² over the final quarter of steps (noise-robust)
     pub tail_suboptimality: f64,
+    pub final_params: Vec<f32>,
 }
 
-/// Run Alg. 1/2/3 (per `cfg.method`) on a [`Quadratic`]. Uses the same
-/// encoder registry as the real training driver, so the full method
-/// matrix is exercised without XLA in the loop.
+/// Run Alg. 1/2/3 (per `cfg.method`) on a [`Quadratic`] through the
+/// unified [`RoundEngine`]. Uses the same encoder registry as the real
+/// training driver, so the full method × participation-policy matrix is
+/// exercised without XLA in the loop. With `participation = full` the
+/// result is bit-identical to the pre-engine lock-step loop
+/// (`tests/prop_engine.rs` pins this).
 pub fn run_quadratic(problem: &Quadratic, cfg: &TrainConfig) -> SynthResult {
     let d = problem.d;
-    let mut encoders: Vec<_> = (0..cfg.workers).map(|_| build_encoder(cfg, d)).collect();
-    let mut server = Server::new(
+    let server = Server::new(
         vec![0.0; d],
         Box::new(crate::optim::Sgd { lr: cfg.lr }),
         agg_kind(&cfg.method),
     )
     .with_threads(cfg.threads);
+    let computes: Vec<Compute<'_>> = (0..cfg.workers)
+        .map(|w| {
+            let mut enc = build_encoder(cfg, d);
+            Box::new(move |step: u64, params: &[f32]| -> anyhow::Result<(f32, Compressed)> {
+                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                let g = problem.grad(w, params, &mut rng);
+                Ok((0.0f32, enc.encode(&g, &mut rng)))
+            }) as Compute<'_>
+        })
+        .collect();
+    let mut eng = RoundEngine::from_cfg(engine::local_star(computes), server, cfg)
+        .expect("engine options rejected (validate() should have caught this)");
     let mut tail = Vec::new();
     let tail_start = cfg.steps - cfg.steps / 4;
     for step in 0..cfg.steps {
-        let msgs: Vec<_> = encoders
-            .iter_mut()
-            .enumerate()
-            .map(|(w, enc)| {
-                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step as u64);
-                let g = problem.grad(w, &server.params, &mut rng);
-                enc.encode(&g, &mut rng)
-            })
-            .collect();
-        server.apply_round(&msgs);
+        eng.run_round().expect("in-process round failed");
         if step >= tail_start {
-            tail.push(problem.suboptimality(&server.params));
+            tail.push(problem.suboptimality(eng.params()));
         }
     }
+    let sim_time_s = eng.sim_now_s();
+    let server = eng.finish().expect("shutdown failed");
     SynthResult {
         final_suboptimality: problem.suboptimality(&server.params),
         total_bits: server.total_bits,
+        sim_time_s,
         tail_suboptimality: tail.iter().sum::<f64>() / tail.len().max(1) as f64,
+        final_params: server.params,
     }
 }
 

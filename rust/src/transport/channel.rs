@@ -2,7 +2,9 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-use super::Frame;
+use anyhow::{anyhow, bail, Result};
+
+use super::{Frame, Transport, WorkerLink};
 
 /// Leader side: receives tagged frames from all workers, can broadcast.
 pub struct Leader {
@@ -53,6 +55,44 @@ impl Leader {
     }
 }
 
+impl Transport for Leader {
+    fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        Leader::broadcast(self, frame);
+        Ok(())
+    }
+
+    /// Replies arrive in thread-scheduling order; the set of senders must
+    /// match `ids` exactly (each participant sends exactly one frame per
+    /// round, so anything else is a protocol violation).
+    fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
+        let mut want: Vec<u32> = ids.to_vec();
+        let mut out = Vec::with_capacity(ids.len());
+        for _ in 0..ids.len() {
+            let (id, frame) = self
+                .rx
+                .recv()
+                .map_err(|_| anyhow!("worker channel closed mid-round"))?;
+            match want.iter().position(|w| *w == id) {
+                Some(p) => {
+                    want.swap_remove(p);
+                }
+                None => bail!("unexpected reply from worker {id}"),
+            }
+            out.push((id, frame));
+        }
+        Ok(out)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        Leader::broadcast(self, &Frame::shutdown());
+        Ok(())
+    }
+}
+
 impl WorkerPort {
     pub fn send(&self, frame: Frame) {
         let _ = self.tx.send((self.id, frame));
@@ -60,6 +100,22 @@ impl WorkerPort {
 
     pub fn recv(&self) -> Option<Frame> {
         self.rx.recv().ok()
+    }
+}
+
+impl WorkerLink for WorkerPort {
+    fn id(&self) -> u32 {
+        self.id
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        self.rx.recv().map_err(|_| anyhow!("leader channel closed"))
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.tx
+            .send((self.id, frame.clone()))
+            .map_err(|_| anyhow!("leader channel closed"))
     }
 }
 
@@ -77,7 +133,7 @@ mod tests {
                 std::thread::spawn(move || {
                     // worker: wait for params, reply with 2x params
                     let f = p.recv().unwrap();
-                    let params = params_from_bytes(&f.payload);
+                    let params = params_from_bytes(&f.payload).unwrap();
                     let doubled: Vec<f32> = params.iter().map(|x| 2.0 * x).collect();
                     p.send(Frame::grad(params_to_bytes(&doubled)));
                     // then expect shutdown
@@ -93,7 +149,7 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3]);
         for (_, f) in &replies {
-            assert_eq!(params_from_bytes(&f.payload), vec![2.0, 4.0]);
+            assert_eq!(params_from_bytes(&f.payload).unwrap(), vec![2.0, 4.0]);
         }
         leader.broadcast(&Frame::shutdown());
         for h in handles {
@@ -110,5 +166,20 @@ mod tests {
         drop(ports); // second worker never sends
         let got = leader.gather(2);
         assert_eq!(got.len(), 1); // no deadlock: channel closed ends gather
+    }
+
+    #[test]
+    fn transport_gather_matches_participant_set() {
+        let (mut leader, ports) = star(3);
+        // only workers 0 and 2 participate this round
+        ports[0].send(Frame::grad(vec![10]));
+        ports[2].send(Frame::grad(vec![12]));
+        let got = Transport::gather(&mut leader, &[0, 2]).unwrap();
+        let mut ids: Vec<u32> = got.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 2]);
+        // an unexpected sender is a protocol violation
+        ports[1].send(Frame::grad(vec![11]));
+        assert!(Transport::gather(&mut leader, &[0]).is_err());
     }
 }

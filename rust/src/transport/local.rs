@@ -1,0 +1,118 @@
+//! Inline single-thread star: worker handlers run on the *caller's*
+//! thread at broadcast time. This is the transport behind the
+//! single-process training driver — the xla wrappers are `!Send`, so the
+//! M logical workers cannot live on their own threads; instead each is a
+//! closure invoked inline when the leader broadcasts, and its reply is
+//! queued for the next `gather`.
+//!
+//! The handlers are protocol-agnostic (`&Frame -> Option<Frame>`);
+//! [`crate::engine::local_star`] builds them from per-worker compute
+//! closures so the round protocol itself stays in the engine.
+
+use anyhow::{anyhow, Result};
+
+use super::{Frame, Transport};
+
+/// A worker handler: consumes a downstream frame, optionally produces
+/// one upstream reply (participation policies make "no reply" normal).
+pub type Handler<'a> = Box<dyn FnMut(&Frame) -> Result<Option<Frame>> + 'a>;
+
+/// In-process star of inline worker handlers.
+pub struct LocalStar<'a> {
+    handlers: Vec<Handler<'a>>,
+    inbox: Vec<Option<Frame>>,
+}
+
+impl<'a> LocalStar<'a> {
+    pub fn new(handlers: Vec<Handler<'a>>) -> Self {
+        let n = handlers.len();
+        LocalStar { handlers, inbox: (0..n).map(|_| None).collect() }
+    }
+}
+
+impl Transport for LocalStar<'_> {
+    fn workers(&self) -> usize {
+        self.handlers.len()
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        for (i, h) in self.handlers.iter_mut().enumerate() {
+            if let Some(reply) = h(frame)? {
+                self.inbox[i] = Some(reply);
+            }
+        }
+        Ok(())
+    }
+
+    fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
+        ids.iter()
+            .map(|&id| {
+                self.inbox
+                    .get_mut(id as usize)
+                    .and_then(Option::take)
+                    .map(|f| (id, f))
+                    .ok_or_else(|| anyhow!("local worker {id} has no queued reply"))
+            })
+            .collect()
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.broadcast(&Frame::shutdown())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::FRAME_SHUTDOWN;
+
+    // handlers echo the payload with their id appended; the shutdown
+    // log is shared state to observe that broadcast reaches everyone
+    fn echo_star(n: usize, log: &std::cell::RefCell<Vec<u32>>) -> LocalStar<'_> {
+        let handlers: Vec<Handler<'_>> = (0..n as u32)
+            .map(|id| {
+                Box::new(move |f: &Frame| {
+                    if f.kind == FRAME_SHUTDOWN {
+                        log.borrow_mut().push(id);
+                        return Ok(None);
+                    }
+                    let mut p = f.payload.clone();
+                    p.push(id as u8);
+                    Ok(Some(Frame::grad(p)))
+                }) as Handler<'_>
+            })
+            .collect();
+        LocalStar::new(handlers)
+    }
+
+    #[test]
+    fn broadcast_gather_roundtrip() {
+        let log = std::cell::RefCell::new(Vec::new());
+        let mut star = echo_star(3, &log);
+        assert_eq!(star.workers(), 3);
+        star.broadcast(&Frame::params(vec![7])).unwrap();
+        let got = star.gather(&[0, 2]).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], (0, Frame::grad(vec![7, 0])));
+        assert_eq!(got[1], (2, Frame::grad(vec![7, 2])));
+        // worker 1's reply is still queued; the next round overwrites it
+        star.broadcast(&Frame::params(vec![9])).unwrap();
+        let got = star.gather(&[1]).unwrap();
+        assert_eq!(got[0].1.payload, vec![9, 1]);
+    }
+
+    #[test]
+    fn gather_missing_reply_errors() {
+        let log = std::cell::RefCell::new(Vec::new());
+        let mut star = echo_star(2, &log);
+        assert!(star.gather(&[0]).is_err());
+        assert!(star.gather(&[9]).is_err());
+    }
+
+    #[test]
+    fn shutdown_reaches_all_handlers() {
+        let log = std::cell::RefCell::new(Vec::new());
+        echo_star(3, &log).shutdown().unwrap();
+        assert_eq!(*log.borrow(), vec![0, 1, 2]);
+    }
+}

@@ -1,14 +1,26 @@
 //! Transports for the leader/worker star topology (paper §2.1's
 //! master-server model).
 //!
+//! * [`local`] — inline handlers on the caller's thread: the
+//!   single-process driver path ([`crate::train`]), where logical
+//!   workers share the thread because the xla wrappers are `!Send`.
 //! * [`channel`] — in-process mpsc star for threaded coordination tests
 //!   and the single-process simulator.
 //! * [`tcp`] — real sockets with length-framed messages for the
 //!   multi-process cluster mode (`examples/tcp_cluster.rs`); one PJRT
 //!   runtime per worker process.
+//!
+//! All three implement the leader-side [`Transport`] trait (and, where a
+//! worker endpoint exists, the worker-side [`WorkerLink`]), so the round
+//! protocol itself lives in exactly one place: [`crate::engine`].
 
 pub mod channel;
+pub mod local;
 pub mod tcp;
+
+use anyhow::{bail, Result};
+
+pub use local::LocalStar;
 
 /// Frame kinds exchanged on the wire.
 pub const FRAME_PARAMS: u8 = 1;
@@ -34,6 +46,37 @@ impl Frame {
     }
 }
 
+/// Leader-side view of a star topology: broadcast downstream, collect
+/// one reply per participating worker, signal shutdown. The round
+/// *protocol* (what the frames mean, who participates, in which order
+/// replies are applied) is owned by [`crate::engine::RoundEngine`]; a
+/// transport only moves frames.
+pub trait Transport {
+    /// Number of attached workers M.
+    fn workers(&self) -> usize;
+
+    /// Deliver `frame` to every worker.
+    fn broadcast(&mut self, frame: &Frame) -> Result<()>;
+
+    /// Collect exactly one frame from each worker in `ids`. The returned
+    /// order is transport-specific (mpsc arrival order, socket id order,
+    /// …); callers must not derive semantics from it — the engine orders
+    /// replies by worker id and by the *simulated* clock instead.
+    fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>>;
+
+    /// Tell every worker the run is over.
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// Worker-side counterpart of [`Transport`]: a single full-duplex link
+/// to the leader. Implemented by [`channel::WorkerPort`] and
+/// [`tcp::TcpWorker`]; served by [`crate::engine::run_worker`].
+pub trait WorkerLink {
+    fn id(&self) -> u32;
+    fn recv(&mut self) -> Result<Frame>;
+    fn send(&mut self, frame: &Frame) -> Result<()>;
+}
+
 /// Serialize a flat f32 vector (params broadcast payload).
 pub fn params_to_bytes(params: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(4 + params.len() * 4);
@@ -44,14 +87,28 @@ pub fn params_to_bytes(params: &[f32]) -> Vec<u8> {
     out
 }
 
-pub fn params_from_bytes(bytes: &[u8]) -> Vec<f32> {
+/// Deserialize a params vector, validating the declared length against
+/// the actual buffer before any allocation — truncated or forged input
+/// is an error, never a panic or an attacker-sized preallocation.
+pub fn params_from_bytes(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() < 4 {
+        bail!("params frame truncated: {} bytes, need at least 4", bytes.len());
+    }
     let n = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    let need = 4u64 + 4 * n as u64;
+    if bytes.len() as u64 != need {
+        bail!(
+            "params frame length mismatch: declares {n} f32s ({need} bytes), got {}",
+            bytes.len()
+        );
+    }
+    // the declared length is now bounded by the buffer we actually hold
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         let o = 4 + i * 4;
         out.push(f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -61,8 +118,27 @@ mod tests {
     #[test]
     fn params_roundtrip() {
         let p = vec![1.0f32, -2.5, 0.0, 3.25];
-        assert_eq!(params_from_bytes(&params_to_bytes(&p)), p);
-        assert!(params_from_bytes(&params_to_bytes(&[])).is_empty());
+        assert_eq!(params_from_bytes(&params_to_bytes(&p)).unwrap(), p);
+        assert!(params_from_bytes(&params_to_bytes(&[])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn params_from_bytes_rejects_truncated_and_forged() {
+        // empty / sub-header buffers
+        assert!(params_from_bytes(&[]).is_err());
+        assert!(params_from_bytes(&[1, 0, 0]).is_err());
+        // declared length larger than the buffer (forged count)
+        let mut forged = (u32::MAX).to_le_bytes().to_vec();
+        forged.extend_from_slice(&[0u8; 8]);
+        assert!(params_from_bytes(&forged).is_err());
+        // declared length smaller than the buffer (trailing garbage)
+        let mut padded = params_to_bytes(&[1.0, 2.0]);
+        padded.push(0);
+        assert!(params_from_bytes(&padded).is_err());
+        // truncated body
+        let mut cut = params_to_bytes(&[1.0, 2.0]);
+        cut.truncate(cut.len() - 1);
+        assert!(params_from_bytes(&cut).is_err());
     }
 
     #[test]

@@ -4,9 +4,9 @@
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use super::Frame;
+use super::{Frame, Transport, WorkerLink};
 
 pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
     let mut header = [0u8; 5];
@@ -51,6 +51,9 @@ impl TcpLeader {
             let (mut s, _) = listener.accept()?;
             s.set_nodelay(true)?;
             let hello = read_frame(&mut s)?;
+            if hello.payload.len() != 4 {
+                bail!("malformed worker hello: {} payload bytes, want 4", hello.payload.len());
+            }
             let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
             if id >= m || streams[id].is_some() {
                 bail!("bad worker hello id {id}");
@@ -77,9 +80,39 @@ impl TcpLeader {
     }
 }
 
+impl Transport for TcpLeader {
+    fn workers(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        TcpLeader::broadcast(self, frame)
+    }
+
+    /// Each participant sends exactly one frame per round, so reading
+    /// the per-worker sockets in id order is arrival-order agnostic —
+    /// the engine's virtual clock decides the *simulated* arrival order.
+    fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
+        ids.iter()
+            .map(|&id| {
+                let s = self
+                    .streams
+                    .get_mut(id as usize)
+                    .ok_or_else(|| anyhow!("no stream for worker {id}"))?;
+                Ok((id, read_frame(s)?))
+            })
+            .collect()
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        TcpLeader::broadcast(self, &Frame::shutdown())
+    }
+}
+
 /// Worker: connects and sends its id as a hello.
 pub struct TcpWorker {
     stream: TcpStream,
+    id: u32,
 }
 
 impl TcpWorker {
@@ -87,7 +120,7 @@ impl TcpWorker {
         let mut stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         write_frame(&mut stream, &Frame { kind: 0, payload: id.to_le_bytes().to_vec() })?;
-        Ok(TcpWorker { stream })
+        Ok(TcpWorker { stream, id })
     }
 
     pub fn send(&mut self, frame: &Frame) -> Result<()> {
@@ -96,6 +129,20 @@ impl TcpWorker {
 
     pub fn recv(&mut self) -> Result<Frame> {
         read_frame(&mut self.stream)
+    }
+}
+
+impl WorkerLink for TcpWorker {
+    fn id(&self) -> u32 {
+        self.id
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        read_frame(&mut self.stream)
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        write_frame(&mut self.stream, frame)
     }
 }
 
@@ -122,7 +169,7 @@ mod tests {
                     std::thread::spawn(move || {
                         let mut w = TcpWorker::connect(&a, id).unwrap();
                         let f = w.recv().unwrap();
-                        let p = params_from_bytes(&f.payload);
+                        let p = params_from_bytes(&f.payload).unwrap();
                         let sum: f32 = p.iter().sum();
                         w.send(&Frame::grad(params_to_bytes(&[sum + id as f32]))).unwrap();
                         assert_eq!(w.recv().unwrap().kind, FRAME_SHUTDOWN);
@@ -141,7 +188,7 @@ mod tests {
             tl.broadcast(&Frame::params(params_to_bytes(&[1.0, 2.0]))).unwrap();
             let replies = tl.gather().unwrap();
             for (id, f) in replies.iter().enumerate() {
-                assert_eq!(params_from_bytes(&f.payload), vec![3.0 + id as f32]);
+                assert_eq!(params_from_bytes(&f.payload).unwrap(), vec![3.0 + id as f32]);
             }
             tl.broadcast(&Frame::shutdown()).unwrap();
             for w in workers {

@@ -1,15 +1,15 @@
-//! Coordinator integration: full multi-worker rounds over the channel
-//! and TCP transports with real encoders — the distributed protocol
-//! without XLA (mock gradient oracles), so it runs threaded.
+//! Coordinator integration: full multi-worker rounds through the
+//! unified `RoundEngine` over the channel and TCP transports with real
+//! encoders — the distributed protocol without XLA (mock gradient
+//! oracles), so it runs threaded.
 
 use mlmc_dist::compress::Compressed;
 use mlmc_dist::config::{Method, TrainConfig};
 use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
 use mlmc_dist::ef::AggKind;
+use mlmc_dist::engine::{self, RoundEngine};
 use mlmc_dist::tensor::{sq_dist, sq_norm, Rng};
 use mlmc_dist::transport::channel::star;
-use mlmc_dist::transport::{params_from_bytes, params_to_bytes, Frame, FRAME_SHUTDOWN};
-use mlmc_dist::wire;
 
 /// Quadratic oracle: grad_i(x) = x − a_i + noise.
 fn worker_grad(x: &[f32], target_seed: u64, noise: f32, rng: &mut Rng) -> Vec<f32> {
@@ -22,10 +22,23 @@ fn worker_grad(x: &[f32], target_seed: u64, noise: f32, rng: &mut Rng) -> Vec<f3
         .collect()
 }
 
+/// Mean of the M quadratic targets (the global optimum).
+fn optimum(d: usize, m: usize, target_base: u64) -> Vec<f32> {
+    let mut opt = vec![0.0f32; d];
+    for id in 0..m {
+        let mut trng = Rng::new(target_base + id as u64);
+        for o in opt.iter_mut() {
+            *o += trng.normal() as f32 / m as f32;
+        }
+    }
+    opt
+}
+
 #[test]
 fn threaded_channel_training_round_trip() {
-    // M worker threads running real encoders over the channel star,
-    // leader aggregates and descends a quadratic to its optimum
+    // M worker threads running real encoders behind engine::run_worker
+    // over the channel star; the leader-side RoundEngine aggregates and
+    // descends a quadratic to its optimum
     const M: usize = 4;
     const D: usize = 32;
     const STEPS: usize = 600;
@@ -33,77 +46,65 @@ fn threaded_channel_training_round_trip() {
     let (leader, ports) = star(M);
     let handles: Vec<_> = ports
         .into_iter()
-        .map(|p| {
+        .map(|mut p| {
             std::thread::spawn(move || {
                 let mut cfg = TrainConfig::default();
                 cfg.method = Method::MlmcTopK;
                 cfg.frac_pm = 200;
                 let mut enc = build_encoder(&cfg, D);
-                let mut step = 0u64;
-                loop {
-                    let Some(f) = p.recv() else { return };
-                    if f.kind == FRAME_SHUTDOWN {
-                        return;
-                    }
-                    let x = params_from_bytes(&f.payload);
-                    let mut rng = Rng::for_stream(7, p.id as u64, step);
-                    let g = worker_grad(&x, 1000 + p.id as u64, 0.01, &mut rng);
-                    let comp = enc.encode(&g, &mut rng);
-                    let msg = wire::WorkerMsg { step: step as u32, worker: p.id, comp };
-                    p.send(Frame::grad(wire::encode(&msg)));
-                    step += 1;
-                }
+                let id = p.id as u64;
+                engine::run_worker(&mut p, move |step, params| {
+                    let mut rng = Rng::for_stream(7, id, step);
+                    let g = worker_grad(params, 1000 + id, 0.01, &mut rng);
+                    Ok((0.0, enc.encode(&g, &mut rng)))
+                })
+                .unwrap()
             })
         })
         .collect();
 
-    let mut server = Server::new(
+    let mut cfg = TrainConfig::default();
+    cfg.method = Method::MlmcTopK;
+    cfg.workers = M;
+    let server = Server::new(
         vec![0.0; D],
         Box::new(mlmc_dist::optim::Sgd { lr: 0.15 }),
         AggKind::Fresh,
     );
+    let mut eng = RoundEngine::from_cfg(leader, server, &cfg).unwrap();
     for step in 0..STEPS {
         // anneal: targets are highly heterogeneous, so the MLMC noise
         // floor at constant lr is O(lr·ω̂²ξ²/M); shrink it at the end
         if step == STEPS / 2 {
-            server.set_lr(0.03);
+            eng.server_mut().set_lr(0.03);
         }
         if step == 3 * STEPS / 4 {
-            server.set_lr(0.005);
+            eng.server_mut().set_lr(0.005);
         }
         if step == 7 * STEPS / 8 {
-            server.set_lr(0.001);
+            eng.server_mut().set_lr(0.001);
         }
-        leader.broadcast(&Frame::params(params_to_bytes(&server.params)));
-        let replies = leader.gather(M);
-        assert_eq!(replies.len(), M);
-        let msgs: Vec<Compressed> =
-            replies.iter().map(|(_, f)| wire::decode(&f.payload).comp).collect();
-        server.apply_round(&msgs);
+        let rep = eng.run_round().unwrap();
+        assert_eq!(rep.on_time, M);
     }
-    leader.broadcast(&Frame::shutdown());
+    eng.shutdown().unwrap();
     for h in handles {
-        h.join().unwrap();
+        // every worker served every round
+        assert_eq!(h.join().unwrap(), STEPS as u64);
     }
 
-    // optimum = mean of the M targets
-    let mut opt = vec![0.0f32; D];
-    for id in 0..M {
-        let mut trng = Rng::new(1000 + id as u64);
-        for o in opt.iter_mut() {
-            *o += trng.normal() as f32 / M as f32;
-        }
-    }
-    let err = sq_dist(&server.params, &opt);
+    let opt = optimum(D, M, 1000);
+    let err = sq_dist(eng.params(), &opt);
     assert!(err < 0.15, "distance to optimum {err} (unbiased MLMC: shrinks with lr)");
-    assert_eq!(server.rounds as usize, STEPS);
-    assert!(server.total_bits > 0);
+    assert_eq!(eng.server().rounds as usize, STEPS);
+    assert!(eng.server().total_bits > 0);
+    assert!(eng.sim_now_s() > 0.0, "virtual clock must advance");
 }
 
 #[test]
 fn tcp_cluster_round_trip() {
     // same protocol over real loopback sockets
-    use mlmc_dist::transport::tcp::{read_frame, TcpLeader};
+    use mlmc_dist::transport::tcp::{read_frame, TcpLeader, TcpWorker};
     use std::net::TcpListener;
 
     const M: usize = 3;
@@ -117,30 +118,22 @@ fn tcp_cluster_round_trip() {
         .map(|id| {
             let addr = addr.clone();
             std::thread::spawn(move || {
-                let mut w = mlmc_dist::transport::tcp::TcpWorker::connect(&addr, id).unwrap();
+                let mut w = TcpWorker::connect(&addr, id).unwrap();
                 let mut cfg = TrainConfig::default();
                 cfg.method = Method::TopK;
                 cfg.frac_pm = 250;
                 let mut enc = build_encoder(&cfg, D);
-                let mut step = 0u64;
-                loop {
-                    let f = w.recv().unwrap();
-                    if f.kind == FRAME_SHUTDOWN {
-                        return;
-                    }
-                    let x = params_from_bytes(&f.payload);
+                engine::run_worker(&mut w, move |step, params| {
                     let mut rng = Rng::for_stream(9, id as u64, step);
-                    let g = worker_grad(&x, 2000 + id as u64, 0.0, &mut rng);
-                    let comp = enc.encode(&g, &mut rng);
-                    let msg = wire::WorkerMsg { step: step as u32, worker: id, comp };
-                    w.send(&Frame::grad(wire::encode(&msg))).unwrap();
-                    step += 1;
-                }
+                    let g = worker_grad(params, 2000 + id as u64, 0.0, &mut rng);
+                    Ok((0.0, enc.encode(&g, &mut rng)))
+                })
+                .unwrap();
             })
         })
         .collect();
 
-    // accept M and run the leader loop
+    // accept M and drive the engine over the TCP transport
     let mut streams: Vec<Option<std::net::TcpStream>> = (0..M).map(|_| None).collect();
     for _ in 0..M {
         let (mut s, _) = listener.accept().unwrap();
@@ -148,37 +141,34 @@ fn tcp_cluster_round_trip() {
         let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
         streams[id] = Some(s);
     }
-    let mut leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect());
+    let leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect());
 
-    let mut server = Server::new(
+    let mut cfg = TrainConfig::default();
+    cfg.method = Method::TopK;
+    cfg.workers = M;
+    let server = Server::new(
         vec![0.0; D],
         Box::new(mlmc_dist::optim::Sgd { lr: 0.3 }),
         AggKind::Fresh,
     );
+    let mut eng = RoundEngine::from_cfg(leader, server, &cfg).unwrap();
     for _ in 0..STEPS {
-        leader.broadcast(&Frame::params(params_to_bytes(&server.params))).unwrap();
-        let frames = leader.gather().unwrap();
-        let msgs: Vec<Compressed> = frames.iter().map(|f| wire::decode(&f.payload).comp).collect();
-        server.apply_round(&msgs);
+        eng.run_round().unwrap();
     }
-    leader.broadcast(&Frame::shutdown()).unwrap();
+    let sim = eng.sim_now_s();
+    let server = eng.finish().unwrap();
     for w in workers {
         w.join().unwrap();
     }
 
-    let mut opt = vec![0.0f32; D];
-    for id in 0..M {
-        let mut trng = Rng::new(2000 + id as u64);
-        for o in opt.iter_mut() {
-            *o += trng.normal() as f32 / M as f32;
-        }
-    }
     // biased Top-k with k=25% under heterogeneous targets converges to a
     // *biased* fixed point near — not at — the optimum (the paper's §2.2
     // motivation for unbiasing); just require the ballpark
+    let opt = optimum(D, M, 2000);
     let err = sq_dist(&server.params, &opt);
     let norm_opt = sq_norm(&opt);
     assert!(err < 0.25 * norm_opt.max(8.0), "distance {err} vs ‖x*‖² {norm_opt}");
+    assert!(sim > 0.0);
 }
 
 #[test]

@@ -1,0 +1,245 @@
+//! Round-engine properties (ISSUE 2 satellite):
+//!
+//! (a) `FullSync` through the `RoundEngine` is **bit-identical** to the
+//!     seed's inline lock-step loop, for every compressor family and
+//!     for the sharded pipeline — the refactor moved the protocol, not
+//!     the numbers.
+//! (b) `Quorum` / `Sampled` participant sets and outcomes are
+//!     deterministic functions of `(seed, step)`.
+//! (c) The netsim virtual clock is monotone and permutation-stable: the
+//!     simulated timeline never depends on physical arrival order, so
+//!     an engine over a *threaded* channel star reproduces the inline
+//!     LocalStar run bit for bit.
+
+use mlmc_dist::config::{Method, Participation, TrainConfig};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
+use mlmc_dist::engine::{self, participants, RoundEngine};
+use mlmc_dist::netsim::VirtualClock;
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
+use mlmc_dist::transport::channel::star;
+
+/// The pre-refactor round protocol, verbatim: per-worker encoders fed by
+/// the `(seed ^ 0x5EED, worker, step)` RNG stream, messages applied in
+/// worker order by `Server::apply_round`. The engine's FullSync path
+/// must reproduce this exactly.
+fn seed_lockstep_loop(problem: &Quadratic, cfg: &TrainConfig) -> (Vec<f32>, u64) {
+    let d = problem.d;
+    let mut encoders: Vec<_> = (0..cfg.workers).map(|_| build_encoder(cfg, d)).collect();
+    let mut server = Server::new(
+        vec![0.0; d],
+        Box::new(mlmc_dist::optim::Sgd { lr: cfg.lr }),
+        agg_kind(&cfg.method),
+    )
+    .with_threads(cfg.threads);
+    for step in 0..cfg.steps {
+        let msgs: Vec<_> = encoders
+            .iter_mut()
+            .enumerate()
+            .map(|(w, enc)| {
+                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step as u64);
+                let g = problem.grad(w, &server.params, &mut rng);
+                enc.encode(&g, &mut rng)
+            })
+            .collect();
+        server.apply_round(&msgs);
+    }
+    (server.params, server.total_bits)
+}
+
+fn assert_bit_identical(name: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{name}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name}: params differ at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn fullsync_engine_bit_identical_to_seed_loop_every_method() {
+    let q = Quadratic::new(64, 3, 0.05, 0.8, 11);
+    for name in Method::all_names() {
+        let cfg = synth_cfg(Method::parse(name).unwrap(), 3, 15, 0.05, 100, 5);
+        let (seed_params, seed_bits) = seed_lockstep_loop(&q, &cfg);
+        let r = run_quadratic(&q, &cfg);
+        assert_eq!(seed_bits, r.total_bits, "{name}: uplink accounting diverged");
+        assert_bit_identical(name, &seed_params, &r.final_params);
+    }
+}
+
+#[test]
+fn fullsync_engine_bit_identical_under_sharded_pipeline() {
+    // the wire round-trip the engine adds must stay value-exact for the
+    // recursive sharded framing too
+    let q = Quadratic::new(300, 2, 0.1, 0.5, 3);
+    for name in ["topk", "mlmc-topk", "rtn", "sgd"] {
+        let mut cfg = synth_cfg(Method::parse(name).unwrap(), 2, 8, 0.05, 100, 9);
+        cfg.set("shard_size", "64").unwrap();
+        cfg.set("threads", "2").unwrap();
+        cfg.validate().unwrap();
+        let (seed_params, seed_bits) = seed_lockstep_loop(&q, &cfg);
+        let r = run_quadratic(&q, &cfg);
+        assert_eq!(seed_bits, r.total_bits, "{name} sharded");
+        assert_bit_identical(name, &seed_params, &r.final_params);
+    }
+}
+
+#[test]
+fn sampled_participants_are_deterministic_in_seed_and_step() {
+    let m = 8;
+    for seed in [1u64, 2, 99] {
+        let mut distinct = std::collections::HashSet::new();
+        for step in 0..30u64 {
+            let a = participants(Participation::Sampled, 0.5, seed, step, m);
+            let b = participants(Participation::Sampled, 0.5, seed, step, m);
+            assert_eq!(a, b, "sampling must be a pure function of (seed, step)");
+            assert_eq!(a.len(), 4);
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted + distinct: {a:?}");
+            assert!(a.iter().all(|&id| (id as usize) < m));
+            distinct.insert(a);
+        }
+        assert!(distinct.len() > 1, "seed {seed}: the draw never varied across steps");
+    }
+    // different seeds draw different step-0 sets somewhere in a window
+    let series = |seed| -> Vec<Vec<u32>> {
+        (0..10).map(|s| participants(Participation::Sampled, 0.5, seed, s, m)).collect()
+    };
+    assert_ne!(series(1), series(2));
+    // full and quorum involve everyone; the fraction clamps to [1, m]
+    assert_eq!(participants(Participation::Full, 0.5, 1, 0, 3), vec![0, 1, 2]);
+    assert_eq!(participants(Participation::Quorum, 0.5, 1, 0, 3), vec![0, 1, 2]);
+    assert_eq!(participants(Participation::Sampled, 1e-9, 1, 0, 4).len(), 1);
+    assert_eq!(participants(Participation::Sampled, 1.0, 1, 0, 4).len(), 4);
+}
+
+#[test]
+fn quorum_and_sampled_runs_replay_exactly() {
+    let q = Quadratic::new(80, 6, 0.05, 1.0, 21);
+    for policy in ["quorum", "sampled"] {
+        let mut cfg = synth_cfg(Method::MlmcTopK, 6, 40, 0.1, 150, 13);
+        cfg.set("participation", policy).unwrap();
+        cfg.set("quorum", "3").unwrap();
+        cfg.set("link", "hetero").unwrap();
+        cfg.set("straggler", "0.02").unwrap();
+        cfg.validate().unwrap();
+        let a = run_quadratic(&q, &cfg);
+        let b = run_quadratic(&q, &cfg);
+        assert_bit_identical(policy, &a.final_params, &b.final_params);
+        assert_eq!(a.total_bits, b.total_bits, "{policy}");
+        assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{policy}");
+        // a different seed changes the trajectory
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 14;
+        let c = run_quadratic(&q, &cfg2);
+        assert_ne!(a.final_params, c.final_params, "{policy}");
+    }
+}
+
+#[test]
+fn virtual_clock_monotone_and_permutation_stable() {
+    let clock = VirtualClock::from_preset("hetero", 8, 0.02, 7).unwrap();
+    // permutation stability: arrival times are pure per (step, worker),
+    // so any evaluation order yields the same timeline
+    for step in 0..10u64 {
+        let forward: Vec<f64> =
+            (0..8u32).map(|w| clock.arrival_s(step, w, 50_000, 640_000)).collect();
+        let mut shuffled_order: Vec<u32> = (0..8).collect();
+        let mut rng = Rng::for_stream(99, 0, step);
+        for i in (1..shuffled_order.len()).rev() {
+            shuffled_order.swap(i, rng.below(i + 1));
+        }
+        for &w in &shuffled_order {
+            let again = clock.arrival_s(step, w, 50_000, 640_000);
+            assert_eq!(again.to_bits(), forward[w as usize].to_bits());
+        }
+        assert!(forward.iter().all(|t| *t > 0.0));
+    }
+    // monotonicity: advancing by per-round deadlines never rewinds
+    let mut clock = VirtualClock::from_preset("edge", 4, 0.01, 3).unwrap();
+    let mut prev = 0.0;
+    for step in 0..50u64 {
+        let deadline =
+            (0..4u32).map(|w| clock.arrival_s(step, w, 10_000, 64_000)).fold(0.0, f64::max);
+        let now = clock.advance(deadline);
+        assert!(now > prev, "step {step}: clock went {prev} -> {now}");
+        prev = now;
+    }
+}
+
+#[test]
+fn engine_over_threaded_channel_matches_local_star_bitwise() {
+    // the strongest permutation-stability statement: real threads racing
+    // on an mpsc star produce the exact numbers of the inline run,
+    // because lateness is decided by the virtual clock, not arrival
+    const M: usize = 4;
+    const D: usize = 48;
+    const STEPS: usize = 25;
+    let q = Quadratic::new(D, M, 0.05, 0.8, 17);
+    let mut cfg = synth_cfg(Method::MlmcTopK, M, STEPS, 0.1, 150, 31);
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", "3").unwrap();
+    cfg.set("link", "hetero").unwrap();
+    cfg.set("straggler", "0.05").unwrap();
+    cfg.validate().unwrap();
+
+    let inline = run_quadratic(&q, &cfg);
+
+    let (leader, ports) = star(M);
+    let server = Server::new(
+        vec![0.0; D],
+        Box::new(mlmc_dist::optim::Sgd { lr: cfg.lr }),
+        agg_kind(&cfg.method),
+    );
+    let (threaded_params, threaded_bits, threaded_sim) = std::thread::scope(|s| {
+        for mut p in ports {
+            let cfg = cfg.clone();
+            let q = &q;
+            s.spawn(move || {
+                let mut enc = build_encoder(&cfg, D);
+                let id = p.id as u64;
+                engine::run_worker(&mut p, move |step, params| {
+                    let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, id, step);
+                    let g = q.grad(id as usize, params, &mut rng);
+                    Ok((0.0, enc.encode(&g, &mut rng)))
+                })
+                .unwrap();
+            });
+        }
+        let mut eng = RoundEngine::from_cfg(leader, server, &cfg).unwrap();
+        for _ in 0..STEPS {
+            eng.run_round().unwrap();
+        }
+        let sim = eng.sim_now_s();
+        let server = eng.finish().unwrap();
+        (server.params, server.total_bits, sim)
+    });
+
+    assert_bit_identical("threaded-vs-inline", &inline.final_params, &threaded_params);
+    assert_eq!(inline.total_bits, threaded_bits);
+    assert_eq!(inline.sim_time_s.to_bits(), threaded_sim.to_bits());
+}
+
+#[test]
+fn quorum_actually_defers_and_shortens_rounds() {
+    // under heavy stragglers a 3-of-6 quorum must (a) defer messages,
+    // (b) finish the same step count in less simulated time than full
+    // sync, and (c) still converge on the quadratic
+    let q = Quadratic::new(100, 6, 0.0, 0.5, 5);
+    let mut full = synth_cfg(Method::MlmcTopK, 6, 120, 0.1, 150, 2);
+    full.set("link", "hetero").unwrap();
+    full.set("straggler", "0.1").unwrap();
+    full.validate().unwrap();
+    let mut quorum = full.clone();
+    quorum.set("participation", "quorum").unwrap();
+    quorum.set("quorum", "3").unwrap();
+    quorum.validate().unwrap();
+
+    let rf = run_quadratic(&q, &full);
+    let rq = run_quadratic(&q, &quorum);
+    assert!(
+        rq.sim_time_s < rf.sim_time_s,
+        "quorum sim time {} must beat full sync {}",
+        rq.sim_time_s,
+        rf.sim_time_s
+    );
+    assert!(rq.final_suboptimality < 0.05, "quorum run drifted: {}", rq.final_suboptimality);
+}
