@@ -12,7 +12,8 @@
 //! * **Participation policies** ([`crate::config::Participation`]):
 //!   `Full` (bit-identical to the seed lock-step loop), `Quorum { k }`
 //!   (proceed once k messages have *simulated-arrived*; late messages
-//!   are applied next round with staleness scaling), and `Sampled`
+//!   are applied next round — `Fresh` gradients with staleness damping,
+//!   `Accumulate` increments always at full weight), and `Sampled`
 //!   (a deterministic `(seed, step)` draw of clients per round).
 //! * **Virtual clock** ([`crate::netsim::VirtualClock`]): per-worker
 //!   heterogeneous links plus seeded straggler delays decide simulated
@@ -33,6 +34,7 @@ use anyhow::{bail, Result};
 use crate::compress::Compressed;
 use crate::config::{Participation, TrainConfig};
 use crate::coordinator::Server;
+use crate::ef::AggKind;
 use crate::netsim::VirtualClock;
 use crate::tensor::Rng;
 use crate::transport::{Frame, LocalStar, Transport, WorkerLink, FRAME_PARAMS, FRAME_SHUTDOWN};
@@ -77,7 +79,9 @@ pub struct EngineOpts {
 }
 
 /// A message that missed its round's quorum deadline; applied at the
-/// start of the next round, scaled down by its staleness.
+/// start of the next round (scaled down by its staleness when the
+/// server aggregates `Fresh` gradients; EF21-family `Accumulate`
+/// increments apply at full weight).
 struct LateMsg {
     sent_step: u64,
     comp: Compressed,
@@ -98,7 +102,8 @@ pub struct RoundReport {
     pub on_time: usize,
     /// replies deferred to the next round
     pub late: usize,
-    /// previous rounds' late messages applied (staleness-scaled) now
+    /// previous rounds' late messages applied now (staleness-damped for
+    /// `Fresh` servers, full weight for `Accumulate`)
     pub applied_stale: usize,
     /// simulated duration of this round, seconds
     pub sim_round_s: f64,
@@ -235,15 +240,24 @@ impl<T: Transport> RoundEngine<T> {
         };
 
         // --- assemble the application set -------------------------------
-        // stale arrivals from previous rounds first, scaled by 1/(1+age):
-        // a 1-round-late gradient enters at half weight (the usual
-        // staleness-aware damping for asynchronous SGD)
+        // stale arrivals from previous rounds first. Fresh gradients are
+        // scaled by 1/(1+age) — a 1-round-late gradient enters at half
+        // weight (the usual staleness-aware damping for asynchronous
+        // SGD). Accumulate (EF21-family) messages are *state increments*
+        // into a persistent aggregate, not gradient estimates: the worker
+        // already rolled its shadow forward by the full increment, so a
+        // damped application would permanently desynchronize the worker
+        // shadow from the server aggregate — they always apply at full
+        // weight, however late.
+        let damp_stale = self.server.agg() == AggKind::Fresh;
         let mut msgs: Vec<Compressed> = Vec::with_capacity(self.pending.len() + replies.len());
         let applied_stale = self.pending.len();
         for late in self.pending.drain(..) {
-            let age = step.saturating_sub(late.sent_step).max(1);
             let mut comp = late.comp;
-            comp.payload.scale_values(1.0 / (1.0 + age as f32));
+            if damp_stale {
+                let age = step.saturating_sub(late.sent_step).max(1);
+                comp.payload.scale_values(1.0 / (1.0 + age as f32));
+            }
             msgs.push(comp);
         }
         let mut late = 0usize;
@@ -432,6 +446,43 @@ mod tests {
         assert_eq!(r1.total_bits, applied * 2 * 32);
         // simulated time advanced monotonically
         assert!(r1.sim_now_s > r0.sim_now_s);
+        eng.shutdown().unwrap();
+    }
+
+    #[test]
+    fn late_accumulate_increments_apply_at_full_weight() {
+        // regression (shadow-corruption bug): a quorum-late EF21-style
+        // increment must enter the persistent aggregate G at FULL
+        // weight, never scaled by 1/(1+age) — damping an increment
+        // permanently desynchronizes the worker shadow from G.
+        let d = 2;
+        let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.0 }), AggKind::Accumulate);
+        let mut c = cfg(2);
+        c.participation = Participation::Quorum;
+        c.quorum = 1;
+        c.link = "hetero".into();
+        c.straggler = 10.0; // huge spread: exactly one message per deadline
+        // both workers send a constant dense increment of 1.0
+        let star = local_star(
+            (0..2)
+                .map(|_| {
+                    Box::new(move |_step: u64, params: &[f32]| -> Result<(f32, Compressed)> {
+                        Ok((0.0, Compressed::dense(vec![1.0f32; params.len()])))
+                    }) as Compute<'static>
+                })
+                .collect(),
+        );
+        let mut eng = RoundEngine::from_cfg(star, server, &c).unwrap();
+        let r0 = eng.run_round().unwrap();
+        assert_eq!((r0.on_time, r0.late), (1, 1));
+        // round 0: one on-time increment → G = 1.0
+        assert_eq!(eng.server().shadow(), &[1.0; 2]);
+        let r1 = eng.run_round().unwrap();
+        assert_eq!(r1.applied_stale, 1);
+        // round 1: the stale increment at FULL weight + one on-time
+        // increment → G = 1.0 + (1.0 + 1.0)/2 = 2.0. The damping bug
+        // yielded 1.75 (stale applied at half weight).
+        assert_eq!(eng.server().shadow(), &[2.0; 2]);
         eng.shutdown().unwrap();
     }
 
