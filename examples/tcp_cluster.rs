@@ -31,15 +31,23 @@ fn worker(addr: String, id: u32) -> anyhow::Result<()> {
     let mut cfg = TrainConfig::default();
     cfg.set("method", "mlmc-topk").unwrap();
     cfg.workers = M;
-    let mut codec = build_codec(&cfg, &model);
+    let codec = build_codec(&cfg, &model);
 
     let mut port = TcpWorker::connect(&addr, id)?;
-    engine::run_worker(&mut port, |step, params| {
-        let b = task.train_batch(cfg.seed, id as u64, step, None);
-        let (loss, grad) = rt.grad_step(&model, params, &ArgValue::I32(&b.x_i32), &b.y)?;
-        let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
-        Ok((loss, codec.encode(&rt, &model, &grad, &mut rng)?))
-    })?;
+    engine::run_worker(
+        &mut port,
+        engine::compute_with_acks(
+            codec,
+            |codec, ack| codec.on_ack(ack),
+            |codec, step, params| {
+                let b = task.train_batch(cfg.seed, id as u64, step, None);
+                let (loss, grad) =
+                    rt.grad_step(&model, params, &ArgValue::I32(&b.x_i32), &b.y)?;
+                let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
+                Ok((loss, codec.encode(&rt, &model, &grad, &mut rng)?))
+            },
+        ),
+    )?;
     Ok(())
 }
 

@@ -1,0 +1,150 @@
+//! EF-under-participation benchmarks: full engine rounds with an
+//! EF21-SGDM (AggKind::Accumulate) server, measuring what the
+//! per-worker shadow refactor costs — rounds/sec with per-worker shadow
+//! tracking on vs off (off = the old pooled-`G`-only work), at 1 and N
+//! aggregation threads, under quorum participation (the scenario the
+//! shadows exist for).
+//!
+//! Emits `results/bench_ef_participation.csv` (benchlib) plus
+//! `results/BENCH_ef_participation.json`, uploaded by the CI bench-smoke
+//! job so the shadow overhead is tracked per commit.
+//!
+//! Smoke mode (CI): `MLMC_BENCH_MS=60 EF_BENCH_D=50000 cargo bench
+//! -p mlmc-dist --bench ef_participation`.
+
+use mlmc_dist::benchlib::{black_box, Bench, Stats};
+use mlmc_dist::config::{Method, TrainConfig};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
+use mlmc_dist::engine::{compute_with_acks, local_star, Compute, RoundEngine};
+use mlmc_dist::tensor::Rng;
+
+const M: usize = 8;
+
+fn cfg(d: usize, threads: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.method = Method::Ef21Sgdm;
+    cfg.workers = M;
+    cfg.frac_pm = 10;
+    cfg.shard_size = (d / 8).max(64);
+    cfg.threads = threads;
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", &(M / 2).to_string()).unwrap();
+    cfg.set("link", "hetero").unwrap();
+    cfg.set("straggler", "0.01").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn build_engine<'a>(
+    cfg: &'a TrainConfig,
+    grad: &'a [f32],
+    worker_shadows: bool,
+) -> RoundEngine<mlmc_dist::transport::LocalStar<'a>> {
+    let d = grad.len();
+    let computes: Vec<Compute<'a>> = (0..cfg.workers)
+        .map(|w| {
+            compute_with_acks(
+                build_encoder(cfg, d),
+                |enc, ack| enc.on_ack(ack),
+                move |enc, step, _params| {
+                    let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                    Ok((0.0, enc.encode(grad, &mut rng)))
+                },
+            )
+        })
+        .collect();
+    let server = Server::new(
+        vec![0.0; d],
+        Box::new(mlmc_dist::optim::Sgd { lr: 0.01 }),
+        agg_kind(&cfg.method),
+    )
+    .with_threads(cfg.threads)
+    .with_worker_shadows(worker_shadows);
+    RoundEngine::from_cfg(local_star(computes), server, cfg).unwrap()
+}
+
+struct Case {
+    stats: Stats,
+    worker_shadows: bool,
+    threads: usize,
+}
+
+fn main() {
+    let d: usize = std::env::var("EF_BENCH_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut rng = Rng::new(1);
+    let mut grad = vec![0.0f32; d];
+    rng.fill_normal(&mut grad, 1.0);
+
+    let mut b = Bench::new("ef_participation");
+    println!("d={d} M={M} hw_threads={hw} method=ef21-sgdm policy=quorum");
+
+    let mut thread_counts = vec![1usize, hw];
+    thread_counts.dedup();
+    let mut cases: Vec<Case> = Vec::new();
+    for shadows in [true, false] {
+        for &t in &thread_counts {
+            let c = cfg(d, t);
+            let mut eng = build_engine(&c, &grad, shadows);
+            let label = if shadows { "per-worker" } else { "pooled-only" };
+            let s = b.case_elems(
+                &format!("ef21 round {label} M={M} d={d} t={t}"),
+                (M * d) as u64,
+                || black_box(eng.run_round().unwrap().bits),
+            );
+            cases.push(Case { stats: s.clone(), worker_shadows: shadows, threads: t });
+        }
+    }
+
+    b.write_csv();
+    write_json(d, hw, &cases, &thread_counts);
+}
+
+fn write_json(d: usize, hw: usize, cases: &[Case], thread_counts: &[usize]) {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"suite\": \"ef_participation\",");
+    let _ = writeln!(s, "  \"method\": \"ef21-sgdm\",");
+    let _ = writeln!(s, "  \"policy\": \"quorum\",");
+    let _ = writeln!(s, "  \"d\": {d},");
+    let _ = writeln!(s, "  \"workers\": {M},");
+    let _ = writeln!(s, "  \"hw_threads\": {hw},");
+    s.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let rps = if c.stats.mean_ns > 0.0 { 1e9 / c.stats.mean_ns } else { 0.0 };
+        let comma = if i + 1 < cases.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"name\": {:?}, \"worker_shadows\": {}, \"threads\": {}, \
+             \"mean_ns\": {:.1}, \"rounds_per_s\": {:.3}}}{}",
+            c.stats.name, c.worker_shadows, c.threads, c.stats.mean_ns, rps, comma
+        );
+    }
+    s.push_str("  ],\n");
+    // per-worker-shadow overhead: mean_ns(shadows on) / mean_ns(off)
+    s.push_str("  \"shadow_cost_ratio\": {\n");
+    for (i, &t) in thread_counts.iter().enumerate() {
+        let pick = |shadows: bool| {
+            cases
+                .iter()
+                .find(|c| c.worker_shadows == shadows && c.threads == t)
+                .map(|c| c.stats.mean_ns)
+        };
+        let ratio = match (pick(true), pick(false)) {
+            (Some(on), Some(off)) if off > 0.0 => on / off,
+            _ => 0.0,
+        };
+        let comma = if i + 1 < thread_counts.len() { "," } else { "" };
+        let _ = writeln!(s, "    \"t{t}\": {ratio:.3}{comma}");
+    }
+    s.push_str("  }\n}\n");
+    let path = mlmc_dist::util::results_dir().join("BENCH_ef_participation.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

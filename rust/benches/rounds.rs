@@ -12,7 +12,6 @@
 //! -p mlmc-dist --bench rounds`.
 
 use mlmc_dist::benchlib::{black_box, Bench, Stats};
-use mlmc_dist::compress::Compressed;
 use mlmc_dist::config::{Method, TrainConfig};
 use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
 use mlmc_dist::engine::{local_star, Compute, RoundEngine};
@@ -45,11 +44,14 @@ fn build_engine<'a>(
     let d = grad.len();
     let computes: Vec<Compute<'a>> = (0..cfg.workers)
         .map(|w| {
-            let mut enc = build_encoder(cfg, d);
-            Box::new(move |step: u64, _params: &[f32]| -> anyhow::Result<(f32, Compressed)> {
-                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
-                Ok((0.0, enc.encode(grad, &mut rng)))
-            }) as Compute<'a>
+            mlmc_dist::engine::compute_with_acks(
+                build_encoder(cfg, d),
+                |enc, ack| enc.on_ack(ack),
+                move |enc, step, _params| {
+                    let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                    Ok((0.0, enc.encode(grad, &mut rng)))
+                },
+            )
         })
         .collect();
     let server = Server::new(

@@ -134,6 +134,48 @@ impl fmt::Display for Participation {
     }
 }
 
+/// How the engine applies a *stale* `Fresh` gradient — a quorum-late
+/// message applied in a later round that was not superseded by the same
+/// worker's on-time reply (superseded stale messages are always
+/// dropped; see the dedupe rule in [`crate::engine`]). EF21-family
+/// `Accumulate` increments are exempt: they always apply at full
+/// weight, whatever this knob says (see the `AggKind` contract in
+/// [`crate::ef`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Staleness {
+    /// scale by `1/(1+age)` — the usual async-SGD damping (default)
+    Damp,
+    /// apply at full weight
+    Full,
+    /// discard stale gradients entirely
+    Drop,
+}
+
+impl Staleness {
+    pub fn parse(s: &str) -> Option<Staleness> {
+        Some(match s {
+            "damp" => Staleness::Damp,
+            "full" => Staleness::Full,
+            "drop" => Staleness::Drop,
+            _ => return None,
+        })
+    }
+
+    pub fn all_names() -> &'static [&'static str] {
+        &["damp", "full", "drop"]
+    }
+}
+
+impl fmt::Display for Staleness {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Staleness::Damp => "damp",
+            Staleness::Full => "full",
+            Staleness::Drop => "drop",
+        })
+    }
+}
+
 /// Full training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -177,6 +219,9 @@ pub struct TrainConfig {
     pub quorum: usize,
     /// participating fraction for `participation = sampled`, in (0, 1]
     pub sample_frac: f32,
+    /// stale-`Fresh`-gradient policy ("damp" | "full" | "drop");
+    /// `Accumulate` increments always apply at full weight
+    pub staleness: Staleness,
     /// netsim link preset for the virtual clock
     /// ("datacenter" | "edge" | "hetero")
     pub link: String,
@@ -209,6 +254,7 @@ impl Default for TrainConfig {
             participation: Participation::Full,
             quorum: 0,
             sample_frac: 0.5,
+            staleness: Staleness::Damp,
             link: "datacenter".into(),
             straggler: 0.0,
             tag: String::new(),
@@ -253,6 +299,14 @@ impl TrainConfig {
             }
             "quorum" => self.quorum = p(val, key)?,
             "sample_frac" => self.sample_frac = p(val, key)?,
+            "staleness" => {
+                self.staleness = Staleness::parse(val).ok_or_else(|| {
+                    format!(
+                        "unknown staleness policy {val:?} (known: {:?})",
+                        Staleness::all_names()
+                    )
+                })?
+            }
             "link" => self.link = val.to_string(),
             "straggler" => self.straggler = p(val, key)?,
             "tag" => self.tag = val.to_string(),
@@ -384,6 +438,9 @@ impl TrainConfig {
         if self.straggler > 0.0 {
             scenario.push_str(&format!("_str{:.0}ms", self.straggler * 1e3));
         }
+        if self.staleness != Staleness::Damp {
+            scenario.push_str(&format!("_stale{}", self.staleness));
+        }
         let tag = if self.tag.is_empty() { String::new() } else { format!("_{}", self.tag) };
         format!(
             "{}_{}_m{}_pm{}_s{}{}{}",
@@ -488,6 +545,26 @@ mod tests {
         let mut c = TrainConfig::default();
         c.set("straggler", "-1").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn staleness_knob_parses_validates_and_names_runs() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.staleness, Staleness::Damp);
+        for name in Staleness::all_names() {
+            c.set("staleness", name).unwrap();
+            assert_eq!(c.staleness.to_string(), *name);
+            c.validate().unwrap();
+        }
+        assert!(c.set("staleness", "yolo").is_err());
+        // non-default policies get their own CSV namespace
+        c.set("staleness", "drop").unwrap();
+        assert!(c.run_id().ends_with("_staledrop"), "{}", c.run_id());
+        c.set("staleness", "damp").unwrap();
+        assert_eq!(c.run_id(), TrainConfig::default().run_id());
+        // and round-trip through TOML
+        let cfg = TrainConfig::from_toml("[train]\nstaleness = \"full\"\n").unwrap();
+        assert_eq!(cfg.staleness, Staleness::Full);
     }
 
     #[test]

@@ -127,18 +127,27 @@ pub fn worker_main(args: &[String]) -> Result<()> {
     let class_probs =
         dirichlet_class_probs(cfg.dirichlet_alpha, task.n_classes().max(1), cfg.workers, 42);
     let hetero = cfg.dirichlet_alpha > 0.0 && task.n_classes() > 0;
-    let mut codec = build_codec(&cfg, &model);
+    let codec = build_codec(&cfg, &model);
 
     let mut worker = TcpWorker::connect(&addr, id)?;
     println!("worker {id}: connected to {addr}");
-    let rounds = engine::run_worker(&mut worker, |step, params| {
-        let probs = if hetero { Some(class_probs[id as usize].as_slice()) } else { None };
-        let b = task.train_batch(cfg.seed, id as u64, step, probs);
-        let (loss, grad) = rt.grad_step(&model, params, &batch_x(&model, &b), &b.y)?;
-        let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
-        let comp = codec.encode(&rt, &model, &grad, &mut rng)?;
-        Ok((loss, comp))
-    })?;
+    // compute_with_acks feeds the leader's acks to the codec even on
+    // sat-out rounds, so EF state mirrors what the server absorbed
+    let rounds = engine::run_worker(
+        &mut worker,
+        engine::compute_with_acks(
+            codec,
+            |codec, ack| codec.on_ack(ack),
+            |codec, step, params| {
+                let probs = if hetero { Some(class_probs[id as usize].as_slice()) } else { None };
+                let b = task.train_batch(cfg.seed, id as u64, step, probs);
+                let (loss, grad) = rt.grad_step(&model, params, &batch_x(&model, &b), &b.y)?;
+                let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);
+                let comp = codec.encode(&rt, &model, &grad, &mut rng)?;
+                Ok((loss, comp))
+            },
+        ),
+    )?;
     println!("worker {id}: shutdown after {rounds} rounds");
     Ok(())
 }

@@ -156,6 +156,9 @@ pub fn scenario_legend(cfg: &TrainConfig) -> String {
     if cfg.straggler > 0.0 {
         parts.push(format!("straggler {:.0}ms", cfg.straggler * 1e3));
     }
+    if cfg.staleness != crate::config::Staleness::Damp {
+        parts.push(format!("stale-{}", cfg.staleness));
+    }
     if parts.is_empty() {
         base.to_string()
     } else {

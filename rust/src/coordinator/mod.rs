@@ -11,20 +11,50 @@ use crate::compress::Compressed;
 use crate::ef::AggKind;
 use crate::optim::Optimizer;
 
+/// One attributed, weighted worker message for
+/// [`Server::apply_attributed`].
+pub struct RoundMsg<'a> {
+    /// sending worker id (attribution drives the per-worker shadows)
+    pub worker: u32,
+    /// application weight: staleness damping for `Fresh` gradients;
+    /// always 1.0 for `Accumulate` increments (the EF21 contract)
+    pub weight: f32,
+    pub comp: &'a Compressed,
+}
+
 /// The leader: owns the parameters, aggregates worker messages, applies
-/// the optimizer. Supports both aggregation semantics:
+/// the optimizer. Supports both aggregation semantics (see the
+/// `AggKind` contract in [`crate::ef`]):
 ///
 /// * [`AggKind::Fresh`] — messages are this step's gradient estimates:
-///   `x ← opt(x, (1/M) Σ decode(msg_i))` (SGD/Top-k/Rand-k/MLMC…)
-/// * [`AggKind::Accumulate`] — messages are EF21-style increments into a
-///   persistent aggregate `G`: `G += (1/M) Σ decode(msg_i)`, then
-///   `x ← opt(x, G)`.
+///   `x ← opt(x, (1/m) Σ weight_i · decode(msg_i))` with `m` the number
+///   of messages applied this round (SGD/Top-k/Rand-k/MLMC…).
+/// * [`AggKind::Accumulate`] — messages are EF21-style increments: each
+///   enters its sender's per-worker shadow `g^w` at full weight, and the
+///   pooled aggregate `G = (1/M) Σ_w g^w` (`M` = attached workers) takes
+///   `G += (1/M) Σ decode(msg_i)`, then `x ← opt(x, G)`. `G` is
+///   maintained incrementally along the exact same reduction path as
+///   before the per-worker split, so full-participation runs are
+///   bit-identical; the per-worker shadows are the server's copy of each
+///   worker's EF21 state (bit-exact against the worker's own shadow once
+///   every increment has landed).
 pub struct Server {
     pub params: Vec<f32>,
     opt: Box<dyn Optimizer>,
     agg: AggKind,
-    /// EF21 aggregate G (Accumulate only)
+    /// pooled EF21 aggregate G = (1/M) Σ_w g^w (Accumulate only)
     shadow: Vec<f32>,
+    /// per-worker shadows g^w (Accumulate only): worker w's increments
+    /// applied at full weight, in send order — updated in parallel
+    /// across workers, within the `threads` budget, when `threads > 1`
+    worker_shadows: Vec<Vec<f32>>,
+    /// bench/diagnostic switch: per-worker shadow tracking can be
+    /// disabled to measure its cost (pooled `G`, trajectory, and bit
+    /// accounting are unaffected)
+    track_worker_shadows: bool,
+    /// attached worker count M (0 = infer from each round's message
+    /// count — the legacy standalone behavior; the engine always sets it)
+    workers: usize,
     scratch: Vec<f32>,
     /// aggregation threads (1 = the serial path)
     threads: usize,
@@ -41,11 +71,39 @@ impl Server {
             opt,
             agg,
             shadow: vec![0.0; d],
+            worker_shadows: Vec::new(),
+            track_worker_shadows: true,
+            workers: 0,
             scratch: vec![0.0; d],
             threads: 1,
             total_bits: 0,
             rounds: 0,
         }
+    }
+
+    /// Declare the attached worker count M. Fixes the `Accumulate`
+    /// normalization `G = (1/M) Σ_w g^w` independently of how many
+    /// messages a given round applies, and pre-sizes the per-worker
+    /// shadows. The engine sets this from its transport; standalone
+    /// users who skip it get the legacy per-round-count normalization.
+    pub fn with_workers(mut self, m: usize) -> Self {
+        self.workers = m;
+        if self.agg == AggKind::Accumulate && self.track_worker_shadows {
+            let d = self.params.len();
+            if self.worker_shadows.len() < m {
+                self.worker_shadows.resize_with(m, || vec![0.0; d]);
+            }
+        }
+        self
+    }
+
+    /// Disable (or re-enable) per-worker shadow tracking. Bench /
+    /// diagnostic knob only: the pooled aggregate and the trajectory are
+    /// identical either way — only the per-worker consistency
+    /// bookkeeping ([`Server::worker_shadow`]) stops updating.
+    pub fn with_worker_shadows(mut self, enabled: bool) -> Self {
+        self.track_worker_shadows = enabled;
+        self
     }
 
     /// Enable sharded multi-threaded aggregation (clamped to `>= 1`):
@@ -68,22 +126,38 @@ impl Server {
         self.threads
     }
 
-    /// Apply one synchronous round of `m` worker messages. Returns the
-    /// uplink bits consumed this round.
+    /// Apply one synchronous round of `m` worker messages, attributed to
+    /// workers `0..m` at weight 1 (the lock-step convenience wrapper).
+    /// Returns the uplink bits consumed this round.
     pub fn apply_round(&mut self, msgs: &[Compressed]) -> u64 {
-        let m = msgs.len().max(1);
-        let scale = 1.0 / m as f32;
+        let attributed: Vec<RoundMsg<'_>> = msgs
+            .iter()
+            .enumerate()
+            .map(|(w, comp)| RoundMsg { worker: w as u32, weight: 1.0, comp })
+            .collect();
+        self.apply_attributed(&attributed)
+    }
+
+    /// Apply one round of attributed, weighted worker messages (the
+    /// engine's entry point under every participation policy). Returns
+    /// the uplink bits consumed this round.
+    pub fn apply_attributed(&mut self, msgs: &[RoundMsg<'_>]) -> u64 {
+        let scale = 1.0 / self.norm(msgs.len()) as f32;
         let mut bits = 0u64;
         for msg in msgs {
-            debug_assert_eq!(msg.dim(), self.params.len());
-            bits += msg.wire_bits();
+            debug_assert_eq!(msg.comp.dim(), self.params.len());
+            debug_assert!(
+                self.agg == AggKind::Fresh || msg.weight == 1.0,
+                "Accumulate increments must apply at full weight"
+            );
+            bits += msg.comp.wire_bits();
         }
         let d = self.params.len();
         let threads = self.threads.min(d.max(1));
         if threads <= 1 {
             crate::tensor::zero(&mut self.scratch);
             for msg in msgs {
-                msg.add_into(&mut self.scratch, scale);
+                msg.comp.add_into(&mut self.scratch, msg.weight * scale);
             }
         } else {
             let chunk = d.div_ceil(threads);
@@ -92,7 +166,7 @@ impl Server {
                     s.spawn(move || {
                         crate::tensor::zero(out);
                         for msg in msgs {
-                            msg.payload.add_range_into(out, scale, t * chunk);
+                            msg.comp.payload.add_range_into(out, msg.weight * scale, t * chunk);
                         }
                     });
                 }
@@ -114,6 +188,7 @@ impl Server {
                         }
                     });
                 }
+                self.update_worker_shadows(msgs, threads);
                 let shadow = std::mem::take(&mut self.shadow);
                 self.opt.step(&mut self.params, &shadow);
                 self.shadow = shadow;
@@ -124,14 +199,127 @@ impl Server {
         bits
     }
 
+    /// Absorb EF21-style increments into the pooled aggregate and the
+    /// per-worker shadows **without** stepping the optimizer or counting
+    /// a round — the end-of-run drain of quorum-deferred messages (see
+    /// `RoundEngine::drain_pending`). No-op for `Fresh` servers. Bits
+    /// are counted (the increments are applied). Returns the bits
+    /// absorbed.
+    pub fn absorb_increments(&mut self, msgs: &[RoundMsg<'_>]) -> u64 {
+        if self.agg != AggKind::Accumulate || msgs.is_empty() {
+            return 0;
+        }
+        let scale = 1.0 / self.norm(msgs.len()) as f32;
+        let mut bits = 0u64;
+        crate::tensor::zero(&mut self.scratch);
+        for msg in msgs {
+            debug_assert_eq!(msg.comp.dim(), self.params.len());
+            msg.comp.add_into(&mut self.scratch, msg.weight * scale);
+            bits += msg.comp.wire_bits();
+        }
+        crate::tensor::axpy(&mut self.shadow, 1.0, &self.scratch);
+        self.update_worker_shadows(msgs, 1);
+        self.total_bits += bits;
+        bits
+    }
+
+    /// `Accumulate` normalization: the attached worker count M when
+    /// declared ([`Server::with_workers`]) — invariant under partial
+    /// participation — else the per-round message count (legacy
+    /// standalone use, where every worker reports every round). `Fresh`
+    /// always averages over the messages applied this round.
+    fn norm(&self, m_msgs: usize) -> usize {
+        match self.agg {
+            AggKind::Fresh => m_msgs.max(1),
+            AggKind::Accumulate if self.workers > 0 => self.workers,
+            AggKind::Accumulate => m_msgs.max(1),
+        }
+    }
+
+    /// Per-worker shadows: `g^w += weight · decode(msg)` in message
+    /// order. The shadows are independent per worker, so the threaded
+    /// path runs **one** scope per round with contributing workers
+    /// bucketed round-robin across at most `threads` tasks (each task
+    /// applies its workers' messages serially, in send order) —
+    /// bit-identical to the serial path because every shadow sees the
+    /// same add sequence either way.
+    fn update_worker_shadows(&mut self, msgs: &[RoundMsg<'_>], threads: usize) {
+        if !self.track_worker_shadows {
+            return;
+        }
+        let d = self.params.len();
+        if let Some(max_w) = msgs.iter().map(|m| m.worker as usize).max() {
+            let need = (max_w + 1).max(self.worker_shadows.len());
+            if self.worker_shadows.len() < need {
+                self.worker_shadows.resize_with(need, || vec![0.0; d]);
+            }
+        }
+        if threads <= 1 || msgs.len() <= 1 {
+            for msg in msgs {
+                msg.comp.add_into(&mut self.worker_shadows[msg.worker as usize], msg.weight);
+            }
+        } else {
+            // one pass groups messages by worker (empty Vecs don't
+            // allocate), then contributing workers are dealt round-robin
+            // across at most `threads` tasks
+            let mut by_worker: Vec<Vec<&RoundMsg<'_>>> =
+                vec![Vec::new(); self.worker_shadows.len()];
+            for msg in msgs {
+                by_worker[msg.worker as usize].push(msg);
+            }
+            std::thread::scope(|s| {
+                let mut buckets: Vec<Vec<(&mut Vec<f32>, Vec<&RoundMsg<'_>>)>> =
+                    (0..threads).map(|_| Vec::new()).collect();
+                let mut next = 0usize;
+                for (shw, mine) in self.worker_shadows.iter_mut().zip(by_worker) {
+                    if mine.is_empty() {
+                        continue;
+                    }
+                    buckets[next % threads].push((shw, mine));
+                    next += 1;
+                }
+                for bucket in buckets {
+                    if bucket.is_empty() {
+                        continue;
+                    }
+                    s.spawn(move || {
+                        for (shw, mine) in bucket {
+                            for msg in mine {
+                                msg.comp.add_into(shw, msg.weight);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+
     /// Adjust the optimizer step size mid-run (lr schedules).
     pub fn set_lr(&mut self, lr: f32) {
         self.opt.set_lr(lr);
     }
 
-    /// Current EF21 aggregate (tests/diagnostics).
+    /// Current pooled EF21 aggregate `G` (tests/diagnostics).
     pub fn shadow(&self) -> &[f32] {
         &self.shadow
+    }
+
+    /// Worker `w`'s server-side shadow `g^w` (Accumulate only): every
+    /// increment `w` ever sent, applied at full weight in send order.
+    /// `None` when tracking is disabled
+    /// ([`Server::with_worker_shadows`]) or `w` is beyond the allocated
+    /// range; a worker inside the range that never contributed reads as
+    /// all zeros (shadows are pre-sized by [`Server::with_workers`]).
+    pub fn worker_shadow(&self, w: usize) -> Option<&[f32]> {
+        if !self.track_worker_shadows {
+            return None;
+        }
+        self.worker_shadows.get(w).map(Vec::as_slice)
+    }
+
+    /// Declared worker count M (0 = undeclared / legacy).
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     pub fn agg(&self) -> AggKind {
@@ -219,7 +407,81 @@ mod tests {
             for (a, b) in serial.shadow().iter().zip(threaded.shadow()) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{agg:?}");
             }
+            if agg == AggKind::Accumulate {
+                for w in 0..3 {
+                    let sa = serial.worker_shadow(w).unwrap();
+                    let sb = threaded.worker_shadow(w).unwrap();
+                    for (a, b) in sa.iter().zip(sb) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "worker {w}");
+                    }
+                }
+            }
         }
+    }
+
+    #[test]
+    fn per_worker_shadows_track_attributed_increments() {
+        let mut s = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Accumulate)
+            .with_workers(3);
+        let c0 = sparse(2, vec![0], vec![1.0]);
+        let c2 = sparse(2, vec![1], vec![2.0]);
+        let msgs = [
+            RoundMsg { worker: 0, weight: 1.0, comp: &c0 },
+            RoundMsg { worker: 2, weight: 1.0, comp: &c2 },
+        ];
+        s.apply_attributed(&msgs);
+        // per-worker shadows at full weight…
+        assert_eq!(s.worker_shadow(0).unwrap(), &[1.0, 0.0]);
+        assert_eq!(s.worker_shadow(1).unwrap(), &[0.0, 0.0]);
+        assert_eq!(s.worker_shadow(2).unwrap(), &[0.0, 2.0]);
+        // …pooled G normalized by the declared M=3, not the 2 messages
+        assert_eq!(s.shadow(), &[1.0 / 3.0, 2.0 / 3.0]);
+        // a second increment from worker 0 keeps accumulating
+        s.apply_attributed(&[RoundMsg { worker: 0, weight: 1.0, comp: &c0 }]);
+        assert_eq!(s.worker_shadow(0).unwrap(), &[2.0, 0.0]);
+    }
+
+    #[test]
+    fn absorb_increments_updates_shadows_without_stepping() {
+        let mut s = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Accumulate)
+            .with_workers(2);
+        let c = sparse(2, vec![0], vec![4.0]);
+        let bits = s.absorb_increments(&[RoundMsg { worker: 1, weight: 1.0, comp: &c }]);
+        assert!(bits > 0);
+        assert_eq!(s.total_bits, bits);
+        assert_eq!(s.rounds, 0); // no optimizer step, no round counted
+        assert_eq!(s.params, vec![0.0, 0.0]);
+        assert_eq!(s.worker_shadow(1).unwrap(), &[4.0, 0.0]);
+        assert_eq!(s.shadow(), &[2.0, 0.0]); // (1/M)·4 with M=2
+        // no-op on Fresh servers
+        let mut f = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        assert_eq!(f.absorb_increments(&[RoundMsg { worker: 0, weight: 1.0, comp: &c }]), 0);
+        assert_eq!(f.total_bits, 0);
+    }
+
+    #[test]
+    fn fresh_weights_scale_the_mean() {
+        // two messages, one at half weight: mean = (1.0·a + 0.5·b) / 2
+        let mut s = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        let a = Compressed::dense(vec![2.0, 0.0]);
+        let b = Compressed::dense(vec![0.0, 4.0]);
+        s.apply_attributed(&[
+            RoundMsg { worker: 0, weight: 1.0, comp: &a },
+            RoundMsg { worker: 1, weight: 0.5, comp: &b },
+        ]);
+        assert_eq!(s.params, vec![-1.0, -1.0]);
+    }
+
+    #[test]
+    fn worker_shadow_tracking_can_be_disabled() {
+        let mut s = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Accumulate)
+            .with_worker_shadows(false)
+            .with_workers(2);
+        let c = sparse(2, vec![0], vec![1.0]);
+        s.apply_attributed(&[RoundMsg { worker: 0, weight: 1.0, comp: &c }]);
+        assert!(s.worker_shadow(0).is_none());
+        // pooled G unaffected by the switch
+        assert_eq!(s.shadow(), &[0.5, 0.0]);
     }
 
     #[test]

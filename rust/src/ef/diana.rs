@@ -8,10 +8,17 @@
 //! quantization variance vanishes — variance reduction without bias.
 //!
 //! Server semantics are [`AggKind`]-style but need the shift state, so
-//! DIANA gets its own [`DianaServer`] wrapper; the method registry wires
-//! it through the standard coordinator when selected programmatically.
+//! DIANA gets its own [`DianaServer`] wrapper — it is **not** wired
+//! through the method registry or the `RoundEngine` (a plain `Fresh`
+//! server would never add `H` back to the decoded differences and would
+//! silently train on shifted residuals). The [`GradientEncoder::on_ack`]
+//! impl below keeps the trait contract uniform for when a DianaServer
+//! transport path exists; today only [`DianaServer::apply_round`]
+//! (ack-less, lock-step) drives it.
 
-use super::GradientEncoder;
+use std::collections::VecDeque;
+
+use super::{AckEntry, AckStatus, GradientEncoder};
 use crate::compress::{Compressed, Compressor};
 use crate::optim::Optimizer;
 use crate::tensor::{axpy, Rng};
@@ -22,12 +29,14 @@ pub struct Diana {
     shift: Vec<f32>,
     alpha: f32,
     scratch: Vec<f32>,
+    /// sent but not yet terminally acked, oldest first
+    in_flight: VecDeque<Compressed>,
 }
 
 impl Diana {
     pub fn new(inner: Box<dyn Compressor>, d: usize, alpha: f32) -> Self {
         assert!(inner.unbiased(), "DIANA requires an unbiased quantizer");
-        Diana { inner, shift: vec![0.0; d], alpha, scratch: vec![0.0; d] }
+        Diana { inner, shift: vec![0.0; d], alpha, scratch: vec![0.0; d], in_flight: VecDeque::new() }
     }
 
     pub fn shift(&self) -> &[f32] {
@@ -45,12 +54,30 @@ impl GradientEncoder for Diana {
         axpy(&mut self.scratch, -1.0, &self.shift);
         let msg = self.inner.compress(&self.scratch, rng);
         msg.add_into(&mut self.shift, self.alpha);
+        super::push_in_flight(&mut self.in_flight, msg.clone());
         msg
     }
 
     fn agg(&self) -> super::AggKind {
         // messages are *differences*; DianaServer adds the shift back
         super::AggKind::Fresh
+    }
+
+    fn on_ack(&mut self, ack: &AckEntry) {
+        // The shift rolls forward optimistically at encode time (the
+        // classic lock-step semantics, a bitwise no-op when every ack is
+        // Applied@1). Terminal acks correct it to mirror exactly what the
+        // server's H absorbed: a dropped message contributes nothing, a
+        // λ-damped one contributes λ of its mass.
+        if let Some(msg) = super::take_terminal(&mut self.in_flight, ack) {
+            match ack.status {
+                AckStatus::Applied if ack.weight != 1.0 => {
+                    msg.add_into(&mut self.shift, self.alpha * (ack.weight - 1.0))
+                }
+                AckStatus::Dropped => msg.add_into(&mut self.shift, -self.alpha),
+                _ => {}
+            }
+        }
     }
 }
 
@@ -105,6 +132,17 @@ mod tests {
     #[should_panic(expected = "unbiased")]
     fn rejects_biased_inner() {
         Diana::new(Box::new(crate::compress::TopK { k: 1 }), 4, 0.1);
+    }
+
+    #[test]
+    fn dropped_ack_rolls_the_shift_back() {
+        use crate::ef::{AckEntry, AckStatus};
+        let mut enc = Diana::new(Box::new(Natural), 2, 0.5);
+        let mut rng = Rng::new(1);
+        enc.encode(&[2.0, -4.0], &mut rng);
+        assert!(crate::tensor::sq_norm(enc.shift()) > 0.0);
+        enc.on_ack(&AckEntry { sent_step: 0, status: AckStatus::Dropped, weight: 0.0 });
+        assert_eq!(enc.shift(), &[0.0, 0.0]);
     }
 
     #[test]

@@ -7,23 +7,114 @@
 //! These are *stateful* worker-side codecs, so the common interface is
 //! [`GradientEncoder`]: one encode per step, plus a declaration of how the
 //! server must aggregate ([`AggKind`]).
+//!
+//! # The `AggKind` contract
+//!
+//! What the server ([`crate::coordinator::Server`]) guarantees for each
+//! aggregation kind, under every participation policy
+//! ([`crate::config::Participation`]):
+//!
+//! * **`Fresh`** — each message is an estimate of *this step's*
+//!   gradient; the server averages the messages applied in a round
+//!   (`ḡ = (1/m) Σ decode(msg)`, `m` = messages applied that round) and
+//!   steps the optimizer. Per worker and round, **at most one** message
+//!   enters the mean: a quorum-deferred gradient is either applied in
+//!   the next round with a staleness weight
+//!   ([`crate::config::Staleness`]: damp `1/(1+age)` / full / drop) or
+//!   dropped when the same worker's on-time reply is present (dedupe).
+//!   Messages still deferred at shutdown are discarded. Dropped and
+//!   discarded messages never enter the aggregate, but their bits still
+//!   count toward the uplink total — the transmission happened.
+//! * **`Accumulate`** — each message is an *increment* to that worker's
+//!   server-side shadow `g^w` (EF21 family). The server applies every
+//!   increment **exactly once, at full weight, in send order**, into
+//!   `g^w` — never damped, never deduped, never dropped (deferred
+//!   increments are drained into the shadows at shutdown) — and steps
+//!   the optimizer on the pooled aggregate `G = (1/M) Σ_w g^w`
+//!   (`M` = attached workers, *not* the per-round message count, so the
+//!   normalization is invariant under partial participation).
+//!
+//! The engine acknowledges every message back to its worker in the next
+//! round's broadcast ([`AckEntry`]); encoders use terminal acks to keep
+//! their local state consistent with what the server actually absorbed
+//! ([`GradientEncoder::on_ack`]). Under full participation every ack is
+//! `Applied` at weight 1 and the hook is a bitwise no-op, so lock-step
+//! trajectories are unchanged.
 
 pub mod diana;
 
 pub use diana::{Diana, DianaServer};
 
+use std::collections::VecDeque;
+
 use crate::compress::{Compressed, Compressor};
 use crate::tensor::{axpy, Rng};
 
-/// Server-side aggregation semantics.
+/// Server-side aggregation semantics (see the module-level contract).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AggKind {
     /// Messages are (estimates of) this step's gradients:
-    /// `ḡ_t = (1/M) Σ_i decode(msg_i)`.
+    /// `ḡ_t = (1/m) Σ_i decode(msg_i)`.
     Fresh,
     /// Messages are *increments* to per-worker server-side shadows
-    /// (EF21 family): `G_t = G_{t−1} + (1/M) Σ_i decode(msg_i)`.
+    /// (EF21 family): `g^w += decode(msg_w)` at full weight, with the
+    /// optimizer stepping on the pooled `G = (1/M) Σ_w g^w`.
     Accumulate,
+}
+
+/// What the server did with one of this worker's messages. Delivered in
+/// the *next* round's broadcast (see [`crate::engine::framing`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AckStatus {
+    /// counted into the aggregate, at [`AckEntry::weight`]
+    Applied,
+    /// missed the round's (simulated) deadline; still buffered
+    /// server-side — a terminal `Applied`/`Dropped` ack follows
+    Deferred,
+    /// never applied: deduped against the worker's own on-time reply,
+    /// or discarded by the `staleness = drop` policy (Fresh only)
+    Dropped,
+}
+
+/// One acknowledgement for one in-flight message. Acks for a worker are
+/// delivered oldest-first; each message receives at most one `Deferred`
+/// followed by exactly one terminal (`Applied`/`Dropped`) ack.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AckEntry {
+    /// round the acknowledged message was sent in
+    pub sent_step: u64,
+    pub status: AckStatus,
+    /// application weight: 1.0 on time (and always for `Accumulate`
+    /// increments), the staleness weight for damped stale `Fresh`
+    /// gradients, 0.0 for `Deferred`/`Dropped`
+    pub weight: f32,
+}
+
+/// Messages older than this many unresolved sends are assumed fully
+/// applied (the legacy optimistic semantics) and forgotten, so encoders
+/// driven without ack plumbing (standalone loops, unit tests) don't
+/// grow their in-flight queue without bound. The engine acks every
+/// message within two rounds, far inside this window.
+const MAX_IN_FLIGHT: usize = 8;
+
+fn push_in_flight(q: &mut VecDeque<Compressed>, msg: Compressed) {
+    q.push_back(msg);
+    if q.len() > MAX_IN_FLIGHT {
+        q.pop_front(); // assume fully applied (legacy no-ack drivers)
+    }
+}
+
+/// The shared ack-resolution discipline: `Deferred` leaves the queue
+/// untouched (the terminal ack follows later); a terminal ack
+/// (`Applied`/`Dropped`) retires the **oldest** in-flight message and
+/// hands it back for the encoder-specific correction. `None` if the
+/// queue is empty (e.g. the entry was pruned by the [`MAX_IN_FLIGHT`]
+/// overflow policy).
+fn take_terminal(q: &mut VecDeque<Compressed>, ack: &AckEntry) -> Option<Compressed> {
+    match ack.status {
+        AckStatus::Deferred => None,
+        AckStatus::Applied | AckStatus::Dropped => q.pop_front(),
+    }
 }
 
 /// A worker-side gradient codec: possibly stateful across steps.
@@ -31,6 +122,13 @@ pub trait GradientEncoder: Send {
     fn name(&self) -> String;
     fn encode(&mut self, grad: &[f32], rng: &mut Rng) -> Compressed;
     fn agg(&self) -> AggKind;
+    /// Commit/rollback hook: the server's acknowledgement for this
+    /// worker's **oldest unresolved** message (acks arrive oldest-first,
+    /// before the round's `encode`). Stateless codecs ignore acks;
+    /// EF-family codecs use terminal acks to roll their error buffers /
+    /// shadows forward or back so local state mirrors exactly what the
+    /// server absorbed. Default: no-op.
+    fn on_ack(&mut self, _ack: &AckEntry) {}
 }
 
 /// Stateless wrapper: apply a [`Compressor`] to each gradient directly
@@ -51,18 +149,32 @@ impl GradientEncoder for Plain {
 
 /// EF14: accumulate the compression error and re-inject it next step.
 /// `c_t = C(e_{t−1} + g_t)`, `e_t = e_{t−1} + g_t − decode(c_t)`.
+///
+/// `encode` optimistically assumes full application (the classic,
+/// lock-step semantics). Under partial participation the ack hook makes
+/// the error buffer *staleness-aware*: mass the server did not absorb —
+/// a dropped message entirely, or the `1−λ` remainder of a message
+/// damped to weight `λ` — returns to the error buffer and is re-sent
+/// by later messages.
 pub struct Ef14 {
     inner: Box<dyn Compressor>,
     err: Vec<f32>,
+    /// sent but not yet terminally acked, oldest first
+    in_flight: VecDeque<Compressed>,
 }
 
 impl Ef14 {
     pub fn new(inner: Box<dyn Compressor>, d: usize) -> Self {
-        Ef14 { inner, err: vec![0.0; d] }
+        Ef14 { inner, err: vec![0.0; d], in_flight: VecDeque::new() }
     }
 
     pub fn error_norm(&self) -> f64 {
         crate::tensor::norm(&self.err)
+    }
+
+    /// Messages awaiting a terminal ack (tests/diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
     }
 }
 
@@ -75,30 +187,61 @@ impl GradientEncoder for Ef14 {
         axpy(&mut self.err, 1.0, grad); // err += grad
         let msg = self.inner.compress(&self.err, rng);
         msg.add_into(&mut self.err, -1.0); // err -= decode(msg)
+        push_in_flight(&mut self.in_flight, msg.clone());
         msg
     }
 
     fn agg(&self) -> AggKind {
         AggKind::Fresh
     }
+
+    fn on_ack(&mut self, ack: &AckEntry) {
+        if let Some(msg) = take_terminal(&mut self.in_flight, ack) {
+            match ack.status {
+                // the server absorbed λ·decode(msg); the unapplied (1−λ)
+                // mass returns to the error buffer. λ = 1 (the
+                // full-participation case) must stay a bitwise no-op.
+                AckStatus::Applied if ack.weight != 1.0 => {
+                    msg.add_into(&mut self.err, 1.0 - ack.weight)
+                }
+                AckStatus::Dropped => msg.add_into(&mut self.err, 1.0),
+                _ => {}
+            }
+        }
+    }
 }
 
 /// EF21: maintain a worker shadow `g^w` of the server state and compress
 /// the *difference*: `c_t = C(v_t − g^w_{t−1})`, `g^w_t = g^w_{t−1} + decode(c_t)`.
 /// The server accumulates the increments ([`AggKind::Accumulate`]).
+///
+/// The shadow rolls forward *optimistically* at encode time: under the
+/// `Accumulate` contract the server applies every increment exactly
+/// once at full weight (possibly a round late), so after the increment
+/// lands, worker and server shadows agree bit-for-bit — the same add
+/// sequence on the same values. A `Dropped` ack (never produced by the
+/// engine for `Accumulate`; reserved for explicit server-side
+/// rejection) rolls the shadow back.
 pub struct Ef21 {
     inner: Box<dyn Compressor>,
     shadow: Vec<f32>,
     scratch: Vec<f32>,
+    /// sent but not yet terminally acked, oldest first
+    in_flight: VecDeque<Compressed>,
 }
 
 impl Ef21 {
     pub fn new(inner: Box<dyn Compressor>, d: usize) -> Self {
-        Ef21 { inner, shadow: vec![0.0; d], scratch: vec![0.0; d] }
+        Ef21 { inner, shadow: vec![0.0; d], scratch: vec![0.0; d], in_flight: VecDeque::new() }
     }
 
     pub fn shadow(&self) -> &[f32] {
         &self.shadow
+    }
+
+    /// Messages awaiting a terminal ack (tests/diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
     }
 }
 
@@ -113,11 +256,23 @@ impl GradientEncoder for Ef21 {
         axpy(&mut self.scratch, -1.0, &self.shadow);
         let msg = self.inner.compress(&self.scratch, rng);
         msg.add_into(&mut self.shadow, 1.0); // shadow += decode(msg)
+        push_in_flight(&mut self.in_flight, msg.clone());
         msg
     }
 
     fn agg(&self) -> AggKind {
         AggKind::Accumulate
+    }
+
+    fn on_ack(&mut self, ack: &AckEntry) {
+        if let Some(msg) = take_terminal(&mut self.in_flight, ack) {
+            // Applied needs no correction (increments always land at
+            // full weight); Dropped means the server never absorbed
+            // this increment: roll the shadow back
+            if ack.status == AckStatus::Dropped {
+                msg.add_into(&mut self.shadow, -1.0);
+            }
+        }
     }
 }
 
@@ -138,6 +293,11 @@ impl Ef21Sgdm {
             beta,
             first: true,
         }
+    }
+
+    /// The underlying EF21 worker shadow `g^w` (tests/diagnostics).
+    pub fn shadow(&self) -> &[f32] {
+        self.inner.shadow()
     }
 }
 
@@ -164,6 +324,10 @@ impl GradientEncoder for Ef21Sgdm {
 
     fn agg(&self) -> AggKind {
         AggKind::Accumulate
+    }
+
+    fn on_ack(&mut self, ack: &AckEntry) {
+        self.inner.on_ack(ack); // the shadow lives in the inner EF21
     }
 }
 
@@ -268,5 +432,86 @@ mod tests {
         let msg = enc.encode(&g, &mut rng).decode();
         // identity compressor: increment equals v_1 = g_1
         assert_eq!(msg, g);
+    }
+
+    fn ack(status: AckStatus, weight: f32) -> AckEntry {
+        AckEntry { sent_step: 0, status, weight }
+    }
+
+    #[test]
+    fn ef14_full_weight_ack_is_a_bitwise_noop() {
+        let g = vec![3.0f32, 1.0, -0.5];
+        let mut acked = Ef14::new(Box::new(TopK { k: 1 }), 3);
+        let mut legacy = Ef14::new(Box::new(TopK { k: 1 }), 3);
+        let mut r1 = Rng::new(0);
+        let mut r2 = Rng::new(0);
+        for _ in 0..5 {
+            acked.encode(&g, &mut r1);
+            acked.on_ack(&ack(AckStatus::Applied, 1.0));
+            legacy.encode(&g, &mut r2);
+        }
+        for (a, b) in acked.err.iter().zip(&legacy.err) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(acked.in_flight(), 0);
+        assert_eq!(legacy.in_flight(), 5);
+    }
+
+    #[test]
+    fn ef14_dropped_ack_reinjects_the_whole_message() {
+        // mass conservation must hold across a drop: the dropped
+        // message's mass returns to the error buffer
+        let mut enc = Ef14::new(Box::new(TopK { k: 1 }), 3);
+        let mut rng = Rng::new(0);
+        let g = vec![3.0f32, 1.0, -0.5];
+        enc.encode(&g, &mut rng);
+        // err currently holds the residual [0, 1, -0.5]
+        enc.on_ack(&ack(AckStatus::Dropped, 0.0));
+        assert_eq!(enc.err, vec![3.0, 1.0, -0.5]); // full g is pending again
+        // the next flush re-sends the dropped coordinate
+        let msg = enc.encode(&[0.0; 3], &mut rng).decode();
+        assert_eq!(msg, vec![3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ef14_damped_ack_returns_unapplied_mass() {
+        // server applied the message at weight 0.25: 75% of its mass
+        // must come back to the error buffer (staleness-aware EF)
+        let mut enc = Ef14::new(Box::new(Identity), 2);
+        let mut rng = Rng::new(0);
+        enc.encode(&[4.0, -8.0], &mut rng);
+        assert_eq!(enc.err, vec![0.0, 0.0]); // identity: no residual
+        enc.on_ack(&ack(AckStatus::Deferred, 0.0)); // not yet resolved
+        assert_eq!(enc.err, vec![0.0, 0.0]);
+        assert_eq!(enc.in_flight(), 1);
+        enc.on_ack(&ack(AckStatus::Applied, 0.25));
+        assert_eq!(enc.err, vec![3.0, -6.0]);
+        assert_eq!(enc.in_flight(), 0);
+    }
+
+    #[test]
+    fn ef21_dropped_ack_rolls_the_shadow_back() {
+        let mut enc = Ef21::new(Box::new(TopK { k: 1 }), 3);
+        let mut rng = Rng::new(0);
+        let g = vec![2.0f32, 1.0, 0.0];
+        enc.encode(&g, &mut rng);
+        assert_eq!(enc.shadow(), &[2.0, 0.0, 0.0]);
+        enc.on_ack(&ack(AckStatus::Dropped, 0.0));
+        assert_eq!(enc.shadow(), &[0.0, 0.0, 0.0]);
+        // applied acks just retire the in-flight entry
+        enc.encode(&g, &mut rng);
+        enc.on_ack(&ack(AckStatus::Applied, 1.0));
+        assert_eq!(enc.shadow(), &[2.0, 0.0, 0.0]);
+        assert_eq!(enc.in_flight(), 0);
+    }
+
+    #[test]
+    fn in_flight_queue_is_bounded_without_acks() {
+        let mut enc = Ef21::new(Box::new(Identity), 2);
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            enc.encode(&[1.0, 1.0], &mut rng);
+        }
+        assert!(enc.in_flight() <= super::MAX_IN_FLIGHT);
     }
 }

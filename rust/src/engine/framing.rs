@@ -1,9 +1,15 @@
 //! Round-frame codecs: the byte layout of the leader↔worker protocol.
 //!
-//! Downstream (leader → workers), `FRAME_PARAMS`:
+//! Downstream (leader → workers), `FRAME_PARAMS`, **version 2** (the
+//! version byte was introduced together with the per-worker ack block;
+//! mixed-version clusters are rejected loudly at decode):
 //!
 //! ```text
-//! step(u32 LE) | n_participants(u32 LE) | ids(n × u32 LE) | params_to_bytes(params)
+//! ver(u8 = 0xA2) | step(u32 LE) | n_participants(u32 LE) | ids(n × u32 LE)
+//!   | n_ack_workers(u32 LE)
+//!   | per acked worker: worker(u32 LE) | n_entries(u8)
+//!       | per entry: sent_step(u32 LE) | status(u8) | weight(f32 LE)
+//!   | params_to_bytes(params)
 //! ```
 //!
 //! Upstream (worker → leader), `FRAME_GRAD`:
@@ -20,8 +26,20 @@
 use anyhow::{bail, Result};
 
 use crate::compress::Compressed;
+use crate::ef::{AckEntry, AckStatus};
 use crate::transport::{params_from_bytes, params_to_bytes, Frame, FRAME_GRAD, FRAME_PARAMS};
 use crate::wire;
+
+/// Round-frame wire version byte: `0xA2` = "v2", introduced with the
+/// per-worker ack block. Decoders reject any other value so a
+/// mixed-version cluster fails loudly instead of silently misreading
+/// state. Frames from this and future versions are exactly
+/// self-identifying; an unversioned *v1* frame (first byte = the LSB of
+/// its step counter) is caught by this probe except when its step
+/// ≡ 0xA2 (mod 256) — a high value chosen so small-step v1 frames can
+/// never alias — and an aliased frame still has to pass every
+/// structural length/order check below before anything is believed.
+pub const ROUND_FRAME_VERSION: u8 = 0xA2;
 
 /// Decoded leader→worker round announcement.
 #[derive(Clone, Debug)]
@@ -29,12 +47,24 @@ pub struct RoundDown {
     pub step: u64,
     /// sorted participant ids for this round
     pub participants: Vec<u32>,
+    /// per-worker acknowledgements `(worker, entries)` for messages the
+    /// server resolved (or deferred) since the previous broadcast
+    pub acks: Vec<(u32, Vec<AckEntry>)>,
     pub params: Vec<f32>,
 }
 
 impl RoundDown {
     pub fn is_participant(&self, id: u32) -> bool {
         self.participants.binary_search(&id).is_ok()
+    }
+
+    /// This worker's ack entries, oldest first (empty when none).
+    pub fn acks_for(&self, id: u32) -> &[AckEntry] {
+        self.acks
+            .iter()
+            .find(|(w, _)| *w == id)
+            .map(|(_, list)| list.as_slice())
+            .unwrap_or(&[])
     }
 }
 
@@ -47,28 +77,71 @@ pub struct Reply {
     pub comp: Compressed,
 }
 
-/// Encode the round announcement carrying the current model.
-pub fn encode_round(step: u64, participants: &[u32], params: &[f32]) -> Frame {
-    let mut payload = Vec::with_capacity(8 + 4 * participants.len() + 4 + 4 * params.len());
+/// Encode the round announcement carrying the current model plus the
+/// per-worker acks accumulated since the last broadcast (`acks` is
+/// indexed by worker id; empty lists are not shipped).
+pub fn encode_round(step: u64, participants: &[u32], acks: &[Vec<AckEntry>], params: &[f32]) -> Frame {
+    let n_ack_workers = acks.iter().filter(|a| !a.is_empty()).count();
+    let ack_bytes: usize = acks.iter().filter(|a| !a.is_empty()).map(|a| 5 + 9 * a.len()).sum();
+    let mut payload = Vec::with_capacity(
+        1 + 8 + 4 * participants.len() + 4 + ack_bytes + 4 + 4 * params.len(),
+    );
+    payload.push(ROUND_FRAME_VERSION);
     payload.extend_from_slice(&(step as u32).to_le_bytes());
     payload.extend_from_slice(&(participants.len() as u32).to_le_bytes());
     for id in participants {
         payload.extend_from_slice(&id.to_le_bytes());
     }
+    payload.extend_from_slice(&(n_ack_workers as u32).to_le_bytes());
+    for (w, list) in acks.iter().enumerate() {
+        if list.is_empty() {
+            continue;
+        }
+        // the engine acks every message within two rounds, so a worker
+        // never carries more than a handful of entries; a hard assert
+        // (not debug-only) because a truncated count byte would make the
+        // decoder misattribute the overflow entries to other workers
+        assert!(list.len() <= u8::MAX as usize, "ack list overflow for worker {w}");
+        payload.extend_from_slice(&(w as u32).to_le_bytes());
+        payload.push(list.len() as u8);
+        for a in list {
+            payload.extend_from_slice(&(a.sent_step as u32).to_le_bytes());
+            payload.push(match a.status {
+                AckStatus::Applied => 0,
+                AckStatus::Deferred => 1,
+                AckStatus::Dropped => 2,
+            });
+            payload.extend_from_slice(&a.weight.to_le_bytes());
+        }
+    }
     payload.extend_from_slice(&params_to_bytes(params));
     Frame { kind: FRAME_PARAMS, payload }
 }
 
-/// Decode a round announcement, validating every declared length
-/// against the actual buffer.
+fn need(b: &[u8], upto: usize, what: &str) -> Result<()> {
+    if b.len() < upto {
+        bail!("round frame truncated in {what}: have {} bytes, need {upto}", b.len());
+    }
+    Ok(())
+}
+
+/// Decode a round announcement, validating the frame version and every
+/// declared length against the actual buffer.
 pub fn decode_round(frame: &Frame) -> Result<RoundDown> {
     if frame.kind != FRAME_PARAMS {
         bail!("expected params frame, got kind {}", frame.kind);
     }
-    let b = &frame.payload;
-    if b.len() < 8 {
-        bail!("round frame truncated: {} bytes, need at least 8", b.len());
+    let Some(&ver) = frame.payload.first() else {
+        bail!("empty round frame");
+    };
+    if ver != ROUND_FRAME_VERSION {
+        bail!(
+            "round frame version {ver}, this build speaks v{ROUND_FRAME_VERSION} — \
+             mixed-version cluster? upgrade every node together"
+        );
     }
+    let b = &frame.payload[1..];
+    need(b, 8, "header")?;
     let step = u32::from_le_bytes(b[..4].try_into().unwrap()) as u64;
     let n = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
     if (b.len() as u64) < 8 + 4 * n as u64 {
@@ -79,8 +152,52 @@ pub fn decode_round(frame: &Frame) -> Result<RoundDown> {
         .chunks_exact(4)
         .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    let params = params_from_bytes(&b[ids_end..])?;
-    Ok(RoundDown { step, participants, params })
+    // is_participant binary-searches this list, and a gather deadlocks
+    // if a worker misreads its membership — enforce the encoder's
+    // strictly-ascending order instead of trusting the sender
+    if !participants.windows(2).all(|w| w[0] < w[1]) {
+        bail!("participant ids duplicated or out of order: {participants:?}");
+    }
+    // --- ack block ---------------------------------------------------
+    let mut off = ids_end;
+    need(b, off + 4, "ack header")?;
+    let n_ack_workers = u32::from_le_bytes(b[off..off + 4].try_into().unwrap()) as usize;
+    off += 4;
+    let mut acks: Vec<(u32, Vec<AckEntry>)> = Vec::new();
+    for _ in 0..n_ack_workers {
+        need(b, off + 5, "ack worker header")?;
+        let worker = u32::from_le_bytes(b[off..off + 4].try_into().unwrap());
+        // the encoder emits blocks in strictly ascending worker order;
+        // a duplicate block would make acks_for silently return a
+        // subset and desynchronize that worker's EF state — reject
+        if let Some((prev, _)) = acks.last() {
+            if worker <= *prev {
+                bail!("ack blocks duplicated or out of order: worker {worker} after {prev}");
+            }
+        }
+        let count = b[off + 4] as usize;
+        off += 5;
+        need(b, off + 9 * count, "ack entries")?;
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            let sent_step = u32::from_le_bytes(b[off..off + 4].try_into().unwrap()) as u64;
+            let status = match b[off + 4] {
+                0 => AckStatus::Applied,
+                1 => AckStatus::Deferred,
+                2 => AckStatus::Dropped,
+                other => bail!("unknown ack status byte {other} for worker {worker}"),
+            };
+            let weight = f32::from_le_bytes(b[off + 5..off + 9].try_into().unwrap());
+            if !(weight.is_finite() && (0.0..=1.0).contains(&weight)) {
+                bail!("ack weight {weight} out of [0, 1] for worker {worker}");
+            }
+            entries.push(AckEntry { sent_step, status, weight });
+            off += 9;
+        }
+        acks.push((worker, entries));
+    }
+    let params = params_from_bytes(&b[off..])?;
+    Ok(RoundDown { step, participants, acks, params })
 }
 
 /// Encode a worker reply: loss plus the wire-encoded compressed gradient.
@@ -149,29 +266,113 @@ mod tests {
 
     #[test]
     fn round_frame_roundtrip() {
-        let f = encode_round(7, &[0, 2, 5], &[1.5, -2.0]);
+        let f = encode_round(7, &[0, 2, 5], &[], &[1.5, -2.0]);
         let down = decode_round(&f).unwrap();
         assert_eq!(down.step, 7);
         assert_eq!(down.participants, vec![0, 2, 5]);
         assert_eq!(down.params, vec![1.5, -2.0]);
+        assert!(down.acks.is_empty());
         assert!(down.is_participant(2));
         assert!(!down.is_participant(1));
+    }
+
+    #[test]
+    fn round_frame_roundtrips_acks() {
+        let acks = vec![
+            vec![], // worker 0: nothing to ack — not shipped
+            vec![
+                AckEntry { sent_step: 3, status: AckStatus::Applied, weight: 0.5 },
+                AckEntry { sent_step: 4, status: AckStatus::Deferred, weight: 0.0 },
+            ],
+            vec![AckEntry { sent_step: 4, status: AckStatus::Dropped, weight: 0.0 }],
+        ];
+        let f = encode_round(5, &[0, 1, 2], &acks, &[1.0]);
+        let down = decode_round(&f).unwrap();
+        assert_eq!(down.acks.len(), 2);
+        assert!(down.acks_for(0).is_empty());
+        assert_eq!(down.acks_for(1), &acks[1][..]);
+        assert_eq!(down.acks_for(2), &acks[2][..]);
+        assert_eq!(down.params, vec![1.0]);
+    }
+
+    #[test]
+    fn round_frame_rejects_other_versions_loudly() {
+        let f = encode_round(1, &[0], &[], &[1.0]);
+        // a v1 node's frame (or any other version) must be a loud error
+        for ver in [0u8, 1, 3, 255] {
+            let mut forged = f.clone();
+            forged.payload[0] = ver;
+            let err = decode_round(&forged).unwrap_err().to_string();
+            assert!(err.contains("version"), "{err}");
+        }
+        // and an empty frame doesn't panic on the version probe
+        assert!(decode_round(&Frame::params(vec![])).is_err());
     }
 
     #[test]
     fn round_frame_rejects_malformed() {
         // wrong kind
         assert!(decode_round(&Frame::shutdown()).is_err());
-        // truncated header
-        assert!(decode_round(&Frame::params(vec![1, 2, 3])).is_err());
-        // forged participant count
-        let mut f = encode_round(0, &[0], &[1.0]);
-        f.payload[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        // truncated header (valid version byte, bogus rest)
+        assert!(decode_round(&Frame::params(vec![ROUND_FRAME_VERSION, 2, 3])).is_err());
+        // forged participant count (offset 5 = ver + step)
+        let mut f = encode_round(0, &[0], &[], &[1.0]);
+        f.payload[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_round(&f).is_err());
         // truncated params tail
-        let mut f = encode_round(0, &[0], &[1.0, 2.0]);
+        let mut f = encode_round(0, &[0], &[], &[1.0, 2.0]);
         f.payload.truncate(f.payload.len() - 2);
         assert!(decode_round(&f).is_err());
+        // unsorted or duplicate participant ids (is_participant
+        // binary-searches, so order is load-bearing)
+        let mut f = encode_round(0, &[1, 3], &[], &[1.0]);
+        f.payload[9..13].copy_from_slice(&7u32.to_le_bytes()); // [7, 3]
+        let err = decode_round(&f).unwrap_err().to_string();
+        assert!(err.contains("participant ids"), "{err}");
+        let mut f = encode_round(0, &[1, 3], &[], &[1.0]);
+        f.payload[13..17].copy_from_slice(&1u32.to_le_bytes()); // [1, 1]
+        assert!(decode_round(&f).is_err());
+    }
+
+    #[test]
+    fn round_frame_rejects_forged_ack_blocks() {
+        let acks =
+            vec![vec![AckEntry { sent_step: 1, status: AckStatus::Applied, weight: 1.0 }]];
+        let f = encode_round(2, &[0], &acks, &[1.0]);
+        // ack block layout: ver(1) + step(4) + n_parts(4) + ids(4) = 13,
+        // then n_ack_workers(4) at 13, worker(4) at 17, count(1) at 21,
+        // then entries: sent_step(4) at 22, status(1) at 26, weight(4)
+        let mut forged_count = f.clone();
+        forged_count.payload[13..17].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_round(&forged_count).is_err());
+        let mut bad_status = f.clone();
+        bad_status.payload[26] = 9;
+        let err = decode_round(&bad_status).unwrap_err().to_string();
+        assert!(err.contains("ack status"), "{err}");
+        let mut bad_weight = f.clone();
+        bad_weight.payload[27..31].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(decode_round(&bad_weight).is_err());
+        let mut forged_entries = f.clone();
+        forged_entries.payload[21] = 200; // declares 200 entries
+        assert!(decode_round(&forged_entries).is_err());
+    }
+
+    #[test]
+    fn round_frame_rejects_duplicate_ack_blocks() {
+        // two blocks for workers 1 and 2, one entry each
+        let entry = AckEntry { sent_step: 0, status: AckStatus::Applied, weight: 1.0 };
+        let acks = vec![vec![], vec![entry], vec![entry]];
+        let f = encode_round(2, &[0], &acks, &[1.0]);
+        assert!(decode_round(&f).is_ok());
+        // block 1 spans worker@17..21 count@21 entry@22..31; block 2's
+        // worker id sits at 31..35 — forge it to duplicate worker 1
+        let mut forged = f.clone();
+        forged.payload[31..35].copy_from_slice(&1u32.to_le_bytes());
+        let err = decode_round(&forged).unwrap_err().to_string();
+        assert!(err.contains("duplicated or out of order"), "{err}");
+        // and out-of-order (worker 0 after worker 1) is equally loud
+        forged.payload[31..35].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_round(&forged).is_err());
     }
 
     #[test]

@@ -19,6 +19,15 @@
 //!   heterogeneous links plus seeded straggler delays decide simulated
 //!   message arrival order and per-round simulated wall-clock time, so
 //!   every run reports time alongside the bit-exact uplink accounting.
+//! * **Per-worker acks** ([`crate::ef::AckEntry`]): every message a
+//!   worker sends is acknowledged in a later broadcast — applied (at
+//!   what weight), deferred, or dropped — so stateful error-feedback
+//!   encoders keep their local state consistent with what the server
+//!   actually absorbed, under every policy (the `AggKind` contract in
+//!   [`crate::ef`]). The engine tracks per-worker application state,
+//!   dedupes `Fresh` messages per worker per round, applies EF21-family
+//!   `Accumulate` increments exactly once at full weight, and drains
+//!   still-deferred increments into the server shadows at shutdown.
 //!
 //! Physically every round is still one broadcast + one blocking gather
 //! of the participants' replies — lateness is decided by the *virtual*
@@ -27,14 +36,17 @@
 
 pub mod framing;
 
-pub use framing::{decode_reply, decode_round, encode_reply, encode_round, Reply, RoundDown};
+pub use framing::{
+    decode_reply, decode_round, encode_reply, encode_round, Reply, RoundDown,
+    ROUND_FRAME_VERSION,
+};
 
 use anyhow::{bail, Result};
 
 use crate::compress::Compressed;
-use crate::config::{Participation, TrainConfig};
-use crate::coordinator::Server;
-use crate::ef::AggKind;
+use crate::config::{Participation, Staleness, TrainConfig};
+use crate::coordinator::{RoundMsg, Server};
+use crate::ef::{AckEntry, AckStatus, AggKind};
 use crate::netsim::VirtualClock;
 use crate::tensor::Rng;
 use crate::transport::{Frame, LocalStar, Transport, WorkerLink, FRAME_PARAMS, FRAME_SHUTDOWN};
@@ -75,14 +87,18 @@ pub struct EngineOpts {
     /// effective quorum size k (only read when `participation == Quorum`)
     pub quorum: usize,
     pub sample_frac: f32,
+    /// stale-`Fresh`-gradient policy (Accumulate increments are exempt)
+    pub staleness: Staleness,
     pub clock: VirtualClock,
 }
 
-/// A message that missed its round's quorum deadline; applied at the
-/// start of the next round (scaled down by its staleness when the
-/// server aggregates `Fresh` gradients; EF21-family `Accumulate`
-/// increments apply at full weight).
-struct LateMsg {
+/// A message that missed its round's quorum deadline, keyed by its
+/// sender. Resolved at the start of the next round: `Fresh` gradients
+/// per the [`Staleness`] policy (and deduped against the sender's own
+/// on-time reply), EF21-family `Accumulate` increments always at full
+/// weight. Whatever happens is acknowledged back to the worker.
+struct PendingMsg {
+    worker: u32,
     sent_step: u64,
     comp: Compressed,
 }
@@ -105,6 +121,9 @@ pub struct RoundReport {
     /// previous rounds' late messages applied now (staleness-damped for
     /// `Fresh` servers, full weight for `Accumulate`)
     pub applied_stale: usize,
+    /// previous rounds' late messages dropped now (`Fresh` only:
+    /// superseded by the sender's on-time reply, or `staleness = drop`)
+    pub dropped_stale: usize,
     /// simulated duration of this round, seconds
     pub sim_round_s: f64,
     /// simulated wall-clock since the run started, seconds
@@ -118,7 +137,10 @@ pub struct RoundEngine<T: Transport> {
     transport: T,
     server: Server,
     opts: EngineOpts,
-    pending: Vec<LateMsg>,
+    pending: Vec<PendingMsg>,
+    /// per-worker acks accumulated while resolving the current round,
+    /// shipped (and cleared) in the next round's broadcast
+    acks: Vec<Vec<AckEntry>>,
     step: u64,
     shut: bool,
 }
@@ -140,7 +162,18 @@ impl<T: Transport> RoundEngine<T> {
         {
             bail!("sample_frac {} out of range (0, 1]", opts.sample_frac);
         }
-        Ok(RoundEngine { transport, server, opts, pending: Vec::new(), step: 0, shut: false })
+        // the transport's worker count is ground truth for the
+        // Accumulate normalization G = (1/M) Σ_w g^w
+        let server = server.with_workers(m);
+        Ok(RoundEngine {
+            transport,
+            server,
+            opts,
+            pending: Vec::new(),
+            acks: (0..m).map(|_| Vec::new()).collect(),
+            step: 0,
+            shut: false,
+        })
     }
 
     /// Build policy + clock from the config's round knobs
@@ -160,6 +193,7 @@ impl<T: Transport> RoundEngine<T> {
             participation: cfg.participation,
             quorum: cfg.effective_quorum_of(m),
             sample_frac: cfg.sample_frac,
+            staleness: cfg.staleness,
             clock,
         };
         Self::new(transport, server, opts)
@@ -199,15 +233,38 @@ impl<T: Transport> RoundEngine<T> {
         )
     }
 
-    /// Run one full protocol round: announce + broadcast params, gather
-    /// the participants' replies, order them by the virtual clock, split
-    /// on-time from late per the policy, aggregate, and step the
-    /// optimizer. Replies are applied in worker-id order (stale arrivals
-    /// first), so results never depend on physical arrival order.
+    /// Queue an acknowledgement for `worker`, shipped in the next
+    /// round's broadcast.
+    fn push_ack(&mut self, worker: u32, sent_step: u64, status: AckStatus, weight: f32) {
+        if let Some(list) = self.acks.get_mut(worker as usize) {
+            list.push(AckEntry { sent_step, status, weight });
+        }
+    }
+
+    /// Run one full protocol round: announce + broadcast params (with
+    /// the previous round's per-worker acks), gather the participants'
+    /// replies, order them by the virtual clock, split on-time from late
+    /// per the policy, resolve the deferred-message buffer, aggregate,
+    /// and step the optimizer. Replies are applied in worker-id order
+    /// (each worker's stale arrival before its fresh reply), so results
+    /// never depend on physical arrival order.
+    ///
+    /// Per worker and round, at most one `Fresh` message enters the
+    /// mean: a deferred gradient superseded by its sender's on-time
+    /// reply is dropped (and acked as such). `Accumulate` increments are
+    /// exempt from dedupe — they compose, and each must land exactly
+    /// once at full weight to keep the per-worker shadows consistent —
+    /// so a worker's stale increment and fresh increment may both apply
+    /// in one round, in send order. Every gathered reply is counted in
+    /// the uplink bit total exactly once, when its fate resolves —
+    /// applied *or* dropped: the worker transmitted it and the virtual
+    /// clock charged its transfer either way. A deferred message is
+    /// counted when it later resolves.
     pub fn run_round(&mut self) -> Result<RoundReport> {
         let step = self.step;
         let parts = self.participants_at(step);
-        let down = encode_round(step, &parts, &self.server.params);
+        let ship_acks: Vec<Vec<AckEntry>> = self.acks.iter_mut().map(std::mem::take).collect();
+        let down = encode_round(step, &parts, &ship_acks, &self.server.params);
         // the model broadcast ships uncompressed f32s
         let down_bits = 32 * self.server.params.len() as u64;
         self.transport.broadcast(&down)?;
@@ -238,40 +295,77 @@ impl<T: Transport> RoundEngine<T> {
             }
             _ => arrivals.iter().copied().fold(0.0, f64::max),
         };
+        let on_time_flags: Vec<bool> = arrivals.iter().map(|a| *a <= deadline).collect();
+        // sorted ids of this round's on-time repliers (for dedupe)
+        let on_time_ids: Vec<u32> = replies
+            .iter()
+            .zip(&on_time_flags)
+            .filter(|(_, ok)| **ok)
+            .map(|(r, _)| r.worker)
+            .collect();
 
-        // --- assemble the application set -------------------------------
-        // stale arrivals from previous rounds first. Fresh gradients are
-        // scaled by 1/(1+age) — a 1-round-late gradient enters at half
-        // weight (the usual staleness-aware damping for asynchronous
-        // SGD). Accumulate (EF21-family) messages are *state increments*
-        // into a persistent aggregate, not gradient estimates: the worker
-        // already rolled its shadow forward by the full increment, so a
-        // damped application would permanently desynchronize the worker
-        // shadow from the server aggregate — they always apply at full
-        // weight, however late.
-        let damp_stale = self.server.agg() == AggKind::Fresh;
-        let mut msgs: Vec<Compressed> = Vec::with_capacity(self.pending.len() + replies.len());
-        let applied_stale = self.pending.len();
-        for late in self.pending.drain(..) {
-            let mut comp = late.comp;
-            if damp_stale {
-                let age = step.saturating_sub(late.sent_step).max(1);
-                comp.payload.scale_values(1.0 / (1.0 + age as f32));
+        // --- resolve the deferred buffer, then this round's replies -----
+        let agg = self.server.agg();
+        let staleness = self.opts.staleness;
+        let mut apply: Vec<(u32, f32, Compressed)> =
+            Vec::with_capacity(self.pending.len() + replies.len());
+        let mut applied_stale = 0usize;
+        let mut dropped_stale = 0usize;
+        let mut dropped_bits = 0u64;
+        for p in std::mem::take(&mut self.pending) {
+            match agg {
+                AggKind::Accumulate => {
+                    // increments always land, at full weight (the EF21
+                    // shadow contract — see the `ef` module docs)
+                    self.push_ack(p.worker, p.sent_step, AckStatus::Applied, 1.0);
+                    apply.push((p.worker, 1.0, p.comp));
+                    applied_stale += 1;
+                }
+                AggKind::Fresh => {
+                    let superseded = on_time_ids.binary_search(&p.worker).is_ok();
+                    if superseded || staleness == Staleness::Drop {
+                        self.push_ack(p.worker, p.sent_step, AckStatus::Dropped, 0.0);
+                        dropped_bits += p.comp.wire_bits();
+                        dropped_stale += 1;
+                    } else {
+                        let age = step.saturating_sub(p.sent_step).max(1);
+                        let weight = match staleness {
+                            Staleness::Damp => 1.0 / (1.0 + age as f32),
+                            Staleness::Full => 1.0,
+                            Staleness::Drop => unreachable!(),
+                        };
+                        self.push_ack(p.worker, p.sent_step, AckStatus::Applied, weight);
+                        apply.push((p.worker, weight, p.comp));
+                        applied_stale += 1;
+                    }
+                }
             }
-            msgs.push(comp);
         }
         let mut late = 0usize;
-        for (reply, arrival) in replies.into_iter().zip(&arrivals) {
-            if *arrival <= deadline {
-                msgs.push(reply.comp);
+        for (reply, &on_time) in replies.into_iter().zip(&on_time_flags) {
+            if on_time {
+                self.push_ack(reply.worker, step, AckStatus::Applied, 1.0);
+                apply.push((reply.worker, 1.0, reply.comp));
             } else {
-                self.pending.push(LateMsg { sent_step: step, comp: reply.comp });
+                self.push_ack(reply.worker, step, AckStatus::Deferred, 0.0);
+                self.pending.push(PendingMsg {
+                    worker: reply.worker,
+                    sent_step: step,
+                    comp: reply.comp,
+                });
                 late += 1;
             }
         }
-        let on_time = msgs.len() - applied_stale;
+        let on_time = apply.len() - applied_stale;
 
-        let bits = self.server.apply_round(&msgs);
+        let msgs: Vec<RoundMsg<'_>> = apply
+            .iter()
+            .map(|(worker, weight, comp)| RoundMsg { worker: *worker, weight: *weight, comp })
+            .collect();
+        // dropped messages were still transmitted: their bits join the
+        // uplink total (once, here at resolution), not the aggregate
+        let bits = self.server.apply_attributed(&msgs) + dropped_bits;
+        self.server.total_bits += dropped_bits;
         let sim_now_s = self.opts.clock.advance(deadline);
         self.step += 1;
         Ok(RoundReport {
@@ -283,14 +377,67 @@ impl<T: Transport> RoundEngine<T> {
             on_time,
             late,
             applied_stale,
+            dropped_stale,
             sim_round_s: deadline,
             sim_now_s,
         })
     }
 
-    /// Tell every worker the run is over (idempotent).
+    /// Resolve the deferred-message buffer outside the round loop:
+    /// `Accumulate` increments are absorbed into the per-worker shadows
+    /// and the pooled aggregate at full weight (no optimizer step) —
+    /// discarding them would leave the shadows permanently
+    /// desynchronized from the workers; stale `Fresh` gradients are
+    /// discarded. Either way the messages were transmitted, so their
+    /// bits join the uplink total (exactly once), and every resolution
+    /// is acked like any other: if rounds continue after a mid-run
+    /// drain, the next broadcast delivers the acks and the encoders'
+    /// in-flight queues stay aligned (at shutdown the queued acks are
+    /// simply discarded — the workers are gone). Returns
+    /// `(absorbed, discarded)`. Idempotent; called by [`Self::shutdown`]
+    /// so buffered late messages can never leak past the run.
+    pub fn drain_pending(&mut self) -> (usize, usize) {
+        let pending = std::mem::take(&mut self.pending);
+        if pending.is_empty() {
+            return (0, 0);
+        }
+        let counts = match self.server.agg() {
+            AggKind::Accumulate => {
+                let msgs: Vec<RoundMsg<'_>> = pending
+                    .iter()
+                    .map(|p| RoundMsg { worker: p.worker, weight: 1.0, comp: &p.comp })
+                    .collect();
+                self.server.absorb_increments(&msgs);
+                (pending.len(), 0)
+            }
+            AggKind::Fresh => {
+                let bits: u64 = pending.iter().map(|p| p.comp.wire_bits()).sum();
+                self.server.total_bits += bits;
+                (0, pending.len())
+            }
+        };
+        let agg = self.server.agg();
+        for p in &pending {
+            match agg {
+                AggKind::Accumulate => {
+                    self.push_ack(p.worker, p.sent_step, AckStatus::Applied, 1.0)
+                }
+                AggKind::Fresh => self.push_ack(p.worker, p.sent_step, AckStatus::Dropped, 0.0),
+            }
+        }
+        counts
+    }
+
+    /// Tell every worker the run is over (idempotent). Drains the
+    /// deferred-message buffer first ([`Self::drain_pending`]) and
+    /// discards un-shipped acks, so reusing the engine's server state —
+    /// or a future warm restart — starts from a clean slate.
     pub fn shutdown(&mut self) -> Result<()> {
         if !self.shut {
+            self.drain_pending();
+            for list in &mut self.acks {
+                list.clear();
+            }
             self.transport.shutdown()?;
             self.shut = true;
         }
@@ -314,23 +461,52 @@ pub enum ServeOutcome {
     Shutdown,
 }
 
-/// Worker-side protocol step: decode one downstream frame, run `compute`
-/// if this worker participates, encode the reply. `compute` maps
-/// `(step, params)` to `(loss, compressed gradient)`.
+/// One decoded round from a worker's perspective: the model, this
+/// worker's server acks (oldest first), and whether it computes this
+/// round.
+pub struct WorkerRound<'a> {
+    pub step: u64,
+    pub params: &'a [f32],
+    /// acks for THIS worker's in-flight messages — feed them to
+    /// [`crate::ef::GradientEncoder::on_ack`] *before* encoding
+    pub acks: &'a [AckEntry],
+    /// whether this worker is in the round's participant set
+    pub participant: bool,
+}
+
+/// Worker-side protocol step: decode one downstream frame, hand the
+/// round to `compute`, encode the reply. `compute` must process
+/// `round.acks` unconditionally — acks arrive even on rounds the worker
+/// sits out — and return `Ok(Some((loss, compressed)))` iff
+/// `round.participant` (`Ok(None)` otherwise); a mismatch is a protocol
+/// violation and errors loudly.
 pub fn serve_frame(
     frame: &Frame,
     id: u32,
-    compute: &mut dyn FnMut(u64, &[f32]) -> Result<(f32, Compressed)>,
+    compute: &mut dyn FnMut(&WorkerRound<'_>) -> Result<Option<(f32, Compressed)>>,
 ) -> Result<ServeOutcome> {
     match frame.kind {
         FRAME_SHUTDOWN => Ok(ServeOutcome::Shutdown),
         FRAME_PARAMS => {
             let down = decode_round(frame)?;
-            if !down.is_participant(id) {
-                return Ok(ServeOutcome::Idle);
+            let round = WorkerRound {
+                step: down.step,
+                params: &down.params,
+                acks: down.acks_for(id),
+                participant: down.is_participant(id),
+            };
+            match (compute(&round)?, round.participant) {
+                (Some((loss, comp)), true) => {
+                    Ok(ServeOutcome::Reply(encode_reply(down.step, id, loss, comp)))
+                }
+                (None, false) => Ok(ServeOutcome::Idle),
+                (None, true) => {
+                    bail!("worker {id}: participant produced no reply at step {}", down.step)
+                }
+                (Some(_), false) => {
+                    bail!("worker {id}: non-participant produced a reply at step {}", down.step)
+                }
             }
-            let (loss, comp) = compute(down.step, &down.params)?;
-            Ok(ServeOutcome::Reply(encode_reply(down.step, id, loss, comp)))
         }
         other => bail!("worker {id}: unexpected frame kind {other}"),
     }
@@ -341,7 +517,7 @@ pub fn serve_frame(
 /// actually computed.
 pub fn run_worker<L: WorkerLink>(
     link: &mut L,
-    mut compute: impl FnMut(u64, &[f32]) -> Result<(f32, Compressed)>,
+    mut compute: impl FnMut(&WorkerRound<'_>) -> Result<Option<(f32, Compressed)>>,
 ) -> Result<u64> {
     let id = link.id();
     let mut served = 0u64;
@@ -358,8 +534,10 @@ pub fn run_worker<L: WorkerLink>(
     }
 }
 
-/// Per-worker compute closure for the in-process transport.
-pub type Compute<'a> = Box<dyn FnMut(u64, &[f32]) -> Result<(f32, Compressed)> + 'a>;
+/// Per-worker compute closure for the in-process transport: processes
+/// the round's acks, then returns `Some((loss, compressed))` when
+/// participating, `None` otherwise.
+pub type Compute<'a> = Box<dyn FnMut(&WorkerRound<'_>) -> Result<Option<(f32, Compressed)>> + 'a>;
 
 /// Build the in-process star transport from per-worker compute closures
 /// (the single-process driver path: the xla wrappers are `!Send`, so
@@ -382,20 +560,58 @@ pub fn local_star(computes: Vec<Compute<'_>>) -> LocalStar<'_> {
     )
 }
 
+/// Wrap a bare `(step, params) -> (loss, compressed)` gradient closure
+/// into the engine compute contract for drivers whose encoder needs no
+/// ack handling (stateless codecs, tests, benches): acks are discarded,
+/// non-participating rounds return `None`.
+pub fn compute_fn<'a>(
+    mut f: impl FnMut(u64, &[f32]) -> Result<(f32, Compressed)> + 'a,
+) -> Compute<'a> {
+    Box::new(move |round: &WorkerRound<'_>| {
+        if !round.participant {
+            return Ok(None);
+        }
+        f(round.step, round.params).map(Some)
+    })
+}
+
+/// Wrap a stateful encoder (or any ack-consuming state) in the compute
+/// contract: `ack` runs for every server ack — **before** anything
+/// else, and on sat-out rounds too — then `f` computes the reply on
+/// participating rounds. Drivers should use this instead of
+/// hand-writing the preamble, so ack processing can neither be
+/// forgotten nor reordered after the participation check.
+pub fn compute_with_acks<'a, S: 'a>(
+    mut state: S,
+    mut ack: impl FnMut(&mut S, &AckEntry) + 'a,
+    mut f: impl FnMut(&mut S, u64, &[f32]) -> Result<(f32, Compressed)> + 'a,
+) -> Compute<'a> {
+    Box::new(move |round: &WorkerRound<'_>| {
+        for a in round.acks {
+            ack(&mut state, a);
+        }
+        if !round.participant {
+            return Ok(None);
+        }
+        f(&mut state, round.step, round.params).map(Some)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ef::AggKind;
     use crate::optim::Sgd;
 
-    fn dense_star(m: usize, d: usize) -> LocalStar<'static> {
-        // worker w replies with a constant dense "gradient" of w+1
+    // worker w replies with a constant dense "gradient" of w+1, sized
+    // off the broadcast params
+    fn dense_star(m: usize) -> LocalStar<'static> {
         local_star(
             (0..m)
                 .map(|w| {
-                    Box::new(move |_step: u64, params: &[f32]| -> Result<(f32, Compressed)> {
+                    compute_fn(move |_step: u64, params: &[f32]| {
                         Ok((w as f32, Compressed::dense(vec![(w + 1) as f32; params.len()])))
-                    }) as Compute<'static>
+                    })
                 })
                 .collect(),
         )
@@ -411,7 +627,7 @@ mod tests {
     fn fullsync_round_averages_like_the_server() {
         let d = 4;
         let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
-        let mut eng = RoundEngine::from_cfg(dense_star(2, d), server, &cfg(2)).unwrap();
+        let mut eng = RoundEngine::from_cfg(dense_star(2), server, &cfg(2)).unwrap();
         let rep = eng.run_round().unwrap();
         // mean of [1,1,..] and [2,2,..] is 1.5; lr 1 step from 0
         assert_eq!(eng.params().to_vec(), vec![-1.5f32; 4]);
@@ -434,19 +650,26 @@ mod tests {
         c.quorum = 1;
         c.link = "hetero".into();
         c.straggler = 10.0; // huge spread: exactly one message makes each deadline
-        let mut eng = RoundEngine::from_cfg(dense_star(2, d), server, &c).unwrap();
+        let mut eng = RoundEngine::from_cfg(dense_star(2), server, &c).unwrap();
         let r0 = eng.run_round().unwrap();
         assert_eq!(r0.on_time + r0.late, 2);
-        assert_eq!(r0.applied_stale, 0);
+        assert_eq!(r0.applied_stale + r0.dropped_stale, 0);
         let r1 = eng.run_round().unwrap();
-        assert_eq!(r1.applied_stale, r0.late);
-        // bits are counted exactly once per message, when applied;
-        // r1's own late message is still pending and not yet counted
-        let applied = (r0.on_time + r1.applied_stale + r1.on_time) as u64;
-        assert_eq!(r1.total_bits, applied * 2 * 32);
+        // every round-0 late message resolves in round 1: applied with
+        // staleness damping, or dropped if superseded by its sender's
+        // own on-time round-1 reply (per-worker dedupe)
+        assert_eq!(r1.applied_stale + r1.dropped_stale, r0.late);
+        // bits are counted exactly once per transmitted message, at
+        // resolution (applied or dropped — the uplink was used either
+        // way); r1's own late message is still pending and not counted
+        let resolved = (r0.on_time + r1.applied_stale + r1.dropped_stale + r1.on_time) as u64;
+        assert_eq!(r1.total_bits, resolved * 2 * 32);
         // simulated time advanced monotonically
         assert!(r1.sim_now_s > r0.sim_now_s);
+        // Fresh: shutdown discards the still-pending straggler from the
+        // aggregate but still counts its transmission
         eng.shutdown().unwrap();
+        assert_eq!(eng.server().total_bits, (resolved + r1.late as u64) * 2 * 32);
     }
 
     #[test]
@@ -466,24 +689,30 @@ mod tests {
         let star = local_star(
             (0..2)
                 .map(|_| {
-                    Box::new(move |_step: u64, params: &[f32]| -> Result<(f32, Compressed)> {
+                    compute_fn(move |_step: u64, params: &[f32]| {
                         Ok((0.0, Compressed::dense(vec![1.0f32; params.len()])))
-                    }) as Compute<'static>
+                    })
                 })
                 .collect(),
         );
         let mut eng = RoundEngine::from_cfg(star, server, &c).unwrap();
         let r0 = eng.run_round().unwrap();
         assert_eq!((r0.on_time, r0.late), (1, 1));
-        // round 0: one on-time increment → G = 1.0
-        assert_eq!(eng.server().shadow(), &[1.0; 2]);
+        // round 0: one on-time increment at 1/M (M = 2) → G = 0.5
+        assert_eq!(eng.server().shadow(), &[0.5; 2]);
         let r1 = eng.run_round().unwrap();
         assert_eq!(r1.applied_stale, 1);
         // round 1: the stale increment at FULL weight + one on-time
-        // increment → G = 1.0 + (1.0 + 1.0)/2 = 2.0. The damping bug
-        // yielded 1.75 (stale applied at half weight).
-        assert_eq!(eng.server().shadow(), &[2.0; 2]);
+        // increment → G = 0.5 + (1.0 + 1.0)/2 = 1.5. The damping bug
+        // yielded a stale contribution of 0.5/2 instead of 1.0/2.
+        assert_eq!(eng.server().shadow(), &[1.5; 2]);
+        // shutdown drains the round-1 straggler at full weight: both
+        // worker shadows converge to the 2 increments each worker sent
         eng.shutdown().unwrap();
+        assert_eq!(eng.server().shadow(), &[2.0; 2]);
+        for w in 0..2 {
+            assert_eq!(eng.server().worker_shadow(w).unwrap(), &[2.0; 2]);
+        }
     }
 
     #[test]
@@ -493,7 +722,7 @@ mod tests {
         let mut c = cfg(8);
         c.participation = Participation::Sampled;
         c.sample_frac = 0.25;
-        let mut eng = RoundEngine::from_cfg(dense_star(8, d), server, &c).unwrap();
+        let mut eng = RoundEngine::from_cfg(dense_star(8), server, &c).unwrap();
         for step in 0..5 {
             let parts = eng.participants_at(step);
             assert_eq!(parts.len(), 2);
@@ -509,11 +738,11 @@ mod tests {
         let server = || Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
         let mut c = cfg(2);
         c.link = "bogus".into();
-        assert!(RoundEngine::from_cfg(dense_star(2, 2), server(), &c).is_err());
+        assert!(RoundEngine::from_cfg(dense_star(2), server(), &c).is_err());
         let mut c = cfg(2);
         c.participation = Participation::Quorum;
         c.quorum = 3; // > m
-        assert!(RoundEngine::from_cfg(dense_star(2, 2), server(), &c).is_err());
+        assert!(RoundEngine::from_cfg(dense_star(2), server(), &c).is_err());
         assert!(RoundEngine::from_cfg(local_star(vec![]), server(), &cfg(1)).is_err());
     }
 }

@@ -55,6 +55,8 @@ fn print_help() {
          \x20 participation  full | quorum | sampled        round policy\n\
          \x20 quorum         k (0 = majority)               proceed at k arrivals; late msgs applied next round\n\
          \x20 sample_frac    (0,1]                          client fraction for participation=sampled\n\
+         \x20 staleness      damp | full | drop             stale Fresh-gradient weighting (EF21-family\n\
+         \x20                                               increments always apply at full weight)\n\
          \x20 link           datacenter | edge | hetero     netsim virtual-clock preset\n\
          \x20 straggler      seconds                        mean seeded straggler delay (0 = off)\n",
         [
@@ -62,7 +64,7 @@ fn print_help() {
             "quant_bits", "eval_every", "eval_batches", "transport",
             "optimizer", "momentum_beta", "dirichlet_alpha", "use_l1_stats",
             "shard_size", "threads", "participation", "quorum", "sample_frac",
-            "link", "straggler", "tag",
+            "staleness", "link", "straggler", "tag",
         ]
         .join(", ")
     );

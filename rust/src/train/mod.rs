@@ -77,6 +77,17 @@ impl Codec {
             Codec::Enc(_) => None,
         }
     }
+
+    /// Server acknowledgement for this worker's oldest in-flight message
+    /// (engine ack plumbing). Stateful EF-family encoders roll their
+    /// error buffers / shadows on terminal acks; the MLMC-L1 path is
+    /// stateless across rounds and ignores them.
+    pub fn on_ack(&mut self, ack: &crate::ef::AckEntry) {
+        match self {
+            Codec::Enc(e) => e.on_ack(ack),
+            Codec::MlmcL1 { .. } => {}
+        }
+    }
 }
 
 /// Build the per-worker codec for a config.
@@ -188,23 +199,30 @@ pub fn run_with_csv(
     let task_ref = &task;
     let computes: Vec<Compute<'_>> = (0..cfg.workers)
         .map(|w| {
-            let mut codec = build_codec(cfg, &model);
+            let codec = build_codec(cfg, &model);
             let probs = if hetero { Some(class_probs[w].clone()) } else { None };
-            Box::new(move |step: u64, params: &[f32]| -> Result<(f32, Compressed)> {
-                let b = task_ref.train_batch(cfg.seed, w as u64, step, probs.as_deref());
-                let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, w as u64, step);
-                // fused single-dispatch path when the artifact exists
-                let fused = codec.fused_frac().filter(|pm| model_ref.gradstats.contains_key(pm));
-                if let Some(pm) = fused {
-                    let (loss, grad, seg_sq, perm) =
-                        rt.grad_stats_step(model_ref, pm, params, &batch_x(model_ref, &b), &b.y)?;
-                    Ok((loss, codec.encode_with_stats(&grad, seg_sq, perm, &mut rng)))
-                } else {
-                    let (loss, grad) =
-                        rt.grad_step(model_ref, params, &batch_x(model_ref, &b), &b.y)?;
-                    Ok((loss, codec.encode(rt, model_ref, &grad, &mut rng)?))
-                }
-            }) as Compute<'_>
+            // compute_with_acks feeds the server's acks to the codec
+            // first — even on rounds this worker sits out
+            engine::compute_with_acks(
+                codec,
+                |codec, ack| codec.on_ack(ack),
+                move |codec, step, params| {
+                    let b = task_ref.train_batch(cfg.seed, w as u64, step, probs.as_deref());
+                    let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, w as u64, step);
+                    // fused single-dispatch path when the artifact exists
+                    let fused =
+                        codec.fused_frac().filter(|pm| model_ref.gradstats.contains_key(pm));
+                    if let Some(pm) = fused {
+                        let (loss, grad, seg_sq, perm) = rt
+                            .grad_stats_step(model_ref, pm, params, &batch_x(model_ref, &b), &b.y)?;
+                        Ok((loss, codec.encode_with_stats(&grad, seg_sq, perm, &mut rng)))
+                    } else {
+                        let (loss, grad) =
+                            rt.grad_step(model_ref, params, &batch_x(model_ref, &b), &b.y)?;
+                        Ok((loss, codec.encode(rt, model_ref, &grad, &mut rng)?))
+                    }
+                },
+            )
         })
         .collect();
     let mut eng = RoundEngine::from_cfg(engine::local_star(computes), server, cfg)?;

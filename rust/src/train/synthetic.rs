@@ -4,7 +4,6 @@
 //! parallelization comparison (App. F.3), all on objectives with known
 //! optima so the error is measured exactly.
 
-use crate::compress::Compressed;
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::{agg_kind, build_encoder, Server};
 use crate::engine::{self, Compute, RoundEngine};
@@ -82,12 +81,15 @@ pub fn run_quadratic(problem: &Quadratic, cfg: &TrainConfig) -> SynthResult {
     .with_threads(cfg.threads);
     let computes: Vec<Compute<'_>> = (0..cfg.workers)
         .map(|w| {
-            let mut enc = build_encoder(cfg, d);
-            Box::new(move |step: u64, params: &[f32]| -> anyhow::Result<(f32, Compressed)> {
-                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
-                let g = problem.grad(w, params, &mut rng);
-                Ok((0.0f32, enc.encode(&g, &mut rng)))
-            }) as Compute<'_>
+            engine::compute_with_acks(
+                build_encoder(cfg, d),
+                |enc, ack| enc.on_ack(ack),
+                move |enc, step, params| {
+                    let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                    let g = problem.grad(w, params, &mut rng);
+                    Ok((0.0f32, enc.encode(&g, &mut rng)))
+                },
+            )
         })
         .collect();
     let mut eng = RoundEngine::from_cfg(engine::local_star(computes), server, cfg)

@@ -51,13 +51,20 @@ fn threaded_channel_training_round_trip() {
                 let mut cfg = TrainConfig::default();
                 cfg.method = Method::MlmcTopK;
                 cfg.frac_pm = 200;
-                let mut enc = build_encoder(&cfg, D);
+                let enc = build_encoder(&cfg, D);
                 let id = p.id as u64;
-                engine::run_worker(&mut p, move |step, params| {
-                    let mut rng = Rng::for_stream(7, id, step);
-                    let g = worker_grad(params, 1000 + id, 0.01, &mut rng);
-                    Ok((0.0, enc.encode(&g, &mut rng)))
-                })
+                engine::run_worker(
+                    &mut p,
+                    engine::compute_with_acks(
+                        enc,
+                        |enc, ack| enc.on_ack(ack),
+                        move |enc, step, params| {
+                            let mut rng = Rng::for_stream(7, id, step);
+                            let g = worker_grad(params, 1000 + id, 0.01, &mut rng);
+                            Ok((0.0, enc.encode(&g, &mut rng)))
+                        },
+                    ),
+                )
                 .unwrap()
             })
         })
@@ -122,12 +129,19 @@ fn tcp_cluster_round_trip() {
                 let mut cfg = TrainConfig::default();
                 cfg.method = Method::TopK;
                 cfg.frac_pm = 250;
-                let mut enc = build_encoder(&cfg, D);
-                engine::run_worker(&mut w, move |step, params| {
-                    let mut rng = Rng::for_stream(9, id as u64, step);
-                    let g = worker_grad(params, 2000 + id as u64, 0.0, &mut rng);
-                    Ok((0.0, enc.encode(&g, &mut rng)))
-                })
+                let enc = build_encoder(&cfg, D);
+                engine::run_worker(
+                    &mut w,
+                    engine::compute_with_acks(
+                        enc,
+                        |enc, ack| enc.on_ack(ack),
+                        move |enc, step, params| {
+                            let mut rng = Rng::for_stream(9, id as u64, step);
+                            let g = worker_grad(params, 2000 + id as u64, 0.0, &mut rng);
+                            Ok((0.0, enc.encode(&g, &mut rng)))
+                        },
+                    ),
+                )
                 .unwrap();
             })
         })

@@ -1,0 +1,402 @@
+//! Error feedback under partial participation (ISSUE 3):
+//!
+//! (a) **Shadow consistency** — after ≥50 rounds under quorum (with
+//!     heavy stragglers) and under client sampling, every EF21-family
+//!     worker's local shadow equals the server's per-worker shadow
+//!     **bit-for-bit** once the run is drained: increments are applied
+//!     exactly once, at full weight, in send order, so both sides
+//!     execute the identical float-add sequence.
+//! (b) **Full-participation bit-identity** — with the ack plumbing
+//!     active, `participation = full` through the engine stays
+//!     bit-identical to the plain lock-step loop (which never acks) for
+//!     every registered method: under full participation every ack is
+//!     `Applied` at weight 1 and the encoder hooks are bitwise no-ops.
+//! (c) **Frame versioning** — a round frame of any other version is a
+//!     loud decode error (mixed-version cluster protection), and the
+//!     ack block round-trips.
+//!
+//! Plus engine-level checks for the per-worker dedupe rule (at most one
+//! `Fresh` message per worker per round, every transmitted message's
+//! bits counted exactly once, at resolution) and the shutdown drain
+//! (deferred `Accumulate` increments are absorbed; stale `Fresh`
+//! gradients are discarded from the aggregate, their transmission still
+//! counted).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use mlmc_dist::compress::{Compressed, TopK};
+use mlmc_dist::config::{Method, Staleness, TrainConfig};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
+use mlmc_dist::ef::{AckEntry, AckStatus, AggKind, Ef21, Ef21Sgdm, GradientEncoder};
+use mlmc_dist::engine::{self, compute_fn, Compute, RoundEngine, WorkerRound};
+use mlmc_dist::optim::Sgd;
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
+
+const M: usize = 4;
+const D: usize = 24;
+const STEPS: usize = 60;
+
+fn assert_bit_identical(name: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{name}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name}: differ at {i}: {x} vs {y}");
+    }
+}
+
+/// An EF21-family encoder the test can read the shadow out of.
+trait HasShadow: GradientEncoder {
+    fn shadow_vec(&self) -> Vec<f32>;
+}
+
+impl HasShadow for Ef21 {
+    fn shadow_vec(&self) -> Vec<f32> {
+        self.shadow().to_vec()
+    }
+}
+
+impl HasShadow for Ef21Sgdm {
+    fn shadow_vec(&self) -> Vec<f32> {
+        self.shadow().to_vec()
+    }
+}
+
+/// Run `STEPS` engine rounds with per-worker EF21-family encoders held
+/// outside the engine (Rc), drain via `finish()`, and assert the
+/// bit-exact worker/server shadow contract.
+fn shadow_consistency_case<E: HasShadow + 'static>(
+    label: &str,
+    cfg: &TrainConfig,
+    mk: impl Fn() -> E,
+) {
+    let encs: Vec<Rc<RefCell<E>>> = (0..M).map(|_| Rc::new(RefCell::new(mk()))).collect();
+    let computes: Vec<Compute<'_>> = (0..M)
+        .map(|w| {
+            engine::compute_with_acks(
+                encs[w].clone(),
+                |enc, ack| enc.borrow_mut().on_ack(ack),
+                move |enc, step, _params| {
+                    // deterministic per-(worker, step) gradient field
+                    let mut grng = Rng::for_stream(7, w as u64, step);
+                    let g: Vec<f32> = (0..D).map(|_| grng.normal() as f32).collect();
+                    let mut crng = Rng::for_stream(11, w as u64, step);
+                    Ok((0.0, enc.borrow_mut().encode(&g, &mut crng)))
+                },
+            )
+        })
+        .collect();
+    let server = Server::new(vec![0.0; D], Box::new(Sgd { lr: 0.05 }), AggKind::Accumulate);
+    let mut eng = RoundEngine::from_cfg(engine::local_star(computes), server, cfg)
+        .expect("engine builds");
+    let mut total_late = 0usize;
+    let mut sat_out = 0usize;
+    for _ in 0..STEPS {
+        let rep = eng.run_round().unwrap();
+        total_late += rep.late;
+        sat_out += M - rep.participants;
+    }
+    // finish() drains still-deferred increments into the shadows
+    let server = eng.finish().unwrap();
+    for (w, enc) in encs.iter().enumerate() {
+        let server_shadow = server
+            .worker_shadow(w)
+            .unwrap_or_else(|| panic!("{label}: no server shadow for worker {w}"));
+        let worker_shadow = enc.borrow().shadow_vec();
+        assert_bit_identical(&format!("{label} worker {w}"), &worker_shadow, server_shadow);
+    }
+    // pooled G tracks (1/M) Σ_w g^w up to float reassociation
+    let mut mean = vec![0.0f64; D];
+    for w in 0..M {
+        for (m, v) in mean.iter_mut().zip(server.worker_shadow(w).unwrap()) {
+            *m += *v as f64 / M as f64;
+        }
+    }
+    for (g, m) in server.shadow().iter().zip(&mean) {
+        assert!((*g as f64 - m).abs() < 1e-4, "{label}: pooled G {g} vs mean shadow {m}");
+    }
+    // the scenario must actually exercise the deferral/sampling path
+    match cfg.participation {
+        mlmc_dist::config::Participation::Quorum => {
+            assert!(total_late > 0, "{label}: quorum run never deferred a message")
+        }
+        mlmc_dist::config::Participation::Sampled => {
+            assert!(sat_out > 0, "{label}: sampled run never sat a worker out")
+        }
+        mlmc_dist::config::Participation::Full => {}
+    }
+}
+
+fn quorum_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.workers = M;
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", "2").unwrap();
+    cfg.set("link", "hetero").unwrap();
+    cfg.set("straggler", "0.05").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn sampled_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.workers = M;
+    cfg.set("participation", "sampled").unwrap();
+    cfg.set("sample_frac", "0.5").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn ef21_shadows_bit_exact_under_quorum() {
+    shadow_consistency_case("ef21/quorum", &quorum_cfg(), || {
+        Ef21::new(Box::new(TopK { k: 4 }), D)
+    });
+}
+
+#[test]
+fn ef21_shadows_bit_exact_under_sampling() {
+    shadow_consistency_case("ef21/sampled", &sampled_cfg(), || {
+        Ef21::new(Box::new(TopK { k: 4 }), D)
+    });
+}
+
+#[test]
+fn ef21_sgdm_shadows_bit_exact_under_quorum_and_sampling() {
+    shadow_consistency_case("ef21-sgdm/quorum", &quorum_cfg(), || {
+        Ef21Sgdm::new(Box::new(TopK { k: 4 }), D, 0.1)
+    });
+    shadow_consistency_case("ef21-sgdm/sampled", &sampled_cfg(), || {
+        Ef21Sgdm::new(Box::new(TopK { k: 4 }), D, 0.1)
+    });
+}
+
+/// The plain lock-step loop (no engine, no acks): the PR 2 reference
+/// semantics for `participation = full`.
+fn lockstep_loop(problem: &Quadratic, cfg: &TrainConfig) -> (Vec<f32>, u64) {
+    let d = problem.d;
+    let mut encoders: Vec<_> = (0..cfg.workers).map(|_| build_encoder(cfg, d)).collect();
+    let mut server = Server::new(
+        vec![0.0; d],
+        Box::new(Sgd { lr: cfg.lr }),
+        agg_kind(&cfg.method),
+    )
+    .with_threads(cfg.threads);
+    for step in 0..cfg.steps {
+        let msgs: Vec<_> = encoders
+            .iter_mut()
+            .enumerate()
+            .map(|(w, enc)| {
+                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step as u64);
+                let g = problem.grad(w, &server.params, &mut rng);
+                enc.encode(&g, &mut rng)
+            })
+            .collect();
+        server.apply_round(&msgs);
+    }
+    (server.params, server.total_bits)
+}
+
+#[test]
+fn full_participation_stays_bit_identical_with_ack_plumbing() {
+    // (b): for every registered method, the engine run (acks flowing,
+    // per-worker shadows tracked) reproduces the ack-free lock-step loop
+    // bit for bit — the ack hooks must be no-ops at weight 1
+    let q = Quadratic::new(48, 3, 0.05, 0.8, 19);
+    for name in Method::all_names() {
+        let cfg = synth_cfg(Method::parse(name).unwrap(), 3, 20, 0.05, 100, 5);
+        let (ref_params, ref_bits) = lockstep_loop(&q, &cfg);
+        let r = run_quadratic(&q, &cfg);
+        assert_eq!(ref_bits, r.total_bits, "{name}: uplink accounting diverged");
+        assert_bit_identical(name, &ref_params, &r.final_params);
+    }
+}
+
+#[test]
+fn mixed_version_round_frames_are_rejected() {
+    // (c): versioned decode — see also engine/framing.rs unit tests
+    let f = engine::encode_round(3, &[0, 1], &[], &[1.0, 2.0]);
+    assert_eq!(f.payload[0], engine::ROUND_FRAME_VERSION);
+    for other in [0u8, 1, engine::ROUND_FRAME_VERSION + 1] {
+        let mut forged = f.clone();
+        forged.payload[0] = other;
+        let err = engine::decode_round(&forged).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+    // the good frame still decodes
+    assert!(engine::decode_round(&f).is_ok());
+}
+
+/// Dense unit messages: every message is d × 32 bits, so bit accounting
+/// is exactly countable.
+fn unit_star(m: usize) -> mlmc_dist::transport::LocalStar<'static> {
+    engine::local_star(
+        (0..m)
+            .map(|_| {
+                compute_fn(move |_step, params: &[f32]| {
+                    Ok((0.0, Compressed::dense(vec![1.0; params.len()])))
+                })
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn fresh_dedupe_applies_at_most_one_message_per_worker_per_round() {
+    let d = 2;
+    let bits_per_msg = 64u64; // dense, d = 2
+    let mut cfg = TrainConfig::default();
+    cfg.workers = 2;
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", "1").unwrap();
+    cfg.set("link", "hetero").unwrap();
+    cfg.set("straggler", "10").unwrap();
+    cfg.validate().unwrap();
+    let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.1 }), AggKind::Fresh);
+    let mut eng = RoundEngine::from_cfg(unit_star(2), server, &cfg).unwrap();
+    let mut resolved = 0u64;
+    let mut cum_late = 0usize;
+    let mut cum_resolved = 0usize;
+    let mut last_late = 0usize;
+    for _ in 0..20 {
+        let rep = eng.run_round().unwrap();
+        // per round: at most one Fresh message per worker enters the mean
+        assert!(rep.on_time + rep.applied_stale <= cfg.workers);
+        resolved += (rep.on_time + rep.applied_stale + rep.dropped_stale) as u64;
+        cum_late += rep.late;
+        cum_resolved += rep.applied_stale + rep.dropped_stale;
+        last_late = rep.late;
+        // bits: every transmitted message counted exactly once, at
+        // resolution — applied or dropped
+        assert_eq!(rep.total_bits, resolved * bits_per_msg);
+    }
+    // every deferred message resolves exactly once, next round
+    assert_eq!(cum_resolved, cum_late - last_late);
+    assert!(cum_late > 0, "scenario never deferred a message");
+    // Fresh: the final pending straggler is discarded at shutdown (but
+    // its transmission still counts)
+    let (absorbed, discarded) = eng.drain_pending();
+    assert_eq!((absorbed, discarded), (0, last_late));
+    eng.shutdown().unwrap();
+    assert_eq!(eng.server().total_bits, (resolved + last_late as u64) * bits_per_msg);
+    // drain is idempotent
+    assert_eq!(eng.drain_pending(), (0, 0));
+}
+
+#[test]
+fn staleness_drop_discards_all_stale_fresh_messages() {
+    let d = 2;
+    let mut cfg = TrainConfig::default();
+    cfg.workers = 2;
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", "1").unwrap();
+    cfg.set("link", "hetero").unwrap();
+    cfg.set("straggler", "10").unwrap();
+    cfg.set("staleness", "drop").unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.staleness, Staleness::Drop);
+    let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.1 }), AggKind::Fresh);
+    let mut eng = RoundEngine::from_cfg(unit_star(2), server, &cfg).unwrap();
+    let mut resolved = 0u64;
+    let mut last_late = 0u64;
+    for _ in 0..10 {
+        let rep = eng.run_round().unwrap();
+        assert_eq!(rep.applied_stale, 0, "staleness=drop must never apply stale msgs");
+        resolved += (rep.on_time + rep.dropped_stale) as u64;
+        last_late = rep.late as u64;
+    }
+    eng.shutdown().unwrap();
+    // every transmitted message counted once: on-time applied, stale
+    // dropped, plus the final straggler discarded at shutdown
+    assert_eq!(eng.server().total_bits, (resolved + last_late) * 64);
+}
+
+#[test]
+fn mid_run_drain_acks_what_it_resolved() {
+    // drain_pending between rounds must ack the resolved messages, so a
+    // continuing run keeps encoder in-flight queues aligned with the
+    // server (a drain that discarded silently would desync EF state)
+    let d = 2;
+    let mut cfg = TrainConfig::default();
+    cfg.workers = 2;
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", "1").unwrap();
+    cfg.set("link", "hetero").unwrap();
+    cfg.set("straggler", "10").unwrap();
+    cfg.validate().unwrap();
+    let seen: Vec<Rc<RefCell<Vec<AckEntry>>>> =
+        (0..2).map(|_| Rc::new(RefCell::new(Vec::new()))).collect();
+    let computes: Vec<Compute<'_>> = (0..2)
+        .map(|w| {
+            let log = seen[w].clone();
+            Box::new(move |round: &WorkerRound<'_>| -> anyhow::Result<Option<(f32, Compressed)>> {
+                log.borrow_mut().extend_from_slice(round.acks);
+                if !round.participant {
+                    return Ok(None);
+                }
+                Ok(Some((0.0, Compressed::dense(vec![1.0; round.params.len()]))))
+            }) as Compute<'_>
+        })
+        .collect();
+    let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.1 }), AggKind::Fresh);
+    let mut eng = RoundEngine::from_cfg(engine::local_star(computes), server, &cfg).unwrap();
+    let r0 = eng.run_round().unwrap();
+    assert_eq!((r0.on_time, r0.late), (1, 1));
+    // mid-run drain: the deferred Fresh gradient is discarded + acked
+    assert_eq!(eng.drain_pending(), (0, 1));
+    let r1 = eng.run_round().unwrap();
+    assert_eq!(r1.applied_stale + r1.dropped_stale, 0, "drain already resolved it");
+    eng.shutdown().unwrap();
+    // after round 1's broadcast: the on-time worker saw Applied@1, the
+    // late worker saw its Deferred followed by the drain's Dropped —
+    // terminal acks in FIFO order, exactly one per message
+    let mut applied = 0;
+    let mut deferred_then_dropped = 0;
+    for log in &seen {
+        let log = log.borrow();
+        let step0: Vec<&AckEntry> = log.iter().filter(|a| a.sent_step == 0).collect();
+        match step0.len() {
+            1 => {
+                assert_eq!(step0[0].status, AckStatus::Applied);
+                assert_eq!(step0[0].weight, 1.0);
+                applied += 1;
+            }
+            2 => {
+                assert_eq!(step0[0].status, AckStatus::Deferred);
+                assert_eq!(step0[1].status, AckStatus::Dropped);
+                deferred_then_dropped += 1;
+            }
+            n => panic!("unexpected ack count {n} for step 0"),
+        }
+    }
+    assert_eq!((applied, deferred_then_dropped), (1, 1));
+}
+
+#[test]
+fn shutdown_drains_deferred_accumulate_increments() {
+    let d = 2;
+    let mut cfg = TrainConfig::default();
+    cfg.workers = 2;
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", "1").unwrap();
+    cfg.set("link", "hetero").unwrap();
+    cfg.set("straggler", "10").unwrap();
+    cfg.validate().unwrap();
+    let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.0 }), AggKind::Accumulate);
+    let mut eng = RoundEngine::from_cfg(unit_star(2), server, &cfg).unwrap();
+    let rep = eng.run_round().unwrap();
+    assert_eq!((rep.on_time, rep.late), (1, 1));
+    assert_eq!(rep.total_bits, 64);
+    // the deferred increment is absorbed — at full weight — on shutdown,
+    // and its bits are counted exactly once
+    eng.shutdown().unwrap();
+    assert_eq!(eng.server().total_bits, 128);
+    // both unit increments landed: G = (1 + 1) / M = 1, each worker
+    // shadow holds exactly its own increment
+    assert_eq!(eng.server().shadow(), &[1.0; 2]);
+    for w in 0..2 {
+        assert_eq!(eng.server().worker_shadow(w).unwrap(), &[1.0; 2]);
+    }
+    // nothing left to leak into a reused engine
+    assert_eq!(eng.drain_pending(), (0, 0));
+}

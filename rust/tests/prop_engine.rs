@@ -194,13 +194,20 @@ fn engine_over_threaded_channel_matches_local_star_bitwise() {
             let cfg = cfg.clone();
             let q = &q;
             s.spawn(move || {
-                let mut enc = build_encoder(&cfg, D);
+                let enc = build_encoder(&cfg, D);
                 let id = p.id as u64;
-                engine::run_worker(&mut p, move |step, params| {
-                    let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, id, step);
-                    let g = q.grad(id as usize, params, &mut rng);
-                    Ok((0.0, enc.encode(&g, &mut rng)))
-                })
+                engine::run_worker(
+                    &mut p,
+                    engine::compute_with_acks(
+                        enc,
+                        |enc, ack| enc.on_ack(ack),
+                        move |enc, step, params| {
+                            let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, id, step);
+                            let g = q.grad(id as usize, params, &mut rng);
+                            Ok((0.0, enc.encode(&g, &mut rng)))
+                        },
+                    ),
+                )
                 .unwrap();
             });
         }
