@@ -33,7 +33,13 @@ fn main() -> anyhow::Result<()> {
         let adaptive = adaptive_variance(&deltas, &grad);
         let static_probs = ml.default_probs(grad.len());
         let stat = schedule_variance(&deltas, &static_probs, &grad);
-        println!("{:<10} {:>14.4} {:>14.4} {:>8.2}x", format!("{}%", pm as f64 / 10.0), adaptive, stat, stat / adaptive);
+        println!(
+            "{:<10} {:>14.4} {:>14.4} {:>8.2}x",
+            format!("{}%", pm as f64 / 10.0),
+            adaptive,
+            stat,
+            stat / adaptive
+        );
         // sanity: adaptive == optimal among normalized-delta schedules
         let check = schedule_variance(&deltas, &normalize_probs(deltas.clone()), &grad);
         assert!((check - adaptive).abs() < 1e-3 * adaptive.abs().max(1.0));

@@ -20,7 +20,9 @@ fn main() -> anyhow::Result<()> {
         .meta
         .models
         .get(&model)
-        .unwrap_or_else(|| panic!("model {model:?} not in artifacts (use --full aot for lm-med/lm-bert)"));
+        .unwrap_or_else(|| {
+            panic!("model {model:?} not in artifacts (use --full aot for lm-med/lm-bert)")
+        });
     println!(
         "e2e: {} ({} params, batch {} x seq {}), M=4, adaptive MLMC-Top-k @1%",
         model, meta.param_count, meta.batch, meta.seq_len

@@ -16,7 +16,8 @@ fn main() -> anyhow::Result<()> {
     // show what the sharding looks like
     println!("Dirichlet(0.1) class shares across 8 workers (2 classes):");
     for (w, row) in dirichlet_class_probs(0.1, 2, 8, 42).iter().enumerate() {
-        println!("  worker {w}: {:?}", row.iter().map(|p| (p * 100.0).round() / 100.0).collect::<Vec<_>>());
+        let rounded: Vec<f32> = row.iter().map(|p| (p * 100.0).round() / 100.0).collect();
+        println!("  worker {w}: {rounded:?}");
     }
 
     let mut base = TrainConfig::default();
@@ -35,7 +36,8 @@ fn main() -> anyhow::Result<()> {
             cfg.lr = lr;
             cfg.dirichlet_alpha = alpha;
             let r = train::run(&rt, &cfg)?;
-            let acc = r.curve.points.iter().rev().find(|p| !p.eval_acc.is_nan()).map(|p| p.eval_acc);
+            let acc =
+                r.curve.points.iter().rev().find(|p| !p.eval_acc.is_nan()).map(|p| p.eval_acc);
             println!(
                 "{:<18} {:>8} {:>10.4} {:>12}",
                 method,

@@ -1,29 +1,217 @@
-//! Real distributed mode: leader + M workers over loopback TCP, each
-//! worker with its **own PJRT runtime** (the `xla` wrappers are !Send, so
-//! every worker thread constructs its runtime locally — process-equivalent
-//! isolation in one binary; `mlmc-dist leader/worker` run the same
-//! protocol across actual processes/hosts). Both sides delegate the
-//! round protocol to the unified `engine`: the leader drives a
-//! `RoundEngine` over the TCP transport, workers run `engine::run_worker`.
+//! Real distributed mode: leader + M workers over TCP, each side
+//! driving the unified `engine` over the event-driven TCP transport —
+//! quorum rounds close on the k-th *real* arrival, lost replies are
+//! resent, and dead/slow workers are excluded and re-probed.
 //!
-//!     make artifacts && cargo run --release --example tcp_cluster
+//! Two ways to run it:
+//!
+//! 1. **In-process demo** (no args): spawns the workers as threads,
+//!    each with its **own PJRT runtime** (the `xla` wrappers are !Send —
+//!    process-equivalent isolation in one binary). Needs `make
+//!    artifacts`.
+//!
+//!        cargo run --release --example tcp_cluster
+//!
+//! 2. **Multi-process synthetic mode** (the CI `cluster-smoke` path):
+//!    real leader and worker *processes* on a shared address, training
+//!    a synthetic quadratic — pure rust, no XLA, no artifacts — with
+//!    fault injection flags to delay or kill workers mid-run:
+//!
+//!        tcp_cluster leader --addr 127.0.0.1:7477 --workers 4 --steps 12 \
+//!            --quorum 3 --timeout-ms 1000 --resend-max 1 --exclude-after 2 \
+//!            --readmit-every 4
+//!        tcp_cluster worker --addr 127.0.0.1:7477 --id 0
+//!        tcp_cluster worker --addr 127.0.0.1:7477 --id 2 --delay-ms 3000
+//!        tcp_cluster worker --addr 127.0.0.1:7477 --id 3 --die-after 4
 
 use std::net::TcpListener;
+use std::time::Duration;
 
 use mlmc_dist::config::TrainConfig;
-use mlmc_dist::coordinator::{agg_kind, Server};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
 use mlmc_dist::data::Task;
+use mlmc_dist::ef::GradientEncoder;
 use mlmc_dist::engine::{self, RoundEngine};
 use mlmc_dist::runtime::{ArgValue, Runtime};
 use mlmc_dist::tensor::Rng;
 use mlmc_dist::train::build_codec;
+use mlmc_dist::train::synthetic::Quadratic;
 use mlmc_dist::transport::tcp::{read_frame, TcpLeader, TcpWorker};
 use mlmc_dist::util;
 
 const M: usize = 4;
 const STEPS: usize = 60;
 
-fn worker(addr: String, id: u32) -> anyhow::Result<()> {
+/// Synthetic problem shared by every process: pure function of the
+/// seed, so leader and workers agree without any coordination.
+const SYNTH_D: usize = 64;
+const SYNTH_SEED: u64 = 7;
+
+fn synth_problem(workers: usize) -> Quadratic {
+    Quadratic::new(SYNTH_D, workers, 0.01, 1.0, SYNTH_SEED)
+}
+
+fn synth_cfg(workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.set("method", "mlmc-topk").unwrap();
+    cfg.set("frac_pm", "100").unwrap();
+    cfg.workers = workers;
+    cfg.lr = 0.1;
+    cfg
+}
+
+fn arg_val(args: &[String], key: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == key)?;
+    let v = args.get(i + 1).unwrap_or_else(|| panic!("flag {key} needs a value"));
+    assert!(!v.starts_with("--"), "flag {key} needs a value, got another flag {v:?}");
+    Some(v.clone())
+}
+
+/// Loud parsing: CI leans on these flags, so a typo must fail the job,
+/// never silently fall back to the default.
+fn arg_num<T: std::str::FromStr>(args: &[String], key: &str, default: T) -> T {
+    match arg_val(args, key) {
+        None => default,
+        Some(v) => v.parse().unwrap_or_else(|_| panic!("bad value {v:?} for {key}")),
+    }
+}
+
+/// Reject unknown flags and `--key=value` spellings (flags here are
+/// space-separated `--key value` pairs).
+fn check_flags(args: &[String], known: &[&str]) {
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        assert!(
+            a.starts_with("--") && !a.contains('='),
+            "expected `--key value`, got {a:?}"
+        );
+        assert!(known.contains(&a.as_str()), "unknown flag {a:?} (known: {known:?})");
+        i += 2;
+    }
+}
+
+/// Multi-process synthetic leader (the CI cluster-smoke entrypoint).
+fn synth_leader(args: &[String]) -> anyhow::Result<()> {
+    check_flags(
+        args,
+        &[
+            "--addr", "--workers", "--steps", "--quorum", "--timeout-ms", "--resend-max",
+            "--exclude-after", "--readmit-every",
+        ],
+    );
+    let addr = arg_val(args, "--addr").unwrap_or_else(|| "127.0.0.1:7477".into());
+    let workers: usize = arg_num(args, "--workers", M);
+    let steps: usize = arg_num(args, "--steps", 12);
+    let mut cfg = synth_cfg(workers);
+    cfg.steps = steps;
+    let quorum: usize = arg_num(args, "--quorum", 0);
+    if quorum > 0 {
+        cfg.set("participation", "quorum").unwrap();
+        cfg.quorum = quorum;
+    }
+    cfg.round_timeout = arg_num(args, "--timeout-ms", 1000.0f64) / 1e3;
+    cfg.resend_max = arg_num(args, "--resend-max", 1);
+    cfg.exclude_after = arg_num(args, "--exclude-after", 2);
+    cfg.readmit_every = arg_num(args, "--readmit-every", 4);
+    cfg.validate().map_err(anyhow::Error::msg)?;
+
+    println!("leader: waiting for {workers} workers on {addr}");
+    let (leader, local) = TcpLeader::bind_and_accept(&addr, workers)?;
+    println!("leader: cluster up at {local}");
+    let problem = synth_problem(workers);
+    let server = Server::new(
+        vec![0.0; SYNTH_D],
+        Box::new(mlmc_dist::optim::Sgd { lr: cfg.lr }),
+        agg_kind(&cfg.method),
+    );
+    let mut eng = RoundEngine::from_cfg(leader, server, &cfg)?;
+    let mut rounds = 0usize;
+    for step in 0..steps {
+        let rep = eng.run_round()?;
+        rounds += 1;
+        println!(
+            "step {:>3}  on_time {}  late {}  resent {}  gave_up {}  excluded {}  dead {}  \
+             wall {:.3}s",
+            step + 1,
+            rep.on_time,
+            rep.late,
+            rep.resent,
+            rep.gave_up,
+            rep.excluded,
+            rep.dead,
+            rep.sim_now_s
+        );
+    }
+    let subopt = problem.suboptimality(eng.params());
+    let excluded = eng.excluded_workers();
+    let server = eng.finish()?;
+    println!(
+        "clean-exit rounds={rounds} excluded={} uplink={} suboptimality={subopt:.4}",
+        excluded.len(),
+        util::fmt_bits(server.total_bits)
+    );
+    Ok(())
+}
+
+/// Multi-process synthetic worker with fault-injection knobs:
+/// `--delay-ms D` sleeps D ms before every reply (a straggler);
+/// `--die-after S` exits the process before computing round S (a crash
+/// mid-run — the leader sees a dead socket).
+fn synth_worker(args: &[String]) -> anyhow::Result<()> {
+    check_flags(args, &["--addr", "--id", "--workers", "--delay-ms", "--die-after"]);
+    let addr = arg_val(args, "--addr").unwrap_or_else(|| "127.0.0.1:7477".into());
+    let id: u32 = arg_num(args, "--id", 0);
+    let workers: usize = arg_num(args, "--workers", M);
+    let delay_ms: u64 = arg_num(args, "--delay-ms", 0);
+    let die_after: u64 = arg_num(args, "--die-after", u64::MAX);
+    let cfg = synth_cfg(workers);
+    let problem = synth_problem(workers);
+    let encoder = build_encoder(&cfg, SYNTH_D);
+
+    // the leader may not be listening yet: retry for ~10 s
+    let mut port = None;
+    for _ in 0..100 {
+        match TcpWorker::connect(&addr, id) {
+            Ok(p) => {
+                port = Some(p);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let Some(mut port) = port else { anyhow::bail!("worker {id}: leader at {addr} never came up") };
+    println!("worker {id}: connected to {addr}");
+    // compute_with_acks keeps the ack preamble in front of everything —
+    // the injected faults below must never skip EF state maintenance
+    let rounds = engine::run_worker(
+        &mut port,
+        engine::compute_with_acks(
+            encoder,
+            |enc, ack| enc.on_ack(ack),
+            move |enc, step, params| {
+                if step >= die_after {
+                    println!("worker {id}: dying before round {step}");
+                    std::process::exit(0);
+                }
+                if delay_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(delay_ms));
+                }
+                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, id as u64, step);
+                let g = problem.grad(id as usize, params, &mut rng);
+                Ok((0.0, enc.encode(&g, &mut rng)))
+            },
+        ),
+    )?;
+    println!("worker {id}: shutdown after {rounds} rounds");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// In-process XLA demo (the original example): threads, own runtimes.
+// ---------------------------------------------------------------------
+
+fn xla_worker(addr: String, id: u32) -> anyhow::Result<()> {
     // each worker owns a full runtime, exactly like a separate process
     let rt = Runtime::load_default()?;
     let model = rt.meta.models["tx-tiny"].clone();
@@ -51,7 +239,7 @@ fn worker(addr: String, id: u32) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn xla_demo() -> anyhow::Result<()> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     println!("cluster: leader on {addr}, spawning {M} workers");
@@ -59,7 +247,7 @@ fn main() -> anyhow::Result<()> {
     let workers: Vec<_> = (0..M as u32)
         .map(|id| {
             let a = addr.clone();
-            std::thread::spawn(move || worker(a, id).unwrap())
+            std::thread::spawn(move || xla_worker(a, id).unwrap())
         })
         .collect();
 
@@ -71,7 +259,7 @@ fn main() -> anyhow::Result<()> {
         let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
         streams[id] = Some(s);
     }
-    let leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect());
+    let leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect())?;
 
     // the leader needs only metadata (for params/init), not XLA execution
     let rt = Runtime::load_default()?;
@@ -92,7 +280,7 @@ fn main() -> anyhow::Result<()> {
         let rep = eng.run_round()?;
         if (step + 1) % 15 == 0 {
             println!(
-                "step {:>3}  mean loss {:.4}  uplink {}  sim_t {:.4}s",
+                "step {:>3}  mean loss {:.4}  uplink {}  wall {:.4}s",
                 step + 1,
                 rep.mean_loss,
                 util::fmt_bits(rep.total_bits),
@@ -106,9 +294,19 @@ fn main() -> anyhow::Result<()> {
         w.join().unwrap();
     }
     println!(
-        "cluster done: {STEPS} rounds in {:.1}s wall, {sim:.4}s simulated, total uplink {}",
+        "cluster done: {STEPS} rounds in {:.1}s wall, {sim:.4}s round time, total uplink {}",
         t0.elapsed().as_secs_f64(),
         util::fmt_bits(server.total_bits)
     );
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("leader") => synth_leader(&args[1..]),
+        Some("worker") => synth_worker(&args[1..]),
+        None => xla_demo(),
+        Some(other) => anyhow::bail!("unknown mode {other:?} (leader | worker | no args)"),
+    }
 }

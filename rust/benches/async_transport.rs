@@ -1,0 +1,187 @@
+//! Event-driven vs blocking TCP round-close latency (ISSUE 4's
+//! tentpole, measured): a real loopback cluster — leader + M worker
+//! threads over sockets — running quorum-k rounds through the
+//! `RoundEngine`, with the leader either event-driven (`TcpLeader`:
+//! poll(2) multiplexing, round closes on the k-th real arrival) or
+//! forced through the legacy blocking gather (`Blocking<TcpLeader>`:
+//! waits for every reply). With an injected straggler the blocking
+//! leader pays the straggler's delay every round; the event-driven
+//! leader closes on the quorum and lets the stale replies trickle in.
+//!
+//! Emits `results/bench_async_transport.csv` (benchlib) plus
+//! `results/BENCH_async_transport.json`, the machine-readable record CI
+//! uploads so the round-close-latency trajectory is tracked per commit.
+//!
+//! Smoke mode (CI): `MLMC_BENCH_MS=60 ASYNC_BENCH_D=50000 cargo bench
+//! -p mlmc-dist --bench async_transport`.
+
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use mlmc_dist::benchlib::{black_box, Bench, Stats};
+use mlmc_dist::config::{Method, TrainConfig};
+use mlmc_dist::coordinator::{build_encoder, Server};
+use mlmc_dist::ef::{AggKind, GradientEncoder};
+use mlmc_dist::engine::{self, RoundEngine};
+use mlmc_dist::optim::Sgd;
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::transport::tcp::{read_frame, TcpLeader, TcpWorker};
+use mlmc_dist::transport::{Blocking, Transport};
+
+const M: usize = 4;
+/// injected per-round delay of the straggler worker (id M-1)
+const STRAGGLE_MS: u64 = 20;
+
+fn bench_cfg(m: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.method = Method::TopK;
+    cfg.workers = m;
+    cfg.frac_pm = 10;
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", &(m - 1).to_string()).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Spin up a fresh loopback cluster: M worker threads (the last one
+/// sleeping `straggle_ms` per computed round) and the accepted leader.
+fn spin_cluster(m: usize, d: usize, straggle_ms: u64) -> (TcpLeader, Vec<JoinHandle<u64>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handles: Vec<JoinHandle<u64>> = (0..m as u32)
+        .map(|id| {
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                let cfg = bench_cfg(m);
+                let enc = build_encoder(&cfg, d);
+                let mut grng = Rng::new(id as u64 + 1);
+                let mut grad = vec![0.0f32; d];
+                grng.fill_normal(&mut grad, 1.0);
+                let straggler = straggle_ms > 0 && id as usize == m - 1;
+                let mut port = TcpWorker::connect(&a, id).unwrap();
+                engine::run_worker(
+                    &mut port,
+                    engine::compute_with_acks(
+                        enc,
+                        |enc, ack| enc.on_ack(ack),
+                        move |enc, step, _params| {
+                            if straggler {
+                                std::thread::sleep(Duration::from_millis(straggle_ms));
+                            }
+                            let mut rng = Rng::for_stream(0x5EED, id as u64, step);
+                            Ok((0.0, enc.encode(&grad, &mut rng)))
+                        },
+                    ),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
+    for _ in 0..m {
+        let (mut s, _) = listener.accept().unwrap();
+        let hello = read_frame(&mut s).unwrap();
+        let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
+        streams[id] = Some(s);
+    }
+    let leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect())
+        .unwrap();
+    (leader, handles)
+}
+
+/// One measured configuration: fresh cluster, warmup round, timed
+/// rounds, clean shutdown.
+fn run_case<T: Transport>(
+    b: &mut Bench,
+    name: &str,
+    transport: T,
+    d: usize,
+    handles: Vec<JoinHandle<u64>>,
+) -> Stats {
+    let cfg = bench_cfg(M);
+    let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.01 }), AggKind::Fresh);
+    let mut eng = RoundEngine::from_cfg(transport, server, &cfg).unwrap();
+    eng.run_round().unwrap(); // warmup: connections hot, codecs primed
+    let stats = b.case(name, || black_box(eng.run_round().unwrap().bits)).clone();
+    eng.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    stats
+}
+
+struct Case {
+    stats: Stats,
+    mode: &'static str,
+    straggler: bool,
+}
+
+fn main() {
+    let d: usize = std::env::var("ASYNC_BENCH_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let mut b = Bench::new("async_transport");
+    println!("d={d} M={M} quorum={} straggle_ms={STRAGGLE_MS}", M - 1);
+
+    let mut cases: Vec<Case> = Vec::new();
+    for straggler in [false, true] {
+        let ms = if straggler { STRAGGLE_MS } else { 0 };
+        let tag = if straggler { "straggler" } else { "clean" };
+        let (leader, handles) = spin_cluster(M, d, ms);
+        let name = format!("blocking {tag} q{}/{M}", M - 1);
+        let s = run_case(&mut b, &name, Blocking(leader), d, handles);
+        cases.push(Case { stats: s, mode: "blocking", straggler });
+        let (leader, handles) = spin_cluster(M, d, ms);
+        let s = run_case(&mut b, &format!("event {tag} q{}/{M}", M - 1), leader, d, handles);
+        cases.push(Case { stats: s, mode: "event", straggler });
+    }
+
+    b.write_csv();
+    write_json(d, &cases);
+}
+
+fn write_json(d: usize, cases: &[Case]) {
+    use std::fmt::Write as _;
+    let mean = |mode: &str, straggler: bool| {
+        cases
+            .iter()
+            .find(|c| c.mode == mode && c.straggler == straggler)
+            .map(|c| c.stats.mean_ns)
+            .unwrap_or(0.0)
+    };
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"suite\": \"async_transport\",");
+    let _ = writeln!(s, "  \"d\": {d},");
+    let _ = writeln!(s, "  \"workers\": {M},");
+    let _ = writeln!(s, "  \"quorum\": {},", M - 1);
+    let _ = writeln!(s, "  \"straggle_ms\": {STRAGGLE_MS},");
+    s.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let rps = if c.stats.mean_ns > 0.0 { 1e9 / c.stats.mean_ns } else { 0.0 };
+        let comma = if i + 1 < cases.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"name\": {:?}, \"mode\": {:?}, \"straggler\": {}, \"mean_ns\": {:.1}, \
+             \"rounds_per_s\": {:.3}}}{}",
+            c.stats.name, c.mode, c.straggler, c.stats.mean_ns, rps, comma
+        );
+    }
+    s.push_str("  ],\n");
+    // the headline number: how much round-close latency the
+    // event-driven leader saves when a straggler is in the quorum pool
+    let (be, ev) = (mean("blocking", true), mean("event", true));
+    let speedup = if ev > 0.0 { be / ev } else { 0.0 };
+    let _ = writeln!(s, "  \"straggler_speedup_event_vs_blocking\": {speedup:.3},");
+    let (bc, ec) = (mean("blocking", false), mean("event", false));
+    let clean = if ec > 0.0 { bc / ec } else { 0.0 };
+    let _ = writeln!(s, "  \"clean_speedup_event_vs_blocking\": {clean:.3}");
+    s.push_str("}\n");
+    let path = mlmc_dist::util::results_dir().join("BENCH_async_transport.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -348,7 +348,8 @@ mod tests {
         let mut p = Payload::Sparse { d: 3, idx: vec![0], val: vec![2.0] };
         p.scale_values(0.5);
         assert_eq!(p.decode(), vec![1.0, 0.0, 0.0]);
-        let mut q = Payload::Quantized { val: vec![1.0, 2.0], bits_per_elem: 2.0, overhead_bits: 8 };
+        let mut q =
+            Payload::Quantized { val: vec![1.0, 2.0], bits_per_elem: 2.0, overhead_bits: 8 };
         q.scale_values(3.0);
         assert_eq!(q.decode(), vec![3.0, 6.0]);
         assert_eq!(q.wire_bits(), 4 + 8);

@@ -76,7 +76,8 @@ mod tests {
         let mut rng = Rng::new(2);
         for &x in &[0.3f32, 1.0, 1.5, -2.7, 100.0, -1e-4] {
             let n = 60_000;
-            let mean: f64 = (0..n).map(|_| natural_round(x, &mut rng) as f64).sum::<f64>() / n as f64;
+            let mean: f64 =
+                (0..n).map(|_| natural_round(x, &mut rng) as f64).sum::<f64>() / n as f64;
             assert!(
                 (mean - x as f64).abs() < 0.02 * x.abs() as f64 + 1e-7,
                 "x={x} mean={mean}"

@@ -227,6 +227,21 @@ pub struct TrainConfig {
     pub link: String,
     /// mean of the seeded exponential straggler delay, seconds (0 = off)
     pub straggler: f64,
+    /// real-time (TCP) rounds: seconds to wait for replies before the
+    /// recovery ladder starts (0 = wait indefinitely; recovery then
+    /// only fires for provably-unreachable workers). Each resend
+    /// attempt gets a fresh window of this length.
+    pub round_timeout: f64,
+    /// resend requests per missing reply before the round gives up on
+    /// it (real-time recovery)
+    pub resend_max: usize,
+    /// consecutive not-on-time rounds (deferred/dropped acks) after
+    /// which a worker is excluded from future participant sets
+    /// (0 = never exclude)
+    pub exclude_after: usize,
+    /// probe an excluded worker for re-admission every this many rounds
+    /// (0 = never re-admit)
+    pub readmit_every: usize,
     /// run tag for logs/CSV
     pub tag: String,
 }
@@ -257,6 +272,10 @@ impl Default for TrainConfig {
             staleness: Staleness::Damp,
             link: "datacenter".into(),
             straggler: 0.0,
+            round_timeout: 0.0,
+            resend_max: 2,
+            exclude_after: 0,
+            readmit_every: 8,
             tag: String::new(),
         }
     }
@@ -271,8 +290,9 @@ impl TrainConfig {
         match key {
             "model" => self.model = val.to_string(),
             "method" => {
-                self.method = Method::parse(val)
-                    .ok_or_else(|| format!("unknown method {val:?} (known: {:?})", Method::all_names()))?
+                self.method = Method::parse(val).ok_or_else(|| {
+                    format!("unknown method {val:?} (known: {:?})", Method::all_names())
+                })?
             }
             "workers" => self.workers = p(val, key)?,
             "steps" => self.steps = p(val, key)?,
@@ -309,6 +329,10 @@ impl TrainConfig {
             }
             "link" => self.link = val.to_string(),
             "straggler" => self.straggler = p(val, key)?,
+            "round_timeout" => self.round_timeout = p(val, key)?,
+            "resend_max" => self.resend_max = p(val, key)?,
+            "exclude_after" => self.exclude_after = p(val, key)?,
+            "readmit_every" => self.readmit_every = p(val, key)?,
             "tag" => self.tag = val.to_string(),
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -380,6 +404,14 @@ impl TrainConfig {
         if !(self.straggler >= 0.0 && self.straggler.is_finite()) {
             return Err("straggler must be a finite number of seconds >= 0".into());
         }
+        if !(self.round_timeout >= 0.0 && self.round_timeout.is_finite()) {
+            return Err("round_timeout must be a finite number of seconds >= 0".into());
+        }
+        if self.exclude_after > 0 && self.workers == 1 {
+            return Err("exclude_after needs at least 2 workers (excluding the only worker \
+                        would leave every round empty)"
+                .into());
+        }
         // per-shard sparsification budgets floor at k = 1; a shard so
         // small that round(shard_size * frac_pm / 1000) == 0 would
         // silently inflate the keep fraction on every shard
@@ -440,6 +472,12 @@ impl TrainConfig {
         }
         if self.staleness != Staleness::Damp {
             scenario.push_str(&format!("_stale{}", self.staleness));
+        }
+        if self.round_timeout > 0.0 {
+            scenario.push_str(&format!("_to{:.0}ms", self.round_timeout * 1e3));
+        }
+        if self.exclude_after > 0 {
+            scenario.push_str(&format!("_ex{}", self.exclude_after));
         }
         let tag = if self.tag.is_empty() { String::new() } else { format!("_{}", self.tag) };
         format!(
@@ -598,6 +636,42 @@ mod tests {
         let cfg = TrainConfig::from_toml("steps = 7\nseed = 9\n").unwrap();
         assert_eq!(cfg.steps, 7);
         assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn recovery_knobs_parse_validate_and_name_runs() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.round_timeout, 0.0);
+        assert_eq!(c.resend_max, 2);
+        assert_eq!(c.exclude_after, 0);
+        assert_eq!(c.readmit_every, 8);
+        c.set("round_timeout", "1.5").unwrap();
+        c.set("resend_max", "3").unwrap();
+        c.set("exclude_after", "2").unwrap();
+        c.set("readmit_every", "4").unwrap();
+        c.validate().unwrap();
+        assert!((c.round_timeout - 1.5).abs() < 1e-12);
+        assert_eq!((c.resend_max, c.exclude_after, c.readmit_every), (3, 2, 4));
+        // recovery knobs change real-run trajectories: own CSV namespace
+        assert!(c.run_id().ends_with("_to1500ms_ex2"), "{}", c.run_id());
+        // bad values are loud
+        assert!(c.set("round_timeout", "banana").is_err());
+        c.set("round_timeout", "-1").unwrap();
+        assert!(c.validate().is_err());
+        // excluding the only worker can never make sense
+        let mut c = TrainConfig::default();
+        c.workers = 1;
+        c.set("exclude_after", "1").unwrap();
+        assert!(c.validate().is_err());
+        // and round-trip through TOML
+        let cfg = TrainConfig::from_toml(
+            "[train]\nround_timeout = 2.0\nresend_max = 1\nexclude_after = 3\n\
+             readmit_every = 5\n",
+        )
+        .unwrap();
+        assert!((cfg.round_timeout - 2.0).abs() < 1e-12);
+        assert_eq!((cfg.resend_max, cfg.exclude_after, cfg.readmit_every), (1, 3, 5));
+        cfg.validate().unwrap();
     }
 
     #[test]

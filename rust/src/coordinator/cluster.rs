@@ -28,7 +28,8 @@ fn split_addr_args(args: &[String]) -> Result<(String, u32, Vec<String>)> {
     while i < args.len() {
         match args[i].as_str() {
             "--addr" => {
-                addr = Some(args.get(i + 1).ok_or_else(|| anyhow!("--addr needs a value"))?.clone());
+                let v = args.get(i + 1).ok_or_else(|| anyhow!("--addr needs a value"))?;
+                addr = Some(v.clone());
                 i += 2;
             }
             "--id" => {
@@ -87,6 +88,16 @@ pub fn leader_main(args: &[String]) -> Result<()> {
     let mut eng = RoundEngine::from_cfg(leader, server, &cfg)?;
     for step in 0..cfg.steps {
         let rep = eng.run_round()?;
+        if rep.gave_up > 0 || rep.resent > 0 || rep.dead > 0 {
+            println!(
+                "step {:>5}  recovery: resent {}  gave_up {}  excluded {}  dead {}",
+                step + 1,
+                rep.resent,
+                rep.gave_up,
+                rep.excluded,
+                rep.dead
+            );
+        }
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
             let (el, ea) = evaluate(&rt, &model, &task, eng.params(), cfg.eval_batches)?;
             println!(
@@ -101,11 +112,13 @@ pub fn leader_main(args: &[String]) -> Result<()> {
         }
     }
     let sim = eng.sim_now_s();
+    let excluded = eng.excluded_workers();
     let server = eng.finish()?;
     println!(
-        "leader: done, total uplink {}  simulated time {:.3}s",
+        "leader: done, total uplink {}  round time {:.3}s  excluded {:?}",
         crate::util::fmt_bits(server.total_bits),
-        sim
+        sim,
+        excluded
     );
     Ok(())
 }

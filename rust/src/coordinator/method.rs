@@ -159,6 +159,12 @@ pub fn scenario_legend(cfg: &TrainConfig) -> String {
     if cfg.staleness != crate::config::Staleness::Damp {
         parts.push(format!("stale-{}", cfg.staleness));
     }
+    if cfg.round_timeout > 0.0 {
+        parts.push(format!("timeout {:.0}ms", cfg.round_timeout * 1e3));
+    }
+    if cfg.exclude_after > 0 {
+        parts.push(format!("exclude after {}", cfg.exclude_after));
+    }
     if parts.is_empty() {
         base.to_string()
     } else {
@@ -262,6 +268,15 @@ mod tests {
         cfg.set("link", "datacenter").unwrap();
         cfg.set("straggler", "0").unwrap();
         assert_eq!(scenario_legend(&cfg), "Top-k [sampled 25%]");
+    }
+
+    #[test]
+    fn scenario_legend_reflects_recovery_knobs() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("method", "topk").unwrap();
+        cfg.set("round_timeout", "2").unwrap();
+        cfg.set("exclude_after", "3").unwrap();
+        assert_eq!(scenario_legend(&cfg), "Top-k [timeout 2000ms, exclude after 3]");
     }
 
     #[test]

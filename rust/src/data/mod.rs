@@ -56,7 +56,8 @@ impl Task {
         step: u64,
         class_probs: Option<&[f32]>,
     ) -> Batch {
-        let mut rng = Rng::for_stream(self.seed() ^ 0x7281 ^ run_seed.wrapping_mul(0x9E37), worker, step);
+        let mut rng =
+            Rng::for_stream(self.seed() ^ 0x7281 ^ run_seed.wrapping_mul(0x9E37), worker, step);
         self.sample(&mut rng, class_probs)
     }
 
@@ -516,8 +517,11 @@ mod tests {
     fn dirichlet_small_alpha_is_skewed() {
         let skewed = dirichlet_class_probs(0.05, 10, 16, 2);
         let uniform = dirichlet_class_probs(100.0, 10, 16, 2);
-        let max_skew: f32 = skewed.iter().map(|r| r.iter().cloned().fold(0.0, f32::max)).sum::<f32>() / 16.0;
-        let max_uni: f32 = uniform.iter().map(|r| r.iter().cloned().fold(0.0, f32::max)).sum::<f32>() / 16.0;
+        let peak = |rows: &[Vec<f32>]| {
+            rows.iter().map(|r| r.iter().cloned().fold(0.0, f32::max)).sum::<f32>() / 16.0
+        };
+        let max_skew: f32 = peak(&skewed);
+        let max_uni: f32 = peak(&uniform);
         assert!(max_skew > 0.6, "{max_skew}");
         assert!(max_uni < 0.3, "{max_uni}");
     }

@@ -36,7 +36,13 @@ pub struct Diana {
 impl Diana {
     pub fn new(inner: Box<dyn Compressor>, d: usize, alpha: f32) -> Self {
         assert!(inner.unbiased(), "DIANA requires an unbiased quantizer");
-        Diana { inner, shift: vec![0.0; d], alpha, scratch: vec![0.0; d], in_flight: VecDeque::new() }
+        Diana {
+            inner,
+            shift: vec![0.0; d],
+            alpha,
+            scratch: vec![0.0; d],
+            in_flight: VecDeque::new(),
+        }
     }
 
     pub fn shift(&self) -> &[f32] {
@@ -94,7 +100,14 @@ pub struct DianaServer {
 impl DianaServer {
     pub fn new(params: Vec<f32>, opt: Box<dyn Optimizer>, alpha: f32) -> Self {
         let d = params.len();
-        DianaServer { params, opt, shift: vec![0.0; d], alpha, scratch: vec![0.0; d], total_bits: 0 }
+        DianaServer {
+            params,
+            opt,
+            shift: vec![0.0; d],
+            alpha,
+            scratch: vec![0.0; d],
+            total_bits: 0,
+        }
     }
 
     pub fn apply_round(&mut self, msgs: &[Compressed]) -> u64 {

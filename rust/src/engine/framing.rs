@@ -1,15 +1,24 @@
 //! Round-frame codecs: the byte layout of the leader↔worker protocol.
 //!
-//! Downstream (leader → workers), `FRAME_PARAMS`, **version 2** (the
-//! version byte was introduced together with the per-worker ack block;
-//! mixed-version clusters are rejected loudly at decode):
+//! Downstream (leader → workers), `FRAME_PARAMS`, **version 3** (v2
+//! introduced the version byte + per-worker ack block; v3 adds the
+//! excluded-worker block and the RESEND request frame of the recovery
+//! protocol — mixed-version clusters are rejected loudly at decode):
 //!
 //! ```text
-//! ver(u8 = 0xA2) | step(u32 LE) | n_participants(u32 LE) | ids(n × u32 LE)
+//! ver(u8 = 0xA3) | step(u32 LE) | n_participants(u32 LE) | ids(n × u32 LE)
 //!   | n_ack_workers(u32 LE)
 //!   | per acked worker: worker(u32 LE) | n_entries(u8)
 //!       | per entry: sent_step(u32 LE) | status(u8) | weight(f32 LE)
+//!   | n_excluded(u32 LE) | ids(n × u32 LE)
 //!   | params_to_bytes(params)
+//! ```
+//!
+//! Downstream (leader → one worker), `FRAME_RESEND` — the recovery
+//! layer's "your reply for round `step` never arrived" request:
+//!
+//! ```text
+//! ver(u8 = 0xA3) | step(u32 LE) | worker(u32 LE)
 //! ```
 //!
 //! Upstream (worker → leader), `FRAME_GRAD`:
@@ -18,7 +27,7 @@
 //! loss(f32 LE) | wire::encode(WorkerMsg { step, worker, comp })
 //! ```
 //!
-//! Both decoders validate shape *before* indexing — a truncated or
+//! All decoders validate shape *before* indexing — a truncated or
 //! forged frame from a misbehaving peer is a loud `Err`, never a panic
 //! on a slice index (the deeper `wire::decode` layer keeps its
 //! documented catchable-panic stance for the internal payload body).
@@ -27,19 +36,24 @@ use anyhow::{bail, Result};
 
 use crate::compress::Compressed;
 use crate::ef::{AckEntry, AckStatus};
-use crate::transport::{params_from_bytes, params_to_bytes, Frame, FRAME_GRAD, FRAME_PARAMS};
+use crate::transport::{
+    params_from_bytes, params_to_bytes, Frame, FRAME_GRAD, FRAME_PARAMS, FRAME_RESEND,
+};
 use crate::wire;
 
-/// Round-frame wire version byte: `0xA2` = "v2", introduced with the
-/// per-worker ack block. Decoders reject any other value so a
-/// mixed-version cluster fails loudly instead of silently misreading
-/// state. Frames from this and future versions are exactly
-/// self-identifying; an unversioned *v1* frame (first byte = the LSB of
-/// its step counter) is caught by this probe except when its step
-/// ≡ 0xA2 (mod 256) — a high value chosen so small-step v1 frames can
-/// never alias — and an aliased frame still has to pass every
-/// structural length/order check below before anything is believed.
-pub const ROUND_FRAME_VERSION: u8 = 0xA2;
+/// Round-frame wire version byte: `0xA3` = "v3", introduced with the
+/// dropped-message recovery protocol (excluded-worker block + RESEND
+/// frames). Decoders reject any other value — in particular the v2 byte
+/// `0xA2` — so a mixed-version cluster fails loudly instead of silently
+/// misreading state: a v2 worker would misparse the excluded block as
+/// params and could never answer a RESEND. Frames from this and future
+/// versions are exactly self-identifying; an unversioned *v1* frame
+/// (first byte = the LSB of its step counter) is caught by this probe
+/// except when its step ≡ 0xA3 (mod 256) — a high value chosen so
+/// small-step v1 frames can never alias — and an aliased frame still
+/// has to pass every structural length/order check below before
+/// anything is believed.
+pub const ROUND_FRAME_VERSION: u8 = 0xA3;
 
 /// Decoded leader→worker round announcement.
 #[derive(Clone, Debug)]
@@ -50,12 +64,20 @@ pub struct RoundDown {
     /// per-worker acknowledgements `(worker, entries)` for messages the
     /// server resolved (or deferred) since the previous broadcast
     pub acks: Vec<(u32, Vec<AckEntry>)>,
+    /// sorted ids currently excluded by the recovery policy (disjoint
+    /// from `participants`: a worker probed for re-admission this round
+    /// appears in the participant set instead)
+    pub excluded: Vec<u32>,
     pub params: Vec<f32>,
 }
 
 impl RoundDown {
     pub fn is_participant(&self, id: u32) -> bool {
         self.participants.binary_search(&id).is_ok()
+    }
+
+    pub fn is_excluded(&self, id: u32) -> bool {
+        self.excluded.binary_search(&id).is_ok()
     }
 
     /// This worker's ack entries, oldest first (empty when none).
@@ -79,12 +101,21 @@ pub struct Reply {
 
 /// Encode the round announcement carrying the current model plus the
 /// per-worker acks accumulated since the last broadcast (`acks` is
-/// indexed by worker id; empty lists are not shipped).
-pub fn encode_round(step: u64, participants: &[u32], acks: &[Vec<AckEntry>], params: &[f32]) -> Frame {
+/// indexed by worker id; empty lists are not shipped) and the sorted
+/// currently-excluded worker ids (must be disjoint from
+/// `participants` — the decoder enforces it).
+pub fn encode_round(
+    step: u64,
+    participants: &[u32],
+    acks: &[Vec<AckEntry>],
+    excluded: &[u32],
+    params: &[f32],
+) -> Frame {
     let n_ack_workers = acks.iter().filter(|a| !a.is_empty()).count();
     let ack_bytes: usize = acks.iter().filter(|a| !a.is_empty()).map(|a| 5 + 9 * a.len()).sum();
     let mut payload = Vec::with_capacity(
-        1 + 8 + 4 * participants.len() + 4 + ack_bytes + 4 + 4 * params.len(),
+        1 + 8 + 4 * participants.len() + 4 + ack_bytes + 4 + 4 * excluded.len() + 4
+            + 4 * params.len(),
     );
     payload.push(ROUND_FRAME_VERSION);
     payload.extend_from_slice(&(step as u32).to_le_bytes());
@@ -113,6 +144,10 @@ pub fn encode_round(step: u64, participants: &[u32], acks: &[Vec<AckEntry>], par
             });
             payload.extend_from_slice(&a.weight.to_le_bytes());
         }
+    }
+    payload.extend_from_slice(&(excluded.len() as u32).to_le_bytes());
+    for id in excluded {
+        payload.extend_from_slice(&id.to_le_bytes());
     }
     payload.extend_from_slice(&params_to_bytes(params));
     Frame { kind: FRAME_PARAMS, payload }
@@ -196,8 +231,60 @@ pub fn decode_round(frame: &Frame) -> Result<RoundDown> {
         }
         acks.push((worker, entries));
     }
+    // --- excluded block (v3) -----------------------------------------
+    need(b, off + 4, "excluded header")?;
+    let n_excl = u32::from_le_bytes(b[off..off + 4].try_into().unwrap()) as usize;
+    off += 4;
+    if ((b.len() - off) as u64) < 4 * n_excl as u64 {
+        bail!("round frame declares {n_excl} excluded ids but only has {} bytes", b.len() - off);
+    }
+    let excluded: Vec<u32> = b[off..off + 4 * n_excl]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    off += 4 * n_excl;
+    if !excluded.windows(2).all(|w| w[0] < w[1]) {
+        bail!("excluded ids duplicated or out of order: {excluded:?}");
+    }
+    // a worker probed for re-admission is a participant, not excluded;
+    // a frame claiming both would make the worker's state ambiguous
+    if let Some(id) = excluded.iter().find(|&&id| participants.binary_search(&id).is_ok()) {
+        bail!("worker {id} is both participant and excluded");
+    }
     let params = params_from_bytes(&b[off..])?;
-    Ok(RoundDown { step, participants, acks, params })
+    Ok(RoundDown { step, participants, acks, excluded, params })
+}
+
+/// Encode a resend request: "worker, your reply for round `step` never
+/// arrived — send it again".
+pub fn encode_resend(step: u64, worker: u32) -> Frame {
+    let mut payload = Vec::with_capacity(9);
+    payload.push(ROUND_FRAME_VERSION);
+    payload.extend_from_slice(&(step as u32).to_le_bytes());
+    payload.extend_from_slice(&worker.to_le_bytes());
+    Frame { kind: FRAME_RESEND, payload }
+}
+
+/// Decode a resend request, validating kind, version and shape.
+/// Returns `(step, worker)`; the caller checks the worker id against
+/// its own (a misrouted resend is a protocol violation).
+pub fn decode_resend(frame: &Frame) -> Result<(u64, u32)> {
+    if frame.kind != FRAME_RESEND {
+        bail!("expected resend frame, got kind {}", frame.kind);
+    }
+    if frame.payload.len() != 9 {
+        bail!("resend frame has {} bytes, want 9", frame.payload.len());
+    }
+    let ver = frame.payload[0];
+    if ver != ROUND_FRAME_VERSION {
+        bail!(
+            "resend frame version {ver}, this build speaks v{ROUND_FRAME_VERSION} — \
+             mixed-version cluster? upgrade every node together"
+        );
+    }
+    let step = u32::from_le_bytes(frame.payload[1..5].try_into().unwrap()) as u64;
+    let worker = u32::from_le_bytes(frame.payload[5..9].try_into().unwrap());
+    Ok((step, worker))
 }
 
 /// Encode a worker reply: loss plus the wire-encoded compressed gradient.
@@ -217,11 +304,23 @@ const MIN_REPLY_BYTES: usize = 4 + 18;
 /// in the message is a protocol violation, as is a reply for the wrong
 /// step or a frame of the wrong kind — all loud errors.
 pub fn decode_reply(frame: &Frame, expect_step: u64, expect_worker: u32) -> Result<Reply> {
-    if frame.kind != FRAME_GRAD {
+    let r = decode_reply_from(frame, expect_worker)?;
+    if r.step != expect_step {
         bail!(
-            "worker {expect_worker}: expected grad frame at step {expect_step}, got kind {}",
-            frame.kind
+            "worker {expect_worker}: reply for step {} arrived at step {expect_step}",
+            r.step
         );
+    }
+    Ok(r)
+}
+
+/// Like [`decode_reply`] but accepting any step: the event-driven
+/// engine routes each arriving frame by the step embedded in it (a
+/// stale frame from a slow worker is normal there, not a violation);
+/// the worker-id check stays strict.
+pub fn decode_reply_from(frame: &Frame, expect_worker: u32) -> Result<Reply> {
+    if frame.kind != FRAME_GRAD {
+        bail!("worker {expect_worker}: expected grad frame, got kind {}", frame.kind);
     }
     if frame.payload.len() < MIN_REPLY_BYTES {
         bail!(
@@ -243,12 +342,6 @@ pub fn decode_reply(frame: &Frame, expect_step: u64, expect_worker: u32) -> Resu
                 .unwrap_or("malformed payload");
             anyhow::anyhow!("worker {expect_worker}: corrupt grad payload: {what}")
         })?;
-    if msg.step as u64 != expect_step {
-        bail!(
-            "worker {expect_worker}: reply for step {} arrived at step {expect_step}",
-            msg.step
-        );
-    }
     if msg.worker != expect_worker {
         bail!(
             "reply id mismatch: transport says worker {expect_worker}, message says {}",
@@ -266,14 +359,56 @@ mod tests {
 
     #[test]
     fn round_frame_roundtrip() {
-        let f = encode_round(7, &[0, 2, 5], &[], &[1.5, -2.0]);
+        let f = encode_round(7, &[0, 2, 5], &[], &[], &[1.5, -2.0]);
         let down = decode_round(&f).unwrap();
         assert_eq!(down.step, 7);
         assert_eq!(down.participants, vec![0, 2, 5]);
         assert_eq!(down.params, vec![1.5, -2.0]);
         assert!(down.acks.is_empty());
+        assert!(down.excluded.is_empty());
         assert!(down.is_participant(2));
         assert!(!down.is_participant(1));
+    }
+
+    #[test]
+    fn round_frame_roundtrips_excluded_block() {
+        let f = encode_round(4, &[0, 2], &[], &[1, 3], &[0.5]);
+        let down = decode_round(&f).unwrap();
+        assert_eq!(down.excluded, vec![1, 3]);
+        assert!(down.is_excluded(1));
+        assert!(!down.is_excluded(0));
+        assert_eq!(down.params, vec![0.5]);
+        // excluded block layout for this frame: ver(1) + step(4) +
+        // n_parts(4) + ids(8) + n_ack(4) = 21, n_excl(4) at 21, ids at
+        // 25..33 — forge the count and the order
+        let mut forged_count = f.clone();
+        forged_count.payload[21..25].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_round(&forged_count).is_err());
+        let mut unsorted = f.clone();
+        unsorted.payload[25..29].copy_from_slice(&9u32.to_le_bytes()); // [9, 3]
+        let err = decode_round(&unsorted).unwrap_err().to_string();
+        assert!(err.contains("excluded ids"), "{err}");
+        // an id both participant and excluded is ambiguous — loud
+        let mut overlap = f.clone();
+        overlap.payload[25..29].copy_from_slice(&2u32.to_le_bytes()); // [2, 3], 2 ∈ parts
+        let err = decode_round(&overlap).unwrap_err().to_string();
+        assert!(err.contains("both participant and excluded"), "{err}");
+    }
+
+    #[test]
+    fn resend_frame_roundtrip_and_rejections() {
+        let f = encode_resend(12, 3);
+        assert_eq!(f.kind, FRAME_RESEND);
+        assert_eq!(decode_resend(&f).unwrap(), (12, 3));
+        // wrong kind
+        assert!(decode_resend(&Frame::shutdown()).is_err());
+        // wrong length
+        assert!(decode_resend(&Frame { kind: FRAME_RESEND, payload: vec![0; 5] }).is_err());
+        // v2 node's idea of a resend (or any other version) is loud
+        let mut old = f.clone();
+        old.payload[0] = 0xA2;
+        let err = decode_resend(&old).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
     }
 
     #[test]
@@ -286,7 +421,7 @@ mod tests {
             ],
             vec![AckEntry { sent_step: 4, status: AckStatus::Dropped, weight: 0.0 }],
         ];
-        let f = encode_round(5, &[0, 1, 2], &acks, &[1.0]);
+        let f = encode_round(5, &[0, 1, 2], &acks, &[], &[1.0]);
         let down = decode_round(&f).unwrap();
         assert_eq!(down.acks.len(), 2);
         assert!(down.acks_for(0).is_empty());
@@ -297,9 +432,10 @@ mod tests {
 
     #[test]
     fn round_frame_rejects_other_versions_loudly() {
-        let f = encode_round(1, &[0], &[], &[1.0]);
-        // a v1 node's frame (or any other version) must be a loud error
-        for ver in [0u8, 1, 3, 255] {
+        let f = encode_round(1, &[0], &[], &[], &[1.0]);
+        // a v1 or v2 node's frame (or any other version) must be a loud
+        // error — 0xA2 is the retired v2 byte
+        for ver in [0u8, 1, 3, 0xA2, 255] {
             let mut forged = f.clone();
             forged.payload[0] = ver;
             let err = decode_round(&forged).unwrap_err().to_string();
@@ -316,20 +452,20 @@ mod tests {
         // truncated header (valid version byte, bogus rest)
         assert!(decode_round(&Frame::params(vec![ROUND_FRAME_VERSION, 2, 3])).is_err());
         // forged participant count (offset 5 = ver + step)
-        let mut f = encode_round(0, &[0], &[], &[1.0]);
+        let mut f = encode_round(0, &[0], &[], &[], &[1.0]);
         f.payload[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_round(&f).is_err());
         // truncated params tail
-        let mut f = encode_round(0, &[0], &[], &[1.0, 2.0]);
+        let mut f = encode_round(0, &[0], &[], &[], &[1.0, 2.0]);
         f.payload.truncate(f.payload.len() - 2);
         assert!(decode_round(&f).is_err());
         // unsorted or duplicate participant ids (is_participant
         // binary-searches, so order is load-bearing)
-        let mut f = encode_round(0, &[1, 3], &[], &[1.0]);
+        let mut f = encode_round(0, &[1, 3], &[], &[], &[1.0]);
         f.payload[9..13].copy_from_slice(&7u32.to_le_bytes()); // [7, 3]
         let err = decode_round(&f).unwrap_err().to_string();
         assert!(err.contains("participant ids"), "{err}");
-        let mut f = encode_round(0, &[1, 3], &[], &[1.0]);
+        let mut f = encode_round(0, &[1, 3], &[], &[], &[1.0]);
         f.payload[13..17].copy_from_slice(&1u32.to_le_bytes()); // [1, 1]
         assert!(decode_round(&f).is_err());
     }
@@ -338,7 +474,7 @@ mod tests {
     fn round_frame_rejects_forged_ack_blocks() {
         let acks =
             vec![vec![AckEntry { sent_step: 1, status: AckStatus::Applied, weight: 1.0 }]];
-        let f = encode_round(2, &[0], &acks, &[1.0]);
+        let f = encode_round(2, &[0], &acks, &[], &[1.0]);
         // ack block layout: ver(1) + step(4) + n_parts(4) + ids(4) = 13,
         // then n_ack_workers(4) at 13, worker(4) at 17, count(1) at 21,
         // then entries: sent_step(4) at 22, status(1) at 26, weight(4)
@@ -362,7 +498,7 @@ mod tests {
         // two blocks for workers 1 and 2, one entry each
         let entry = AckEntry { sent_step: 0, status: AckStatus::Applied, weight: 1.0 };
         let acks = vec![vec![], vec![entry], vec![entry]];
-        let f = encode_round(2, &[0], &acks, &[1.0]);
+        let f = encode_round(2, &[0], &acks, &[], &[1.0]);
         assert!(decode_round(&f).is_ok());
         // block 1 spans worker@17..21 count@21 entry@22..31; block 2's
         // worker id sits at 31..35 — forge it to duplicate worker 1

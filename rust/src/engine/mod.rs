@@ -11,35 +11,68 @@
 //!
 //! * **Participation policies** ([`crate::config::Participation`]):
 //!   `Full` (bit-identical to the seed lock-step loop), `Quorum { k }`
-//!   (proceed once k messages have *simulated-arrived*; late messages
-//!   are applied next round — `Fresh` gradients with staleness damping,
+//!   (proceed once k messages have arrived; late messages are applied
+//!   next round — `Fresh` gradients with staleness damping,
 //!   `Accumulate` increments always at full weight), and `Sampled`
 //!   (a deterministic `(seed, step)` draw of clients per round).
-//! * **Virtual clock** ([`crate::netsim::VirtualClock`]): per-worker
-//!   heterogeneous links plus seeded straggler delays decide simulated
-//!   message arrival order and per-round simulated wall-clock time, so
-//!   every run reports time alongside the bit-exact uplink accounting.
 //! * **Per-worker acks** ([`crate::ef::AckEntry`]): every message a
 //!   worker sends is acknowledged in a later broadcast — applied (at
 //!   what weight), deferred, or dropped — so stateful error-feedback
 //!   encoders keep their local state consistent with what the server
 //!   actually absorbed, under every policy (the `AggKind` contract in
-//!   [`crate::ef`]). The engine tracks per-worker application state,
-//!   dedupes `Fresh` messages per worker per round, applies EF21-family
-//!   `Accumulate` increments exactly once at full weight, and drains
-//!   still-deferred increments into the server shadows at shutdown.
+//!   [`crate::ef`]).
 //!
-//! Physically every round is still one broadcast + one blocking gather
-//! of the participants' replies — lateness is decided by the *virtual*
-//! clock, which keeps every policy fully deterministic and replayable
-//! on any transport (in-process handlers, threaded channels, TCP).
+//! # Two timing modes, one protocol
+//!
+//! The engine picks its mode once, from
+//! [`Transport::is_real_time`](crate::transport::Transport::is_real_time):
+//!
+//! * **Virtual time** (inline handlers, mpsc channels): every round is
+//!   one broadcast + one blocking gather; lateness is decided by the
+//!   deterministic [`crate::netsim::VirtualClock`], which keeps every
+//!   policy fully replayable. This path is bit-identical to the PR 2/3
+//!   engine.
+//! * **Real time** (the TCP leader, [`crate::transport::FaultyLink`] as
+//!   its deterministic test double): a quorum-k round closes the moment
+//!   the k-th *real* frame arrives, and a recovery layer handles the
+//!   lossy world beyond that — the **deadline → resend → exclude →
+//!   re-admit** state machine:
+//!
+//!   1. **deadline** — when `round_timeout` expires before the round
+//!      can close, the leader sends a `FRAME_RESEND` request (round
+//!      frame v3, [`framing::encode_resend`]) to every participant
+//!      still owing this round's reply and waits one more window, up to
+//!      `resend_max` times.
+//!   2. **give-up** — a reply still missing after the resend budget is
+//!      acknowledged `Dropped` *without ever being received*: the
+//!      worker rolls its encoder state back (EF21 shadow, EF14 error
+//!      mass), the server never applies it, and both sides stay
+//!      bit-consistent. The same happens to any frame proven lost by
+//!      FIFO ordering (a newer frame from the same worker arrived
+//!      first) or older than [`GIVE_UP_AGE`] rounds — the bound that
+//!      keeps worker in-flight queues inside `MAX_IN_FLIGHT`.
+//!   3. **exclude** — `exclude_after` consecutive not-on-time rounds
+//!      (deferred or dropped) remove a worker from future participant
+//!      sets; a dead link (EOF, write stall) excludes immediately.
+//!   4. **re-admit** — every `readmit_every` rounds an excluded (live)
+//!      worker is probed: included in the participant set once; an
+//!      on-time reply clears its strikes and re-admits it.
+//!
+//!   Slow-but-alive workers need no resend at all: their stale replies
+//!   arrive on later gathers (FIFO per worker) and resolve exactly like
+//!   virtual-mode deferred messages — staleness policy, per-round
+//!   dedupe, full-weight `Accumulate` increments, bits charged once at
+//!   resolution.
 
 pub mod framing;
 
 pub use framing::{
-    decode_reply, decode_round, encode_reply, encode_round, Reply, RoundDown,
-    ROUND_FRAME_VERSION,
+    decode_reply, decode_reply_from, decode_resend, decode_round, encode_reply, encode_resend,
+    encode_round, Reply, RoundDown, ROUND_FRAME_VERSION,
 };
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -49,15 +82,35 @@ use crate::coordinator::{RoundMsg, Server};
 use crate::ef::{AckEntry, AckStatus, AggKind};
 use crate::netsim::VirtualClock;
 use crate::tensor::Rng;
-use crate::transport::{Frame, LocalStar, Transport, WorkerLink, FRAME_PARAMS, FRAME_SHUTDOWN};
+use crate::transport::{
+    Frame, LocalStar, Transport, WorkerLink, FRAME_PARAMS, FRAME_RESEND, FRAME_SHUTDOWN,
+};
 
 /// Stream salt for the client-sampling draw.
 const SAMPLE_SALT: u64 = 0x5E1EC7;
 
+/// Real-time mode: a reply still owed after this many rounds is given
+/// up (acked `Dropped`) even when no newer frame from its sender proves
+/// it lost. Must stay **below** the encoders' `MAX_IN_FLIGHT` (8): the
+/// terminal ack has to arrive before the worker's overflow policy
+/// optimistically forgets the message, or EF state would desync.
+pub const GIVE_UP_AGE: u64 = 6;
+
+/// Rounds a given-up entry is remembered, so the frame — should it
+/// still crawl in — is recognized and charged as dropped rather than
+/// applied. Anything later is discarded as a duplicate, uncharged.
+const GIVE_UP_MEMORY: u64 = 32;
+
+/// Hard cap on frames routed per worker per round: a peer spamming
+/// duplicates must not spin the leader forever. Per worker, so a
+/// flooding peer gets itself severed without collateral damage.
+const MAX_ROUTED_PER_WORKER: u32 = 10_000;
+
 /// Deterministic participant set for `(seed, step)`: a pure function,
 /// identical on every node (workers read the set from the round frame;
 /// tests call this directly). `Full` and `Quorum` involve everyone —
-/// quorum lateness is decided at gather time, not here.
+/// quorum lateness is decided at gather time, not here. Exclusion is
+/// engine state, applied on top by [`RoundEngine::participants_at`].
 pub fn participants(
     participation: Participation,
     sample_frac: f32,
@@ -90,6 +143,20 @@ pub struct EngineOpts {
     /// stale-`Fresh`-gradient policy (Accumulate increments are exempt)
     pub staleness: Staleness,
     pub clock: VirtualClock,
+    /// real-time mode: seconds to wait before starting recovery
+    /// (0 = wait indefinitely; recovery then only triggers for workers
+    /// proven unreachable). Each resend attempt gets a fresh window.
+    pub round_timeout: f64,
+    /// real-time mode: resend requests per missing reply before giving
+    /// up on it for the round
+    pub resend_max: usize,
+    /// consecutive not-on-time rounds (deferred/dropped acks) after
+    /// which a worker is excluded from future participant sets
+    /// (0 = never exclude)
+    pub exclude_after: usize,
+    /// probe an excluded worker for re-admission every this many rounds
+    /// (0 = never re-admit)
+    pub readmit_every: usize,
 }
 
 /// A message that missed its round's quorum deadline, keyed by its
@@ -107,32 +174,71 @@ struct PendingMsg {
 #[derive(Clone, Debug)]
 pub struct RoundReport {
     pub step: u64,
-    /// mean worker train loss over this round's replies
+    /// mean worker train loss over this round's on-time replies
+    /// (virtual mode: all of this round's replies, late included)
     pub mean_loss: f64,
     /// uplink bits newly applied this round (incl. stale arrivals)
     pub bits: u64,
     /// cumulative uplink bits across the run
     pub total_bits: u64,
     pub participants: usize,
-    /// replies that made this round's (simulated) deadline
+    /// replies that made this round's deadline
     pub on_time: usize,
-    /// replies deferred to the next round
+    /// replies deferred to a later round
     pub late: usize,
     /// previous rounds' late messages applied now (staleness-damped for
     /// `Fresh` servers, full weight for `Accumulate`)
     pub applied_stale: usize,
-    /// previous rounds' late messages dropped now (`Fresh` only:
-    /// superseded by the sender's on-time reply, or `staleness = drop`)
+    /// previous rounds' late messages dropped now (`Fresh`: superseded
+    /// by the sender's on-time reply, or `staleness = drop`; real-time
+    /// mode also counts given-up frames that arrived after the fact)
     pub dropped_stale: usize,
-    /// simulated duration of this round, seconds
+    /// resend requests sent this round (real-time recovery)
+    pub resent: usize,
+    /// replies given up this round — acked `Dropped` without arriving
+    pub gave_up: usize,
+    /// workers currently excluded by the recovery policy
+    pub excluded: usize,
+    /// workers whose link is dead
+    pub dead: usize,
+    /// duration of this round, seconds (simulated in virtual mode, wall
+    /// clock in real-time mode)
     pub sim_round_s: f64,
-    /// simulated wall-clock since the run started, seconds
+    /// clock since the run started, seconds (same timebase)
     pub sim_now_s: f64,
 }
 
+/// Per-round collection result, produced by the mode-specific phase and
+/// consumed by the shared resolution/apply phase.
+#[derive(Default)]
+struct Collected {
+    /// replies that made the deadline — applied this round at weight 1
+    on_time: Vec<Reply>,
+    /// virtual mode: replies gathered but late — deferred to `pending`
+    defer: Vec<Reply>,
+    /// real-time mode: stale arrivals resolving this round
+    resolve: Vec<PendingMsg>,
+    mean_loss: f64,
+    round_s: f64,
+    /// real-time mode: participants deferred without a frame in hand
+    late_unseen: usize,
+    resent: usize,
+    gave_up: usize,
+    /// given-up frames that arrived after the fact — charged as dropped
+    dropped_arrivals: usize,
+    dropped_arrival_bits: u64,
+    /// frames routed per worker this round (flood guard)
+    routed: Vec<u32>,
+    /// acks produced during collection (give-ups, deferrals) — staged
+    /// here and merged with the apply-phase acks so every worker's ack
+    /// stream stays in send order (the worker-side in-flight queues
+    /// retire oldest-first and rely on it)
+    acks: Vec<(u32, AckEntry)>,
+}
+
 /// The leader side of the protocol: owns the [`Server`] (aggregation +
-/// optimizer), the participation policy, the virtual clock, and the
-/// late-message buffer.
+/// optimizer), the participation policy, the clock, the late-message
+/// buffer, and the recovery/exclusion state.
 pub struct RoundEngine<T: Transport> {
     transport: T,
     server: Server,
@@ -141,6 +247,22 @@ pub struct RoundEngine<T: Transport> {
     /// per-worker acks accumulated while resolving the current round,
     /// shipped (and cleared) in the next round's broadcast
     acks: Vec<Vec<AckEntry>>,
+    /// consecutive not-on-time rounds per worker (reset by an on-time
+    /// reply); feeds the exclusion policy
+    strikes: Vec<u32>,
+    /// round at which each worker was excluded (`None` = participating)
+    excluded_at: Vec<Option<u64>>,
+    /// workers whose link died (terminal; never probed)
+    dead: Vec<bool>,
+    /// real-time mode: rounds each worker owes a reply for, oldest first
+    owed: Vec<VecDeque<u64>>,
+    /// real-time mode: `(worker, step)` replies acked `Dropped` without
+    /// ever arriving (pruned after [`GIVE_UP_MEMORY`] rounds)
+    given_up: Vec<(u32, u64)>,
+    /// timing mode, fixed at construction from the transport
+    real: bool,
+    /// real-time mode: accumulated wall-clock round time
+    wall_now_s: f64,
     step: u64,
     shut: bool,
 }
@@ -162,6 +284,10 @@ impl<T: Transport> RoundEngine<T> {
         {
             bail!("sample_frac {} out of range (0, 1]", opts.sample_frac);
         }
+        if !(opts.round_timeout >= 0.0 && opts.round_timeout.is_finite()) {
+            bail!("round_timeout {} must be a finite number of seconds >= 0", opts.round_timeout);
+        }
+        let real = transport.is_real_time();
         // the transport's worker count is ground truth for the
         // Accumulate normalization G = (1/M) Σ_w g^w
         let server = server.with_workers(m);
@@ -171,6 +297,13 @@ impl<T: Transport> RoundEngine<T> {
             opts,
             pending: Vec::new(),
             acks: (0..m).map(|_| Vec::new()).collect(),
+            strikes: vec![0; m],
+            excluded_at: vec![None; m],
+            dead: vec![false; m],
+            owed: (0..m).map(|_| VecDeque::new()).collect(),
+            given_up: Vec::new(),
+            real,
+            wall_now_s: 0.0,
             step: 0,
             shut: false,
         })
@@ -178,7 +311,8 @@ impl<T: Transport> RoundEngine<T> {
 
     /// Build policy + clock from the config's round knobs
     /// (`participation` / `quorum` / `sample_frac` / `link` /
-    /// `straggler`), sized to the transport's worker count.
+    /// `straggler` / `round_timeout` / `resend_max` / `exclude_after` /
+    /// `readmit_every`), sized to the transport's worker count.
     pub fn from_cfg(transport: T, server: Server, cfg: &TrainConfig) -> Result<Self> {
         let m = transport.workers();
         let Some(clock) = VirtualClock::from_preset(&cfg.link, m, cfg.straggler, cfg.seed) else {
@@ -195,6 +329,10 @@ impl<T: Transport> RoundEngine<T> {
             sample_frac: cfg.sample_frac,
             staleness: cfg.staleness,
             clock,
+            round_timeout: cfg.round_timeout,
+            resend_max: cfg.resend_max,
+            exclude_after: cfg.exclude_after,
+            readmit_every: cfg.readmit_every,
         };
         Self::new(transport, server, opts)
     }
@@ -217,20 +355,60 @@ impl<T: Transport> RoundEngine<T> {
         self.step
     }
 
-    /// Simulated wall-clock since the run started.
+    /// Clock since the run started: simulated seconds in virtual mode,
+    /// wall-clock seconds in real-time mode.
     pub fn sim_now_s(&self) -> f64 {
-        self.opts.clock.now_s()
+        if self.real {
+            self.wall_now_s
+        } else {
+            self.opts.clock.now_s()
+        }
     }
 
-    /// The participant set this engine would draw at `step`.
+    /// Workers currently excluded by the recovery policy (sorted),
+    /// dead links included.
+    pub fn excluded_workers(&self) -> Vec<u32> {
+        (0..self.transport.workers() as u32)
+            .filter(|&w| self.dead[w as usize] || self.excluded_at[w as usize].is_some())
+            .collect()
+    }
+
+    /// The participant set this engine would use at `step`: the policy
+    /// draw ([`participants`]) minus dead and excluded workers, with an
+    /// excluded worker re-included every `readmit_every` rounds as a
+    /// re-admission probe.
     pub fn participants_at(&self, step: u64) -> Vec<u32> {
-        participants(
+        let mut base = participants(
             self.opts.participation,
             self.opts.sample_frac,
             self.opts.seed,
             step,
             self.transport.workers(),
-        )
+        );
+        base.retain(|&w| {
+            let wi = w as usize;
+            if self.dead[wi] {
+                return false;
+            }
+            match self.excluded_at[wi] {
+                None => true,
+                Some(at) => {
+                    let every = self.opts.readmit_every as u64;
+                    every > 0 && step > at && (step - at) % every == 0
+                }
+            }
+        });
+        base
+    }
+
+    /// Currently-excluded ids to ship in the round frame: everyone
+    /// excluded or dead, minus this round's probes (the frame's
+    /// participant and excluded sets are disjoint by contract).
+    fn excluded_frame_ids(&self, parts: &[u32]) -> Vec<u32> {
+        self.excluded_workers()
+            .into_iter()
+            .filter(|w| parts.binary_search(w).is_err())
+            .collect()
     }
 
     /// Queue an acknowledgement for `worker`, shipped in the next
@@ -241,37 +419,94 @@ impl<T: Transport> RoundEngine<T> {
         }
     }
 
-    /// Run one full protocol round: announce + broadcast params (with
-    /// the previous round's per-worker acks), gather the participants'
-    /// replies, order them by the virtual clock, split on-time from late
-    /// per the policy, resolve the deferred-message buffer, aggregate,
-    /// and step the optimizer. Replies are applied in worker-id order
-    /// (each worker's stale arrival before its fresh reply), so results
-    /// never depend on physical arrival order.
-    ///
-    /// Per worker and round, at most one `Fresh` message enters the
-    /// mean: a deferred gradient superseded by its sender's on-time
-    /// reply is dropped (and acked as such). `Accumulate` increments are
-    /// exempt from dedupe — they compose, and each must land exactly
-    /// once at full weight to keep the per-worker shadows consistent —
-    /// so a worker's stale increment and fresh increment may both apply
-    /// in one round, in send order. Every gathered reply is counted in
-    /// the uplink bit total exactly once, when its fate resolves —
-    /// applied *or* dropped: the worker transmitted it and the virtual
-    /// clock charged its transfer either way. A deferred message is
-    /// counted when it later resolves.
-    pub fn run_round(&mut self) -> Result<RoundReport> {
-        let step = self.step;
-        let parts = self.participants_at(step);
-        let ship_acks: Vec<Vec<AckEntry>> = self.acks.iter_mut().map(std::mem::take).collect();
-        let down = encode_round(step, &parts, &ship_acks, &self.server.params);
-        // the model broadcast ships uncompressed f32s
-        let down_bits = 32 * self.server.params.len() as u64;
-        self.transport.broadcast(&down)?;
+    /// One not-on-time round for `worker`; excludes it once the streak
+    /// reaches `exclude_after`.
+    fn strike(&mut self, worker: u32) {
+        let wi = worker as usize;
+        if self.dead[wi] {
+            return;
+        }
+        self.strikes[wi] = self.strikes[wi].saturating_add(1);
+        let limit = self.opts.exclude_after;
+        if limit > 0 && self.excluded_at[wi].is_none() && self.strikes[wi] as usize >= limit {
+            self.excluded_at[wi] = Some(self.step);
+        }
+    }
 
+    /// Give up on `worker`'s reply for `sent_step` without having seen
+    /// it: stage a `Dropped` ack (rolling the worker's encoder state
+    /// back), remember the give-up so a zombie arrival is not applied,
+    /// strike. The ack is staged in `col` — not pushed directly — so the
+    /// end-of-round merge can deliver every worker's acks in send order.
+    fn give_up(&mut self, worker: u32, sent_step: u64, col: &mut Collected) {
+        col.acks.push((worker, AckEntry { sent_step, status: AckStatus::Dropped, weight: 0.0 }));
+        self.given_up.push((worker, sent_step));
+        col.gave_up += 1;
+        self.strike(worker);
+    }
+
+    /// A worker's link died: terminal. Its in-flight messages can never
+    /// arrive and no ack can be delivered — forget them; the worker
+    /// leaves every future participant set (never probed).
+    fn mark_dead(&mut self, worker: u32) {
+        let wi = worker as usize;
+        if !self.dead[wi] {
+            self.dead[wi] = true;
+            self.owed[wi].clear();
+        }
+    }
+
+    /// Route one real-time arrival: match it against what its sender
+    /// owes. FIFO links deliver in send order, so anything owed from
+    /// *before* the matched step is proven lost and given up first —
+    /// keeping terminal acks in send order, which the worker-side
+    /// encoders' oldest-first in-flight queues rely on. An `Err` means
+    /// the sender is speaking garbage; the caller severs that one link
+    /// rather than failing the round (virtual mode keeps the strict
+    /// lock-step contract where any decode failure is fatal).
+    fn route(&mut self, step: u64, worker: u32, frame: Frame, col: &mut Collected) -> Result<()> {
+        let wi = worker as usize;
+        col.routed[wi] += 1;
+        if col.routed[wi] > MAX_ROUTED_PER_WORKER {
+            bail!("worker {worker}: reply flood — {MAX_ROUTED_PER_WORKER} frames in one round");
+        }
+        if frame.kind != crate::transport::FRAME_GRAD {
+            bail!("worker {worker}: unexpected frame kind {} in gather", frame.kind);
+        }
+        let r = decode_reply_from(&frame, worker)?;
+        if let Some(pos) = self.owed[wi].iter().position(|&s| s == r.step) {
+            for _ in 0..pos {
+                let lost = self.owed[wi].pop_front().unwrap();
+                self.give_up(worker, lost, col);
+            }
+            let _ = self.owed[wi].pop_front();
+            if r.step == step {
+                col.on_time.push(r);
+            } else {
+                col.resolve.push(PendingMsg { worker, sent_step: r.step, comp: r.comp });
+            }
+        } else if let Some(pos) =
+            self.given_up.iter().position(|&(gw, gs)| gw == worker && gs == r.step)
+        {
+            // arrived after its Dropped ack: the decision stands (the
+            // worker may already have rolled back) — never applied, but
+            // the transmission is charged, once, here
+            self.given_up.remove(pos);
+            col.dropped_arrivals += 1;
+            col.dropped_arrival_bits += r.comp.wire_bits();
+        }
+        // else: duplicate of an already-resolved reply (a resend racing
+        // its slow original) — discarded; the original resolution
+        // already charged the transmission
+        Ok(())
+    }
+
+    /// Virtual-time collection: one blocking gather, lateness decided by
+    /// the virtual clock. Bit-identical to the pre-recovery engine.
+    fn collect_virtual(&mut self, step: u64, parts: &[u32], down_bits: u64) -> Result<Collected> {
         let mut replies = self
             .transport
-            .gather(&parts)?
+            .gather(parts)?
             .into_iter()
             .map(|(id, frame)| decode_reply(&frame, step, id))
             .collect::<Result<Vec<Reply>>>()?;
@@ -279,7 +514,7 @@ impl<T: Transport> RoundEngine<T> {
         let mean_loss =
             replies.iter().map(|r| r.loss as f64).sum::<f64>() / replies.len().max(1) as f64;
 
-        // --- virtual clock: simulated arrival of every reply ------------
+        // simulated arrival of every reply
         let arrivals: Vec<f64> = replies
             .iter()
             .map(|r| self.opts.clock.arrival_s(step, r.worker, r.comp.wire_bits(), down_bits))
@@ -295,36 +530,214 @@ impl<T: Transport> RoundEngine<T> {
             }
             _ => arrivals.iter().copied().fold(0.0, f64::max),
         };
-        let on_time_flags: Vec<bool> = arrivals.iter().map(|a| *a <= deadline).collect();
-        // sorted ids of this round's on-time repliers (for dedupe)
-        let on_time_ids: Vec<u32> = replies
-            .iter()
-            .zip(&on_time_flags)
-            .filter(|(_, ok)| **ok)
-            .map(|(r, _)| r.worker)
-            .collect();
+        let mut col = Collected { mean_loss, round_s: deadline, ..Default::default() };
+        for (reply, arrival) in replies.into_iter().zip(&arrivals) {
+            if *arrival <= deadline {
+                col.on_time.push(reply);
+            } else {
+                col.defer.push(reply);
+            }
+        }
+        Ok(col)
+    }
 
-        // --- resolve the deferred buffer, then this round's replies -----
+    /// Real-time collection: frames arrive when they arrive; the round
+    /// closes at the k-th current-step frame, after the deadline →
+    /// resend → give-up ladder, or when nobody can supply one any more.
+    fn collect_real(&mut self, step: u64, parts: &[u32]) -> Result<Collected> {
+        let mut col = Collected { routed: vec![0; self.owed.len()], ..Default::default() };
+        self.given_up.retain(|&(_, s)| step.saturating_sub(s) <= GIVE_UP_MEMORY);
+        for &w in parts {
+            self.owed[w as usize].push_back(step);
+        }
+        // give up owed replies older than the age bound (their senders
+        // went quiet while the quorum kept closing without them)
+        for wi in 0..self.owed.len() {
+            while let Some(&s) = self.owed[wi].front() {
+                if step.saturating_sub(s) < GIVE_UP_AGE {
+                    break;
+                }
+                let _ = self.owed[wi].pop_front();
+                self.give_up(wi as u32, s, &mut col);
+            }
+        }
+        let k = match self.opts.participation {
+            Participation::Quorum => self.opts.quorum.min(parts.len()),
+            _ => parts.len(),
+        };
+        let deadline = if self.opts.round_timeout > 0.0 {
+            Some(Duration::from_secs_f64(self.opts.round_timeout))
+        } else {
+            None
+        };
+        let round_start = Instant::now();
+        let mut window_start = Instant::now();
+        let mut attempts = 0usize;
+        loop {
+            if col.on_time.len() >= k {
+                break;
+            }
+            let owing: Vec<u32> = (0..self.owed.len())
+                .filter(|&wi| !self.dead[wi] && !self.owed[wi].is_empty())
+                .map(|wi| wi as u32)
+                .collect();
+            let owing_now: Vec<u32> = owing
+                .iter()
+                .copied()
+                .filter(|&w| self.owed[w as usize].back() == Some(&step))
+                .collect();
+            if owing_now.is_empty() {
+                break; // nobody left who could still supply this round
+            }
+            let need = k - col.on_time.len();
+            let remaining = deadline.map(|d| d.saturating_sub(window_start.elapsed()));
+            let g = self.transport.gather_until(&owing, need, remaining)?;
+            for &w in &g.dead {
+                self.mark_dead(w);
+            }
+            if !g.arrived.is_empty() {
+                for (w, frame) in g.arrived {
+                    if let Err(e) = self.route(step, w, frame, &mut col) {
+                        // a peer speaking garbage (wrong kind, corrupt
+                        // payload, reply flood) is severed, not fatal —
+                        // one bad worker must not kill the cluster
+                        eprintln!("leader: severing worker {w}: {e:#}");
+                        self.mark_dead(w);
+                    }
+                }
+            } else if g.dead.is_empty() {
+                // deadline expired without a frame: the recovery
+                // ladder — resend, then give up
+                attempts += 1;
+                if attempts > self.opts.resend_max {
+                    for w in owing_now {
+                        // give up EVERYTHING this worker still owes,
+                        // oldest first — dropping only the current step
+                        // while an older reply is still in flight would
+                        // deliver terminal acks out of send order and
+                        // make the worker retire the wrong in-flight
+                        // message (oldest-first queue contract)
+                        let wi = w as usize;
+                        while let Some(s) = self.owed[wi].pop_front() {
+                            self.give_up(w, s, &mut col);
+                        }
+                    }
+                    break;
+                }
+                for &w in &owing_now {
+                    self.transport.send_to(w, &encode_resend(step, w))?;
+                    col.resent += 1;
+                }
+                // the resent frames get a fresh wait window
+                window_start = Instant::now();
+            }
+            // empty with fresh deaths: loop to re-evaluate who can
+            // still supply
+        }
+        // participants whose reply is merely late (quorum closed
+        // without them): deferred — the frame arrives on a later gather
+        for &w in parts {
+            let wi = w as usize;
+            if !self.dead[wi] && self.owed[wi].iter().any(|&s| s == step) {
+                col.acks.push((
+                    w,
+                    AckEntry { sent_step: step, status: AckStatus::Deferred, weight: 0.0 },
+                ));
+                self.strike(w);
+                col.late_unseen += 1;
+            }
+        }
+        col.mean_loss = col.on_time.iter().map(|r| r.loss as f64).sum::<f64>()
+            / col.on_time.len().max(1) as f64;
+        col.round_s = round_start.elapsed().as_secs_f64();
+        Ok(col)
+    }
+
+    /// Run one full protocol round: announce + broadcast params (with
+    /// the previous round's per-worker acks and the excluded set),
+    /// collect replies per the timing mode, resolve the stale-message
+    /// buffer, aggregate, and step the optimizer. Replies are applied in
+    /// worker-id order (each worker's stale arrival before its fresh
+    /// reply), so results never depend on physical arrival order.
+    ///
+    /// Per worker and round, at most one `Fresh` message enters the
+    /// mean: a deferred gradient superseded by its sender's on-time
+    /// reply is dropped (and acked as such). `Accumulate` increments are
+    /// exempt from dedupe — they compose, and each must land exactly
+    /// once at full weight to keep the per-worker shadows consistent —
+    /// so a worker's stale increment and fresh increment may both apply
+    /// in one round, in send order. Every received reply is counted in
+    /// the uplink bit total exactly once, when its fate resolves —
+    /// applied *or* dropped: the worker transmitted it either way. A
+    /// reply given up on (never received) is charged nothing unless its
+    /// frame arrives after the fact, in which case it is charged as
+    /// dropped.
+    pub fn run_round(&mut self) -> Result<RoundReport> {
+        let step = self.step;
+        let parts = self.participants_at(step);
+        if parts.is_empty() {
+            // tolerable only while a re-admission probe can still fire;
+            // otherwise every remaining step would be a silent no-op
+            let recoverable = self.opts.readmit_every > 0
+                && (0..self.dead.len())
+                    .any(|wi| !self.dead[wi] && self.excluded_at[wi].is_some());
+            if !recoverable {
+                bail!(
+                    "no participants left at step {step} ({} dead, {} excluded) and no \
+                     re-admission probe can ever fire",
+                    self.dead.iter().filter(|d| **d).count(),
+                    self.excluded_at.iter().filter(|e| e.is_some()).count()
+                );
+            }
+        }
+        let ship_acks: Vec<Vec<AckEntry>> = self.acks.iter_mut().map(std::mem::take).collect();
+        let excluded_ids = self.excluded_frame_ids(&parts);
+        let down = encode_round(step, &parts, &ship_acks, &excluded_ids, &self.server.params);
+        // the model broadcast ships uncompressed f32s
+        let down_bits = 32 * self.server.params.len() as u64;
+        self.transport.broadcast(&down)?;
+
+        let col = if self.real {
+            self.collect_real(step, &parts)?
+        } else {
+            self.collect_virtual(step, &parts, down_bits)?
+        };
+
+        // --- resolve stale messages, then this round's replies ----------
         let agg = self.server.agg();
         let staleness = self.opts.staleness;
+        // this round's acks are staged here (collection-phase give-ups /
+        // deferrals included) and delivered per worker in ascending
+        // sent_step = send order — the worker-side in-flight queues
+        // retire oldest-first and a younger terminal ack arriving before
+        // an older one would retire the wrong message
+        let mut round_acks: Vec<(u32, AckEntry)> = std::mem::take(&mut col.acks);
+        fn stage(acks: &mut Vec<(u32, AckEntry)>, w: u32, sent_step: u64, s: AckStatus, wt: f32) {
+            acks.push((w, AckEntry { sent_step, status: s, weight: wt }));
+        }
+        let mut on_time_ids: Vec<u32> = col.on_time.iter().map(|r| r.worker).collect();
+        on_time_ids.sort_unstable();
+        let mut resolve: Vec<PendingMsg> = std::mem::take(&mut self.pending);
+        resolve.extend(col.resolve);
+        resolve.sort_by_key(|p| (p.sent_step, p.worker));
         let mut apply: Vec<(u32, f32, Compressed)> =
-            Vec::with_capacity(self.pending.len() + replies.len());
+            Vec::with_capacity(resolve.len() + col.on_time.len());
         let mut applied_stale = 0usize;
-        let mut dropped_stale = 0usize;
-        let mut dropped_bits = 0u64;
-        for p in std::mem::take(&mut self.pending) {
+        let mut dropped_stale = col.dropped_arrivals;
+        let mut dropped_bits = col.dropped_arrival_bits;
+        for p in resolve {
             match agg {
                 AggKind::Accumulate => {
                     // increments always land, at full weight (the EF21
                     // shadow contract — see the `ef` module docs)
-                    self.push_ack(p.worker, p.sent_step, AckStatus::Applied, 1.0);
+                    stage(&mut round_acks, p.worker, p.sent_step, AckStatus::Applied, 1.0);
                     apply.push((p.worker, 1.0, p.comp));
                     applied_stale += 1;
                 }
                 AggKind::Fresh => {
                     let superseded = on_time_ids.binary_search(&p.worker).is_ok();
                     if superseded || staleness == Staleness::Drop {
-                        self.push_ack(p.worker, p.sent_step, AckStatus::Dropped, 0.0);
+                        stage(&mut round_acks, p.worker, p.sent_step, AckStatus::Dropped, 0.0);
                         dropped_bits += p.comp.wire_bits();
                         dropped_stale += 1;
                     } else {
@@ -334,27 +747,41 @@ impl<T: Transport> RoundEngine<T> {
                             Staleness::Full => 1.0,
                             Staleness::Drop => unreachable!(),
                         };
-                        self.push_ack(p.worker, p.sent_step, AckStatus::Applied, weight);
+                        stage(&mut round_acks, p.worker, p.sent_step, AckStatus::Applied, weight);
                         apply.push((p.worker, weight, p.comp));
                         applied_stale += 1;
                     }
                 }
             }
         }
-        let mut late = 0usize;
-        for (reply, &on_time) in replies.into_iter().zip(&on_time_flags) {
-            if on_time {
-                self.push_ack(reply.worker, step, AckStatus::Applied, 1.0);
-                apply.push((reply.worker, 1.0, reply.comp));
-            } else {
-                self.push_ack(reply.worker, step, AckStatus::Deferred, 0.0);
-                self.pending.push(PendingMsg {
-                    worker: reply.worker,
-                    sent_step: step,
-                    comp: reply.comp,
-                });
-                late += 1;
+        let mut on_time_replies = col.on_time;
+        on_time_replies.sort_by_key(|r| r.worker);
+        for reply in on_time_replies {
+            stage(&mut round_acks, reply.worker, step, AckStatus::Applied, 1.0);
+            let wi = reply.worker as usize;
+            self.strikes[wi] = 0;
+            if self.excluded_at[wi].is_some() {
+                // the re-admission probe came back on time
+                self.excluded_at[wi] = None;
             }
+            apply.push((reply.worker, 1.0, reply.comp));
+        }
+        let mut late = col.late_unseen;
+        for reply in col.defer {
+            stage(&mut round_acks, reply.worker, step, AckStatus::Deferred, 0.0);
+            self.strike(reply.worker);
+            self.pending.push(PendingMsg {
+                worker: reply.worker,
+                sent_step: step,
+                comp: reply.comp,
+            });
+            late += 1;
+        }
+        // deliver: per worker, ascending sent_step (stable, so the
+        // at-most-one entry per (worker, step) keeps its slot)
+        round_acks.sort_by_key(|(w, a)| (*w, a.sent_step));
+        for (w, a) in round_acks {
+            self.push_ack(w, a.sent_step, a.status, a.weight);
         }
         let on_time = apply.len() - applied_stale;
 
@@ -366,11 +793,16 @@ impl<T: Transport> RoundEngine<T> {
         // uplink total (once, here at resolution), not the aggregate
         let bits = self.server.apply_attributed(&msgs) + dropped_bits;
         self.server.total_bits += dropped_bits;
-        let sim_now_s = self.opts.clock.advance(deadline);
+        let sim_now_s = if self.real {
+            self.wall_now_s += col.round_s;
+            self.wall_now_s
+        } else {
+            self.opts.clock.advance(col.round_s)
+        };
         self.step += 1;
         Ok(RoundReport {
             step,
-            mean_loss,
+            mean_loss: col.mean_loss,
             bits,
             total_bits: self.server.total_bits,
             participants: parts.len(),
@@ -378,7 +810,11 @@ impl<T: Transport> RoundEngine<T> {
             late,
             applied_stale,
             dropped_stale,
-            sim_round_s: deadline,
+            resent: col.resent,
+            gave_up: col.gave_up,
+            excluded: self.excluded_workers().len(),
+            dead: self.dead.iter().filter(|d| **d).count(),
+            sim_round_s: col.round_s,
             sim_now_s,
         })
     }
@@ -449,14 +885,23 @@ impl<T: Transport> RoundEngine<T> {
         self.shutdown()?;
         Ok(self.server)
     }
+
+    /// Test hook: force a worker into the excluded state as of `at`.
+    #[cfg(test)]
+    fn force_exclude(&mut self, worker: u32, at: u64) {
+        self.excluded_at[worker as usize] = Some(at);
+    }
 }
 
 /// What serving one downstream frame produced on the worker side.
 pub enum ServeOutcome {
-    /// a reply frame to send upstream
-    Reply(Frame),
+    /// a reply frame to send upstream (`step` keys the resend cache)
+    Reply { step: u64, frame: Frame },
     /// this worker sat the round out (not in the participant set)
     Idle,
+    /// the leader asked for this round's reply again — resend the
+    /// cached copy, bit-for-bit
+    Resend { step: u64 },
     /// the leader ended the run
     Shutdown,
 }
@@ -472,6 +917,9 @@ pub struct WorkerRound<'a> {
     pub acks: &'a [AckEntry],
     /// whether this worker is in the round's participant set
     pub participant: bool,
+    /// whether the recovery policy currently excludes this worker
+    /// (informational — an excluded worker is never a participant)
+    pub excluded: bool,
 }
 
 /// Worker-side protocol step: decode one downstream frame, hand the
@@ -487,6 +935,13 @@ pub fn serve_frame(
 ) -> Result<ServeOutcome> {
     match frame.kind {
         FRAME_SHUTDOWN => Ok(ServeOutcome::Shutdown),
+        FRAME_RESEND => {
+            let (step, worker) = decode_resend(frame)?;
+            if worker != id {
+                bail!("worker {id}: resend request addressed to worker {worker}");
+            }
+            Ok(ServeOutcome::Resend { step })
+        }
         FRAME_PARAMS => {
             let down = decode_round(frame)?;
             let round = WorkerRound {
@@ -494,11 +949,13 @@ pub fn serve_frame(
                 params: &down.params,
                 acks: down.acks_for(id),
                 participant: down.is_participant(id),
+                excluded: down.is_excluded(id),
             };
             match (compute(&round)?, round.participant) {
-                (Some((loss, comp)), true) => {
-                    Ok(ServeOutcome::Reply(encode_reply(down.step, id, loss, comp)))
-                }
+                (Some((loss, comp)), true) => Ok(ServeOutcome::Reply {
+                    step: down.step,
+                    frame: encode_reply(down.step, id, loss, comp),
+                }),
                 (None, false) => Ok(ServeOutcome::Idle),
                 (None, true) => {
                     bail!("worker {id}: participant produced no reply at step {}", down.step)
@@ -513,7 +970,9 @@ pub fn serve_frame(
 }
 
 /// Blocking worker loop over any [`WorkerLink`]: serve rounds until the
-/// leader shuts the run down. Returns the number of rounds this worker
+/// leader shuts the run down, answering resend requests from a
+/// one-deep reply cache (the leader only ever asks for the round it is
+/// currently collecting). Returns the number of rounds this worker
 /// actually computed.
 pub fn run_worker<L: WorkerLink>(
     link: &mut L,
@@ -521,14 +980,23 @@ pub fn run_worker<L: WorkerLink>(
 ) -> Result<u64> {
     let id = link.id();
     let mut served = 0u64;
+    let mut last: Option<(u64, Frame)> = None;
     loop {
         let frame = link.recv()?;
         match serve_frame(&frame, id, &mut compute)? {
-            ServeOutcome::Reply(reply) => {
+            ServeOutcome::Reply { step, frame: reply } => {
                 link.send(&reply)?;
+                last = Some((step, reply));
                 served += 1;
             }
             ServeOutcome::Idle => {}
+            ServeOutcome::Resend { step } => match &last {
+                Some((s, reply)) if *s == step => link.send(reply)?,
+                // cache miss: the request outlived the cache (or asks
+                // for a round this worker sat out) — stay silent, the
+                // leader's give-up path covers it
+                _ => {}
+            },
             ServeOutcome::Shutdown => return Ok(served),
         }
     }
@@ -551,8 +1019,11 @@ pub fn local_star(computes: Vec<Compute<'_>>) -> LocalStar<'_> {
             .map(|(id, mut compute)| {
                 Box::new(move |frame: &Frame| -> Result<Option<Frame>> {
                     match serve_frame(frame, id as u32, &mut *compute)? {
-                        ServeOutcome::Reply(reply) => Ok(Some(reply)),
+                        ServeOutcome::Reply { frame, .. } => Ok(Some(frame)),
                         ServeOutcome::Idle | ServeOutcome::Shutdown => Ok(None),
+                        // the inline star cannot address workers, so a
+                        // resend can only reach a handler by misuse
+                        ServeOutcome::Resend { .. } => Ok(None),
                     }
                 }) as crate::transport::local::Handler<'_>
             })
@@ -602,6 +1073,7 @@ mod tests {
     use super::*;
     use crate::ef::AggKind;
     use crate::optim::Sgd;
+    use crate::transport::channel;
 
     // worker w replies with a constant dense "gradient" of w+1, sized
     // off the broadcast params
@@ -635,6 +1107,7 @@ mod tests {
         assert_eq!(rep.on_time, 2);
         assert_eq!(rep.late, 0);
         assert_eq!(rep.mean_loss, 0.5);
+        assert_eq!((rep.resent, rep.gave_up, rep.excluded, rep.dead), (0, 0, 0, 0));
         assert!(rep.sim_round_s > 0.0);
         assert_eq!(rep.sim_now_s, eng.sim_now_s());
         assert_eq!(rep.total_bits, eng.server().total_bits);
@@ -744,5 +1217,96 @@ mod tests {
         c.quorum = 3; // > m
         assert!(RoundEngine::from_cfg(dense_star(2), server(), &c).is_err());
         assert!(RoundEngine::from_cfg(local_star(vec![]), server(), &cfg(1)).is_err());
+        let mut c = cfg(2);
+        c.round_timeout = f64::NAN;
+        assert!(RoundEngine::from_cfg(dense_star(2), server(), &c).is_err());
+    }
+
+    #[test]
+    fn exclusion_schedule_drops_then_probes_then_readmits() {
+        let server = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        let mut c = cfg(3);
+        c.exclude_after = 2;
+        c.readmit_every = 3;
+        let mut eng = RoundEngine::from_cfg(dense_star(3), server, &c).unwrap();
+        assert_eq!(eng.participants_at(5), vec![0, 1, 2]);
+        eng.force_exclude(1, 4);
+        assert_eq!(eng.excluded_workers(), vec![1]);
+        // excluded until the probe cadence hits: 4+3, 4+6, …
+        assert_eq!(eng.participants_at(5), vec![0, 2]);
+        assert_eq!(eng.participants_at(6), vec![0, 2]);
+        assert_eq!(eng.participants_at(7), vec![0, 1, 2], "probe round");
+        assert_eq!(eng.participants_at(8), vec![0, 2]);
+        assert_eq!(eng.participants_at(10), vec![0, 1, 2], "second probe");
+        // the probed worker's on-time reply re-admits it: run the probe
+        // round for real (virtual clock: everyone is on time)
+        while eng.step_index() < 7 {
+            eng.run_round().unwrap();
+        }
+        let rep = eng.run_round().unwrap(); // step 7: the probe
+        assert_eq!(rep.participants, 3);
+        assert!(eng.excluded_workers().is_empty(), "on-time probe must re-admit");
+        assert_eq!(eng.participants_at(8), vec![0, 1, 2]);
+        eng.shutdown().unwrap();
+    }
+
+    #[test]
+    fn worker_resends_cached_reply_bit_identically() {
+        // leader side driven by hand over the mpsc channel transport
+        let (leader, mut ports) = channel::star(1);
+        let port = ports.remove(0);
+        let worker = std::thread::spawn(move || {
+            let mut port = port;
+            run_worker(&mut port, |round: &WorkerRound<'_>| {
+                if !round.participant {
+                    return Ok(None);
+                }
+                Ok(Some((0.5, Compressed::dense(round.params.to_vec()))))
+            })
+            .unwrap()
+        });
+        leader.broadcast(&encode_round(0, &[0], &[], &[], &[1.0, -2.0]));
+        let first = leader.gather(1);
+        assert_eq!(first.len(), 1);
+        // ask for round 0 again: the cached reply must come back
+        // bit-for-bit (this is what makes recovery loss-transparent)
+        leader.broadcast(&encode_resend(0, 0));
+        let again = leader.gather(1);
+        assert_eq!(first[0].1, again[0].1);
+        // a resend for a round the cache no longer holds is silent: the
+        // worker must not invent a frame
+        leader.broadcast(&encode_resend(7, 0));
+        leader.broadcast(&Frame::shutdown());
+        assert_eq!(worker.join().unwrap(), 1, "resends must not count as computed rounds");
+    }
+
+    #[test]
+    fn serve_frame_validates_resend_addressing() {
+        let mut compute =
+            |_round: &WorkerRound<'_>| -> Result<Option<(f32, Compressed)>> { Ok(None) };
+        match serve_frame(&encode_resend(3, 2), 2, &mut compute).unwrap() {
+            ServeOutcome::Resend { step } => assert_eq!(step, 3),
+            _ => panic!("expected resend outcome"),
+        }
+        // addressed to someone else: protocol violation
+        let err = serve_frame(&encode_resend(3, 1), 2, &mut compute).unwrap_err().to_string();
+        assert!(err.contains("addressed to worker 1"), "{err}");
+    }
+
+    #[test]
+    fn workers_see_the_excluded_set() {
+        let down = encode_round(2, &[0, 2], &[], &[1], &[1.0]);
+        let mut seen = Vec::new();
+        let mut compute = |round: &WorkerRound<'_>| -> Result<Option<(f32, Compressed)>> {
+            seen.push((round.participant, round.excluded));
+            if round.participant {
+                return Ok(Some((0.0, Compressed::dense(round.params.to_vec()))));
+            }
+            Ok(None)
+        };
+        for id in 0..3u32 {
+            serve_frame(&down, id, &mut compute).unwrap();
+        }
+        assert_eq!(seen, vec![(true, false), (false, true), (true, false)]);
     }
 }

@@ -178,9 +178,13 @@ pub fn cli(args: &[String]) -> Result<()> {
         if quick { " (quick)" } else { "" }
     );
     match which {
-        "fig1" | "fig2" => sparsification::run(&rt, &scale, "tx-tiny", &[10, 50, 100, 500], "fig1", "fig2"),
+        "fig1" | "fig2" => {
+            sparsification::run(&rt, &scale, "tx-tiny", &[10, 50, 100, 500], "fig1", "fig2")
+        }
         "fig3" => quantization::run_bitwise(&rt, &scale),
-        "fig4" | "fig5" => sparsification::run(&rt, &scale, "cnn-tiny", &[1, 5, 10, 50], "fig4", "fig5"),
+        "fig4" | "fig5" => {
+            sparsification::run(&rt, &scale, "cnn-tiny", &[1, 5, 10, 50], "fig4", "fig5")
+        }
         "fig6" => quantization::run_rtn(&rt, &scale),
         "all" => {
             sparsification::run(&rt, &scale, "tx-tiny", &[10, 50, 100, 500], "fig1", "fig2")?;

@@ -184,7 +184,11 @@ pub fn lem34(rep: &mut Report) {
                 beaten = false;
             }
         }
-        rep.check("lem34", format!("{vname}: adaptive optimum {opt:.4} unbeaten by 50 random schedules"), beaten);
+        rep.check(
+            "lem34",
+            format!("{vname}: adaptive optimum {opt:.4} unbeaten by 50 random schedules"),
+            beaten,
+        );
         let mlmc = Mlmc::new(Box::new(MlSTopK { s: 6 }), Schedule::Adaptive);
         let emp = empirical_variance(&mlmc, &v, 20_000, 13);
         let rel = (emp - opt).abs() / opt.max(1e-9);

@@ -58,13 +58,19 @@ fn print_help() {
          \x20 staleness      damp | full | drop             stale Fresh-gradient weighting (EF21-family\n\
          \x20                                               increments always apply at full weight)\n\
          \x20 link           datacenter | edge | hetero     netsim virtual-clock preset\n\
-         \x20 straggler      seconds                        mean seeded straggler delay (0 = off)\n",
+         \x20 straggler      seconds                        mean seeded straggler delay (0 = off)\n\n\
+         recovery keys (real-time TCP rounds):\n\
+         \x20 round_timeout  seconds (0 = wait forever)     deadline before resend requests go out\n\
+         \x20 resend_max     n                              resend attempts before a reply is given up\n\
+         \x20 exclude_after  n (0 = never)                  consecutive missed rounds before exclusion\n\
+         \x20 readmit_every  n (0 = never)                  probe an excluded worker every n rounds\n",
         [
             "model", "method", "workers", "steps", "lr", "seed", "frac_pm",
             "quant_bits", "eval_every", "eval_batches", "transport",
             "optimizer", "momentum_beta", "dirichlet_alpha", "use_l1_stats",
             "shard_size", "threads", "participation", "quorum", "sample_frac",
-            "staleness", "link", "straggler", "tag",
+            "staleness", "link", "straggler", "round_timeout", "resend_max",
+            "exclude_after", "readmit_every", "tag",
         ]
         .join(", ")
     );

@@ -83,7 +83,10 @@ mod tests {
     fn renders_two_series() {
         let s = vec![
             Series { label: "up", points: (0..20).map(|i| (i as f64, i as f64)).collect() },
-            Series { label: "down", points: (0..20).map(|i| (i as f64, 20.0 - i as f64)).collect() },
+            Series {
+                label: "down",
+                points: (0..20).map(|i| (i as f64, 20.0 - i as f64)).collect(),
+            },
         ];
         let out = render(&s, 40, 10, false);
         assert!(out.contains('*'));

@@ -171,7 +171,11 @@ impl MlCtx for FpCtx<'_> {
         // the paper's accounting (App. B) charges sign+exp+bit per
         // residual element uniformly, so we match it.
         Compressed {
-            payload: Payload::Quantized { val, bits_per_elem: (1 + 8 + 1) as f64, overhead_bits: 0 },
+            payload: Payload::Quantized {
+                val,
+                bits_per_elem: (1 + 8 + 1) as f64,
+                overhead_bits: 0,
+            },
             extra_bits: 0,
         }
     }

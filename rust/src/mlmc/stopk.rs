@@ -234,7 +234,8 @@ mod tests {
         let ctx = ml.prepare(&v);
         assert_eq!(ctx.levels(), 100);
         let r = ctx.residual(1).decode();
-        let nz: Vec<usize> = r.iter().enumerate().filter(|(_, x)| **x != 0.0).map(|(i, _)| i).collect();
+        let nz: Vec<usize> =
+            r.iter().enumerate().filter(|(_, x)| **x != 0.0).map(|(i, _)| i).collect();
         assert_eq!(nz.len(), 1);
         // it is the largest-|v| element
         let max_i = (0..100).max_by(|&a, &b| v[a].abs().partial_cmp(&v[b].abs()).unwrap()).unwrap();

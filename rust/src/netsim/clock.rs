@@ -67,7 +67,12 @@ impl VirtualClock {
 
     /// Build from a named preset: `"datacenter"` / `"edge"` (homogeneous)
     /// or `"hetero"` (edge base with a 4x per-worker bandwidth spread).
-    pub fn from_preset(name: &str, workers: usize, straggler_mean_s: f64, seed: u64) -> Option<Self> {
+    pub fn from_preset(
+        name: &str,
+        workers: usize,
+        straggler_mean_s: f64,
+        seed: u64,
+    ) -> Option<Self> {
         let (base, spread) = match name {
             "datacenter" => (LinkModel::datacenter(), 1.0),
             "edge" => (LinkModel::edge(), 1.0),

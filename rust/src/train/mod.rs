@@ -38,11 +38,19 @@ impl Codec {
     pub fn name(&self) -> String {
         match self {
             Codec::Enc(e) => e.name(),
-            Codec::MlmcL1 { mlmc, .. } => format!("{}+l1stats", crate::compress::Compressor::name(mlmc)),
+            Codec::MlmcL1 { mlmc, .. } => {
+                format!("{}+l1stats", crate::compress::Compressor::name(mlmc))
+            }
         }
     }
 
-    pub fn encode(&mut self, rt: &Runtime, model: &ModelMeta, grad: &[f32], rng: &mut Rng) -> Result<Compressed> {
+    pub fn encode(
+        &mut self,
+        rt: &Runtime,
+        model: &ModelMeta,
+        grad: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Compressed> {
         match self {
             Codec::Enc(e) => Ok(e.encode(grad, rng)),
             Codec::MlmcL1 { mlmc, seg_size, frac_pm } => {
@@ -140,7 +148,13 @@ pub fn batch_x<'a>(model: &ModelMeta, b: &'a Batch) -> ArgValue<'a> {
 }
 
 /// Evaluate on `n` fixed held-out batches: `(mean_loss, accuracy)`.
-pub fn evaluate(rt: &Runtime, model: &ModelMeta, task: &Task, params: &[f32], n: usize) -> Result<(f64, f64)> {
+pub fn evaluate(
+    rt: &Runtime,
+    model: &ModelMeta,
+    task: &Task,
+    params: &[f32],
+    n: usize,
+) -> Result<(f64, f64)> {
     let mut loss = 0.0f64;
     let mut correct = 0.0f64;
     let mut total = 0.0f64;

@@ -114,7 +114,14 @@ pub fn run_quadratic(problem: &Quadratic, cfg: &TrainConfig) -> SynthResult {
 }
 
 /// Convenience: a default config for synthetic runs.
-pub fn synth_cfg(method: Method, workers: usize, steps: usize, lr: f32, frac_pm: u32, seed: u64) -> TrainConfig {
+pub fn synth_cfg(
+    method: Method,
+    workers: usize,
+    steps: usize,
+    lr: f32,
+    frac_pm: u32,
+    seed: u64,
+) -> TrainConfig {
     let mut cfg = TrainConfig::default();
     cfg.method = method;
     cfg.workers = workers;

@@ -1,0 +1,377 @@
+//! [`FaultyLink`]: a deterministic lossy-network wrapper around any
+//! [`Transport`] — the test double for the engine's real-time recovery
+//! ladder (deadline → resend → give-up → exclude).
+//!
+//! The wrapper reports `is_real_time() == true` and simulates a lossy
+//! FIFO network *without any wall clock*: every fault decision is a
+//! pure function of `(seed, worker, step)` on the repo's counter-RNG
+//! streams, so runs replay exactly. Per pulled reply, one seeded draw
+//! picks a fate:
+//!
+//! * **fast** — delivered by the first `gather_until` of its round
+//!   (before the round closes, i.e. on time);
+//! * **slow** — delivered at the next round's first gather (arrives
+//!   after this round's deadline: the engine resolves it as a stale
+//!   arrival). A resend request for a slow frame delivers a duplicate
+//!   copy immediately while the original still arrives later —
+//!   exercising the engine's duplicate discard;
+//! * **lost** — withheld until a resend request re-rolls it (with
+//!   `resend_drop_prob`); never delivered unless asked for;
+//! * **blackout** — inside a `(worker, from_step, until_step)` window
+//!   every frame (and every resend) vanishes unrecoverably: the model
+//!   for a worker whose uplink is down but whose process lives.
+//!
+//! An **empty** `gather_until` result is the engine's "deadline
+//! expired" cue, so the recovery ladder runs at full speed in tests: no
+//! timeouts, no sleeps, bit-exact outcomes.
+
+use anyhow::{bail, Result};
+
+use crate::engine::framing::{decode_resend, decode_round};
+use crate::tensor::Rng;
+
+use super::{Frame, Gathered, Transport, FRAME_PARAMS, FRAME_RESEND};
+
+/// Stream salt for the per-(worker, step) fault draw.
+const FAULT_SALT: u64 = 0xFA_017;
+/// Stream salt for resend re-rolls (xored with the attempt index).
+const RESEND_SALT: u64 = 0x2E5E_4D;
+
+struct Withheld {
+    worker: u32,
+    step: u64,
+    frame: Frame,
+    /// for slow frames: the round whose first gather delivers it
+    deliver_round: u64,
+}
+
+/// Deterministic drop/delay/blackout injection over an inner transport.
+pub struct FaultyLink<T: Transport> {
+    inner: T,
+    seed: u64,
+    drop_prob: f64,
+    slow_prob: f64,
+    resend_drop_prob: f64,
+    /// `(worker, from_step, until_step)`: frames vanish, resends too
+    blackouts: Vec<(u32, u64, u64)>,
+    /// current round (step of the last params broadcast)
+    round: Option<u64>,
+    /// participant set of the current round (from the broadcast frame)
+    parts: Vec<u32>,
+    /// inner replies already pulled for the current round?
+    pulled: bool,
+    /// deliverable at the next `gather_until`
+    ready: Vec<(u32, Frame)>,
+    /// slow frames waiting for their delivery round
+    slow: Vec<Withheld>,
+    /// lost frames, recoverable by a resend request
+    lost: Vec<Withheld>,
+    resend_rolls: u64,
+}
+
+impl<T: Transport> FaultyLink<T> {
+    pub fn new(inner: T, seed: u64) -> Self {
+        FaultyLink {
+            inner,
+            seed,
+            drop_prob: 0.0,
+            slow_prob: 0.0,
+            resend_drop_prob: 0.0,
+            blackouts: Vec::new(),
+            round: None,
+            parts: Vec::new(),
+            pulled: false,
+            ready: Vec::new(),
+            slow: Vec::new(),
+            lost: Vec::new(),
+            resend_rolls: 0,
+        }
+    }
+
+    /// Probability a reply is lost in transit (recoverable by resend).
+    pub fn with_drop_prob(mut self, p: f64) -> Self {
+        self.drop_prob = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Probability a reply arrives only after its round's deadline.
+    pub fn with_slow_prob(mut self, p: f64) -> Self {
+        self.slow_prob = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Probability a *resent* reply is lost again.
+    pub fn with_resend_drop_prob(mut self, p: f64) -> Self {
+        self.resend_drop_prob = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Every frame `worker` sends for a step in `from..until` vanishes,
+    /// resends included — an unrecoverable uplink outage.
+    pub fn with_blackout(mut self, worker: u32, from: u64, until: u64) -> Self {
+        self.blackouts.push((worker, from, until));
+        self
+    }
+
+    fn in_blackout(&self, worker: u32, step: u64) -> bool {
+        self.blackouts.iter().any(|&(w, f, u)| w == worker && (f..u).contains(&step))
+    }
+
+    /// First gather of a round: pull every participant's reply from the
+    /// inner (blocking) transport once, then assign fates.
+    fn pull(&mut self) -> Result<()> {
+        let Some(round) = self.round else { return Ok(()) };
+        if self.pulled {
+            return Ok(());
+        }
+        self.pulled = true;
+        let parts = self.parts.clone();
+        let replies = self.inner.gather(&parts)?;
+        let mut fresh: Vec<(u32, Frame)> = Vec::new();
+        for (w, frame) in replies {
+            if self.in_blackout(w, round) {
+                continue; // vanished; resends vanish too
+            }
+            let u = Rng::for_stream(self.seed ^ FAULT_SALT, w as u64, round).uniform();
+            if u < self.drop_prob {
+                self.lost.push(Withheld { worker: w, step: round, frame, deliver_round: 0 });
+            } else if u < self.drop_prob + self.slow_prob {
+                self.slow.push(Withheld {
+                    worker: w,
+                    step: round,
+                    frame,
+                    deliver_round: round + 1,
+                });
+            } else {
+                fresh.push((w, frame));
+            }
+        }
+        // deterministic delivery order regardless of inner gather order
+        fresh.sort_by_key(|(w, _)| *w);
+        self.ready.extend(fresh);
+        Ok(())
+    }
+}
+
+impl<T: Transport> Transport for FaultyLink<T> {
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn is_real_time(&self) -> bool {
+        true
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        if frame.kind == FRAME_PARAMS {
+            let down = decode_round(frame)?;
+            self.round = Some(down.step);
+            self.parts = down.participants.clone();
+            self.pulled = false;
+            // slow frames whose delivery round has come surface now
+            let due: Vec<usize> = self
+                .slow
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.deliver_round <= down.step)
+                .map(|(i, _)| i)
+                .collect();
+            for i in due.into_iter().rev() {
+                let s = self.slow.remove(i);
+                self.ready.push((s.worker, s.frame));
+            }
+        }
+        self.inner.broadcast(frame)
+    }
+
+    fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
+        self.inner.gather(ids)
+    }
+
+    fn gather_until(
+        &mut self,
+        ids: &[u32],
+        _need: usize,
+        _deadline: Option<std::time::Duration>,
+    ) -> Result<Gathered> {
+        self.pull()?;
+        let mut arrived = Vec::new();
+        let mut keep = Vec::new();
+        for (w, frame) in self.ready.drain(..) {
+            if ids.contains(&w) {
+                arrived.push((w, frame));
+            } else {
+                keep.push((w, frame));
+            }
+        }
+        self.ready = keep;
+        Ok(Gathered { arrived, dead: Vec::new() })
+    }
+
+    fn send_to(&mut self, id: u32, frame: &Frame) -> Result<()> {
+        if frame.kind != FRAME_RESEND {
+            bail!("FaultyLink can only address workers with resend requests");
+        }
+        let (step, worker) = decode_resend(frame)?;
+        if worker != id {
+            bail!("resend for worker {worker} sent to worker {id}");
+        }
+        if self.in_blackout(id, step) {
+            return Ok(()); // the resend vanishes like the original
+        }
+        if let Some(pos) = self.lost.iter().position(|l| l.worker == id && l.step == step) {
+            self.resend_rolls += 1;
+            let u = Rng::for_stream(self.seed ^ RESEND_SALT ^ self.resend_rolls, id as u64, step)
+                .uniform();
+            if u >= self.resend_drop_prob {
+                let l = self.lost.remove(pos);
+                self.ready.push((l.worker, l.frame));
+            }
+            // else: the resent copy is lost too; a later attempt re-rolls
+        } else if let Some(s) = self.slow.iter().find(|s| s.worker == id && s.step == step) {
+            // the original is merely slow: the worker resends anyway —
+            // deliver a duplicate now, the original still arrives later
+            // (exercises the engine's duplicate discard)
+            let dup = s.frame.clone();
+            self.ready.push((id, dup));
+        }
+        // already delivered: the engine never resends for a frame it
+        // routed, so nothing to do
+        Ok(())
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.inner.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, encode_resend, encode_round};
+
+    /// Inner double: every broadcast queues one grad frame per
+    /// participant, payload = [worker, step].
+    struct Echo {
+        m: usize,
+        queued: Vec<(u32, Frame)>,
+    }
+
+    impl Transport for Echo {
+        fn workers(&self) -> usize {
+            self.m
+        }
+        fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+            if frame.kind == FRAME_PARAMS {
+                let down = engine::decode_round(frame).unwrap();
+                for &w in &down.participants {
+                    self.queued.push((w, Frame::grad(vec![w as u8, down.step as u8])));
+                }
+            }
+            Ok(())
+        }
+        fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
+            let mut out = Vec::new();
+            let mut keep = Vec::new();
+            for (w, f) in self.queued.drain(..) {
+                if ids.contains(&w) {
+                    out.push((w, f));
+                } else {
+                    keep.push((w, f));
+                }
+            }
+            self.queued = keep;
+            Ok(out)
+        }
+        fn shutdown(&mut self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    fn round_frame(step: u64, parts: &[u32]) -> Frame {
+        encode_round(step, parts, &[], &[], &[1.0])
+    }
+
+    #[test]
+    fn clean_link_delivers_everything_first_gather() {
+        let mut fl = FaultyLink::new(Echo { m: 3, queued: vec![] }, 7);
+        assert!(fl.is_real_time());
+        fl.broadcast(&round_frame(0, &[0, 1, 2])).unwrap();
+        let g = fl.gather_until(&[0, 1, 2], 3, None).unwrap();
+        assert_eq!(g.arrived.len(), 3);
+        // deterministic worker order
+        let ids: Vec<u32> = g.arrived.iter().map(|(w, _)| *w).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        // drained: the next gather is the "deadline expired" signal
+        assert!(fl.gather_until(&[0, 1, 2], 3, None).unwrap().arrived.is_empty());
+    }
+
+    #[test]
+    fn lost_frames_return_on_resend_and_replay_is_exact() {
+        let run = || {
+            let mut fl =
+                FaultyLink::new(Echo { m: 4, queued: vec![] }, 11).with_drop_prob(0.5);
+            let mut delivered = Vec::new();
+            for step in 0..6u64 {
+                fl.broadcast(&round_frame(step, &[0, 1, 2, 3])).unwrap();
+                let g = fl.gather_until(&[0, 1, 2, 3], 4, None).unwrap();
+                let mut ids: Vec<u32> = g.arrived.iter().map(|(w, _)| *w).collect();
+                // resend every missing reply: with resend_drop 0 they all return
+                for w in 0..4u32 {
+                    if !ids.contains(&w) {
+                        fl.send_to(w, &encode_resend(step, w)).unwrap();
+                    }
+                }
+                let g2 = fl.gather_until(&[0, 1, 2, 3], 4, None).unwrap();
+                ids.extend(g2.arrived.iter().map(|(w, _)| *w));
+                ids.sort_unstable();
+                assert_eq!(ids, vec![0, 1, 2, 3], "step {step}: every frame recovered");
+                delivered.push(ids);
+            }
+            delivered
+        };
+        assert_eq!(run(), run(), "seeded schedule must replay bit-exactly");
+    }
+
+    #[test]
+    fn slow_frames_arrive_next_round_with_resend_duplicates() {
+        let mut fl = FaultyLink::new(Echo { m: 2, queued: vec![] }, 3).with_slow_prob(1.0);
+        fl.broadcast(&round_frame(0, &[0, 1])).unwrap();
+        assert!(fl.gather_until(&[0, 1], 2, None).unwrap().arrived.is_empty());
+        // a resend for a slow frame yields a duplicate immediately…
+        fl.send_to(0, &encode_resend(0, 0)).unwrap();
+        let g = fl.gather_until(&[0, 1], 2, None).unwrap();
+        assert_eq!(g.arrived.len(), 1);
+        assert_eq!(g.arrived[0].0, 0);
+        // …and the originals still surface at the next round
+        fl.broadcast(&round_frame(1, &[0, 1])).unwrap();
+        let g = fl.gather_until(&[0, 1], 4, None).unwrap();
+        let from0 = g.arrived.iter().filter(|(w, _)| *w == 0).count();
+        let from1 = g.arrived.iter().filter(|(w, _)| *w == 1).count();
+        // worker 0: the slow original (its duplicate already came);
+        // worker 1: slow original; round-1 replies are slow again
+        assert_eq!((from0, from1), (1, 1));
+    }
+
+    #[test]
+    fn blackout_swallows_frames_and_resends() {
+        let mut fl = FaultyLink::new(Echo { m: 2, queued: vec![] }, 9).with_blackout(1, 0, 2);
+        fl.broadcast(&round_frame(0, &[0, 1])).unwrap();
+        let g = fl.gather_until(&[0, 1], 2, None).unwrap();
+        assert_eq!(g.arrived.len(), 1);
+        assert_eq!(g.arrived[0].0, 0);
+        fl.send_to(1, &encode_resend(0, 1)).unwrap();
+        assert!(fl.gather_until(&[0, 1], 1, None).unwrap().arrived.is_empty());
+        // after the window the worker's frames flow again
+        fl.broadcast(&round_frame(2, &[0, 1])).unwrap();
+        let g = fl.gather_until(&[0, 1], 2, None).unwrap();
+        assert_eq!(g.arrived.len(), 2);
+    }
+
+    #[test]
+    fn misaddressed_or_non_resend_sends_are_loud() {
+        let mut fl = FaultyLink::new(Echo { m: 2, queued: vec![] }, 1);
+        assert!(fl.send_to(0, &Frame::shutdown()).is_err());
+        assert!(fl.send_to(0, &encode_resend(0, 1)).is_err());
+    }
+}

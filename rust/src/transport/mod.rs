@@ -15,17 +15,25 @@
 //! protocol itself lives in exactly one place: [`crate::engine`].
 
 pub mod channel;
+pub mod faulty;
 pub mod local;
+pub mod poll;
 pub mod tcp;
+
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+pub use faulty::FaultyLink;
 pub use local::LocalStar;
 
 /// Frame kinds exchanged on the wire.
 pub const FRAME_PARAMS: u8 = 1;
 pub const FRAME_GRAD: u8 = 2;
 pub const FRAME_SHUTDOWN: u8 = 3;
+/// Leader → one worker: "your reply for round `step` never arrived —
+/// send it again" (see [`crate::engine::framing::encode_resend`]).
+pub const FRAME_RESEND: u8 = 4;
 
 /// A framed transport message.
 #[derive(Clone, Debug, PartialEq)]
@@ -46,26 +54,115 @@ impl Frame {
     }
 }
 
+/// What one [`Transport::gather_until`] call produced.
+#[derive(Debug, Default)]
+pub struct Gathered {
+    /// frames that arrived before the call returned, in arrival order
+    /// (may include replies to *earlier* rounds — the engine routes each
+    /// frame by the step embedded in it). Empty means the deadline
+    /// expired — or nothing can arrive any more — with no new frame.
+    pub arrived: Vec<(u32, Frame)>,
+    /// workers whose link died since the last report (EOF, write
+    /// failure, forged framing). Each dead worker is reported exactly
+    /// once, then silently skipped by broadcasts forever.
+    pub dead: Vec<u32>,
+}
+
 /// Leader-side view of a star topology: broadcast downstream, collect
 /// one reply per participating worker, signal shutdown. The round
 /// *protocol* (what the frames mean, who participates, in which order
 /// replies are applied) is owned by [`crate::engine::RoundEngine`]; a
 /// transport only moves frames.
+///
+/// Two timing models share this trait (selected by
+/// [`Transport::is_real_time`]):
+///
+/// * **virtual-time** (the default): [`Transport::gather`] blocks for
+///   every requested reply and the engine decides on-time/late with the
+///   deterministic [`crate::netsim::VirtualClock`] — the replayable
+///   simulation path (inline handlers, mpsc channels, benches, tests).
+/// * **real-time**: [`Transport::gather_until`] returns frames as they
+///   *actually* arrive, so a quorum-k round closes on the k-th real
+///   frame, and the engine's recovery layer (deadline → resend →
+///   exclude) handles loss and death — the TCP cluster path, and
+///   [`FaultyLink`] as its deterministic test double.
 pub trait Transport {
-    /// Number of attached workers M.
+    /// Number of attached workers M (fixed at construction; dead
+    /// workers still count toward M).
     fn workers(&self) -> usize;
 
-    /// Deliver `frame` to every worker.
+    /// Deliver `frame` to every worker. On a real-time transport a dead
+    /// worker is skipped silently (its death is reported through
+    /// [`Gathered::dead`]), so one crashed worker cannot fail the round.
     fn broadcast(&mut self, frame: &Frame) -> Result<()>;
 
-    /// Collect exactly one frame from each worker in `ids`. The returned
-    /// order is transport-specific (mpsc arrival order, socket id order,
-    /// …); callers must not derive semantics from it — the engine orders
-    /// replies by worker id and by the *simulated* clock instead.
+    /// Collect exactly one frame from each worker in `ids`, blocking
+    /// until all have arrived. The returned order is transport-specific
+    /// (mpsc arrival order, socket id order, …); callers must not derive
+    /// semantics from it — the engine orders replies by worker id and by
+    /// the *simulated* clock instead.
     fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>>;
+
+    /// Whether gathers report *real* arrivals ([`Transport::gather_until`]
+    /// semantics) rather than a blocking collection timed by the virtual
+    /// clock. Drives the engine's mode choice once, at construction.
+    fn is_real_time(&self) -> bool {
+        false
+    }
+
+    /// Event-driven collection: return as soon as `need` frames from
+    /// workers in `ids` have arrived, the `deadline` expires (`None` =
+    /// no deadline), or no requested worker can deliver anything any
+    /// more. May return more than `need` frames (batch reads) and may
+    /// include frames for earlier rounds; an **empty** `arrived` means
+    /// "nothing more will arrive by the deadline" and is the engine's
+    /// cue to start recovery. The default implementation is the
+    /// virtual-time fallback: one blocking [`Transport::gather`].
+    fn gather_until(
+        &mut self,
+        ids: &[u32],
+        need: usize,
+        deadline: Option<Duration>,
+    ) -> Result<Gathered> {
+        let _ = (need, deadline);
+        Ok(Gathered { arrived: self.gather(ids)?, dead: Vec::new() })
+    }
+
+    /// Deliver `frame` to a single worker (resend requests). Only
+    /// meaningful on real-time transports; the default errors loudly so
+    /// a misconfigured engine cannot silently drop recovery traffic.
+    fn send_to(&mut self, id: u32, frame: &Frame) -> Result<()> {
+        let _ = frame;
+        bail!("this transport cannot address worker {id} individually");
+    }
 
     /// Tell every worker the run is over.
     fn shutdown(&mut self) -> Result<()>;
+}
+
+/// Force the virtual-time lock-step path on any transport: inherits the
+/// default [`Transport::gather_until`]/[`Transport::is_real_time`], so
+/// the engine runs its blocking-gather protocol even over real sockets.
+/// The baseline arm of the event-driven-vs-blocking bench
+/// (`benches/async_transport.rs`) and a handy A/B double in tests.
+pub struct Blocking<T: Transport>(pub T);
+
+impl<T: Transport> Transport for Blocking<T> {
+    fn workers(&self) -> usize {
+        self.0.workers()
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        self.0.broadcast(frame)
+    }
+
+    fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
+        self.0.gather(ids)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.0.shutdown()
+    }
 }
 
 /// Worker-side counterpart of [`Transport`]: a single full-duplex link

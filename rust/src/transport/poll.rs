@@ -1,0 +1,158 @@
+//! Minimal `poll(2)` wrapper for the event-driven TCP leader.
+//!
+//! The hermetic build carries no `libc`/`mio`/`tokio`, so this module
+//! declares the one syscall wrapper the leader needs directly against
+//! the C library the standard library already links. Linux and macOS
+//! share the `struct pollfd` layout (`fd: c_int, events/revents:
+//! c_short`); only the `nfds_t` width differs, handled by the cfg'd
+//! type alias below.
+//!
+//! Readiness semantics: a fd is reported ready when it has data (or
+//! buffer space) available *or* is in a terminal state (`POLLERR` /
+//! `POLLHUP` / `POLLNVAL`) — either way the caller's next read/write
+//! will not block, and a terminal condition surfaces there as EOF or an
+//! error, which is exactly where the leader marks a worker dead.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+/// One entry of the `poll(2)` fd set (`#[repr(C)]`: this *is* the
+/// kernel's `struct pollfd`).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    fd: RawFd,
+    events: i16,
+    revents: i16,
+}
+
+impl PollFd {
+    /// Watch `fd` for readability (or a terminal condition).
+    pub fn readable(fd: RawFd) -> Self {
+        PollFd { fd, events: POLLIN, revents: 0 }
+    }
+
+    /// Watch `fd` for writability (or a terminal condition).
+    pub fn writable(fd: RawFd) -> Self {
+        PollFd { fd, events: POLLOUT, revents: 0 }
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Whether the last [`wait`] reported this fd ready: the requested
+    /// event fired, or the fd is in a terminal state the next I/O call
+    /// will surface.
+    pub fn is_ready(&self) -> bool {
+        self.revents & (self.events | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+}
+
+#[cfg(target_os = "macos")]
+type NfdsT = std::os::raw::c_uint;
+#[cfg(not(target_os = "macos"))]
+type NfdsT = std::os::raw::c_ulong;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: std::os::raw::c_int) -> std::os::raw::c_int;
+}
+
+/// Block until at least one fd in `fds` is ready, or `timeout` elapses
+/// (`None` = wait indefinitely). Returns the number of ready fds (0 on
+/// timeout); `revents` is filled in place — check [`PollFd::is_ready`].
+/// `EINTR` is retried. Sub-millisecond timeouts round up to 1 ms (the
+/// syscall's granularity) so a positive timeout never busy-spins.
+pub fn wait(fds: &mut [PollFd], timeout: Option<Duration>) -> io::Result<usize> {
+    if fds.is_empty() {
+        // poll(NULL, 0, ms) is a valid sleep, but a caller waiting
+        // forever on nothing is a bug — fail loudly instead of hanging
+        return match timeout {
+            Some(d) => {
+                std::thread::sleep(d);
+                Ok(0)
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "poll::wait on an empty fd set without a timeout would hang forever",
+            )),
+        };
+    }
+    let ms: i32 = match timeout {
+        None => -1,
+        Some(d) if d.is_zero() => 0,
+        Some(d) => d.as_millis().clamp(1, i32::MAX as u128) as i32,
+    };
+    loop {
+        let rv = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+        if rv >= 0 {
+            return Ok(rv as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn times_out_on_quiet_socket_then_wakes_on_data() {
+        let (mut a, b) = pair();
+        let mut fds = [PollFd::readable(b.as_raw_fd())];
+        let n = wait(&mut fds, Some(Duration::from_millis(10))).unwrap();
+        assert_eq!(n, 0, "no data yet");
+        assert!(!fds[0].is_ready());
+        a.write_all(b"x").unwrap();
+        a.flush().unwrap();
+        let n = wait(&mut fds, Some(Duration::from_millis(2000))).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].is_ready());
+    }
+
+    #[test]
+    fn reports_hangup_as_ready() {
+        let (a, b) = pair();
+        drop(a); // peer closes: POLLIN/POLLHUP — the read will see EOF
+        let mut fds = [PollFd::readable(b.as_raw_fd())];
+        let n = wait(&mut fds, Some(Duration::from_millis(2000))).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].is_ready());
+    }
+
+    #[test]
+    fn writable_socket_is_immediately_ready() {
+        let (a, _b) = pair();
+        let mut fds = [PollFd::writable(a.as_raw_fd())];
+        let n = wait(&mut fds, Some(Duration::from_millis(1000))).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].is_ready());
+    }
+
+    #[test]
+    fn empty_fd_set_needs_a_timeout() {
+        assert!(wait(&mut [], None).is_err());
+        assert_eq!(wait(&mut [], Some(Duration::from_millis(1))).unwrap(), 0);
+    }
+}

@@ -1,28 +1,58 @@
 //! TCP transport: length-framed frames over `std::net` sockets for the
 //! multi-process cluster mode. Frame layout: `kind(1) | len(4, LE) | payload`.
+//!
+//! The leader is **event-driven**: every worker socket is nonblocking
+//! and multiplexed with `poll(2)` ([`super::poll`]), with a per-peer
+//! receive buffer reassembling frames from partial reads. A
+//! [`Transport::gather_until`] therefore returns frames in *real*
+//! arrival order — a quorum-k round closes the moment the k-th frame is
+//! on the wire, not when the slowest participant's blocking read would
+//! have finished — and a worker whose socket dies (EOF, write stall,
+//! forged framing) is marked dead and reported once through
+//! [`Gathered::dead`] instead of failing the round. The worker side
+//! stays blocking: one socket, one protocol loop
+//! ([`crate::engine::run_worker`]).
 
-use std::io::{Read, Write};
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::{Frame, Transport, WorkerLink};
+use super::{poll, Frame, Gathered, Transport, WorkerLink};
 
+/// Upper bound on a declared frame length; a peer declaring more is
+/// taken for malicious/corrupt and its link is severed.
+const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// How long a broadcast write may stall on a full send buffer before
+/// the peer is declared dead (a worker that stops reading would
+/// otherwise wedge the whole cluster on one `write`).
+const WRITE_STALL: Duration = Duration::from_secs(5);
+
+fn frame_bytes(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + frame.payload.len());
+    out.push(frame.kind);
+    out.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&frame.payload);
+    out
+}
+
+/// Blocking frame write (worker side, hello handshake, tests).
 pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
-    let mut header = [0u8; 5];
-    header[0] = frame.kind;
-    header[1..5].copy_from_slice(&(frame.payload.len() as u32).to_le_bytes());
-    stream.write_all(&header)?;
-    stream.write_all(&frame.payload)?;
+    stream.write_all(&frame_bytes(frame))?;
     Ok(())
 }
 
+/// Blocking frame read (worker side, hello handshake, tests).
 pub fn read_frame(stream: &mut TcpStream) -> Result<Frame> {
     let mut header = [0u8; 5];
     stream.read_exact(&mut header).context("reading frame header")?;
     let kind = header[0];
     let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
-    if len > 1 << 30 {
+    if len > MAX_FRAME_BYTES {
         bail!("frame too large: {len}");
     }
     let mut payload = vec![0u8; len];
@@ -30,17 +60,44 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<Frame> {
     Ok(Frame { kind, payload })
 }
 
+/// Leader-side state for one worker connection.
+struct Peer {
+    stream: TcpStream,
+    /// partial-frame reassembly buffer (nonblocking reads)
+    rbuf: Vec<u8>,
+    /// complete frames received but not yet claimed by a gather
+    inbox: VecDeque<Frame>,
+    alive: bool,
+    /// death already surfaced through [`Gathered::dead`]
+    reported_dead: bool,
+}
+
+impl Peer {
+    fn new(stream: TcpStream) -> Result<Self> {
+        stream.set_nonblocking(true)?;
+        Ok(Peer {
+            stream,
+            rbuf: Vec::new(),
+            inbox: VecDeque::new(),
+            alive: true,
+            reported_dead: false,
+        })
+    }
+}
+
 /// Leader: binds and accepts exactly `m` worker connections. Workers
 /// identify themselves with a hello byte-frame carrying their id.
 pub struct TcpLeader {
-    streams: Vec<TcpStream>,
+    peers: Vec<Peer>,
 }
 
 impl TcpLeader {
-    /// Assemble a leader from already-accepted worker streams (ordered by
-    /// worker id) — used when the caller owns the accept loop.
-    pub fn from_streams(streams: Vec<TcpStream>) -> Self {
-        TcpLeader { streams }
+    /// Assemble a leader from already-accepted worker streams (ordered
+    /// by worker id) — used when the caller owns the accept loop. The
+    /// streams are switched to nonblocking here.
+    pub fn from_streams(streams: Vec<TcpStream>) -> Result<Self> {
+        let peers = streams.into_iter().map(Peer::new).collect::<Result<_>>()?;
+        Ok(TcpLeader { peers })
     }
 
     pub fn bind_and_accept(addr: &str, m: usize) -> Result<(Self, String)> {
@@ -50,6 +107,8 @@ impl TcpLeader {
         for _ in 0..m {
             let (mut s, _) = listener.accept()?;
             s.set_nodelay(true)?;
+            // hello is read in blocking mode; the stream goes
+            // nonblocking once it joins the peer set
             let hello = read_frame(&mut s)?;
             if hello.payload.len() != 4 {
                 bail!("malformed worker hello: {} payload bytes, want 4", hello.payload.len());
@@ -60,56 +119,256 @@ impl TcpLeader {
             }
             streams[id] = Some(s);
         }
-        Ok((TcpLeader { streams: streams.into_iter().map(Option::unwrap).collect() }, local))
+        let leader = Self::from_streams(streams.into_iter().map(Option::unwrap).collect())?;
+        Ok((leader, local))
     }
 
-    pub fn broadcast(&mut self, frame: &Frame) -> Result<()> {
-        for s in &mut self.streams {
-            write_frame(s, frame)?;
-        }
-        Ok(())
+    /// Live workers (diagnostics; M itself never shrinks).
+    pub fn alive(&self) -> usize {
+        self.peers.iter().filter(|p| p.alive).count()
     }
 
-    /// One frame from every worker (in worker order).
-    pub fn gather(&mut self) -> Result<Vec<Frame>> {
-        let mut out = Vec::with_capacity(self.streams.len());
-        for s in &mut self.streams {
-            out.push(read_frame(s)?);
+    /// Read everything the kernel has for peer `i` and reassemble
+    /// complete frames into its inbox. Returns the number of new frames.
+    fn read_peer(&mut self, i: usize) -> usize {
+        let peer = &mut self.peers[i];
+        let mut buf = [0u8; 65536];
+        loop {
+            match peer.stream.read(&mut buf) {
+                Ok(0) => {
+                    peer.alive = false;
+                    break;
+                }
+                Ok(n) => peer.rbuf.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    peer.alive = false;
+                    break;
+                }
+            }
         }
-        Ok(out)
+        let before = peer.inbox.len();
+        loop {
+            if peer.rbuf.len() < 5 {
+                break;
+            }
+            let len = u32::from_le_bytes(peer.rbuf[1..5].try_into().unwrap()) as usize;
+            if len > MAX_FRAME_BYTES {
+                // forged length: sever the link rather than allocate
+                peer.alive = false;
+                peer.rbuf.clear();
+                break;
+            }
+            if peer.rbuf.len() < 5 + len {
+                break;
+            }
+            let kind = peer.rbuf[0];
+            let payload = peer.rbuf[5..5 + len].to_vec();
+            peer.rbuf.drain(..5 + len);
+            peer.inbox.push_back(Frame { kind, payload });
+        }
+        peer.inbox.len() - before
+    }
+
+    /// Wait (at most `timeout`; `None` = indefinitely) for readable
+    /// worker sockets and ingest them. Returns the number of newly
+    /// completed frames; 0 means the timeout expired, a read completed
+    /// no frame, or no peer is left alive.
+    fn pump(&mut self, timeout: Option<Duration>) -> Result<usize> {
+        let mut idxs = Vec::new();
+        let mut fds = Vec::new();
+        for (i, p) in self.peers.iter().enumerate() {
+            if p.alive {
+                idxs.push(i);
+                fds.push(poll::PollFd::readable(p.stream.as_raw_fd()));
+            }
+        }
+        if fds.is_empty() {
+            return Ok(0);
+        }
+        if poll::wait(&mut fds, timeout)? == 0 {
+            return Ok(0);
+        }
+        let mut new_frames = 0;
+        for (slot, fd) in fds.iter().enumerate() {
+            if fd.is_ready() {
+                new_frames += self.read_peer(idxs[slot]);
+            }
+        }
+        Ok(new_frames)
+    }
+
+    /// Write `bytes` to peer `i`, waiting out short send-buffer stalls;
+    /// a peer whose write has not *completed* within [`WRITE_STALL`]
+    /// (total, not per poll — a peer draining one byte at a time must
+    /// not stretch the bound), or that errors, is marked dead (reported
+    /// at the next gather), never an `Err` — one crashed or wedged
+    /// worker must not fail a broadcast.
+    fn write_peer(&mut self, i: usize, bytes: &[u8]) {
+        if !self.peers[i].alive {
+            return;
+        }
+        let start = Instant::now();
+        let mut off = 0;
+        while off < bytes.len() {
+            let peer = &mut self.peers[i];
+            if start.elapsed() >= WRITE_STALL {
+                peer.alive = false;
+                return;
+            }
+            match peer.stream.write(&bytes[off..]) {
+                Ok(0) => {
+                    peer.alive = false;
+                    return;
+                }
+                Ok(n) => off += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    let mut fds = [poll::PollFd::writable(peer.stream.as_raw_fd())];
+                    let remaining = WRITE_STALL.saturating_sub(start.elapsed());
+                    match poll::wait(&mut fds, Some(remaining)) {
+                        Ok(n) if n > 0 => {}
+                        _ => {
+                            peer.alive = false;
+                            return;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    peer.alive = false;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drain_dead(&mut self) -> Vec<u32> {
+        let mut dead = Vec::new();
+        for (i, p) in self.peers.iter_mut().enumerate() {
+            if !p.alive && !p.reported_dead {
+                p.reported_dead = true;
+                dead.push(i as u32);
+            }
+        }
+        dead
+    }
+
+    fn drain_inboxes(&mut self, ids: &[u32], out: &mut Vec<(u32, Frame)>) {
+        for &id in ids {
+            if let Some(peer) = self.peers.get_mut(id as usize) {
+                while let Some(f) = peer.inbox.pop_front() {
+                    out.push((id, f));
+                }
+            }
+        }
     }
 }
 
 impl Transport for TcpLeader {
     fn workers(&self) -> usize {
-        self.streams.len()
+        self.peers.len()
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {
-        TcpLeader::broadcast(self, frame)
+        let bytes = frame_bytes(frame);
+        for i in 0..self.peers.len() {
+            self.write_peer(i, &bytes);
+        }
+        Ok(())
     }
 
-    /// Each participant sends exactly one frame per round, so reading
-    /// the per-worker sockets in id order is arrival-order agnostic —
-    /// the engine's virtual clock decides the *simulated* arrival order.
+    fn is_real_time(&self) -> bool {
+        true
+    }
+
+    /// Event-driven collection: poll every live socket, reassemble
+    /// frames, and return once `need` frames from `ids` have arrived,
+    /// the deadline expires, or every requested worker is dead. Never
+    /// blocks on one slow socket while another has data ready.
+    fn gather_until(
+        &mut self,
+        ids: &[u32],
+        need: usize,
+        deadline: Option<Duration>,
+    ) -> Result<Gathered> {
+        let start = Instant::now();
+        let mut arrived = Vec::new();
+        loop {
+            self.drain_inboxes(ids, &mut arrived);
+            if arrived.len() >= need {
+                break;
+            }
+            let any_live = ids
+                .iter()
+                .any(|&id| self.peers.get(id as usize).is_some_and(|p| p.alive));
+            if !any_live {
+                break;
+            }
+            let remaining = match deadline {
+                Some(d) => {
+                    let r = d.saturating_sub(start.elapsed());
+                    if r.is_zero() {
+                        break;
+                    }
+                    Some(r)
+                }
+                None => None,
+            };
+            self.pump(remaining)?;
+        }
+        Ok(Gathered { arrived, dead: self.drain_dead() })
+    }
+
+    /// Lock-step emulation on the event-driven machinery: block until
+    /// every worker in `ids` has delivered exactly one frame. A worker
+    /// dying mid-gather is an error here (the legacy contract); the
+    /// engine's recovery path uses [`Transport::gather_until`] instead.
     fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
-        ids.iter()
-            .map(|&id| {
-                let s = self
-                    .streams
-                    .get_mut(id as usize)
-                    .ok_or_else(|| anyhow!("no stream for worker {id}"))?;
-                Ok((id, read_frame(s)?))
-            })
-            .collect()
+        let mut slots: Vec<Option<Frame>> = (0..ids.len()).map(|_| None).collect();
+        let mut extras: Vec<(u32, Frame)> = Vec::new();
+        let mut remaining: Vec<u32> = ids.to_vec();
+        while !remaining.is_empty() {
+            let g = self.gather_until(&remaining, remaining.len(), None)?;
+            let mut progressed = false;
+            for (id, frame) in g.arrived {
+                let slot = ids.iter().position(|&i| i == id).unwrap();
+                if slots[slot].is_none() {
+                    slots[slot] = Some(frame);
+                    progressed = true;
+                } else {
+                    extras.push((id, frame));
+                }
+            }
+            remaining.retain(|&id| slots[ids.iter().position(|&i| i == id).unwrap()].is_none());
+            if !remaining.is_empty() && !progressed {
+                bail!("worker(s) {remaining:?} disconnected mid-gather");
+            }
+        }
+        // frames beyond the one-per-worker contract go back to their
+        // inboxes, ahead of anything that arrived later
+        for (id, frame) in extras.into_iter().rev() {
+            self.peers[id as usize].inbox.push_front(frame);
+        }
+        Ok(ids.iter().copied().zip(slots.into_iter().map(Option::unwrap)).collect())
+    }
+
+    fn send_to(&mut self, id: u32, frame: &Frame) -> Result<()> {
+        if (id as usize) >= self.peers.len() {
+            bail!("no stream for worker {id}");
+        }
+        let bytes = frame_bytes(frame);
+        self.write_peer(id as usize, &bytes);
+        Ok(())
     }
 
     fn shutdown(&mut self) -> Result<()> {
-        TcpLeader::broadcast(self, &Frame::shutdown())
+        self.broadcast(&Frame::shutdown())
     }
 }
 
-/// Worker: connects and sends its id as a hello.
+/// Worker: connects and sends its id as a hello. Blocking — the worker
+/// protocol loop is strictly sequential.
 pub struct TcpWorker {
     stream: TcpStream,
     id: u32,
@@ -151,51 +410,131 @@ mod tests {
     use super::*;
     use crate::transport::{params_from_bytes, params_to_bytes, FRAME_SHUTDOWN};
 
+    fn accept_n(listener: &TcpListener, n: usize) -> TcpLeader {
+        let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (mut s, _) = listener.accept().unwrap();
+            let hello = read_frame(&mut s).unwrap();
+            let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
+            streams[id] = Some(s);
+        }
+        TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect()).unwrap()
+    }
+
     #[test]
     fn loopback_round() {
-        // leader thread owns accept; workers connect from spawned threads
-        let listener_thread = std::thread::spawn(|| {
-            let (leader, addr) = {
-                // bind on an ephemeral port, then share it via a channel
-                let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-                let addr = listener.local_addr().unwrap().to_string();
-                (listener, addr)
-            };
-            // hand the address to workers
-            let addr2 = addr.clone();
-            let workers: Vec<_> = (0..3u32)
-                .map(|id| {
-                    let a = addr2.clone();
-                    std::thread::spawn(move || {
-                        let mut w = TcpWorker::connect(&a, id).unwrap();
-                        let f = w.recv().unwrap();
-                        let p = params_from_bytes(&f.payload).unwrap();
-                        let sum: f32 = p.iter().sum();
-                        w.send(&Frame::grad(params_to_bytes(&[sum + id as f32]))).unwrap();
-                        assert_eq!(w.recv().unwrap().kind, FRAME_SHUTDOWN);
-                    })
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let workers: Vec<_> = (0..3u32)
+            .map(|id| {
+                let a = addr.clone();
+                std::thread::spawn(move || {
+                    let mut w = TcpWorker::connect(&a, id).unwrap();
+                    let f = w.recv().unwrap();
+                    let p = params_from_bytes(&f.payload).unwrap();
+                    let sum: f32 = p.iter().sum();
+                    w.send(&Frame::grad(params_to_bytes(&[sum + id as f32]))).unwrap();
+                    assert_eq!(w.recv().unwrap().kind, FRAME_SHUTDOWN);
                 })
-                .collect();
-            // accept exactly 3
-            let mut streams: Vec<Option<TcpStream>> = vec![None, None, None];
-            for _ in 0..3 {
-                let (mut s, _) = leader.accept().unwrap();
-                let hello = read_frame(&mut s).unwrap();
-                let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
-                streams[id] = Some(s);
+            })
+            .collect();
+        let mut tl = accept_n(&listener, 3);
+        tl.broadcast(&Frame::params(params_to_bytes(&[1.0, 2.0]))).unwrap();
+        let replies = tl.gather(&[0, 1, 2]).unwrap();
+        for (id, f) in &replies {
+            assert_eq!(params_from_bytes(&f.payload).unwrap(), vec![3.0 + *id as f32]);
+        }
+        tl.shutdown().unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn gather_until_closes_on_kth_arrival_without_the_straggler() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let workers: Vec<_> = (0..3u32)
+            .map(|id| {
+                let a = addr.clone();
+                std::thread::spawn(move || {
+                    let mut w = TcpWorker::connect(&a, id).unwrap();
+                    let _ = w.recv().unwrap();
+                    if id == 2 {
+                        // straggler: replies long after the quorum closes
+                        std::thread::sleep(Duration::from_millis(300));
+                    }
+                    w.send(&Frame::grad(vec![id as u8])).unwrap();
+                    assert_eq!(w.recv().unwrap().kind, FRAME_SHUTDOWN);
+                })
+            })
+            .collect();
+        let mut tl = accept_n(&listener, 3);
+        let t0 = Instant::now();
+        tl.broadcast(&Frame::params(params_to_bytes(&[0.5]))).unwrap();
+        let g = tl.gather_until(&[0, 1, 2], 2, Some(Duration::from_secs(10))).unwrap();
+        assert!(g.arrived.len() >= 2, "{:?}", g.arrived);
+        assert!(!g.arrived.iter().any(|(id, _)| *id == 2), "straggler beat the quorum close");
+        assert!(
+            t0.elapsed() < Duration::from_millis(250),
+            "quorum close waited for the straggler: {:?}",
+            t0.elapsed()
+        );
+        // the straggler's frame is not lost: it arrives on a later gather
+        let g2 = tl.gather_until(&[2], 1, Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(g2.arrived.len(), 1);
+        assert_eq!(g2.arrived[0].1.payload, vec![2u8]);
+        tl.shutdown().unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dead_worker_is_reported_once_and_skipped_after() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let live = {
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                let mut w = TcpWorker::connect(&a, 0).unwrap();
+                let _ = w.recv().unwrap();
+                w.send(&Frame::grad(vec![7])).unwrap();
+                assert_eq!(w.recv().unwrap().kind, FRAME_SHUTDOWN);
+            })
+        };
+        let dying = {
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                // connect, hello, then vanish without replying
+                let _w = TcpWorker::connect(&a, 1).unwrap();
+            })
+        };
+        dying.join().unwrap();
+        let mut tl = accept_n(&listener, 2);
+        tl.broadcast(&Frame::params(params_to_bytes(&[1.0]))).unwrap();
+        // worker 1's socket is closed: the gather returns worker 0's
+        // frame and reports 1 dead instead of hanging or erroring
+        let mut got0 = false;
+        let mut dead1 = 0;
+        for _ in 0..10 {
+            let g = tl.gather_until(&[0, 1], 2, Some(Duration::from_millis(200))).unwrap();
+            got0 |= g.arrived.iter().any(|(id, _)| *id == 0);
+            dead1 += g.dead.iter().filter(|d| **d == 1).count();
+            if got0 && dead1 > 0 {
+                break;
             }
-            let mut tl = TcpLeader { streams: streams.into_iter().map(Option::unwrap).collect() };
-            tl.broadcast(&Frame::params(params_to_bytes(&[1.0, 2.0]))).unwrap();
-            let replies = tl.gather().unwrap();
-            for (id, f) in replies.iter().enumerate() {
-                assert_eq!(params_from_bytes(&f.payload).unwrap(), vec![3.0 + id as f32]);
-            }
-            tl.broadcast(&Frame::shutdown()).unwrap();
-            for w in workers {
-                w.join().unwrap();
-            }
-        });
-        listener_thread.join().unwrap();
+        }
+        assert!(got0, "live worker's frame never arrived");
+        assert_eq!(dead1, 1, "dead worker must be reported exactly once");
+        assert_eq!(tl.alive(), 1);
+        // a second gather on the dead worker returns immediately, empty
+        let g = tl.gather_until(&[1], 1, None).unwrap();
+        assert!(g.arrived.is_empty());
+        assert!(g.dead.is_empty());
+        // broadcasts (incl. shutdown) skip the corpse without erroring
+        tl.shutdown().unwrap();
+        live.join().unwrap();
     }
 
     #[test]
@@ -212,6 +551,31 @@ mod tests {
         write_frame(&mut c, &sent).unwrap();
         let got = read_frame(&mut c).unwrap();
         assert_eq!(got, sent);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn partial_writes_reassemble_into_whole_frames() {
+        // dribble a frame byte-by-byte: the peer buffer must reassemble
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_nodelay(true).unwrap();
+            write_frame(&mut s, &Frame { kind: 0, payload: 0u32.to_le_bytes().to_vec() }).unwrap();
+            let bytes = frame_bytes(&Frame::grad(vec![1, 2, 3, 4, 5]));
+            for b in bytes {
+                s.write_all(&[b]).unwrap();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            // hold the socket open until the leader has read everything
+            let _ = read_frame(&mut s);
+        });
+        let mut tl = accept_n(&listener, 1);
+        let g = tl.gather_until(&[0], 1, Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(g.arrived.len(), 1);
+        assert_eq!(g.arrived[0].1, Frame::grad(vec![1, 2, 3, 4, 5]));
+        tl.shutdown().unwrap();
         t.join().unwrap();
     }
 }

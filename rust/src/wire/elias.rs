@@ -136,7 +136,8 @@ mod tests {
     fn random_roundtrip_both_codes() {
         let mut rng = crate::tensor::Rng::new(7);
         for _ in 0..50 {
-            let vals: Vec<u64> = (0..200).map(|_| 1 + (rng.next_u64() >> (rng.below(50) + 14))).collect();
+            let vals: Vec<u64> =
+                (0..200).map(|_| 1 + (rng.next_u64() >> (rng.below(50) + 14))).collect();
             let mut w = BitWriter::new();
             for &v in &vals {
                 gamma_encode(&mut w, v);

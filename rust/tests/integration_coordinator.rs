@@ -155,7 +155,8 @@ fn tcp_cluster_round_trip() {
         let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
         streams[id] = Some(s);
     }
-    let leader = TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect());
+    let leader =
+        TcpLeader::from_streams(streams.into_iter().map(Option::unwrap).collect()).unwrap();
 
     let mut cfg = TrainConfig::default();
     cfg.method = Method::TopK;

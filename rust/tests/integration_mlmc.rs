@@ -156,7 +156,8 @@ fn mean_wire_cost_tracks_schedule() {
     let costs: Vec<u64> = (0..200).map(|_| stopk.compress(&v, &mut rng).wire_bits()).collect();
     assert!(costs.iter().all(|c| *c == costs[0]), "s-Top-k cost varies: {costs:?}");
     let fxp = Mlmc::new(Box::new(MlFixedPoint::default()), Schedule::Default);
-    let mean: f64 = (0..2000).map(|_| fxp.compress(&v, &mut rng).wire_bits() as f64).sum::<f64>() / 2000.0;
+    let mean: f64 =
+        (0..2000).map(|_| fxp.compress(&v, &mut rng).wire_bits() as f64).sum::<f64>() / 2000.0;
     let form = mlmc_dist::wire::expected_cost_fixed_point_mlmc(2000, 32) as f64;
     assert!((mean - form).abs() / form < 0.1, "{mean} vs {form}");
 }

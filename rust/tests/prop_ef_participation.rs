@@ -215,9 +215,10 @@ fn full_participation_stays_bit_identical_with_ack_plumbing() {
 #[test]
 fn mixed_version_round_frames_are_rejected() {
     // (c): versioned decode — see also engine/framing.rs unit tests
-    let f = engine::encode_round(3, &[0, 1], &[], &[1.0, 2.0]);
+    let f = engine::encode_round(3, &[0, 1], &[], &[], &[1.0, 2.0]);
     assert_eq!(f.payload[0], engine::ROUND_FRAME_VERSION);
-    for other in [0u8, 1, engine::ROUND_FRAME_VERSION + 1] {
+    // 0xA2 is the retired v2 byte — a v2 node in a v3 cluster is loud
+    for other in [0u8, 1, 0xA2, engine::ROUND_FRAME_VERSION + 1] {
         let mut forged = f.clone();
         forged.payload[0] = other;
         let err = engine::decode_round(&forged).unwrap_err().to_string();

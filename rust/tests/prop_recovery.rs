@@ -1,0 +1,229 @@
+//! Dropped-message recovery and worker exclusion (ISSUE 4), proven
+//! deterministically with [`FaultyLink`] — the lossy-FIFO test double
+//! that drives the engine's real-time path (deadline → resend →
+//! give-up → exclude → re-admit) without a wall clock:
+//!
+//! (a) **No stall** — under seeded drop/delay schedules with failing
+//!     resends, every round terminates: the recovery ladder is bounded
+//!     by `resend_max`, so a lost reply can never hang a quorum round.
+//! (b) **Loss-free bit-identity** — when every frame eventually
+//!     arrives (drops recovered by resend, slow frames by resend
+//!     duplicates), the recovered run is **bit-identical** to the
+//!     clean virtual-time lock-step run, for stateless and stateful
+//!     (EF14/EF21-SGDM) encoders alike, uplink accounting included.
+//! (c) **Exclusion shadow consistency** — a worker whose uplink blacks
+//!     out is excluded after `exclude_after` strikes, its never-received
+//!     increments are acked `Dropped` (rolling its EF21 shadow back
+//!     exactly as far as the server never applied), and after the
+//!     re-admission probe succeeds its local shadow still matches the
+//!     server's per-worker shadow bit for bit (extends the PR 3
+//!     worker==server shadow property to the lossy world).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use mlmc_dist::compress::TopK;
+use mlmc_dist::config::{Method, TrainConfig};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
+use mlmc_dist::ef::{AggKind, Ef21Sgdm, GradientEncoder};
+use mlmc_dist::engine::{self, Compute, RoundEngine};
+use mlmc_dist::optim::Sgd;
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::train::synthetic::Quadratic;
+use mlmc_dist::transport::FaultyLink;
+
+fn assert_bit_identical(name: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{name}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name}: differ at {i}: {x} vs {y}");
+    }
+}
+
+/// Per-worker quadratic compute closures through the standard encoder
+/// registry — the same construction for the clean and the faulty run.
+fn quad_computes<'a>(problem: &'a Quadratic, cfg: &'a TrainConfig) -> Vec<Compute<'a>> {
+    (0..cfg.workers)
+        .map(|w| {
+            engine::compute_with_acks(
+                build_encoder(cfg, problem.d),
+                |enc, ack| enc.on_ack(ack),
+                move |enc, step, params| {
+                    let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                    let g = problem.grad(w, params, &mut rng);
+                    Ok((0.0, enc.encode(&g, &mut rng)))
+                },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn lossy_quorum_rounds_never_stall() {
+    // (a): heavy seeded faults — drops, delays, failing resends — and a
+    // live exclusion policy; every round must close via the bounded
+    // ladder (running to completion IS the property: FaultyLink has no
+    // wall clock, so an unbounded wait would loop forever / overflow
+    // the routing cap and error loudly).
+    let m = 4;
+    let d = 16;
+    let problem = Quadratic::new(d, m, 0.05, 1.0, 21);
+    let mut cfg = TrainConfig::default();
+    cfg.workers = m;
+    cfg.method = Method::TopK;
+    cfg.steps = 50;
+    cfg.set("participation", "quorum").unwrap();
+    cfg.set("quorum", "2").unwrap();
+    cfg.set("exclude_after", "3").unwrap();
+    cfg.set("readmit_every", "5").unwrap();
+    cfg.set("resend_max", "2").unwrap();
+    cfg.validate().unwrap();
+    let transport = FaultyLink::new(engine::local_star(quad_computes(&problem, &cfg)), 77)
+        .with_drop_prob(0.3)
+        .with_slow_prob(0.25)
+        .with_resend_drop_prob(0.5);
+    let server =
+        Server::new(vec![0.0; d], Box::new(Sgd { lr: 0.05 }), agg_kind(&cfg.method));
+    let mut eng = RoundEngine::from_cfg(transport, server, &cfg).unwrap();
+    let (mut resent, mut gave_up, mut faults, mut max_excluded) = (0usize, 0usize, 0usize, 0usize);
+    for _ in 0..cfg.steps {
+        let rep = eng.run_round().unwrap();
+        assert!(rep.on_time <= rep.participants, "on-time replies come from participants");
+        resent += rep.resent;
+        gave_up += rep.gave_up;
+        faults += rep.late + rep.applied_stale + rep.dropped_stale + rep.gave_up;
+        max_excluded = max_excluded.max(rep.excluded);
+    }
+    eng.shutdown().unwrap();
+    // the seeded schedule must actually exercise the machinery
+    assert!(faults > 0, "fault schedule never perturbed a round");
+    assert!(resent > 0, "recovery ladder never sent a resend");
+    assert!(gave_up > 0, "failing resends never forced a give-up");
+    assert!(max_excluded > 0, "strike policy never excluded a worker");
+}
+
+#[test]
+fn recovered_runs_are_bit_identical_to_loss_free_runs() {
+    // (b): full participation, every frame eventually arrives (lost →
+    // recovered by resend within the round, slow → recovered via the
+    // worker's resend duplicate). The faulty event-driven run must
+    // reproduce the clean virtual-time run bit for bit — params AND
+    // uplink accounting — for stateless and EF-stateful methods alike.
+    let m = 3;
+    let d = 48;
+    let problem = Quadratic::new(d, m, 0.05, 0.8, 19);
+    for name in ["sgd", "topk", "mlmc-topk", "ef14", "ef21-sgdm"] {
+        let mut cfg = TrainConfig::default();
+        cfg.workers = m;
+        cfg.method = Method::parse(name).unwrap();
+        cfg.steps = 25;
+        cfg.frac_pm = 100;
+        cfg.lr = 0.05;
+        cfg.seed = 5;
+        cfg.validate().unwrap();
+        let run = |faulty: bool| {
+            let star = engine::local_star(quad_computes(&problem, &cfg));
+            let server = Server::new(
+                vec![0.0; d],
+                Box::new(Sgd { lr: cfg.lr }),
+                agg_kind(&cfg.method),
+            );
+            let (params, bits, gave_up) = if faulty {
+                let transport = FaultyLink::new(star, 13)
+                    .with_drop_prob(0.4)
+                    .with_slow_prob(0.25);
+                let mut eng = RoundEngine::from_cfg(transport, server, &cfg).unwrap();
+                let mut gave_up = 0;
+                for _ in 0..cfg.steps {
+                    gave_up += eng.run_round().unwrap().gave_up;
+                }
+                let s = eng.finish().unwrap();
+                (s.params.clone(), s.total_bits, gave_up)
+            } else {
+                let mut eng = RoundEngine::from_cfg(star, server, &cfg).unwrap();
+                for _ in 0..cfg.steps {
+                    eng.run_round().unwrap();
+                }
+                let s = eng.finish().unwrap();
+                (s.params.clone(), s.total_bits, 0)
+            };
+            (params, bits, gave_up)
+        };
+        let (clean_params, clean_bits, _) = run(false);
+        let (faulty_params, faulty_bits, gave_up) = run(true);
+        assert_eq!(gave_up, 0, "{name}: a frame was given up — not a loss-free schedule");
+        assert_eq!(clean_bits, faulty_bits, "{name}: uplink accounting diverged");
+        assert_bit_identical(name, &clean_params, &faulty_params);
+    }
+}
+
+#[test]
+fn excluded_worker_shadow_consistent_through_readmission() {
+    // (c): worker 3's uplink blacks out for rounds 5..15 under full
+    // participation with EF21-SGDM (Accumulate). It must be excluded
+    // after 2 strikes, every never-received increment acked Dropped
+    // (rolling its shadow back), re-admitted by the first post-blackout
+    // probe, and at the end every worker's local shadow — the
+    // blacked-out one included — must equal the server's per-worker
+    // shadow bit for bit.
+    const M: usize = 4;
+    const D: usize = 24;
+    const STEPS: usize = 25;
+    let mut cfg = TrainConfig::default();
+    cfg.workers = M;
+    cfg.set("exclude_after", "2").unwrap();
+    cfg.set("readmit_every", "3").unwrap();
+    cfg.set("resend_max", "1").unwrap();
+    cfg.validate().unwrap();
+    let encs: Vec<Rc<RefCell<Ef21Sgdm>>> = (0..M)
+        .map(|_| Rc::new(RefCell::new(Ef21Sgdm::new(Box::new(TopK { k: 4 }), D, 0.1))))
+        .collect();
+    let computes: Vec<Compute<'_>> = (0..M)
+        .map(|w| {
+            engine::compute_with_acks(
+                encs[w].clone(),
+                |enc, ack| enc.borrow_mut().on_ack(ack),
+                move |enc, step, _params| {
+                    let mut grng = Rng::for_stream(7, w as u64, step);
+                    let g: Vec<f32> = (0..D).map(|_| grng.normal() as f32).collect();
+                    let mut crng = Rng::for_stream(11, w as u64, step);
+                    Ok((0.0, enc.borrow_mut().encode(&g, &mut crng)))
+                },
+            )
+        })
+        .collect();
+    let transport =
+        FaultyLink::new(engine::local_star(computes), 1).with_blackout(3, 5, 15);
+    let server = Server::new(vec![0.0; D], Box::new(Sgd { lr: 0.05 }), AggKind::Accumulate);
+    let mut eng = RoundEngine::from_cfg(transport, server, &cfg).unwrap();
+    let (mut resent, mut gave_up, mut saw_excluded) = (0usize, 0usize, false);
+    let mut excluded_rounds = 0usize;
+    for _ in 0..STEPS {
+        let rep = eng.run_round().unwrap();
+        resent += rep.resent;
+        gave_up += rep.gave_up;
+        saw_excluded |= rep.excluded > 0;
+        if rep.excluded > 0 {
+            excluded_rounds += 1;
+        }
+    }
+    assert!(resent > 0, "blackout never triggered a resend");
+    assert!(gave_up > 0, "blackout never forced a give-up");
+    assert!(saw_excluded, "strikes never excluded the blacked-out worker");
+    assert!(excluded_rounds < STEPS, "worker was never re-admitted");
+    assert!(
+        eng.excluded_workers().is_empty(),
+        "post-blackout probe must have re-admitted worker 3"
+    );
+    let server = eng.finish().unwrap();
+    for (w, enc) in encs.iter().enumerate() {
+        let server_shadow = server
+            .worker_shadow(w)
+            .unwrap_or_else(|| panic!("no server shadow for worker {w}"));
+        let worker_shadow = enc.borrow().shadow().to_vec();
+        assert_bit_identical(&format!("worker {w}"), &worker_shadow, server_shadow);
+    }
+    // worker 3 really lost mass to the blackout: its shadow reflects
+    // only the increments the server applied, not everything it sent
+    let w3_sent_all_applied = encs[3].borrow().shadow().iter().all(|v| *v == 0.0);
+    assert!(!w3_sent_all_applied, "worker 3's applied increments should leave a nonzero shadow");
+}
