@@ -697,7 +697,7 @@ impl<T: Transport> RoundEngine<T> {
         let down_bits = 32 * self.server.params.len() as u64;
         self.transport.broadcast(&down)?;
 
-        let col = if self.real {
+        let mut col = if self.real {
             self.collect_real(step, &parts)?
         } else {
             self.collect_virtual(step, &parts, down_bits)?
