@@ -1,0 +1,159 @@
+//! Participation-policy benchmark: **fixed-k vs adaptive-k simulated
+//! round time** per cost-model preset, through the real `RoundEngine`
+//! over the inline transport.
+//!
+//! Every policy sees byte-identical messages (Top-k on a fixed
+//! synthetic gradient → constant wire bits), so per (step, worker) the
+//! simulated arrival times are identical across policies and the
+//! comparison is exact: the adaptive elbow can never close a round
+//! *after* the last arrival, hence `adaptive <= fixed_full` per round by
+//! construction — asserted below for the `hetero` preset with
+//! stragglers, and recorded in the JSON CI tracks.
+//!
+//! Emits `results/BENCH_policy.json`. Smoke mode (CI):
+//! `POLICY_BENCH_D=50000 cargo bench -p mlmc-dist --bench policy`.
+
+use mlmc_dist::config::{Method, TrainConfig};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
+use mlmc_dist::engine::{local_star, Compute, RoundEngine};
+use mlmc_dist::netsim::cost;
+use mlmc_dist::tensor::Rng;
+
+const M: usize = 8;
+const ROUNDS: usize = 24;
+
+/// (row label, participation knob, fixed k when quorum)
+const POLICIES: &[(&str, &str, usize)] = &[
+    ("fixed_full", "full", 0),
+    ("fixed_majority", "quorum", M / 2 + 1),
+    ("adaptive", "adaptive", 0),
+];
+
+fn cfg_for(policy: &str, k: usize, preset: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.method = Method::TopK;
+    cfg.workers = M;
+    cfg.frac_pm = 10;
+    cfg.set("participation", policy).unwrap();
+    if k > 0 {
+        cfg.set("quorum", &k.to_string()).unwrap();
+    }
+    cfg.set("link", preset).unwrap();
+    cfg.set("straggler", "0.05").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Engine over the inline star with a fixed synthetic gradient: message
+/// bits are constant, so simulated arrivals are identical across
+/// policies and only the close rule differs.
+fn build_engine<'a>(
+    cfg: &'a TrainConfig,
+    grad: &'a [f32],
+) -> RoundEngine<mlmc_dist::transport::LocalStar<'a>> {
+    let d = grad.len();
+    let computes: Vec<Compute<'a>> = (0..cfg.workers)
+        .map(|w| {
+            mlmc_dist::engine::compute_with_acks(
+                build_encoder(cfg, d),
+                |enc, ack| enc.on_ack(ack),
+                move |enc, step, _params| {
+                    let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                    Ok((0.0, enc.encode(grad, &mut rng)))
+                },
+            )
+        })
+        .collect();
+    let server = Server::new(
+        vec![0.0; d],
+        Box::new(mlmc_dist::optim::Sgd { lr: 0.01 }),
+        agg_kind(&cfg.method),
+    );
+    RoundEngine::from_cfg(local_star(computes), server, cfg).unwrap()
+}
+
+fn main() {
+    let d: usize = std::env::var("POLICY_BENCH_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let mut rng = Rng::new(1);
+    let mut grad = vec![0.0f32; d];
+    rng.fill_normal(&mut grad, 1.0);
+    println!("policy bench: d={d} M={M} rounds={ROUNDS} straggler=50ms");
+    println!(
+        "{:<16} {:<16} {:>16} {:>14}",
+        "preset", "policy", "mean sim round", "total sim"
+    );
+
+    // rows[preset][policy] = (mean_round_s, total_s)
+    let mut rows: Vec<(String, Vec<(String, f64, f64)>)> = Vec::new();
+    for &preset in cost::preset_names() {
+        let mut cells = Vec::new();
+        for &(label, policy, k) in POLICIES {
+            let cfg = cfg_for(policy, k, preset);
+            let mut eng = build_engine(&cfg, &grad);
+            let mut total = 0.0;
+            for _ in 0..ROUNDS {
+                total += eng.run_round().unwrap().sim_round_s;
+            }
+            eng.shutdown().unwrap();
+            let mean = total / ROUNDS as f64;
+            println!("{preset:<16} {label:<16} {mean:>15.6}s {total:>13.4}s");
+            cells.push((label.to_string(), mean, total));
+        }
+        rows.push((preset.to_string(), cells));
+    }
+
+    // the acceptance property: on hetero-with-stragglers the adaptive
+    // close is never slower than fixed k = M (identical arrivals, the
+    // elbow never waits past the last one)
+    let cell = |preset: &str, policy: &str| {
+        rows.iter()
+            .find(|(p, _)| p == preset)
+            .and_then(|(_, cs)| cs.iter().find(|(l, ..)| l == policy))
+            .map(|&(_, mean, _)| mean)
+            .expect("bench grid covers every (preset, policy) cell")
+    };
+    for &preset in cost::preset_names() {
+        let (adaptive, full) = (cell(preset, "adaptive"), cell(preset, "fixed_full"));
+        assert!(
+            adaptive <= full + 1e-12,
+            "{preset}: adaptive mean round {adaptive} slower than fixed_full {full}"
+        );
+    }
+    let speedup = cell("hetero", "fixed_full") / cell("hetero", "adaptive");
+    println!("hetero adaptive speedup vs fixed k=M: {speedup:.3}x");
+
+    write_json(d, &rows, speedup);
+}
+
+fn write_json(d: usize, rows: &[(String, Vec<(String, f64, f64)>)], speedup: f64) {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"suite\": \"policy\",");
+    let _ = writeln!(s, "  \"d\": {d},");
+    let _ = writeln!(s, "  \"workers\": {M},");
+    let _ = writeln!(s, "  \"rounds\": {ROUNDS},");
+    let _ = writeln!(s, "  \"straggler_s\": 0.05,");
+    s.push_str("  \"mean_sim_round_s\": {\n");
+    for (i, (preset, cells)) in rows.iter().enumerate() {
+        let _ = write!(s, "    {preset:?}: {{");
+        for (j, (label, mean, _)) in cells.iter().enumerate() {
+            let comma = if j + 1 < cells.len() { ", " } else { "" };
+            let _ = write!(s, "{label:?}: {mean:.9}{comma}");
+        }
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(s, "}}{comma}");
+    }
+    s.push_str("  },\n");
+    let _ = writeln!(s, "  \"hetero_adaptive_speedup_vs_fixed_full\": {speedup:.4},");
+    let _ = writeln!(s, "  \"adaptive_leq_fixed_full\": true");
+    s.push_str("}\n");
+    let path = mlmc_dist::util::results_dir().join("BENCH_policy.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

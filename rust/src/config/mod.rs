@@ -96,7 +96,8 @@ impl fmt::Display for Method {
     }
 }
 
-/// Round participation policy (engine-level; see [`crate::engine`]).
+/// Round participation policy (engine-level; the strategy objects live
+/// in [`crate::engine::policy`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Participation {
     /// today's lock-step behavior: every worker, every round
@@ -107,6 +108,11 @@ pub enum Participation {
     /// client sampling: a deterministic `(seed, step)` draw of
     /// `ceil(sample_frac * M)` workers participates each round
     Sampled,
+    /// adaptive quorum: k is chosen per round at the elbow of the
+    /// observed arrival CDF (never below majority), so the round closes
+    /// just before the straggler tail — deterministic under the cost
+    /// model's virtual clock
+    Adaptive,
 }
 
 impl Participation {
@@ -115,12 +121,13 @@ impl Participation {
             "full" | "fullsync" => Participation::Full,
             "quorum" => Participation::Quorum,
             "sampled" => Participation::Sampled,
+            "adaptive" => Participation::Adaptive,
             _ => return None,
         })
     }
 
     pub fn all_names() -> &'static [&'static str] {
-        &["full", "quorum", "sampled"]
+        &["full", "quorum", "sampled", "adaptive"]
     }
 }
 
@@ -130,6 +137,7 @@ impl fmt::Display for Participation {
             Participation::Full => "full",
             Participation::Quorum => "quorum",
             Participation::Sampled => "sampled",
+            Participation::Adaptive => "adaptive",
         })
     }
 }
@@ -149,6 +157,11 @@ pub enum Staleness {
     Full,
     /// discard stale gradients entirely
     Drop,
+    /// momentum-style geometric damping: scale by `stale_decay^age`,
+    /// so a gradient's influence decays exponentially with its age
+    /// (the staleness *correction* comparator of the ROADMAP — compare
+    /// against `damp` on the quorum scenarios via `figure scenario`)
+    Exp,
 }
 
 impl Staleness {
@@ -157,12 +170,13 @@ impl Staleness {
             "damp" => Staleness::Damp,
             "full" => Staleness::Full,
             "drop" => Staleness::Drop,
+            "exp" => Staleness::Exp,
             _ => return None,
         })
     }
 
     pub fn all_names() -> &'static [&'static str] {
-        &["damp", "full", "drop"]
+        &["damp", "full", "drop", "exp"]
     }
 }
 
@@ -172,6 +186,7 @@ impl fmt::Display for Staleness {
             Staleness::Damp => "damp",
             Staleness::Full => "full",
             Staleness::Drop => "drop",
+            Staleness::Exp => "exp",
         })
     }
 }
@@ -219,14 +234,28 @@ pub struct TrainConfig {
     pub quorum: usize,
     /// participating fraction for `participation = sampled`, in (0, 1]
     pub sample_frac: f32,
-    /// stale-`Fresh`-gradient policy ("damp" | "full" | "drop");
+    /// stale-`Fresh`-gradient policy ("damp" | "full" | "drop" | "exp");
     /// `Accumulate` increments always apply at full weight
     pub staleness: Staleness,
-    /// netsim link preset for the virtual clock
-    /// ("datacenter" | "edge" | "hetero")
+    /// geometric decay factor for `staleness = exp` (weight =
+    /// `stale_decay^age`), in (0, 1)
+    pub stale_decay: f32,
+    /// netsim cost-model preset
+    /// ("datacenter" | "edge" | "hetero" | "hetero-compute")
     pub link: String,
     /// mean of the seeded exponential straggler delay, seconds (0 = off)
     pub straggler: f64,
+    /// base per-step gradient-compute seconds in the cost model.
+    /// `0` = use the link preset's built-in term as-is (`hetero-compute`
+    /// is the only preset with a nonzero one); an explicit value
+    /// **replaces the preset's whole compute term**, spread included —
+    /// pass `compute_spread` too to keep heterogeneity
+    pub compute: f64,
+    /// per-worker compute slowdown spread: worker compute time is
+    /// `compute * f_w` with a seeded `f_w` in `[1, compute_spread]`
+    /// (1 = homogeneous compute; > 1 requires an explicit `compute` —
+    /// with `compute = 0` the preset's built-in term applies unchanged)
+    pub compute_spread: f64,
     /// real-time (TCP) rounds: seconds to wait for replies before the
     /// recovery ladder starts (0 = wait indefinitely; recovery then
     /// only fires for provably-unreachable workers). Each resend
@@ -270,8 +299,11 @@ impl Default for TrainConfig {
             quorum: 0,
             sample_frac: 0.5,
             staleness: Staleness::Damp,
+            stale_decay: 0.5,
             link: "datacenter".into(),
             straggler: 0.0,
+            compute: 0.0,
+            compute_spread: 1.0,
             round_timeout: 0.0,
             resend_max: 2,
             exclude_after: 0,
@@ -327,8 +359,11 @@ impl TrainConfig {
                     )
                 })?
             }
+            "stale_decay" => self.stale_decay = p(val, key)?,
             "link" => self.link = val.to_string(),
             "straggler" => self.straggler = p(val, key)?,
+            "compute" => self.compute = p(val, key)?,
+            "compute_spread" => self.compute_spread = p(val, key)?,
             "round_timeout" => self.round_timeout = p(val, key)?,
             "resend_max" => self.resend_max = p(val, key)?,
             "exclude_after" => self.exclude_after = p(val, key)?,
@@ -394,15 +429,32 @@ impl TrainConfig {
         {
             return Err("sample_frac must be in (0, 1]".into());
         }
-        if !crate::netsim::clock::preset_names().contains(&self.link.as_str()) {
+        if !crate::netsim::cost::preset_names().contains(&self.link.as_str()) {
             return Err(format!(
                 "unknown link preset {:?} (known: {:?})",
                 self.link,
-                crate::netsim::clock::preset_names()
+                crate::netsim::cost::preset_names()
             ));
         }
         if !(self.straggler >= 0.0 && self.straggler.is_finite()) {
             return Err("straggler must be a finite number of seconds >= 0".into());
+        }
+        if !(self.compute >= 0.0 && self.compute.is_finite()) {
+            return Err("compute must be a finite number of seconds >= 0".into());
+        }
+        if !(self.compute_spread >= 1.0 && self.compute_spread.is_finite()) {
+            return Err("compute_spread must be a finite factor >= 1".into());
+        }
+        if self.compute_spread > 1.0 && self.compute == 0.0 {
+            // the spread scales the explicit compute term; with compute=0
+            // the preset's built-in (base, spread) applies unchanged and
+            // the knob would be silently dropped
+            return Err("compute_spread needs an explicit compute > 0 (compute = 0 uses the \
+                        link preset's built-in compute term as-is)"
+                .into());
+        }
+        if !(self.stale_decay > 0.0 && self.stale_decay < 1.0) {
+            return Err("stale_decay must be in (0, 1)".into());
         }
         if !(self.round_timeout >= 0.0 && self.round_timeout.is_finite()) {
             return Err("round_timeout must be a finite number of seconds >= 0".into());
@@ -463,6 +515,7 @@ impl TrainConfig {
             Participation::Sampled => {
                 scenario.push_str(&format!("_samp{:.0}", self.sample_frac * 100.0))
             }
+            Participation::Adaptive => scenario.push_str("_adapt"),
         }
         if self.link != "datacenter" {
             scenario.push_str(&format!("_{}", self.link));
@@ -470,8 +523,19 @@ impl TrainConfig {
         if self.straggler > 0.0 {
             scenario.push_str(&format!("_str{:.0}ms", self.straggler * 1e3));
         }
+        if self.compute > 0.0 {
+            scenario.push_str(&format!("_comp{:.0}ms", self.compute * 1e3));
+            if self.compute_spread > 1.0 {
+                // full precision: x1.5 and x2.4 must not collide
+                scenario.push_str(&format!("x{}", self.compute_spread));
+            }
+        }
         if self.staleness != Staleness::Damp {
             scenario.push_str(&format!("_stale{}", self.staleness));
+            if self.staleness == Staleness::Exp {
+                // full precision: 0.505 and 0.51 must not collide
+                scenario.push_str(&format!("{}", self.stale_decay));
+            }
         }
         if self.round_timeout > 0.0 {
             scenario.push_str(&format!("_to{:.0}ms", self.round_timeout * 1e3));
@@ -672,6 +736,78 @@ mod tests {
         assert!((cfg.round_timeout - 2.0).abs() < 1e-12);
         assert_eq!((cfg.resend_max, cfg.exclude_after, cfg.readmit_every), (1, 3, 5));
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn adaptive_participation_parses_validates_and_names_runs() {
+        let mut c = TrainConfig::default();
+        c.set("participation", "adaptive").unwrap();
+        assert_eq!(c.participation, Participation::Adaptive);
+        c.validate().unwrap();
+        assert!(c.run_id().ends_with("_adapt"), "{}", c.run_id());
+        // round-trips through TOML like every other policy
+        let cfg = TrainConfig::from_toml("[train]\nparticipation = \"adaptive\"\n").unwrap();
+        assert_eq!(cfg.participation, Participation::Adaptive);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn compute_knobs_parse_validate_and_name_runs() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.compute, 0.0);
+        assert_eq!(c.compute_spread, 1.0);
+        c.set("compute", "0.02").unwrap();
+        c.set("compute_spread", "4").unwrap();
+        c.set("link", "hetero-compute").unwrap();
+        c.validate().unwrap();
+        assert!((c.compute - 0.02).abs() < 1e-12);
+        assert!((c.compute_spread - 4.0).abs() < 1e-12);
+        // nonzero compute changes trajectories: own CSV namespace, and
+        // the spread is part of it (it changes arrival order too)
+        assert!(c.run_id().contains("_hetero-compute_comp20msx4"), "{}", c.run_id());
+        // fractional spreads keep full precision (x1.5 != x2.4)
+        c.set("compute_spread", "1.5").unwrap();
+        assert!(c.run_id().contains("_comp20msx1.5"), "{}", c.run_id());
+        c.set("compute_spread", "1").unwrap();
+        assert!(c.run_id().contains("_comp20ms"), "{}", c.run_id());
+        assert!(!c.run_id().contains("x1"), "{}", c.run_id());
+        // bad values are loud
+        assert!(c.set("compute", "banana").is_err());
+        c.set("compute", "-1").unwrap();
+        assert!(c.validate().is_err());
+        c.set("compute", "0").unwrap();
+        c.set("compute_spread", "0.5").unwrap();
+        assert!(c.validate().is_err());
+        // a spread with no explicit compute would be silently dropped
+        // (the preset's built-in term applies unchanged) — reject it
+        c.set("compute_spread", "4").unwrap();
+        assert!(c.validate().is_err());
+        c.set("compute", "0.01").unwrap();
+        c.validate().unwrap();
+        // and round-trip through TOML
+        let cfg = TrainConfig::from_toml("[train]\ncompute = 0.05\ncompute_spread = 2.0\n")
+            .unwrap();
+        assert!((cfg.compute - 0.05).abs() < 1e-12);
+        assert!((cfg.compute_spread - 2.0).abs() < 1e-12);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn exp_staleness_and_decay_knob() {
+        let mut c = TrainConfig::default();
+        c.set("staleness", "exp").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.staleness, Staleness::Exp);
+        assert!((c.stale_decay - 0.5).abs() < 1e-7, "default decay");
+        assert!(c.run_id().ends_with("_staleexp0.5"), "{}", c.run_id());
+        c.set("stale_decay", "0.9").unwrap();
+        c.validate().unwrap();
+        assert!(c.run_id().ends_with("_staleexp0.9"), "{}", c.run_id());
+        // decay must be a proper fraction
+        c.set("stale_decay", "1.0").unwrap();
+        assert!(c.validate().is_err());
+        c.set("stale_decay", "0").unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]

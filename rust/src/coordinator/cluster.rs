@@ -76,6 +76,7 @@ pub fn leader_main(args: &[String]) -> Result<()> {
     let task = Task::for_model(&model, 42);
 
     println!("leader: waiting for {} workers on {addr}", cfg.workers);
+    println!("leader: scenario {}", crate::coordinator::scenario_legend(&cfg));
     let (leader, local) = TcpLeader::bind_and_accept(&addr, cfg.workers)?;
     println!("leader: cluster up at {local}");
 

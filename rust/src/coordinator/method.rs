@@ -149,6 +149,7 @@ pub fn scenario_legend(cfg: &TrainConfig) -> String {
         Participation::Sampled => {
             parts.push(format!("sampled {:.0}%", cfg.sample_frac * 100.0))
         }
+        Participation::Adaptive => parts.push("adaptive quorum".into()),
     }
     if cfg.link != "datacenter" {
         parts.push(cfg.link.clone());
@@ -156,8 +157,19 @@ pub fn scenario_legend(cfg: &TrainConfig) -> String {
     if cfg.straggler > 0.0 {
         parts.push(format!("straggler {:.0}ms", cfg.straggler * 1e3));
     }
+    if cfg.compute > 0.0 {
+        if cfg.compute_spread > 1.0 {
+            parts.push(format!("compute {:.0}ms x{}", cfg.compute * 1e3, cfg.compute_spread));
+        } else {
+            parts.push(format!("compute {:.0}ms", cfg.compute * 1e3));
+        }
+    }
     if cfg.staleness != crate::config::Staleness::Damp {
-        parts.push(format!("stale-{}", cfg.staleness));
+        if cfg.staleness == crate::config::Staleness::Exp {
+            parts.push(format!("stale-exp({:.2})", cfg.stale_decay));
+        } else {
+            parts.push(format!("stale-{}", cfg.staleness));
+        }
     }
     if cfg.round_timeout > 0.0 {
         parts.push(format!("timeout {:.0}ms", cfg.round_timeout * 1e3));
@@ -268,6 +280,30 @@ mod tests {
         cfg.set("link", "datacenter").unwrap();
         cfg.set("straggler", "0").unwrap();
         assert_eq!(scenario_legend(&cfg), "Top-k [sampled 25%]");
+    }
+
+    #[test]
+    fn scenario_legend_reflects_policy_and_cost_knobs() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("method", "topk").unwrap();
+        cfg.set("participation", "adaptive").unwrap();
+        cfg.set("link", "hetero-compute").unwrap();
+        cfg.set("compute", "0.02").unwrap();
+        cfg.set("compute_spread", "4").unwrap();
+        assert_eq!(
+            scenario_legend(&cfg),
+            "Top-k [adaptive quorum, hetero-compute, compute 20ms x4]"
+        );
+        // homogeneous compute: no misleading x1 suffix (matches run_id)
+        cfg.set("compute_spread", "1").unwrap();
+        assert_eq!(
+            scenario_legend(&cfg),
+            "Top-k [adaptive quorum, hetero-compute, compute 20ms]"
+        );
+        let mut cfg = TrainConfig::default();
+        cfg.set("method", "topk").unwrap();
+        cfg.set("staleness", "exp").unwrap();
+        assert_eq!(scenario_legend(&cfg), "Top-k [stale-exp(0.50)]");
     }
 
     #[test]

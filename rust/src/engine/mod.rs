@@ -9,12 +9,16 @@
 //! biased-vs-unbiased compression trade-offs actually bite (stragglers,
 //! partial participation, heterogeneous links):
 //!
-//! * **Participation policies** ([`crate::config::Participation`]):
-//!   `Full` (bit-identical to the seed lock-step loop), `Quorum { k }`
-//!   (proceed once k messages have arrived; late messages are applied
-//!   next round — `Fresh` gradients with staleness damping,
-//!   `Accumulate` increments always at full weight), and `Sampled`
-//!   (a deterministic `(seed, step)` draw of clients per round).
+//! * **Participation policies** ([`policy`]): every which-workers /
+//!   when-does-the-round-close / how-much-does-a-late-message-count
+//!   decision lives behind the [`ParticipationPolicy`] trait — `full`
+//!   (bit-identical to the seed lock-step loop), `quorum` k (proceed
+//!   once k messages have arrived; late messages are applied next round
+//!   — `Fresh` gradients per the policy's [`StaleWeight`] strategy,
+//!   `Accumulate` increments always at full weight), `sampled` (a
+//!   deterministic `(seed, step)` draw of clients per round), and
+//!   `adaptive` (k chosen per round at the elbow of the observed
+//!   arrival CDF). The engine itself never inspects the policy kind.
 //! * **Per-worker acks** ([`crate::ef::AckEntry`]): every message a
 //!   worker sends is acknowledged in a later broadcast — applied (at
 //!   what weight), deferred, or dropped — so stateful error-feedback
@@ -29,9 +33,9 @@
 //!
 //! * **Virtual time** (inline handlers, mpsc channels): every round is
 //!   one broadcast + one blocking gather; lateness is decided by the
-//!   deterministic [`crate::netsim::VirtualClock`], which keeps every
-//!   policy fully replayable. This path is bit-identical to the PR 2/3
-//!   engine.
+//!   deterministic [`crate::netsim::CostModel`] (download + per-worker
+//!   compute + upload + straggler), which keeps every policy fully
+//!   replayable. This path is bit-identical to the PR 2/3 engine.
 //! * **Real time** (the TCP leader, [`crate::transport::FaultyLink`] as
 //!   its deterministic test double): a quorum-k round closes the moment
 //!   the k-th *real* frame arrives, and a recovery layer handles the
@@ -65,10 +69,14 @@
 //!   resolution.
 
 pub mod framing;
+pub mod policy;
 
 pub use framing::{
     decode_reply, decode_reply_from, decode_resend, decode_round, encode_reply, encode_resend,
     encode_round, Reply, RoundDown, ROUND_FRAME_VERSION,
+};
+pub use policy::{
+    participants, Arrival, CloseRule, ParticipationPolicy, StaleAction, StaleWeight,
 };
 
 use std::collections::VecDeque;
@@ -77,17 +85,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::compress::Compressed;
-use crate::config::{Participation, Staleness, TrainConfig};
+use crate::config::TrainConfig;
 use crate::coordinator::{RoundMsg, Server};
 use crate::ef::{AckEntry, AckStatus, AggKind};
-use crate::netsim::VirtualClock;
-use crate::tensor::Rng;
+use crate::netsim::CostModel;
 use crate::transport::{
     Frame, LocalStar, Transport, WorkerLink, FRAME_PARAMS, FRAME_RESEND, FRAME_SHUTDOWN,
 };
-
-/// Stream salt for the client-sampling draw.
-const SAMPLE_SALT: u64 = 0x5E1EC7;
 
 /// Real-time mode: a reply still owed after this many rounds is given
 /// up (acked `Dropped`) even when no newer frame from its sender proves
@@ -106,43 +110,14 @@ const GIVE_UP_MEMORY: u64 = 32;
 /// flooding peer gets itself severed without collateral damage.
 const MAX_ROUTED_PER_WORKER: u32 = 10_000;
 
-/// Deterministic participant set for `(seed, step)`: a pure function,
-/// identical on every node (workers read the set from the round frame;
-/// tests call this directly). `Full` and `Quorum` involve everyone —
-/// quorum lateness is decided at gather time, not here. Exclusion is
-/// engine state, applied on top by [`RoundEngine::participants_at`].
-pub fn participants(
-    participation: Participation,
-    sample_frac: f32,
-    seed: u64,
-    step: u64,
-    m: usize,
-) -> Vec<u32> {
-    match participation {
-        Participation::Full | Participation::Quorum => (0..m as u32).collect(),
-        Participation::Sampled => {
-            // ceil, as documented on `Participation::Sampled`: a 30% draw
-            // over M=4 means 2 clients, never fewer than the fraction
-            let k = ((m as f64 * sample_frac as f64).ceil() as usize).clamp(1, m);
-            let mut rng = Rng::for_stream(seed ^ SAMPLE_SALT, 0, step);
-            let mut ids = rng.choose_k(m, k);
-            ids.sort_unstable();
-            ids
-        }
-    }
-}
-
-/// Engine policy + clock bundle (usually built via
-/// [`RoundEngine::from_cfg`]).
+/// Engine policy + cost-model bundle (usually built via
+/// [`RoundEngine::from_cfg`]; inject a custom strategy with
+/// [`RoundEngine::with_policy`]).
 pub struct EngineOpts {
-    pub seed: u64,
-    pub participation: Participation,
-    /// effective quorum size k (only read when `participation == Quorum`)
-    pub quorum: usize,
-    pub sample_frac: f32,
-    /// stale-`Fresh`-gradient policy (Accumulate increments are exempt)
-    pub staleness: Staleness,
-    pub clock: VirtualClock,
+    /// the participation strategy: participant draw, round close, stale
+    /// weighting ([`policy`] module)
+    pub policy: Box<dyn ParticipationPolicy>,
+    pub cost: CostModel,
     /// real-time mode: seconds to wait before starting recovery
     /// (0 = wait indefinitely; recovery then only triggers for workers
     /// proven unreachable). Each resend attempt gets a fresh window.
@@ -161,9 +136,10 @@ pub struct EngineOpts {
 
 /// A message that missed its round's quorum deadline, keyed by its
 /// sender. Resolved at the start of the next round: `Fresh` gradients
-/// per the [`Staleness`] policy (and deduped against the sender's own
-/// on-time reply), EF21-family `Accumulate` increments always at full
-/// weight. Whatever happens is acknowledged back to the worker.
+/// per the policy's [`StaleWeight`] strategy (and deduped against the
+/// sender's own on-time reply), EF21-family `Accumulate` increments
+/// always at full weight. Whatever happens is acknowledged back to the
+/// worker.
 struct PendingMsg {
     worker: u32,
     sent_step: u64,
@@ -273,16 +249,8 @@ impl<T: Transport> RoundEngine<T> {
         if m == 0 {
             bail!("round engine needs at least one worker");
         }
-        if opts.clock.workers() != m {
-            bail!("virtual clock has {} workers, transport has {m}", opts.clock.workers());
-        }
-        if opts.participation == Participation::Quorum && !(1..=m).contains(&opts.quorum) {
-            bail!("quorum {} out of range 1..={m}", opts.quorum);
-        }
-        if opts.participation == Participation::Sampled
-            && !(opts.sample_frac > 0.0 && opts.sample_frac <= 1.0)
-        {
-            bail!("sample_frac {} out of range (0, 1]", opts.sample_frac);
+        if opts.cost.workers() != m {
+            bail!("cost model has {} workers, transport has {m}", opts.cost.workers());
         }
         if !(opts.round_timeout >= 0.0 && opts.round_timeout.is_finite()) {
             bail!("round_timeout {} must be a finite number of seconds >= 0", opts.round_timeout);
@@ -309,26 +277,39 @@ impl<T: Transport> RoundEngine<T> {
         })
     }
 
-    /// Build policy + clock from the config's round knobs
-    /// (`participation` / `quorum` / `sample_frac` / `link` /
-    /// `straggler` / `round_timeout` / `resend_max` / `exclude_after` /
-    /// `readmit_every`), sized to the transport's worker count.
+    /// Build policy + cost model from the config's round knobs
+    /// (`participation` / `quorum` / `sample_frac` / `staleness` /
+    /// `stale_decay` / `link` / `straggler` / `compute` /
+    /// `compute_spread` / `round_timeout` / `resend_max` /
+    /// `exclude_after` / `readmit_every`), sized to the transport's
+    /// worker count.
     pub fn from_cfg(transport: T, server: Server, cfg: &TrainConfig) -> Result<Self> {
         let m = transport.workers();
-        let Some(clock) = VirtualClock::from_preset(&cfg.link, m, cfg.straggler, cfg.seed) else {
-            bail!(
-                "unknown link preset {:?} (known: {:?})",
-                cfg.link,
-                crate::netsim::clock::preset_names()
-            );
+        let policy = policy::from_cfg(cfg, m)?;
+        Self::with_policy(transport, server, cfg, policy)
+    }
+
+    /// Like [`Self::from_cfg`] but with an explicitly injected
+    /// participation strategy (the config's `participation` /
+    /// `quorum` / `sample_frac` / staleness knobs are ignored — the
+    /// policy object owns those decisions). This is the extension point
+    /// for custom round-close or stale-weighting strategies.
+    pub fn with_policy(
+        transport: T,
+        server: Server,
+        cfg: &TrainConfig,
+        policy: Box<dyn ParticipationPolicy>,
+    ) -> Result<Self> {
+        let m = transport.workers();
+        let cost = CostModel::from_preset(&cfg.link, m, cfg.straggler, cfg.seed)?;
+        let cost = if cfg.compute > 0.0 {
+            cost.with_compute(cfg.compute, cfg.compute_spread)
+        } else {
+            cost
         };
         let opts = EngineOpts {
-            seed: cfg.seed,
-            participation: cfg.participation,
-            quorum: cfg.effective_quorum_of(m),
-            sample_frac: cfg.sample_frac,
-            staleness: cfg.staleness,
-            clock,
+            policy,
+            cost,
             round_timeout: cfg.round_timeout,
             resend_max: cfg.resend_max,
             exclude_after: cfg.exclude_after,
@@ -361,7 +342,7 @@ impl<T: Transport> RoundEngine<T> {
         if self.real {
             self.wall_now_s
         } else {
-            self.opts.clock.now_s()
+            self.opts.cost.now_s()
         }
     }
 
@@ -374,17 +355,11 @@ impl<T: Transport> RoundEngine<T> {
     }
 
     /// The participant set this engine would use at `step`: the policy
-    /// draw ([`participants`]) minus dead and excluded workers, with an
-    /// excluded worker re-included every `readmit_every` rounds as a
-    /// re-admission probe.
+    /// draw ([`ParticipationPolicy::draw`]) minus dead and excluded
+    /// workers, with an excluded worker re-included every
+    /// `readmit_every` rounds as a re-admission probe.
     pub fn participants_at(&self, step: u64) -> Vec<u32> {
-        let mut base = participants(
-            self.opts.participation,
-            self.opts.sample_frac,
-            self.opts.seed,
-            step,
-            self.transport.workers(),
-        );
+        let mut base = self.opts.policy.draw(step, self.transport.workers());
         base.retain(|&w| {
             let wi = w as usize;
             if self.dead[wi] {
@@ -502,7 +477,8 @@ impl<T: Transport> RoundEngine<T> {
     }
 
     /// Virtual-time collection: one blocking gather, lateness decided by
-    /// the virtual clock. Bit-identical to the pre-recovery engine.
+    /// the cost model + the policy's close rule. Bit-identical to the
+    /// pre-refactor engine for the `full`/`quorum`/`sampled` policies.
     fn collect_virtual(&mut self, step: u64, parts: &[u32], down_bits: u64) -> Result<Collected> {
         let mut replies = self
             .transport
@@ -515,28 +491,55 @@ impl<T: Transport> RoundEngine<T> {
             replies.iter().map(|r| r.loss as f64).sum::<f64>() / replies.len().max(1) as f64;
 
         // simulated arrival of every reply
-        let arrivals: Vec<f64> = replies
+        let observed: Vec<Arrival> = replies
             .iter()
-            .map(|r| self.opts.clock.arrival_s(step, r.worker, r.comp.wire_bits(), down_bits))
+            .map(|r| Arrival {
+                worker: r.worker,
+                at_s: self.opts.cost.arrival_s(step, r.worker, r.comp.wire_bits(), down_bits),
+            })
             .collect();
-        // the round lasts until the policy's deadline: the k-th smallest
-        // arrival under quorum, the last arrival otherwise. Ties at the
+        // the round lasts until the policy's deadline: a `Count(k)` rule
+        // closes at the k-th smallest arrival (the last arrival when
+        // k saturates), an `AtTime` rule at that instant. Ties at the
         // deadline are all on time (>= k on-time messages is fine).
-        let deadline = match self.opts.participation {
-            Participation::Quorum if self.opts.quorum < arrivals.len() => {
-                let mut sorted = arrivals.clone();
-                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                sorted[self.opts.quorum - 1]
+        let deadline = match self.opts.policy.close_at(step, &observed) {
+            CloseRule::AtTime(t) => t,
+            // a round can never close on zero replies — the config path
+            // validates quorum >= 1, so this only fires for a buggy
+            // injected policy, and it must fail as loudly as the old
+            // construction-time check did
+            CloseRule::Count(0) => {
+                bail!("policy {:?} returned CloseRule::Count(0)", self.opts.policy.name())
             }
-            _ => arrivals.iter().copied().fold(0.0, f64::max),
+            CloseRule::Count(k) => {
+                if k < observed.len() {
+                    let mut sorted: Vec<f64> = observed.iter().map(|a| a.at_s).collect();
+                    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    sorted[k - 1]
+                } else {
+                    observed.iter().map(|a| a.at_s).fold(0.0, f64::max)
+                }
+            }
         };
         let mut col = Collected { mean_loss, round_s: deadline, ..Default::default() };
-        for (reply, arrival) in replies.into_iter().zip(&arrivals) {
-            if *arrival <= deadline {
+        for (reply, arrival) in replies.into_iter().zip(&observed) {
+            if arrival.at_s <= deadline {
                 col.on_time.push(reply);
             } else {
                 col.defer.push(reply);
             }
+        }
+        // same zero-replies contract as the Count(0) guard: every sane
+        // close rule admits at least the earliest arrival — an AtTime
+        // before it would defer everything, step the optimizer on an
+        // empty aggregate, and advance time by 0 forever
+        if col.on_time.is_empty() && !observed.is_empty() {
+            bail!(
+                "policy {:?} closed step {step} at {deadline}s, before the earliest arrival \
+                 ({}s) — a round cannot close on zero replies",
+                self.opts.policy.name(),
+                observed.iter().map(|a| a.at_s).fold(f64::INFINITY, f64::min)
+            );
         }
         Ok(col)
     }
@@ -561,10 +564,14 @@ impl<T: Transport> RoundEngine<T> {
                 self.give_up(wi as u32, s, &mut col);
             }
         }
-        let k = match self.opts.participation {
-            Participation::Quorum => self.opts.quorum.min(parts.len()),
-            _ => parts.len(),
-        };
+        let k = self.opts.policy.close_count(step, parts.len());
+        if k == 0 && !parts.is_empty() {
+            // same contract as the virtual path: zero can never close
+            bail!(
+                "policy {:?} returned close_count 0 for a non-empty round",
+                self.opts.policy.name()
+            );
+        }
         let deadline = if self.opts.round_timeout > 0.0 {
             Some(Duration::from_secs_f64(self.opts.round_timeout))
         } else {
@@ -705,7 +712,6 @@ impl<T: Transport> RoundEngine<T> {
 
         // --- resolve stale messages, then this round's replies ----------
         let agg = self.server.agg();
-        let staleness = self.opts.staleness;
         // this round's acks are staged here (collection-phase give-ups /
         // deferrals included) and delivered per worker in ascending
         // sent_step = send order — the worker-side in-flight queues
@@ -735,21 +741,33 @@ impl<T: Transport> RoundEngine<T> {
                     applied_stale += 1;
                 }
                 AggKind::Fresh => {
+                    // superseded stale gradients are always dropped (the
+                    // per-worker dedupe invariant); everything else is
+                    // the policy's StaleWeight call
                     let superseded = on_time_ids.binary_search(&p.worker).is_ok();
-                    if superseded || staleness == Staleness::Drop {
-                        stage(&mut round_acks, p.worker, p.sent_step, AckStatus::Dropped, 0.0);
-                        dropped_bits += p.comp.wire_bits();
-                        dropped_stale += 1;
+                    let age = step.saturating_sub(p.sent_step).max(1);
+                    let action = if superseded {
+                        StaleAction::Drop
                     } else {
-                        let age = step.saturating_sub(p.sent_step).max(1);
-                        let weight = match staleness {
-                            Staleness::Damp => 1.0 / (1.0 + age as f32),
-                            Staleness::Full => 1.0,
-                            Staleness::Drop => unreachable!(),
-                        };
-                        stage(&mut round_acks, p.worker, p.sent_step, AckStatus::Applied, weight);
-                        apply.push((p.worker, weight, p.comp));
-                        applied_stale += 1;
+                        self.opts.policy.stale_weight(age)
+                    };
+                    match action {
+                        StaleAction::Drop => {
+                            stage(&mut round_acks, p.worker, p.sent_step, AckStatus::Dropped, 0.0);
+                            dropped_bits += p.comp.wire_bits();
+                            dropped_stale += 1;
+                        }
+                        StaleAction::Apply(weight) => {
+                            stage(
+                                &mut round_acks,
+                                p.worker,
+                                p.sent_step,
+                                AckStatus::Applied,
+                                weight,
+                            );
+                            apply.push((p.worker, weight, p.comp));
+                            applied_stale += 1;
+                        }
                     }
                 }
             }
@@ -797,7 +815,7 @@ impl<T: Transport> RoundEngine<T> {
             self.wall_now_s += col.round_s;
             self.wall_now_s
         } else {
-            self.opts.clock.advance(col.round_s)
+            self.opts.cost.advance(col.round_s)
         };
         self.step += 1;
         Ok(RoundReport {
@@ -1071,6 +1089,7 @@ pub fn compute_with_acks<'a, S: 'a>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Participation;
     use crate::ef::AggKind;
     use crate::optim::Sgd;
     use crate::transport::channel;

@@ -1,0 +1,605 @@
+//! First-class **participation policies**: every decision about *which*
+//! workers a round involves, *when* the round closes, and *how much* a
+//! late message still counts lives behind the [`ParticipationPolicy`]
+//! trait — the engine ([`crate::engine::RoundEngine`]) never matches on
+//! a policy enum again; it asks the strategy object.
+//!
+//! A policy has three responsibilities:
+//!
+//! 1. **Participant draw** ([`ParticipationPolicy::draw`]) — the round's
+//!    base participant set, a pure function of `(step, m)` (plus the
+//!    seed the policy was built with). Exclusion/re-admission is engine
+//!    state layered on top.
+//! 2. **Round close** — in virtual-time mode the engine observes every
+//!    reply's simulated [`Arrival`] and asks
+//!    [`ParticipationPolicy::close_at`] for a [`CloseRule`]; in
+//!    real-time mode (TCP) arrivals are unknowable up front, so
+//!    [`ParticipationPolicy::close_count`] supplies the number of
+//!    current-step replies that close the round.
+//! 3. **Stale weighting** ([`ParticipationPolicy::stale_weight`]) — the
+//!    weight (or drop verdict) for a stale `Fresh` gradient of a given
+//!    age, owned by the policy as a [`StaleWeight`] strategy so new
+//!    corrections (age-aware momentum-style damping, re-projection, …)
+//!    slot in without touching the engine. `Accumulate` increments are
+//!    exempt by the `AggKind` contract and never reach this hook.
+//!
+//! # Contracts
+//!
+//! * **Determinism.** Every decision is a pure function of the policy's
+//!    construction parameters and its observed arrival history — never
+//!    of wall time or physical gather order. [`AdaptiveQuorum::close_at`]
+//!    sorts its input, so any permutation of the same arrival multiset
+//!    yields the same close rule; with the deterministic
+//!    [`CostModel`](crate::netsim::CostModel) driving arrivals, adaptive
+//!    runs replay bit-for-bit.
+//! * **Bit-identity.** [`FullSync`], [`FixedQuorum`], and
+//!    [`ClientSampling`] reproduce the pre-refactor engine's decisions
+//!    **bit-identically**: the same participant draw (same RNG stream
+//!    and salt), the same close deadline (k-th smallest simulated
+//!    arrival under quorum, last arrival otherwise, ties on time), and
+//!    the same stale weights (`1/(1+age)`, `1.0`, drop). The PR 2/3/4
+//!    property suites (`prop_engine.rs`, `prop_ef_participation.rs`,
+//!    `prop_recovery.rs`) pin this and pass unchanged.
+
+use anyhow::{bail, Result};
+
+use crate::config::{Participation, Staleness, TrainConfig};
+use crate::tensor::Rng;
+
+/// Stream salt for the client-sampling draw (pre-refactor value — the
+/// draw must replay identically).
+const SAMPLE_SALT: u64 = 0x5E1EC7;
+
+/// [`AdaptiveQuorum`]: the largest inter-arrival gap must span at least
+/// this fraction of the round's total arrival spread to count as an
+/// elbow; smaller gaps mean "no straggler tail — wait for everyone".
+pub const ELBOW_GAP_FRAC: f64 = 0.25;
+
+/// One observed reply arrival (virtual-time mode): worker id and
+/// simulated arrival seconds relative to the round start.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    pub worker: u32,
+    pub at_s: f64,
+}
+
+/// How a round closes, as decided by the policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CloseRule {
+    /// Close once this many replies have arrived (saturating: more than
+    /// the round has means "wait for all"). The engine translates this
+    /// into the k-th-smallest-arrival deadline in virtual mode and the
+    /// k-th real frame in real-time mode.
+    Count(usize),
+    /// Virtual mode only: the round lasts exactly until this simulated
+    /// deadline; arrivals `<= deadline` are on time.
+    AtTime(f64),
+}
+
+/// The policy's verdict on one stale `Fresh` gradient.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StaleAction {
+    /// apply at this weight
+    Apply(f32),
+    /// discard (the transmission is still charged to the bit total)
+    Drop,
+}
+
+/// Stale-`Fresh`-gradient weighting strategy, owned by the policy. The
+/// first three absorb the pre-refactor [`Staleness`] knob bit-exactly;
+/// `Exp` is the momentum-style geometric correction the refactor
+/// unlocks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StaleWeight {
+    /// `1/(1+age)` — the usual async-SGD damping
+    Damp,
+    /// full weight regardless of age
+    Full,
+    /// drop every stale gradient
+    Drop,
+    /// `decay^age` — geometric, momentum-style age damping
+    Exp { decay: f32 },
+}
+
+impl StaleWeight {
+    pub fn from_cfg(staleness: Staleness, decay: f32) -> Self {
+        match staleness {
+            Staleness::Damp => StaleWeight::Damp,
+            Staleness::Full => StaleWeight::Full,
+            Staleness::Drop => StaleWeight::Drop,
+            Staleness::Exp => StaleWeight::Exp { decay },
+        }
+    }
+
+    /// Weight for a stale gradient `age >= 1` rounds old. `Damp`/`Full`/
+    /// `Drop` are bit-identical to the pre-refactor engine arms.
+    pub fn weigh(&self, age: u64) -> StaleAction {
+        match *self {
+            StaleWeight::Damp => StaleAction::Apply(1.0 / (1.0 + age as f32)),
+            StaleWeight::Full => StaleAction::Apply(1.0),
+            StaleWeight::Drop => StaleAction::Drop,
+            StaleWeight::Exp { decay } => {
+                StaleAction::Apply(decay.powi(age.min(i32::MAX as u64) as i32))
+            }
+        }
+    }
+}
+
+/// A round participation strategy. See the module docs for the three
+/// responsibilities and the determinism/bit-identity contracts.
+pub trait ParticipationPolicy {
+    /// Short name for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// The round's base participant set: a pure, sorted draw for
+    /// `(step, m)`, identical on every node.
+    fn draw(&self, step: u64, m: usize) -> Vec<u32>;
+
+    /// Virtual mode: decide the round close from every observed arrival
+    /// of the current round (`&mut` so adaptive policies can record
+    /// history; the decision itself must be a pure function of the
+    /// arrival multiset).
+    fn close_at(&mut self, step: u64, arrivals: &[Arrival]) -> CloseRule;
+
+    /// Real-time mode: how many current-step replies close the round,
+    /// given the participant count (arrival times are unknowable up
+    /// front here).
+    fn close_count(&mut self, step: u64, participants: usize) -> usize;
+
+    /// Weight for a stale `Fresh` gradient of `age >= 1` rounds.
+    fn stale_weight(&self, age: u64) -> StaleAction;
+}
+
+/// Deterministic participant set for `(seed, step)` under a
+/// [`Participation`] knob — the policy layer's single draw
+/// implementation, also used directly by tests. `Full`, `Quorum`, and
+/// `Adaptive` involve everyone (lateness is decided at close time, not
+/// here); `Sampled` is the `ceil(sample_frac * m)` seeded draw.
+pub fn participants(
+    participation: Participation,
+    sample_frac: f32,
+    seed: u64,
+    step: u64,
+    m: usize,
+) -> Vec<u32> {
+    match participation {
+        Participation::Full | Participation::Quorum | Participation::Adaptive => {
+            (0..m as u32).collect()
+        }
+        Participation::Sampled => sampled_draw(sample_frac, seed, step, m),
+    }
+}
+
+/// The client-sampling draw: ceil, as documented on
+/// [`Participation::Sampled`] — a 30% draw over M=4 means 2 clients,
+/// never fewer than the fraction. Bit-identical to the pre-refactor
+/// engine (same stream, same salt).
+fn sampled_draw(sample_frac: f32, seed: u64, step: u64, m: usize) -> Vec<u32> {
+    let k = ((m as f64 * sample_frac as f64).ceil() as usize).clamp(1, m);
+    let mut rng = Rng::for_stream(seed ^ SAMPLE_SALT, 0, step);
+    let mut ids = rng.choose_k(m, k);
+    ids.sort_unstable();
+    ids
+}
+
+/// Lock-step rounds: everyone participates, the round closes when the
+/// last reply arrives. Bit-identical to the seed loop.
+pub struct FullSync {
+    stale: StaleWeight,
+}
+
+impl FullSync {
+    pub fn new(stale: StaleWeight) -> Self {
+        FullSync { stale }
+    }
+}
+
+impl ParticipationPolicy for FullSync {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn draw(&self, _step: u64, m: usize) -> Vec<u32> {
+        (0..m as u32).collect()
+    }
+
+    fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+        CloseRule::Count(usize::MAX)
+    }
+
+    fn close_count(&mut self, _step: u64, participants: usize) -> usize {
+        participants
+    }
+
+    fn stale_weight(&self, age: u64) -> StaleAction {
+        self.stale.weigh(age)
+    }
+}
+
+/// Fixed-k quorum: everyone participates, the round closes at the k-th
+/// arrival; late messages resolve per the stale strategy.
+pub struct FixedQuorum {
+    pub k: usize,
+    stale: StaleWeight,
+}
+
+impl FixedQuorum {
+    pub fn new(k: usize, stale: StaleWeight) -> Self {
+        FixedQuorum { k, stale }
+    }
+}
+
+impl ParticipationPolicy for FixedQuorum {
+    fn name(&self) -> &'static str {
+        "quorum"
+    }
+
+    fn draw(&self, _step: u64, m: usize) -> Vec<u32> {
+        (0..m as u32).collect()
+    }
+
+    fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+        CloseRule::Count(self.k)
+    }
+
+    fn close_count(&mut self, _step: u64, participants: usize) -> usize {
+        self.k.min(participants)
+    }
+
+    fn stale_weight(&self, age: u64) -> StaleAction {
+        self.stale.weigh(age)
+    }
+}
+
+/// Client sampling: a deterministic `(seed, step)` draw participates;
+/// the round waits for every drawn client.
+pub struct ClientSampling {
+    pub frac: f32,
+    seed: u64,
+    stale: StaleWeight,
+}
+
+impl ClientSampling {
+    pub fn new(frac: f32, seed: u64, stale: StaleWeight) -> Self {
+        ClientSampling { frac, seed, stale }
+    }
+}
+
+impl ParticipationPolicy for ClientSampling {
+    fn name(&self) -> &'static str {
+        "sampled"
+    }
+
+    fn draw(&self, step: u64, m: usize) -> Vec<u32> {
+        sampled_draw(self.frac, self.seed, step, m)
+    }
+
+    fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+        CloseRule::Count(usize::MAX)
+    }
+
+    fn close_count(&mut self, _step: u64, participants: usize) -> usize {
+        participants
+    }
+
+    fn stale_weight(&self, age: u64) -> StaleAction {
+        self.stale.weigh(age)
+    }
+}
+
+/// Adaptive quorum: per round, k is chosen at the **elbow of the
+/// arrival CDF** — the largest inter-arrival gap at or above the
+/// majority floor. When that gap spans at least [`ELBOW_GAP_FRAC`] of
+/// the round's arrival spread the round closes just *before* it
+/// (cutting the straggler tail); otherwise there is no tail worth
+/// cutting and the round waits for everyone. By construction the
+/// simulated round time is never longer than full sync on the same
+/// arrivals, and never closes below majority.
+///
+/// The elbow is decided from the current round's complete (simulated)
+/// arrival set, so it is a **virtual-clock feature**: an engine is
+/// permanently virtual or real-time (fixed at construction from the
+/// transport), and in real-time (TCP) mode — where arrival times are
+/// unknowable up front — `close_count` is a plain **majority quorum**.
+/// Feeding the leader's observed wall-clock arrival history into the
+/// real-time path is a ROADMAP follow-on.
+pub struct AdaptiveQuorum {
+    stale: StaleWeight,
+}
+
+impl AdaptiveQuorum {
+    pub fn new(stale: StaleWeight) -> Self {
+        AdaptiveQuorum { stale }
+    }
+
+    /// The elbow rule on a round's arrival times: returns `(k, deadline)`
+    /// with `k` the number of on-time replies. Pure in the multiset of
+    /// times (the input is sorted internally by the caller).
+    fn elbow(ts: &[f64]) -> (usize, f64) {
+        let m = ts.len();
+        let last = ts.iter().copied().fold(0.0, f64::max);
+        let floor = m / 2 + 1;
+        if m < 3 || floor >= m {
+            return (m, last);
+        }
+        let span = last - ts[0];
+        if span <= 0.0 {
+            return (m, last);
+        }
+        // k on-time replies means cutting between ts[k-1] and ts[k]
+        let mut best_k = m;
+        let mut best_gap = 0.0;
+        for k in floor..m {
+            let gap = ts[k] - ts[k - 1];
+            if gap > best_gap {
+                best_gap = gap;
+                best_k = k;
+            }
+        }
+        if best_k < m && best_gap >= ELBOW_GAP_FRAC * span {
+            (best_k, ts[best_k - 1])
+        } else {
+            (m, last)
+        }
+    }
+}
+
+impl ParticipationPolicy for AdaptiveQuorum {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn draw(&self, _step: u64, m: usize) -> Vec<u32> {
+        (0..m as u32).collect()
+    }
+
+    fn close_at(&mut self, _step: u64, arrivals: &[Arrival]) -> CloseRule {
+        let mut ts: Vec<f64> = arrivals.iter().map(|a| a.at_s).collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).expect("arrival times are never NaN"));
+        let (_k, deadline) = Self::elbow(&ts);
+        CloseRule::AtTime(deadline)
+    }
+
+    fn close_count(&mut self, _step: u64, participants: usize) -> usize {
+        // no arrival times to find an elbow in: plain majority quorum
+        // (the real-time behavior — see the struct docs)
+        (participants / 2 + 1).min(participants)
+    }
+
+    fn stale_weight(&self, age: u64) -> StaleAction {
+        self.stale.weigh(age)
+    }
+}
+
+/// Build the policy object for a config's round knobs, validating the
+/// knob ranges against the attached worker count `m` (the quorum k is
+/// expected pre-resolved — [`TrainConfig::effective_quorum_of`]).
+pub fn build(
+    participation: Participation,
+    quorum: usize,
+    sample_frac: f32,
+    seed: u64,
+    stale: StaleWeight,
+    m: usize,
+) -> Result<Box<dyn ParticipationPolicy>> {
+    Ok(match participation {
+        Participation::Full => Box::new(FullSync::new(stale)),
+        Participation::Quorum => {
+            if !(1..=m).contains(&quorum) {
+                bail!("quorum {quorum} out of range 1..={m}");
+            }
+            Box::new(FixedQuorum::new(quorum, stale))
+        }
+        Participation::Sampled => {
+            if !(sample_frac > 0.0 && sample_frac <= 1.0) {
+                bail!("sample_frac {sample_frac} out of range (0, 1]");
+            }
+            Box::new(ClientSampling::new(sample_frac, seed, stale))
+        }
+        Participation::Adaptive => Box::new(AdaptiveQuorum::new(stale)),
+    })
+}
+
+/// [`build`] from a [`TrainConfig`]'s round knobs.
+pub fn from_cfg(cfg: &TrainConfig, m: usize) -> Result<Box<dyn ParticipationPolicy>> {
+    build(
+        cfg.participation,
+        cfg.effective_quorum_of(m),
+        cfg.sample_frac,
+        cfg.seed,
+        StaleWeight::from_cfg(cfg.staleness, cfg.stale_decay),
+        m,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrivals(ts: &[f64]) -> Vec<Arrival> {
+        ts.iter().enumerate().map(|(w, &t)| Arrival { worker: w as u32, at_s: t }).collect()
+    }
+
+    #[test]
+    fn stale_weights_match_the_legacy_formulas_bitwise() {
+        for age in 1..50u64 {
+            assert_eq!(
+                StaleWeight::Damp.weigh(age),
+                StaleAction::Apply(1.0 / (1.0 + age as f32))
+            );
+            assert_eq!(StaleWeight::Full.weigh(age), StaleAction::Apply(1.0));
+            assert_eq!(StaleWeight::Drop.weigh(age), StaleAction::Drop);
+            match (StaleWeight::Exp { decay: 0.5 }).weigh(age) {
+                StaleAction::Apply(w) => {
+                    assert_eq!(w.to_bits(), 0.5f32.powi(age as i32).to_bits())
+                }
+                StaleAction::Drop => panic!("exp never drops"),
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_policies_close_like_the_old_engine() {
+        let mut full = FullSync::new(StaleWeight::Damp);
+        let mut quorum = FixedQuorum::new(3, StaleWeight::Damp);
+        let mut sampled = ClientSampling::new(0.5, 1, StaleWeight::Damp);
+        let a = arrivals(&[0.3, 0.1, 0.2, 0.9]);
+        assert_eq!(full.close_at(0, &a), CloseRule::Count(usize::MAX));
+        assert_eq!(sampled.close_at(0, &a), CloseRule::Count(usize::MAX));
+        assert_eq!(quorum.close_at(0, &a), CloseRule::Count(3));
+        // real-time counts: k clamped to the participant set
+        assert_eq!(full.close_count(0, 4), 4);
+        assert_eq!(quorum.close_count(0, 4), 3);
+        assert_eq!(quorum.close_count(0, 2), 2);
+        assert_eq!(sampled.close_count(0, 2), 2);
+    }
+
+    #[test]
+    fn draw_matches_the_legacy_participants_fn() {
+        let sampled = ClientSampling::new(0.5, 7, StaleWeight::Damp);
+        for step in 0..20 {
+            assert_eq!(
+                sampled.draw(step, 8),
+                participants(Participation::Sampled, 0.5, 7, step, 8)
+            );
+        }
+        let full = FullSync::new(StaleWeight::Damp);
+        assert_eq!(full.draw(3, 5), vec![0, 1, 2, 3, 4]);
+        let adaptive = AdaptiveQuorum::new(StaleWeight::Damp);
+        assert_eq!(adaptive.draw(3, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(
+            participants(Participation::Adaptive, 0.5, 1, 0, 3),
+            vec![0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn adaptive_elbow_cuts_the_straggler_tail() {
+        let mut p = AdaptiveQuorum::new(StaleWeight::Damp);
+        // clear elbow after the 3rd of 5 arrivals (majority floor = 3):
+        // gap 0.12 -> 0.9 dominates the 0.85 span
+        let rule = p.close_at(0, &arrivals(&[0.10, 0.11, 0.12, 0.90, 0.95]));
+        assert_eq!(rule, CloseRule::AtTime(0.12));
+        // no meaningful gap (every gap well below 25% of the span):
+        // wait for everyone
+        let rule = p.close_at(1, &arrivals(&[0.10, 0.14, 0.18, 0.20, 0.22]));
+        assert_eq!(rule, CloseRule::AtTime(0.22));
+        // the elbow never cuts below majority: the big gap before the
+        // floor is ignored, the post-floor gap wins
+        let rule = p.close_at(2, &arrivals(&[0.1, 0.9, 0.95, 1.0, 1.8]));
+        assert_eq!(rule, CloseRule::AtTime(1.0));
+        // real-time mode has no arrivals to find an elbow in: plain
+        // majority quorum (see the struct docs)
+        assert_eq!(p.close_count(3, 5), 3);
+        assert_eq!(p.close_count(0, 8), 5);
+        assert_eq!(p.close_count(0, 1), 1);
+        // tiny rounds close on the last arrival
+        assert_eq!(p.close_at(4, &arrivals(&[0.2, 0.1])), CloseRule::AtTime(0.2));
+    }
+
+    #[test]
+    fn adaptive_close_is_permutation_stable() {
+        let ts = [0.31, 0.05, 0.92, 0.11, 0.07, 0.95, 0.33, 0.12];
+        let base = AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &arrivals(&ts));
+        // every rotation of the same multiset yields the same rule
+        for rot in 1..ts.len() {
+            let mut perm = ts.to_vec();
+            perm.rotate_left(rot);
+            let rule = AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &arrivals(&perm));
+            assert_eq!(rule, base, "rotation {rot}");
+        }
+    }
+
+    #[test]
+    fn adaptive_never_closes_after_the_last_arrival() {
+        // deterministic pseudo-random arrival sets: deadline <= max
+        let mut rng = crate::tensor::Rng::new(9);
+        for m in 1..12usize {
+            for _ in 0..50 {
+                let ts: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
+                let max = ts.iter().copied().fold(0.0, f64::max);
+                match AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &arrivals(&ts)) {
+                    CloseRule::AtTime(t) => {
+                        assert!(t <= max, "m={m}: deadline {t} past last arrival {max}")
+                    }
+                    rule => panic!("adaptive must return AtTime, got {rule:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn build_validates_ranges() {
+        let st = StaleWeight::Damp;
+        assert!(build(Participation::Quorum, 0, 0.5, 1, st, 4).is_err());
+        assert!(build(Participation::Quorum, 5, 0.5, 1, st, 4).is_err());
+        assert!(build(Participation::Sampled, 2, 0.0, 1, st, 4).is_err());
+        assert!(build(Participation::Sampled, 2, 1.5, 1, st, 4).is_err());
+        for p in [
+            Participation::Full,
+            Participation::Quorum,
+            Participation::Sampled,
+            Participation::Adaptive,
+        ] {
+            assert!(build(p, 2, 0.5, 1, st, 4).is_ok());
+        }
+    }
+
+    /// A deliberately broken policy: closes every round before any
+    /// arrival can make it.
+    struct ClosesBeforeAnyArrival;
+
+    impl ParticipationPolicy for ClosesBeforeAnyArrival {
+        fn name(&self) -> &'static str {
+            "closes-before-any-arrival"
+        }
+
+        fn draw(&self, _step: u64, m: usize) -> Vec<u32> {
+            (0..m as u32).collect()
+        }
+
+        fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+            CloseRule::AtTime(-1.0)
+        }
+
+        fn close_count(&mut self, _step: u64, participants: usize) -> usize {
+            participants
+        }
+
+        fn stale_weight(&self, _age: u64) -> StaleAction {
+            StaleAction::Apply(1.0)
+        }
+    }
+
+    #[test]
+    fn engine_rejects_policies_that_close_on_zero_replies() {
+        // the pre-refactor engine rejected quorum k = 0 at construction;
+        // the trait engine fails just as loudly at round time when an
+        // injected policy asks to close on zero replies — via Count(0)
+        // or an AtTime deadline before the earliest arrival
+        use crate::coordinator::Server;
+        use crate::engine::{compute_fn, local_star, Compute, RoundEngine};
+        let run = |policy: Box<dyn ParticipationPolicy>| -> String {
+            let server = Server::new(
+                vec![0.0; 2],
+                Box::new(crate::optim::Sgd { lr: 1.0 }),
+                crate::ef::AggKind::Fresh,
+            );
+            let computes: Vec<Compute<'_>> = (0..2)
+                .map(|_| {
+                    compute_fn(move |_step, params: &[f32]| {
+                        Ok((0.0, crate::compress::Compressed::dense(params.to_vec())))
+                    })
+                })
+                .collect();
+            let cfg = TrainConfig::default();
+            let mut eng =
+                RoundEngine::with_policy(local_star(computes), server, &cfg, policy).unwrap();
+            eng.run_round().unwrap_err().to_string()
+        };
+        let err = run(Box::new(FixedQuorum::new(0, StaleWeight::Damp)));
+        assert!(err.contains("Count(0)"), "{err}");
+        let err = run(Box::new(ClosesBeforeAnyArrival));
+        assert!(err.contains("before the earliest arrival"), "{err}");
+    }
+}

@@ -9,6 +9,7 @@
 //! fewer seeds/steps/worker counts, same grids).
 
 pub mod quantization;
+pub mod scenario;
 pub mod sparsification;
 pub mod validate;
 
@@ -45,7 +46,7 @@ impl FigScale {
     }
 }
 
-fn env_usize(key: &str, default: usize) -> usize {
+pub(crate) fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
@@ -164,10 +165,16 @@ pub fn print_summary(title: &str, series: &[FigSeries], acc_target: f64) {
     }
 }
 
-/// `mlmc-dist figure <id>` entry point.
+/// `mlmc-dist figure <id>` entry point. The `scenario` sweep runs on
+/// the synthetic harness and never loads the PJRT runtime, so it works
+/// without artifacts (the CI `figures-smoke` job relies on this); the
+/// paper figures load the runtime lazily.
 pub fn cli(args: &[String]) -> Result<()> {
     let which = args.first().map(String::as_str).unwrap_or("all");
     let quick = args.iter().any(|a| a == "--quick");
+    if which == "scenario" {
+        return scenario::run(quick).map(|_| ());
+    }
     let scale = FigScale::from_env(quick);
     let rt = Runtime::load_default()?;
     println!(
@@ -190,9 +197,10 @@ pub fn cli(args: &[String]) -> Result<()> {
             sparsification::run(&rt, &scale, "tx-tiny", &[10, 50, 100, 500], "fig1", "fig2")?;
             quantization::run_bitwise(&rt, &scale)?;
             sparsification::run(&rt, &scale, "cnn-tiny", &[1, 5, 10, 50], "fig4", "fig5")?;
-            quantization::run_rtn(&rt, &scale)
+            quantization::run_rtn(&rt, &scale)?;
+            scenario::run(quick).map(|_| ())
         }
-        other => bail!("unknown figure {other:?} (fig1..fig6|all)"),
+        other => bail!("unknown figure {other:?} (fig1..fig6|scenario|all)"),
     }
 }
 

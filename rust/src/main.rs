@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! mlmc-dist train [--config run.toml] [--key=value ...]
-//! mlmc-dist figure <fig1|fig2|fig3|fig4|fig5|fig6|all> [--quick]
+//! mlmc-dist figure <fig1|fig2|fig3|fig4|fig5|fig6|scenario|all> [--quick]
 //! mlmc-dist validate [lem32|lem33|lem34|lem36|thm41|comm|all]
 //! mlmc-dist info
 //! mlmc-dist worker --addr H:P --id N ...   (TCP cluster worker)
@@ -45,20 +45,26 @@ fn print_help() {
         "mlmc-dist — MLMC compression for distributed learning (ICML 2025 reproduction)\n\n\
          commands:\n\
          \x20 train    [--config FILE] [--key=value ...]   run one training config\n\
-         \x20 figure   <fig1..fig6|all> [--quick]          regenerate a paper figure\n\
+         \x20 figure   <fig1..fig6|scenario|all> [--quick] regenerate a paper figure; `scenario`\n\
+         \x20                                              sweeps policy x link (loss vs sim time)\n\
          \x20 validate [lem32|lem33|lem34|lem36|thm41|comm|all]  lemma/theorem checks\n\
          \x20 leader   --addr H:P [--key=value ...]        TCP cluster leader\n\
          \x20 worker   --addr H:P --id N [--key=value ...] TCP cluster worker\n\
          \x20 info                                         list artifacts/models\n\n\
          config keys: {}\n\n\
-         round-engine keys:\n\
-         \x20 participation  full | quorum | sampled        round policy\n\
+         round-engine keys (policy objects: rust/src/engine/policy.rs):\n\
+         \x20 participation  full | quorum | sampled | adaptive   round-close policy; adaptive picks k\n\
+         \x20                                               per round at the arrival-CDF elbow (virtual\n\
+         \x20                                               clock; real-time TCP falls back to majority)\n\
          \x20 quorum         k (0 = majority)               proceed at k arrivals; late msgs applied next round\n\
          \x20 sample_frac    (0,1]                          client fraction for participation=sampled\n\
-         \x20 staleness      damp | full | drop             stale Fresh-gradient weighting (EF21-family\n\
+         \x20 staleness      damp | full | drop | exp       stale Fresh-gradient weighting (EF21-family\n\
          \x20                                               increments always apply at full weight)\n\
-         \x20 link           datacenter | edge | hetero     netsim virtual-clock preset\n\
-         \x20 straggler      seconds                        mean seeded straggler delay (0 = off)\n\n\
+         \x20 stale_decay    (0,1)                          geometric decay for staleness=exp\n\
+         \x20 link           datacenter | edge | hetero | hetero-compute   netsim cost-model preset\n\
+         \x20 straggler      seconds                        mean seeded straggler delay (0 = off)\n\
+         \x20 compute        seconds                        base per-step grad-compute time (0 = preset default)\n\
+         \x20 compute_spread factor >= 1                    per-worker compute slowdown spread (needs compute > 0)\n\n\
          recovery keys (real-time TCP rounds):\n\
          \x20 round_timeout  seconds (0 = wait forever)     deadline before resend requests go out\n\
          \x20 resend_max     n                              resend attempts before a reply is given up\n\
@@ -69,8 +75,9 @@ fn print_help() {
             "quant_bits", "eval_every", "eval_batches", "transport",
             "optimizer", "momentum_beta", "dirichlet_alpha", "use_l1_stats",
             "shard_size", "threads", "participation", "quorum", "sample_frac",
-            "staleness", "link", "straggler", "round_timeout", "resend_max",
-            "exclude_after", "readmit_every", "tag",
+            "staleness", "stale_decay", "link", "straggler", "compute",
+            "compute_spread", "round_timeout", "resend_max", "exclude_after",
+            "readmit_every", "tag",
         ]
         .join(", ")
     );

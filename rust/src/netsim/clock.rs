@@ -1,210 +1,13 @@
-//! Deterministic virtual clock over [`LinkModel`]s: per-worker
-//! heterogeneous links plus a seeded straggler-delay distribution decide
-//! the *simulated* arrival order of worker messages, so every run
-//! reports simulated wall-clock time alongside the bit-exact uplink
-//! accounting — the figures' bits x-axis gains a time x-axis for free,
-//! and straggler-tolerant participation policies (quorum, sampling)
-//! become expressible without real asynchrony.
-//!
-//! Determinism contract: [`VirtualClock::arrival_s`] is a pure function
-//! of `(step, worker, up_bits, down_bits)` — it never depends on the
-//! order messages were physically gathered (permutation stability) or on
-//! wall time, and the straggler draw comes from the dedicated
-//! `(seed, worker, step)` RNG stream, so repeated runs replay exactly.
+//! Back-compat shim: the deterministic virtual clock grew a per-worker
+//! compute term and was promoted to the full [`super::cost::CostModel`].
+//! Existing imports of `netsim::clock::{VirtualClock, preset_names}`
+//! keep working through this module; new code should use
+//! [`crate::netsim::CostModel`] directly.
 
-use super::LinkModel;
-use crate::tensor::Rng;
+pub use super::cost::preset_names;
 
-/// Stream salt for per-worker link heterogeneity factors.
-const LINK_SALT: u64 = 0x11_4B5;
-/// Stream salt for per-(worker, step) straggler delays.
-const STRAGGLER_SALT: u64 = 0x57_4A66;
-
-/// Known link presets for the `link` config knob.
-pub fn preset_names() -> &'static [&'static str] {
-    &["datacenter", "edge", "hetero"]
-}
-
-/// Simulated time source for the round engine.
-#[derive(Clone, Debug)]
-pub struct VirtualClock {
-    links: Vec<LinkModel>,
-    straggler_mean_s: f64,
-    seed: u64,
-    now_s: f64,
-}
-
-impl VirtualClock {
-    /// Per-worker links derived from `base`: worker `w`'s bandwidths are
-    /// scaled by a deterministic factor in `[1/spread, 1]` (and its
-    /// latency inflated by the inverse), drawn once per worker from the
-    /// `(seed, worker)` stream. `spread <= 1` means homogeneous links.
-    pub fn new(
-        base: &LinkModel,
-        workers: usize,
-        spread: f64,
-        straggler_mean_s: f64,
-        seed: u64,
-    ) -> Self {
-        let spread = spread.max(1.0);
-        let links = (0..workers)
-            .map(|w| {
-                let f = if spread > 1.0 {
-                    let u = Rng::for_stream(seed ^ LINK_SALT, w as u64, 0).uniform();
-                    1.0 / (1.0 + (spread - 1.0) * u)
-                } else {
-                    1.0
-                };
-                LinkModel {
-                    uplink_bps: base.uplink_bps * f,
-                    downlink_bps: base.downlink_bps * f,
-                    latency_s: base.latency_s / f,
-                }
-            })
-            .collect();
-        VirtualClock { links, straggler_mean_s: straggler_mean_s.max(0.0), seed, now_s: 0.0 }
-    }
-
-    /// Build from a named preset: `"datacenter"` / `"edge"` (homogeneous)
-    /// or `"hetero"` (edge base with a 4x per-worker bandwidth spread).
-    pub fn from_preset(
-        name: &str,
-        workers: usize,
-        straggler_mean_s: f64,
-        seed: u64,
-    ) -> Option<Self> {
-        let (base, spread) = match name {
-            "datacenter" => (LinkModel::datacenter(), 1.0),
-            "edge" => (LinkModel::edge(), 1.0),
-            "hetero" => (LinkModel::edge(), 4.0),
-            _ => return None,
-        };
-        Some(Self::new(&base, workers, spread, straggler_mean_s, seed))
-    }
-
-    pub fn workers(&self) -> usize {
-        self.links.len()
-    }
-
-    pub fn link(&self, worker: u32) -> &LinkModel {
-        &self.links[worker as usize]
-    }
-
-    /// Exponential straggler delay for `(worker, step)` via inverse-CDF
-    /// sampling on the dedicated stream; 0 when stragglers are disabled.
-    pub fn straggler_s(&self, step: u64, worker: u32) -> f64 {
-        if self.straggler_mean_s <= 0.0 {
-            return 0.0;
-        }
-        let u = Rng::for_stream(self.seed ^ STRAGGLER_SALT, worker as u64, step).uniform();
-        -self.straggler_mean_s * (1.0 - u).ln()
-    }
-
-    /// Simulated arrival time — relative to the round start — of worker
-    /// `w`'s uplink message of `up_bits`, after it downloaded the
-    /// `down_bits` params broadcast over its own link. Pure in
-    /// `(step, worker, up_bits, down_bits)`.
-    pub fn arrival_s(&self, step: u64, worker: u32, up_bits: u64, down_bits: u64) -> f64 {
-        let l = &self.links[worker as usize];
-        let down = l.latency_s + down_bits as f64 / l.downlink_bps;
-        let up = l.latency_s + up_bits as f64 / l.uplink_bps;
-        down + up + self.straggler_s(step, worker)
-    }
-
-    /// Advance simulated time by one round's duration.
-    pub fn advance(&mut self, round_s: f64) -> f64 {
-        self.now_s += round_s.max(0.0);
-        self.now_s
-    }
-
-    /// Simulated wall-clock since the run started.
-    pub fn now_s(&self) -> f64 {
-        self.now_s
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn presets_build_and_unknown_rejected() {
-        for name in preset_names() {
-            let c = VirtualClock::from_preset(name, 4, 0.0, 1).unwrap();
-            assert_eq!(c.workers(), 4);
-        }
-        assert!(VirtualClock::from_preset("carrier-pigeon", 4, 0.0, 1).is_none());
-    }
-
-    #[test]
-    fn arrival_is_pure_and_deterministic() {
-        let a = VirtualClock::from_preset("hetero", 8, 0.02, 7).unwrap();
-        let b = VirtualClock::from_preset("hetero", 8, 0.02, 7).unwrap();
-        for step in 0..5 {
-            for w in 0..8u32 {
-                let t1 = a.arrival_s(step, w, 10_000, 320_000);
-                let t2 = a.arrival_s(step, w, 10_000, 320_000);
-                let t3 = b.arrival_s(step, w, 10_000, 320_000);
-                assert_eq!(t1.to_bits(), t2.to_bits());
-                assert_eq!(t1.to_bits(), t3.to_bits());
-                assert!(t1 > 0.0);
-            }
-        }
-        // different seed shifts the straggler draws
-        let c = VirtualClock::from_preset("hetero", 8, 0.02, 8).unwrap();
-        assert_ne!(
-            a.arrival_s(0, 0, 10_000, 320_000).to_bits(),
-            c.arrival_s(0, 0, 10_000, 320_000).to_bits()
-        );
-    }
-
-    #[test]
-    fn hetero_spread_slows_some_workers() {
-        let hom = VirtualClock::from_preset("edge", 8, 0.0, 3).unwrap();
-        let het = VirtualClock::from_preset("hetero", 8, 0.0, 3).unwrap();
-        let t_hom: Vec<f64> = (0..8).map(|w| hom.arrival_s(0, w, 1_000_000, 0)).collect();
-        let t_het: Vec<f64> = (0..8).map(|w| het.arrival_s(0, w, 1_000_000, 0)).collect();
-        // homogeneous: identical; heterogeneous: a real spread, never faster
-        assert!(t_hom.windows(2).all(|p| p[0] == p[1]));
-        let (min, max) = t_het
-            .iter()
-            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &t| (lo.min(t), hi.max(t)));
-        assert!(max > 1.5 * min, "spread too small: {min}..{max}");
-        assert!(min >= t_hom[0], "hetero workers cannot beat the base link");
-    }
-
-    #[test]
-    fn straggler_delays_nonnegative_with_sane_mean() {
-        let c = VirtualClock::from_preset("datacenter", 4, 0.05, 11).unwrap();
-        let mut sum = 0.0;
-        let n = 2000;
-        for step in 0..n {
-            for w in 0..4u32 {
-                let s = c.straggler_s(step, w);
-                assert!(s >= 0.0);
-                sum += s;
-            }
-        }
-        let mean = sum / (4 * n) as f64;
-        assert!((mean - 0.05).abs() < 0.01, "empirical mean {mean}");
-        // disabled stragglers are exactly zero
-        let c0 = VirtualClock::from_preset("datacenter", 4, 0.0, 11).unwrap();
-        assert_eq!(c0.straggler_s(0, 0), 0.0);
-    }
-
-    #[test]
-    fn clock_monotone_under_advance() {
-        let mut c = VirtualClock::from_preset("edge", 2, 0.0, 1).unwrap();
-        let mut prev = c.now_s();
-        for step in 0..10 {
-            let dur = c.arrival_s(step, 0, 1000, 1000);
-            let now = c.advance(dur);
-            assert!(now >= prev);
-            assert!(now > prev, "positive-latency rounds must advance time");
-            prev = now;
-        }
-        // negative durations are clamped, never rewinding time
-        let before = c.now_s();
-        assert_eq!(c.advance(-5.0), before);
-    }
-}
+/// The pre-cost-model name for [`super::cost::CostModel`]. With a zero
+/// compute term (the three original presets) arrival times are
+/// bit-identical to the PR 2 clock, so every pre-existing trajectory
+/// replays unchanged under the alias.
+pub type VirtualClock = super::cost::CostModel;

@@ -1,0 +1,339 @@
+//! Deterministic cluster **cost model**: the promotion of the PR 2
+//! `VirtualClock` from a pure *transfer*-time source into a full
+//! per-step cost model. A worker's simulated arrival time is now
+//!
+//! ```text
+//! arrival = download + compute + upload + straggler
+//! ```
+//!
+//! where `download`/`upload` come from per-worker heterogeneous
+//! [`LinkModel`]s, **compute** is a new per-worker gradient-computation
+//! term (base seconds × a seeded per-worker slowdown factor), and the
+//! straggler term is the seeded exponential delay of PR 2. Adaptive
+//! participation policies ([`crate::engine::policy`]) therefore optimize
+//! simulated *step* time, not transfer time alone.
+//!
+//! Determinism contract (unchanged from the clock): [`CostModel::arrival_s`]
+//! is a pure function of `(step, worker, up_bits, down_bits)` — it never
+//! depends on the order messages were physically gathered (permutation
+//! stability) or on wall time. All per-worker draws (link heterogeneity,
+//! compute slowdown) come once per worker from dedicated `(seed, worker)`
+//! streams, and the straggler draw from the `(seed, worker, step)`
+//! stream, so repeated runs replay exactly.
+//!
+//! Bit-compatibility contract: with a zero compute term the arrival time
+//! is **bit-identical** to the pre-cost-model `VirtualClock` — the three
+//! original presets (`datacenter`, `edge`, `hetero`) carry no compute
+//! term, so every pre-existing trajectory replays unchanged.
+
+use super::LinkModel;
+use crate::tensor::Rng;
+use anyhow::{bail, Result};
+
+/// Stream salt for per-worker link heterogeneity factors.
+const LINK_SALT: u64 = 0x11_4B5;
+/// Stream salt for per-(worker, step) straggler delays.
+const STRAGGLER_SALT: u64 = 0x57_4A66;
+/// Stream salt for per-worker compute slowdown factors.
+const COMPUTE_SALT: u64 = 0xC0_4B7E;
+
+/// Known presets for the `link` config knob.
+pub fn preset_names() -> &'static [&'static str] {
+    &["datacenter", "edge", "hetero", "hetero-compute"]
+}
+
+/// Simulated per-step cost source for the round engine: heterogeneous
+/// links + per-worker compute + seeded stragglers, plus the run's
+/// simulated wall-clock accumulator.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    links: Vec<LinkModel>,
+    /// per-worker gradient-compute seconds (0 = communication only)
+    compute_s: Vec<f64>,
+    straggler_mean_s: f64,
+    seed: u64,
+    now_s: f64,
+}
+
+impl CostModel {
+    /// Per-worker links derived from `base`: worker `w`'s bandwidths are
+    /// scaled by a deterministic factor in `[1/spread, 1]` (and its
+    /// latency inflated by the inverse), drawn once per worker from the
+    /// `(seed, worker)` stream. `spread <= 1` means homogeneous links.
+    /// The compute term starts at zero; see [`CostModel::with_compute`].
+    pub fn new(
+        base: &LinkModel,
+        workers: usize,
+        spread: f64,
+        straggler_mean_s: f64,
+        seed: u64,
+    ) -> Self {
+        let spread = spread.max(1.0);
+        let links = (0..workers)
+            .map(|w| {
+                let f = if spread > 1.0 {
+                    let u = Rng::for_stream(seed ^ LINK_SALT, w as u64, 0).uniform();
+                    1.0 / (1.0 + (spread - 1.0) * u)
+                } else {
+                    1.0
+                };
+                LinkModel {
+                    uplink_bps: base.uplink_bps * f,
+                    downlink_bps: base.downlink_bps * f,
+                    latency_s: base.latency_s / f,
+                }
+            })
+            .collect();
+        CostModel {
+            links,
+            compute_s: vec![0.0; workers],
+            straggler_mean_s: straggler_mean_s.max(0.0),
+            seed,
+            now_s: 0.0,
+        }
+    }
+
+    /// Set the per-worker gradient-compute term: worker `w` takes
+    /// `base_s * f_w` seconds per step, with `f_w` a deterministic
+    /// slowdown factor in `[1, spread]` drawn once per worker from the
+    /// `(seed, worker)` compute stream (`spread <= 1` = homogeneous
+    /// compute). `base_s <= 0` clears the term.
+    pub fn with_compute(mut self, base_s: f64, spread: f64) -> Self {
+        let base_s = base_s.max(0.0);
+        let spread = spread.max(1.0);
+        for (w, c) in self.compute_s.iter_mut().enumerate() {
+            let f = if spread > 1.0 {
+                let u = Rng::for_stream(self.seed ^ COMPUTE_SALT, w as u64, 0).uniform();
+                1.0 + (spread - 1.0) * u
+            } else {
+                1.0
+            };
+            *c = base_s * f;
+        }
+        self
+    }
+
+    /// Build from a named preset ([`preset_names`]):
+    ///
+    /// * `"datacenter"` / `"edge"` — homogeneous links, no compute term
+    /// * `"hetero"` — edge base with a 4x per-worker bandwidth spread
+    /// * `"hetero-compute"` — `hetero` plus a default compute term
+    ///   (20 ms base, 4x per-worker spread), so the arrival elbow is
+    ///   shaped by compute *and* transfer. An explicit `compute` config
+    ///   knob replaces this whole term, spread included — pass
+    ///   `compute_spread` too to keep heterogeneity
+    ///
+    /// Unknown names are a loud, centralized error listing the known
+    /// presets — call sites must not re-implement the message.
+    pub fn from_preset(
+        name: &str,
+        workers: usize,
+        straggler_mean_s: f64,
+        seed: u64,
+    ) -> Result<Self> {
+        let (base, spread, compute) = match name {
+            "datacenter" => (LinkModel::datacenter(), 1.0, None),
+            "edge" => (LinkModel::edge(), 1.0, None),
+            "hetero" => (LinkModel::edge(), 4.0, None),
+            "hetero-compute" => (LinkModel::edge(), 4.0, Some((0.02, 4.0))),
+            _ => bail!("unknown link preset {name:?} (known: {:?})", preset_names()),
+        };
+        let model = Self::new(&base, workers, spread, straggler_mean_s, seed);
+        Ok(match compute {
+            Some((base_s, sp)) => model.with_compute(base_s, sp),
+            None => model,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn link(&self, worker: u32) -> &LinkModel {
+        &self.links[worker as usize]
+    }
+
+    /// Worker `w`'s per-step gradient-compute seconds.
+    pub fn compute_s(&self, worker: u32) -> f64 {
+        self.compute_s[worker as usize]
+    }
+
+    /// Exponential straggler delay for `(worker, step)` via inverse-CDF
+    /// sampling on the dedicated stream; 0 when stragglers are disabled.
+    pub fn straggler_s(&self, step: u64, worker: u32) -> f64 {
+        if self.straggler_mean_s <= 0.0 {
+            return 0.0;
+        }
+        let u = Rng::for_stream(self.seed ^ STRAGGLER_SALT, worker as u64, step).uniform();
+        -self.straggler_mean_s * (1.0 - u).ln()
+    }
+
+    /// Simulated arrival time — relative to the round start — of worker
+    /// `w`'s uplink message of `up_bits`: download the `down_bits`
+    /// params broadcast over its own link, compute the gradient, upload,
+    /// plus the straggler draw. Pure in `(step, worker, up_bits,
+    /// down_bits)`; bit-identical to the pre-cost-model clock when the
+    /// compute term is zero.
+    pub fn arrival_s(&self, step: u64, worker: u32, up_bits: u64, down_bits: u64) -> f64 {
+        let l = &self.links[worker as usize];
+        let down = l.latency_s + down_bits as f64 / l.downlink_bps;
+        let up = l.latency_s + up_bits as f64 / l.uplink_bps;
+        down + self.compute_s[worker as usize] + up + self.straggler_s(step, worker)
+    }
+
+    /// Advance simulated time by one round's duration.
+    pub fn advance(&mut self, round_s: f64) -> f64 {
+        self.now_s += round_s.max(0.0);
+        self.now_s
+    }
+
+    /// Simulated wall-clock since the run started.
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build_and_unknown_rejected_loudly() {
+        for name in preset_names() {
+            let c = CostModel::from_preset(name, 4, 0.0, 1).unwrap();
+            assert_eq!(c.workers(), 4);
+        }
+        let err = CostModel::from_preset("carrier-pigeon", 4, 0.0, 1).unwrap_err().to_string();
+        assert!(err.contains("carrier-pigeon"), "{err}");
+        for name in preset_names() {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn arrival_is_pure_and_deterministic() {
+        let a = CostModel::from_preset("hetero", 8, 0.02, 7).unwrap();
+        let b = CostModel::from_preset("hetero", 8, 0.02, 7).unwrap();
+        for step in 0..5 {
+            for w in 0..8u32 {
+                let t1 = a.arrival_s(step, w, 10_000, 320_000);
+                let t2 = a.arrival_s(step, w, 10_000, 320_000);
+                let t3 = b.arrival_s(step, w, 10_000, 320_000);
+                assert_eq!(t1.to_bits(), t2.to_bits());
+                assert_eq!(t1.to_bits(), t3.to_bits());
+                assert!(t1 > 0.0);
+            }
+        }
+        // different seed shifts the straggler draws
+        let c = CostModel::from_preset("hetero", 8, 0.02, 8).unwrap();
+        assert_ne!(
+            a.arrival_s(0, 0, 10_000, 320_000).to_bits(),
+            c.arrival_s(0, 0, 10_000, 320_000).to_bits()
+        );
+    }
+
+    #[test]
+    fn hetero_spread_slows_some_workers() {
+        let hom = CostModel::from_preset("edge", 8, 0.0, 3).unwrap();
+        let het = CostModel::from_preset("hetero", 8, 0.0, 3).unwrap();
+        let t_hom: Vec<f64> = (0..8).map(|w| hom.arrival_s(0, w, 1_000_000, 0)).collect();
+        let t_het: Vec<f64> = (0..8).map(|w| het.arrival_s(0, w, 1_000_000, 0)).collect();
+        // homogeneous: identical; heterogeneous: a real spread, never faster
+        assert!(t_hom.windows(2).all(|p| p[0] == p[1]));
+        let (min, max) = t_het
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &t| (lo.min(t), hi.max(t)));
+        assert!(max > 1.5 * min, "spread too small: {min}..{max}");
+        assert!(min >= t_hom[0], "hetero workers cannot beat the base link");
+    }
+
+    #[test]
+    fn compute_term_is_additive_monotone_and_per_worker() {
+        let base = CostModel::from_preset("hetero", 8, 0.0, 5).unwrap();
+        let slow = base.clone().with_compute(0.05, 1.0);
+        let slower = base.clone().with_compute(0.10, 1.0);
+        for w in 0..8u32 {
+            let t0 = base.arrival_s(0, w, 10_000, 320_000);
+            let t1 = slow.arrival_s(0, w, 10_000, 320_000);
+            let t2 = slower.arrival_s(0, w, 10_000, 320_000);
+            // homogeneous compute: exactly additive, monotone in base_s
+            assert!((t1 - t0 - 0.05).abs() < 1e-12, "worker {w}: {t0} {t1}");
+            assert!(t2 > t1 && t1 > t0);
+            assert_eq!(slow.compute_s(w), 0.05);
+        }
+        // spread > 1: every worker in [base, base*spread], not all equal
+        let spread = base.with_compute(0.05, 4.0);
+        let cs: Vec<f64> = (0..8).map(|w| spread.compute_s(w)).collect();
+        assert!(cs.iter().all(|&c| (0.05..=0.2 + 1e-12).contains(&c)), "{cs:?}");
+        assert!(cs.windows(2).any(|p| p[0] != p[1]), "compute spread drew no spread: {cs:?}");
+        // the draw is per worker, fixed across steps (pure)
+        for w in 0..8u32 {
+            assert_eq!(
+                spread.arrival_s(3, w, 10_000, 0).to_bits(),
+                spread.arrival_s(3, w, 10_000, 0).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn zero_compute_matches_link_only_formula_bitwise() {
+        // the pre-cost-model clock formula, recomputed by hand
+        let c = CostModel::from_preset("hetero", 4, 0.03, 9).unwrap();
+        for step in 0..4 {
+            for w in 0..4u32 {
+                let l = c.link(w);
+                let down = l.latency_s + 320_000f64 / l.downlink_bps;
+                let up = l.latency_s + 10_000f64 / l.uplink_bps;
+                let expect = down + up + c.straggler_s(step, w);
+                assert_eq!(expect.to_bits(), c.arrival_s(step, w, 10_000, 320_000).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_compute_preset_carries_a_default_compute_term() {
+        let plain = CostModel::from_preset("hetero", 4, 0.0, 2).unwrap();
+        let hc = CostModel::from_preset("hetero-compute", 4, 0.0, 2).unwrap();
+        for w in 0..4u32 {
+            assert_eq!(plain.compute_s(w), 0.0);
+            assert!(hc.compute_s(w) >= 0.02, "worker {w}: {}", hc.compute_s(w));
+            // same seed, same link draws: the preset only adds compute
+            assert!(hc.arrival_s(0, w, 10_000, 320_000) > plain.arrival_s(0, w, 10_000, 320_000));
+        }
+    }
+
+    #[test]
+    fn straggler_delays_nonnegative_with_sane_mean() {
+        let c = CostModel::from_preset("datacenter", 4, 0.05, 11).unwrap();
+        let mut sum = 0.0;
+        let n = 2000;
+        for step in 0..n {
+            for w in 0..4u32 {
+                let s = c.straggler_s(step, w);
+                assert!(s >= 0.0);
+                sum += s;
+            }
+        }
+        let mean = sum / (4 * n) as f64;
+        assert!((mean - 0.05).abs() < 0.01, "empirical mean {mean}");
+        // disabled stragglers are exactly zero
+        let c0 = CostModel::from_preset("datacenter", 4, 0.0, 11).unwrap();
+        assert_eq!(c0.straggler_s(0, 0), 0.0);
+    }
+
+    #[test]
+    fn clock_monotone_under_advance() {
+        let mut c = CostModel::from_preset("edge", 2, 0.0, 1).unwrap();
+        let mut prev = c.now_s();
+        for step in 0..10 {
+            let dur = c.arrival_s(step, 0, 1000, 1000);
+            let now = c.advance(dur);
+            assert!(now >= prev);
+            assert!(now > prev, "positive-latency rounds must advance time");
+            prev = now;
+        }
+        // negative durations are clamped, never rewinding time
+        let before = c.now_s();
+        assert_eq!(c.advance(-5.0), before);
+    }
+}

@@ -3,13 +3,18 @@
 //! bits-x-axis figures can also be read as time-x-axis (the paper's
 //! motivation: communication is the bottleneck, §1).
 //!
-//! [`clock`] builds on this: a deterministic per-worker virtual clock
-//! (heterogeneous links + seeded straggler delays) that the round engine
-//! uses to decide simulated message arrival order.
+//! [`cost`] builds on this: a deterministic per-worker **cost model**
+//! (heterogeneous links + per-worker gradient-compute time + seeded
+//! straggler delays) that the round engine uses to decide simulated
+//! message arrival order — covering the full step, not just the
+//! transfer. [`clock`] is the back-compat shim for the pre-compute-term
+//! `VirtualClock` name.
 
 pub mod clock;
+pub mod cost;
 
 pub use clock::VirtualClock;
+pub use cost::CostModel;
 
 /// A simple star-topology link model (every worker has an identical
 /// uplink to the server).

@@ -131,7 +131,8 @@ pub struct TrainResult {
     pub cfg: TrainConfig,
     pub curve: Curve,
     pub total_bits: u64,
-    /// simulated wall-clock of the whole run (netsim virtual clock)
+    /// simulated wall-clock of the whole run (netsim cost model:
+    /// download + per-worker compute + upload + straggler)
     pub sim_time_s: f64,
     pub final_params: Vec<f32>,
     pub codec_name: String,

@@ -54,15 +54,31 @@ impl Quadratic {
     }
 }
 
+/// One per-round point of a synthetic run: the raw material for the
+/// loss-vs-simulated-time scenario figures (`figure scenario`).
+#[derive(Clone, Debug)]
+pub struct SynthPoint {
+    /// 1-based round index
+    pub step: u64,
+    /// simulated wall-clock at the end of the round (netsim cost model)
+    pub sim_s: f64,
+    /// cumulative uplink bits
+    pub bits: u64,
+    /// exact suboptimality `f(x) − f(x*)` after the round
+    pub suboptimality: f64,
+}
+
 /// Result of a synthetic run.
 pub struct SynthResult {
     pub final_suboptimality: f64,
     pub total_bits: u64,
-    /// simulated wall-clock of the run (netsim virtual clock)
+    /// simulated wall-clock of the run (netsim cost model)
     pub sim_time_s: f64,
     /// mean ‖x − x*‖² over the final quarter of steps (noise-robust)
     pub tail_suboptimality: f64,
     pub final_params: Vec<f32>,
+    /// per-round curve (suboptimality vs simulated time / bits)
+    pub points: Vec<SynthPoint>,
 }
 
 /// Run Alg. 1/2/3 (per `cfg.method`) on a [`Quadratic`] through the
@@ -95,11 +111,19 @@ pub fn run_quadratic(problem: &Quadratic, cfg: &TrainConfig) -> SynthResult {
     let mut eng = RoundEngine::from_cfg(engine::local_star(computes), server, cfg)
         .expect("engine options rejected (validate() should have caught this)");
     let mut tail = Vec::new();
+    let mut points = Vec::with_capacity(cfg.steps);
     let tail_start = cfg.steps - cfg.steps / 4;
     for step in 0..cfg.steps {
-        eng.run_round().expect("in-process round failed");
+        let rep = eng.run_round().expect("in-process round failed");
+        let sub = problem.suboptimality(eng.params());
+        points.push(SynthPoint {
+            step: rep.step + 1,
+            sim_s: rep.sim_now_s,
+            bits: rep.total_bits,
+            suboptimality: sub,
+        });
         if step >= tail_start {
-            tail.push(problem.suboptimality(eng.params()));
+            tail.push(sub);
         }
     }
     let sim_time_s = eng.sim_now_s();
@@ -110,6 +134,7 @@ pub fn run_quadratic(problem: &Quadratic, cfg: &TrainConfig) -> SynthResult {
         sim_time_s,
         tail_suboptimality: tail.iter().sum::<f64>() / tail.len().max(1) as f64,
         final_params: server.params,
+        points,
     }
 }
 
@@ -144,6 +169,21 @@ mod tests {
         let mut x = q.opt.clone();
         x[0] += 1.0;
         assert!((q.suboptimality(&x) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn synthetic_curve_tracks_rounds() {
+        let q = Quadratic::new(20, 4, 0.0, 1.0, 2);
+        let cfg = synth_cfg(Method::Sgd, 4, 30, 0.5, 500, 1);
+        let r = run_quadratic(&q, &cfg);
+        assert_eq!(r.points.len(), 30);
+        assert!(r
+            .points
+            .windows(2)
+            .all(|p| p[1].sim_s > p[0].sim_s && p[1].bits >= p[0].bits && p[1].step > p[0].step));
+        // full sync: nothing pending at shutdown, totals match the curve
+        assert_eq!(r.points.last().unwrap().bits, r.total_bits);
+        assert_eq!(r.points.last().unwrap().sim_s, r.sim_time_s);
     }
 
     #[test]

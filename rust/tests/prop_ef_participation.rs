@@ -123,7 +123,9 @@ fn shadow_consistency_case<E: HasShadow + 'static>(
         mlmc_dist::config::Participation::Sampled => {
             assert!(sat_out > 0, "{label}: sampled run never sat a worker out")
         }
-        mlmc_dist::config::Participation::Full => {}
+        // adaptive only defers when the arrival CDF shows an elbow, so
+        // no per-run deferral count is guaranteed (not exercised here)
+        mlmc_dist::config::Participation::Full | mlmc_dist::config::Participation::Adaptive => {}
     }
 }
 

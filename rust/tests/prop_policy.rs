@@ -1,0 +1,357 @@
+//! Participation-policy refactor properties (ISSUE 5):
+//!
+//! (a) The trait-based engine is **bit-identical** to the pre-refactor
+//!     engine semantics: a from-scratch oracle implementing the old
+//!     virtual-mode quorum protocol (k-th-smallest-arrival deadline,
+//!     per-worker dedupe, staleness weighting, bits charged once at
+//!     resolution, end-of-run drain) reproduces `run_quadratic` exactly
+//!     — params AND uplink accounting — for every stateless method and
+//!     every staleness strategy.
+//! (b) A policy object injected through `RoundEngine::with_policy` that
+//!     re-states the legacy fixed-quorum decisions matches the config
+//!     path bit-for-bit for the *stateful* EF methods too (acks,
+//!     shadows, rollbacks all flow through the same trait plumbing).
+//! (c) Adaptive quorum is deterministic (bit-exact replay), cuts
+//!     simulated time under straggler tails, and still converges.
+//! (d) The cost model's compute term is pure and exactly additive under
+//!     full sync, and unknown presets fail with the one centralized
+//!     error message.
+
+use mlmc_dist::config::{Method, TrainConfig};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, RoundMsg, Server};
+use mlmc_dist::engine::{
+    self, Arrival, CloseRule, Compute, ParticipationPolicy, RoundEngine, StaleAction,
+};
+use mlmc_dist::netsim::CostModel;
+use mlmc_dist::optim::Sgd;
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
+
+fn assert_bit_identical(name: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{name}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name}: params differ at {i}: {x} vs {y}");
+    }
+}
+
+/// The **pre-refactor** virtual-mode round protocol, restated from
+/// scratch for `Fresh`-aggregation methods with stateless encoders (ack
+/// handling is a no-op for them, so the oracle needs no ack plumbing):
+/// deadline at the k-th smallest simulated arrival, late messages
+/// buffered and resolved next round — dropped when superseded by their
+/// sender's on-time reply or by `stale(age) == None`, applied at
+/// `stale(age)` weight otherwise, stale-before-fresh in worker order,
+/// every transmitted message's bits charged exactly once, pending
+/// `Fresh` messages discarded-but-charged at shutdown.
+fn oracle_quorum_run(
+    problem: &Quadratic,
+    cfg: &TrainConfig,
+    k: usize,
+    stale: &dyn Fn(u64) -> Option<f32>,
+) -> (Vec<f32>, u64) {
+    let d = problem.d;
+    let m = cfg.workers;
+    let down_bits = 32 * d as u64;
+    let mut encoders: Vec<_> = (0..m).map(|_| build_encoder(cfg, d)).collect();
+    let mut server =
+        Server::new(vec![0.0; d], Box::new(Sgd { lr: cfg.lr }), agg_kind(&cfg.method));
+    let mut cost = CostModel::from_preset(&cfg.link, m, cfg.straggler, cfg.seed).unwrap();
+    if cfg.compute > 0.0 {
+        cost = cost.with_compute(cfg.compute, cfg.compute_spread);
+    }
+    // (worker, sent_step, comp)
+    let mut pending: Vec<(u32, u64, mlmc_dist::compress::Compressed)> = Vec::new();
+    for step in 0..cfg.steps as u64 {
+        let replies: Vec<(u32, f32, mlmc_dist::compress::Compressed)> = encoders
+            .iter_mut()
+            .enumerate()
+            .map(|(w, enc)| {
+                let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                let g = problem.grad(w, &server.params, &mut rng);
+                (w as u32, 0.0f32, enc.encode(&g, &mut rng))
+            })
+            .collect();
+        let arrivals: Vec<f64> = replies
+            .iter()
+            .map(|(w, _, comp)| cost.arrival_s(step, *w, comp.wire_bits(), down_bits))
+            .collect();
+        let deadline = if k < arrivals.len() {
+            let mut sorted = arrivals.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted[k - 1]
+        } else {
+            arrivals.iter().copied().fold(0.0, f64::max)
+        };
+        let mut on_time = Vec::new();
+        let mut late = Vec::new();
+        for ((w, _, comp), at) in replies.into_iter().zip(&arrivals) {
+            if *at <= deadline {
+                on_time.push((w, comp));
+            } else {
+                late.push((w, step, comp));
+            }
+        }
+        let on_time_ids: Vec<u32> = on_time.iter().map(|(w, _)| *w).collect();
+        let mut resolve = std::mem::take(&mut pending);
+        resolve.sort_by_key(|(w, s, _)| (*s, *w));
+        let mut apply: Vec<(u32, f32, mlmc_dist::compress::Compressed)> = Vec::new();
+        let mut dropped_bits = 0u64;
+        for (w, sent, comp) in resolve {
+            let superseded = on_time_ids.binary_search(&w).is_ok();
+            let age = step.saturating_sub(sent).max(1);
+            match if superseded { None } else { stale(age) } {
+                Some(weight) => apply.push((w, weight, comp)),
+                None => dropped_bits += comp.wire_bits(),
+            }
+        }
+        for (w, comp) in on_time {
+            apply.push((w, 1.0, comp));
+        }
+        let msgs: Vec<RoundMsg<'_>> = apply
+            .iter()
+            .map(|(w, weight, comp)| RoundMsg { worker: *w, weight: *weight, comp })
+            .collect();
+        server.apply_attributed(&msgs);
+        server.total_bits += dropped_bits;
+        cost.advance(deadline);
+        pending.extend(late);
+    }
+    // shutdown drain: Fresh stragglers are discarded but still charged
+    server.total_bits += pending.iter().map(|(_, _, c)| c.wire_bits()).sum::<u64>();
+    (server.params, server.total_bits)
+}
+
+#[test]
+fn trait_quorum_path_bit_identical_to_prerefactor_oracle_every_stateless_method() {
+    let q = Quadratic::new(64, 6, 0.05, 0.8, 11);
+    for name in ["sgd", "topk", "randk", "qsgd", "rtn", "sign", "mlmc-topk", "mlmc-fxp"] {
+        let mut cfg = synth_cfg(Method::parse(name).unwrap(), 6, 25, 0.05, 100, 5);
+        cfg.set("participation", "quorum").unwrap();
+        cfg.set("quorum", "3").unwrap();
+        cfg.set("link", "hetero").unwrap();
+        cfg.set("straggler", "0.05").unwrap();
+        cfg.validate().unwrap();
+        let (op, ob) = oracle_quorum_run(&q, &cfg, 3, &|age| Some(1.0 / (1.0 + age as f32)));
+        let r = run_quadratic(&q, &cfg);
+        assert_eq!(ob, r.total_bits, "{name}: uplink accounting diverged");
+        assert_bit_identical(name, &op, &r.final_params);
+    }
+}
+
+#[test]
+fn every_stale_weight_strategy_matches_its_oracle() {
+    let q = Quadratic::new(48, 5, 0.05, 1.0, 3);
+    let cases: [(&str, Box<dyn Fn(u64) -> Option<f32>>); 4] = [
+        ("damp", Box::new(|age| Some(1.0 / (1.0 + age as f32)))),
+        ("full", Box::new(|_| Some(1.0))),
+        ("drop", Box::new(|_| None)),
+        ("exp", Box::new(|age| Some(0.5f32.powi(age as i32)))),
+    ];
+    for (staleness, stale) in &cases {
+        let mut cfg = synth_cfg(Method::TopK, 5, 30, 0.05, 100, 7);
+        cfg.set("participation", "quorum").unwrap();
+        cfg.set("quorum", "2").unwrap();
+        cfg.set("link", "hetero").unwrap();
+        cfg.set("straggler", "0.05").unwrap();
+        cfg.set("staleness", staleness).unwrap();
+        cfg.validate().unwrap();
+        let (op, ob) = oracle_quorum_run(&q, &cfg, 2, stale.as_ref());
+        let r = run_quadratic(&q, &cfg);
+        assert_eq!(ob, r.total_bits, "staleness={staleness}");
+        assert_bit_identical(staleness, &op, &r.final_params);
+    }
+}
+
+/// The legacy fixed-quorum decisions restated as a hand-written policy
+/// object: if the trait plumbing is faithful, injecting this through
+/// `with_policy` must match the `participation=quorum` config path
+/// bit-for-bit — including for stateful EF methods, whose ack/rollback
+/// flow all runs downstream of the policy's decisions.
+struct LegacyQuorum {
+    k: usize,
+}
+
+impl ParticipationPolicy for LegacyQuorum {
+    fn name(&self) -> &'static str {
+        "legacy-quorum"
+    }
+
+    fn draw(&self, _step: u64, m: usize) -> Vec<u32> {
+        (0..m as u32).collect()
+    }
+
+    fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+        CloseRule::Count(self.k)
+    }
+
+    fn close_count(&mut self, _step: u64, participants: usize) -> usize {
+        self.k.min(participants)
+    }
+
+    fn stale_weight(&self, age: u64) -> StaleAction {
+        StaleAction::Apply(1.0 / (1.0 + age as f32))
+    }
+}
+
+fn run_with_injected_policy(
+    problem: &Quadratic,
+    cfg: &TrainConfig,
+    policy: Box<dyn ParticipationPolicy>,
+) -> (Vec<f32>, u64) {
+    let d = problem.d;
+    let server =
+        Server::new(vec![0.0; d], Box::new(Sgd { lr: cfg.lr }), agg_kind(&cfg.method));
+    let computes: Vec<Compute<'_>> = (0..cfg.workers)
+        .map(|w| {
+            engine::compute_with_acks(
+                build_encoder(cfg, d),
+                |enc, ack| enc.on_ack(ack),
+                move |enc, step, params| {
+                    let mut rng = Rng::for_stream(cfg.seed ^ 0x5EED, w as u64, step);
+                    let g = problem.grad(w, params, &mut rng);
+                    Ok((0.0f32, enc.encode(&g, &mut rng)))
+                },
+            )
+        })
+        .collect();
+    let mut eng =
+        RoundEngine::with_policy(engine::local_star(computes), server, cfg, policy).unwrap();
+    for _ in 0..cfg.steps {
+        eng.run_round().unwrap();
+    }
+    let server = eng.finish().unwrap();
+    (server.params, server.total_bits)
+}
+
+#[test]
+fn injected_legacy_policy_matches_cfg_path_for_stateful_ef_methods() {
+    let q = Quadratic::new(56, 5, 0.05, 1.0, 19);
+    for name in ["ef14", "ef21-sgdm", "mlmc-topk"] {
+        let mut cfg = synth_cfg(Method::parse(name).unwrap(), 5, 40, 0.05, 150, 13);
+        cfg.set("participation", "quorum").unwrap();
+        cfg.set("quorum", "3").unwrap();
+        cfg.set("link", "hetero").unwrap();
+        cfg.set("straggler", "0.05").unwrap();
+        cfg.validate().unwrap();
+        let via_cfg = run_quadratic(&q, &cfg);
+        let (params, bits) =
+            run_with_injected_policy(&q, &cfg, Box::new(LegacyQuorum { k: 3 }));
+        assert_eq!(bits, via_cfg.total_bits, "{name}");
+        assert_bit_identical(name, &params, &via_cfg.final_params);
+    }
+}
+
+#[test]
+fn adaptive_runs_replay_exactly_and_differ_across_seeds() {
+    let q = Quadratic::new(80, 8, 0.05, 1.0, 21);
+    for link in ["hetero", "hetero-compute"] {
+        let mut cfg = synth_cfg(Method::MlmcTopK, 8, 40, 0.1, 150, 13);
+        cfg.set("participation", "adaptive").unwrap();
+        cfg.set("link", link).unwrap();
+        cfg.set("straggler", "0.05").unwrap();
+        cfg.validate().unwrap();
+        let a = run_quadratic(&q, &cfg);
+        let b = run_quadratic(&q, &cfg);
+        assert_bit_identical(link, &a.final_params, &b.final_params);
+        assert_eq!(a.total_bits, b.total_bits, "{link}");
+        assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "{link}");
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 14;
+        let c = run_quadratic(&q, &cfg2);
+        assert_ne!(a.final_params, c.final_params, "{link}");
+    }
+}
+
+#[test]
+fn adaptive_cuts_sim_time_under_straggler_tails_and_converges() {
+    // constant-bit messages (Top-k) keep arrivals identical across
+    // policies, so per round the elbow deadline is <= the full-sync
+    // deadline by construction; with 100ms straggler tails it must fire
+    // often enough to win outright, while still converging
+    let q = Quadratic::new(100, 8, 0.0, 0.5, 5);
+    let mut full = synth_cfg(Method::TopK, 8, 120, 0.1, 150, 2);
+    full.set("link", "hetero").unwrap();
+    full.set("straggler", "0.1").unwrap();
+    full.validate().unwrap();
+    let mut adaptive = full.clone();
+    adaptive.set("participation", "adaptive").unwrap();
+    adaptive.validate().unwrap();
+
+    let rf = run_quadratic(&q, &full);
+    let ra = run_quadratic(&q, &adaptive);
+    assert!(
+        ra.sim_time_s < rf.sim_time_s,
+        "adaptive sim time {} must beat full sync {}",
+        ra.sim_time_s,
+        rf.sim_time_s
+    );
+    assert!(ra.final_suboptimality < 0.05, "adaptive drifted: {}", ra.final_suboptimality);
+    // per-round domination, not just in total: the curves never cross
+    for (pa, pf) in ra.points.iter().zip(&rf.points) {
+        assert!(pa.sim_s <= pf.sim_s + 1e-12, "step {}: {} > {}", pa.step, pa.sim_s, pf.sim_s);
+    }
+}
+
+#[test]
+fn compute_term_shifts_full_sync_time_exactly() {
+    // full sync on homogeneous compute: every round's deadline grows by
+    // exactly the compute term, and the trajectory (bits) is unchanged
+    let q = Quadratic::new(60, 4, 0.05, 0.5, 9);
+    let mut base = synth_cfg(Method::TopK, 4, 30, 0.1, 100, 3);
+    base.set("link", "edge").unwrap();
+    base.validate().unwrap();
+    let mut with_compute = base.clone();
+    with_compute.set("compute", "0.05").unwrap();
+    with_compute.validate().unwrap();
+    let r0 = run_quadratic(&q, &base);
+    let r1 = run_quadratic(&q, &with_compute);
+    assert_bit_identical("compute-invariant-trajectory", &r0.final_params, &r1.final_params);
+    assert_eq!(r0.total_bits, r1.total_bits);
+    let expect = r0.sim_time_s + 30.0 * 0.05;
+    assert!(
+        (r1.sim_time_s - expect).abs() < 1e-9,
+        "sim time {} != {} (+30 x 50ms)",
+        r1.sim_time_s,
+        expect
+    );
+}
+
+#[test]
+fn adaptive_end_to_end_on_the_compute_preset() {
+    // participation=adaptive x link=hetero-compute: the full new-knob
+    // surface in one run — validates, runs, reports monotone sim time
+    let q = Quadratic::new(60, 8, 0.05, 0.5, 4);
+    let mut cfg = synth_cfg(Method::MlmcTopK, 8, 50, 0.1, 100, 1);
+    cfg.set("participation", "adaptive").unwrap();
+    cfg.set("link", "hetero-compute").unwrap();
+    cfg.set("straggler", "0.05").unwrap();
+    cfg.set("staleness", "exp").unwrap();
+    cfg.set("stale_decay", "0.6").unwrap();
+    cfg.validate().unwrap();
+    let r = run_quadratic(&q, &cfg);
+    assert_eq!(r.points.len(), 50);
+    assert!(r.points.windows(2).all(|p| p[1].sim_s > p[0].sim_s));
+    assert!(r.tail_suboptimality < 0.1, "{}", r.tail_suboptimality);
+}
+
+#[test]
+fn unknown_preset_error_is_centralized_and_lists_presets() {
+    let mut cfg = synth_cfg(Method::Sgd, 2, 2, 0.1, 100, 1);
+    cfg.link = "carrier-pigeon".into();
+    let server = Server::new(vec![0.0; 8], Box::new(Sgd { lr: 0.1 }), agg_kind(&cfg.method));
+    let computes: Vec<Compute<'_>> = (0..2)
+        .map(|_| {
+            engine::compute_fn(move |_step, params: &[f32]| {
+                Ok((0.0, mlmc_dist::compress::Compressed::dense(params.to_vec())))
+            })
+        })
+        .collect();
+    let err = RoundEngine::from_cfg(engine::local_star(computes), server, &cfg)
+        .err()
+        .expect("unknown preset must be rejected")
+        .to_string();
+    assert!(err.contains("carrier-pigeon"), "{err}");
+    for name in mlmc_dist::netsim::cost::preset_names() {
+        assert!(err.contains(name), "error must list preset {name}: {err}");
+    }
+}
