@@ -15,7 +15,7 @@ use mlmc_dist::benchlib::{black_box, Bench, Stats};
 use mlmc_dist::config::{Method, TrainConfig};
 use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
 use mlmc_dist::engine::{local_star, Compute, RoundEngine};
-use mlmc_dist::netsim::clock;
+use mlmc_dist::netsim::cost;
 use mlmc_dist::tensor::Rng;
 
 const M: usize = 8;
@@ -99,7 +99,7 @@ fn main() {
     // simulated round time per LinkModel preset (FullSync, one round's
     // deadline; deterministic, so measured once — not a wall-clock case)
     let mut preset_rows: Vec<(String, f64)> = Vec::new();
-    for preset in clock::preset_names() {
+    for preset in cost::preset_names() {
         let mut cfg = base_cfg(d, 1, "full");
         cfg.set("link", preset).unwrap();
         cfg.set("straggler", "0").unwrap();

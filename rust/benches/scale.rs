@@ -1,0 +1,177 @@
+//! Population-scale benchmark: event-heap rounds ([`RoundSim`]) at
+//! M ∈ {10³, 10⁴, 10⁵, 10⁶}, reporting rounds/sec and peak RSS so the
+//! O(active)-memory claim is *measured*, not asserted.
+//!
+//! A sampled-256 cohort runs at every M — the heap only ever holds the
+//! drawn participants, so a million-worker population costs what a
+//! thousand-worker one does. Quorum (majority) and adaptive hear the
+//! whole population (O(M) arrivals per round) and are benched only up
+//! to M = 10⁴, where materializing M arrivals is the measurement and
+//! not a stall.
+//!
+//! Peak RSS is `VmHWM` from `/proc/self/status`: a process-cumulative
+//! high-water mark, so the Ms run in **ascending order** and each entry
+//! records the mark right after its cases — sublinear growth across
+//! entries is the signal. On non-Linux hosts the mark reads 0 and the
+//! RSS assertion is skipped.
+//!
+//! Emits `results/BENCH_scale.json`. Smoke mode (CI):
+//! `MLMC_BENCH_MS=60 SCALE_BENCH_M=1000,10000 cargo bench -p mlmc-dist
+//! --bench scale`; CI asserts the 10⁴ mark stays within 2× of the 10³
+//! mark, and this binary asserts the same whenever both are present.
+
+use std::time::{Duration, Instant};
+
+use mlmc_dist::ef::AggKind;
+use mlmc_dist::engine::policy::{
+    AdaptiveQuorum, ClientSampling, FixedQuorum, ParticipationPolicy, StaleWeight,
+};
+use mlmc_dist::netsim::{CostSpec, RoundSim};
+
+/// Constant-size message model: a 64-f32 dense uplink reply against a
+/// 1024-f32 broadcast.
+const UP_BITS: u64 = 32 * 64;
+const DOWN_BITS: u64 = 32 * 1024;
+const COHORT: f64 = 256.0;
+const FULL_POLICY_MAX_M: usize = 10_000;
+
+struct Case {
+    m: usize,
+    policy: &'static str,
+    active: usize,
+    rounds: u64,
+    rounds_per_s: f64,
+    sim_s: f64,
+}
+
+struct Entry {
+    m: usize,
+    peak_rss_kb: u64,
+    cases: Vec<Case>,
+}
+
+/// `VmHWM` (peak resident set, kB) of this process; 0 where
+/// `/proc/self/status` does not exist.
+fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|kb| kb.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+fn bench_policy(m: usize, name: &'static str, policy: Box<dyn ParticipationPolicy>) -> Case {
+    let budget_ms: u64 = std::env::var("MLMC_BENCH_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let budget = Duration::from_millis(budget_ms);
+    let cost = CostSpec::preset("hetero")
+        .expect("known preset")
+        .workers(m)
+        .straggler(0.02)
+        .seed(7)
+        .build();
+    let mut sim = RoundSim::new(cost, policy, AggKind::Fresh, UP_BITS, DOWN_BITS);
+    let t = Instant::now();
+    let mut rounds = 0u64;
+    let mut active = 0usize;
+    // at least 3 rounds even if one round blows the whole budget
+    while rounds < 3 || t.elapsed() < budget {
+        active = sim.run_round().expect("bench round must close").participants;
+        rounds += 1;
+    }
+    sim.drain_pending();
+    let wall = t.elapsed().as_secs_f64();
+    let rounds_per_s = if wall > 0.0 { rounds as f64 / wall } else { 0.0 };
+    println!(
+        "M={m:<9} {name:<10} active={active:<8} rounds={rounds:<7} \
+         {rounds_per_s:>10.1} rounds/s  sim={:.3}s",
+        sim.sim_now_s()
+    );
+    Case { m, policy: name, active, rounds, rounds_per_s, sim_s: sim.sim_now_s() }
+}
+
+fn main() {
+    let ms_spec =
+        std::env::var("SCALE_BENCH_M").unwrap_or_else(|_| "1000,10000,100000,1000000".into());
+    let mut ms: Vec<usize> = ms_spec.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+    ms.sort_unstable();
+    ms.dedup();
+    assert!(!ms.is_empty(), "SCALE_BENCH_M={ms_spec:?} parsed to no population sizes");
+    println!("== bench suite: scale ==  M grid: {ms:?}");
+
+    let mut entries: Vec<Entry> = Vec::new();
+    for &m in &ms {
+        let mut cases = Vec::new();
+        let frac = (COHORT / m as f64) as f32;
+        cases.push(bench_policy(
+            m,
+            "sampled",
+            Box::new(ClientSampling::new(frac, 7, StaleWeight::Damp)),
+        ));
+        if m <= FULL_POLICY_MAX_M {
+            cases.push(bench_policy(
+                m,
+                "quorum",
+                Box::new(FixedQuorum::new(m / 2 + 1, StaleWeight::Damp)),
+            ));
+            cases.push(bench_policy(
+                m,
+                "adaptive",
+                Box::new(AdaptiveQuorum::new(StaleWeight::Damp)),
+            ));
+        }
+        let rss = peak_rss_kb();
+        println!("M={m:<9} peak_rss={rss} kB");
+        entries.push(Entry { m, peak_rss_kb: rss, cases });
+    }
+
+    write_json(&entries);
+
+    // the memory contract, asserted in-binary whenever the grid allows:
+    // a 10x population must not cost 2x the resident set
+    let rss_at = |m: usize| {
+        entries.iter().find(|e| e.m == m).map(|e| e.peak_rss_kb).filter(|&kb| kb > 0)
+    };
+    if let (Some(small), Some(big)) = (rss_at(1_000), rss_at(10_000)) {
+        assert!(
+            big <= 2 * small,
+            "peak RSS grew superlinearly: {small} kB at M=1e3 vs {big} kB at M=1e4"
+        );
+        println!("rss check: M=1e4 uses {big} kB <= 2x the {small} kB at M=1e3");
+    }
+}
+
+fn write_json(entries: &[Entry]) {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"suite\": \"scale\",\n");
+    let _ = writeln!(s, "  \"up_bits\": {UP_BITS},");
+    let _ = writeln!(s, "  \"down_bits\": {DOWN_BITS},");
+    s.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        let _ = writeln!(s, "    {{\"m\": {}, \"peak_rss_kb\": {}, \"cases\": [", e.m, e.peak_rss_kb);
+        for (j, c) in e.cases.iter().enumerate() {
+            let comma = if j + 1 < e.cases.len() { "," } else { "" };
+            let _ = writeln!(
+                s,
+                "      {{\"m\": {}, \"policy\": {:?}, \"active\": {}, \"rounds\": {}, \
+                 \"rounds_per_s\": {:.3}, \"sim_s\": {:.6}}}{}",
+                c.m, c.policy, c.active, c.rounds, c.rounds_per_s, c.sim_s, comma
+            );
+        }
+        let comma = if i + 1 < entries.len() { "," } else { "" };
+        let _ = writeln!(s, "    ]}}{comma}");
+    }
+    s.push_str("  ]\n}\n");
+    let path = mlmc_dist::util::results_dir().join("BENCH_scale.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -191,13 +191,20 @@ impl fmt::Display for Staleness {
     }
 }
 
+/// Largest validated population size M (2^24 ≈ 16.8M simulated
+/// workers). Virtual-mode memory is O(active participants), not O(M)
+/// (the event-heap netsim contract), so the bound is not about heap
+/// size — it keeps every `(seed, worker, step)` stream index, bit
+/// budget, and CSV cell comfortably inside exact-integer f64 range.
+pub const MAX_WORKERS: usize = 16_777_216;
+
 /// Full training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     /// model name from artifacts/metadata.json ("tx-tiny", "cnn-tiny", …)
     pub model: String,
     pub method: Method,
-    /// number of workers M
+    /// number of workers M, validated into `1..=`[`MAX_WORKERS`]
     pub workers: usize,
     pub steps: usize,
     pub lr: f32,
@@ -397,6 +404,12 @@ impl TrainConfig {
         if self.workers == 0 {
             return Err("workers must be >= 1".into());
         }
+        if self.workers > MAX_WORKERS {
+            return Err(format!(
+                "workers {} exceeds the supported maximum {MAX_WORKERS} (2^24)",
+                self.workers
+            ));
+        }
         if self.steps == 0 {
             return Err("steps must be >= 1".into());
         }
@@ -584,6 +597,11 @@ mod tests {
         let mut c = TrainConfig::default();
         c.workers = 0;
         assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.workers = MAX_WORKERS + 1;
+        assert!(c.validate().unwrap_err().contains("supported maximum"));
+        c.workers = MAX_WORKERS;
+        assert!(c.validate().is_ok(), "the maximum itself is a legal population");
         let mut c = TrainConfig::default();
         c.frac_pm = 2000;
         assert!(c.validate().is_err());

@@ -76,7 +76,8 @@ pub use framing::{
     encode_round, Reply, RoundDown, ROUND_FRAME_VERSION,
 };
 pub use policy::{
-    participants, Arrival, CloseRule, ParticipationPolicy, StaleAction, StaleWeight,
+    participants, Arrival, ArrivalView, CloseRule, ParticipationPolicy, SliceArrivals,
+    StaleAction, StaleWeight,
 };
 
 use std::collections::VecDeque;
@@ -88,7 +89,7 @@ use crate::compress::Compressed;
 use crate::config::TrainConfig;
 use crate::coordinator::{RoundMsg, Server};
 use crate::ef::{AckEntry, AckStatus, AggKind};
-use crate::netsim::CostModel;
+use crate::netsim::{CostModel, CostSpec};
 use crate::transport::{
     Frame, LocalStar, Transport, WorkerLink, FRAME_PARAMS, FRAME_RESEND, FRAME_SHUTDOWN,
 };
@@ -301,12 +302,7 @@ impl<T: Transport> RoundEngine<T> {
         policy: Box<dyn ParticipationPolicy>,
     ) -> Result<Self> {
         let m = transport.workers();
-        let cost = CostModel::from_preset(&cfg.link, m, cfg.straggler, cfg.seed)?;
-        let cost = if cfg.compute > 0.0 {
-            cost.with_compute(cfg.compute, cfg.compute_spread)
-        } else {
-            cost
-        };
+        let cost = CostSpec::from_train_cfg(cfg, m)?.build();
         let opts = EngineOpts {
             policy,
             cost,
@@ -501,8 +497,13 @@ impl<T: Transport> RoundEngine<T> {
         // the round lasts until the policy's deadline: a `Count(k)` rule
         // closes at the k-th smallest arrival (the last arrival when
         // k saturates), an `AtTime` rule at that instant. Ties at the
-        // deadline are all on time (>= k on-time messages is fine).
-        let deadline = match self.opts.policy.close_at(step, &observed) {
+        // deadline are all on time (>= k on-time messages is fine). The
+        // policy reads the arrivals through the incremental view
+        // protocol; its sorted prefix stays indexable afterwards, so the
+        // engine can resolve a Count(k) deadline no matter how much of
+        // the view the policy consumed.
+        let mut view = SliceArrivals::new(&observed);
+        let deadline = match self.opts.policy.close_at(step, &mut view) {
             CloseRule::AtTime(t) => t,
             // a round can never close on zero replies — the config path
             // validates quorum >= 1, so this only fires for a buggy
@@ -512,12 +513,16 @@ impl<T: Transport> RoundEngine<T> {
                 bail!("policy {:?} returned CloseRule::Count(0)", self.opts.policy.name())
             }
             CloseRule::Count(k) => {
-                if k < observed.len() {
-                    let mut sorted: Vec<f64> = observed.iter().map(|a| a.at_s).collect();
-                    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                    sorted[k - 1]
+                let n = view.population();
+                if n == 0 {
+                    0.0
                 } else {
-                    observed.iter().map(|a| a.at_s).fold(0.0, f64::max)
+                    // k < n: the k-th smallest arrival; saturated k: the
+                    // last arrival (same deadline value as the eager
+                    // sort-and-index it replaces)
+                    view.nth(if k < n { k - 1 } else { n - 1 })
+                        .expect("index < population")
+                        .at_s
                 }
             }
         };

@@ -10,9 +10,13 @@
 //!    base participant set, a pure function of `(step, m)` (plus the
 //!    seed the policy was built with). Exclusion/re-admission is engine
 //!    state layered on top.
-//! 2. **Round close** — in virtual-time mode the engine observes every
-//!    reply's simulated [`Arrival`] and asks
-//!    [`ParticipationPolicy::close_at`] for a [`CloseRule`]; in
+//! 2. **Round close** — in virtual-time mode the engine hands
+//!    [`ParticipationPolicy::close_at`] an incremental [`ArrivalView`]
+//!    of the round's simulated arrivals — a sorted prefix read lazily
+//!    via [`ArrivalView::nth`] plus the population count — and gets a
+//!    [`CloseRule`] back. Policies that decide without looking
+//!    (full sync, fixed quorum, sampling) never touch the view, so a
+//!    million-worker round prices no arrival it does not need; in
 //!    real-time mode (TCP) arrivals are unknowable up front, so
 //!    [`ParticipationPolicy::close_count`] supplies the number of
 //!    current-step replies that close the round.
@@ -27,18 +31,20 @@
 //!
 //! * **Determinism.** Every decision is a pure function of the policy's
 //!    construction parameters and its observed arrival history — never
-//!    of wall time or physical gather order. [`AdaptiveQuorum::close_at`]
-//!    sorts its input, so any permutation of the same arrival multiset
+//!    of wall time or physical gather order. An [`ArrivalView`] yields
+//!    arrivals in sorted `(at_s, worker)` order whatever order they
+//!    were gathered in, so any permutation of the same arrival multiset
 //!    yields the same close rule; with the deterministic
 //!    [`CostModel`](crate::netsim::CostModel) driving arrivals, adaptive
 //!    runs replay bit-for-bit.
-//! * **Bit-identity.** [`FullSync`], [`FixedQuorum`], and
-//!    [`ClientSampling`] reproduce the pre-refactor engine's decisions
+//! * **Bit-identity.** [`FullSync`], [`FixedQuorum`], [`ClientSampling`],
+//!    and [`AdaptiveQuorum`] restate the pre-`ArrivalView` decisions
 //!    **bit-identically**: the same participant draw (same RNG stream
 //!    and salt), the same close deadline (k-th smallest simulated
-//!    arrival under quorum, last arrival otherwise, ties on time), and
-//!    the same stale weights (`1/(1+age)`, `1.0`, drop). The PR 2/3/4
-//!    property suites (`prop_engine.rs`, `prop_ef_participation.rs`,
+//!    arrival under quorum, last arrival otherwise, the elbow's exact
+//!    streamed equivalent for adaptive, ties on time), and the same
+//!    stale weights (`1/(1+age)`, `1.0`, drop). The PR 2/3/4 property
+//!    suites (`prop_engine.rs`, `prop_ef_participation.rs`,
 //!    `prop_recovery.rs`) pin this and pass unchanged.
 
 use anyhow::{bail, Result};
@@ -61,6 +67,55 @@ pub const ELBOW_GAP_FRAC: f64 = 0.25;
 pub struct Arrival {
     pub worker: u32,
     pub at_s: f64,
+}
+
+/// Incremental, sorted view of one round's simulated arrivals — the
+/// close protocol's read surface. `nth(i)` is the i-th **smallest**
+/// arrival (ties broken by worker id), materialized lazily: a policy
+/// that reads only a prefix never forces the arrivals behind it to be
+/// priced or stored, which is what keeps heap-backed rounds O(active).
+/// Already-read indices stay readable in any order (free replay), so a
+/// policy's consumption never hides an arrival from the engine's own
+/// deadline resolution.
+pub trait ArrivalView {
+    /// The full simulated population M this round draws from (not the
+    /// reply count — a sampled round's view still reports M).
+    fn population(&self) -> usize;
+
+    /// The i-th smallest arrival, or `None` when fewer than `i + 1`
+    /// replies exist this round.
+    fn nth(&mut self, i: usize) -> Option<Arrival>;
+}
+
+/// [`ArrivalView`] over an eagerly gathered arrival slice (the classic
+/// engine path, and the adapter that lets the old oracle-style tests
+/// restate their decisions on the new surface): sorts a copy up front,
+/// then serves indexed reads. Population = slice length.
+pub struct SliceArrivals {
+    sorted: Vec<Arrival>,
+}
+
+impl SliceArrivals {
+    pub fn new(arrivals: &[Arrival]) -> Self {
+        let mut sorted = arrivals.to_vec();
+        sorted.sort_by(|a, b| {
+            a.at_s
+                .partial_cmp(&b.at_s)
+                .expect("arrival times are never NaN")
+                .then(a.worker.cmp(&b.worker))
+        });
+        SliceArrivals { sorted }
+    }
+}
+
+impl ArrivalView for SliceArrivals {
+    fn population(&self) -> usize {
+        self.sorted.len()
+    }
+
+    fn nth(&mut self, i: usize) -> Option<Arrival> {
+        self.sorted.get(i).copied()
+    }
 }
 
 /// How a round closes, as decided by the policy.
@@ -135,11 +190,11 @@ pub trait ParticipationPolicy {
     /// `(step, m)`, identical on every node.
     fn draw(&self, step: u64, m: usize) -> Vec<u32>;
 
-    /// Virtual mode: decide the round close from every observed arrival
-    /// of the current round (`&mut` so adaptive policies can record
-    /// history; the decision itself must be a pure function of the
-    /// arrival multiset).
-    fn close_at(&mut self, step: u64, arrivals: &[Arrival]) -> CloseRule;
+    /// Virtual mode: decide the round close from the round's
+    /// [`ArrivalView`] (`&mut` on both sides so adaptive policies can
+    /// record history and the view can materialize lazily; the decision
+    /// itself must be a pure function of the arrival multiset).
+    fn close_at(&mut self, step: u64, arrivals: &mut dyn ArrivalView) -> CloseRule;
 
     /// Real-time mode: how many current-step replies close the round,
     /// given the participant count (arrival times are unknowable up
@@ -173,7 +228,9 @@ pub fn participants(
 /// The client-sampling draw: ceil, as documented on
 /// [`Participation::Sampled`] — a 30% draw over M=4 means 2 clients,
 /// never fewer than the fraction. Bit-identical to the pre-refactor
-/// engine (same stream, same salt).
+/// engine (same stream, same salt), and O(k) in the draw size — never
+/// O(M) — so sampling from a million-worker population instantiates
+/// nothing absent.
 fn sampled_draw(sample_frac: f32, seed: u64, step: u64, m: usize) -> Vec<u32> {
     let k = ((m as f64 * sample_frac as f64).ceil() as usize).clamp(1, m);
     let mut rng = Rng::for_stream(seed ^ SAMPLE_SALT, 0, step);
@@ -203,7 +260,7 @@ impl ParticipationPolicy for FullSync {
         (0..m as u32).collect()
     }
 
-    fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+    fn close_at(&mut self, _step: u64, _arrivals: &mut dyn ArrivalView) -> CloseRule {
         CloseRule::Count(usize::MAX)
     }
 
@@ -238,7 +295,7 @@ impl ParticipationPolicy for FixedQuorum {
         (0..m as u32).collect()
     }
 
-    fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+    fn close_at(&mut self, _step: u64, _arrivals: &mut dyn ArrivalView) -> CloseRule {
         CloseRule::Count(self.k)
     }
 
@@ -252,7 +309,9 @@ impl ParticipationPolicy for FixedQuorum {
 }
 
 /// Client sampling: a deterministic `(seed, step)` draw participates;
-/// the round waits for every drawn client.
+/// the round waits for every drawn client. Never reads the arrival
+/// view, so with a heap-backed round it closes over a million-worker
+/// population while pricing only the drawn cohort.
 pub struct ClientSampling {
     pub frac: f32,
     seed: u64,
@@ -274,7 +333,7 @@ impl ParticipationPolicy for ClientSampling {
         sampled_draw(self.frac, self.seed, step, m)
     }
 
-    fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+    fn close_at(&mut self, _step: u64, _arrivals: &mut dyn ArrivalView) -> CloseRule {
         CloseRule::Count(usize::MAX)
     }
 
@@ -296,6 +355,14 @@ impl ParticipationPolicy for ClientSampling {
 /// simulated round time is never longer than full sync on the same
 /// arrivals, and never closes below majority.
 ///
+/// The elbow consumes the [`ArrivalView`] **incrementally** in arrival
+/// order with O(1) policy state (previous time, best gap so far, running
+/// max) — the exact streamed restatement of the historical sort-then-
+/// scan, decision for decision. The spread test needs the last arrival,
+/// so adaptive necessarily materializes all of a round's participants
+/// (O(participants), not O(1)); the O(active) memory win belongs to
+/// policies that never read the view at all (sampling, fixed quorum).
+///
 /// The elbow is decided from the current round's complete (simulated)
 /// arrival set, so it is a **virtual-clock feature**: an engine is
 /// permanently virtual or real-time (fixed at construction from the
@@ -311,37 +378,6 @@ impl AdaptiveQuorum {
     pub fn new(stale: StaleWeight) -> Self {
         AdaptiveQuorum { stale }
     }
-
-    /// The elbow rule on a round's arrival times: returns `(k, deadline)`
-    /// with `k` the number of on-time replies. Pure in the multiset of
-    /// times (the input is sorted internally by the caller).
-    fn elbow(ts: &[f64]) -> (usize, f64) {
-        let m = ts.len();
-        let last = ts.iter().copied().fold(0.0, f64::max);
-        let floor = m / 2 + 1;
-        if m < 3 || floor >= m {
-            return (m, last);
-        }
-        let span = last - ts[0];
-        if span <= 0.0 {
-            return (m, last);
-        }
-        // k on-time replies means cutting between ts[k-1] and ts[k]
-        let mut best_k = m;
-        let mut best_gap = 0.0;
-        for k in floor..m {
-            let gap = ts[k] - ts[k - 1];
-            if gap > best_gap {
-                best_gap = gap;
-                best_k = k;
-            }
-        }
-        if best_k < m && best_gap >= ELBOW_GAP_FRAC * span {
-            (best_k, ts[best_k - 1])
-        } else {
-            (m, last)
-        }
-    }
 }
 
 impl ParticipationPolicy for AdaptiveQuorum {
@@ -353,11 +389,52 @@ impl ParticipationPolicy for AdaptiveQuorum {
         (0..m as u32).collect()
     }
 
-    fn close_at(&mut self, _step: u64, arrivals: &[Arrival]) -> CloseRule {
-        let mut ts: Vec<f64> = arrivals.iter().map(|a| a.at_s).collect();
-        ts.sort_by(|a, b| a.partial_cmp(b).expect("arrival times are never NaN"));
-        let (_k, deadline) = Self::elbow(&ts);
-        CloseRule::AtTime(deadline)
+    fn close_at(&mut self, _step: u64, arrivals: &mut dyn ArrivalView) -> CloseRule {
+        // reply count first (the majority floor needs it); the view
+        // materializes its sorted prefix once here, replayed below
+        let mut m = 0usize;
+        while arrivals.nth(m).is_some() {
+            m += 1;
+        }
+        let floor = m / 2 + 1;
+        // one ascending scan: k on-time replies means cutting between
+        // the (k-1)-th and k-th arrival, so at index i >= floor the
+        // candidate gap is t[i] - t[i-1] with deadline t[i-1]; ties on
+        // the best gap keep the earliest (strict >), as ever
+        let mut first = 0.0f64;
+        let mut prev = 0.0f64;
+        let mut last = 0.0f64;
+        let mut best_k = m;
+        let mut best_gap = 0.0f64;
+        let mut best_deadline = 0.0f64;
+        for i in 0..m {
+            let t = arrivals.nth(i).expect("arrival count cannot shrink mid-scan").at_s;
+            if i == 0 {
+                first = t;
+            }
+            if i >= floor {
+                let gap = t - prev;
+                if gap > best_gap {
+                    best_gap = gap;
+                    best_k = i;
+                    best_deadline = prev;
+                }
+            }
+            last = last.max(t);
+            prev = t;
+        }
+        if m < 3 || floor >= m {
+            return CloseRule::AtTime(last);
+        }
+        let span = last - first;
+        if span <= 0.0 {
+            return CloseRule::AtTime(last);
+        }
+        if best_k < m && best_gap >= ELBOW_GAP_FRAC * span {
+            CloseRule::AtTime(best_deadline)
+        } else {
+            CloseRule::AtTime(last)
+        }
     }
 
     fn close_count(&mut self, _step: u64, participants: usize) -> usize {
@@ -420,6 +497,27 @@ mod tests {
         ts.iter().enumerate().map(|(w, &t)| Arrival { worker: w as u32, at_s: t }).collect()
     }
 
+    fn view(ts: &[f64]) -> SliceArrivals {
+        SliceArrivals::new(&arrivals(ts))
+    }
+
+    #[test]
+    fn slice_view_serves_sorted_indexed_reads() {
+        let mut v = SliceArrivals::new(&[
+            Arrival { worker: 3, at_s: 0.5 },
+            Arrival { worker: 1, at_s: 0.2 },
+            Arrival { worker: 7, at_s: 0.2 }, // tie: worker id breaks it
+            Arrival { worker: 0, at_s: 0.9 },
+        ]);
+        assert_eq!(v.population(), 4);
+        // indexed, replayable, any order
+        assert_eq!(v.nth(3).map(|a| a.worker), Some(0));
+        assert_eq!(v.nth(0).map(|a| a.worker), Some(1));
+        assert_eq!(v.nth(1).map(|a| a.worker), Some(7));
+        assert_eq!(v.nth(0).map(|a| a.at_s), Some(0.2));
+        assert!(v.nth(4).is_none());
+    }
+
     #[test]
     fn stale_weights_match_the_legacy_formulas_bitwise() {
         for age in 1..50u64 {
@@ -443,10 +541,10 @@ mod tests {
         let mut full = FullSync::new(StaleWeight::Damp);
         let mut quorum = FixedQuorum::new(3, StaleWeight::Damp);
         let mut sampled = ClientSampling::new(0.5, 1, StaleWeight::Damp);
-        let a = arrivals(&[0.3, 0.1, 0.2, 0.9]);
-        assert_eq!(full.close_at(0, &a), CloseRule::Count(usize::MAX));
-        assert_eq!(sampled.close_at(0, &a), CloseRule::Count(usize::MAX));
-        assert_eq!(quorum.close_at(0, &a), CloseRule::Count(3));
+        let ts = [0.3, 0.1, 0.2, 0.9];
+        assert_eq!(full.close_at(0, &mut view(&ts)), CloseRule::Count(usize::MAX));
+        assert_eq!(sampled.close_at(0, &mut view(&ts)), CloseRule::Count(usize::MAX));
+        assert_eq!(quorum.close_at(0, &mut view(&ts)), CloseRule::Count(3));
         // real-time counts: k clamped to the participant set
         assert_eq!(full.close_count(0, 4), 4);
         assert_eq!(quorum.close_count(0, 4), 3);
@@ -478,15 +576,15 @@ mod tests {
         let mut p = AdaptiveQuorum::new(StaleWeight::Damp);
         // clear elbow after the 3rd of 5 arrivals (majority floor = 3):
         // gap 0.12 -> 0.9 dominates the 0.85 span
-        let rule = p.close_at(0, &arrivals(&[0.10, 0.11, 0.12, 0.90, 0.95]));
+        let rule = p.close_at(0, &mut view(&[0.10, 0.11, 0.12, 0.90, 0.95]));
         assert_eq!(rule, CloseRule::AtTime(0.12));
         // no meaningful gap (every gap well below 25% of the span):
         // wait for everyone
-        let rule = p.close_at(1, &arrivals(&[0.10, 0.14, 0.18, 0.20, 0.22]));
+        let rule = p.close_at(1, &mut view(&[0.10, 0.14, 0.18, 0.20, 0.22]));
         assert_eq!(rule, CloseRule::AtTime(0.22));
         // the elbow never cuts below majority: the big gap before the
         // floor is ignored, the post-floor gap wins
-        let rule = p.close_at(2, &arrivals(&[0.1, 0.9, 0.95, 1.0, 1.8]));
+        let rule = p.close_at(2, &mut view(&[0.1, 0.9, 0.95, 1.0, 1.8]));
         assert_eq!(rule, CloseRule::AtTime(1.0));
         // real-time mode has no arrivals to find an elbow in: plain
         // majority quorum (see the struct docs)
@@ -494,18 +592,18 @@ mod tests {
         assert_eq!(p.close_count(0, 8), 5);
         assert_eq!(p.close_count(0, 1), 1);
         // tiny rounds close on the last arrival
-        assert_eq!(p.close_at(4, &arrivals(&[0.2, 0.1])), CloseRule::AtTime(0.2));
+        assert_eq!(p.close_at(4, &mut view(&[0.2, 0.1])), CloseRule::AtTime(0.2));
     }
 
     #[test]
     fn adaptive_close_is_permutation_stable() {
         let ts = [0.31, 0.05, 0.92, 0.11, 0.07, 0.95, 0.33, 0.12];
-        let base = AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &arrivals(&ts));
+        let base = AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &mut view(&ts));
         // every rotation of the same multiset yields the same rule
         for rot in 1..ts.len() {
             let mut perm = ts.to_vec();
             perm.rotate_left(rot);
-            let rule = AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &arrivals(&perm));
+            let rule = AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &mut view(&perm));
             assert_eq!(rule, base, "rotation {rot}");
         }
     }
@@ -518,7 +616,7 @@ mod tests {
             for _ in 0..50 {
                 let ts: Vec<f64> = (0..m).map(|_| rng.uniform()).collect();
                 let max = ts.iter().copied().fold(0.0, f64::max);
-                match AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &arrivals(&ts)) {
+                match AdaptiveQuorum::new(StaleWeight::Damp).close_at(0, &mut view(&ts)) {
                     CloseRule::AtTime(t) => {
                         assert!(t <= max, "m={m}: deadline {t} past last arrival {max}")
                     }
@@ -558,7 +656,7 @@ mod tests {
             (0..m as u32).collect()
         }
 
-        fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+        fn close_at(&mut self, _step: u64, _arrivals: &mut dyn ArrivalView) -> CloseRule {
             CloseRule::AtTime(-1.0)
         }
 

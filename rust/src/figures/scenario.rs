@@ -13,9 +13,14 @@
 //!   `policy,link,step,sim_s,bits,suboptimality`
 //! * `results/scenario_staleness.csv` —
 //!   `staleness,step,sim_s,bits,suboptimality`
+//! * `results/scenario_scale.csv` —
+//!   `policy,workers,active,rounds,sim_s,total_bits,rounds_per_s`: the
+//!   event-heap population sweep ([`crate::netsim::RoundSim`] at M up
+//!   to 10⁵), where memory is O(active participants), not O(M)
 //!
 //! Scale: `--quick` (the CI `figures-smoke` mode) runs fewer steps on
-//! the same grids; `MLMC_FIG_STEPS` overrides the step count either way.
+//! the same grids; `MLMC_FIG_STEPS` overrides the step count and
+//! `MLMC_FIG_POPS` (comma list) the population grid either way.
 
 use std::fmt::Write as _;
 
@@ -39,12 +44,22 @@ pub struct ScenarioScale {
     pub steps: usize,
     pub workers: usize,
     pub d: usize,
+    /// population sizes M for the event-heap [`crate::netsim::RoundSim`]
+    /// sweep (the regime the full engine cannot instantiate)
+    pub populations: Vec<usize>,
 }
 
 impl ScenarioScale {
     pub fn from_env(quick: bool) -> Self {
         let steps = super::env_usize("MLMC_FIG_STEPS", if quick { 80 } else { 400 });
-        ScenarioScale { steps, workers: 8, d: 200 }
+        let default_pops: &[usize] =
+            if quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+        let populations = std::env::var("MLMC_FIG_POPS")
+            .ok()
+            .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+            .filter(|v: &Vec<usize>| !v.is_empty())
+            .unwrap_or_else(|| default_pops.to_vec());
+        ScenarioScale { steps, workers: 8, d: 200, populations }
     }
 }
 
@@ -182,7 +197,79 @@ pub fn run_with_scale(scale: &ScenarioScale) -> Result<Vec<(String, String, f64,
     let path = util::results_dir().join("scenario_staleness.csv");
     std::fs::write(&path, &csv)?;
     println!("wrote {}", path.display());
+
+    // --- population scale via the event heap --------------------------
+    run_scale_sweep(scale)?;
     Ok(summary)
+}
+
+/// The population-scale sweep: [`RoundSim`] rounds at M far beyond what
+/// the full engine can instantiate. A sampled-256 cohort runs at every
+/// M (O(active) memory, so 10⁵ is as cheap per round as 10³); quorum
+/// and adaptive — which hear the entire population — run only where
+/// materializing M arrivals stays trivial.
+fn run_scale_sweep(scale: &ScenarioScale) -> Result<()> {
+    use crate::ef::AggKind;
+    use crate::engine::policy::{
+        AdaptiveQuorum, ClientSampling, FixedQuorum, ParticipationPolicy, StaleWeight,
+    };
+    use crate::netsim::{CostSpec, RoundSim};
+
+    const ROUNDS: usize = 8;
+    const FULL_POLICY_MAX_M: usize = 10_000;
+    let bits = 32 * scale.d as u64;
+    let mut csv = String::from("policy,workers,active,rounds,sim_s,total_bits,rounds_per_s\n");
+    println!("\npopulation scale (event-heap rounds, hetero preset, 20ms stragglers):");
+    println!(
+        "{:<10} {:>10} {:>8} {:>12} {:>12} {:>12}",
+        "policy", "workers", "active", "sim time", "uplink", "rounds/s"
+    );
+    for &m in &scale.populations {
+        let mut policies: Vec<(&str, Box<dyn ParticipationPolicy>)> = vec![(
+            "sampled",
+            Box::new(ClientSampling::new((256.0 / m as f64) as f32, 7, StaleWeight::Damp)),
+        )];
+        if m <= FULL_POLICY_MAX_M {
+            policies.push(("quorum", Box::new(FixedQuorum::new(m / 2 + 1, StaleWeight::Damp))));
+            policies.push(("adaptive", Box::new(AdaptiveQuorum::new(StaleWeight::Damp))));
+        }
+        for (name, policy) in policies {
+            let cost = CostSpec::preset("hetero")
+                .expect("known preset")
+                .workers(m)
+                .straggler(0.02)
+                .seed(7)
+                .build();
+            let mut sim = RoundSim::new(cost, policy, AggKind::Fresh, bits, bits);
+            let t = std::time::Instant::now();
+            let mut active = 0usize;
+            for _ in 0..ROUNDS {
+                active = sim.run_round()?.participants;
+            }
+            sim.drain_pending();
+            let wall = t.elapsed().as_secs_f64();
+            let rps = if wall > 0.0 { ROUNDS as f64 / wall } else { 0.0 };
+            let _ = writeln!(
+                csv,
+                "{name},{m},{active},{ROUNDS},{:.6},{},{rps:.3}",
+                sim.sim_now_s(),
+                sim.total_bits()
+            );
+            println!(
+                "{:<10} {:>10} {:>8} {:>11.2}s {:>12} {:>12.1}",
+                name,
+                m,
+                active,
+                sim.sim_now_s(),
+                util::fmt_bits(sim.total_bits()),
+                rps
+            );
+        }
+    }
+    let path = util::results_dir().join("scenario_scale.csv");
+    std::fs::write(&path, &csv)?;
+    println!("wrote {}", path.display());
+    Ok(())
 }
 
 #[cfg(test)]
@@ -191,7 +278,7 @@ mod tests {
 
     #[test]
     fn every_scenario_cell_validates() {
-        let scale = ScenarioScale { steps: 4, workers: 4, d: 16 };
+        let scale = ScenarioScale { steps: 4, workers: 4, d: 16, populations: vec![64, 256] };
         for &link in LINKS {
             for &policy in POLICIES {
                 let cfg = scenario_cfg(policy, link, &scale);
@@ -209,8 +296,13 @@ mod tests {
     #[test]
     fn quick_sweep_writes_csvs_and_adaptive_beats_full_on_hetero() {
         // tiny but real end-to-end pass over the whole grid
-        let summary =
-            run_with_scale(&ScenarioScale { steps: 6, workers: 8, d: 48 }).unwrap();
+        let summary = run_with_scale(&ScenarioScale {
+            steps: 6,
+            workers: 8,
+            d: 48,
+            populations: vec![64, 256],
+        })
+        .unwrap();
         assert_eq!(summary.len(), POLICIES.len() * LINKS.len());
         let sim = |policy: &str, link: &str| {
             summary
@@ -232,7 +324,7 @@ mod tests {
                 sim("full", link)
             );
         }
-        for name in ["scenario_policy_link.csv", "scenario_staleness.csv"] {
+        for name in ["scenario_policy_link.csv", "scenario_staleness.csv", "scenario_scale.csv"] {
             let text = std::fs::read_to_string(util::results_dir().join(name)).unwrap();
             assert!(text.lines().count() > 1, "{name} is empty");
         }

@@ -53,6 +53,9 @@ fn print_help() {
          \x20 info                                         list artifacts/models\n\n\
          config keys: {}\n\n\
          round-engine keys (policy objects: rust/src/engine/policy.rs):\n\
+         \x20 workers        1..=16777216 (2^24)             population size M; virtual-mode memory is\n\
+         \x20                                               O(active participants), so sampled rounds\n\
+         \x20                                               scale to millions of simulated workers\n\
          \x20 participation  full | quorum | sampled | adaptive   round-close policy; adaptive picks k\n\
          \x20                                               per round at the arrival-CDF elbow (virtual\n\
          \x20                                               clock; real-time TCP falls back to majority)\n\

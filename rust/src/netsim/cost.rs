@@ -1,32 +1,47 @@
-//! Deterministic cluster **cost model**: the promotion of the PR 2
-//! `VirtualClock` from a pure *transfer*-time source into a full
-//! per-step cost model. A worker's simulated arrival time is now
+//! Deterministic cluster **cost model**: prices a worker's simulated
+//! per-step arrival time as
 //!
 //! ```text
 //! arrival = download + compute + upload + straggler
 //! ```
 //!
 //! where `download`/`upload` come from per-worker heterogeneous
-//! [`LinkModel`]s, **compute** is a new per-worker gradient-computation
-//! term (base seconds × a seeded per-worker slowdown factor), and the
-//! straggler term is the seeded exponential delay of PR 2. Adaptive
-//! participation policies ([`crate::engine::policy`]) therefore optimize
-//! simulated *step* time, not transfer time alone.
+//! [`LinkModel`] factors, **compute** is a per-worker
+//! gradient-computation term (base seconds × a seeded per-worker
+//! slowdown factor), and the straggler term is a seeded exponential
+//! delay.
 //!
-//! Determinism contract (unchanged from the clock): [`CostModel::arrival_s`]
-//! is a pure function of `(step, worker, up_bits, down_bits)` — it never
-//! depends on the order messages were physically gathered (permutation
-//! stability) or on wall time. All per-worker draws (link heterogeneity,
-//! compute slowdown) come once per worker from dedicated `(seed, worker)`
-//! streams, and the straggler draw from the `(seed, worker, step)`
-//! stream, so repeated runs replay exactly.
+//! # Lazy by construction
 //!
-//! Bit-compatibility contract: with a zero compute term the arrival time
-//! is **bit-identical** to the pre-cost-model `VirtualClock` — the three
-//! original presets (`datacenter`, `edge`, `hetero`) carry no compute
-//! term, so every pre-existing trajectory replays unchanged.
+//! [`CostModel`] stores **no per-worker state** — construction is O(1)
+//! in the population size. Every per-worker quantity (link factor,
+//! compute slowdown, straggler delay) is recomputed on demand from its
+//! dedicated `(seed, worker)` / `(seed, worker, step)` RNG stream, so a
+//! million-worker population costs exactly as much to build as a
+//! four-worker one, and only the workers a round actually prices are
+//! ever touched. This is what lets the event-heap simulator
+//! ([`super::population`]) run at M = 10⁶ in O(active) memory.
+//!
+//! Construction goes through the [`CostSpec`] builder (order-insensitive
+//! named setters — there is no positional constructor), and all pricing
+//! through the one pure entry point [`CostModel::price`], which returns
+//! a [`CostBreakdown`] of the four terms.
+//!
+//! Determinism contract: [`CostModel::price`] (and its sum,
+//! [`CostModel::arrival_s`]) is a pure function of `(step, worker,
+//! up_bits, down_bits)` — it never depends on the order messages were
+//! physically gathered (permutation stability) or on wall time, so
+//! repeated runs replay exactly.
+//!
+//! Bit-compatibility contract: the lazily recomputed arrival times are
+//! **bit-identical** to the historical eager model (per-worker
+//! `LinkModel`/compute vectors materialized up front): the factor
+//! streams, salts, and floating-point operation order are unchanged,
+//! and with a zero compute term arrivals are bit-identical all the way
+//! back to the pre-cost-model `VirtualClock`.
 
 use super::LinkModel;
+use crate::config::TrainConfig;
 use crate::tensor::Rng;
 use anyhow::{bail, Result};
 
@@ -42,143 +57,252 @@ pub fn preset_names() -> &'static [&'static str] {
     &["datacenter", "edge", "hetero", "hetero-compute"]
 }
 
-/// Simulated per-step cost source for the round engine: heterogeneous
-/// links + per-worker compute + seeded stragglers, plus the run's
-/// simulated wall-clock accumulator.
+/// Order-insensitive builder for [`CostModel`]: start from a base link
+/// ([`CostSpec::link`]) or a named preset ([`CostSpec::preset`]), then
+/// name whichever knobs differ from the defaults, in any order.
+///
+/// ```no_run
+/// use mlmc_dist::netsim::CostSpec;
+/// let cost = CostSpec::preset("hetero")?
+///     .workers(1_000_000)
+///     .straggler(0.05)
+///     .seed(7)
+///     .build();
+/// # anyhow::Result::<()>::Ok(())
+/// ```
 #[derive(Clone, Debug)]
-pub struct CostModel {
-    links: Vec<LinkModel>,
-    /// per-worker gradient-compute seconds (0 = communication only)
-    compute_s: Vec<f64>,
+pub struct CostSpec {
+    base: LinkModel,
+    link_spread: f64,
+    compute_base_s: f64,
+    compute_spread: f64,
     straggler_mean_s: f64,
     seed: u64,
-    now_s: f64,
+    workers: usize,
 }
 
-impl CostModel {
-    /// Per-worker links derived from `base`: worker `w`'s bandwidths are
-    /// scaled by a deterministic factor in `[1/spread, 1]` (and its
-    /// latency inflated by the inverse), drawn once per worker from the
-    /// `(seed, worker)` stream. `spread <= 1` means homogeneous links.
-    /// The compute term starts at zero; see [`CostModel::with_compute`].
-    pub fn new(
-        base: &LinkModel,
-        workers: usize,
-        spread: f64,
-        straggler_mean_s: f64,
-        seed: u64,
-    ) -> Self {
-        let spread = spread.max(1.0);
-        let links = (0..workers)
-            .map(|w| {
-                let f = if spread > 1.0 {
-                    let u = Rng::for_stream(seed ^ LINK_SALT, w as u64, 0).uniform();
-                    1.0 / (1.0 + (spread - 1.0) * u)
-                } else {
-                    1.0
-                };
-                LinkModel {
-                    uplink_bps: base.uplink_bps * f,
-                    downlink_bps: base.downlink_bps * f,
-                    latency_s: base.latency_s / f,
-                }
-            })
-            .collect();
-        CostModel {
-            links,
-            compute_s: vec![0.0; workers],
-            straggler_mean_s: straggler_mean_s.max(0.0),
-            seed,
-            now_s: 0.0,
+impl CostSpec {
+    /// Start from an explicit base link: homogeneous (spread 1), no
+    /// compute term, no stragglers, seed 0, one worker.
+    pub fn link(base: LinkModel) -> Self {
+        CostSpec {
+            base,
+            link_spread: 1.0,
+            compute_base_s: 0.0,
+            compute_spread: 1.0,
+            straggler_mean_s: 0.0,
+            seed: 0,
+            workers: 1,
         }
     }
 
-    /// Set the per-worker gradient-compute term: worker `w` takes
-    /// `base_s * f_w` seconds per step, with `f_w` a deterministic
-    /// slowdown factor in `[1, spread]` drawn once per worker from the
-    /// `(seed, worker)` compute stream (`spread <= 1` = homogeneous
-    /// compute). `base_s <= 0` clears the term.
-    pub fn with_compute(mut self, base_s: f64, spread: f64) -> Self {
-        let base_s = base_s.max(0.0);
-        let spread = spread.max(1.0);
-        for (w, c) in self.compute_s.iter_mut().enumerate() {
-            let f = if spread > 1.0 {
-                let u = Rng::for_stream(self.seed ^ COMPUTE_SALT, w as u64, 0).uniform();
-                1.0 + (spread - 1.0) * u
-            } else {
-                1.0
-            };
-            *c = base_s * f;
-        }
-        self
-    }
-
-    /// Build from a named preset ([`preset_names`]):
+    /// Start from a named preset ([`preset_names`]):
     ///
     /// * `"datacenter"` / `"edge"` — homogeneous links, no compute term
     /// * `"hetero"` — edge base with a 4x per-worker bandwidth spread
     /// * `"hetero-compute"` — `hetero` plus a default compute term
     ///   (20 ms base, 4x per-worker spread), so the arrival elbow is
-    ///   shaped by compute *and* transfer. An explicit `compute` config
-    ///   knob replaces this whole term, spread included — pass
-    ///   `compute_spread` too to keep heterogeneity
+    ///   shaped by compute *and* transfer. An explicit
+    ///   [`CostSpec::compute`] call replaces this whole term, spread
+    ///   included.
     ///
     /// Unknown names are a loud, centralized error listing the known
     /// presets — call sites must not re-implement the message.
+    pub fn preset(name: &str) -> Result<Self> {
+        Ok(match name {
+            "datacenter" => Self::link(LinkModel::datacenter()),
+            "edge" => Self::link(LinkModel::edge()),
+            "hetero" => Self::link(LinkModel::edge()).link_spread(4.0),
+            "hetero-compute" => {
+                Self::link(LinkModel::edge()).link_spread(4.0).compute(0.02, 4.0)
+            }
+            _ => bail!("unknown link preset {name:?} (known: {:?})", preset_names()),
+        })
+    }
+
+    /// A config's cost-model knobs (`link` / `straggler` / `seed` /
+    /// `compute` / `compute_spread`), sized to `workers`: the preset's
+    /// built-in compute term applies unless the config carries an
+    /// explicit `compute > 0`, which replaces it — spread included.
+    pub fn from_train_cfg(cfg: &TrainConfig, workers: usize) -> Result<Self> {
+        let mut spec =
+            Self::preset(&cfg.link)?.workers(workers).straggler(cfg.straggler).seed(cfg.seed);
+        if cfg.compute > 0.0 {
+            spec = spec.compute(cfg.compute, cfg.compute_spread);
+        }
+        Ok(spec)
+    }
+
+    /// Population size M (worker ids are `0..workers`).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Per-worker link spread: worker `w`'s bandwidths are scaled by a
+    /// deterministic factor in `[1/spread, 1]` (and its latency inflated
+    /// by the inverse), drawn from the `(seed, worker)` link stream.
+    /// `spread <= 1` means homogeneous links.
+    pub fn link_spread(mut self, spread: f64) -> Self {
+        self.link_spread = spread;
+        self
+    }
+
+    /// Per-worker gradient-compute term: worker `w` takes `base_s * f_w`
+    /// seconds per step, with `f_w` a deterministic slowdown factor in
+    /// `[1, spread]` from the `(seed, worker)` compute stream
+    /// (`spread <= 1` = homogeneous compute; `base_s <= 0` clears the
+    /// term).
+    pub fn compute(mut self, base_s: f64, spread: f64) -> Self {
+        self.compute_base_s = base_s;
+        self.compute_spread = spread;
+        self
+    }
+
+    /// Mean of the seeded exponential straggler delay (`<= 0` = off).
+    pub fn straggler(mut self, mean_s: f64) -> Self {
+        self.straggler_mean_s = mean_s;
+        self
+    }
+
+    /// Seed for every per-worker/per-step stream.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Finalize: clamp the knobs into their legal ranges and wrap the
+    /// spec in a [`CostModel`] with the simulated clock at zero. O(1) —
+    /// no per-worker state is materialized, at any population size.
+    pub fn build(mut self) -> CostModel {
+        self.link_spread = self.link_spread.max(1.0);
+        self.compute_base_s = self.compute_base_s.max(0.0);
+        self.compute_spread = self.compute_spread.max(1.0);
+        self.straggler_mean_s = self.straggler_mean_s.max(0.0);
+        CostModel { spec: self, now_s: 0.0 }
+    }
+}
+
+/// The four priced components of one simulated arrival, as returned by
+/// [`CostModel::price`]. The arrival time is their sum
+/// ([`CostBreakdown::total`]), in the fixed order download → compute →
+/// upload → straggler (the historical summation order, kept for bit
+/// compatibility).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostBreakdown {
+    /// params-broadcast download over the worker's own link
+    pub down_s: f64,
+    /// per-worker gradient-compute seconds
+    pub compute_s: f64,
+    /// reply upload over the worker's own link
+    pub up_s: f64,
+    /// seeded exponential straggler delay
+    pub straggler_s: f64,
+}
+
+impl CostBreakdown {
+    /// The arrival time this breakdown prices (fixed summation order).
+    pub fn total(&self) -> f64 {
+        self.down_s + self.compute_s + self.up_s + self.straggler_s
+    }
+}
+
+/// Simulated per-step cost source for the round engine and the
+/// event-heap simulator: heterogeneous links + per-worker compute +
+/// seeded stragglers, plus the run's simulated wall-clock accumulator.
+/// O(1) state — see the module docs for the lazy-pricing contract.
+/// Built via [`CostSpec`].
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    spec: CostSpec,
+    now_s: f64,
+}
+
+impl CostModel {
+    /// Shorthand for the common preset construction
+    /// (`CostSpec::preset(name)?.workers(m).straggler(s).seed(seed)`).
     pub fn from_preset(
         name: &str,
         workers: usize,
         straggler_mean_s: f64,
         seed: u64,
     ) -> Result<Self> {
-        let (base, spread, compute) = match name {
-            "datacenter" => (LinkModel::datacenter(), 1.0, None),
-            "edge" => (LinkModel::edge(), 1.0, None),
-            "hetero" => (LinkModel::edge(), 4.0, None),
-            "hetero-compute" => (LinkModel::edge(), 4.0, Some((0.02, 4.0))),
-            _ => bail!("unknown link preset {name:?} (known: {:?})", preset_names()),
-        };
-        let model = Self::new(&base, workers, spread, straggler_mean_s, seed);
-        Ok(match compute {
-            Some((base_s, sp)) => model.with_compute(base_s, sp),
-            None => model,
-        })
+        Ok(CostSpec::preset(name)?.workers(workers).straggler(straggler_mean_s).seed(seed).build())
     }
 
+    /// Replace the compute term ([`CostSpec::compute`]) on a built
+    /// model. Order-insensitive: pricing is lazy, so this composes with
+    /// any other knob in any order.
+    pub fn with_compute(mut self, base_s: f64, spread: f64) -> Self {
+        self.spec.compute_base_s = base_s.max(0.0);
+        self.spec.compute_spread = spread.max(1.0);
+        self
+    }
+
+    /// Population size M.
     pub fn workers(&self) -> usize {
-        self.links.len()
+        self.spec.workers
     }
 
-    pub fn link(&self, worker: u32) -> &LinkModel {
-        &self.links[worker as usize]
+    /// Worker `w`'s link slowdown factor in `[1/spread, 1]`, recomputed
+    /// from the `(seed, worker)` link stream (1 when homogeneous).
+    fn link_factor(&self, worker: u32) -> f64 {
+        if self.spec.link_spread > 1.0 {
+            let u = Rng::for_stream(self.spec.seed ^ LINK_SALT, worker as u64, 0).uniform();
+            1.0 / (1.0 + (self.spec.link_spread - 1.0) * u)
+        } else {
+            1.0
+        }
     }
 
-    /// Worker `w`'s per-step gradient-compute seconds.
-    pub fn compute_s(&self, worker: u32) -> f64 {
-        self.compute_s[worker as usize]
+    /// Worker `w`'s per-step compute seconds, recomputed from the
+    /// `(seed, worker)` compute stream.
+    fn compute_of(&self, worker: u32) -> f64 {
+        let f = if self.spec.compute_spread > 1.0 {
+            let u = Rng::for_stream(self.spec.seed ^ COMPUTE_SALT, worker as u64, 0).uniform();
+            1.0 + (self.spec.compute_spread - 1.0) * u
+        } else {
+            1.0
+        };
+        self.spec.compute_base_s * f
     }
 
     /// Exponential straggler delay for `(worker, step)` via inverse-CDF
     /// sampling on the dedicated stream; 0 when stragglers are disabled.
     pub fn straggler_s(&self, step: u64, worker: u32) -> f64 {
-        if self.straggler_mean_s <= 0.0 {
+        if self.spec.straggler_mean_s <= 0.0 {
             return 0.0;
         }
-        let u = Rng::for_stream(self.seed ^ STRAGGLER_SALT, worker as u64, step).uniform();
-        -self.straggler_mean_s * (1.0 - u).ln()
+        let u = Rng::for_stream(self.spec.seed ^ STRAGGLER_SALT, worker as u64, step).uniform();
+        -self.spec.straggler_mean_s * (1.0 - u).ln()
+    }
+
+    /// THE pricing entry point: the four cost components of worker `w`'s
+    /// simulated step — download the `down_bits` params broadcast over
+    /// its own link, compute the gradient, upload the `up_bits` reply,
+    /// plus the straggler draw. Pure in `(step, worker, up_bits,
+    /// down_bits)`; every per-worker factor is recomputed from its
+    /// stream, never stored.
+    pub fn price(&self, step: u64, worker: u32, up_bits: u64, down_bits: u64) -> CostBreakdown {
+        debug_assert!(
+            (worker as usize) < self.spec.workers,
+            "worker {worker} outside population 0..{}",
+            self.spec.workers
+        );
+        let f = self.link_factor(worker);
+        let latency_s = self.spec.base.latency_s / f;
+        CostBreakdown {
+            down_s: latency_s + down_bits as f64 / (self.spec.base.downlink_bps * f),
+            compute_s: self.compute_of(worker),
+            up_s: latency_s + up_bits as f64 / (self.spec.base.uplink_bps * f),
+            straggler_s: self.straggler_s(step, worker),
+        }
     }
 
     /// Simulated arrival time — relative to the round start — of worker
-    /// `w`'s uplink message of `up_bits`: download the `down_bits`
-    /// params broadcast over its own link, compute the gradient, upload,
-    /// plus the straggler draw. Pure in `(step, worker, up_bits,
-    /// down_bits)`; bit-identical to the pre-cost-model clock when the
-    /// compute term is zero.
+    /// `w`'s uplink message: [`CostModel::price`] summed.
     pub fn arrival_s(&self, step: u64, worker: u32, up_bits: u64, down_bits: u64) -> f64 {
-        let l = &self.links[worker as usize];
-        let down = l.latency_s + down_bits as f64 / l.downlink_bps;
-        let up = l.latency_s + up_bits as f64 / l.uplink_bps;
-        down + self.compute_s[worker as usize] + up + self.straggler_s(step, worker)
+        self.price(step, worker, up_bits, down_bits).total()
     }
 
     /// Advance simulated time by one round's duration.
@@ -207,6 +331,45 @@ mod tests {
         assert!(err.contains("carrier-pigeon"), "{err}");
         for name in preset_names() {
             assert!(err.contains(name), "error must list {name}: {err}");
+        }
+        // the builder surfaces the same centralized message
+        let err = CostSpec::preset("smoke-signals").unwrap_err().to_string();
+        assert!(err.contains("smoke-signals"), "{err}");
+    }
+
+    #[test]
+    fn builder_is_order_insensitive_and_matches_from_preset() {
+        let a = CostSpec::preset("hetero").unwrap().workers(8).straggler(0.02).seed(7).build();
+        let b = CostSpec::preset("hetero").unwrap().seed(7).straggler(0.02).workers(8).build();
+        let c = CostModel::from_preset("hetero", 8, 0.02, 7).unwrap();
+        for step in 0..3 {
+            for w in 0..8u32 {
+                let t = a.arrival_s(step, w, 10_000, 320_000);
+                assert_eq!(t.to_bits(), b.arrival_s(step, w, 10_000, 320_000).to_bits());
+                assert_eq!(t.to_bits(), c.arrival_s(step, w, 10_000, 320_000).to_bits());
+            }
+        }
+        // compute placement in the chain does not matter either
+        let d = CostSpec::preset("edge").unwrap().compute(0.05, 4.0).workers(4).seed(3).build();
+        let e = CostSpec::preset("edge").unwrap().seed(3).workers(4).compute(0.05, 4.0).build();
+        for w in 0..4u32 {
+            assert_eq!(
+                d.arrival_s(0, w, 1_000, 1_000).to_bits(),
+                e.arrival_s(0, w, 1_000, 1_000).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn price_components_sum_to_arrival_and_are_nonnegative() {
+        let c = CostModel::from_preset("hetero-compute", 6, 0.04, 13).unwrap();
+        for step in 0..4 {
+            for w in 0..6u32 {
+                let p = c.price(step, w, 10_000, 320_000);
+                assert!(p.down_s > 0.0 && p.compute_s > 0.0 && p.up_s > 0.0);
+                assert!(p.straggler_s >= 0.0);
+                assert_eq!(p.total().to_bits(), c.arrival_s(step, w, 10_000, 320_000).to_bits());
+            }
         }
     }
 
@@ -259,11 +422,11 @@ mod tests {
             // homogeneous compute: exactly additive, monotone in base_s
             assert!((t1 - t0 - 0.05).abs() < 1e-12, "worker {w}: {t0} {t1}");
             assert!(t2 > t1 && t1 > t0);
-            assert_eq!(slow.compute_s(w), 0.05);
+            assert_eq!(slow.price(0, w, 10_000, 320_000).compute_s, 0.05);
         }
         // spread > 1: every worker in [base, base*spread], not all equal
         let spread = base.with_compute(0.05, 4.0);
-        let cs: Vec<f64> = (0..8).map(|w| spread.compute_s(w)).collect();
+        let cs: Vec<f64> = (0..8).map(|w| spread.price(0, w, 0, 0).compute_s).collect();
         assert!(cs.iter().all(|&c| (0.05..=0.2 + 1e-12).contains(&c)), "{cs:?}");
         assert!(cs.windows(2).any(|p| p[0] != p[1]), "compute spread drew no spread: {cs:?}");
         // the draw is per worker, fixed across steps (pure)
@@ -277,13 +440,18 @@ mod tests {
 
     #[test]
     fn zero_compute_matches_link_only_formula_bitwise() {
-        // the pre-cost-model clock formula, recomputed by hand
+        // the pre-cost-model clock formula, recomputed by hand from the
+        // base link and the per-worker factor stream — pins both the
+        // formula and the lazy recomputation
         let c = CostModel::from_preset("hetero", 4, 0.03, 9).unwrap();
+        let base = LinkModel::edge();
         for step in 0..4 {
             for w in 0..4u32 {
-                let l = c.link(w);
-                let down = l.latency_s + 320_000f64 / l.downlink_bps;
-                let up = l.latency_s + 10_000f64 / l.uplink_bps;
+                let u = Rng::for_stream(9 ^ LINK_SALT, w as u64, 0).uniform();
+                let f = 1.0 / (1.0 + (4.0 - 1.0) * u);
+                let latency = base.latency_s / f;
+                let down = latency + 320_000f64 / (base.downlink_bps * f);
+                let up = latency + 10_000f64 / (base.uplink_bps * f);
                 let expect = down + up + c.straggler_s(step, w);
                 assert_eq!(expect.to_bits(), c.arrival_s(step, w, 10_000, 320_000).to_bits());
             }
@@ -295,8 +463,9 @@ mod tests {
         let plain = CostModel::from_preset("hetero", 4, 0.0, 2).unwrap();
         let hc = CostModel::from_preset("hetero-compute", 4, 0.0, 2).unwrap();
         for w in 0..4u32 {
-            assert_eq!(plain.compute_s(w), 0.0);
-            assert!(hc.compute_s(w) >= 0.02, "worker {w}: {}", hc.compute_s(w));
+            assert_eq!(plain.price(0, w, 10_000, 320_000).compute_s, 0.0);
+            let cs = hc.price(0, w, 10_000, 320_000).compute_s;
+            assert!(cs >= 0.02, "worker {w}: {cs}");
             // same seed, same link draws: the preset only adds compute
             assert!(hc.arrival_s(0, w, 10_000, 320_000) > plain.arrival_s(0, w, 10_000, 320_000));
         }

@@ -1,0 +1,226 @@
+//! Lazy **event heap** for virtual-mode rounds: per-round arrivals as a
+//! min-heap of `(arrival_s, worker)` events popped in time order.
+//!
+//! The heap holds one [`Event`] per *active* participant — never one per
+//! population member — so a sampled round over a million-worker
+//! population costs O(active) memory. Events are priced on demand by the
+//! pure [`super::CostModel::price`] stream contract, and because the
+//! event ordering is total (ties broken by worker id, times never NaN),
+//! popping the heap to exhaustion yields exactly the sequence an eager
+//! sort of the same arrivals would — the bit-identity bridge between the
+//! heap path and the historical eager path.
+//!
+//! [`HeapArrivals`] adapts a heap to the
+//! [`crate::engine::policy::ArrivalView`] close protocol: policies read
+//! the sorted prefix they need (`nth(i)` pops lazily, with free replay
+//! of what was already popped), and [`HeapArrivals::into_parts`] hands
+//! the popped prefix + untouched remainder back to the simulator for the
+//! on-time/late partition.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::engine::policy::{Arrival, ArrivalView};
+
+/// One pending uplink arrival: worker `worker`'s reply lands at `at_s`
+/// seconds after the round start. Ordered by `(at_s, worker)` — a total
+/// order because simulated arrival times are never NaN (they are sums of
+/// finite link/compute/straggler terms).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub at_s: f64,
+    pub worker: u32,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at_s
+            .partial_cmp(&other.at_s)
+            .expect("arrival times are never NaN")
+            .then(self.worker.cmp(&other.worker))
+    }
+}
+
+/// Min-heap of pending arrivals, popped in `(at_s, worker)` order.
+/// O(active) memory: holds only the events pushed into it.
+#[derive(Clone, Debug)]
+pub struct EventHeap {
+    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+}
+
+impl EventHeap {
+    pub fn new() -> Self {
+        EventHeap { heap: BinaryHeap::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        EventHeap { heap: BinaryHeap::with_capacity(n) }
+    }
+
+    pub fn push(&mut self, event: Event) {
+        self.heap.push(std::cmp::Reverse(event));
+    }
+
+    /// Remove and return the earliest pending event.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|std::cmp::Reverse(e)| e)
+    }
+
+    /// The earliest pending event, without removing it.
+    pub fn peek(&self) -> Option<Event> {
+        self.heap.peek().map(|&std::cmp::Reverse(e)| e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain every remaining worker id **without** sorting — O(n), for
+    /// consumers (late-set collection) that order the result themselves.
+    pub fn drain_workers(self) -> impl Iterator<Item = u32> {
+        self.heap.into_iter().map(|std::cmp::Reverse(e)| e.worker)
+    }
+}
+
+/// An [`ArrivalView`] over an [`EventHeap`]: `nth(i)` lazily pops the
+/// heap down to the i-th smallest arrival, keeping the popped prefix for
+/// free replay (policies and the engine may both index into it, in any
+/// order, without re-pricing). `population` reports the full simulated
+/// population M — not the heap size — so sampling-aware policies see the
+/// world they are drawing from.
+#[derive(Debug)]
+pub struct HeapArrivals {
+    heap: EventHeap,
+    prefix: Vec<Arrival>,
+    population: usize,
+}
+
+impl HeapArrivals {
+    pub fn new(heap: EventHeap, population: usize) -> Self {
+        HeapArrivals { heap, prefix: Vec::new(), population }
+    }
+
+    /// Number of active participants this round (popped + pending).
+    pub fn active(&self) -> usize {
+        self.prefix.len() + self.heap.len()
+    }
+
+    /// Decompose into the sorted popped prefix and the untouched
+    /// remainder of the heap, for the round's on-time/late partition.
+    pub fn into_parts(self) -> (Vec<Arrival>, EventHeap) {
+        (self.prefix, self.heap)
+    }
+}
+
+impl ArrivalView for HeapArrivals {
+    fn population(&self) -> usize {
+        self.population
+    }
+
+    fn nth(&mut self, i: usize) -> Option<Arrival> {
+        while self.prefix.len() <= i {
+            match self.heap.pop() {
+                Some(e) => self.prefix.push(Arrival { worker: e.worker, at_s: e.at_s }),
+                None => return None,
+            }
+        }
+        Some(self.prefix[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heap_of(events: &[(f64, u32)]) -> EventHeap {
+        let mut h = EventHeap::with_capacity(events.len());
+        for &(at_s, worker) in events {
+            h.push(Event { at_s, worker });
+        }
+        h
+    }
+
+    #[test]
+    fn pop_order_equals_eager_sort() {
+        let events = [(0.5, 3u32), (0.1, 7), (0.9, 0), (0.1, 2), (0.3, 5), (0.5, 1)];
+        let mut h = heap_of(&events);
+        let mut eager: Vec<Event> =
+            events.iter().map(|&(at_s, worker)| Event { at_s, worker }).collect();
+        eager.sort();
+        let mut popped = Vec::new();
+        while let Some(e) = h.pop() {
+            popped.push(e);
+        }
+        assert_eq!(popped, eager);
+        // ties broke by worker id: (0.1, 2) before (0.1, 7)
+        assert_eq!(popped[0].worker, 2);
+        assert_eq!(popped[1].worker, 7);
+    }
+
+    #[test]
+    fn peek_matches_pop_and_len_tracks() {
+        let mut h = heap_of(&[(2.0, 1), (1.0, 9)]);
+        assert_eq!(h.len(), 2);
+        assert!(!h.is_empty());
+        assert_eq!(h.peek().unwrap().worker, 9);
+        assert_eq!(h.pop().unwrap().worker, 9);
+        assert_eq!(h.pop().unwrap().worker, 1);
+        assert!(h.pop().is_none());
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn drain_workers_returns_every_pending_id() {
+        let h = heap_of(&[(0.4, 4), (0.2, 2), (0.6, 6)]);
+        let mut ids: Vec<u32> = h.drain_workers().collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn view_nth_replays_and_bounds() {
+        let h = heap_of(&[(0.3, 1), (0.1, 2), (0.2, 0)]);
+        let mut v = HeapArrivals::new(h, 100);
+        assert_eq!(v.population(), 100);
+        assert_eq!(v.active(), 3);
+        // random access, out of order, with replay
+        assert_eq!(v.nth(2).unwrap().worker, 1);
+        assert_eq!(v.nth(0).unwrap().worker, 2);
+        assert_eq!(v.nth(1).unwrap().worker, 0);
+        assert_eq!(v.nth(0).unwrap().at_s, 0.1);
+        assert!(v.nth(3).is_none());
+        // exhausting nth leaves an empty heap, full prefix
+        let (prefix, rest) = v.into_parts();
+        assert_eq!(prefix.len(), 3);
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn into_parts_splits_popped_from_pending() {
+        let h = heap_of(&[(0.3, 1), (0.1, 2), (0.2, 0), (0.4, 5)]);
+        let mut v = HeapArrivals::new(h, 4);
+        v.nth(1); // pops two
+        let (prefix, rest) = v.into_parts();
+        assert_eq!(prefix.iter().map(|a| a.worker).collect::<Vec<_>>(), vec![2, 0]);
+        assert_eq!(rest.len(), 2);
+        assert!(prefix.last().unwrap().at_s <= rest.peek().unwrap().at_s);
+    }
+}

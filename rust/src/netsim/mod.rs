@@ -3,18 +3,24 @@
 //! bits-x-axis figures can also be read as time-x-axis (the paper's
 //! motivation: communication is the bottleneck, §1).
 //!
-//! [`cost`] builds on this: a deterministic per-worker **cost model**
-//! (heterogeneous links + per-worker gradient-compute time + seeded
-//! straggler delays) that the round engine uses to decide simulated
-//! message arrival order — covering the full step, not just the
-//! transfer. [`clock`] is the back-compat shim for the pre-compute-term
-//! `VirtualClock` name.
+//! [`cost`] builds on this: a deterministic, **lazy** per-worker cost
+//! model (heterogeneous links + per-worker gradient-compute time +
+//! seeded straggler delays) that the round engine uses to decide
+//! simulated message arrival order — covering the full step, not just
+//! the transfer. O(1) state: every per-worker quantity is recomputed on
+//! demand from its `(seed, worker, step)` stream, so population size
+//! costs nothing to hold. [`event`] turns priced arrivals into a lazy
+//! min-heap popped in time order, and [`population`] wraps heap + cost
+//! model into the O(active)-memory round simulator that scales virtual
+//! mode to millions of workers.
 
-pub mod clock;
 pub mod cost;
+pub mod event;
+pub mod population;
 
-pub use clock::VirtualClock;
-pub use cost::CostModel;
+pub use cost::{CostBreakdown, CostModel, CostSpec};
+pub use event::{Event, EventHeap, HeapArrivals};
+pub use population::{Population, RoundSim, SimRoundReport};
 
 /// A simple star-topology link model (every worker has an identical
 /// uplink to the server).

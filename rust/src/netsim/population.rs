@@ -1,0 +1,441 @@
+//! Lazy **population** handle + heap-driven round simulator: virtual
+//! rounds over populations far beyond what the full engine (which
+//! carries per-worker transport handlers, encoders, and gradients) can
+//! instantiate — the regime where partial participation over 10⁵–10⁶
+//! clients actually lives.
+//!
+//! [`Population`] is the O(1) handle: a [`CostModel`] plus its declared
+//! size M. Nothing per-worker exists until a round asks for a specific
+//! worker's arrival, and only the round's **active** participants are
+//! ever priced — a sampled round over a million workers builds a heap of
+//! the drawn cohort and touches nobody else.
+//!
+//! [`RoundSim`] runs the round engine's virtual-mode protocol —
+//! policy draw → event-heap arrivals → [`ArrivalView`] close →
+//! on-time/late partition → stale resolution → ack staging → bit
+//! accounting → clock advance — with a **constant-size message model**
+//! (every uplink reply is `up_bits`, the broadcast `down_bits`): the
+//! engine minus gradients. Decision-for-decision it matches
+//! [`crate::engine::RoundEngine::run_round`] on the same config
+//! (`tests/prop_scale.rs` pins arrivals, close, stale weights, acks,
+//! and bit totals against the engine at every M the engine can hold),
+//! while memory stays O(active participants + pending stragglers).
+
+use anyhow::{bail, Result};
+
+use crate::ef::{AckEntry, AckStatus, AggKind};
+use crate::engine::policy::{ArrivalView, CloseRule, ParticipationPolicy, StaleAction};
+
+use super::cost::CostModel;
+use super::event::{Event, EventHeap, HeapArrivals};
+
+/// A simulated worker population behind one lazy [`CostModel`]: size M,
+/// zero per-worker state. Prices a round's active participants into an
+/// [`EventHeap`] on demand.
+pub struct Population {
+    cost: CostModel,
+}
+
+impl Population {
+    pub fn new(cost: CostModel) -> Self {
+        Population { cost }
+    }
+
+    /// Population size M (worker ids are `0..size`).
+    pub fn size(&self) -> usize {
+        self.cost.workers()
+    }
+
+    pub fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    pub fn cost_mut(&mut self) -> &mut CostModel {
+        &mut self.cost
+    }
+
+    /// Price this round's active participants into a min-heap of
+    /// arrival events: O(active) work and memory, whatever M is.
+    pub fn arrivals(&self, step: u64, parts: &[u32], up_bits: u64, down_bits: u64) -> EventHeap {
+        let mut heap = EventHeap::with_capacity(parts.len());
+        for &w in parts {
+            heap.push(Event { at_s: self.cost.arrival_s(step, w, up_bits, down_bits), worker: w });
+        }
+        heap
+    }
+}
+
+/// What one simulated round did. Field-for-field the subset of the
+/// engine's `RoundReport` that a constant-bit simulation defines (no
+/// losses, no real-time recovery), plus the round's staged acks for
+/// protocol-equivalence tests.
+#[derive(Clone, Debug)]
+pub struct SimRoundReport {
+    pub step: u64,
+    pub participants: usize,
+    /// replies that made this round's deadline
+    pub on_time: usize,
+    /// replies deferred to a later round
+    pub late: usize,
+    /// previous rounds' late messages applied now
+    pub applied_stale: usize,
+    /// previous rounds' late messages dropped now
+    pub dropped_stale: usize,
+    /// uplink bits resolved this round (applied + dropped)
+    pub bits: u64,
+    /// cumulative uplink bits across the run
+    pub total_bits: u64,
+    /// duration of this round, simulated seconds
+    pub sim_round_s: f64,
+    /// simulated clock since the run started
+    pub sim_now_s: f64,
+    /// this round's acks, sorted by `(worker, sent_step)` — exactly what
+    /// the engine would ship in the NEXT round's broadcast
+    pub acks: Vec<(u32, AckEntry)>,
+}
+
+/// Heap-driven virtual round loop over a [`Population`]: the engine's
+/// round protocol at O(active) memory with a constant-size message
+/// model. See the module docs for the equivalence contract.
+pub struct RoundSim {
+    population: Population,
+    policy: Box<dyn ParticipationPolicy>,
+    agg: AggKind,
+    up_bits: u64,
+    down_bits: u64,
+    /// late messages awaiting resolution: `(worker, sent_step)`
+    pending: Vec<(u32, u64)>,
+    total_bits: u64,
+    step: u64,
+}
+
+impl RoundSim {
+    pub fn new(
+        cost: CostModel,
+        policy: Box<dyn ParticipationPolicy>,
+        agg: AggKind,
+        up_bits: u64,
+        down_bits: u64,
+    ) -> Self {
+        RoundSim {
+            population: Population::new(cost),
+            policy,
+            agg,
+            up_bits,
+            down_bits,
+            pending: Vec::new(),
+            total_bits: 0,
+            step: 0,
+        }
+    }
+
+    pub fn population(&self) -> &Population {
+        &self.population
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.total_bits
+    }
+
+    pub fn sim_now_s(&self) -> f64 {
+        self.population.cost().now_s()
+    }
+
+    /// Next round index.
+    pub fn step_index(&self) -> u64 {
+        self.step
+    }
+
+    /// One simulated round. Mirrors the engine's virtual path decision
+    /// for decision: same close deadline, same on-time/late partition
+    /// (ties at the deadline on time), same stale resolution order
+    /// (ascending `(sent_step, worker)`, per-worker supersede dedupe for
+    /// `Fresh`, full weight for `Accumulate`), same ack order, same
+    /// charge-once bit accounting.
+    pub fn run_round(&mut self) -> Result<SimRoundReport> {
+        let step = self.step;
+        let m = self.population.size();
+        let parts = self.policy.draw(step, m);
+        let heap = self.population.arrivals(step, &parts, self.up_bits, self.down_bits);
+        let mut view = HeapArrivals::new(heap, m);
+        let active = view.active();
+        let deadline = match self.policy.close_at(step, &mut view) {
+            CloseRule::AtTime(t) => t,
+            CloseRule::Count(0) => {
+                bail!("policy {:?} returned CloseRule::Count(0)", self.policy.name())
+            }
+            CloseRule::Count(k) => {
+                if active == 0 {
+                    0.0
+                } else {
+                    view.nth(if k < active { k - 1 } else { active - 1 })
+                        .expect("index < active participants")
+                        .at_s
+                }
+            }
+        };
+
+        // partition: the popped prefix is ascending and every event
+        // still in the heap is >= the prefix max, so splitting the
+        // prefix at the deadline and tie-popping the heap is exact
+        let (prefix, mut rest) = view.into_parts();
+        let mut on_time: Vec<u32> = Vec::new();
+        let mut late: Vec<u32> = Vec::new();
+        let earliest = prefix
+            .first()
+            .map(|a| a.at_s)
+            .or_else(|| rest.peek().map(|e| e.at_s))
+            .unwrap_or(f64::INFINITY);
+        for a in &prefix {
+            if a.at_s <= deadline {
+                on_time.push(a.worker);
+            } else {
+                late.push(a.worker);
+            }
+        }
+        while let Some(e) = rest.peek() {
+            if e.at_s > deadline {
+                break;
+            }
+            on_time.push(rest.pop().expect("peeked event exists").worker);
+        }
+        late.extend(rest.drain_workers());
+        on_time.sort_unstable();
+        late.sort_unstable();
+
+        // same zero-replies contract as the engine: every sane close
+        // rule admits at least the earliest arrival
+        if on_time.is_empty() && active > 0 {
+            bail!(
+                "policy {:?} closed step {step} at {deadline}s, before the earliest arrival \
+                 ({earliest}s) — a round cannot close on zero replies",
+                self.policy.name()
+            );
+        }
+
+        // resolve the stale buffer, then this round's replies — the
+        // engine's exact order and accounting with constant-size
+        // messages (each transmission charged once, at resolution)
+        let mut acks: Vec<(u32, AckEntry)> = Vec::new();
+        fn stage(acks: &mut Vec<(u32, AckEntry)>, w: u32, sent_step: u64, s: AckStatus, wt: f32) {
+            acks.push((w, AckEntry { sent_step, status: s, weight: wt }));
+        }
+        let mut resolve = std::mem::take(&mut self.pending);
+        resolve.sort_unstable_by_key(|&(w, s)| (s, w));
+        let mut applied_msgs = 0u64;
+        let mut applied_stale = 0usize;
+        let mut dropped_stale = 0usize;
+        let mut dropped_bits = 0u64;
+        for (w, sent) in resolve {
+            match self.agg {
+                AggKind::Accumulate => {
+                    stage(&mut acks, w, sent, AckStatus::Applied, 1.0);
+                    applied_msgs += 1;
+                    applied_stale += 1;
+                }
+                AggKind::Fresh => {
+                    let superseded = on_time.binary_search(&w).is_ok();
+                    let age = step.saturating_sub(sent).max(1);
+                    let action = if superseded {
+                        StaleAction::Drop
+                    } else {
+                        self.policy.stale_weight(age)
+                    };
+                    match action {
+                        StaleAction::Drop => {
+                            stage(&mut acks, w, sent, AckStatus::Dropped, 0.0);
+                            dropped_bits += self.up_bits;
+                            dropped_stale += 1;
+                        }
+                        StaleAction::Apply(weight) => {
+                            stage(&mut acks, w, sent, AckStatus::Applied, weight);
+                            applied_msgs += 1;
+                            applied_stale += 1;
+                        }
+                    }
+                }
+            }
+        }
+        for &w in &on_time {
+            stage(&mut acks, w, step, AckStatus::Applied, 1.0);
+            applied_msgs += 1;
+        }
+        for &w in &late {
+            stage(&mut acks, w, step, AckStatus::Deferred, 0.0);
+            self.pending.push((w, step));
+        }
+        acks.sort_by_key(|(w, a)| (*w, a.sent_step));
+
+        let bits = applied_msgs * self.up_bits + dropped_bits;
+        self.total_bits += bits;
+        let sim_now_s = self.population.cost_mut().advance(deadline);
+        self.step += 1;
+        Ok(SimRoundReport {
+            step,
+            participants: parts.len(),
+            on_time: on_time.len(),
+            late: late.len(),
+            applied_stale,
+            dropped_stale,
+            bits,
+            total_bits: self.total_bits,
+            sim_round_s: deadline,
+            sim_now_s,
+            acks,
+        })
+    }
+
+    /// Resolve the deferred buffer outside the round loop, exactly like
+    /// the engine's drain: `Accumulate` increments are absorbed
+    /// (applied), stale `Fresh` gradients discarded — transmitted either
+    /// way, so every pending message's bits join the total exactly once.
+    /// Returns `(absorbed, discarded)`. Idempotent.
+    pub fn drain_pending(&mut self) -> (usize, usize) {
+        let pending = std::mem::take(&mut self.pending);
+        if pending.is_empty() {
+            return (0, 0);
+        }
+        self.total_bits += pending.len() as u64 * self.up_bits;
+        match self.agg {
+            AggKind::Accumulate => (pending.len(), 0),
+            AggKind::Fresh => (0, pending.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::policy::{
+        AdaptiveQuorum, ClientSampling, FixedQuorum, FullSync, StaleWeight,
+    };
+    use crate::netsim::CostSpec;
+
+    const UP: u64 = 32 * 16;
+    const DOWN: u64 = 32 * 64;
+
+    fn sim(
+        m: usize,
+        policy: Box<dyn ParticipationPolicy>,
+        agg: AggKind,
+        straggler: f64,
+    ) -> RoundSim {
+        let cost =
+            CostSpec::preset("hetero").unwrap().workers(m).straggler(straggler).seed(7).build();
+        RoundSim::new(cost, policy, agg, UP, DOWN)
+    }
+
+    #[test]
+    fn fullsync_round_hears_everyone_and_charges_once() {
+        let mut s = sim(8, Box::new(FullSync::new(StaleWeight::Damp)), AggKind::Fresh, 0.0);
+        let r = s.run_round().unwrap();
+        assert_eq!((r.participants, r.on_time, r.late), (8, 8, 0));
+        assert_eq!((r.applied_stale, r.dropped_stale), (0, 0));
+        assert_eq!(r.bits, 8 * UP);
+        assert_eq!(r.total_bits, s.total_bits());
+        assert!(r.sim_round_s > 0.0);
+        assert_eq!(r.sim_now_s, s.sim_now_s());
+        assert_eq!(r.acks.len(), 8);
+        assert!(r.acks.iter().all(|(_, a)| a.status == AckStatus::Applied && a.weight == 1.0));
+        assert_eq!(s.drain_pending(), (0, 0));
+    }
+
+    #[test]
+    fn quorum_defers_then_resolves_with_engine_accounting() {
+        let k = 3;
+        let mut s =
+            sim(6, Box::new(FixedQuorum::new(k, StaleWeight::Damp)), AggKind::Fresh, 5.0);
+        let r0 = s.run_round().unwrap();
+        assert_eq!(r0.on_time + r0.late, 6);
+        assert!(r0.on_time >= k, "ties at the deadline are on time");
+        let r1 = s.run_round().unwrap();
+        // every round-0 late message resolves in round 1
+        assert_eq!(r1.applied_stale + r1.dropped_stale, r0.late);
+        let resolved = (r0.on_time + r1.applied_stale + r1.dropped_stale + r1.on_time) as u64;
+        assert_eq!(r1.total_bits, resolved * UP);
+        assert!(r1.sim_now_s > r0.sim_now_s);
+        // drain charges the round-1 stragglers (discarded under Fresh)
+        let (absorbed, discarded) = s.drain_pending();
+        assert_eq!((absorbed, discarded), (0, r1.late));
+        assert_eq!(s.total_bits(), (resolved + r1.late as u64) * UP);
+        assert_eq!(s.drain_pending(), (0, 0), "drain is idempotent");
+    }
+
+    #[test]
+    fn accumulate_resolves_stale_at_full_weight_and_absorbs_on_drain() {
+        let mut s =
+            sim(6, Box::new(FixedQuorum::new(2, StaleWeight::Damp)), AggKind::Accumulate, 5.0);
+        let r0 = s.run_round().unwrap();
+        let r1 = s.run_round().unwrap();
+        assert_eq!(r1.applied_stale, r0.late);
+        assert_eq!(r1.dropped_stale, 0, "increments are never dropped");
+        for (_, a) in r1.acks.iter().filter(|(_, a)| a.sent_step == 0) {
+            assert_eq!((a.status, a.weight), (AckStatus::Applied, 1.0));
+        }
+        let (absorbed, discarded) = s.drain_pending();
+        assert_eq!((absorbed, discarded), (r1.late, 0));
+    }
+
+    #[test]
+    fn sampled_round_prices_only_the_cohort() {
+        let m = 100_000;
+        let frac = 256.0 / m as f32;
+        let mut s =
+            sim(m, Box::new(ClientSampling::new(frac, 7, StaleWeight::Damp)), AggKind::Fresh, 0.02);
+        let r = s.run_round().unwrap();
+        assert_eq!(r.participants, 256);
+        assert_eq!(r.on_time, 256, "sampling waits for every drawn client");
+        assert_eq!(r.bits, 256 * UP);
+    }
+
+    #[test]
+    fn adaptive_replays_bitwise_and_beats_nobody_to_zero() {
+        let runs: Vec<SimRoundReport> = (0..2)
+            .map(|_| {
+                let mut s = sim(
+                    16,
+                    Box::new(AdaptiveQuorum::new(StaleWeight::Damp)),
+                    AggKind::Fresh,
+                    0.05,
+                );
+                for _ in 0..3 {
+                    s.run_round().unwrap();
+                }
+                s.run_round().unwrap()
+            })
+            .collect();
+        assert_eq!(runs[0].sim_now_s.to_bits(), runs[1].sim_now_s.to_bits());
+        assert_eq!(runs[0].total_bits, runs[1].total_bits);
+        assert_eq!(runs[0].on_time, runs[1].on_time);
+        assert!(runs[0].on_time > 16 / 2, "adaptive never closes below majority");
+    }
+
+    #[test]
+    fn broken_policies_fail_as_loudly_as_in_the_engine() {
+        let mut s = sim(4, Box::new(FixedQuorum::new(0, StaleWeight::Damp)), AggKind::Fresh, 0.0);
+        let err = s.run_round().unwrap_err().to_string();
+        assert!(err.contains("Count(0)"), "{err}");
+
+        struct ClosesEarly;
+        impl ParticipationPolicy for ClosesEarly {
+            fn name(&self) -> &'static str {
+                "closes-early"
+            }
+            fn draw(&self, _step: u64, m: usize) -> Vec<u32> {
+                (0..m as u32).collect()
+            }
+            fn close_at(&mut self, _step: u64, _arrivals: &mut dyn ArrivalView) -> CloseRule {
+                CloseRule::AtTime(-1.0)
+            }
+            fn close_count(&mut self, _step: u64, participants: usize) -> usize {
+                participants
+            }
+            fn stale_weight(&self, _age: u64) -> StaleAction {
+                StaleAction::Apply(1.0)
+            }
+        }
+        let mut s = sim(4, Box::new(ClosesEarly), AggKind::Fresh, 0.0);
+        let err = s.run_round().unwrap_err().to_string();
+        assert!(err.contains("before the earliest arrival"), "{err}");
+    }
+}

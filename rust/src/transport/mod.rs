@@ -79,7 +79,7 @@ pub struct Gathered {
 ///
 /// * **virtual-time** (the default): [`Transport::gather`] blocks for
 ///   every requested reply and the engine decides on-time/late with the
-///   deterministic [`crate::netsim::VirtualClock`] — the replayable
+///   deterministic [`crate::netsim::CostModel`] — the replayable
 ///   simulation path (inline handlers, mpsc channels, benches, tests).
 /// * **real-time**: [`Transport::gather_until`] returns frames as they
 ///   *actually* arrive, so a quorum-k round closes on the k-th real

@@ -14,7 +14,7 @@
 use mlmc_dist::config::{Method, Participation, TrainConfig};
 use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
 use mlmc_dist::engine::{self, participants, RoundEngine};
-use mlmc_dist::netsim::VirtualClock;
+use mlmc_dist::netsim::CostModel;
 use mlmc_dist::tensor::Rng;
 use mlmc_dist::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
 use mlmc_dist::transport::channel::star;
@@ -136,7 +136,7 @@ fn quorum_and_sampled_runs_replay_exactly() {
 
 #[test]
 fn virtual_clock_monotone_and_permutation_stable() {
-    let clock = VirtualClock::from_preset("hetero", 8, 0.02, 7).unwrap();
+    let clock = CostModel::from_preset("hetero", 8, 0.02, 7).unwrap();
     // permutation stability: arrival times are pure per (step, worker),
     // so any evaluation order yields the same timeline
     for step in 0..10u64 {
@@ -154,7 +154,7 @@ fn virtual_clock_monotone_and_permutation_stable() {
         assert!(forward.iter().all(|t| *t > 0.0));
     }
     // monotonicity: advancing by per-round deadlines never rewinds
-    let mut clock = VirtualClock::from_preset("edge", 4, 0.01, 3).unwrap();
+    let mut clock = CostModel::from_preset("edge", 4, 0.01, 3).unwrap();
     let mut prev = 0.0;
     for step in 0..50u64 {
         let deadline =

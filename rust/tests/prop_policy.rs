@@ -20,9 +20,9 @@
 use mlmc_dist::config::{Method, TrainConfig};
 use mlmc_dist::coordinator::{agg_kind, build_encoder, RoundMsg, Server};
 use mlmc_dist::engine::{
-    self, Arrival, CloseRule, Compute, ParticipationPolicy, RoundEngine, StaleAction,
+    self, ArrivalView, CloseRule, Compute, ParticipationPolicy, RoundEngine, StaleAction,
 };
-use mlmc_dist::netsim::CostModel;
+use mlmc_dist::netsim::CostSpec;
 use mlmc_dist::optim::Sgd;
 use mlmc_dist::tensor::Rng;
 use mlmc_dist::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
@@ -55,10 +55,7 @@ fn oracle_quorum_run(
     let mut encoders: Vec<_> = (0..m).map(|_| build_encoder(cfg, d)).collect();
     let mut server =
         Server::new(vec![0.0; d], Box::new(Sgd { lr: cfg.lr }), agg_kind(&cfg.method));
-    let mut cost = CostModel::from_preset(&cfg.link, m, cfg.straggler, cfg.seed).unwrap();
-    if cfg.compute > 0.0 {
-        cost = cost.with_compute(cfg.compute, cfg.compute_spread);
-    }
+    let mut cost = CostSpec::from_train_cfg(cfg, m).unwrap().build();
     // (worker, sent_step, comp)
     let mut pending: Vec<(u32, u64, mlmc_dist::compress::Compressed)> = Vec::new();
     for step in 0..cfg.steps as u64 {
@@ -180,7 +177,7 @@ impl ParticipationPolicy for LegacyQuorum {
         (0..m as u32).collect()
     }
 
-    fn close_at(&mut self, _step: u64, _arrivals: &[Arrival]) -> CloseRule {
+    fn close_at(&mut self, _step: u64, _arrivals: &mut dyn ArrivalView) -> CloseRule {
         CloseRule::Count(self.k)
     }
 

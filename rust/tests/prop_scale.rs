@@ -1,0 +1,224 @@
+//! Event-heap scale properties (ISSUE 6):
+//!
+//! (a) [`RoundSim`] — the O(active)-memory heap path — is
+//!     **decision-for-decision bit-identical** to the full engine's
+//!     virtual mode on the same config: same participant draw, same
+//!     close deadline, same on-time/late partition, same stale
+//!     resolution and ack stream, same charge-once bit accounting, same
+//!     simulated clock. Checked per policy × preset at every M the
+//!     engine itself can hold, and for every stale-handling mode.
+//! (b) Popping the event heap is exactly the eager sort it replaces,
+//!     for every cost-model preset.
+//! (c) At M = 10⁵ — far beyond what the engine instantiates — a sampled
+//!     round replays bitwise from `(seed, step)` alone.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use mlmc_dist::compress::Compressed;
+use mlmc_dist::config::TrainConfig;
+use mlmc_dist::coordinator::Server;
+use mlmc_dist::ef::{AckEntry, AggKind};
+use mlmc_dist::engine::policy::{
+    AdaptiveQuorum, ClientSampling, FixedQuorum, FullSync, ParticipationPolicy, StaleWeight,
+};
+use mlmc_dist::engine::{local_star, Compute, RoundEngine, RoundReport, WorkerRound};
+use mlmc_dist::netsim::{CostSpec, Event, EventHeap, RoundSim, SimRoundReport};
+use mlmc_dist::optim::Sgd;
+
+const D: usize = 16;
+const BITS: u64 = 32 * D as u64;
+const ROUNDS: usize = 4;
+const PRESETS: &[&str] = &["datacenter", "edge", "hetero", "hetero-compute"];
+
+fn cfg(m: usize, link: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.workers = m;
+    cfg.link = link.into();
+    cfg.straggler = 0.03;
+    cfg.seed = 11;
+    cfg
+}
+
+type PolicyFactory = fn(usize) -> Box<dyn ParticipationPolicy>;
+
+fn policy_grid() -> Vec<(&'static str, PolicyFactory)> {
+    vec![
+        ("full", |_m| Box::new(FullSync::new(StaleWeight::Damp))),
+        ("quorum", |m| Box::new(FixedQuorum::new(m / 2 + 1, StaleWeight::Damp))),
+        ("sampled", |_m| Box::new(ClientSampling::new(0.3, 11, StaleWeight::Damp))),
+        ("adaptive", |_m| Box::new(AdaptiveQuorum::new(StaleWeight::Damp))),
+    ]
+}
+
+/// Run the full engine: every worker replies with a constant dense
+/// gradient of `D` f32s (so each uplink message is exactly `BITS` on
+/// the wire, matching the sim's constant-size model) and logs every ack
+/// it observes as `(observed_step, worker, ack)`.
+fn run_engine(
+    cfg: &TrainConfig,
+    policy: Box<dyn ParticipationPolicy>,
+    agg: AggKind,
+) -> (Vec<RoundReport>, Vec<(u64, u32, AckEntry)>, u64) {
+    let log: Rc<RefCell<Vec<(u64, u32, AckEntry)>>> = Rc::new(RefCell::new(Vec::new()));
+    let computes: Vec<Compute<'_>> = (0..cfg.workers as u32)
+        .map(|w| {
+            let log = Rc::clone(&log);
+            Box::new(move |round: &WorkerRound<'_>| {
+                for a in round.acks {
+                    log.borrow_mut().push((round.step, w, *a));
+                }
+                if !round.participant {
+                    return Ok(None);
+                }
+                Ok(Some((0.0f32, Compressed::dense(vec![1.0f32; round.params.len()]))))
+            }) as Compute<'_>
+        })
+        .collect();
+    let server = Server::new(vec![0.0; D], Box::new(Sgd { lr: 0.1 }), agg);
+    let mut eng = RoundEngine::with_policy(local_star(computes), server, cfg, policy).unwrap();
+    let reports: Vec<RoundReport> = (0..ROUNDS).map(|_| eng.run_round().unwrap()).collect();
+    let total_bits = eng.finish().unwrap().total_bits;
+    let entries = log.borrow().clone();
+    (reports, entries, total_bits)
+}
+
+fn run_sim(
+    cfg: &TrainConfig,
+    policy: Box<dyn ParticipationPolicy>,
+    agg: AggKind,
+) -> (Vec<SimRoundReport>, RoundSim) {
+    let cost = CostSpec::from_train_cfg(cfg, cfg.workers).unwrap().build();
+    let mut sim = RoundSim::new(cost, policy, agg, BITS, BITS);
+    let reports = (0..ROUNDS).map(|_| sim.run_round().unwrap()).collect();
+    (reports, sim)
+}
+
+/// One grid cell: the sim must restate the engine's run bit for bit.
+fn check_cell(m: usize, link: &str, name: &str, factory: PolicyFactory, agg: AggKind) {
+    let cfg = cfg(m, link);
+    let (ereps, acklog, engine_total) = run_engine(&cfg, factory(m), agg);
+    let (sreps, mut sim) = run_sim(&cfg, factory(m), agg);
+    let tag = format!("{name} m={m} link={link} agg={agg:?}");
+    for (e, s) in ereps.iter().zip(&sreps) {
+        assert_eq!(e.step, s.step, "{tag}");
+        assert_eq!(e.participants, s.participants, "{tag} step {}", e.step);
+        assert_eq!(e.on_time, s.on_time, "{tag} step {}", e.step);
+        assert_eq!(e.late, s.late, "{tag} step {}", e.step);
+        assert_eq!(e.applied_stale, s.applied_stale, "{tag} step {}", e.step);
+        assert_eq!(e.dropped_stale, s.dropped_stale, "{tag} step {}", e.step);
+        assert_eq!(e.bits, s.bits, "{tag} step {}", e.step);
+        assert_eq!(e.total_bits, s.total_bits, "{tag} step {}", e.step);
+        assert_eq!(
+            e.sim_round_s.to_bits(),
+            s.sim_round_s.to_bits(),
+            "{tag} step {}: round duration {} vs {}",
+            e.step,
+            e.sim_round_s,
+            s.sim_round_s
+        );
+        assert_eq!(
+            e.sim_now_s.to_bits(),
+            s.sim_now_s.to_bits(),
+            "{tag} step {}: clock {} vs {}",
+            e.step,
+            e.sim_now_s,
+            s.sim_now_s
+        );
+    }
+    // acks staged while resolving round s ship in round s+1's broadcast;
+    // workers observe them in worker order, each worker's entries in
+    // ascending sent_step — exactly the sim's report order
+    for s in 0..ROUNDS - 1 {
+        let observed: Vec<(u32, AckEntry)> = acklog
+            .iter()
+            .filter(|(at, ..)| *at == (s + 1) as u64)
+            .map(|&(_, w, a)| (w, a))
+            .collect();
+        assert_eq!(observed, sreps[s].acks, "{tag}: acks staged in round {s}");
+    }
+    // the engine's finish() drains its pending buffer; the sim's drain
+    // must land on the same cumulative uplink total
+    sim.drain_pending();
+    assert_eq!(engine_total, sim.total_bits(), "{tag}: drained totals");
+}
+
+#[test]
+fn heap_sim_is_bit_identical_to_the_engine_per_policy_and_preset() {
+    for &m in &[4usize, 64, 1000] {
+        for &link in PRESETS {
+            for (name, factory) in policy_grid() {
+                check_cell(m, link, name, factory, AggKind::Fresh);
+            }
+        }
+    }
+}
+
+#[test]
+fn stale_handling_matches_the_engine_in_every_mode() {
+    // EF21-style increments: stale messages always land at full weight
+    check_cell(
+        16,
+        "hetero",
+        "quorum-accumulate",
+        |m| Box::new(FixedQuorum::new(m / 2 + 1, StaleWeight::Damp)),
+        AggKind::Accumulate,
+    );
+    // drop-all and geometric-decay staleness on the Fresh path
+    check_cell(
+        16,
+        "hetero",
+        "quorum-drop",
+        |m| Box::new(FixedQuorum::new(m / 2 + 1, StaleWeight::Drop)),
+        AggKind::Fresh,
+    );
+    check_cell(
+        16,
+        "hetero",
+        "quorum-exp",
+        |m| Box::new(FixedQuorum::new(m / 2 + 1, StaleWeight::Exp { decay: 0.5 })),
+        AggKind::Fresh,
+    );
+}
+
+#[test]
+fn heap_pop_order_equals_eager_sort_for_every_preset() {
+    for &link in PRESETS {
+        let cost = CostSpec::preset(link).unwrap().workers(512).straggler(0.05).seed(3).build();
+        let price = |w: u32| cost.arrival_s(1, w, 4096, 4096);
+        let mut heap = EventHeap::with_capacity(512);
+        for w in 0..512u32 {
+            heap.push(Event { at_s: price(w), worker: w });
+        }
+        let mut eager: Vec<Event> =
+            (0..512u32).map(|w| Event { at_s: price(w), worker: w }).collect();
+        eager.sort();
+        let mut popped = Vec::with_capacity(512);
+        while let Some(e) = heap.pop() {
+            popped.push(e);
+        }
+        assert_eq!(popped, eager, "{link}");
+    }
+}
+
+#[test]
+fn sampled_replay_is_deterministic_at_hundred_thousand_workers() {
+    let m = 100_000;
+    let frac = (256.0 / m as f64) as f32;
+    let run = |seed: u64| {
+        let cost =
+            CostSpec::preset("hetero").unwrap().workers(m).straggler(0.02).seed(seed).build();
+        let policy = Box::new(ClientSampling::new(frac, seed, StaleWeight::Damp));
+        let mut sim = RoundSim::new(cost, policy, AggKind::Fresh, 32 * 64, 32 * 64);
+        (0..3)
+            .map(|_| {
+                let r = sim.run_round().unwrap();
+                (r.participants, r.on_time, r.total_bits, r.sim_now_s.to_bits())
+            })
+            .collect::<Vec<_>>()
+    };
+    let a = run(7);
+    assert_eq!(a, run(7), "same seed must replay the run bitwise");
+    assert_eq!(a[0].0, 256, "the cohort is the drawn 256, not the population");
+    assert_ne!(a, run(8), "a different seed must change the timeline");
+}
