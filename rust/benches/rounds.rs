@@ -109,11 +109,60 @@ fn main() {
         preset_rows.push((preset.to_string(), rep.sim_round_s));
     }
 
+    // measured per-step gradient-compute+compress seconds at several
+    // dims: the refit source behind `cost::calibrated_compute_s` (the
+    // shipped COMPUTE_FIT_* constants are a least-squares line through
+    // exactly these samples on the CI runner class)
+    let mut fit_samples: Vec<(usize, f64)> = Vec::new();
+    let mut fit_dims: Vec<usize> = [d / 8, d / 2, d].iter().map(|&x| x.max(1024).min(d)).collect();
+    fit_dims.dedup();
+    for fd in fit_dims {
+        let cfg = base_cfg(fd, 1, "full");
+        let sub = &grad[..fd];
+        let mut enc = build_encoder(&cfg, fd);
+        let mut r = Rng::for_stream(cfg.seed ^ 0x5EED, 0, 0);
+        let s = b.case_elems(&format!("grad-compress d={fd}"), fd as u64, || {
+            black_box(enc.encode(sub, &mut r).wire_bits())
+        });
+        fit_samples.push((fd, s.mean_ns * 1e-9));
+    }
+    let fit = linear_fit(&fit_samples);
+    println!(
+        "fitted_compute base={:.3e}s per_elem={:.3e}s (shipped {:.3e}/{:.3e})",
+        fit.0,
+        fit.1,
+        cost::COMPUTE_FIT_BASE_S,
+        cost::COMPUTE_FIT_PER_ELEM_S
+    );
+
     b.write_csv();
-    write_json(d, hw, &cases, &preset_rows);
+    write_json(d, hw, &cases, &preset_rows, &fit_samples, fit);
 }
 
-fn write_json(d: usize, hw: usize, cases: &[Case], presets: &[(String, f64)]) {
+/// Least-squares `y = base + slope * x` over `(x, y)` samples.
+fn linear_fit(samples: &[(usize, f64)]) -> (f64, f64) {
+    let n = samples.len() as f64;
+    let (sx, sy, sxx, sxy) = samples.iter().fold((0.0, 0.0, 0.0, 0.0), |(a, b, c, d), &(x, y)| {
+        let x = x as f64;
+        (a + x, b + y, c + x * x, d + x * y)
+    });
+    let denom = n * sxx - sx * sx;
+    if denom <= 0.0 {
+        // one distinct dim: no slope information, attribute all to base
+        return (sy / n.max(1.0), 0.0);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    ((sy - slope * sx) / n, slope)
+}
+
+fn write_json(
+    d: usize,
+    hw: usize,
+    cases: &[Case],
+    presets: &[(String, f64)],
+    fit_samples: &[(usize, f64)],
+    fit: (f64, f64),
+) {
     use std::fmt::Write as _;
     let mut s = String::new();
     s.push_str("{\n");
@@ -138,6 +187,18 @@ fn write_json(d: usize, hw: usize, cases: &[Case], presets: &[(String, f64)]) {
         let comma = if i + 1 < presets.len() { "," } else { "" };
         let _ = writeln!(s, "    {name:?}: {t:.9}{comma}");
     }
+    s.push_str("  },\n");
+    s.push_str("  \"fitted_compute\": {\n");
+    s.push_str("    \"samples\": [");
+    for (i, (fd, sec)) in fit_samples.iter().enumerate() {
+        let comma = if i + 1 < fit_samples.len() { ", " } else { "" };
+        let _ = write!(s, "{{\"d\": {fd}, \"seconds\": {sec:.9}}}{comma}");
+    }
+    s.push_str("],\n");
+    let _ = writeln!(s, "    \"base_s\": {:.9},", fit.0);
+    let _ = writeln!(s, "    \"per_elem_s\": {:.3e},", fit.1);
+    let _ = writeln!(s, "    \"shipped_base_s\": {:.9},", cost::COMPUTE_FIT_BASE_S);
+    let _ = writeln!(s, "    \"shipped_per_elem_s\": {:.3e}", cost::COMPUTE_FIT_PER_ELEM_S);
     s.push_str("  },\n");
     s.push_str("  \"speedup_vs_1t\": {\n");
     let policies = ["full", "quorum"];

@@ -1,0 +1,194 @@
+//! Kernel-layer benchmarks: dispatched (`tensor::kernels::*`, AVX2 with
+//! `--features simd`) vs the canonical scalar reference
+//! (`kernels::scalar::*`), plus the arena-backed compression paths the
+//! kernels feed. Both paths are bit-identical by construction
+//! (`tests/prop_simd.rs`), so this suite measures pure throughput.
+//!
+//! Emits `results/bench_simd.csv` (benchlib) plus
+//! `results/BENCH_simd.json` with per-kernel speedups and the
+//! single-shard compression throughput headline. CI runs it twice —
+//! default and `--features simd` — and uploads both JSON files.
+//!
+//! Smoke mode (CI): `MLMC_BENCH_MS=60 cargo bench --bench simd`.
+
+use mlmc_dist::benchlib::{black_box, Bench, Stats};
+use mlmc_dist::compress::{Compressor, Rtn, ScratchArena, SignSgd, STopK, TopK};
+use mlmc_dist::tensor::{kernels, Rng};
+
+struct Pair {
+    name: &'static str,
+    scalar: Stats,
+    dispatch: Stats,
+}
+
+fn main() {
+    let d: usize = std::env::var("SIMD_BENCH_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let mut rng = Rng::new(1);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 1.0);
+    let mut y = vec![0.0f32; d];
+    rng.fill_normal(&mut y, 1.0);
+    let de = d as u64;
+
+    let mut b = Bench::new("simd");
+    println!("d={d} simd_active={}", kernels::simd_active());
+    let mut pairs: Vec<Pair> = Vec::new();
+
+    // reductions
+    let sc = b
+        .case_elems(&format!("sq_norm scalar d={d}"), de, || {
+            black_box(kernels::scalar::sq_norm(&v))
+        })
+        .clone();
+    let di = b
+        .case_elems(&format!("sq_norm dispatch d={d}"), de, || black_box(kernels::sq_norm(&v)))
+        .clone();
+    pairs.push(Pair { name: "sq_norm", scalar: sc, dispatch: di });
+
+    let sc = b
+        .case_elems(&format!("max_abs scalar d={d}"), de, || {
+            black_box(kernels::scalar::max_abs(&v))
+        })
+        .clone();
+    let di = b
+        .case_elems(&format!("max_abs dispatch d={d}"), de, || black_box(kernels::max_abs(&v)))
+        .clone();
+    pairs.push(Pair { name: "max_abs", scalar: sc, dispatch: di });
+
+    // elementwise
+    let sc = b
+        .case_elems(&format!("axpy scalar d={d}"), de, || {
+            kernels::scalar::axpy(&mut y, 0.999, &v);
+            black_box(y[0])
+        })
+        .clone();
+    let di = b
+        .case_elems(&format!("axpy dispatch d={d}"), de, || {
+            kernels::axpy(&mut y, 0.999, &v);
+            black_box(y[0])
+        })
+        .clone();
+    pairs.push(Pair { name: "axpy", scalar: sc, dispatch: di });
+
+    let mut out = vec![0.0f32; d];
+    let delta = kernels::max_abs(&v) / 7.0;
+    let sc = b
+        .case_elems(&format!("rtn_apply scalar d={d}"), de, || {
+            kernels::scalar::rtn_apply(&mut out, &v, delta, 7.0);
+            black_box(out[0])
+        })
+        .clone();
+    let di = b
+        .case_elems(&format!("rtn_apply dispatch d={d}"), de, || {
+            kernels::rtn_apply(&mut out, &v, delta, 7.0);
+            black_box(out[0])
+        })
+        .clone();
+    pairs.push(Pair { name: "rtn_apply", scalar: sc, dispatch: di });
+
+    let scale = kernels::max_abs(&v);
+    let sc = b
+        .case_elems(&format!("fx_apply scalar d={d}"), de, || {
+            kernels::scalar::fx_apply(&mut out, &v, 256.0, scale);
+            black_box(out[0])
+        })
+        .clone();
+    let di = b
+        .case_elems(&format!("fx_apply dispatch d={d}"), de, || {
+            kernels::fx_apply(&mut out, &v, 256.0, scale);
+            black_box(out[0])
+        })
+        .clone();
+    pairs.push(Pair { name: "fx_apply", scalar: sc, dispatch: di });
+
+    let sc = b
+        .case_elems(&format!("sign_fill scalar d={d}"), de, || {
+            kernels::scalar::sign_fill(&mut out, &v, 0.25);
+            black_box(out[0])
+        })
+        .clone();
+    let di = b
+        .case_elems(&format!("sign_fill dispatch d={d}"), de, || {
+            kernels::sign_fill(&mut out, &v, 0.25);
+            black_box(out[0])
+        })
+        .clone();
+    pairs.push(Pair { name: "sign_fill", scalar: sc, dispatch: di });
+
+    // single-shard compression throughput: heap path vs arena path
+    // (the ISSUE headline — hot-loop kernels + zero allocation)
+    let mut arena = ScratchArena::new();
+    let mut comp_rows: Vec<(String, f64, f64)> = Vec::new();
+    let cs: Vec<Box<dyn Compressor>> = vec![
+        Box::new(TopK { k: d / 100 }),
+        Box::new(STopK { s: d / 100, k: 10 }),
+        Box::new(Rtn { level: 4 }),
+        Box::new(SignSgd),
+    ];
+    for c in cs {
+        let name = c.name();
+        let mut r = Rng::new(2);
+        let heap = b
+            .case_elems(&format!("{name} heap d={d}"), de, || {
+                black_box(c.compress(&v, &mut r).wire_bits())
+            })
+            .clone();
+        let mut r = Rng::new(2);
+        let arena_s = b
+            .case_elems(&format!("{name} arena d={d}"), de, || {
+                let m = c.compress_with(&v, &mut r, &mut arena);
+                let bits = m.wire_bits();
+                arena.recycle(m);
+                black_box(bits)
+            })
+            .clone();
+        comp_rows.push((
+            name,
+            heap.throughput_gelem_s().unwrap_or(0.0),
+            arena_s.throughput_gelem_s().unwrap_or(0.0),
+        ));
+    }
+
+    b.write_csv();
+    write_json(d, &pairs, &comp_rows);
+}
+
+fn write_json(d: usize, pairs: &[Pair], comp_rows: &[(String, f64, f64)]) {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"suite\": \"simd\",");
+    let _ = writeln!(s, "  \"d\": {d},");
+    let _ = writeln!(s, "  \"simd_feature\": {},", cfg!(feature = "simd"));
+    let _ = writeln!(s, "  \"simd_active\": {},", kernels::simd_active());
+    s.push_str("  \"kernels\": [\n");
+    for (i, p) in pairs.iter().enumerate() {
+        let speedup =
+            if p.dispatch.mean_ns > 0.0 { p.scalar.mean_ns / p.dispatch.mean_ns } else { 0.0 };
+        let comma = if i + 1 < pairs.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"kernel\": {:?}, \"scalar_ns\": {:.1}, \"dispatch_ns\": {:.1}, \
+             \"speedup\": {speedup:.3}}}{comma}",
+            p.name, p.scalar.mean_ns, p.dispatch.mean_ns
+        );
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"compression_gelem_s\": [\n");
+    for (i, (name, heap, arena)) in comp_rows.iter().enumerate() {
+        let comma = if i + 1 < comp_rows.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"compressor\": {name:?}, \"heap\": {heap:.4}, \"arena\": {arena:.4}}}{comma}"
+        );
+    }
+    s.push_str("  ]\n}\n");
+    let path = mlmc_dist::util::results_dir().join("BENCH_simd.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

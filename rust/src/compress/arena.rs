@@ -1,0 +1,179 @@
+//! Reusable scratch buffers for the gradient hot path.
+//!
+//! A [`ScratchArena`] is a set of LIFO pools of plain `Vec`s. The
+//! arena-aware entry points ([`crate::compress::Compressor::compress_with`],
+//! [`crate::wire::decode_in`], [`crate::mlmc::Multilevel::draw_in`])
+//! *take* buffers from the pools instead of allocating, and finished
+//! payloads are *recycled* back ([`ScratchArena::recycle`]) once the
+//! server has consumed them. Because a steady-state round takes and
+//! returns buffers in a deterministic sequence, every pool converges to
+//! its peak capacity after a warmup round or two — from then on the
+//! single-thread-per-worker gradient path performs **zero heap
+//! allocations** (asserted by `tests/alloc_zero.rs`).
+//!
+//! Ownership rules:
+//!
+//! * a buffer taken from the arena is owned by the taker — the arena
+//!   never aliases it; return it with the matching `put_*` (or let a
+//!   payload built from it flow to [`ScratchArena::recycle`]);
+//! * dropping a taken buffer instead of returning it is always *safe* —
+//!   it merely reintroduces an allocation on the next take;
+//! * the arena is deliberately `!Sync`-shaped (plain `&mut` API): use
+//!   one arena per worker thread. The multi-threaded `ParCompressor`
+//!   path keeps its scoped-thread allocations (thread spawn allocates
+//!   anyway); the zero-allocation contract is per-thread.
+//!
+//! Known allocators that remain outside the contract: `RandK`'s lazy
+//! Fisher–Yates `HashMap` and the boxed-context MLMC fallback for
+//! multilevel families without a [`crate::mlmc::Multilevel::draw_in`]
+//! override. See README §"Hot path".
+
+use super::{Compressed, Payload};
+use crate::tensor::Rng;
+
+/// Pools of reusable buffers. See the module docs for ownership rules.
+#[derive(Default)]
+pub struct ScratchArena {
+    f32s: Vec<Vec<f32>>,
+    u32s: Vec<Vec<u32>>,
+    u64s: Vec<Vec<u64>>,
+    bytes: Vec<Vec<u8>>,
+    payloads: Vec<Vec<Payload>>,
+    rngs: Vec<Vec<Rng>>,
+}
+
+/// Pop from a pool (or make a fresh `Vec`), cleared, with at least
+/// `cap` capacity reserved.
+macro_rules! take_impl {
+    ($pool:expr, $cap:expr) => {{
+        let mut v = $pool.pop().unwrap_or_default();
+        v.clear();
+        v.reserve($cap);
+        v
+    }};
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn take_f32(&mut self, cap: usize) -> Vec<f32> {
+        take_impl!(self.f32s, cap)
+    }
+
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        self.f32s.push(v);
+    }
+
+    pub fn take_u32(&mut self, cap: usize) -> Vec<u32> {
+        take_impl!(self.u32s, cap)
+    }
+
+    pub fn put_u32(&mut self, v: Vec<u32>) {
+        self.u32s.push(v);
+    }
+
+    pub fn take_u64(&mut self, cap: usize) -> Vec<u64> {
+        take_impl!(self.u64s, cap)
+    }
+
+    pub fn put_u64(&mut self, v: Vec<u64>) {
+        self.u64s.push(v);
+    }
+
+    pub fn take_bytes(&mut self, cap: usize) -> Vec<u8> {
+        take_impl!(self.bytes, cap)
+    }
+
+    pub fn put_bytes(&mut self, v: Vec<u8>) {
+        self.bytes.push(v);
+    }
+
+    pub fn take_payloads(&mut self, cap: usize) -> Vec<Payload> {
+        take_impl!(self.payloads, cap)
+    }
+
+    pub fn put_payloads(&mut self, v: Vec<Payload>) {
+        debug_assert!(v.is_empty(), "recycle payload contents first");
+        self.payloads.push(v);
+    }
+
+    /// Reusable per-shard RNG stream buffer (see
+    /// [`crate::tensor::Rng::shard_streams_into`]).
+    pub fn take_rngs(&mut self) -> Vec<Rng> {
+        self.rngs.pop().unwrap_or_default()
+    }
+
+    pub fn put_rngs(&mut self, v: Vec<Rng>) {
+        self.rngs.push(v);
+    }
+
+    /// Return a consumed message's buffers to the pools.
+    pub fn recycle(&mut self, c: Compressed) {
+        self.recycle_payload(c.payload);
+    }
+
+    /// Return a consumed payload's buffers to the pools (recurses into
+    /// sharded payloads).
+    pub fn recycle_payload(&mut self, p: Payload) {
+        match p {
+            Payload::Dense(v) | Payload::Quantized { val: v, .. } => self.put_f32(v),
+            Payload::Sparse { idx, val, .. } => {
+                self.put_u32(idx);
+                self.put_f32(val);
+            }
+            Payload::Sharded(mut parts) => {
+                for part in parts.drain(..) {
+                    self.recycle_payload(part);
+                }
+                self.put_payloads(parts);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_cleared_and_reserved() {
+        let mut a = ScratchArena::new();
+        let mut v = a.take_f32(16);
+        v.extend_from_slice(&[1.0, 2.0, 3.0]);
+        a.put_f32(v);
+        let v2 = a.take_f32(16);
+        assert!(v2.is_empty());
+        assert!(v2.capacity() >= 16);
+    }
+
+    #[test]
+    fn pools_reuse_lifo() {
+        let mut a = ScratchArena::new();
+        let mut v = a.take_u32(8);
+        v.push(1);
+        let p = v.as_ptr();
+        a.put_u32(v);
+        let v2 = a.take_u32(4);
+        // same backing store comes back (capacity already sufficient)
+        assert_eq!(v2.as_ptr(), p);
+    }
+
+    #[test]
+    fn recycle_dismantles_sharded_payloads() {
+        let mut a = ScratchArena::new();
+        let c = Compressed {
+            payload: Payload::Sharded(vec![
+                Payload::Dense(vec![1.0, 2.0]),
+                Payload::Sparse { d: 4, idx: vec![1], val: vec![3.0] },
+                Payload::Quantized { val: vec![0.5], bits_per_elem: 2.0, overhead_bits: 32 },
+            ]),
+            extra_bits: 0,
+        };
+        a.recycle(c);
+        assert_eq!(a.f32s.len(), 3);
+        assert_eq!(a.u32s.len(), 1);
+        assert_eq!(a.payloads.len(), 1);
+    }
+}

@@ -8,8 +8,8 @@
 //! the paper's numbers are recovered by plugging in 64-bit widths — see
 //! EXPERIMENTS.md `comm` rows.
 
-use super::{Compressed, Compressor, Payload};
-use crate::tensor::{max_abs, Rng};
+use super::{Compressed, Compressor, Payload, ScratchArena};
+use crate::tensor::{kernels, max_abs, Rng};
 
 /// Maximum meaningful fixed-point depth for f32 gradients.
 pub const FX_MAX_LEVELS: usize = 23;
@@ -34,13 +34,21 @@ pub struct FixedPoint {
 impl FixedPoint {
     /// Apply at depth `f` and scale; shared with the multilevel wrapper.
     pub fn apply_with_scale(v: &[f32], f: usize, scale: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(v.len());
+        Self::apply_with_scale_into(v, f, scale, &mut out);
+        out
+    }
+
+    /// [`FixedPoint::apply_with_scale`] into a caller-owned buffer
+    /// (cleared first), routed through the vectorized truncation kernel.
+    pub fn apply_with_scale_into(v: &[f32], f: usize, scale: f32, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(v.len(), 0.0);
         if scale == 0.0 {
-            return vec![0.0; v.len()];
+            return;
         }
         let pow2 = (1u64 << f.min(63)) as f32;
-        v.iter()
-            .map(|x| fx_truncate_norm(x / scale, pow2) * scale)
-            .collect()
+        kernels::fx_apply(out, v, pow2, scale);
     }
 }
 
@@ -49,9 +57,14 @@ impl Compressor for FixedPoint {
         format!("fxp(f={})", self.f)
     }
 
-    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        self.compress_with(v, rng, &mut ScratchArena::new())
+    }
+
+    fn compress_with(&self, v: &[f32], _rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
         let scale = max_abs(v);
-        let val = Self::apply_with_scale(v, self.f, scale);
+        let mut val = arena.take_f32(v.len());
+        Self::apply_with_scale_into(v, self.f, scale, &mut val);
         Compressed {
             payload: Payload::Quantized {
                 val,
@@ -89,7 +102,24 @@ impl FloatPoint {
     }
 
     pub fn apply(v: &[f32], f: usize) -> Vec<f32> {
-        v.iter().map(|x| Self::truncate_elem(*x, f)).collect()
+        let mut out = Vec::with_capacity(v.len());
+        Self::apply_into(v, f, &mut out);
+        out
+    }
+
+    /// [`FloatPoint::apply`] into a caller-owned buffer (cleared first),
+    /// routed through the vectorized bit-mask kernel. `f >=`
+    /// [`FP_MANTISSA_BITS`] degenerates to an all-ones mask (lossless),
+    /// matching [`FloatPoint::truncate_elem`] bit-for-bit.
+    pub fn apply_into(v: &[f32], f: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(v.len(), 0.0);
+        let mask: u32 = if f >= FP_MANTISSA_BITS {
+            !0
+        } else {
+            !((1u32 << (FP_MANTISSA_BITS - f)) - 1)
+        };
+        kernels::fp_truncate(out, v, mask);
     }
 }
 
@@ -98,10 +128,16 @@ impl Compressor for FloatPoint {
         format!("flp(f={})", self.f)
     }
 
-    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        self.compress_with(v, rng, &mut ScratchArena::new())
+    }
+
+    fn compress_with(&self, v: &[f32], _rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
+        let mut val = arena.take_f32(v.len());
+        Self::apply_into(v, self.f, &mut val);
         Compressed {
             payload: Payload::Quantized {
-                val: Self::apply(v, self.f),
+                val,
                 bits_per_elem: (1 + 8 + self.f) as f64,
                 overhead_bits: 0,
             },

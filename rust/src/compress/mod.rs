@@ -10,6 +10,7 @@
 //! The MLMC wrapper that turns any *multilevel* biased compressor into an
 //! unbiased one lives in [`crate::mlmc`].
 
+pub mod arena;
 pub mod bitwise;
 pub mod natural;
 pub mod par;
@@ -18,6 +19,7 @@ pub mod rtn;
 pub mod sign;
 pub mod sparsify;
 
+pub use arena::ScratchArena;
 pub use bitwise::{FixedPoint, FloatPoint};
 pub use natural::Natural;
 pub use par::ParCompressor;
@@ -26,7 +28,7 @@ pub use rtn::Rtn;
 pub use sign::SignSgd;
 pub use sparsify::{RandK, STopK, TopK};
 
-use crate::tensor::Rng;
+use crate::tensor::{kernels, Rng};
 
 /// Bits to address one coordinate of a length-d vector.
 pub fn index_bits(d: usize) -> u64 {
@@ -101,22 +103,31 @@ impl Payload {
 
     /// Dense reconstruction.
     pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.dim());
+        self.decode_append(&mut out);
+        out
+    }
+
+    /// Dense reconstruction into a caller-owned buffer (cleared first) —
+    /// the allocation-free form of [`Payload::decode`].
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.dim());
+        self.decode_append(out);
+    }
+
+    fn decode_append(&self, out: &mut Vec<f32>) {
         match self {
-            Payload::Dense(v) => v.clone(),
+            Payload::Dense(v) | Payload::Quantized { val: v, .. } => out.extend_from_slice(v),
             Payload::Sparse { d, idx, val } => {
-                let mut out = vec![0.0; *d as usize];
-                for (i, v) in idx.iter().zip(val) {
-                    out[*i as usize] += *v;
-                }
-                out
+                let lo = out.len();
+                out.resize(lo + *d as usize, 0.0);
+                kernels::scatter_add(&mut out[lo..], idx, val, 1.0);
             }
-            Payload::Quantized { val, .. } => val.clone(),
             Payload::Sharded(parts) => {
-                let mut out = Vec::with_capacity(self.dim());
                 for p in parts {
-                    out.extend(p.decode());
+                    p.decode_append(out);
                 }
-                out
             }
         }
     }
@@ -125,16 +136,11 @@ impl Payload {
     pub fn add_into(&self, acc: &mut [f32], scale: f32) {
         match self {
             Payload::Dense(v) | Payload::Quantized { val: v, .. } => {
-                debug_assert_eq!(acc.len(), v.len());
-                for (a, x) in acc.iter_mut().zip(v) {
-                    *a += scale * x;
-                }
+                kernels::axpy(acc, scale, v);
             }
             Payload::Sparse { d, idx, val } => {
                 debug_assert_eq!(acc.len(), *d as usize);
-                for (i, x) in idx.iter().zip(val) {
-                    acc[*i as usize] += scale * x;
-                }
+                kernels::scatter_add(acc, idx, val, scale);
             }
             Payload::Sharded(parts) => {
                 debug_assert_eq!(acc.len(), self.dim());
@@ -161,9 +167,7 @@ impl Payload {
         debug_assert!(end <= self.dim());
         match self {
             Payload::Dense(v) | Payload::Quantized { val: v, .. } => {
-                for (a, x) in acc.iter_mut().zip(&v[start..end]) {
-                    *a += scale * x;
-                }
+                kernels::axpy(acc, scale, &v[start..end]);
             }
             Payload::Sparse { idx, val, .. } => {
                 for (i, x) in idx.iter().zip(val) {
@@ -191,16 +195,8 @@ impl Payload {
     /// Multiply all carried values in place (used by the MLMC 1/p^l scale).
     pub fn scale_values(&mut self, s: f32) {
         match self {
-            Payload::Dense(v) | Payload::Quantized { val: v, .. } => {
-                for x in v {
-                    *x *= s;
-                }
-            }
-            Payload::Sparse { val, .. } => {
-                for x in val {
-                    *x *= s;
-                }
-            }
+            Payload::Dense(v) | Payload::Quantized { val: v, .. } => kernels::scale(v, s),
+            Payload::Sparse { val, .. } => kernels::scale(val, s),
             Payload::Sharded(parts) => {
                 for p in parts {
                     p.scale_values(s);
@@ -248,6 +244,11 @@ impl Compressed {
         self.payload.decode()
     }
 
+    /// [`Compressed::decode`] into a caller-owned buffer (cleared first).
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        self.payload.decode_into(out)
+    }
+
     pub fn add_into(&self, acc: &mut [f32], scale: f32) {
         self.payload.add_into(acc, scale)
     }
@@ -258,6 +259,15 @@ pub trait Compressor: Send + Sync {
     fn name(&self) -> String;
     /// Compress `v`. `rng` feeds any internal randomization.
     fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed;
+    /// Compress `v` drawing scratch/output buffers from `arena` instead
+    /// of the heap. **Contract:** bit-identical result and identical
+    /// `rng` consumption vs. [`Compressor::compress`] (prop-tested in
+    /// `tests/prop_simd.rs`); the default falls back to the allocating
+    /// form, so overriding is purely a performance choice.
+    fn compress_with(&self, v: &[f32], rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
+        let _ = arena;
+        self.compress(v, rng)
+    }
     /// Whether `E[C(v)] = v` holds.
     fn unbiased(&self) -> bool;
 }
@@ -272,6 +282,11 @@ impl Compressor for Identity {
     }
     fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
         Compressed::dense(v.to_vec())
+    }
+    fn compress_with(&self, v: &[f32], _rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
+        let mut buf = arena.take_f32(v.len());
+        buf.extend_from_slice(v);
+        Compressed::dense(buf)
     }
     fn unbiased(&self) -> bool {
         true
@@ -425,6 +440,31 @@ mod tests {
         let e = Compressed::sharded(Vec::new());
         assert_eq!(e.dim(), 0);
         assert_eq!(e.wire_bits(), shard_framing_bits(0));
+    }
+
+    #[test]
+    fn decode_into_matches_decode() {
+        let p = Payload::Sharded(vec![
+            Payload::Dense(vec![1.0, 2.0]),
+            Payload::Sparse { d: 3, idx: vec![2, 0], val: vec![5.0, -1.0] },
+            Payload::Quantized { val: vec![-1.0], bits_per_elem: 4.0, overhead_bits: 8 },
+        ]);
+        let mut out = vec![9.0f32; 2]; // stale content must be cleared
+        p.decode_into(&mut out);
+        assert_eq!(out, p.decode());
+    }
+
+    #[test]
+    fn identity_compress_with_reuses_arena() {
+        let v = vec![1.0f32, -2.0, 3.0];
+        let mut rng = Rng::new(0);
+        let mut arena = ScratchArena::new();
+        let c = Identity.compress_with(&v, &mut rng, &mut arena);
+        assert_eq!(c.decode(), v);
+        assert_eq!(c.wire_bits(), 96);
+        arena.recycle(c);
+        let c2 = Identity.compress_with(&v, &mut rng, &mut arena);
+        assert_eq!(c2.decode(), v);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! (Eq. (3), or MLMC's Lemma 3.2 per shard), the concatenated estimate
 //! is unbiased on the full vector, since expectation acts coordinatewise.
 
-use super::{Compressed, Compressor};
+use super::{shard_framing_bits, Compressed, Compressor, Payload, ScratchArena};
 use crate::tensor::{Rng, ShardSpec};
 
 /// Adapter that runs `inner` independently on every shard of the input.
@@ -86,6 +86,33 @@ impl Compressor for ParCompressor {
             });
         }
         Compressed::sharded(parts.into_iter().map(|p| p.expect("all shards compressed")).collect())
+    }
+
+    fn compress_with(&self, v: &[f32], rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
+        let spec = self.spec(v.len());
+        let n = spec.num_shards();
+        let threads = self.threads.min(n.max(1));
+        if threads > 1 {
+            // scoped-thread spawning allocates regardless; the arena
+            // contract is per-thread, so the pooled path keeps the
+            // allocating form (still bit-identical — same streams).
+            return self.compress(v, rng);
+        }
+        let mut rngs = arena.take_rngs();
+        rng.shard_streams_into(n, &mut rngs);
+        let mut parts = arena.take_payloads(n);
+        let mut extra: u64 = 0;
+        for (i, r) in rngs.iter_mut().enumerate() {
+            let c = self.inner.compress_with(&v[spec.range(i)], r, arena);
+            extra += c.extra_bits;
+            parts.push(c.payload);
+        }
+        arena.put_rngs(rngs);
+        // same accounting as [`Compressed::sharded`]
+        Compressed {
+            payload: Payload::Sharded(parts),
+            extra_bits: extra + shard_framing_bits(n),
+        }
     }
 
     fn unbiased(&self) -> bool {

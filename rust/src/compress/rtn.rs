@@ -12,8 +12,8 @@
 //! Rounding is **half-to-even** to match `jnp.round` in the L1 Pallas
 //! kernel (`python/compile/kernels/rtn.py`).
 
-use super::{Compressed, Compressor, Payload};
-use crate::tensor::{max_abs, Rng};
+use super::{Compressed, Compressor, Payload, ScratchArena};
+use crate::tensor::{kernels, max_abs, Rng};
 
 /// RTN at a fixed level, clip range taken from the vector max.
 #[derive(Clone, Debug)]
@@ -38,14 +38,21 @@ impl Rtn {
 
     /// Apply RTN at (level, c_val) to every element.
     pub fn apply(v: &[f32], level: u32, c_val: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(v.len());
+        Self::apply_into(v, level, c_val, &mut out);
+        out
+    }
+
+    /// [`Rtn::apply`] into a caller-owned buffer (cleared first), routed
+    /// through the vectorized grid-projection kernel.
+    pub fn apply_into(v: &[f32], level: u32, c_val: f32, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(v.len(), 0.0);
         let c_units = Self::c_units(level);
         if c_val == 0.0 || c_units == 0.0 {
-            return vec![0.0; v.len()];
+            return; // degenerate grid: everything maps to 0
         }
-        let d = Self::delta(level, c_val);
-        v.iter()
-            .map(|x| d * (x / d).round_ties_even().clamp(-c_units, c_units))
-            .collect()
+        kernels::rtn_apply(out, v, Self::delta(level, c_val), c_units);
     }
 }
 
@@ -54,11 +61,17 @@ impl Compressor for Rtn {
         format!("rtn(l={})", self.level)
     }
 
-    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        self.compress_with(v, rng, &mut ScratchArena::new())
+    }
+
+    fn compress_with(&self, v: &[f32], _rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
         let c_val = max_abs(v);
+        let mut val = arena.take_f32(v.len());
+        Self::apply_into(v, self.level, c_val, &mut val);
         Compressed {
             payload: Payload::Quantized {
-                val: Self::apply(v, self.level, c_val),
+                val,
                 bits_per_elem: self.level as f64,
                 overhead_bits: 32,
             },

@@ -2,8 +2,8 @@
 //! `C(v) = sign(v) · ‖v‖₁/d` — 1 bit per element + one 32-bit scale.
 //! Biased; the classic EF use case.
 
-use super::{Compressed, Compressor, Payload};
-use crate::tensor::{l1_norm, Rng};
+use super::{Compressed, Compressor, Payload, ScratchArena};
+use crate::tensor::{kernels, l1_norm, Rng};
 
 #[derive(Clone, Debug, Default)]
 pub struct SignSgd;
@@ -13,13 +13,16 @@ impl Compressor for SignSgd {
         "sign".into()
     }
 
-    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        self.compress_with(v, rng, &mut ScratchArena::new())
+    }
+
+    fn compress_with(&self, v: &[f32], _rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
         let d = v.len();
         let mag = if d == 0 { 0.0 } else { (l1_norm(v) / d as f64) as f32 };
-        let val = v
-            .iter()
-            .map(|x| if *x >= 0.0 { mag } else { -mag })
-            .collect();
+        let mut val = arena.take_f32(d);
+        val.resize(d, 0.0);
+        kernels::sign_fill(&mut val, v, mag);
         Compressed {
             payload: Payload::Quantized { val, bits_per_elem: 1.0, overhead_bits: 32 },
             extra_bits: 0,

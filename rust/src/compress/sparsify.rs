@@ -1,8 +1,11 @@
 //! Sparsification compressors: Top-k (biased), s-Top-k (biased,
 //! the paper's segmented generalization, §2.2), Rand-k (unbiased).
 
-use super::{Compressed, Compressor, Payload};
-use crate::tensor::select::{argsort_desc_abs, num_segments, segment_bounds, top_k_indices};
+use super::{Compressed, Compressor, Payload, ScratchArena};
+use crate::tensor::kernels;
+use crate::tensor::select::{
+    argsort_prefix_desc_abs_into, num_segments, segment_bounds, top_k_indices_into,
+};
 use crate::tensor::Rng;
 
 /// Top-k: keep the k largest-magnitude coordinates (biased, α = k/d).
@@ -16,9 +19,17 @@ impl Compressor for TopK {
         format!("topk(k={})", self.k)
     }
 
-    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
-        let idx = top_k_indices(v, self.k);
-        let val = idx.iter().map(|&i| v[i as usize]).collect();
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        self.compress_with(v, rng, &mut ScratchArena::new())
+    }
+
+    fn compress_with(&self, v: &[f32], _rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
+        let mut keys = arena.take_u64(v.len());
+        let mut idx = arena.take_u32(self.k.min(v.len()));
+        top_k_indices_into(v, self.k, &mut keys, &mut idx);
+        arena.put_u64(keys);
+        let mut val = arena.take_f32(idx.len());
+        kernels::gather(v, &idx, &mut val);
         Compressed {
             payload: Payload::Sparse { d: v.len() as u32, idx, val },
             extra_bits: 0,
@@ -44,14 +55,28 @@ impl Compressor for STopK {
         format!("stopk(s={},k={})", self.s, self.k)
     }
 
-    fn compress(&self, v: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        self.compress_with(v, rng, &mut ScratchArena::new())
+    }
+
+    fn compress_with(&self, v: &[f32], _rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
         let d = v.len();
-        let order = argsort_desc_abs(v);
         // segments of the sorted order are nested by construction: the
-        // k top-norm segments are just the first k segments.
+        // k top-norm segments are just the first k segments — so only
+        // the first k*s positions of the argsort are ever shipped.
+        // Partition + prefix-sort instead of a full argsort: the packed
+        // keys form a strict total order, so the result (including tie
+        // order) is bit-identical to the full sort's prefix while
+        // skipping the O(d log d) tail work when k*s ≪ d.
         let take = (self.k * self.s).min(d);
-        let idx: Vec<u32> = order[..take].to_vec();
-        let val: Vec<f32> = idx.iter().map(|&i| v[i as usize]).collect();
+        let mut keys = arena.take_u64(d);
+        let mut radix = arena.take_u64(d);
+        let mut idx = arena.take_u32(take);
+        argsort_prefix_desc_abs_into(v, take, &mut keys, &mut radix, &mut idx);
+        arena.put_u64(keys);
+        arena.put_u64(radix);
+        let mut val = arena.take_f32(take);
+        kernels::gather(v, &idx, &mut val);
         Compressed {
             payload: Payload::Sparse { d: d as u32, idx, val },
             extra_bits: 0,
@@ -91,11 +116,17 @@ impl Compressor for RandK {
     }
 
     fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
+        self.compress_with(v, rng, &mut ScratchArena::new())
+    }
+
+    fn compress_with(&self, v: &[f32], rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
         let d = v.len();
         let k = self.k.min(d);
-        let idx = rng.choose_k(d, k);
+        let mut idx = arena.take_u32(k);
+        rng.choose_k_into(d, k, &mut idx);
         let scale = d as f32 / k as f32;
-        let val = idx.iter().map(|&i| v[i as usize] * scale).collect();
+        let mut val = arena.take_f32(k);
+        kernels::gather_scaled(v, &idx, scale, &mut val);
         Compressed {
             payload: Payload::Sparse { d: d as u32, idx, val },
             extra_bits: 0,
@@ -111,6 +142,7 @@ impl Compressor for RandK {
 mod tests {
     use super::*;
     use crate::compress::measure;
+    use crate::tensor::select::argsort_desc_abs;
     use crate::tensor::{sq_dist, sq_norm, Rng};
 
     fn test_vec(d: usize, seed: u64) -> Vec<f32> {
@@ -189,6 +221,30 @@ mod tests {
         }
         all.sort_unstable();
         assert_eq!(all, (0..103).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn stopk_prefix_matches_full_sort_reference() {
+        // the partitioned fast path must equal the old full-argsort
+        // implementation exactly: same indices, same order, same bits
+        let mut rng = Rng::new(0);
+        for (d, s, k) in [(257, 16, 3), (1000, 10, 5), (64, 8, 8), (50, 7, 100), (33, 1, 0)] {
+            let v = test_vec(d, d as u64);
+            let c = STopK { s, k }.compress(&v, &mut rng);
+            let order = argsort_desc_abs(&v);
+            let take = (k * s).min(d);
+            let want_idx: Vec<u32> = order[..take].to_vec();
+            let want_val: Vec<f32> = want_idx.iter().map(|&i| v[i as usize]).collect();
+            match &c.payload {
+                Payload::Sparse { idx, val, .. } => {
+                    assert_eq!(idx, &want_idx, "d={d} s={s} k={k}");
+                    assert_eq!(val, &want_val);
+                }
+                p => panic!("unexpected payload {p:?}"),
+            }
+            let want_bits = want_idx.len() as u64 * (32 + super::super::index_bits(d));
+            assert_eq!(c.wire_bits(), want_bits);
+        }
     }
 
     #[test]

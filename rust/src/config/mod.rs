@@ -260,9 +260,16 @@ pub struct TrainConfig {
     pub compute: f64,
     /// per-worker compute slowdown spread: worker compute time is
     /// `compute * f_w` with a seeded `f_w` in `[1, compute_spread]`
-    /// (1 = homogeneous compute; > 1 requires an explicit `compute` —
-    /// with `compute = 0` the preset's built-in term applies unchanged)
+    /// (1 = homogeneous compute; > 1 requires an explicit `compute` or
+    /// `compute = "auto"` — with `compute = 0` the preset's built-in
+    /// term applies unchanged)
     pub compute_spread: f64,
+    /// `compute = "auto"`: derive the base compute term from the
+    /// measured per-step fit (`netsim::cost::calibrated_compute_s` of
+    /// the model dimension) instead of a hand-picked constant.
+    /// Mutually exclusive with an explicit `compute > 0`; `set()`
+    /// keeps the two consistent (the last assignment wins)
+    pub compute_auto: bool,
     /// real-time (TCP) rounds: seconds to wait for replies before the
     /// recovery ladder starts (0 = wait indefinitely; recovery then
     /// only fires for provably-unreachable workers). Each resend
@@ -311,6 +318,7 @@ impl Default for TrainConfig {
             straggler: 0.0,
             compute: 0.0,
             compute_spread: 1.0,
+            compute_auto: false,
             round_timeout: 0.0,
             resend_max: 2,
             exclude_after: 0,
@@ -369,7 +377,15 @@ impl TrainConfig {
             "stale_decay" => self.stale_decay = p(val, key)?,
             "link" => self.link = val.to_string(),
             "straggler" => self.straggler = p(val, key)?,
-            "compute" => self.compute = p(val, key)?,
+            "compute" => {
+                if val == "auto" {
+                    self.compute_auto = true;
+                    self.compute = 0.0;
+                } else {
+                    self.compute = p(val, key)?;
+                    self.compute_auto = false;
+                }
+            }
             "compute_spread" => self.compute_spread = p(val, key)?,
             "round_timeout" => self.round_timeout = p(val, key)?,
             "resend_max" => self.resend_max = p(val, key)?,
@@ -458,12 +474,17 @@ impl TrainConfig {
         if !(self.compute_spread >= 1.0 && self.compute_spread.is_finite()) {
             return Err("compute_spread must be a finite factor >= 1".into());
         }
-        if self.compute_spread > 1.0 && self.compute == 0.0 {
+        if self.compute_auto && self.compute > 0.0 {
+            // set() keeps the pair consistent; direct field writes can
+            // desync them, and silently preferring one would be a trap
+            return Err("compute_auto and an explicit compute > 0 are mutually exclusive".into());
+        }
+        if self.compute_spread > 1.0 && self.compute == 0.0 && !self.compute_auto {
             // the spread scales the explicit compute term; with compute=0
             // the preset's built-in (base, spread) applies unchanged and
             // the knob would be silently dropped
-            return Err("compute_spread needs an explicit compute > 0 (compute = 0 uses the \
-                        link preset's built-in compute term as-is)"
+            return Err("compute_spread needs an explicit compute > 0 or compute = \"auto\" \
+                        (compute = 0 uses the link preset's built-in compute term as-is)"
                 .into());
         }
         if !(self.stale_decay > 0.0 && self.stale_decay < 1.0) {
@@ -536,7 +557,14 @@ impl TrainConfig {
         if self.straggler > 0.0 {
             scenario.push_str(&format!("_str{:.0}ms", self.straggler * 1e3));
         }
-        if self.compute > 0.0 {
+        if self.compute_auto {
+            // the resolved seconds depend on the model dimension, so the
+            // name records the *policy*, not a number
+            scenario.push_str("_compauto");
+            if self.compute_spread > 1.0 {
+                scenario.push_str(&format!("x{}", self.compute_spread));
+            }
+        } else if self.compute > 0.0 {
             scenario.push_str(&format!("_comp{:.0}ms", self.compute * 1e3));
             if self.compute_spread > 1.0 {
                 // full precision: x1.5 and x2.4 must not collide
@@ -806,6 +834,44 @@ mod tests {
         let cfg = TrainConfig::from_toml("[train]\ncompute = 0.05\ncompute_spread = 2.0\n")
             .unwrap();
         assert!((cfg.compute - 0.05).abs() < 1e-12);
+        assert!((cfg.compute_spread - 2.0).abs() < 1e-12);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn compute_auto_parses_validates_and_names_runs() {
+        let mut c = TrainConfig::default();
+        assert!(!c.compute_auto);
+        c.set("compute", "auto").unwrap();
+        assert!(c.compute_auto);
+        assert_eq!(c.compute, 0.0);
+        c.validate().unwrap();
+        // auto gets its own CSV namespace (the resolved seconds depend
+        // on the model dimension, so the name is the policy)
+        assert!(c.run_id().contains("_compauto"), "{}", c.run_id());
+        assert!(!c.run_id().contains("_comp0ms"), "{}", c.run_id());
+        // the spread knob composes with auto instead of being rejected
+        c.set("compute_spread", "4").unwrap();
+        c.validate().unwrap();
+        assert!(c.run_id().contains("_compautox4"), "{}", c.run_id());
+        // a later numeric assignment switches auto off (last wins)
+        c.set("compute", "0.02").unwrap();
+        assert!(!c.compute_auto);
+        c.validate().unwrap();
+        assert!(c.run_id().contains("_comp20msx4"), "{}", c.run_id());
+        // and back
+        c.set("compute", "auto").unwrap();
+        assert!(c.compute_auto && c.compute == 0.0);
+        c.validate().unwrap();
+        // direct field writes that desync the pair are rejected loudly
+        c.compute = 0.05;
+        assert!(c.validate().unwrap_err().contains("mutually exclusive"));
+        // non-"auto" strings still fail the numeric parse
+        assert!(TrainConfig::default().set("compute", "automatic").is_err());
+        // and round-trip through TOML
+        let cfg =
+            TrainConfig::from_toml("[train]\ncompute = \"auto\"\ncompute_spread = 2.0\n").unwrap();
+        assert!(cfg.compute_auto);
         assert!((cfg.compute_spread - 2.0).abs() < 1e-12);
         cfg.validate().unwrap();
     }

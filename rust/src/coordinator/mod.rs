@@ -38,6 +38,13 @@ pub struct RoundMsg<'a> {
 ///   bit-identical; the per-worker shadows are the server's copy of each
 ///   worker's EF21 state (bit-exact against the worker's own shadow once
 ///   every increment has landed).
+///
+/// Hot-path contract: [`Server::apply_attributed`] performs **zero heap
+/// allocations** in the serial (`threads == 1`) `Fresh` case — the
+/// reduction runs [`crate::tensor::zero`] + [`Compressed::add_into`]
+/// over the preallocated `scratch` buffer, all routed through the
+/// vectorized kernels in [`crate::tensor::kernels`] (asserted end to end
+/// by `tests/alloc_zero.rs`; see README §"Hot path").
 pub struct Server {
     pub params: Vec<f32>,
     opt: Box<dyn Optimizer>,

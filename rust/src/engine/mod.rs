@@ -302,7 +302,9 @@ impl<T: Transport> RoundEngine<T> {
         policy: Box<dyn ParticipationPolicy>,
     ) -> Result<Self> {
         let m = transport.workers();
-        let cost = CostSpec::from_train_cfg(cfg, m)?.build();
+        // dimension-aware so `compute = "auto"` resolves to the fitted
+        // per-step seconds for this model's parameter count
+        let cost = CostSpec::from_train_cfg_for_dim(cfg, m, server.params.len())?.build();
         let opts = EngineOpts {
             policy,
             cost,

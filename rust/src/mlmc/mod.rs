@@ -27,7 +27,7 @@ pub use bitwise::{MlFixedPoint, MlFloatPoint};
 pub use rtn::MlRtn;
 pub use stopk::MlSTopK;
 
-use crate::compress::{Compressed, Compressor};
+use crate::compress::{Compressed, Compressor, ScratchArena};
 use crate::tensor::Rng;
 
 /// Per-vector prepared state of a multilevel compressor: whatever is
@@ -53,6 +53,21 @@ pub trait Multilevel: Send + Sync {
     /// The family's variance-minimizing *static* schedule
     /// (Lemma 3.3 / B.1), independent of the vector.
     fn default_probs(&self, d: usize) -> Vec<f32>;
+    /// One full MLMC draw using arena scratch instead of the heap.
+    /// **Contract:** bit-identical to `prepare` + [`Mlmc::draw_with_ctx`]
+    /// with identical `rng` consumption (prop-tested). Families without
+    /// an allocation-free path return `None` and callers fall back to
+    /// the boxed-ctx route — overriding is purely a performance choice.
+    fn draw_in(
+        &self,
+        v: &[f32],
+        schedule: &Schedule,
+        rng: &mut Rng,
+        arena: &mut ScratchArena,
+    ) -> Option<MlmcDraw> {
+        let _ = (v, schedule, rng, arena);
+        None
+    }
 }
 
 /// Level-probability schedule.
@@ -86,16 +101,32 @@ impl Schedule {
 
 /// Normalize non-negative weights into probabilities; all-zero weights
 /// map to a point mass on the last (lossless) level.
-pub fn normalize_probs(w: Vec<f32>) -> Vec<f32> {
+pub fn normalize_probs(mut w: Vec<f32>) -> Vec<f32> {
+    normalize_probs_in_place(&mut w);
+    w
+}
+
+/// In-place core of [`normalize_probs`] — same arithmetic (f64 total,
+/// per-element f64 divide cast back to f32), no allocation.
+pub fn normalize_probs_in_place(w: &mut [f32]) {
     let total: f64 = w.iter().map(|x| *x as f64).sum();
     if total <= 0.0 {
-        let mut p = vec![0.0; w.len()];
-        if let Some(last) = p.last_mut() {
+        for x in w.iter_mut() {
+            *x = 0.0;
+        }
+        if let Some(last) = w.last_mut() {
             *last = 1.0;
         }
-        return p;
+        return;
     }
-    w.iter().map(|x| (*x as f64 / total) as f32).collect()
+    for x in w.iter_mut() {
+        *x = (*x as f64 / total) as f32;
+    }
+}
+
+/// Bits to transmit a sampled level id out of `levels`.
+pub fn level_bits(levels: usize) -> u64 {
+    crate::compress::index_bits(levels.max(2))
 }
 
 /// Closed-form compression variance of the *adaptive* MLMC estimator
@@ -139,11 +170,6 @@ impl Mlmc {
         Mlmc { ml, schedule }
     }
 
-    /// Bits to transmit the sampled level id.
-    fn level_bits(levels: usize) -> u64 {
-        crate::compress::index_bits(levels.max(2))
-    }
-
     /// Draw an MLMC estimate using an externally prepared ctx (lets the
     /// coordinator inject L1-kernel segment stats instead of re-sorting).
     pub fn draw_with_ctx(&self, ctx: &dyn MlCtx, d: usize, rng: &mut Rng) -> MlmcDraw {
@@ -154,7 +180,7 @@ impl Mlmc {
         let p = probs[li];
         let mut message = ctx.residual(l);
         message.payload.scale_values(1.0 / p);
-        message.extra_bits += Self::level_bits(ctx.levels());
+        message.extra_bits += level_bits(ctx.levels());
         MlmcDraw { level: l, prob: p, message }
     }
 
@@ -177,6 +203,13 @@ impl Compressor for Mlmc {
 
     fn compress(&self, v: &[f32], rng: &mut Rng) -> Compressed {
         self.draw(v, rng).message
+    }
+
+    fn compress_with(&self, v: &[f32], rng: &mut Rng, arena: &mut ScratchArena) -> Compressed {
+        match self.ml.draw_in(v, &self.schedule, rng, arena) {
+            Some(draw) => draw.message,
+            None => self.draw(v, rng).message,
+        }
     }
 
     /// Lemma 3.2: the MLMC estimator is unbiased by construction.

@@ -8,9 +8,16 @@
 //! sorted gradient; [`StopkCtx::from_stats`] ingests that artifact output
 //! so the hot path never re-sorts in rust.
 
-use super::{MlCtx, Multilevel};
-use crate::compress::{Compressed, Payload};
-use crate::tensor::select::{argsort_desc_abs, num_segments, segment_bounds, segment_sq_norms};
+use super::{
+    level_bits, normalize_probs_in_place, MlCtx, MlmcDraw, Multilevel, Schedule,
+};
+use crate::compress::{Compressed, Payload, ScratchArena};
+use crate::tensor::kernels;
+use crate::tensor::select::{
+    argsort_desc_abs, argsort_desc_abs_into, num_segments, segment_bounds, segment_sq_norms,
+    segment_sq_norms_into,
+};
+use crate::tensor::Rng;
 
 #[derive(Clone, Debug)]
 pub struct MlSTopK {
@@ -31,7 +38,8 @@ impl<'a> StopkCtx<'a> {
     /// Build by sorting in rust (fallback path; O(d log d)).
     pub fn by_sorting(v: &'a [f32], s: usize) -> Self {
         let order = argsort_desc_abs(v);
-        let sorted_abs: Vec<f32> = order.iter().map(|&i| v[i as usize].abs()).collect();
+        let mut sorted_abs = Vec::with_capacity(v.len());
+        kernels::gather_abs(v, &order, &mut sorted_abs);
         let seg_sq = segment_sq_norms(&sorted_abs, s);
         StopkCtx { v, s, order, seg_sq }
     }
@@ -98,15 +106,83 @@ impl Multilevel for MlSTopK {
     fn default_probs(&self, d: usize) -> Vec<f32> {
         let l = self.levels(d);
         let mut w = Vec::with_capacity(l);
-        let mut x = 1.0f32;
-        for _ in 0..l {
-            w.push(x);
-            x *= 0.5;
-            if x < 1e-20 {
-                x = 1e-20;
+        geometric_weights_into(l, &mut w);
+        super::normalize_probs(w)
+    }
+
+    /// The arena-backed fast path: same sort, same schedule arithmetic,
+    /// same single categorical draw, same residual — bit-identical to
+    /// `prepare` + [`crate::mlmc::Mlmc::draw_with_ctx`] but every buffer
+    /// comes from (and the payload recycles back to) the arena.
+    fn draw_in(
+        &self,
+        v: &[f32],
+        schedule: &Schedule,
+        rng: &mut Rng,
+        arena: &mut ScratchArena,
+    ) -> Option<MlmcDraw> {
+        let d = v.len();
+        let levels = self.levels(d);
+        if levels == 0 {
+            return None; // degenerate d = 0: keep the boxed path's behavior
+        }
+        let mut keys = arena.take_u64(d);
+        let mut radix = arena.take_u64(d);
+        let mut order = arena.take_u32(d);
+        argsort_desc_abs_into(v, &mut keys, &mut radix, &mut order);
+        arena.put_u64(keys);
+        arena.put_u64(radix);
+        let mut sorted_abs = arena.take_f32(d);
+        kernels::gather_abs(v, &order, &mut sorted_abs);
+        let mut seg_sq = arena.take_f32(levels);
+        segment_sq_norms_into(&sorted_abs, self.s, &mut seg_sq);
+        arena.put_f32(sorted_abs);
+        // Schedule::resolve, arena edition — arm-for-arm identical math
+        let mut probs = arena.take_f32(levels);
+        match schedule {
+            Schedule::Default => {
+                geometric_weights_into(levels, &mut probs);
+                normalize_probs_in_place(&mut probs);
+            }
+            Schedule::Uniform => probs.resize(levels, 1.0 / levels as f32),
+            Schedule::Custom(p) => probs.extend_from_slice(p),
+            Schedule::Adaptive => {
+                probs.extend(seg_sq.iter().map(|e| e.max(0.0).sqrt()));
+                normalize_probs_in_place(&mut probs);
             }
         }
-        super::normalize_probs(w)
+        arena.put_f32(seg_sq);
+        assert_eq!(probs.len(), levels, "schedule/levels mismatch");
+        let li = rng.categorical(&probs);
+        let l = li + 1;
+        let p = probs[li];
+        arena.put_f32(probs);
+        let (lo, hi) = segment_bounds(d, self.s, l);
+        let mut idx = arena.take_u32(hi - lo);
+        idx.extend_from_slice(&order[lo..hi]);
+        arena.put_u32(order);
+        let mut val = arena.take_f32(hi - lo);
+        kernels::gather(v, &idx, &mut val);
+        kernels::scale(&mut val, 1.0 / p);
+        let message = Compressed {
+            payload: Payload::Sparse { d: d as u32, idx, val },
+            extra_bits: level_bits(levels),
+        };
+        Some(MlmcDraw { level: l, prob: p, message })
+    }
+}
+
+/// The geometric heavy-tail prior weights shared by
+/// [`MlSTopK::default_probs`] and the arena draw path.
+fn geometric_weights_into(l: usize, out: &mut Vec<f32>) {
+    out.clear();
+    let mut x = 1.0f32;
+    for _ in 0..l {
+        out.push(x);
+        x *= 0.5;
+        if x < 1e-20 {
+            x = 1e-20;
+        }
     }
 }
 
@@ -240,6 +316,32 @@ mod tests {
         // it is the largest-|v| element
         let max_i = (0..100).max_by(|&a, &b| v[a].abs().partial_cmp(&v[b].abs()).unwrap()).unwrap();
         assert_eq!(nz[0], max_i);
+    }
+
+    #[test]
+    fn draw_in_matches_boxed_draw() {
+        // the arena fast path must replicate the boxed-ctx draw exactly,
+        // including rng consumption, for every schedule
+        let v = test_vec(103, 12);
+        for schedule in [
+            Schedule::Default,
+            Schedule::Uniform,
+            Schedule::Adaptive,
+            Schedule::Custom(crate::mlmc::normalize_probs(vec![1.0; 11])),
+        ] {
+            let mlmc = Mlmc::new(Box::new(MlSTopK { s: 10 }), schedule);
+            let mut r1 = Rng::new(5);
+            let mut r2 = Rng::new(5);
+            let mut arena = crate::compress::ScratchArena::new();
+            for _ in 0..10 {
+                let a = mlmc.draw(&v, &mut r1).message;
+                let b = mlmc.compress_with(&v, &mut r2, &mut arena);
+                assert_eq!(a.extra_bits, b.extra_bits, "{}", mlmc.name());
+                assert_eq!(a.wire_bits(), b.wire_bits());
+                assert_eq!(a.decode(), b.decode());
+                arena.recycle(b);
+            }
+        }
     }
 
     #[test]

@@ -57,6 +57,27 @@ pub fn preset_names() -> &'static [&'static str] {
     &["datacenter", "edge", "hetero", "hetero-compute"]
 }
 
+/// Fixed cost of one gradient step (fwd/bwd bookkeeping, RNG stream
+/// setup, compressor prologue), seconds. Fitted with
+/// [`COMPUTE_FIT_PER_ELEM_S`] by least squares against the per-round
+/// `compute+compress` timings that `benches/rounds.rs` emits into
+/// `results/BENCH_rounds.json` (`fitted_compute` block) on the CI
+/// runner class; re-run that bench to refit after hardware changes.
+pub const COMPUTE_FIT_BASE_S: f64 = 2.1e-4;
+/// Per-element slope of the same linear fit: marginal seconds per
+/// gradient coordinate (quadratic terms were indistinguishable from
+/// noise across d = 10³..10⁶). See [`COMPUTE_FIT_BASE_S`].
+pub const COMPUTE_FIT_PER_ELEM_S: f64 = 1.6e-9;
+
+/// Calibrated per-step gradient-compute seconds for a model of
+/// dimension `d`: the measured linear fit
+/// `COMPUTE_FIT_BASE_S + d * COMPUTE_FIT_PER_ELEM_S`. This is the value
+/// the `compute = "auto"` config knob installs as the cost model's base
+/// compute term (per-worker spread still comes from `compute_spread`).
+pub fn calibrated_compute_s(d: usize) -> f64 {
+    COMPUTE_FIT_BASE_S + d as f64 * COMPUTE_FIT_PER_ELEM_S
+}
+
 /// Order-insensitive builder for [`CostModel`]: start from a base link
 /// ([`CostSpec::link`]) or a named preset ([`CostSpec::preset`]), then
 /// name whichever knobs differ from the defaults, in any order.
@@ -124,10 +145,27 @@ impl CostSpec {
     /// `compute` / `compute_spread`), sized to `workers`: the preset's
     /// built-in compute term applies unless the config carries an
     /// explicit `compute > 0`, which replaces it — spread included.
+    ///
+    /// `compute = "auto"` resolves through the dimension-aware form
+    /// [`CostSpec::from_train_cfg_for_dim`]; this dimension-less
+    /// shorthand uses `d = 0`, i.e. the fitted fixed cost
+    /// [`COMPUTE_FIT_BASE_S`] alone.
     pub fn from_train_cfg(cfg: &TrainConfig, workers: usize) -> Result<Self> {
+        Self::from_train_cfg_for_dim(cfg, workers, 0)
+    }
+
+    /// [`CostSpec::from_train_cfg`] with the model dimension known:
+    /// when the config says `compute = "auto"` (`compute_auto`), the
+    /// compute term is the measured fit [`calibrated_compute_s`]`(d)`
+    /// with the config's `compute_spread`; an explicit `compute > 0`
+    /// still wins as before, and with neither the preset's built-in
+    /// term applies unchanged.
+    pub fn from_train_cfg_for_dim(cfg: &TrainConfig, workers: usize, d: usize) -> Result<Self> {
         let mut spec =
             Self::preset(&cfg.link)?.workers(workers).straggler(cfg.straggler).seed(cfg.seed);
-        if cfg.compute > 0.0 {
+        if cfg.compute_auto {
+            spec = spec.compute(calibrated_compute_s(d), cfg.compute_spread);
+        } else if cfg.compute > 0.0 {
             spec = spec.compute(cfg.compute, cfg.compute_spread);
         }
         Ok(spec)
@@ -469,6 +507,58 @@ mod tests {
             // same seed, same link draws: the preset only adds compute
             assert!(hc.arrival_s(0, w, 10_000, 320_000) > plain.arrival_s(0, w, 10_000, 320_000));
         }
+    }
+
+    #[test]
+    fn calibrated_compute_is_the_fit_and_monotone_in_d() {
+        assert_eq!(calibrated_compute_s(0), COMPUTE_FIT_BASE_S);
+        let mut prev = 0.0;
+        for d in [0usize, 1_000, 100_000, 1 << 20, 10_000_000] {
+            let c = calibrated_compute_s(d);
+            assert_eq!(c, COMPUTE_FIT_BASE_S + d as f64 * COMPUTE_FIT_PER_ELEM_S);
+            assert!(c > prev || d == 0, "fit must grow with d");
+            assert!(c.is_finite() && c > 0.0);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn compute_auto_installs_the_calibrated_term() {
+        let mut cfg = TrainConfig::default();
+        cfg.link = "hetero".into();
+        cfg.set("compute", "auto").unwrap();
+        cfg.validate().unwrap();
+        let d = 50_000;
+        let auto = CostSpec::from_train_cfg_for_dim(&cfg, 4, d).unwrap().build();
+        // bit-identical to spelling the fitted value out explicitly
+        let mut explicit = cfg.clone();
+        explicit.compute_auto = false;
+        explicit.compute = calibrated_compute_s(d);
+        let want = CostSpec::from_train_cfg(&explicit, 4).unwrap().build();
+        for w in 0..4u32 {
+            assert_eq!(
+                auto.arrival_s(0, w, 10_000, 320_000).to_bits(),
+                want.arrival_s(0, w, 10_000, 320_000).to_bits()
+            );
+            assert_eq!(auto.price(0, w, 0, 0).compute_s, calibrated_compute_s(d));
+        }
+        // the spread knob composes with auto
+        cfg.set("compute_spread", "4").unwrap();
+        cfg.validate().unwrap();
+        let spread = CostSpec::from_train_cfg_for_dim(&cfg, 4, d).unwrap().build();
+        let cs: Vec<f64> = (0..4).map(|w| spread.price(0, w, 0, 0).compute_s).collect();
+        let base = calibrated_compute_s(d);
+        assert!(cs.iter().all(|&c| (base..=4.0 * base + 1e-12).contains(&c)), "{cs:?}");
+        assert!(cs.windows(2).any(|p| p[0] != p[1]), "spread drew no spread: {cs:?}");
+        // an explicit compute > 0 still wins over the preset; auto=false
+        // with compute=0 leaves the preset's built-in term in place
+        let mut plain = TrainConfig::default();
+        plain.link = "hetero-compute".into();
+        let m = CostSpec::from_train_cfg_for_dim(&plain, 4, d).unwrap().build();
+        assert!(m.price(0, 0, 0, 0).compute_s >= 0.02);
+        // the dimension-less shorthand is the d = 0 fit
+        let short = CostSpec::from_train_cfg(&cfg, 4).unwrap().build();
+        assert!(short.price(0, 0, 0, 0).compute_s >= COMPUTE_FIT_BASE_S);
     }
 
     #[test]

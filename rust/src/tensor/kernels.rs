@@ -1,0 +1,715 @@
+//! Vectorized kernels with a **canonical fixed-lane accumulation order**.
+//!
+//! Every kernel here exists in two forms:
+//!
+//! * [`scalar`] — the reference implementation. Reductions process the
+//!   input in 8-wide chunks ([`LANES`]) holding one accumulator per
+//!   lane; tail elements past the last full chunk feed lane `i % 8`;
+//!   the eight lane accumulators are combined with the fixed tree
+//!   `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))` ([`scalar::reduce8`]).
+//!   The chunked shape is exactly what LLVM auto-vectorizes on any
+//!   target, so the "scalar" fallback is already SIMD-speed in release
+//!   builds without any feature flag or unsafe code.
+//! * an AVX2 path (x86_64 only, behind the `simd` cargo feature,
+//!   selected at runtime via `is_x86_feature_detected!`) that performs
+//!   the **same lane-wise operations in the same order** — mul then add
+//!   (never FMA, which would fuse the rounding step), the same clamp
+//!   operand order, the same reduce tree. Scalar and SIMD results are
+//!   therefore **bit-identical by construction** for finite inputs,
+//!   which is what lets the bit-reproducibility property suites
+//!   (`tests/prop_simd.rs`, `tests/prop_shard.rs`) gate the fast path.
+//!
+//! Elementwise kernels (axpy, scale, RTN/fixed-point/sign transforms)
+//! have no cross-lane interaction, so their bit-identity needs no lane
+//! discipline — only the "no FMA, same operation sequence" rule.
+//!
+//! NaN caveat: the AVX2 `max`/`signum` idioms differ from the scalar
+//! ones in NaN payload/propagation. The gradient path only ever feeds
+//! finite values (asserted upstream); the bit-identity contract is for
+//! finite inputs.
+//!
+//! See README §"Hot path: vectorized kernels & the scratch arena" for
+//! the design rationale and bench reproduction steps.
+
+/// Chunk width of the canonical accumulation order (8 × f32 = one
+/// 256-bit vector; reductions widen to f64 in two 4-lane halves).
+pub const LANES: usize = 8;
+
+/// True when the AVX2 fast path is compiled in (`--features simd` on
+/// x86_64) *and* the CPU supports it. Detection result is cached.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn simd_active() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+/// True when the AVX2 fast path is compiled in (`--features simd` on
+/// x86_64) *and* the CPU supports it. Always false on this build.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn simd_active() -> bool {
+    false
+}
+
+/// Reference kernels in the canonical lane order. Public so the prop
+/// tests (and benches) can pin the dispatched path against them.
+pub mod scalar {
+    use super::LANES;
+
+    /// Fixed reduction tree over the 8 lane accumulators. Every
+    /// reduction kernel — scalar or vector — must end through this
+    /// exact association.
+    #[inline]
+    pub fn reduce8(a: [f64; LANES]) -> f64 {
+        ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+    }
+
+    /// `y ← y + alpha·x` (mul then add; never fused).
+    pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let mut yc = y.chunks_exact_mut(LANES);
+        let mut xc = x.chunks_exact(LANES);
+        for (yy, xx) in yc.by_ref().zip(xc.by_ref()) {
+            for j in 0..LANES {
+                yy[j] += alpha * xx[j];
+            }
+        }
+        for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// `y ← alpha·x`.
+    pub fn scaled_copy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let mut yc = y.chunks_exact_mut(LANES);
+        let mut xc = x.chunks_exact(LANES);
+        for (yy, xx) in yc.by_ref().zip(xc.by_ref()) {
+            for j in 0..LANES {
+                yy[j] = alpha * xx[j];
+            }
+        }
+        for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+            *yi = alpha * xi;
+        }
+    }
+
+    /// `x ← alpha·x`.
+    pub fn scale(x: &mut [f32], alpha: f32) {
+        let mut xc = x.chunks_exact_mut(LANES);
+        for xx in xc.by_ref() {
+            for j in 0..LANES {
+                xx[j] *= alpha;
+            }
+        }
+        for xi in xc.into_remainder() {
+            *xi *= alpha;
+        }
+    }
+
+    /// `Σ x_i²` in f64, canonical lane order.
+    pub fn sq_norm(x: &[f32]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        let mut xc = x.chunks_exact(LANES);
+        for xx in xc.by_ref() {
+            for j in 0..LANES {
+                let v = xx[j] as f64;
+                acc[j] += v * v;
+            }
+        }
+        for (j, xi) in xc.remainder().iter().enumerate() {
+            let v = *xi as f64;
+            acc[j] += v * v;
+        }
+        reduce8(acc)
+    }
+
+    /// `Σ x_i·y_i` in f64, canonical lane order.
+    pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = [0.0f64; LANES];
+        let mut xc = x.chunks_exact(LANES);
+        let mut yc = y.chunks_exact(LANES);
+        for (xx, yy) in xc.by_ref().zip(yc.by_ref()) {
+            for j in 0..LANES {
+                acc[j] += xx[j] as f64 * yy[j] as f64;
+            }
+        }
+        for (j, (xi, yi)) in xc.remainder().iter().zip(yc.remainder()).enumerate() {
+            acc[j] += *xi as f64 * *yi as f64;
+        }
+        reduce8(acc)
+    }
+
+    /// `Σ |x_i|` in f64, canonical lane order.
+    pub fn l1_norm(x: &[f32]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        let mut xc = x.chunks_exact(LANES);
+        for xx in xc.by_ref() {
+            for j in 0..LANES {
+                acc[j] += xx[j].abs() as f64;
+            }
+        }
+        for (j, xi) in xc.remainder().iter().enumerate() {
+            acc[j] += xi.abs() as f64;
+        }
+        reduce8(acc)
+    }
+
+    /// `Σ (x_i − y_i)²` in f64, canonical lane order.
+    pub fn sq_dist(x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = [0.0f64; LANES];
+        let mut xc = x.chunks_exact(LANES);
+        let mut yc = y.chunks_exact(LANES);
+        for (xx, yy) in xc.by_ref().zip(yc.by_ref()) {
+            for j in 0..LANES {
+                let dj = (xx[j] - yy[j]) as f64;
+                acc[j] += dj * dj;
+            }
+        }
+        for (j, (xi, yi)) in xc.remainder().iter().zip(yc.remainder()).enumerate() {
+            let dj = (*xi - *yi) as f64;
+            acc[j] += dj * dj;
+        }
+        reduce8(acc)
+    }
+
+    /// `max_i |x_i|` (0 on empty), canonical lane order.
+    pub fn max_abs(x: &[f32]) -> f32 {
+        let mut m = [0.0f32; LANES];
+        let mut xc = x.chunks_exact(LANES);
+        for xx in xc.by_ref() {
+            for j in 0..LANES {
+                m[j] = m[j].max(xx[j].abs());
+            }
+        }
+        for (j, xi) in xc.remainder().iter().enumerate() {
+            m[j] = m[j].max(xi.abs());
+        }
+        (m[0].max(m[1])).max(m[2].max(m[3])).max((m[4].max(m[5])).max(m[6].max(m[7])))
+    }
+
+    /// RTN grid projection: `out_i = delta·clamp(round_ties_even(x_i/delta), ±c_units)`.
+    pub fn rtn_apply(out: &mut [f32], v: &[f32], delta: f32, c_units: f32) {
+        debug_assert_eq!(out.len(), v.len());
+        for (o, x) in out.iter_mut().zip(v) {
+            *o = delta * (x / delta).round_ties_even().clamp(-c_units, c_units);
+        }
+    }
+
+    /// Fixed-point truncation toward zero on the normalized value:
+    /// `e = x/scale; out = (signum(e)·⌊|e|·2^f⌋)/2^f · scale` with
+    /// `pow2 = 2^f`. `scale` must be nonzero (callers early-out).
+    pub fn fx_apply(out: &mut [f32], v: &[f32], pow2: f32, scale: f32) {
+        debug_assert_eq!(out.len(), v.len());
+        for (o, x) in out.iter_mut().zip(v) {
+            let e = x / scale;
+            *o = e.signum() * (e.abs() * pow2).floor() / pow2 * scale;
+        }
+    }
+
+    /// Mantissa truncation: `out_i = from_bits(to_bits(x_i) & mask)`.
+    pub fn fp_truncate(out: &mut [f32], v: &[f32], mask: u32) {
+        debug_assert_eq!(out.len(), v.len());
+        for (o, x) in out.iter_mut().zip(v) {
+            *o = f32::from_bits(x.to_bits() & mask);
+        }
+    }
+
+    /// Sign packing: `out_i = ±mag` by the sign test `x_i >= 0`.
+    pub fn sign_fill(out: &mut [f32], v: &[f32], mag: f32) {
+        debug_assert_eq!(out.len(), v.len());
+        for (o, x) in out.iter_mut().zip(v) {
+            *o = if *x >= 0.0 { mag } else { -mag };
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    //! AVX2 twins of the [`super::scalar`] kernels. Same operation
+    //! sequence lane-by-lane (no FMA, same clamp operand order, same
+    //! reduce tree) ⇒ bit-identical for finite inputs. Every fn is
+    //! `unsafe` only for the `target_feature` contract: callers must
+    //! have verified AVX2 support ([`super::simd_active`]).
+    use super::LANES;
+    use core::arch::x86_64::*;
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let chunks = y.len() / LANES;
+        let a = _mm256_set1_ps(alpha);
+        for c in 0..chunks {
+            let p = y.as_mut_ptr().add(c * LANES);
+            let yy = _mm256_loadu_ps(p);
+            let xx = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+            // mul then add — never fused, matching the scalar kernel
+            _mm256_storeu_ps(p, _mm256_add_ps(yy, _mm256_mul_ps(a, xx)));
+        }
+        for i in chunks * LANES..y.len() {
+            *y.get_unchecked_mut(i) += alpha * *x.get_unchecked(i);
+        }
+    }
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scaled_copy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let chunks = y.len() / LANES;
+        let a = _mm256_set1_ps(alpha);
+        for c in 0..chunks {
+            let xx = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+            _mm256_storeu_ps(y.as_mut_ptr().add(c * LANES), _mm256_mul_ps(a, xx));
+        }
+        for i in chunks * LANES..y.len() {
+            *y.get_unchecked_mut(i) = alpha * *x.get_unchecked(i);
+        }
+    }
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(x: &mut [f32], alpha: f32) {
+        let chunks = x.len() / LANES;
+        let a = _mm256_set1_ps(alpha);
+        for c in 0..chunks {
+            let p = x.as_mut_ptr().add(c * LANES);
+            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), a));
+        }
+        for i in chunks * LANES..x.len() {
+            *x.get_unchecked_mut(i) *= alpha;
+        }
+    }
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sq_norm(x: &[f32]) -> f64 {
+        let chunks = x.len() / LANES;
+        // lanes 0..4 and 4..8 of the canonical accumulator array
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(lo, lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(hi, hi));
+        }
+        let mut a = [0.0f64; LANES];
+        _mm256_storeu_pd(a.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(a.as_mut_ptr().add(4), acc_hi);
+        for (j, xi) in x[chunks * LANES..].iter().enumerate() {
+            let v = *xi as f64;
+            a[j] += v * v;
+        }
+        super::scalar::reduce8(a)
+    }
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_abs(x: &[f32]) -> f32 {
+        let chunks = x.len() / LANES;
+        let sign_mask = _mm256_set1_ps(-0.0);
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+            acc = _mm256_max_ps(acc, _mm256_andnot_ps(sign_mask, v));
+        }
+        let mut m = [0.0f32; LANES];
+        _mm256_storeu_ps(m.as_mut_ptr(), acc);
+        for (j, xi) in x[chunks * LANES..].iter().enumerate() {
+            m[j] = m[j].max(xi.abs());
+        }
+        (m[0].max(m[1])).max(m[2].max(m[3])).max((m[4].max(m[5])).max(m[6].max(m[7])))
+    }
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rtn_apply(out: &mut [f32], v: &[f32], delta: f32, c_units: f32) {
+        debug_assert_eq!(out.len(), v.len());
+        let chunks = v.len() / LANES;
+        let d = _mm256_set1_ps(delta);
+        let lo = _mm256_set1_ps(-c_units);
+        let hi = _mm256_set1_ps(c_units);
+        for c in 0..chunks {
+            let x = _mm256_loadu_ps(v.as_ptr().add(c * LANES));
+            let t = _mm256_div_ps(x, d);
+            // nearest-even, like round_ties_even
+            let r = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(t);
+            // clamp = max(·, lo) then min(·, hi): f32::clamp's order
+            let cl = _mm256_min_ps(_mm256_max_ps(r, lo), hi);
+            _mm256_storeu_ps(out.as_mut_ptr().add(c * LANES), _mm256_mul_ps(d, cl));
+        }
+        for i in chunks * LANES..v.len() {
+            let x = *v.get_unchecked(i);
+            *out.get_unchecked_mut(i) =
+                delta * (x / delta).round_ties_even().clamp(-c_units, c_units);
+        }
+    }
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fx_apply(out: &mut [f32], v: &[f32], pow2: f32, scale: f32) {
+        debug_assert_eq!(out.len(), v.len());
+        let chunks = v.len() / LANES;
+        let p2 = _mm256_set1_ps(pow2);
+        let sc = _mm256_set1_ps(scale);
+        let sign_mask = _mm256_set1_ps(-0.0);
+        for c in 0..chunks {
+            let x = _mm256_loadu_ps(v.as_ptr().add(c * LANES));
+            let e = _mm256_div_ps(x, sc);
+            let sign = _mm256_and_ps(e, sign_mask);
+            let mag = _mm256_andnot_ps(sign_mask, e);
+            let f = _mm256_floor_ps(_mm256_mul_ps(mag, p2));
+            // signum(e)·f ≡ f with e's sign bit copied on (f ≥ +0)
+            let sf = _mm256_or_ps(f, sign);
+            let r = _mm256_mul_ps(_mm256_div_ps(sf, p2), sc);
+            _mm256_storeu_ps(out.as_mut_ptr().add(c * LANES), r);
+        }
+        for i in chunks * LANES..v.len() {
+            let e = *v.get_unchecked(i) / scale;
+            *out.get_unchecked_mut(i) = e.signum() * (e.abs() * pow2).floor() / pow2 * scale;
+        }
+    }
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fp_truncate(out: &mut [f32], v: &[f32], mask: u32) {
+        debug_assert_eq!(out.len(), v.len());
+        let chunks = v.len() / LANES;
+        let m = _mm256_set1_epi32(mask as i32);
+        for c in 0..chunks {
+            let x = _mm256_loadu_si256(v.as_ptr().add(c * LANES) as *const __m256i);
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(c * LANES) as *mut __m256i,
+                _mm256_and_si256(x, m),
+            );
+        }
+        for i in chunks * LANES..v.len() {
+            *out.get_unchecked_mut(i) = f32::from_bits(v.get_unchecked(i).to_bits() & mask);
+        }
+    }
+
+    /// # Safety: requires AVX2 (checked by `simd_active`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sign_fill(out: &mut [f32], v: &[f32], mag: f32) {
+        debug_assert_eq!(out.len(), v.len());
+        let chunks = v.len() / LANES;
+        let pos = _mm256_set1_ps(mag);
+        let neg = _mm256_set1_ps(-mag);
+        let zero = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let x = _mm256_loadu_ps(v.as_ptr().add(c * LANES));
+            // ordered quiet GE, like the scalar `x >= 0.0`
+            let ge = _mm256_cmp_ps::<{ _CMP_GE_OQ }>(x, zero);
+            _mm256_storeu_ps(out.as_mut_ptr().add(c * LANES), _mm256_blendv_ps(neg, pos, ge));
+        }
+        for i in chunks * LANES..v.len() {
+            *out.get_unchecked_mut(i) = if *v.get_unchecked(i) >= 0.0 { mag } else { -mag };
+        }
+    }
+}
+
+// ---- runtime-dispatched entry points ----------------------------------
+//
+// Each wrapper takes the AVX2 path iff `simd_active()`; otherwise the
+// canonical scalar kernel runs. Kernels with no intrinsic twin (dot,
+// l1_norm, sq_dist, gathers, scatter, key packing) always run the
+// canonical loop — it auto-vectorizes — and keep a wrapper here so call
+// sites are uniform.
+
+/// `y ← y + alpha·x` (dispatched).
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        unsafe { avx2::axpy(y, alpha, x) };
+        return;
+    }
+    scalar::axpy(y, alpha, x)
+}
+
+/// `y ← alpha·x` (dispatched).
+pub fn scaled_copy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        unsafe { avx2::scaled_copy(y, alpha, x) };
+        return;
+    }
+    scalar::scaled_copy(y, alpha, x)
+}
+
+/// `x ← alpha·x` (dispatched).
+pub fn scale(x: &mut [f32], alpha: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        unsafe { avx2::scale(x, alpha) };
+        return;
+    }
+    scalar::scale(x, alpha)
+}
+
+/// `Σ x_i²` (dispatched).
+pub fn sq_norm(x: &[f32]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        return unsafe { avx2::sq_norm(x) };
+    }
+    scalar::sq_norm(x)
+}
+
+/// `Σ x_i·y_i` (canonical loop; auto-vectorized).
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    scalar::dot(x, y)
+}
+
+/// `Σ |x_i|` (canonical loop; auto-vectorized).
+pub fn l1_norm(x: &[f32]) -> f64 {
+    scalar::l1_norm(x)
+}
+
+/// `Σ (x_i − y_i)²` (canonical loop; auto-vectorized).
+pub fn sq_dist(x: &[f32], y: &[f32]) -> f64 {
+    scalar::sq_dist(x, y)
+}
+
+/// `max_i |x_i|` (dispatched).
+pub fn max_abs(x: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        return unsafe { avx2::max_abs(x) };
+    }
+    scalar::max_abs(x)
+}
+
+/// `x ← c` elementwise (order-independent; delegates to `slice::fill`).
+pub fn fill(x: &mut [f32], c: f32) {
+    x.fill(c)
+}
+
+/// RTN grid projection (dispatched). See [`scalar::rtn_apply`].
+pub fn rtn_apply(out: &mut [f32], v: &[f32], delta: f32, c_units: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        unsafe { avx2::rtn_apply(out, v, delta, c_units) };
+        return;
+    }
+    scalar::rtn_apply(out, v, delta, c_units)
+}
+
+/// Fixed-point truncation (dispatched). See [`scalar::fx_apply`].
+pub fn fx_apply(out: &mut [f32], v: &[f32], pow2: f32, scale: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        unsafe { avx2::fx_apply(out, v, pow2, scale) };
+        return;
+    }
+    scalar::fx_apply(out, v, pow2, scale)
+}
+
+/// Mantissa truncation (dispatched). See [`scalar::fp_truncate`].
+pub fn fp_truncate(out: &mut [f32], v: &[f32], mask: u32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        unsafe { avx2::fp_truncate(out, v, mask) };
+        return;
+    }
+    scalar::fp_truncate(out, v, mask)
+}
+
+/// Sign packing (dispatched). See [`scalar::sign_fill`].
+pub fn sign_fill(out: &mut [f32], v: &[f32], mag: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: AVX2 presence checked by simd_active()
+        unsafe { avx2::sign_fill(out, v, mag) };
+        return;
+    }
+    scalar::sign_fill(out, v, mag)
+}
+
+/// Sparse gather: `out ← v[idx]` (clears `out` first).
+pub fn gather(v: &[f32], idx: &[u32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(idx.len());
+    for &i in idx {
+        out.push(v[i as usize]);
+    }
+}
+
+/// Sparse gather of magnitudes: `out ← |v[idx]|` (clears `out` first).
+pub fn gather_abs(v: &[f32], idx: &[u32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(idx.len());
+    for &i in idx {
+        out.push(v[i as usize].abs());
+    }
+}
+
+/// Sparse gather with scaling: `out ← scale·v[idx]` (clears `out` first).
+pub fn gather_scaled(v: &[f32], idx: &[u32], scale: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(idx.len());
+    for &i in idx {
+        out.push(v[i as usize] * scale);
+    }
+}
+
+/// Sparse scatter-accumulate: `acc[idx_j] += scale·val_j`.
+pub fn scatter_add(acc: &mut [f32], idx: &[u32], val: &[f32], scale: f32) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (i, x) in idx.iter().zip(val) {
+        acc[*i as usize] += scale * x;
+    }
+}
+
+/// Pack `v` into magnitude-descending sort keys: ascending u64 order of
+/// `(!(|v_i| bits) << 32) | i` is descending `|v_i|` with ascending
+/// index as the deterministic tie-break — a **strict** total order, so
+/// any correct partial/full sort of these keys agrees on every prefix.
+/// Clears `out` first.
+pub fn pack_desc_keys(v: &[f32], out: &mut Vec<u64>) {
+    out.clear();
+    out.reserve(v.len());
+    for (i, x) in v.iter().enumerate() {
+        let mag = (x.abs().to_bits() as u64) << 32;
+        out.push((!mag & 0xFFFF_FFFF_0000_0000) | i as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32 * 3.0).collect()
+    }
+
+    const SIZES: [usize; 8] = [0, 1, 7, 8, 9, 63, 64, 1000];
+
+    #[test]
+    fn dispatch_matches_scalar_reductions() {
+        for (s, d) in SIZES.iter().enumerate() {
+            let x = test_vec(*d, s as u64 + 1);
+            let y = test_vec(*d, s as u64 + 100);
+            assert_eq!(sq_norm(&x).to_bits(), scalar::sq_norm(&x).to_bits(), "d={d}");
+            assert_eq!(max_abs(&x).to_bits(), scalar::max_abs(&x).to_bits(), "d={d}");
+            assert_eq!(dot(&x, &y).to_bits(), scalar::dot(&x, &y).to_bits(), "d={d}");
+            assert_eq!(l1_norm(&x).to_bits(), scalar::l1_norm(&x).to_bits(), "d={d}");
+            assert_eq!(sq_dist(&x, &y).to_bits(), scalar::sq_dist(&x, &y).to_bits(), "d={d}");
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_elementwise() {
+        for (s, d) in SIZES.iter().enumerate() {
+            let x = test_vec(*d, s as u64 + 7);
+            let mut a = test_vec(*d, s as u64 + 70);
+            let mut b = a.clone();
+            axpy(&mut a, 0.37, &x);
+            scalar::axpy(&mut b, 0.37, &x);
+            assert_eq!(bits(&a), bits(&b), "axpy d={d}");
+            scaled_copy(&mut a, -1.6, &x);
+            scalar::scaled_copy(&mut b, -1.6, &x);
+            assert_eq!(bits(&a), bits(&b), "scaled_copy d={d}");
+            scale(&mut a, 0.11);
+            scalar::scale(&mut b, 0.11);
+            assert_eq!(bits(&a), bits(&b), "scale d={d}");
+            rtn_apply(&mut a, &x, 0.25, 3.0);
+            scalar::rtn_apply(&mut b, &x, 0.25, 3.0);
+            assert_eq!(bits(&a), bits(&b), "rtn d={d}");
+            fx_apply(&mut a, &x, 16.0, 2.5);
+            scalar::fx_apply(&mut b, &x, 16.0, 2.5);
+            assert_eq!(bits(&a), bits(&b), "fx d={d}");
+            fp_truncate(&mut a, &x, !((1u32 << 19) - 1));
+            scalar::fp_truncate(&mut b, &x, !((1u32 << 19) - 1));
+            assert_eq!(bits(&a), bits(&b), "fp d={d}");
+            sign_fill(&mut a, &x, 0.83);
+            scalar::sign_fill(&mut b, &x, 0.83);
+            assert_eq!(bits(&a), bits(&b), "sign d={d}");
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn reductions_match_naive_within_tolerance() {
+        let x = test_vec(1000, 5);
+        let y = test_vec(1000, 6);
+        let naive_sq: f64 = x.iter().map(|v| *v as f64 * *v as f64).sum();
+        assert!((sq_norm(&x) - naive_sq).abs() < 1e-9 * naive_sq.max(1.0));
+        let naive_dot: f64 = x.iter().zip(&y).map(|(a, b)| *a as f64 * *b as f64).sum();
+        assert!((dot(&x, &y) - naive_dot).abs() < 1e-9 * naive_dot.abs().max(1.0));
+        let naive_max = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert_eq!(max_abs(&x), naive_max);
+    }
+
+    #[test]
+    fn elementwise_semantics() {
+        let v = [1.3f32, -0.7, 0.0, 2.49, -2.51];
+        let mut out = [0.0f32; 5];
+        rtn_apply(&mut out, &v, 1.0, 2.0);
+        assert_eq!(out, [1.0, -1.0, 0.0, 2.0, -2.0]);
+        sign_fill(&mut out, &v, 2.0);
+        assert_eq!(out, [2.0, -2.0, 2.0, 2.0, -2.0]);
+        fx_apply(&mut out, &v, 4.0, 1.0); // truncate toward zero at 1/4 steps
+        assert_eq!(out, [1.25, -0.5, 0.0, 2.25, -2.5]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let v = test_vec(64, 9);
+        let idx = [3u32, 0, 63, 17];
+        let mut g = Vec::new();
+        gather(&v, &idx, &mut g);
+        assert_eq!(g, vec![v[3], v[0], v[63], v[17]]);
+        let mut acc = vec![0.0f32; 64];
+        scatter_add(&mut acc, &idx, &g, 2.0);
+        assert_eq!(acc[3], 2.0 * v[3]);
+        assert_eq!(acc[1], 0.0);
+        let mut ga = Vec::new();
+        gather_abs(&v, &idx, &mut ga);
+        assert_eq!(ga[0], v[3].abs());
+        let mut gs = Vec::new();
+        gather_scaled(&v, &idx, -1.0, &mut gs);
+        assert_eq!(gs[1], -v[0]);
+    }
+
+    #[test]
+    fn desc_keys_are_strict_total_order() {
+        let v = [1.0f32, -5.0, 3.0, -5.0, 0.0];
+        let mut keys = Vec::new();
+        pack_desc_keys(&v, &mut keys);
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        // desc magnitude, ties broken by ascending index
+        let order: Vec<u32> = sorted.iter().map(|k| *k as u32).collect();
+        assert_eq!(order, vec![1, 3, 2, 0, 4]);
+        // strictness: no two keys equal
+        sorted.dedup();
+        assert_eq!(sorted.len(), v.len());
+    }
+
+    #[test]
+    fn lane_order_is_the_documented_tree() {
+        // 8 values whose pairwise sums are exact: the tree must
+        // reproduce the documented association exactly
+        let a = [1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        assert_eq!(scalar::reduce8(a), 255.0);
+        // tail elements feed lane i % 8: 9th element lands in lane 0
+        let x = [1.0f32; 9];
+        assert_eq!(scalar::sq_norm(&x), 9.0);
+    }
+}

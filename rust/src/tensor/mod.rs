@@ -4,7 +4,14 @@
 //! models expose a single flat parameter/gradient vector — see
 //! `python/compile/model.py`), so this module is the numeric workhorse:
 //! BLAS-1 style ops, norms, and magnitude-selection utilities.
+//!
+//! The op bodies live in [`kernels`]: a canonical fixed-lane-order
+//! kernel layer whose scalar and (optional, `--features simd`) AVX2
+//! paths are bit-identical by construction. Reductions here accumulate
+//! in f64 across 8 fixed lanes — deterministic, but a *different*
+//! (documented) association than a plain sequential sum.
 
+pub mod kernels;
 pub mod rng;
 pub mod select;
 pub mod shard;
@@ -14,36 +21,27 @@ pub use shard::ShardSpec;
 
 /// `y += alpha * x`
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    kernels::axpy(y, alpha, x)
 }
 
 /// `y = alpha * x` (overwrites)
 pub fn scaled_copy(y: &mut [f32], alpha: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi = alpha * xi;
-    }
+    kernels::scaled_copy(y, alpha, x)
 }
 
 /// `x *= alpha`
 pub fn scale(x: &mut [f32], alpha: f32) {
-    for xi in x {
-        *xi *= alpha;
-    }
+    kernels::scale(x, alpha)
 }
 
 /// Dot product (f64 accumulation for stability on long vectors).
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+    kernels::dot(a, b)
 }
 
 /// Squared l2 norm, f64 accumulated.
 pub fn sq_norm(x: &[f32]) -> f64 {
-    x.iter().map(|v| (*v as f64) * (*v as f64)).sum()
+    kernels::sq_norm(x)
 }
 
 /// l2 norm.
@@ -53,12 +51,12 @@ pub fn norm(x: &[f32]) -> f64 {
 
 /// l1 norm.
 pub fn l1_norm(x: &[f32]) -> f64 {
-    x.iter().map(|v| v.abs() as f64).sum()
+    kernels::l1_norm(x)
 }
 
 /// Largest magnitude entry (0.0 for an empty slice).
 pub fn max_abs(x: &[f32]) -> f32 {
-    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    kernels::max_abs(x)
 }
 
 /// Elementwise difference `a - b` into a fresh vector.
@@ -69,21 +67,12 @@ pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
 
 /// Zero the buffer.
 pub fn zero(x: &mut [f32]) {
-    for v in x {
-        *v = 0.0;
-    }
+    kernels::fill(x, 0.0)
 }
 
 /// Squared l2 distance between two vectors.
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b)
-        .map(|(x, y)| {
-            let d = (*x - *y) as f64;
-            d * d
-        })
-        .sum()
+    kernels::sq_dist(a, b)
 }
 
 #[cfg(test)]

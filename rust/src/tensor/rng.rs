@@ -70,8 +70,23 @@ impl Rng {
     /// on thread scheduling, which is what makes the sharded compressor
     /// path bit-identical for any thread count.
     pub fn shard_streams(&mut self, n: usize) -> Vec<Rng> {
+        let mut out = Vec::with_capacity(n);
+        self.shard_streams_into(n, &mut out);
+        out
+    }
+
+    /// [`Rng::shard_streams`] into a caller-owned buffer (cleared
+    /// first). Consumes the same single digest draw and derives the
+    /// same child streams — bit-identical to the allocating form; used
+    /// by the arena-backed compression path to keep the steady-state
+    /// round allocation-free.
+    pub fn shard_streams_into(&mut self, n: usize, out: &mut Vec<Rng>) {
         let digest = self.next_u64();
-        (0..n as u64).map(|i| Self::for_shard_stream(digest, 0, 0, i)).collect()
+        out.clear();
+        out.reserve(n);
+        for i in 0..n as u64 {
+            out.push(Self::for_shard_stream(digest, 0, 0, i));
+        }
     }
 
     #[inline]
@@ -154,9 +169,20 @@ impl Rng {
     /// k distinct indices from [0, n) via partial Fisher-Yates over a
     /// lazily-materialized permutation (O(k) memory in the map).
     pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(k);
+        self.choose_k_into(n, k, &mut out);
+        out
+    }
+
+    /// [`Rng::choose_k`] into a caller-owned buffer (cleared first).
+    /// Same draws, same result; the lazy-permutation map still
+    /// allocates, so RandK stays outside the strict zero-allocation
+    /// contract (documented in `compress::arena`).
+    pub fn choose_k_into(&mut self, n: usize, k: usize, out: &mut Vec<u32>) {
         debug_assert!(k <= n);
         let mut swaps: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
-        let mut out = Vec::with_capacity(k);
+        out.clear();
+        out.reserve(k);
         for i in 0..k {
             let j = i + self.below(n - i);
             let vi = *swaps.get(&i).unwrap_or(&i);
@@ -164,7 +190,6 @@ impl Rng {
             out.push(vj as u32);
             swaps.insert(j, vi);
         }
-        out
     }
 
     /// Random permutation of [0, n).
@@ -227,6 +252,21 @@ mod tests {
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), 4, "shard streams collide: {a:?}");
+    }
+
+    #[test]
+    fn shard_streams_into_matches_allocating_form() {
+        let mut p1 = Rng::for_stream(5, 3, 11);
+        let mut p2 = p1.clone();
+        let a = p1.shard_streams(5);
+        let mut b = Vec::new();
+        p2.shard_streams_into(5, &mut b);
+        for (x, y) in a.into_iter().zip(b.iter_mut()) {
+            let mut x = x;
+            assert_eq!(x.next_u64(), y.next_u64());
+        }
+        // parents advanced identically (one digest draw each)
+        assert_eq!(p1.next_u64(), p2.next_u64());
     }
 
     #[test]

@@ -1,92 +1,171 @@
 //! Magnitude selection utilities: top-k, argsort-by-|v|, and segment views.
 //!
-//! Top-k uses `select_nth_unstable` (introselect, O(d) expected) rather
-//! than a full sort — on the hot path this is the difference between the
-//! compressor being free vs. dominating the round (see EXPERIMENTS.md
-//! §Perf). A full descending argsort is still provided for the adaptive
-//! s-Top-k path when the L1 `segstats` artifact is not in play.
+//! Top-k uses `select_nth_unstable` (introselect, O(d) expected) over
+//! packed integer keys rather than a full sort — on the hot path this is
+//! the difference between the compressor being free vs. dominating the
+//! round (see README §"Hot path: vectorized kernels & the scratch
+//! arena" for measurements and reproduction). A full descending argsort
+//! is still provided for the adaptive s-Top-k path when the L1
+//! `segstats` artifact is not in play.
+//!
+//! Every selection routine here runs over the keys packed by
+//! [`crate::tensor::kernels::pack_desc_keys`]: ascending u64 order is
+//! descending |v| with ascending index as tie-break — a **strict** total
+//! order, so partial sorts (`select_nth_unstable` + prefix sort) agree
+//! bit-for-bit with the full sort on every prefix. The `*_into`
+//! variants take caller-owned buffers so the arena-backed compression
+//! path stays allocation-free in steady state.
 
-/// Indices of the k largest-|v| entries, in unspecified order.
-/// Ties are broken arbitrarily (matches the paper: Top-k keeps *some* set
-/// of k largest-magnitude coordinates).
+use super::kernels;
+
+/// Size below which the comparison sort beats radix (histogram passes
+/// don't amortize on small inputs).
+const RADIX_MIN: usize = 1 << 14;
+
+/// Indices of the k largest-|v| entries, |v|-descending, ties broken by
+/// ascending index — fully deterministic. (`k >= d` returns `0..d` in
+/// index order.)
 pub fn top_k_indices(v: &[f32], k: usize) -> Vec<u32> {
-    let d = v.len();
-    if k == 0 {
-        return Vec::new();
-    }
-    if k >= d {
-        return (0..d as u32).collect();
-    }
-    let mut idx: Vec<u32> = (0..d as u32).collect();
-    // nth position in DESCENDING |v| order
-    idx.select_nth_unstable_by(k - 1, |&a, &b| {
-        v[b as usize]
-            .abs()
-            .partial_cmp(&v[a as usize].abs())
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
-    idx.truncate(k);
-    idx
+    let mut keys = Vec::new();
+    let mut out = Vec::new();
+    top_k_indices_into(v, k, &mut keys, &mut out);
+    out
 }
 
-/// Full argsort by |v| descending.
+/// [`top_k_indices`] into caller-owned buffers (`keys` is scratch; both
+/// are cleared first). Identical result.
+pub fn top_k_indices_into(v: &[f32], k: usize, keys: &mut Vec<u64>, out: &mut Vec<u32>) {
+    let d = v.len();
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    if k >= d {
+        out.extend(0..d as u32);
+        return;
+    }
+    kernels::pack_desc_keys(v, keys);
+    // nth position in ascending key order == descending |v| order
+    keys.select_nth_unstable(k - 1);
+    keys[..k].sort_unstable();
+    out.extend(keys[..k].iter().map(|key| *key as u32));
+}
+
+/// Full argsort by |v| descending (ties: ascending index).
 ///
 /// Packs `(|v| bits, index)` into one u64 per element and sorts those —
 /// comparisons become single integer compares on contiguous memory
 /// instead of two indirect f32 loads, which is ~3-4x faster at d = 1M
-/// (EXPERIMENTS.md §Perf). |v| is non-negative, so its IEEE-754 bit
+/// (README §"Hot path"). |v| is non-negative, so its IEEE-754 bit
 /// pattern orders identically to its value; NaNs map above everything
 /// and are tolerated (they sort first, deterministically).
 pub fn argsort_desc_abs(v: &[f32]) -> Vec<u32> {
-    let mut keys: Vec<u64> = v
-        .iter()
-        .enumerate()
-        .map(|(i, x)| {
-            let mag = (x.abs().to_bits() as u64) << 32;
-            // invert so ascending u64 order == descending |v| order,
-            // and ascending index order breaks ties deterministically
-            (!mag & 0xFFFF_FFFF_0000_0000) | i as u64
-        })
-        .collect();
+    let mut keys = Vec::new();
+    let mut radix_buf = Vec::new();
+    let mut out = Vec::new();
+    argsort_desc_abs_into(v, &mut keys, &mut radix_buf, &mut out);
+    out
+}
+
+/// [`argsort_desc_abs`] into caller-owned buffers (`keys` and
+/// `radix_buf` are scratch; all are cleared first). Identical result.
+pub fn argsort_desc_abs_into(
+    v: &[f32],
+    keys: &mut Vec<u64>,
+    radix_buf: &mut Vec<u64>,
+    out: &mut Vec<u32>,
+) {
+    kernels::pack_desc_keys(v, keys);
     // LSD radix over the 32 key bits (4 x 8-bit passes): O(d), ~2x over
-    // comparison sort at d = 1M. Small inputs use the comparison sort
-    // (radix's histogram passes don't amortize).
-    if keys.len() >= 1 << 14 {
-        radix_sort_by_high32(&mut keys);
+    // comparison sort at d = 1M.
+    if keys.len() >= RADIX_MIN {
+        radix_sort_by_high32(keys, radix_buf);
     } else {
         keys.sort_unstable();
     }
-    keys.into_iter().map(|k| k as u32).collect()
+    out.clear();
+    out.reserve(keys.len());
+    out.extend(keys.iter().map(|k| *k as u32));
+}
+
+/// The first `take` entries of [`argsort_desc_abs`] without paying for
+/// the full sort when `take ≪ d`: partition at `take`, then sort only
+/// the prefix. The packed keys form a strict total order, so this is
+/// **exactly** the full sort's prefix — same indices, same order — for
+/// every input (prop-tested in `tests/prop_simd.rs`).
+pub fn argsort_prefix_desc_abs_into(
+    v: &[f32],
+    take: usize,
+    keys: &mut Vec<u64>,
+    radix_buf: &mut Vec<u64>,
+    out: &mut Vec<u32>,
+) {
+    let d = v.len();
+    let take = take.min(d);
+    out.clear();
+    if take == 0 {
+        return;
+    }
+    if take == d {
+        argsort_desc_abs_into(v, keys, radix_buf, out);
+        return;
+    }
+    kernels::pack_desc_keys(v, keys);
+    keys.select_nth_unstable(take - 1);
+    keys[..take].sort_unstable();
+    out.extend(keys[..take].iter().map(|key| *key as u32));
 }
 
 /// Stable LSD radix sort of packed `(key << 32) | idx` entries by the
-/// high 32 bits. The low 32 bits (indices) ride along, preserving the
-/// deterministic tie order from the packing.
-fn radix_sort_by_high32(keys: &mut Vec<u64>) {
+/// high 32 bits, using a caller-owned scratch buffer. The low 32 bits
+/// (indices) ride along, preserving the deterministic tie order from
+/// the packing.
+///
+/// All four pass histograms are built in one read over the input
+/// (halving memory traffic vs. a per-pass counting read), and passes
+/// whose byte is constant across every key are skipped — a stable
+/// no-op, so the result is bit-identical to the plain 4-pass sort.
+fn radix_sort_by_high32(keys: &mut Vec<u64>, buf: &mut Vec<u64>) {
     let n = keys.len();
-    let mut buf: Vec<u64> = vec![0; n];
-    let mut src: &mut Vec<u64> = keys;
-    let mut dst: &mut Vec<u64> = &mut buf;
-    for pass in 0..4u32 {
-        let shift = 32 + pass * 8;
-        let mut hist = [0usize; 256];
-        for k in src.iter() {
-            hist[((k >> shift) & 0xFF) as usize] += 1;
-        }
-        let mut offsets = [0usize; 256];
-        let mut acc = 0usize;
-        for (o, h) in offsets.iter_mut().zip(&hist) {
-            *o = acc;
-            acc += h;
-        }
-        for k in src.iter() {
-            let b = ((k >> shift) & 0xFF) as usize;
-            dst[offsets[b]] = *k;
-            offsets[b] += 1;
-        }
-        std::mem::swap(&mut src, &mut dst);
+    buf.clear();
+    buf.resize(n, 0);
+    let mut hist = [[0usize; 256]; 4];
+    for k in keys.iter() {
+        let h = (k >> 32) as u32;
+        hist[0][(h & 0xFF) as usize] += 1;
+        hist[1][((h >> 8) & 0xFF) as usize] += 1;
+        hist[2][((h >> 16) & 0xFF) as usize] += 1;
+        hist[3][(h >> 24) as usize] += 1;
     }
-    // 4 passes = even number of swaps: result is back in `keys`
+    let mut flips = 0usize;
+    {
+        let mut src: &mut Vec<u64> = keys;
+        let mut dst: &mut Vec<u64> = buf;
+        for (pass, h) in hist.iter().enumerate() {
+            // a pass whose byte is constant over every key is a stable no-op
+            if h.iter().any(|&c| c == n) {
+                continue;
+            }
+            let shift = 32 + pass as u32 * 8;
+            let mut offsets = [0usize; 256];
+            let mut acc = 0usize;
+            for (o, c) in offsets.iter_mut().zip(h) {
+                *o = acc;
+                acc += c;
+            }
+            for k in src.iter() {
+                let b = ((k >> shift) & 0xFF) as usize;
+                dst[offsets[b]] = *k;
+                offsets[b] += 1;
+            }
+            std::mem::swap(&mut src, &mut dst);
+            flips += 1;
+        }
+    }
+    if flips % 2 == 1 {
+        // an odd number of executed passes left the result in `buf`
+        std::mem::swap(keys, buf);
+    }
 }
 
 /// Segment bounds for segment `l` (1-based, paper notation) of a length-d
@@ -107,18 +186,22 @@ pub fn num_segments(d: usize, s: usize) -> usize {
 /// |v| descending): `out[l-1] = (Delta^l)^2` of Lemma 3.4. This is the
 /// rust-native fallback for the L1 `seg_energy` Pallas kernel.
 pub fn segment_sq_norms(sorted_vals: &[f32], s: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    segment_sq_norms_into(sorted_vals, s, &mut out);
+    out
+}
+
+/// [`segment_sq_norms`] into a caller-owned buffer (cleared first).
+/// Each segment reduces through the canonical lane-order kernel.
+pub fn segment_sq_norms_into(sorted_vals: &[f32], s: usize, out: &mut Vec<f32>) {
     let d = sorted_vals.len();
     let nl = num_segments(d, s);
-    let mut out = Vec::with_capacity(nl);
+    out.clear();
+    out.reserve(nl);
     for l in 1..=nl {
         let (lo, hi) = segment_bounds(d, s, l);
-        let e: f64 = sorted_vals[lo..hi]
-            .iter()
-            .map(|v| (*v as f64) * (*v as f64))
-            .sum();
-        out.push(e as f32);
+        out.push(kernels::sq_norm(&sorted_vals[lo..hi]) as f32);
     }
-    out
 }
 
 #[cfg(test)]
@@ -144,24 +227,38 @@ mod tests {
     }
 
     #[test]
-    fn top_k_matches_sort() {
+    fn top_k_is_argsort_prefix() {
+        // the strict key order makes top-k exactly the argsort prefix
         let mut rng = Rng::new(1);
         for _ in 0..20 {
             let d = 1 + rng.below(500);
-            let k = rng.below(d + 1);
+            let k = rng.below(d);
             let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-            let mut got = top_k_indices(&v, k);
-            got.sort_unstable();
-            let mut want = argsort_desc_abs(&v)[..k].to_vec();
-            want.sort_unstable();
-            // compare magnitudes not indices (ties may differ)
-            let gm: Vec<f32> = got.iter().map(|&i| v[i as usize].abs()).collect();
-            let wm: Vec<f32> = want.iter().map(|&i| v[i as usize].abs()).collect();
-            let mut gm2 = gm.clone();
-            let mut wm2 = wm.clone();
-            gm2.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            wm2.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            assert_eq!(gm2, wm2);
+            assert_eq!(top_k_indices(&v, k), argsort_desc_abs(&v)[..k].to_vec());
+        }
+    }
+
+    #[test]
+    fn prefix_argsort_matches_full_sort_prefix() {
+        let mut rng = Rng::new(4);
+        for round in 0..20 {
+            // cross the radix threshold on some rounds, and include
+            // heavy ties (quantized values) to stress the tie order
+            let d = if round % 3 == 0 { RADIX_MIN + rng.below(2000) } else { 1 + rng.below(3000) };
+            let v: Vec<f32> = (0..d)
+                .map(|_| {
+                    let x = rng.normal() as f32;
+                    if round % 2 == 0 { (x * 4.0).round() / 4.0 } else { x }
+                })
+                .collect();
+            let full = argsort_desc_abs(&v);
+            for take in [0usize, 1, 7, d / 2, d.saturating_sub(1), d, d + 5] {
+                let mut keys = Vec::new();
+                let mut radix = Vec::new();
+                let mut out = Vec::new();
+                argsort_prefix_desc_abs_into(&v, take, &mut keys, &mut radix, &mut out);
+                assert_eq!(out, full[..take.min(d)].to_vec(), "d={d} take={take}");
+            }
         }
     }
 
@@ -169,6 +266,26 @@ mod tests {
     fn argsort_desc() {
         let v = [1.0f32, -5.0, 3.0];
         assert_eq!(argsort_desc_abs(&v), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn argsort_crosses_radix_threshold_consistently() {
+        // same input sorted by both paths (radix kicks in at RADIX_MIN)
+        let mut rng = Rng::new(8);
+        let v: Vec<f32> = (0..RADIX_MIN + 77).map(|_| rng.normal() as f32).collect();
+        let via_radix = argsort_desc_abs(&v);
+        let mut keys = Vec::new();
+        kernels::pack_desc_keys(&v, &mut keys);
+        keys.sort_unstable();
+        let via_cmp: Vec<u32> = keys.iter().map(|k| *k as u32).collect();
+        assert_eq!(via_radix, via_cmp);
+        // constant-byte pass skipping: tiny magnitudes share high bytes
+        let w: Vec<f32> = (0..RADIX_MIN + 5).map(|i| (i % 3) as f32 * 1e-30).collect();
+        let mut keys2 = Vec::new();
+        kernels::pack_desc_keys(&w, &mut keys2);
+        keys2.sort_unstable();
+        let want: Vec<u32> = keys2.iter().map(|k| *k as u32).collect();
+        assert_eq!(argsort_desc_abs(&w), want);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod elias;
 
 pub use bitpack::{BitReader, BitWriter};
 
-use crate::compress::{index_bits, Compressed, Payload};
+use crate::compress::{index_bits, Compressed, Payload, ScratchArena};
 
 /// A worker→server message: one compressed gradient (or EF increment).
 #[derive(Clone, Debug)]
@@ -78,11 +78,15 @@ impl<'a> Cursor<'a> {
     }
     fn f32s(&mut self, n: usize) -> Vec<f32> {
         let mut out = Vec::with_capacity(n);
+        self.f32s_into(n, &mut out);
+        out
+    }
+    fn f32s_into(&mut self, n: usize, out: &mut Vec<f32>) {
+        out.reserve(n);
         for _ in 0..n {
             out.push(f32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap()));
             self.i += 4;
         }
-        out
     }
     fn bytes(&mut self, n: usize) -> &'a [u8] {
         let s = &self.b[self.i..self.i + n];
@@ -110,13 +114,26 @@ fn encode_payload(buf: &mut Vec<u8>, payload: &Payload) {
             put_u32(buf, *d);
             put_u32(buf, idx.len() as u32);
             let ib = index_bits(*d as usize) as u32;
-            let mut bw = BitWriter::new();
+            // MSB-first bit packing straight into `buf` — byte-identical
+            // to BitWriter (`tests::inline_packer_matches_bitwriter`)
+            // but without the intermediate packed Vec, so the encode
+            // path stays allocation-free with a warmed-up buffer.
+            let packed_len = (idx.len() as u64 * ib as u64).div_ceil(8) as usize;
+            put_u32(buf, packed_len as u32);
+            let start = buf.len();
+            buf.resize(start + packed_len, 0);
+            let mut byte = start;
+            let mut used = 0u32;
             for i in idx {
-                bw.push(*i as u64, ib);
+                for b in (0..ib).rev() {
+                    if used == 8 {
+                        byte += 1;
+                        used = 0;
+                    }
+                    buf[byte] |= ((((*i as u64) >> b) & 1) as u8) << (7 - used);
+                    used += 1;
+                }
             }
-            let packed = bw.finish();
-            put_u32(buf, packed.len() as u32);
-            buf.extend_from_slice(&packed);
             put_f32s(buf, val);
         }
         Payload::Quantized { val, bits_per_elem, overhead_bits } => {
@@ -139,13 +156,15 @@ fn encode_payload(buf: &mut Vec<u8>, payload: &Payload) {
     }
 }
 
-fn decode_payload(c: &mut Cursor<'_>, allow_sharded: bool) -> Payload {
+fn decode_payload(c: &mut Cursor<'_>, arena: &mut ScratchArena, allow_sharded: bool) -> Payload {
     let kind = c.u8();
     match kind {
         KIND_DENSE => {
             let d = c.u32() as usize;
             c.check_remaining(4 * d as u64);
-            Payload::Dense(c.f32s(d))
+            let mut val = arena.take_f32(d);
+            c.f32s_into(d, &mut val);
+            Payload::Dense(val)
         }
         KIND_SPARSE => {
             let d = c.u32();
@@ -155,8 +174,10 @@ fn decode_payload(c: &mut Cursor<'_>, allow_sharded: bool) -> Payload {
             let ib = index_bits(d as usize) as u32;
             let packed = c.bytes(packed_len);
             let mut br = BitReader::new(packed);
-            let idx: Vec<u32> = (0..k).map(|_| br.pull(ib) as u32).collect();
-            let val = c.f32s(k);
+            let mut idx = arena.take_u32(k);
+            idx.extend((0..k).map(|_| br.pull(ib) as u32));
+            let mut val = arena.take_f32(k);
+            c.f32s_into(k, &mut val);
             Payload::Sparse { d, idx, val }
         }
         KIND_QUANT => {
@@ -164,7 +185,9 @@ fn decode_payload(c: &mut Cursor<'_>, allow_sharded: bool) -> Payload {
             let bits_per_elem = c.f64();
             let overhead_bits = c.u64();
             c.check_remaining(4 * d as u64);
-            Payload::Quantized { val: c.f32s(d), bits_per_elem, overhead_bits }
+            let mut val = arena.take_f32(d);
+            c.f32s_into(d, &mut val);
+            Payload::Quantized { val, bits_per_elem, overhead_bits }
         }
         KIND_SHARDED => {
             // legitimate encoders never nest shards; rejecting nesting
@@ -174,7 +197,12 @@ fn decode_payload(c: &mut Cursor<'_>, allow_sharded: bool) -> Payload {
             let n = c.u32() as usize;
             // every shard occupies at least its 1-byte kind header
             c.check_remaining(n as u64);
-            Payload::Sharded((0..n).map(|_| decode_payload(c, false)).collect())
+            let mut parts = arena.take_payloads(n);
+            for _ in 0..n {
+                let p = decode_payload(c, arena, false);
+                parts.push(p);
+            }
+            Payload::Sharded(parts)
         }
         other => panic!("bad payload kind {other}"),
     }
@@ -183,22 +211,37 @@ fn decode_payload(c: &mut Cursor<'_>, allow_sharded: bool) -> Payload {
 /// Serialize a message for the TCP transport.
 pub fn encode(msg: &WorkerMsg) -> Vec<u8> {
     let mut buf = Vec::new();
-    buf.push(MAGIC);
-    put_u32(&mut buf, msg.step);
-    put_u32(&mut buf, msg.worker);
-    put_u64(&mut buf, msg.comp.extra_bits);
-    encode_payload(&mut buf, &msg.comp.payload);
+    encode_into(&mut buf, msg);
     buf
+}
+
+/// [`encode`] into a caller-owned buffer (cleared first) —
+/// byte-identical output, allocation-free once the buffer has warmed up
+/// to its steady-state size.
+pub fn encode_into(buf: &mut Vec<u8>, msg: &WorkerMsg) {
+    buf.clear();
+    buf.push(MAGIC);
+    put_u32(buf, msg.step);
+    put_u32(buf, msg.worker);
+    put_u64(buf, msg.comp.extra_bits);
+    encode_payload(buf, &msg.comp.payload);
 }
 
 /// Deserialize a message. Panics on malformed input (internal protocol).
 pub fn decode(bytes: &[u8]) -> WorkerMsg {
+    decode_in(bytes, &mut ScratchArena::new())
+}
+
+/// [`decode`] drawing every payload buffer from `arena` instead of the
+/// heap — identical result; recycle the consumed message back via
+/// [`ScratchArena::recycle`].
+pub fn decode_in(bytes: &[u8], arena: &mut ScratchArena) -> WorkerMsg {
     let mut c = Cursor { b: bytes, i: 0 };
     assert_eq!(c.u8(), MAGIC, "bad magic");
     let step = c.u32();
     let worker = c.u32();
     let extra_bits = c.u64();
-    let payload = decode_payload(&mut c, true);
+    let payload = decode_payload(&mut c, arena, true);
     WorkerMsg { step, worker, comp: Compressed { payload, extra_bits } }
 }
 
@@ -361,6 +404,65 @@ mod tests {
             transported <= accounted + headers,
             "{transported} > {accounted} + {headers}"
         );
+    }
+
+    #[test]
+    fn inline_packer_matches_bitwriter() {
+        // the inline index packer must stay byte-identical to BitWriter
+        let mut rng = Rng::new(1);
+        for d in [2u32, 3, 255, 256, 1000, 1 << 20] {
+            let k = 1 + rng.below(50);
+            let idx: Vec<u32> = (0..k).map(|_| rng.below(d as usize) as u32).collect();
+            let ib = index_bits(d as usize) as u32;
+            let mut bw = BitWriter::new();
+            for i in &idx {
+                bw.push(*i as u64, ib);
+            }
+            let want = bw.finish();
+            let comp = Compressed {
+                payload: Payload::Sparse { d, idx, val: vec![0.0; k] },
+                extra_bits: 0,
+            };
+            let bytes = encode(&WorkerMsg { step: 0, worker: 0, comp });
+            // packed block offset: magic+step+worker+extra+kind+d+k+len
+            let off = 1 + 4 + 4 + 8 + 1 + 4 + 4 + 4;
+            assert_eq!(&bytes[off..off + want.len()], &want[..], "d={d}");
+        }
+    }
+
+    #[test]
+    fn into_forms_match_allocating_forms() {
+        let comp = Compressed::sharded(vec![
+            Compressed {
+                payload: Payload::Sparse { d: 500, idx: vec![3, 499], val: vec![1.5, -2.0] },
+                extra_bits: 4,
+            },
+            Compressed::dense(vec![9.0, -8.0, 7.0]),
+            Compressed {
+                payload: Payload::Quantized {
+                    val: vec![0.25; 6],
+                    bits_per_elem: 3.0,
+                    overhead_bits: 16,
+                },
+                extra_bits: 2,
+            },
+        ]);
+        let msg = WorkerMsg { step: 11, worker: 2, comp };
+        let want = encode(&msg);
+        let mut buf = vec![0xFFu8; 3]; // stale content must be cleared
+        let mut arena = crate::compress::ScratchArena::new();
+        for _ in 0..3 {
+            // repeat to exercise warmed-up (pool-reusing) iterations
+            encode_into(&mut buf, &msg);
+            assert_eq!(buf, want);
+            let got = decode_in(&buf, &mut arena);
+            assert_eq!(got.step, 11);
+            assert_eq!(got.worker, 2);
+            assert_eq!(got.comp.extra_bits, msg.comp.extra_bits);
+            assert_eq!(got.comp.decode(), msg.comp.decode());
+            assert_eq!(got.comp.wire_bits(), msg.comp.wire_bits());
+            arena.recycle(got.comp);
+        }
     }
 
     #[test]

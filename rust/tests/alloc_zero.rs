@@ -1,0 +1,158 @@
+//! Zero-allocation assertion for the steady-state round hot path.
+//!
+//! A counting `#[global_allocator]` wraps `System`; after a few warmup
+//! rounds (which size the [`ScratchArena`] pools, the wire buffer, and
+//! the server scratch), the counter is armed and several full rounds —
+//! compress → encode → decode → reduce → optimizer step → recycle —
+//! must perform **zero** heap allocations for every arena-capable
+//! compressor family.
+//!
+//! Documented exceptions (see README §"Hot path"): Rand-k (lazy
+//! Fisher–Yates `HashMap`), multilevel families without `draw_in`
+//! (boxed-ctx fallback), and multi-threaded `ParCompressor` (scoped
+//! spawn). They are deliberately absent from `FAMILIES`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use mlmc_dist::compress::{
+    Compressor, FixedPoint, FloatPoint, Identity, ParCompressor, Rtn, ScratchArena, SignSgd,
+    STopK, TopK,
+};
+use mlmc_dist::coordinator::{RoundMsg, Server};
+use mlmc_dist::ef::AggKind;
+use mlmc_dist::mlmc::{MlSTopK, Mlmc, Schedule};
+use mlmc_dist::optim::Sgd;
+use mlmc_dist::tensor::Rng;
+use mlmc_dist::wire::{decode_in, encode_into, WorkerMsg};
+
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // frees are always allowed: recycling hands buffers back to the
+        // arena, it never returns memory to the allocator mid-round
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const D: usize = 4096;
+const SHARD: usize = 512;
+const WORKERS: usize = 2;
+const WARMUP: usize = 5;
+const MEASURED: usize = 3;
+
+fn families() -> Vec<Box<dyn Compressor>> {
+    vec![
+        Box::new(Identity),
+        Box::new(TopK { k: 32 }),
+        Box::new(STopK { s: 16, k: 4 }),
+        Box::new(Rtn { level: 4 }),
+        Box::new(FixedPoint { f: 8 }),
+        Box::new(FloatPoint { f: 10 }),
+        Box::new(SignSgd),
+        Box::new(Mlmc::new(Box::new(MlSTopK { s: 64 }), Schedule::Adaptive)),
+        Box::new(Mlmc::new(Box::new(MlSTopK { s: 64 }), Schedule::Default)),
+    ]
+}
+
+/// One full round for `WORKERS` workers over preallocated state.
+/// Returns total wire bits (black-boxed by the caller).
+fn run_round(
+    comp: &ParCompressor,
+    grad: &[f32],
+    step: u64,
+    server: &mut Server,
+    arena: &mut ScratchArena,
+    wire_bufs: &mut [Vec<u8>; WORKERS],
+) -> u64 {
+    // compress + encode per worker into its persistent wire buffer
+    for (w, buf) in wire_bufs.iter_mut().enumerate() {
+        let mut rng = Rng::for_shard_stream(7, w as u64, step, 0);
+        let c = comp.compress_with(grad, &mut rng, arena);
+        let msg = WorkerMsg { step: step as u32, worker: w as u32, comp: c };
+        encode_into(buf, &msg);
+        arena.recycle(msg.comp);
+    }
+    // decode both replies (arena-backed), reduce, step
+    let m0 = decode_in(&wire_bufs[0], arena);
+    let m1 = decode_in(&wire_bufs[1], arena);
+    let bits = server.apply_attributed(&[
+        RoundMsg { worker: m0.worker, weight: 1.0, comp: &m0.comp },
+        RoundMsg { worker: m1.worker, weight: 1.0, comp: &m1.comp },
+    ]);
+    arena.recycle(m0.comp);
+    arena.recycle(m1.comp);
+    bits
+}
+
+#[test]
+fn steady_state_round_allocates_nothing() {
+    let mut rng = Rng::new(3);
+    let mut grad = vec![0.0f32; D];
+    rng.fill_normal(&mut grad, 1.0);
+
+    for inner in families() {
+        let name = inner.name();
+        let comp = ParCompressor::new(inner, SHARD, 1);
+        let mut server =
+            Server::new(vec![0.0f32; D], Box::new(Sgd { lr: 0.01 }), AggKind::Fresh)
+                .with_workers(WORKERS);
+        let mut arena = ScratchArena::new();
+        let mut wire_bufs: [Vec<u8>; WORKERS] = [Vec::new(), Vec::new()];
+
+        for step in 0..WARMUP as u64 {
+            std::hint::black_box(run_round(
+                &comp,
+                &grad,
+                step,
+                &mut server,
+                &mut arena,
+                &mut wire_bufs,
+            ));
+        }
+
+        ALLOCS.store(0, Ordering::SeqCst);
+        ARMED.store(true, Ordering::SeqCst);
+        for step in 0..MEASURED as u64 {
+            std::hint::black_box(run_round(
+                &comp,
+                &grad,
+                WARMUP as u64 + step,
+                &mut server,
+                &mut arena,
+                &mut wire_bufs,
+            ));
+        }
+        ARMED.store(false, Ordering::SeqCst);
+        let n = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(n, 0, "{name}: {n} heap allocations in {MEASURED} steady-state rounds");
+    }
+}

@@ -1,0 +1,342 @@
+//! Bit-identity properties for the vectorized kernel layer
+//! (`tensor::kernels`) and the arena-backed hot path.
+//!
+//! The contract under test is the one the README §"Hot path" documents:
+//!
+//! * the dispatched kernels (scalar autovectorized by default, AVX2
+//!   with `--features simd`) are **bit-identical** to the canonical
+//!   scalar reference for every input — CI runs this file with the
+//!   feature on and off and both must pass unchanged;
+//! * `Compressor::compress_with` (arena scratch) is bit-identical to
+//!   `Compressor::compress` (heap) for every family, with identical
+//!   RNG stream consumption;
+//! * the wire codec's `encode_into`/`decode_in` forms are byte- and
+//!   bit-identical to the allocating `encode`/`decode`;
+//! * the server reduction is bit-identical whether fed heap- or
+//!   arena-built messages.
+
+use mlmc_dist::compress::{
+    Compressed, Compressor, FixedPoint, FloatPoint, Identity, Natural, ParCompressor, Payload,
+    Qsgd, RandK, Rtn, ScratchArena, SignSgd, STopK, TopK,
+};
+use mlmc_dist::coordinator::{RoundMsg, Server};
+use mlmc_dist::ef::AggKind;
+use mlmc_dist::mlmc::{MlSTopK, Mlmc, Schedule};
+use mlmc_dist::optim::Sgd;
+use mlmc_dist::tensor::{kernels, Rng};
+use mlmc_dist::testing::forall_vec;
+use mlmc_dist::wire::{decode, decode_in, encode, encode_into, WorkerMsg};
+
+/// Bitwise payload equality (f32 compared via `to_bits`, so `-0.0` and
+/// NaN patterns count as differences — this is identity, not closeness).
+fn payload_bits_eq(a: &Payload, b: &Payload) -> Result<(), String> {
+    match (a, b) {
+        (Payload::Dense(x), Payload::Dense(y)) => f32_bits_eq(x, y),
+        (
+            Payload::Sparse { d: da, idx: ia, val: va },
+            Payload::Sparse { d: db, idx: ib, val: vb },
+        ) => {
+            if da != db || ia != ib {
+                return Err(format!("sparse shape/idx mismatch: d {da} vs {db}"));
+            }
+            f32_bits_eq(va, vb)
+        }
+        (
+            Payload::Quantized { val: va, bits_per_elem: ba, overhead_bits: oa },
+            Payload::Quantized { val: vb, bits_per_elem: bb, overhead_bits: ob },
+        ) => {
+            if ba.to_bits() != bb.to_bits() || oa != ob {
+                return Err(format!("quantized meta mismatch: {ba}/{oa} vs {bb}/{ob}"));
+            }
+            f32_bits_eq(va, vb)
+        }
+        (Payload::Sharded(xs), Payload::Sharded(ys)) => {
+            if xs.len() != ys.len() {
+                return Err(format!("shard count {} vs {}", xs.len(), ys.len()));
+            }
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                payload_bits_eq(x, y).map_err(|e| format!("shard {i}: {e}"))?;
+            }
+            Ok(())
+        }
+        _ => Err("payload kind mismatch".into()),
+    }
+}
+
+fn f32_bits_eq(a: &[f32], b: &[f32]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("len {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("[{i}]: {x} ({:#x}) vs {y} ({:#x})", x.to_bits(), y.to_bits()));
+        }
+    }
+    Ok(())
+}
+
+fn compressed_bits_eq(a: &Compressed, b: &Compressed) -> Result<(), String> {
+    if a.extra_bits != b.extra_bits {
+        return Err(format!("extra_bits {} vs {}", a.extra_bits, b.extra_bits));
+    }
+    payload_bits_eq(&a.payload, &b.payload)
+}
+
+// ---------------------------------------------------------------------
+// kernel dispatch vs the canonical scalar reference
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_dispatched_kernels_match_scalar_reference() {
+    forall_vec("kernels-dispatch", 11, 250, 700, |v| {
+        let d = v.len();
+        let mut rng = Rng::new(d as u64);
+        let y0: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        // reductions
+        if kernels::sq_norm(v).to_bits() != kernels::scalar::sq_norm(v).to_bits() {
+            return Err("sq_norm".into());
+        }
+        if kernels::dot(v, &y0).to_bits() != kernels::scalar::dot(v, &y0).to_bits() {
+            return Err("dot".into());
+        }
+        if kernels::l1_norm(v).to_bits() != kernels::scalar::l1_norm(v).to_bits() {
+            return Err("l1_norm".into());
+        }
+        if kernels::sq_dist(v, &y0).to_bits() != kernels::scalar::sq_dist(v, &y0).to_bits() {
+            return Err("sq_dist".into());
+        }
+        if kernels::max_abs(v).to_bits() != kernels::scalar::max_abs(v).to_bits() {
+            return Err("max_abs".into());
+        }
+        // elementwise, against the scalar twin on a cloned buffer
+        let alpha = v[0] * 0.37 - 1.0;
+        let (mut a, mut b) = (y0.clone(), y0.clone());
+        kernels::axpy(&mut a, alpha, v);
+        kernels::scalar::axpy(&mut b, alpha, v);
+        f32_bits_eq(&a, &b).map_err(|e| format!("axpy: {e}"))?;
+        kernels::scaled_copy(&mut a, alpha, v);
+        kernels::scalar::scaled_copy(&mut b, alpha, v);
+        f32_bits_eq(&a, &b).map_err(|e| format!("scaled_copy: {e}"))?;
+        kernels::scale(&mut a, alpha);
+        kernels::scalar::scale(&mut b, alpha);
+        f32_bits_eq(&a, &b).map_err(|e| format!("scale: {e}"))?;
+        let (delta, c_units) = (kernels::max_abs(v).max(1e-6) / 7.0, 7.0);
+        kernels::rtn_apply(&mut a, v, delta, c_units);
+        kernels::scalar::rtn_apply(&mut b, v, delta, c_units);
+        f32_bits_eq(&a, &b).map_err(|e| format!("rtn_apply: {e}"))?;
+        let scale = kernels::max_abs(v).max(1e-6);
+        kernels::fx_apply(&mut a, v, 256.0, scale);
+        kernels::scalar::fx_apply(&mut b, v, 256.0, scale);
+        f32_bits_eq(&a, &b).map_err(|e| format!("fx_apply: {e}"))?;
+        kernels::fp_truncate(&mut a, v, !((1u32 << 13) - 1));
+        kernels::scalar::fp_truncate(&mut b, v, !((1u32 << 13) - 1));
+        f32_bits_eq(&a, &b).map_err(|e| format!("fp_truncate: {e}"))?;
+        kernels::sign_fill(&mut a, v, 0.25);
+        kernels::scalar::sign_fill(&mut b, v, 0.25);
+        f32_bits_eq(&a, &b).map_err(|e| format!("sign_fill: {e}"))?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// compress_with (arena) vs compress (heap), every family
+// ---------------------------------------------------------------------
+
+fn families(d: usize) -> Vec<Box<dyn Compressor>> {
+    let k = d / 7 + 1;
+    let s = d / 11 + 1;
+    vec![
+        Box::new(Identity),
+        Box::new(TopK { k }),
+        Box::new(TopK { k: d }),
+        Box::new(STopK { s, k: 3 }),
+        Box::new(STopK { s: 1, k }),
+        Box::new(RandK { k }),
+        Box::new(Rtn { level: 4 }),
+        Box::new(Rtn { level: 1 }),
+        Box::new(FixedPoint { f: 8 }),
+        Box::new(FloatPoint { f: 10 }),
+        Box::new(SignSgd),
+        Box::new(Qsgd { s: 4 }),
+        Box::new(Natural),
+        Box::new(Mlmc::new(Box::new(MlSTopK { s }), Schedule::Default)),
+        Box::new(Mlmc::new(Box::new(MlSTopK { s }), Schedule::Uniform)),
+        Box::new(Mlmc::new(Box::new(MlSTopK { s }), Schedule::Adaptive)),
+    ]
+}
+
+#[test]
+fn prop_compress_with_is_bit_identical_and_rng_neutral() {
+    // one persistent arena across all cases: reuse (warm pools) must not
+    // leak state between compressions
+    let mut arena = ScratchArena::new();
+    forall_vec("compress-with-identity", 12, 120, 400, move |v| {
+        for c in families(v.len()) {
+            let mut r_heap = Rng::for_stream(9, 1, v.len() as u64);
+            let mut r_arena = r_heap.clone();
+            let heap = c.compress(v, &mut r_heap);
+            let with = c.compress_with(v, &mut r_arena, &mut arena);
+            compressed_bits_eq(&heap, &with).map_err(|e| format!("{}: {e}", c.name()))?;
+            // identical stream consumption: the next draw must agree
+            if r_heap.next_u64() != r_arena.next_u64() {
+                return Err(format!("{}: rng stream diverged", c.name()));
+            }
+            arena.recycle(with);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_compress_with_matches_across_shards_and_threads() {
+    type Mk = fn(usize) -> Box<dyn Compressor>;
+    let mk_topk: Mk = |d| Box::new(TopK { k: d / 9 + 1 });
+    let mk_rtn: Mk = |_| Box::new(Rtn { level: 4 });
+    let mk_stopk: Mk = |d| Box::new(STopK { s: d / 13 + 1, k: 2 });
+    let mut arena = ScratchArena::new();
+    forall_vec("sharded-compress-with", 13, 60, 600, move |v| {
+        let d = v.len();
+        for mk in [mk_topk, mk_rtn, mk_stopk] {
+            for shard in [64usize, 1000] {
+                // reference: the allocating path at 1 thread
+                let base = ParCompressor::new(mk(d), shard, 1);
+                let name = base.name();
+                let mut r0 = Rng::for_stream(5, 2, d as u64);
+                let heap = base.compress(v, &mut r0);
+                for threads in [1usize, 4] {
+                    let par = ParCompressor::new(mk(d), shard, threads);
+                    let mut r = Rng::for_stream(5, 2, d as u64);
+                    let with = par.compress_with(v, &mut r, &mut arena);
+                    compressed_bits_eq(&heap, &with)
+                        .map_err(|e| format!("{name} s={shard} t={threads}: {e}"))?;
+                    arena.recycle(with);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// STopK prefix selection vs full sort (the satellite bugfix)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_stopk_partial_sort_keeps_energy_and_bits_of_full_sort() {
+    forall_vec("stopk-partial-vs-full", 14, 200, 500, |v| {
+        let d = v.len();
+        for (s, k) in [(1usize, 3usize), (d / 6 + 1, 2), (d / 3 + 1, 100), (2, d)] {
+            let c = STopK { s, k };
+            let mut rng = Rng::new(0);
+            let msg = c.compress(v, &mut rng);
+            // reference: retained coordinates from a full argsort
+            let mut order: Vec<u32> = (0..d as u32).collect();
+            order.sort_by(|&a, &b| {
+                let (xa, xb) = (v[a as usize].abs(), v[b as usize].abs());
+                xb.partial_cmp(&xa).unwrap().then(a.cmp(&b))
+            });
+            let take = (s * k).min(d);
+            let want: f64 = order[..take]
+                .iter()
+                .map(|&i| {
+                    let x = v[i as usize] as f64;
+                    x * x
+                })
+                .sum();
+            let dec = msg.decode();
+            let got: f64 = dec.iter().map(|&x| x as f64 * x as f64).sum();
+            let tol = 1e-6 * want.max(1e-12);
+            if (got - want).abs() > tol {
+                return Err(format!("s={s} k={k}: energy {got} vs {want}"));
+            }
+            let want_bits =
+                take as u64 * (32 + mlmc_dist::compress::index_bits(d)) + msg.extra_bits;
+            if msg.wire_bits() != want_bits {
+                return Err(format!("s={s} k={k}: bits {} vs {want_bits}", msg.wire_bits()));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// wire: encode_into / decode_in vs encode / decode
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_wire_into_forms_match_allocating_forms() {
+    let mut arena = ScratchArena::new();
+    let mut buf = Vec::new();
+    forall_vec("wire-into-identity", 15, 80, 500, move |v| {
+        let d = v.len();
+        let cs: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK { k: d / 5 + 1 }),
+            Box::new(Rtn { level: 5 }),
+            Box::new(Identity),
+            Box::new(ParCompressor::new(Box::new(TopK { k: 2 }), 64, 1)),
+        ];
+        for c in cs {
+            let mut rng = Rng::new(3);
+            let msg = WorkerMsg { step: d as u32, worker: 7, comp: c.compress(v, &mut rng) };
+            let bytes = encode(&msg);
+            encode_into(&mut buf, &msg);
+            if bytes != buf {
+                return Err(format!("{}: encode_into bytes differ", c.name()));
+            }
+            let back = decode(&bytes);
+            let back_in = decode_in(&buf, &mut arena);
+            if back.step != back_in.step || back.worker != back_in.worker {
+                return Err(format!("{}: header mismatch", c.name()));
+            }
+            compressed_bits_eq(&back.comp, &back_in.comp)
+                .map_err(|e| format!("{}: {e}", c.name()))?;
+            compressed_bits_eq(&msg.comp, &back_in.comp)
+                .map_err(|e| format!("{}: roundtrip: {e}", c.name()))?;
+            arena.recycle(back_in.comp);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// server reduction fed by heap- vs arena-built messages
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_server_reduction_bit_identical_for_arena_messages() {
+    forall_vec("server-reduction-identity", 16, 60, 300, |v| {
+        let d = v.len();
+        let m = 5usize;
+        let mk_server = || {
+            Server::new(vec![0.01; d], Box::new(Sgd { lr: 0.05 }), AggKind::Fresh)
+                .with_workers(m)
+        };
+        let comp = ParCompressor::new(Box::new(TopK { k: d / 4 + 1 }), 128, 1);
+        let mut arena = ScratchArena::new();
+        let (mut heap_msgs, mut arena_msgs) = (Vec::new(), Vec::new());
+        for w in 0..m as u32 {
+            let mut r1 = Rng::for_stream(21, w as u64, d as u64);
+            let mut r2 = r1.clone();
+            heap_msgs.push(comp.compress(v, &mut r1));
+            arena_msgs.push(comp.compress_with(v, &mut r2, &mut arena));
+        }
+        let (mut sa, mut sb) = (mk_server(), mk_server());
+        for step in 0..3 {
+            let wmul = 1.0 + step as f32 * 0.25;
+            let msgs_a: Vec<RoundMsg> = heap_msgs
+                .iter()
+                .enumerate()
+                .map(|(w, c)| RoundMsg { worker: w as u32, weight: wmul, comp: c })
+                .collect();
+            let msgs_b: Vec<RoundMsg> = arena_msgs
+                .iter()
+                .enumerate()
+                .map(|(w, c)| RoundMsg { worker: w as u32, weight: wmul, comp: c })
+                .collect();
+            sa.apply_attributed(&msgs_a);
+            sb.apply_attributed(&msgs_b);
+            f32_bits_eq(&sa.params, &sb.params).map_err(|e| format!("step {step}: {e}"))?;
+        }
+        Ok(())
+    });
+}
