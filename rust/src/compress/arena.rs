@@ -109,6 +109,9 @@ impl ScratchArena {
         self.rngs.push(v);
     }
 
+    // repolint: no_alloc(start) — recycling hands buffers back to the
+    // pools; it must never allocate (that is the whole point of the
+    // arena's steady-state contract).
     /// Return a consumed message's buffers to the pools.
     pub fn recycle(&mut self, c: Compressed) {
         self.recycle_payload(c.payload);
@@ -131,6 +134,7 @@ impl ScratchArena {
             }
         }
     }
+    // repolint: no_alloc(end)
 }
 
 #[cfg(test)]

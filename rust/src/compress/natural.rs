@@ -17,10 +17,18 @@ pub fn natural_round(x: f32, rng: &mut Rng) -> f32 {
         return x;
     }
     let mag = x.abs();
-    let lo = 2f32.powi(mag.log2().floor() as i32);
+    // Exact floor-power-of-two straight from the bit pattern (libm's
+    // log2/powi rounding is platform-dependent, which the
+    // float-determinism lint bans in compress/): clearing the mantissa
+    // of a normal float leaves exactly 2^e; for a subnormal the top set
+    // bit of the raw word is already that power of two.
+    let b = mag.to_bits();
+    let lo = if b >= 0x0080_0000 {
+        f32::from_bits(b & 0xFF80_0000)
+    } else {
+        f32::from_bits(1u32 << (31 - b.leading_zeros()))
+    };
     let hi = lo * 2.0;
-    // guard against boundary rounding in log2/powi
-    let (lo, hi) = if mag < lo { (lo / 2.0, lo) } else { (lo, hi) };
     let p_hi = (mag - lo) / (hi - lo);
     let mag_q = if (rng.uniform() as f32) < p_hi { hi } else { lo };
     mag_q.copysign(x)

@@ -9,7 +9,7 @@
 //! driver in [`crate::train`] runs the *identical* engine with inline
 //! logical workers.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::{agg_kind, Server};
@@ -25,8 +25,8 @@ fn split_addr_args(args: &[String]) -> Result<(String, u32, Vec<String>)> {
     let mut id = 0u32;
     let mut rest = Vec::new();
     let mut i = 0;
-    while i < args.len() {
-        match args[i].as_str() {
+    while let Some(a) = args.get(i) {
+        match a.as_str() {
             "--addr" => {
                 let v = args.get(i + 1).ok_or_else(|| anyhow!("--addr needs a value"))?;
                 addr = Some(v.clone());
@@ -41,7 +41,7 @@ fn split_addr_args(args: &[String]) -> Result<(String, u32, Vec<String>)> {
                 i += 2;
             }
             _ => {
-                rest.push(args[i].clone());
+                rest.push(a.clone());
                 i += 1;
             }
         }
@@ -130,6 +130,9 @@ pub fn leader_main(args: &[String]) -> Result<()> {
 pub fn worker_main(args: &[String]) -> Result<()> {
     let (addr, id, rest) = split_addr_args(args)?;
     let cfg = cfg_from(&rest)?;
+    if id as usize >= cfg.workers {
+        bail!("worker id {id} outside the configured population 0..{}", cfg.workers);
+    }
     let rt = Runtime::load_default()?;
     let model = rt
         .meta
@@ -153,7 +156,8 @@ pub fn worker_main(args: &[String]) -> Result<()> {
             codec,
             |codec, ack| codec.on_ack(ack),
             |codec, step, params| {
-                let probs = if hetero { Some(class_probs[id as usize].as_slice()) } else { None };
+                let probs =
+                    if hetero { class_probs.get(id as usize).map(|v| v.as_slice()) } else { None };
                 let b = task.train_batch(cfg.seed, id as u64, step, probs);
                 let (loss, grad) = rt.grad_step(&model, params, &batch_x(&model, &b), &b.y)?;
                 let mut rng = Rng::for_stream(cfg.seed ^ 0xC0DE, id as u64, step);

@@ -41,6 +41,11 @@ use crate::transport::{
 };
 use crate::wire;
 
+// repolint: frame_layout(start) — everything down to the matching end
+// marker defines the v3 wire layout. The region is content-hashed into
+// tools/repolint's config: changing it without bumping
+// ROUND_FRAME_VERSION (and re-pinning the hash) fails the lint, so a
+// layout change can never silently reuse a version byte.
 /// Round-frame wire version byte: `0xA3` = "v3", introduced with the
 /// dropped-message recovery protocol (excluded-worker block + RESEND
 /// frames). Decoders reject any other value — in particular the v2 byte
@@ -350,6 +355,7 @@ pub fn decode_reply_from(frame: &Frame, expect_worker: u32) -> Result<Reply> {
     }
     Ok(Reply { step: msg.step as u64, worker: msg.worker, loss, comp: msg.comp })
 }
+// repolint: frame_layout(end)
 
 #[cfg(test)]
 mod tests {

@@ -584,7 +584,11 @@ impl<T: Transport> RoundEngine<T> {
         } else {
             None
         };
+        // repolint: allow(wall_clock) — real-time transport arm: recovery
+        // deadlines are wall-clock by construction; virtual mode never
+        // enters this branch (prop-tested replay stays pure).
         let round_start = Instant::now();
+        // repolint: allow(wall_clock) — real-time transport arm (see above).
         let mut window_start = Instant::now();
         let mut attempts = 0usize;
         loop {
@@ -643,6 +647,7 @@ impl<T: Transport> RoundEngine<T> {
                     col.resent += 1;
                 }
                 // the resent frames get a fresh wait window
+                // repolint: allow(wall_clock) — real-time transport arm (see above).
                 window_start = Instant::now();
             }
             // empty with fresh deaths: loop to re-evaluate who can

@@ -29,6 +29,7 @@ pub fn run_bitwise(rt: &Runtime, scale: &FigScale) -> Result<()> {
                 ..TrainConfig::default()
             };
             base.method = method.clone();
+            // repolint: allow(wall_clock) — progress logging only.
             let t = std::time::Instant::now();
             let cell = run_cell(rt, &base, method.clone(), workers, scale)?;
             println!(
@@ -67,6 +68,7 @@ pub fn run_rtn(rt: &Runtime, scale: &FigScale) -> Result<()> {
                 ..TrainConfig::default()
             };
             base.method = method.clone();
+            // repolint: allow(wall_clock) — progress logging only.
             let t = std::time::Instant::now();
             let cell = run_cell(rt, &base, method.clone(), workers, scale)?;
             println!(

@@ -241,6 +241,7 @@ fn run_scale_sweep(scale: &ScenarioScale) -> Result<()> {
                 .seed(7)
                 .build();
             let mut sim = RoundSim::new(cost, policy, AggKind::Fresh, bits, bits);
+            // repolint: allow(wall_clock) — progress logging only.
             let t = std::time::Instant::now();
             let mut active = 0usize;
             for _ in 0..ROUNDS {

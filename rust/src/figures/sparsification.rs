@@ -79,6 +79,7 @@ pub fn run(
                     ..TrainConfig::default()
                 };
                 base.method = method.clone();
+                // repolint: allow(wall_clock) — progress logging only.
                 let t = std::time::Instant::now();
                 let cell = run_cell(rt, &base, method.clone(), workers, scale)?;
                 println!(

@@ -119,6 +119,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     println!("run {}: model={} method={} M={} steps={} lr={}",
         cfg.run_id(), cfg.model, cfg.method, cfg.workers, cfg.steps, cfg.lr);
     println!("legend: {}", mlmc_dist::coordinator::scenario_legend(&cfg));
+    // repolint: allow(wall_clock) — progress logging only.
     let t = std::time::Instant::now();
     let r = train::run_with_csv(&rt, &cfg, Some(&csv))?;
     let (el, ea) = r

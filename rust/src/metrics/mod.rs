@@ -33,6 +33,8 @@ pub struct Curve {
 
 impl Curve {
     pub fn new(name: impl Into<String>) -> Self {
+        // repolint: allow(wall_clock) — diagnostics only: feeds the wall_ms
+        // column, never a decision the replay depends on.
         Curve { name: name.into(), points: Vec::new(), sink: None, start: Instant::now() }
     }
 
@@ -116,6 +118,7 @@ pub struct Timer(Instant);
 
 impl Timer {
     pub fn start() -> Self {
+        // repolint: allow(wall_clock) — diagnostics-only scoped timer.
         Timer(Instant::now())
     }
     pub fn ms(&self) -> f64 {

@@ -63,7 +63,7 @@ impl MlCtx for StopkCtx<'_> {
     }
 
     fn residual(&self, l: usize) -> Compressed {
-        debug_assert!(l >= 1 && l <= self.levels());
+        debug_assert!((1..=self.levels()).contains(&l));
         let (lo, hi) = segment_bounds(self.v.len(), self.s, l);
         let idx: Vec<u32> = self.order[lo..hi].to_vec();
         let val: Vec<f32> = idx.iter().map(|&i| self.v[i as usize]).collect();

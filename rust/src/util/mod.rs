@@ -2,6 +2,7 @@
 //! and filesystem/formatting helpers. The offline vendor set has no serde,
 //! so these are built in-tree (see DESIGN.md).
 
+pub mod detmath;
 pub mod json;
 
 use std::path::{Path, PathBuf};

@@ -31,7 +31,12 @@ struct CountingAlloc;
 static ARMED: AtomicBool = AtomicBool::new(false);
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to `System` — every method forwards its
+// arguments unchanged, so `System`'s GlobalAlloc contract (validity of
+// returned pointers, layout handling) is inherited verbatim; the counter
+// is a relaxed atomic side effect with no aliasing.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded to System.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         if ARMED.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
@@ -39,6 +44,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
         System.alloc(layout)
     }
 
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded to System.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         if ARMED.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
@@ -46,6 +52,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded to System.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         if ARMED.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
@@ -53,6 +60,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded to System.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         // frees are always allowed: recycling hands buffers back to the
         // arena, it never returns memory to the allocator mid-round

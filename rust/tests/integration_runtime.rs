@@ -52,7 +52,7 @@ fn eval_step_counts_bounded() {
     let y: Vec<i32> = (0..model.y_len()).map(|_| rng.below(model.n_classes) as i32).collect();
     let (loss, nc) = rt.eval_step(&model, &params, &ArgValue::I32(&x), &y).unwrap();
     assert!(loss.is_finite());
-    assert!(nc >= 0.0 && nc <= model.batch as f32);
+    assert!((0.0..=model.batch as f32).contains(&nc));
 }
 
 #[test]

@@ -1,0 +1,75 @@
+//! The repo's lint configuration, pinned as plain Rust constants (the
+//! crate is std-only, so the config is code, not TOML — and a config
+//! change is a reviewable source diff in the same commit as the change
+//! that needed it).
+
+/// Directories walked for `.rs` files (repo-relative, forward slashes).
+/// `rust/vendor/` is deliberately absent: the vendored stubs are not
+/// ours to lint.
+pub const SCAN_ROOTS: &[&str] =
+    &["rust/src", "rust/tests", "rust/benches", "examples", "tools/repolint/src"];
+
+/// Everything the scanner finds in these trees is linted; the per-rule
+/// scopes below narrow where each rule applies.
+pub struct Config {
+    /// wall_clock: `Instant::now` / `SystemTime::now` banned under this
+    /// prefix...
+    pub wall_clock_scope: Vec<String>,
+    /// ...except these prefixes (real-time transport + bench harness)
+    pub wall_clock_exempt: Vec<String>,
+    /// float_det: transcendental / FMA calls banned under these prefixes
+    pub float_det_scope: Vec<String>,
+    /// hash_iter: `HashMap`/`HashSet` banned under these prefixes
+    pub hash_iter_scope: Vec<String>,
+    /// rng_discipline: entropy-source tokens banned everywhere except
+    /// these prefixes (the seeded-constructor home)
+    pub rng_exempt: Vec<String>,
+    /// panic_free_leader: panics and indexing banned in these files
+    pub panic_free_scope: Vec<String>,
+    /// unsafe_ledger: exact expected `unsafe` token count per file; any
+    /// file with unsafe code must be listed here with its exact count
+    pub unsafe_ledger: Vec<(String, usize)>,
+    /// frame_pin: the file carrying the pinned wire-layout region
+    pub frame_file: String,
+    /// frame_pin: expected `ROUND_FRAME_VERSION` byte
+    pub frame_version: u8,
+    /// frame_pin: expected FNV-1a-64 of the layout region's code channel
+    /// (lines rstripped, blanks dropped, joined with `\n`)
+    pub frame_hash: u64,
+}
+
+fn strs(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+impl Config {
+    /// The configuration for this repository. Update the ledger / frame
+    /// pin here, in the same commit as the change that moves them.
+    pub fn repo() -> Config {
+        Config {
+            wall_clock_scope: strs(&["rust/src/"]),
+            wall_clock_exempt: strs(&["rust/src/transport/", "rust/src/benchlib"]),
+            float_det_scope: strs(&[
+                "rust/src/tensor/kernels.rs",
+                "rust/src/compress/",
+                "rust/src/netsim/",
+            ]),
+            hash_iter_scope: strs(&["rust/src/"]),
+            rng_exempt: strs(&["rust/src/tensor/rng.rs"]),
+            panic_free_scope: strs(&[
+                "rust/src/transport/tcp.rs",
+                "rust/src/coordinator/cluster.rs",
+            ]),
+            unsafe_ledger: vec![
+                ("rust/src/tensor/kernels.rs".to_string(), 18),
+                ("rust/src/transport/poll.rs".to_string(), 1),
+                ("rust/tests/alloc_zero.rs".to_string(), 5),
+            ],
+            frame_file: "rust/src/engine/framing.rs".to_string(),
+            frame_version: 0xA3,
+            // recompute with `cargo run -p repolint -- --frame-hash`
+            // after an intentional layout change, and bump the version
+            frame_hash: 0xefea_74ba_764b_dc5f,
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! repolint — determinism/safety static analysis for the mlmc-dist
+//! tree. Std-only and hermetic (no `syn`, no network deps): a
+//! string/comment/attribute-aware line scanner plus eight token-level
+//! rules that machine-check the invariants the property tests only
+//! check at runtime (wall-clock purity, float determinism, hash-order
+//! freedom, RNG discipline, the unsafe ledger, no-alloc fences, the
+//! pinned frame layout, and the panic-free leader).
+//!
+//! See README §"Static analysis & sanitizers" for the rule catalog and
+//! the inline-allow syntax.
+
+pub mod config;
+pub mod json;
+pub mod rules;
+pub mod scan;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use config::{Config, SCAN_ROOTS};
+use rules::{lint_source, AllowRec, Diag};
+
+pub struct Report {
+    pub diags: Vec<Diag>,
+    pub allows: Vec<AllowRec>,
+    /// actual non-test `unsafe` token counts, per file with any
+    pub unsafe_counts: BTreeMap<String, usize>,
+    /// `(version, hash)` extracted from the frame file, if found
+    pub frame: Option<(Option<u8>, u64)>,
+    pub files_scanned: usize,
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Repo-relative forward-slash path.
+fn rel(root: &Path, p: &Path) -> String {
+    let s = p.strip_prefix(root).unwrap_or(p).to_string_lossy().to_string();
+    s.replace('\\', "/")
+}
+
+/// Lint the whole tree rooted at `root` with the given config.
+pub fn lint_tree(root: &Path, cfg: &Config) -> Report {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for r in SCAN_ROOTS {
+        walk(&root.join(r), &mut files);
+    }
+    files.sort();
+
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut allows: Vec<AllowRec> = Vec::new();
+    let mut unsafe_counts: BTreeMap<String, usize> = BTreeMap::new();
+    let mut frame: Option<(Option<u8>, u64)> = None;
+    let mut files_scanned = 0usize;
+
+    for f in &files {
+        let path = rel(root, f);
+        let Ok(src) = std::fs::read_to_string(f) else {
+            diags.push(Diag {
+                rule: "io",
+                path: path.clone(),
+                line: 0,
+                col: 0,
+                msg: "unreadable file".to_string(),
+            });
+            continue;
+        };
+        files_scanned += 1;
+        let mut fl = lint_source(&path, &src, cfg);
+        diags.append(&mut fl.diags);
+        allows.append(&mut fl.allows);
+        if fl.unsafe_count > 0 {
+            unsafe_counts.insert(path.clone(), fl.unsafe_count);
+        }
+        if fl.frame.is_some() {
+            frame = fl.frame;
+        }
+    }
+
+    // ledger reconciliation: every file with unsafe must be pinned at
+    // its exact count, and every pinned file must still match
+    let pinned: BTreeMap<&str, usize> =
+        cfg.unsafe_ledger.iter().map(|(p, n)| (p.as_str(), *n)).collect();
+    for (path, n) in &unsafe_counts {
+        match pinned.get(path.as_str()) {
+            Some(exp) if exp == n => {}
+            Some(exp) => diags.push(Diag {
+                rule: "unsafe_ledger",
+                path: path.clone(),
+                line: 0,
+                col: 0,
+                msg: format!(
+                    "{n} unsafe tokens but the ledger pins {exp}: audit the \
+                     change, then update unsafe_ledger in tools/repolint/src/config.rs"
+                ),
+            }),
+            None => diags.push(Diag {
+                rule: "unsafe_ledger",
+                path: path.clone(),
+                line: 0,
+                col: 0,
+                msg: format!(
+                    "{n} unsafe tokens in a file the ledger does not list: new \
+                     unsafe needs an audit + a ledger entry in tools/repolint/src/config.rs"
+                ),
+            }),
+        }
+    }
+    for (path, exp) in &pinned {
+        if !unsafe_counts.contains_key(*path) {
+            diags.push(Diag {
+                rule: "unsafe_ledger",
+                path: path.to_string(),
+                line: 0,
+                col: 0,
+                msg: format!(
+                    "ledger pins {exp} unsafe tokens but the file has none \
+                     (or is gone): drop the stale entry"
+                ),
+            });
+        }
+    }
+    if frame.is_none() {
+        diags.push(Diag {
+            rule: "frame_pin",
+            path: cfg.frame_file.clone(),
+            line: 0,
+            col: 0,
+            msg: "frame file missing or its layout markers were never seen".to_string(),
+        });
+    }
+
+    diags.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    allows.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Report { diags, allows, unsafe_counts, frame, files_scanned }
+}

@@ -1,0 +1,147 @@
+//! CLI: lint the repo, print human diagnostics, write
+//! `results/LINT.json`, exit nonzero on any violation.
+//!
+//! Usage:
+//!   cargo run -p repolint                  # lint from the repo root
+//!   cargo run -p repolint -- --root DIR    # explicit root
+//!   cargo run -p repolint -- --frame-hash  # print the current frame
+//!                                          # layout hash (for re-pinning)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use repolint::config::Config;
+use repolint::json::esc;
+use repolint::{lint_tree, Report};
+
+fn find_root() -> Option<PathBuf> {
+    let mut d = std::env::current_dir().ok()?;
+    loop {
+        if d.join("ROADMAP.md").exists() && d.join("rust/src").is_dir() {
+            return Some(d);
+        }
+        if !d.pop() {
+            return None;
+        }
+    }
+}
+
+fn render_json(r: &Report) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": 1,\n");
+    s.push_str(&format!("  \"files_scanned\": {},\n", r.files_scanned));
+    s.push_str("  \"violations\": [\n");
+    for (i, d) in r.diags.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"rule\": {}, \"path\": {}, \"line\": {}, \"col\": {}, \"msg\": {}}}{}\n",
+            esc(d.rule),
+            esc(&d.path),
+            d.line,
+            d.col,
+            esc(&d.msg),
+            if i + 1 < r.diags.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"allows\": [\n");
+    for (i, a) in r.allows.iter().enumerate() {
+        let rules = a.rules.iter().map(|x| esc(x.as_str())).collect::<Vec<_>>().join(", ");
+        s.push_str(&format!(
+            "    {{\"path\": {}, \"line\": {}, \"rules\": [{}], \"reason\": {}}}{}\n",
+            esc(&a.path),
+            a.line,
+            rules,
+            esc(&a.reason),
+            if i + 1 < r.allows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"unsafe_ledger\": {\n");
+    let n = r.unsafe_counts.len();
+    for (i, (p, c)) in r.unsafe_counts.iter().enumerate() {
+        s.push_str(&format!(
+            "    {}: {}{}\n",
+            esc(p),
+            c,
+            if i + 1 < n { "," } else { "" }
+        ));
+    }
+    s.push_str("  },\n");
+    match r.frame {
+        Some((v, h)) => s.push_str(&format!(
+            "  \"frame\": {{\"version\": {}, \"layout_hash\": {}}}\n",
+            match v {
+                Some(b) => esc(&format!("0x{b:02X}")),
+                None => "null".to_string(),
+            },
+            esc(&format!("0x{h:016x}"))
+        )),
+        None => s.push_str("  \"frame\": null\n"),
+    }
+    s.push('}');
+    s.push('\n');
+    s
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut frame_hash_only = false;
+    let mut i = 0usize;
+    while let Some(a) = args.get(i) {
+        match a.as_str() {
+            "--root" => {
+                root = args.get(i + 1).map(PathBuf::from);
+                i += 2;
+            }
+            "--frame-hash" => {
+                frame_hash_only = true;
+                i += 1;
+            }
+            other => {
+                eprintln!("repolint: unknown argument {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let Some(root) = root.or_else(find_root) else {
+        eprintln!("repolint: could not locate the repo root (ROADMAP.md + rust/src)");
+        return ExitCode::from(2);
+    };
+    let cfg = Config::repo();
+    let report = lint_tree(&root, &cfg);
+
+    if frame_hash_only {
+        match report.frame {
+            Some((v, h)) => {
+                println!("frame version: {v:?}");
+                println!("frame layout hash: 0x{h:016x}");
+                return ExitCode::SUCCESS;
+            }
+            None => {
+                eprintln!("repolint: no frame layout markers found");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let results = root.join("results");
+    let _ = std::fs::create_dir_all(&results);
+    let json = render_json(&report);
+    if let Err(e) = std::fs::write(results.join("LINT.json"), &json) {
+        eprintln!("repolint: writing results/LINT.json failed: {e}");
+    }
+
+    for d in &report.diags {
+        eprintln!("{}:{}:{}: [{}] {}", d.path, d.line, d.col + 1, d.rule, d.msg);
+    }
+    println!(
+        "repolint: {} files, {} violation(s), {} inline allow(s)",
+        report.files_scanned,
+        report.diags.len(),
+        report.allows.len()
+    );
+    if report.diags.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,523 @@
+//! The eight rules. Each works on the scanner's code/comment channels —
+//! no AST — so the banned shapes are *token* shapes, chosen to be
+//! reliable under that constraint (see README §"Static analysis &
+//! sanitizers" for the catalog and the rationale of each).
+
+use crate::config::Config;
+use crate::scan::{allow_target, directives, scan, Directive, Scanned};
+
+#[derive(Debug)]
+pub struct Diag {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+}
+
+#[derive(Debug)]
+pub struct AllowRec {
+    pub rules: Vec<String>,
+    pub path: String,
+    pub line: usize,
+    pub reason: String,
+    pub used: bool,
+}
+
+pub struct FileLint {
+    pub diags: Vec<Diag>,
+    pub allows: Vec<AllowRec>,
+    /// `unsafe` tokens in non-test code (ledger input)
+    pub unsafe_count: usize,
+    /// `(version_byte, layout_hash)` when the file carries frame markers
+    pub frame: Option<(Option<u8>, u64)>,
+}
+
+pub const RULES: &[&str] = &[
+    "wall_clock",
+    "float_det",
+    "hash_iter",
+    "rng_discipline",
+    "unsafe_ledger",
+    "no_alloc_fence",
+    "frame_pin",
+    "panic_free_leader",
+];
+
+fn in_scope(path: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| path.starts_with(p.as_str()))
+}
+
+const FLOAT_DET_BANNED: &[&str] = &[
+    ".mul_add(",
+    ".ln(",
+    ".log(",
+    ".log2(",
+    ".log10(",
+    ".exp(",
+    ".exp2(",
+    ".exp_m1(",
+    ".ln_1p(",
+    ".sin(",
+    ".cos(",
+    ".tan(",
+    ".sin_cos(",
+    ".asin(",
+    ".acos(",
+    ".atan(",
+    ".atan2(",
+    ".sinh(",
+    ".cosh(",
+    ".tanh(",
+    ".powf(",
+    "fmadd",
+    "fnmadd",
+];
+
+const RNG_BANNED: &[&str] = &[
+    "thread_rng",
+    "from_entropy",
+    "StdRng",
+    "SmallRng",
+    "OsRng",
+    "getrandom",
+    "rand::random",
+    "RandomState",
+];
+
+const NO_ALLOC_BANNED: &[&str] = &["Vec::new", "vec!", ".to_vec(", "Box::new", ".collect("];
+
+const PANIC_BANNED: &[&str] =
+    &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// First match of any needle in `hay`, as `(col, needle)`.
+fn find_any<'a>(hay: &str, needles: &[&'a str]) -> Option<(usize, &'a str)> {
+    let mut best: Option<(usize, &'a str)> = None;
+    for n in needles {
+        if let Some(p) = hay.find(n) {
+            if best.is_none() || p < best.map(|(b, _)| b).unwrap_or(usize::MAX) {
+                best = Some((p, n));
+            }
+        }
+    }
+    best
+}
+
+/// Is `code[pos]` the start of the word `word` (ident-boundary both
+/// sides)?
+fn word_at(code: &str, pos: usize, word: &str) -> bool {
+    let b = code.as_bytes();
+    let before_ok = pos == 0 || {
+        let c = b[pos - 1] as char;
+        !(c.is_alphanumeric() || c == '_')
+    };
+    let end = pos + word.len();
+    let after_ok = end >= b.len() || {
+        let c = b[end] as char;
+        !(c.is_alphanumeric() || c == '_')
+    };
+    before_ok && after_ok
+}
+
+/// All ident-boundary occurrences of `word` in `code`.
+fn word_positions(code: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find(word) {
+        let pos = from + p;
+        if word_at(code, pos, word) {
+            out.push(pos);
+        }
+        from = pos + word.len();
+    }
+    out
+}
+
+/// `[` positions that look like slice/array indexing: directly preceded
+/// by an identifier char, `)` or `]`. Attributes (`#[`), array literals
+/// and types (`= [`, `&[`, `: [`) don't match; macros (`vec![`) don't
+/// match because `!` is not an identifier char.
+fn index_positions(code: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    for (p, &ch) in b.iter().enumerate() {
+        if ch == b'[' && p > 0 {
+            let prev = b[p - 1] as char;
+            if prev.is_alphanumeric() || prev == '_' || prev == ')' || prev == ']' {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+/// Does any comment within reach of line `idx` contain "safety" (ci)?
+/// Reach = the same line, plus preceding lines that are blank, pure
+/// comment, or attribute-only.
+fn has_safety_comment(s: &Scanned, idx: usize) -> bool {
+    let ci = |t: &str| t.to_ascii_lowercase().contains("safety");
+    if ci(&s.lines[idx].comment) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let code = s.lines[j].code.trim();
+        let attached = code.is_empty() || code.starts_with("#[") || code.starts_with("#![");
+        if !attached {
+            return false;
+        }
+        if ci(&s.lines[j].comment) {
+            return true;
+        }
+    }
+    false
+}
+
+/// FNV-1a 64 (offset 0xcbf29ce484222325, prime 0x100000001b3).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Hash of the frame-layout region: code-channel lines between the
+/// markers, rstripped, blanks dropped, joined with `\n`. Comment edits
+/// and string contents don't move the hash; any code change does.
+pub fn region_hash(s: &Scanned, start: usize, end: usize) -> u64 {
+    let mut body = String::new();
+    let mut first = true;
+    for l in &s.lines[start + 1..end] {
+        let t = l.code.trim_end();
+        if t.is_empty() {
+            continue;
+        }
+        if !first {
+            body.push('\n');
+        }
+        body.push_str(t);
+        first = false;
+    }
+    fnv1a64(body.as_bytes())
+}
+
+/// Lint one file's source text. `path` must be repo-relative with
+/// forward slashes.
+pub fn lint_source(path: &str, src: &str, cfg: &Config) -> FileLint {
+    let s = scan(src);
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut allows: Vec<AllowRec> = Vec::new();
+
+    // (target_line, rule) -> allow index, for suppression lookup
+    let mut allow_at: Vec<(usize, String, usize)> = Vec::new();
+    let dirs = directives(&s.lines);
+    let mut no_alloc_from: Option<usize> = None;
+    let mut no_alloc_regions: Vec<(usize, usize)> = Vec::new();
+    let mut frame_start: Option<usize> = None;
+    let mut frame_end: Option<usize> = None;
+    for (idx, d) in &dirs {
+        match d {
+            Directive::Allow { rules, reason } => {
+                let target = allow_target(&s.lines, *idx);
+                let rec = AllowRec {
+                    rules: rules.clone(),
+                    path: path.to_string(),
+                    line: *idx + 1,
+                    reason: reason.clone(),
+                    used: false,
+                };
+                let ai = allows.len();
+                for r in rules {
+                    allow_at.push((target, r.clone(), ai));
+                }
+                allows.push(rec);
+            }
+            Directive::NoAllocStart => {
+                if no_alloc_from.is_some() {
+                    diags.push(Diag {
+                        rule: "no_alloc_fence",
+                        path: path.to_string(),
+                        line: *idx + 1,
+                        col: 0,
+                        msg: "nested no_alloc(start)".to_string(),
+                    });
+                } else {
+                    no_alloc_from = Some(*idx);
+                }
+            }
+            Directive::NoAllocEnd => match no_alloc_from.take() {
+                Some(from) => no_alloc_regions.push((from, *idx)),
+                None => diags.push(Diag {
+                    rule: "no_alloc_fence",
+                    path: path.to_string(),
+                    line: *idx + 1,
+                    col: 0,
+                    msg: "no_alloc(end) without a start".to_string(),
+                }),
+            },
+            Directive::FrameStart => {
+                if frame_start.is_some() {
+                    diags.push(Diag {
+                        rule: "frame_pin",
+                        path: path.to_string(),
+                        line: *idx + 1,
+                        col: 0,
+                        msg: "duplicate frame_layout(start)".to_string(),
+                    });
+                }
+                frame_start = Some(*idx);
+            }
+            Directive::FrameEnd => frame_end = Some(*idx),
+            Directive::Malformed(m) => diags.push(Diag {
+                rule: "directive",
+                path: path.to_string(),
+                line: *idx + 1,
+                col: 0,
+                msg: m.clone(),
+            }),
+        }
+    }
+    if let Some(from) = no_alloc_from {
+        diags.push(Diag {
+            rule: "no_alloc_fence",
+            path: path.to_string(),
+            line: from + 1,
+            col: 0,
+            msg: "no_alloc(start) never closed".to_string(),
+        });
+    }
+
+    // suppression-aware reporting: consult the allow table first
+    #[allow(clippy::too_many_arguments)]
+    fn fire(
+        allow_at: &[(usize, String, usize)],
+        allows: &mut [AllowRec],
+        diags: &mut Vec<Diag>,
+        path: &str,
+        rule: &'static str,
+        line0: usize,
+        col: usize,
+        msg: String,
+    ) {
+        for (target, r, ai) in allow_at {
+            if *target == line0 && r == rule {
+                allows[*ai].used = true;
+                return;
+            }
+        }
+        diags.push(Diag { rule, path: path.to_string(), line: line0 + 1, col, msg });
+    }
+
+    let wall_scoped = in_scope(path, &cfg.wall_clock_scope)
+        && !in_scope(path, &cfg.wall_clock_exempt);
+    let float_scoped = in_scope(path, &cfg.float_det_scope);
+    let hash_scoped = in_scope(path, &cfg.hash_iter_scope);
+    let rng_scoped = !in_scope(path, &cfg.rng_exempt);
+    let panic_scoped = in_scope(path, &cfg.panic_free_scope);
+
+    let mut unsafe_count = 0usize;
+
+    for (i, l) in s.lines.iter().enumerate() {
+        if s.in_test[i] {
+            continue;
+        }
+        let code = l.code.as_str();
+
+        if wall_scoped {
+            if let Some((col, tok)) = find_any(code, &["Instant::now", "SystemTime::now"]) {
+                fire(
+                    &allow_at,
+                    &mut allows,
+                    &mut diags,
+                    path,
+                    "wall_clock",
+                    i,
+                    col,
+                    format!("{tok} outside transport/bench scope breaks virtual-replay purity"),
+                );
+            }
+        }
+        if float_scoped {
+            if let Some((col, tok)) = find_any(code, FLOAT_DET_BANNED) {
+                fire(
+                    &allow_at,
+                    &mut allows,
+                    &mut diags,
+                    path,
+                    "float_det",
+                    i,
+                    col,
+                    format!(
+                        "`{tok}` is not bit-deterministic across platforms; \
+                         route through util::detmath or use an exact formulation"
+                    ),
+                );
+            }
+        }
+        if hash_scoped {
+            if let Some((col, tok)) = find_any(code, &["HashMap", "HashSet"]) {
+                fire(
+                    &allow_at,
+                    &mut allows,
+                    &mut diags,
+                    path,
+                    "hash_iter",
+                    i,
+                    col,
+                    format!("{tok} iteration order is nondeterministic; use BTreeMap/sorted vecs"),
+                );
+            }
+        }
+        if rng_scoped {
+            if let Some((col, tok)) = find_any(code, RNG_BANNED) {
+                fire(
+                    &allow_at,
+                    &mut allows,
+                    &mut diags,
+                    path,
+                    "rng_discipline",
+                    i,
+                    col,
+                    format!("`{tok}`: entropy outside tensor/rng.rs seeded constructors"),
+                );
+            }
+        }
+        if panic_scoped {
+            if let Some((col, tok)) = find_any(code, PANIC_BANNED) {
+                fire(
+                    &allow_at,
+                    &mut allows,
+                    &mut diags,
+                    path,
+                    "panic_free_leader",
+                    i,
+                    col,
+                    format!("`{tok}` in a leader path: one bad frame must not kill the cluster"),
+                );
+            } else if let Some(col) = index_positions(code).first().copied() {
+                fire(
+                    &allow_at,
+                    &mut allows,
+                    &mut diags,
+                    path,
+                    "panic_free_leader",
+                    i,
+                    col,
+                    "slice/array indexing in a leader path can panic; use .get()".to_string(),
+                );
+            }
+        }
+        for pos in word_positions(code, "unsafe") {
+            unsafe_count += 1;
+            if !has_safety_comment(&s, i) {
+                fire(
+                    &allow_at,
+                    &mut allows,
+                    &mut diags,
+                    path,
+                    "unsafe_ledger",
+                    i,
+                    pos,
+                    "`unsafe` without a SAFETY comment (same line, preceding comment \
+                     block, or `# Safety` doc)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    // no-alloc fenced regions
+    for (from, to) in &no_alloc_regions {
+        for i in (*from + 1)..*to {
+            if s.in_test[i] {
+                continue;
+            }
+            if let Some((col, tok)) = find_any(&s.lines[i].code, NO_ALLOC_BANNED) {
+                fire(
+                    &allow_at,
+                    &mut allows,
+                    &mut diags,
+                    path,
+                    "no_alloc_fence",
+                    i,
+                    col,
+                    format!("`{tok}` inside a no_alloc fence (arena hot path must not allocate)"),
+                );
+            }
+        }
+    }
+
+    // frame pin
+    let mut frame: Option<(Option<u8>, u64)> = None;
+    if path == cfg.frame_file {
+        match (frame_start, frame_end) {
+            (Some(a), Some(b)) if a < b => {
+                let hash = region_hash(&s, a, b);
+                let mut version: Option<u8> = None;
+                for l in &s.lines[a + 1..b] {
+                    if let Some(p) = l.code.find("ROUND_FRAME_VERSION") {
+                        if let Some(h) = l.code[p..].find("0x") {
+                            let hexpos = p + h + 2;
+                            let hex: String = l.code[hexpos..]
+                                .chars()
+                                .take_while(|c| c.is_ascii_hexdigit())
+                                .collect();
+                            version = u8::from_str_radix(&hex, 16).ok();
+                        }
+                    }
+                }
+                frame = Some((version, hash));
+                if version != Some(cfg.frame_version) {
+                    diags.push(Diag {
+                        rule: "frame_pin",
+                        path: path.to_string(),
+                        line: a + 1,
+                        col: 0,
+                        msg: format!(
+                            "ROUND_FRAME_VERSION is {version:?}, config pins 0x{:02X}",
+                            cfg.frame_version
+                        ),
+                    });
+                } else if hash != cfg.frame_hash {
+                    diags.push(Diag {
+                        rule: "frame_pin",
+                        path: path.to_string(),
+                        line: a + 1,
+                        col: 0,
+                        msg: format!(
+                            "frame layout region hash 0x{hash:016x} != pinned \
+                             0x{:016x}: bump ROUND_FRAME_VERSION and re-pin \
+                             (cargo run -p repolint -- --frame-hash)",
+                            cfg.frame_hash
+                        ),
+                    });
+                }
+            }
+            _ => diags.push(Diag {
+                rule: "frame_pin",
+                path: path.to_string(),
+                line: 1,
+                col: 0,
+                msg: "frame_layout(start)/(end) markers missing or inverted".to_string(),
+            }),
+        }
+    }
+
+    // unused allows accrete silently — that defeats the inventory
+    for a in allows.iter() {
+        if !a.used {
+            diags.push(Diag {
+                rule: "directive",
+                path: path.to_string(),
+                line: a.line,
+                col: 0,
+                msg: format!("allow({}) suppresses nothing; remove it", a.rules.join(", ")),
+            });
+        }
+    }
+
+    FileLint { diags, allows, unsafe_count, frame }
+}

@@ -1,0 +1,334 @@
+//! Line/token scanner: splits Rust source into parallel per-line `code`
+//! and `comment` channels (columns preserved — every character lands in
+//! exactly one channel, as a space in the other), with string and char
+//! literal *contents* blanked out of the code channel so token searches
+//! can never match inside a literal. Handles line comments, nested block
+//! comments, normal/byte strings, raw strings (`r"…"`, `r#"…"#`, `br…`),
+//! char literals vs lifetimes, and multi-line strings. No `syn`, no
+//! dependencies — the scanner is the hermetic core the rules run on.
+
+/// One scanned source line, all three views column-aligned.
+pub struct Line {
+    /// code text; comments, string contents and char-literal contents
+    /// are spaces
+    pub code: String,
+    /// comment text (including the `//` / `/*` markers); code is spaces
+    pub comment: String,
+}
+
+/// A scanned file.
+pub struct Scanned {
+    pub lines: Vec<Line>,
+    /// per line: inside a `#[cfg(test)]`-gated item (brace-counted from
+    /// the attribute)
+    pub in_test: Vec<bool>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    Block(u32),
+    Str,
+    RawStr(usize),
+}
+
+pub fn scan(src: &str) -> Scanned {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut code = String::new();
+    let mut com = String::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // channel pushers: c goes verbatim into one channel, a space into
+    // the other, so columns stay aligned across channels
+    fn push_code(code: &mut String, com: &mut String, c: char) {
+        code.push(c);
+        com.push(' ');
+    }
+    fn push_com(code: &mut String, com: &mut String, c: char) {
+        code.push(' ');
+        com.push(c);
+    }
+    // literal contents: blank in BOTH channels (not code, not comment)
+    fn push_blank(code: &mut String, com: &mut String) {
+        code.push(' ');
+        com.push(' ');
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(Line { code: std::mem::take(&mut code), comment: std::mem::take(&mut com) });
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                let prev_ident = i > 0 && {
+                    let p = chars[i - 1];
+                    p.is_alphanumeric() || p == '_'
+                };
+                if c == '/' && next == '/' {
+                    push_com(&mut code, &mut com, '/');
+                    push_com(&mut code, &mut com, '/');
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    push_com(&mut code, &mut com, '/');
+                    push_com(&mut code, &mut com, '*');
+                    state = State::Block(1);
+                    i += 2;
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    // possible string prefix: r"…", r#"…, b"…", br#"…
+                    let mut j = i + 1;
+                    let mut is_raw = c == 'r';
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        is_raw = true;
+                        j += 1;
+                    }
+                    let mut hashes = 0usize;
+                    if is_raw {
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        // blank the prefix and the opening quote
+                        for _ in i..=j {
+                            push_blank(&mut code, &mut com);
+                        }
+                        i = j + 1;
+                        state = if is_raw { State::RawStr(hashes) } else { State::Str };
+                    } else {
+                        push_code(&mut code, &mut com, c);
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    push_blank(&mut code, &mut com);
+                    state = State::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    let n1 = chars.get(i + 1).copied();
+                    if n1 == Some('\\') {
+                        // escaped char literal: blank through the close
+                        push_blank(&mut code, &mut com);
+                        i += 1;
+                        while i < chars.len() {
+                            let d = chars[i];
+                            if d == '\n' {
+                                break; // malformed literal; don't eat the file
+                            }
+                            push_blank(&mut code, &mut com);
+                            i += 1;
+                            if d == '\\' {
+                                if i < chars.len() && chars[i] != '\n' {
+                                    push_blank(&mut code, &mut com);
+                                    i += 1;
+                                }
+                                continue;
+                            }
+                            if d == '\'' {
+                                break;
+                            }
+                        }
+                    } else if n1.is_some() && chars.get(i + 2) == Some(&'\'') {
+                        // plain 'x' char literal
+                        push_blank(&mut code, &mut com);
+                        push_blank(&mut code, &mut com);
+                        push_blank(&mut code, &mut com);
+                        i += 3;
+                    } else {
+                        // lifetime / loop label
+                        push_code(&mut code, &mut com, '\'');
+                        i += 1;
+                    }
+                } else {
+                    push_code(&mut code, &mut com, c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                push_com(&mut code, &mut com, c);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    push_com(&mut code, &mut com, '*');
+                    push_com(&mut code, &mut com, '/');
+                    i += 2;
+                    state = if depth <= 1 { State::Code } else { State::Block(depth - 1) };
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    push_com(&mut code, &mut com, '/');
+                    push_com(&mut code, &mut com, '*');
+                    i += 2;
+                    state = State::Block(depth + 1);
+                } else {
+                    push_com(&mut code, &mut com, c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    push_blank(&mut code, &mut com);
+                    i += 1;
+                    if i < chars.len() && chars[i] != '\n' {
+                        push_blank(&mut code, &mut com);
+                        i += 1;
+                    }
+                } else {
+                    push_blank(&mut code, &mut com);
+                    i += 1;
+                    if c == '"' {
+                        state = State::Code;
+                    }
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let closed = (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closed {
+                        for _ in 0..=hashes {
+                            push_blank(&mut code, &mut com);
+                        }
+                        i += 1 + hashes;
+                        state = State::Code;
+                    } else {
+                        push_blank(&mut code, &mut com);
+                        i += 1;
+                    }
+                } else {
+                    push_blank(&mut code, &mut com);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !com.is_empty() {
+        lines.push(Line { code, comment: com });
+    }
+    let in_test = mark_tests(&lines);
+    Scanned { lines, in_test }
+}
+
+/// Mark every line belonging to a `#[cfg(test)]`-gated item by counting
+/// braces in the code channel from the attribute onward.
+fn mark_tests(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        let dense: String = lines[i].code.chars().filter(|c| !c.is_whitespace()).collect();
+        if dense.contains("#[cfg(test)]") {
+            let mut depth: i64 = 0;
+            let mut seen_open = false;
+            let mut j = i;
+            while j < lines.len() {
+                in_test[j] = true;
+                for ch in lines[j].code.chars() {
+                    if ch == '{' {
+                        depth += 1;
+                        seen_open = true;
+                    } else if ch == '}' {
+                        depth -= 1;
+                    }
+                }
+                if seen_open && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    in_test
+}
+
+/// A parsed repolint control comment.
+pub enum Directive {
+    /// suppress the named rules on the directive's target line; the
+    /// reason is mandatory
+    Allow { rules: Vec<String>, reason: String },
+    NoAllocStart,
+    NoAllocEnd,
+    FrameStart,
+    FrameEnd,
+    Malformed(String),
+}
+
+const TAG: &str = "repolint:";
+
+/// Extract directives from the comment channel. Returns `(line_index,
+/// directive)` pairs in file order.
+pub fn directives(lines: &[Line]) -> Vec<(usize, Directive)> {
+    let mut out = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        let Some(p) = l.comment.find(TAG) else { continue };
+        let rest = l.comment[p + TAG.len()..].trim();
+        let d = if let Some(r) = rest.strip_prefix("allow(") {
+            match r.find(')') {
+                Some(close) => {
+                    let rules: Vec<String> = r[..close]
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect();
+                    let tail = r[close + 1..].trim_start();
+                    let reason = tail
+                        .strip_prefix('—')
+                        .or_else(|| tail.strip_prefix("--"))
+                        .or_else(|| tail.strip_prefix('-'))
+                        .map(str::trim)
+                        .unwrap_or("");
+                    if rules.is_empty() || reason.is_empty() {
+                        Directive::Malformed(
+                            "allow(...) needs a rule list and a `— reason`".to_string(),
+                        )
+                    } else {
+                        Directive::Allow { rules, reason: reason.to_string() }
+                    }
+                }
+                None => Directive::Malformed("unclosed allow(".to_string()),
+            }
+        } else if rest.starts_with("no_alloc(start)") {
+            Directive::NoAllocStart
+        } else if rest.starts_with("no_alloc(end)") {
+            Directive::NoAllocEnd
+        } else if rest.starts_with("frame_layout(start)") {
+            Directive::FrameStart
+        } else if rest.starts_with("frame_layout(end)") {
+            Directive::FrameEnd
+        } else {
+            Directive::Malformed(format!(
+                "unrecognized directive `{}`",
+                rest.chars().take(40).collect::<String>()
+            ))
+        };
+        out.push((idx, d));
+    }
+    out
+}
+
+/// The line an allow directive applies to: the directive's own line if
+/// it carries code, else the next line with non-blank code (comment
+/// continuation lines in between are skipped).
+pub fn allow_target(lines: &[Line], idx: usize) -> usize {
+    if !lines[idx].code.trim().is_empty() {
+        return idx;
+    }
+    let mut j = idx + 1;
+    while j < lines.len() {
+        if !lines[j].code.trim().is_empty() {
+            return j;
+        }
+        j += 1;
+    }
+    idx
+}

@@ -1,0 +1,461 @@
+//! Fixture corpus: every rule gets a known-bad snippet that must fire
+//! (with the right rule name and line) and an allow-suppressed twin
+//! that must stay quiet while landing in the allow inventory. The
+//! fixtures live in string literals here precisely because this tests/
+//! tree is outside repolint's own scan roots — directives in these
+//! strings are data, not live suppressions.
+//!
+//! Fixtures are raw strings opening with a newline, so fixture line N
+//! is source line N+1 (line 1 is the blank lead-in).
+
+use repolint::config::Config;
+use repolint::rules::{lint_source, FileLint};
+
+/// A minimal config whose scopes are easy to hit from fixture paths.
+fn cfg() -> Config {
+    let strs = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<String>>();
+    Config {
+        wall_clock_scope: strs(&["src/"]),
+        wall_clock_exempt: strs(&["src/transport/"]),
+        float_det_scope: strs(&["src/"]),
+        hash_iter_scope: strs(&["src/"]),
+        rng_exempt: strs(&["src/rng.rs"]),
+        panic_free_scope: strs(&["src/leader.rs"]),
+        unsafe_ledger: Vec::new(),
+        frame_file: "src/frame.rs".to_string(),
+        frame_version: 0x01,
+        frame_hash: 0,
+    }
+}
+
+fn rules_fired(fl: &FileLint) -> Vec<&'static str> {
+    fl.diags.iter().map(|d| d.rule).collect()
+}
+
+fn assert_clean_with_used_allow(fl: &FileLint, rule: &str) {
+    assert!(fl.diags.is_empty(), "expected suppression, got {:?}", fl.diags);
+    assert_eq!(fl.allows.len(), 1, "allow must land in the inventory");
+    assert!(fl.allows[0].used, "allow must be marked used");
+    assert!(fl.allows[0].rules.iter().any(|r| r == rule));
+    assert!(!fl.allows[0].reason.is_empty(), "reason is mandatory");
+}
+
+// ---- rule 1: wall_clock ------------------------------------------------
+
+const WALL_BAD: &str = r"
+fn f() {
+    let t = std::time::Instant::now();
+    let _ = t;
+}
+";
+
+#[test]
+fn wall_clock_fires_and_names_the_line() {
+    let fl = lint_source("src/a.rs", WALL_BAD, &cfg());
+    assert_eq!(rules_fired(&fl), ["wall_clock"]);
+    assert_eq!(fl.diags[0].line, 3);
+}
+
+#[test]
+fn wall_clock_allow_suppresses_and_is_inventoried() {
+    let src = r"
+fn f() {
+    // repolint: allow(wall_clock) -- fixture twin
+    let t = std::time::Instant::now();
+    let _ = t;
+}
+";
+    let fl = lint_source("src/a.rs", src, &cfg());
+    assert_clean_with_used_allow(&fl, "wall_clock");
+}
+
+#[test]
+fn wall_clock_exempt_prefix_is_quiet() {
+    let fl = lint_source("src/transport/t.rs", WALL_BAD, &cfg());
+    assert!(fl.diags.is_empty());
+}
+
+// ---- rule 2: float_det -------------------------------------------------
+
+#[test]
+fn float_det_fires_on_powf() {
+    let src = r"
+fn f(x: f64) -> f64 {
+    x.powf(2.0)
+}
+";
+    let fl = lint_source("src/k.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["float_det"]);
+    assert_eq!(fl.diags[0].line, 3);
+}
+
+#[test]
+fn float_det_allow_suppresses() {
+    let src = r"
+fn f(x: f64) -> f64 {
+    // repolint: allow(float_det) -- fixture twin
+    x.powf(2.0)
+}
+";
+    let fl = lint_source("src/k.rs", src, &cfg());
+    assert_clean_with_used_allow(&fl, "float_det");
+}
+
+// ---- rule 3: hash_iter -------------------------------------------------
+
+#[test]
+fn hash_iter_fires_on_hashmap() {
+    let src = r"
+use std::collections::HashMap;
+fn f() {}
+";
+    let fl = lint_source("src/h.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["hash_iter"]);
+    assert_eq!(fl.diags[0].line, 2);
+}
+
+#[test]
+fn hash_iter_allow_suppresses() {
+    let src = r"
+// repolint: allow(hash_iter) -- fixture twin
+use std::collections::HashMap;
+fn f() {}
+";
+    let fl = lint_source("src/h.rs", src, &cfg());
+    assert_clean_with_used_allow(&fl, "hash_iter");
+}
+
+// ---- rule 4: rng_discipline --------------------------------------------
+
+const RNG_BAD: &str = r"
+fn f() {
+    let r = rand::thread_rng();
+    let _ = r;
+}
+";
+
+#[test]
+fn rng_discipline_fires_outside_the_rng_module() {
+    let fl = lint_source("src/a.rs", RNG_BAD, &cfg());
+    assert_eq!(rules_fired(&fl), ["rng_discipline"]);
+    assert_eq!(fl.diags[0].line, 3);
+}
+
+#[test]
+fn rng_discipline_quiet_in_the_rng_module() {
+    let fl = lint_source("src/rng.rs", RNG_BAD, &cfg());
+    assert!(fl.diags.is_empty());
+}
+
+#[test]
+fn rng_discipline_allow_suppresses() {
+    let src = r"
+fn f() {
+    // repolint: allow(rng_discipline) -- fixture twin
+    let r = rand::thread_rng();
+    let _ = r;
+}
+";
+    let fl = lint_source("src/a.rs", src, &cfg());
+    assert_clean_with_used_allow(&fl, "rng_discipline");
+}
+
+// ---- rule 5: unsafe_ledger ---------------------------------------------
+
+#[test]
+fn unsafe_without_safety_comment_fires() {
+    let src = r"
+fn f(p: *mut u8) {
+    unsafe { *p = 0 };
+}
+";
+    let fl = lint_source("src/u.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["unsafe_ledger"]);
+    assert_eq!(fl.diags[0].line, 3);
+    assert_eq!(fl.unsafe_count, 1);
+}
+
+#[test]
+fn unsafe_with_safety_comment_is_quiet_and_counted() {
+    let src = r"
+fn f(p: *mut u8) {
+    // SAFETY: p is valid by contract
+    unsafe { *p = 0 };
+}
+";
+    let fl = lint_source("src/u.rs", src, &cfg());
+    assert!(fl.diags.is_empty());
+    assert_eq!(fl.unsafe_count, 1);
+}
+
+#[test]
+fn unsafe_ledger_allow_suppresses() {
+    let src = r"
+fn f(p: *mut u8) {
+    // repolint: allow(unsafe_ledger) -- fixture twin
+    unsafe { *p = 0 };
+}
+";
+    let fl = lint_source("src/u.rs", src, &cfg());
+    assert_clean_with_used_allow(&fl, "unsafe_ledger");
+    assert_eq!(fl.unsafe_count, 1);
+}
+
+// ---- rule 6: no_alloc_fence --------------------------------------------
+
+#[test]
+fn no_alloc_fence_fires_inside_the_region() {
+    let src = r"
+fn f() {
+    // repolint: no_alloc(start) -- hot region
+    let v: Vec<u32> = Vec::new();
+    let _ = v;
+    // repolint: no_alloc(end)
+}
+";
+    let fl = lint_source("src/n.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["no_alloc_fence"]);
+    assert_eq!(fl.diags[0].line, 4);
+}
+
+#[test]
+fn no_alloc_fence_quiet_outside_the_region() {
+    let src = r"
+fn f() {
+    let v: Vec<u32> = Vec::new();
+    let _ = v;
+}
+";
+    let fl = lint_source("src/n.rs", src, &cfg());
+    assert!(fl.diags.is_empty());
+}
+
+#[test]
+fn no_alloc_fence_allow_suppresses() {
+    let src = r"
+fn f() {
+    // repolint: no_alloc(start) -- hot region
+    // repolint: allow(no_alloc_fence) -- fixture twin
+    let v: Vec<u32> = Vec::new();
+    let _ = v;
+    // repolint: no_alloc(end)
+}
+";
+    let fl = lint_source("src/n.rs", src, &cfg());
+    assert_clean_with_used_allow(&fl, "no_alloc_fence");
+}
+
+#[test]
+fn no_alloc_fence_unclosed_start_is_a_violation() {
+    let src = r"
+fn f() {
+    // repolint: no_alloc(start) -- hot region
+}
+";
+    let fl = lint_source("src/n.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["no_alloc_fence"]);
+}
+
+// ---- rule 7: frame_pin -------------------------------------------------
+
+const FRAME_SRC: &str = r"
+// repolint: frame_layout(start) -- wire layout
+pub const ROUND_FRAME_VERSION: u8 = 0x01;
+pub struct Frame;
+// repolint: frame_layout(end)
+";
+
+#[test]
+fn frame_pin_fires_on_hash_mismatch() {
+    // cfg() pins frame_hash = 0, which the region never hashes to
+    let fl = lint_source("src/frame.rs", FRAME_SRC, &cfg());
+    assert_eq!(rules_fired(&fl), ["frame_pin"]);
+    let (version, hash) = fl.frame.expect("frame markers must be parsed");
+    assert_eq!(version, Some(0x01));
+    assert_ne!(hash, 0);
+}
+
+#[test]
+fn frame_pin_quiet_when_correctly_pinned() {
+    // the re-pin flow: read the hash off a first pass, pin it, re-lint
+    let first = lint_source("src/frame.rs", FRAME_SRC, &cfg());
+    let (_, hash) = first.frame.expect("frame markers must be parsed");
+    let mut pinned = cfg();
+    pinned.frame_hash = hash;
+    let fl = lint_source("src/frame.rs", FRAME_SRC, &pinned);
+    assert!(fl.diags.is_empty(), "got {:?}", fl.diags);
+}
+
+#[test]
+fn frame_pin_fires_on_version_mismatch() {
+    let first = lint_source("src/frame.rs", FRAME_SRC, &cfg());
+    let (_, hash) = first.frame.expect("frame markers must be parsed");
+    let mut pinned = cfg();
+    pinned.frame_hash = hash;
+    pinned.frame_version = 0x02;
+    let fl = lint_source("src/frame.rs", FRAME_SRC, &pinned);
+    assert_eq!(rules_fired(&fl), ["frame_pin"]);
+}
+
+#[test]
+fn frame_pin_comment_edits_do_not_move_the_hash() {
+    let reflowed = r"
+// repolint: frame_layout(start) -- wire layout
+// a new comment between the fields
+pub const ROUND_FRAME_VERSION: u8 = 0x01; // trailing note
+pub struct Frame;
+// repolint: frame_layout(end)
+";
+    let a = lint_source("src/frame.rs", FRAME_SRC, &cfg());
+    let b = lint_source("src/frame.rs", reflowed, &cfg());
+    assert_eq!(a.frame.map(|f| f.1), b.frame.map(|f| f.1));
+}
+
+#[test]
+fn frame_pin_code_edits_do_move_the_hash() {
+    let changed = FRAME_SRC.replace("pub struct Frame;", "pub struct Frame(u8);");
+    let a = lint_source("src/frame.rs", FRAME_SRC, &cfg());
+    let b = lint_source("src/frame.rs", &changed, &cfg());
+    assert_ne!(a.frame.map(|f| f.1), b.frame.map(|f| f.1));
+}
+
+// ---- rule 8: panic_free_leader -----------------------------------------
+
+#[test]
+fn panic_free_leader_fires_on_unwrap() {
+    let src = r"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+";
+    let fl = lint_source("src/leader.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["panic_free_leader"]);
+    assert_eq!(fl.diags[0].line, 3);
+}
+
+#[test]
+fn panic_free_leader_fires_on_slice_indexing() {
+    let src = r"
+fn f(xs: &[u32]) -> u32 {
+    xs[0]
+}
+";
+    let fl = lint_source("src/leader.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["panic_free_leader"]);
+    assert_eq!(fl.diags[0].line, 3);
+}
+
+#[test]
+fn panic_free_leader_does_not_flag_unwrap_or() {
+    let src = r"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap_or(0)
+}
+";
+    let fl = lint_source("src/leader.rs", src, &cfg());
+    assert!(fl.diags.is_empty(), "got {:?}", fl.diags);
+}
+
+#[test]
+fn panic_free_leader_allow_suppresses() {
+    let src = r"
+fn f(xs: &[u32]) -> u32 {
+    // repolint: allow(panic_free_leader) -- fixture twin
+    xs[0]
+}
+";
+    let fl = lint_source("src/leader.rs", src, &cfg());
+    assert_clean_with_used_allow(&fl, "panic_free_leader");
+}
+
+#[test]
+fn panic_free_leader_out_of_scope_is_quiet() {
+    let src = r"
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+";
+    let fl = lint_source("src/a.rs", src, &cfg());
+    assert!(fl.diags.is_empty());
+}
+
+// ---- directive machinery ------------------------------------------------
+
+#[test]
+fn malformed_directive_is_a_violation() {
+    let src = r"
+// repolint: allom(whatever)
+fn f() {}
+";
+    let fl = lint_source("src/d.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["directive"]);
+}
+
+#[test]
+fn allow_without_reason_is_malformed() {
+    let src = r"
+fn f() {
+    // repolint: allow(wall_clock)
+    let t = std::time::Instant::now();
+    let _ = t;
+}
+";
+    let fl = lint_source("src/d.rs", src, &cfg());
+    // the allow never forms, so the wall_clock hit also survives
+    let fired = rules_fired(&fl);
+    assert!(fired.contains(&"directive"), "got {fired:?}");
+    assert!(fired.contains(&"wall_clock"), "got {fired:?}");
+}
+
+#[test]
+fn unused_allow_is_a_violation() {
+    let src = r"
+// repolint: allow(wall_clock) -- suppresses nothing here
+fn f() {}
+";
+    let fl = lint_source("src/d.rs", src, &cfg());
+    assert_eq!(rules_fired(&fl), ["directive"]);
+    assert!(!fl.allows[0].used);
+}
+
+// ---- scanner discipline -------------------------------------------------
+
+#[test]
+fn banned_tokens_in_strings_and_comments_do_not_fire() {
+    let src = r#"
+fn f() -> &'static str {
+    // Instant::now would be banned as code
+    "Instant::now and HashMap live here"
+}
+"#;
+    let fl = lint_source("src/s.rs", src, &cfg());
+    assert!(fl.diags.is_empty(), "got {:?}", fl.diags);
+}
+
+#[test]
+fn raw_strings_are_blanked() {
+    let src = r##"
+fn f() -> &'static str {
+    r#"x.powf(2.0) .unwrap() HashMap"#
+}
+"##;
+    let fl = lint_source("src/s.rs", src, &cfg());
+    assert!(fl.diags.is_empty(), "got {:?}", fl.diags);
+}
+
+#[test]
+fn cfg_test_modules_are_skipped() {
+    let src = r"
+fn prod() {}
+
+#[cfg(test)]
+mod tests {
+    fn helper() {
+        let t = std::time::Instant::now();
+        let _ = t.elapsed();
+    }
+}
+";
+    let fl = lint_source("src/t.rs", src, &cfg());
+    assert!(fl.diags.is_empty(), "got {:?}", fl.diags);
+}
