@@ -23,12 +23,22 @@
 //!        tcp_cluster worker --addr 127.0.0.1:7477 --id 0
 //!        tcp_cluster worker --addr 127.0.0.1:7477 --id 2 --delay-ms 3000
 //!        tcp_cluster worker --addr 127.0.0.1:7477 --id 3 --die-after 4
+//!
+//!    Passing `--fanout F` to the leader switches the cluster to the
+//!    3-tier tree: the leader accepts one `subagg` process per group,
+//!    and the workers connect to their group's `--leaf-addr` instead of
+//!    the leader (the CI `cluster-smoke (tree)` path):
+//!
+//!        tcp_cluster leader --addr 127.0.0.1:7487 --workers 4 --fanout 2 ...
+//!        tcp_cluster subagg --addr 127.0.0.1:7487 --id 0 --leaf-addr 127.0.0.1:7488 \
+//!            --workers 4 --fanout 2 --timeout-ms 500
+//!        tcp_cluster worker --addr 127.0.0.1:7488 --id 0
 
 use std::net::TcpListener;
 use std::time::Duration;
 
 use mlmc_dist::config::TrainConfig;
-use mlmc_dist::coordinator::{agg_kind, build_encoder, Server};
+use mlmc_dist::coordinator::{agg_kind, build_encoder, Server, SubAggregator};
 use mlmc_dist::data::Task;
 use mlmc_dist::ef::GradientEncoder;
 use mlmc_dist::engine::{self, RoundEngine};
@@ -37,6 +47,7 @@ use mlmc_dist::tensor::Rng;
 use mlmc_dist::train::build_codec;
 use mlmc_dist::train::synthetic::Quadratic;
 use mlmc_dist::transport::tcp::{read_frame, TcpLeader, TcpWorker};
+use mlmc_dist::transport::{Transport, TreeLeader, TreePlan};
 use mlmc_dist::util;
 
 const M: usize = 4;
@@ -92,12 +103,14 @@ fn check_flags(args: &[String], known: &[&str]) {
 }
 
 /// Multi-process synthetic leader (the CI cluster-smoke entrypoint).
+/// `--fanout F` switches to the tree topology: the leader accepts one
+/// `subagg` process per group instead of the workers themselves.
 fn synth_leader(args: &[String]) -> anyhow::Result<()> {
     check_flags(
         args,
         &[
             "--addr", "--workers", "--steps", "--quorum", "--timeout-ms", "--resend-max",
-            "--exclude-after", "--readmit-every",
+            "--exclude-after", "--readmit-every", "--fanout",
         ],
     );
     let addr = arg_val(args, "--addr").unwrap_or_else(|| "127.0.0.1:7477".into());
@@ -114,18 +127,47 @@ fn synth_leader(args: &[String]) -> anyhow::Result<()> {
     cfg.resend_max = arg_num(args, "--resend-max", 1);
     cfg.exclude_after = arg_num(args, "--exclude-after", 2);
     cfg.readmit_every = arg_num(args, "--readmit-every", 4);
+    let tree = arg_val(args, "--fanout").is_some();
+    if tree {
+        cfg.set("topology", "tree").unwrap();
+        cfg.fanout = arg_num(args, "--fanout", 0);
+    }
     cfg.validate().map_err(anyhow::Error::msg)?;
 
-    println!("leader: waiting for {workers} workers on {addr}");
-    let (leader, local) = TcpLeader::bind_and_accept(&addr, workers)?;
-    println!("leader: cluster up at {local}");
+    if tree {
+        let plan = TreePlan::resolve(workers, cfg.fanout)?;
+        println!(
+            "leader: waiting for {} sub-aggregators on {addr} ({workers} leaves, fanout {})",
+            plan.groups(),
+            plan.fanout()
+        );
+        let (inner, local) = TcpLeader::bind_and_accept(&addr, plan.groups())?;
+        println!("leader: cluster up at {local}");
+        let leader = TreeLeader::new(inner, plan.leaves(), plan.fanout())?;
+        drive_rounds(leader, &cfg, steps, workers)
+    } else {
+        println!("leader: waiting for {workers} workers on {addr}");
+        let (leader, local) = TcpLeader::bind_and_accept(&addr, workers)?;
+        println!("leader: cluster up at {local}");
+        drive_rounds(leader, &cfg, steps, workers)
+    }
+}
+
+/// The leader's round loop, generic over the transport (flat star or
+/// tree of sub-aggregators) — the engine is identical either way.
+fn drive_rounds<T: Transport>(
+    transport: T,
+    cfg: &TrainConfig,
+    steps: usize,
+    workers: usize,
+) -> anyhow::Result<()> {
     let problem = synth_problem(workers);
     let server = Server::new(
         vec![0.0; SYNTH_D],
         Box::new(mlmc_dist::optim::Sgd { lr: cfg.lr }),
         agg_kind(&cfg.method),
     );
-    let mut eng = RoundEngine::from_cfg(leader, server, &cfg)?;
+    let mut eng = RoundEngine::from_cfg(transport, server, cfg)?;
     let mut rounds = 0usize;
     for step in 0..steps {
         let rep = eng.run_round()?;
@@ -151,6 +193,49 @@ fn synth_leader(args: &[String]) -> anyhow::Result<()> {
         excluded.len(),
         util::fmt_bits(server.total_bits)
     );
+    Ok(())
+}
+
+/// Multi-process synthetic sub-aggregator: connects upward to the
+/// leader as group `--id`, then accepts its leaf slice on
+/// `--leaf-addr`. Pure relay — no model, no optimizer, no runtime.
+fn synth_subagg(args: &[String]) -> anyhow::Result<()> {
+    check_flags(args, &["--addr", "--id", "--leaf-addr", "--workers", "--fanout", "--timeout-ms"]);
+    let addr = arg_val(args, "--addr").unwrap_or_else(|| "127.0.0.1:7477".into());
+    let Some(leaf_addr) = arg_val(args, "--leaf-addr") else {
+        anyhow::bail!("--leaf-addr is required");
+    };
+    let id: u32 = arg_num(args, "--id", 0);
+    let workers: usize = arg_num(args, "--workers", M);
+    let fanout: usize = arg_num(args, "--fanout", 0);
+    let timeout_ms: u64 = arg_num(args, "--timeout-ms", 1000);
+    let plan = TreePlan::resolve(workers, fanout)?;
+    if id as usize >= plan.groups() {
+        anyhow::bail!("subagg id {id} outside the planned groups 0..{}", plan.groups());
+    }
+    let range = plan.range(id);
+    // the leader may not be listening yet: retry for ~10 s
+    let mut up = None;
+    for _ in 0..100 {
+        match TcpWorker::connect(&addr, id) {
+            Ok(p) => {
+                up = Some(p);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let Some(up) = up else { anyhow::bail!("subagg {id}: leader at {addr} never came up") };
+    println!(
+        "subagg {id}: attached to {addr}, accepting leaves {}..{} on {leaf_addr}",
+        range.start, range.end
+    );
+    let (down, local) =
+        TcpLeader::bind_and_accept_range(&leaf_addr, range.start, (range.end - range.start) as usize)?;
+    println!("subagg {id}: leaf tier up at {local}");
+    let window = if timeout_ms > 0 { Some(Duration::from_millis(timeout_ms)) } else { None };
+    let rounds = SubAggregator::coded(up, down, range.start, 1, window)?.run()?;
+    println!("subagg {id}: shutdown after {rounds} rounds");
     Ok(())
 }
 
@@ -305,8 +390,9 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("leader") => synth_leader(&args[1..]),
+        Some("subagg") => synth_subagg(&args[1..]),
         Some("worker") => synth_worker(&args[1..]),
         None => xla_demo(),
-        Some(other) => anyhow::bail!("unknown mode {other:?} (leader | worker | no args)"),
+        Some(other) => anyhow::bail!("unknown mode {other:?} (leader | subagg | worker | no args)"),
     }
 }

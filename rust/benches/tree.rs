@@ -1,0 +1,178 @@
+//! Topology benchmark: event-heap rounds ([`RoundSim`]) at
+//! M ∈ {10³, 10⁴}, star vs hierarchical tree, measuring the claim the
+//! sub-aggregator tier exists for — the root's fan-in drops from M
+//! links to ~sqrt(M) — along with rounds/sec and simulated time so the
+//! relay hop's latency cost is visible next to its fan-in win.
+//!
+//! Three topologies per M:
+//!  - `star`:     the flat baseline, root fan-in = participants (= M)
+//!  - `tree`:     auto fanout (smallest f with f² ≥ M), replication 1
+//!  - `tree_r2`:  same tree with coded leaves, r = 2 replicas per
+//!                logical shard over the *same physical population*
+//!                (logical M halves; first on-time replica wins)
+//!
+//! Emits `results/BENCH_tree.json`. Smoke mode (CI):
+//! `MLMC_BENCH_MS=60 TREE_BENCH_M=1000 cargo bench -p mlmc-dist
+//! --bench tree`. The binary asserts in-process that every tree case's
+//! root fan-in lands strictly below its star twin's.
+
+use std::time::{Duration, Instant};
+
+use mlmc_dist::ef::AggKind;
+use mlmc_dist::engine::policy::{FullSync, ParticipationPolicy, StaleWeight};
+use mlmc_dist::netsim::{CostSpec, RoundSim, Topology};
+
+/// Constant-size message model, matched to `benches/scale.rs`: a
+/// 64-f32 dense uplink reply against a 1024-f32 broadcast.
+const UP_BITS: u64 = 32 * 64;
+const DOWN_BITS: u64 = 32 * 1024;
+
+struct Case {
+    m: usize,
+    topology: &'static str,
+    /// logical leaves the policy draws over (= m/replication)
+    logical_m: usize,
+    rounds: u64,
+    rounds_per_s: f64,
+    sim_s: f64,
+    /// links the root waited on in the last round (star: participants;
+    /// tree: active sub-aggregator groups)
+    root_fan_in: usize,
+    /// busiest sub-aggregator's leaf fan-in (0 for star rounds)
+    leaf_fan_in: usize,
+    /// uplink bits into the root in the last round
+    root_bits: u64,
+}
+
+fn policy() -> Box<dyn ParticipationPolicy> {
+    Box::new(FullSync::new(StaleWeight::Damp))
+}
+
+fn bench_topology(m: usize, name: &'static str, topology: Topology) -> Case {
+    let budget_ms: u64 = std::env::var("MLMC_BENCH_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let budget = Duration::from_millis(budget_ms);
+    let cost = CostSpec::preset("hetero")
+        .expect("known preset")
+        .workers(m)
+        .straggler(0.02)
+        .seed(7)
+        .build();
+    let mut sim = RoundSim::new(cost, policy(), AggKind::Fresh, UP_BITS, DOWN_BITS)
+        .with_topology(topology)
+        .expect("bench topology must resolve");
+    let logical_m = sim.logical_m();
+    let t = Instant::now();
+    let mut rounds = 0u64;
+    let mut root_fan_in = 0usize;
+    let mut leaf_fan_in = 0usize;
+    let mut root_bits = 0u64;
+    // at least 3 rounds even if one round blows the whole budget
+    while rounds < 3 || t.elapsed() < budget {
+        let rep = sim.run_round().expect("bench round must close");
+        root_fan_in = rep.root_fan_in();
+        leaf_fan_in = rep.tiers.first().map_or(0, |t| t.fan_in);
+        root_bits = rep.tiers.last().map_or(rep.bits, |t| t.forwarded_bits);
+        rounds += 1;
+    }
+    sim.drain_pending();
+    let wall = t.elapsed().as_secs_f64();
+    let rounds_per_s = if wall > 0.0 { rounds as f64 / wall } else { 0.0 };
+    println!(
+        "M={m:<7} {name:<8} logical={logical_m:<7} root_fan_in={root_fan_in:<6} \
+         leaf_fan_in={leaf_fan_in:<5} rounds={rounds:<6} {rounds_per_s:>9.1} rounds/s  sim={:.3}s",
+        sim.sim_now_s()
+    );
+    Case {
+        m,
+        topology: name,
+        logical_m,
+        rounds,
+        rounds_per_s,
+        sim_s: sim.sim_now_s(),
+        root_fan_in,
+        leaf_fan_in,
+        root_bits,
+    }
+}
+
+fn main() {
+    let ms_spec = std::env::var("TREE_BENCH_M").unwrap_or_else(|_| "1000,10000".into());
+    let mut ms: Vec<usize> = ms_spec.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+    ms.sort_unstable();
+    ms.dedup();
+    assert!(!ms.is_empty(), "TREE_BENCH_M={ms_spec:?} parsed to no population sizes");
+    println!("== bench suite: tree ==  M grid: {ms:?}");
+
+    let mut cases: Vec<Case> = Vec::new();
+    for &m in &ms {
+        cases.push(bench_topology(m, "star", Topology::Star));
+        cases.push(bench_topology(m, "tree", Topology::Tree { fanout: 0, replication: 1 }));
+        if m % 2 == 0 {
+            cases.push(bench_topology(m, "tree_r2", Topology::Tree { fanout: 0, replication: 2 }));
+        }
+    }
+
+    write_json(&cases);
+
+    // the fan-in contract, asserted in-binary: every tree case's root
+    // fan-in must land strictly below its star twin's
+    for &m in &ms {
+        let star = cases
+            .iter()
+            .find(|c| c.m == m && c.topology == "star")
+            .expect("star case present");
+        for tree in cases.iter().filter(|c| c.m == m && c.topology != "star") {
+            assert!(
+                tree.root_fan_in < star.root_fan_in,
+                "M={m}: {} root fan-in {} did not beat star's {}",
+                tree.topology,
+                tree.root_fan_in,
+                star.root_fan_in
+            );
+            println!(
+                "fan-in check: M={m} {} root waits on {} links vs star's {} ({}x reduction)",
+                tree.topology,
+                tree.root_fan_in,
+                star.root_fan_in,
+                star.root_fan_in / tree.root_fan_in.max(1)
+            );
+        }
+    }
+}
+
+fn write_json(cases: &[Case]) {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"suite\": \"tree\",\n");
+    let _ = writeln!(s, "  \"up_bits\": {UP_BITS},");
+    let _ = writeln!(s, "  \"down_bits\": {DOWN_BITS},");
+    s.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let comma = if i + 1 < cases.len() { "," } else { "" };
+        let _ = writeln!(
+            s,
+            "    {{\"m\": {}, \"topology\": {:?}, \"logical_m\": {}, \"rounds\": {}, \
+             \"rounds_per_s\": {:.3}, \"sim_s\": {:.6}, \"root_fan_in\": {}, \
+             \"leaf_fan_in\": {}, \"root_bits\": {}}}{}",
+            c.m,
+            c.topology,
+            c.logical_m,
+            c.rounds,
+            c.rounds_per_s,
+            c.sim_s,
+            c.root_fan_in,
+            c.leaf_fan_in,
+            c.root_bits,
+            comma
+        );
+    }
+    s.push_str("  ]\n}\n");
+    let path = mlmc_dist::util::results_dir().join("BENCH_tree.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -285,6 +285,17 @@ pub struct TrainConfig {
     /// probe an excluded worker for re-admission every this many rounds
     /// (0 = never re-admit)
     pub readmit_every: usize,
+    /// aggregation topology: "star" (flat, default) or "tree"
+    /// (sub-aggregator tier between the leader and the leaves; drops
+    /// leader fan-in from M to ~sqrt(M))
+    pub topology: String,
+    /// children per tree group (tree only; 0 = auto, the smallest f
+    /// with f^2 >= M)
+    pub fanout: usize,
+    /// physical replicas per logical leaf (tree only; 1 = uncoded.
+    /// With r > 1 each leaf's shard is served by r workers and the
+    /// first on-time reply wins — coded straggler redundancy)
+    pub replication: usize,
     /// run tag for logs/CSV
     pub tag: String,
 }
@@ -323,6 +334,9 @@ impl Default for TrainConfig {
             resend_max: 2,
             exclude_after: 0,
             readmit_every: 8,
+            topology: "star".into(),
+            fanout: 0,
+            replication: 1,
             tag: String::new(),
         }
     }
@@ -391,6 +405,9 @@ impl TrainConfig {
             "resend_max" => self.resend_max = p(val, key)?,
             "exclude_after" => self.exclude_after = p(val, key)?,
             "readmit_every" => self.readmit_every = p(val, key)?,
+            "topology" => self.topology = val.to_string(),
+            "fanout" => self.fanout = p(val, key)?,
+            "replication" => self.replication = p(val, key)?,
             "tag" => self.tag = val.to_string(),
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -493,6 +510,38 @@ impl TrainConfig {
         if !(self.round_timeout >= 0.0 && self.round_timeout.is_finite()) {
             return Err("round_timeout must be a finite number of seconds >= 0".into());
         }
+        if self.topology != "star" && self.topology != "tree" {
+            return Err(format!(
+                "unknown topology {:?} (known: \"star\", \"tree\")",
+                self.topology
+            ));
+        }
+        if self.replication == 0 {
+            return Err("replication must be >= 1".into());
+        }
+        if self.topology == "star" {
+            if self.fanout != 0 {
+                return Err("fanout is a tree knob (set topology = \"tree\" or drop it)".into());
+            }
+            if self.replication != 1 {
+                return Err(
+                    "replication is a tree knob (set topology = \"tree\" or drop it)".into()
+                );
+            }
+        } else {
+            if self.workers % self.replication != 0 {
+                return Err(format!(
+                    "workers {} is not divisible by replication {} (each logical leaf \
+                     needs exactly r physical replicas)",
+                    self.workers, self.replication
+                ));
+            }
+            crate::transport::tree::TreePlan::resolve(
+                self.workers / self.replication,
+                self.fanout,
+            )
+            .map_err(|e| e.to_string())?;
+        }
         if self.exclude_after > 0 && self.workers == 1 {
             return Err("exclude_after needs at least 2 workers (excluding the only worker \
                         would leave every round empty)"
@@ -583,6 +632,16 @@ impl TrainConfig {
         }
         if self.exclude_after > 0 {
             scenario.push_str(&format!("_ex{}", self.exclude_after));
+        }
+        if self.topology == "tree" {
+            if self.fanout > 0 {
+                scenario.push_str(&format!("_tree{}", self.fanout));
+            } else {
+                scenario.push_str("_tree");
+            }
+            if self.replication > 1 {
+                scenario.push_str(&format!("_r{}", self.replication));
+            }
         }
         let tag = if self.tag.is_empty() { String::new() } else { format!("_{}", self.tag) };
         format!(
@@ -892,6 +951,46 @@ mod tests {
         assert!(c.validate().is_err());
         c.set("stale_decay", "0").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn topology_knobs_parse_validate_and_name_runs() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.topology, "star");
+        assert_eq!((c.fanout, c.replication), (0, 1));
+        // tree with auto fanout gets its own CSV namespace
+        c.set("topology", "tree").unwrap();
+        c.validate().unwrap();
+        assert!(c.run_id().ends_with("_tree"), "{}", c.run_id());
+        // explicit fanout and replication are part of the name
+        c.set("workers", "8").unwrap();
+        c.set("fanout", "4").unwrap();
+        c.set("replication", "2").unwrap();
+        c.validate().unwrap();
+        assert!(c.run_id().ends_with("_tree4_r2"), "{}", c.run_id());
+        // bad values are loud
+        assert!(c.set("topology", "ring").is_ok(), "set defers to validate");
+        assert!(c.validate().unwrap_err().contains("unknown topology"));
+        c.set("topology", "tree").unwrap();
+        c.set("replication", "3").unwrap();
+        assert!(c.validate().unwrap_err().contains("not divisible"), "8 % 3 != 0");
+        c.set("replication", "0").unwrap();
+        assert!(c.validate().is_err());
+        // tree-only knobs are rejected under the star topology
+        let mut c = TrainConfig::default();
+        c.set("fanout", "4").unwrap();
+        assert!(c.validate().unwrap_err().contains("tree knob"));
+        let mut c = TrainConfig::default();
+        c.set("replication", "2").unwrap();
+        assert!(c.validate().unwrap_err().contains("tree knob"));
+        // and round-trip through TOML
+        let cfg = TrainConfig::from_toml(
+            "[train]\ntopology = \"tree\"\nfanout = 2\nreplication = 2\nworkers = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology, "tree");
+        assert_eq!((cfg.fanout, cfg.replication), (2, 2));
+        cfg.validate().unwrap();
     }
 
     #[test]

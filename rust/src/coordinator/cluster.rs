@@ -12,13 +12,14 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::TrainConfig;
-use crate::coordinator::{agg_kind, Server};
+use crate::coordinator::{agg_kind, Server, SubAggregator};
 use crate::data::{dirichlet_class_probs, Task};
 use crate::engine::{self, RoundEngine};
-use crate::runtime::Runtime;
+use crate::runtime::{ModelMeta, Runtime};
 use crate::tensor::Rng;
 use crate::train::{batch_x, build_codec, evaluate};
 use crate::transport::tcp::{TcpLeader, TcpWorker};
+use crate::transport::{Transport, TreeLeader, TreePlan};
 
 fn split_addr_args(args: &[String]) -> Result<(String, u32, Vec<String>)> {
     let mut addr = None;
@@ -63,6 +64,11 @@ fn cfg_from(rest: &[String]) -> Result<TrainConfig> {
 }
 
 /// Leader process: owns the parameters and the optimizer, drives rounds.
+///
+/// Under `topology = "tree"` the leader accepts one connection per
+/// *sub-aggregator group* (hello ids `0..groups`) and wraps the socket
+/// star in a [`TreeLeader`], so the engine still sees a flat set of
+/// leaf workers while the leader's socket fan-in drops to ~sqrt(M).
 pub fn leader_main(args: &[String]) -> Result<()> {
     let (addr, _, rest) = split_addr_args(args)?;
     let cfg = cfg_from(&rest)?;
@@ -74,19 +80,49 @@ pub fn leader_main(args: &[String]) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown model {:?}", cfg.model))?
         .clone();
     let task = Task::for_model(&model, 42);
-
-    println!("leader: waiting for {} workers on {addr}", cfg.workers);
     println!("leader: scenario {}", crate::coordinator::scenario_legend(&cfg));
-    let (leader, local) = TcpLeader::bind_and_accept(&addr, cfg.workers)?;
-    println!("leader: cluster up at {local}");
+    if cfg.topology == "tree" {
+        if cfg.replication != 1 {
+            bail!(
+                "TCP tree runs are uncoded (replication = 1); coded leaves live in the \
+                 simulator (`topology=tree` virtual runs) and the local tree harness"
+            );
+        }
+        let plan = TreePlan::resolve(cfg.workers, cfg.fanout)?;
+        println!(
+            "leader: waiting for {} sub-aggregators on {addr} ({} leaves, fanout {})",
+            plan.groups(),
+            plan.leaves(),
+            plan.fanout()
+        );
+        let (inner, local) = TcpLeader::bind_and_accept(&addr, plan.groups())?;
+        println!("leader: cluster up at {local}");
+        let tree = TreeLeader::new(inner, plan.leaves(), plan.fanout())?;
+        drive_rounds(tree, &cfg, &rt, &model, &task)
+    } else {
+        println!("leader: waiting for {} workers on {addr}", cfg.workers);
+        let (leader, local) = TcpLeader::bind_and_accept(&addr, cfg.workers)?;
+        println!("leader: cluster up at {local}");
+        drive_rounds(leader, &cfg, &rt, &model, &task)
+    }
+}
 
+/// The leader's round loop, generic over the transport (flat
+/// [`TcpLeader`] star or [`TreeLeader`] over sub-aggregators).
+fn drive_rounds<T: Transport>(
+    transport: T,
+    cfg: &TrainConfig,
+    rt: &Runtime,
+    model: &ModelMeta,
+    task: &Task,
+) -> Result<()> {
     let server = Server::new(
         model.init_params(cfg.seed),
         crate::optim::build(&cfg.optimizer, cfg.lr, model.param_count),
         agg_kind(&cfg.method),
     )
     .with_threads(cfg.threads);
-    let mut eng = RoundEngine::from_cfg(leader, server, &cfg)?;
+    let mut eng = RoundEngine::from_cfg(transport, server, cfg)?;
     for step in 0..cfg.steps {
         let rep = eng.run_round()?;
         if rep.gave_up > 0 || rep.resent > 0 || rep.dead > 0 {
@@ -100,7 +136,7 @@ pub fn leader_main(args: &[String]) -> Result<()> {
             );
         }
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-            let (el, ea) = evaluate(&rt, &model, &task, eng.params(), cfg.eval_batches)?;
+            let (el, ea) = evaluate(rt, model, task, eng.params(), cfg.eval_batches)?;
             println!(
                 "step {:>5}  train_loss {:.4}  eval_loss {:.4}  eval_acc {:.4}  bits {}  sim_t {:.3}s",
                 step + 1,
@@ -121,6 +157,59 @@ pub fn leader_main(args: &[String]) -> Result<()> {
         sim,
         excluded
     );
+    Ok(())
+}
+
+/// Sub-aggregator process: the middle tier of a `topology = "tree"`
+/// cluster. `--addr` is the leader, `--id` this node's group id,
+/// `--leaf-addr` where its own leaf slice connects. It relays the round
+/// frames verbatim and forwards one combined, attributed batch per
+/// round — no runtime, no model, no optimizer state.
+pub fn subagg_main(args: &[String]) -> Result<()> {
+    let (addr, id, rest) = split_addr_args(args)?;
+    let mut leaf_addr = None;
+    let mut cfg_args = Vec::new();
+    let mut i = 0;
+    while let Some(a) = rest.get(i) {
+        if a == "--leaf-addr" {
+            let v = rest.get(i + 1).ok_or_else(|| anyhow!("--leaf-addr needs a value"))?;
+            leaf_addr = Some(v.clone());
+            i += 2;
+        } else {
+            cfg_args.push(a.clone());
+            i += 1;
+        }
+    }
+    let leaf_addr = leaf_addr.ok_or_else(|| anyhow!("--leaf-addr is required"))?;
+    let cfg = cfg_from(&cfg_args)?;
+    if cfg.topology != "tree" {
+        bail!("subagg mode needs topology=tree (got {:?})", cfg.topology);
+    }
+    let r = cfg.replication;
+    let plan = TreePlan::resolve(cfg.workers / r, cfg.fanout)?;
+    if id as usize >= plan.groups() {
+        bail!("subagg id {id} outside the planned groups 0..{}", plan.groups());
+    }
+    let range = plan.range(id);
+    let leaves = (range.end - range.start) as usize;
+    // hello first, so the leader's accept loop can count us before we
+    // start our own accept loop for the leaf slice
+    let up = TcpWorker::connect(&addr, id)?;
+    println!(
+        "subagg {id}: attached to leader at {addr}; accepting leaves {}..{} (x{r}) on {leaf_addr}",
+        range.start, range.end
+    );
+    let (down, local) =
+        TcpLeader::bind_and_accept_range(&leaf_addr, range.start * r as u32, leaves * r)?;
+    println!("subagg {id}: leaf tier up at {local}");
+    let window = if cfg.round_timeout > 0.0 {
+        Some(std::time::Duration::from_secs_f64(cfg.round_timeout))
+    } else {
+        None
+    };
+    let node = SubAggregator::coded(up, down, range.start, r, window)?;
+    let rounds = node.run()?;
+    println!("subagg {id}: shutdown after {rounds} rounds");
     Ok(())
 }
 

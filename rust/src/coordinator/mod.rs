@@ -4,8 +4,10 @@
 
 pub mod cluster;
 pub mod method;
+pub mod subagg;
 
 pub use method::{agg_kind, build_encoder, legend, scenario_legend, sparsify_k};
+pub use subagg::SubAggregator;
 
 use crate::compress::Compressed;
 use crate::ef::AggKind;

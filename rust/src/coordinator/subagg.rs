@@ -1,0 +1,430 @@
+//! Sub-aggregator: the middle tier of the hierarchical aggregation
+//! tree. It speaks the **same v3 round frame** on both sides — leaf
+//! replies and leader announcements cross it unmodified — so the
+//! engine, the EF shadow/ack contract, and the recovery ladder all
+//! compose through the tree without a protocol change:
+//!
+//! ```text
+//!   leader ── params ──▶ subagg ── params (verbatim) ──▶ leaves
+//!   leader ◀─ batch ──── subagg ◀─ replies (attributed) ─ leaves
+//! ```
+//!
+//! Each round the node relays the announcement downward, gathers the
+//! replies of the leaves **it owns that are participants**, and
+//! forwards ONE combined message upward ([`encode_batch`]): the leader
+//! sees `groups ≈ √M` peers instead of `M`, while every leaf message
+//! stays attributed to its worker, so the per-worker shadow accounting
+//! at the root is bit-identical to the flat star (a numeric pre-reduce
+//! here would reorder float sums and break that identity). Terminal
+//! acks ride the next round frame and are relayed down unchanged.
+//!
+//! **Coded leaves.** With `replication = r > 1`, each *logical* leaf id
+//! `l` is served by the `r` physical replicas `l*r .. l*r + r`
+//! (the same mapping [`crate::netsim`] prices): the first on-time
+//! reply wins, the losers' duplicates are dropped right here, and a
+//! logical leaf is only reported dead once **every** replica is gone —
+//! stragglers become a coding problem instead of a latency tax.
+//!
+//! Id spaces: the node owns the logical slice `base .. base + leaves`
+//! of the tree's global id space, and its down transport must address
+//! the physical slice `base*r .. (base + leaves)*r` (what
+//! [`crate::transport::channel::star_from`] and
+//! [`crate::transport::tcp::TcpLeader::bind_and_accept_range`]
+//! produce).
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::engine::{decode_resend, decode_round};
+use crate::transport::tree::encode_batch;
+use crate::transport::{Frame, FrameKind, Transport, WorkerLink};
+
+/// One sub-aggregator node: `up` is its worker-shaped link to the tier
+/// above, `down` its leader-shaped transport over its leaf slice.
+pub struct SubAggregator<U: WorkerLink, D: Transport> {
+    up: U,
+    down: D,
+    /// global id of the first logical leaf this node owns
+    base: u32,
+    /// physical replicas per logical leaf (≥ 1)
+    replication: usize,
+    /// real-time gather window per round; `None` waits indefinitely.
+    /// Keep it shorter than the root's round deadline — the batch only
+    /// travels up once the window closes on a straggling leaf.
+    window: Option<Duration>,
+    /// physical replicas confirmed dead, by down-transport slot
+    dead_phys: Vec<bool>,
+    /// logical leaves whose death was already reported upward
+    reported_dead: Vec<bool>,
+    rounds: u64,
+    forwarded_frames: u64,
+    forwarded_bits: u64,
+}
+
+impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
+    /// Unreplicated node: one physical worker per logical leaf.
+    pub fn new(up: U, down: D, base: u32) -> Result<Self> {
+        Self::coded(up, down, base, 1, None)
+    }
+
+    /// Coded node: `replication` physical replicas per logical leaf.
+    pub fn coded(
+        up: U,
+        down: D,
+        base: u32,
+        replication: usize,
+        window: Option<Duration>,
+    ) -> Result<Self> {
+        if replication == 0 {
+            bail!("sub-aggregator replication must be >= 1");
+        }
+        let phys = down.workers();
+        if phys == 0 {
+            bail!("sub-aggregator has no leaves");
+        }
+        if phys % replication != 0 {
+            bail!("{phys} physical leaves are not divisible by replication {replication}");
+        }
+        Ok(SubAggregator {
+            up,
+            down,
+            base,
+            replication,
+            window,
+            dead_phys: vec![false; phys],
+            reported_dead: vec![false; phys / replication],
+            rounds: 0,
+            forwarded_frames: 0,
+            forwarded_bits: 0,
+        })
+    }
+
+    /// Logical leaves this node owns.
+    pub fn leaves(&self) -> usize {
+        self.down.workers() / self.replication
+    }
+
+    /// `(frames forwarded upward, bits forwarded upward)` so far.
+    pub fn relay_stats(&self) -> (u64, u64) {
+        (self.forwarded_frames, self.forwarded_bits)
+    }
+
+    /// Rounds served so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Serve rounds until the tier above says shutdown; returns the
+    /// number of rounds served. Shutdown is relayed to the leaves
+    /// before this returns, so the whole subtree exits cleanly.
+    pub fn run(mut self) -> Result<u64> {
+        loop {
+            let frame = self.up.recv()?;
+            match frame.kind {
+                FrameKind::Shutdown => {
+                    self.down.shutdown()?;
+                    return Ok(self.rounds);
+                }
+                FrameKind::Params => self.serve_round(&frame)?,
+                FrameKind::Resend => self.serve_resend(&frame)?,
+                other => bail!("sub-aggregator: unexpected {other} frame from the leader"),
+            }
+        }
+    }
+
+    /// The down-transport slot of a global physical id (`None` when the
+    /// id is not in this node's slice).
+    fn slot(&self, phys: u32) -> Option<usize> {
+        let s = phys.checked_sub(self.base * self.replication as u32)? as usize;
+        (s < self.dead_phys.len()).then_some(s)
+    }
+
+    fn mark_phys_dead(&mut self, phys: u32) {
+        if let Some(s) = self.slot(phys) {
+            if let Some(d) = self.dead_phys.get_mut(s) {
+                *d = true;
+            }
+        }
+    }
+
+    /// Global ids of logical leaves that just became fully dead (every
+    /// replica gone) and have not been reported upward yet. Each leaf
+    /// is reported exactly once, mirroring the transports' contract.
+    fn drain_dead_logical(&mut self) -> Vec<u32> {
+        let r = self.replication;
+        let mut dead = Vec::new();
+        for (j, reported) in self.reported_dead.iter_mut().enumerate() {
+            if *reported {
+                continue;
+            }
+            let all_dead = self.dead_phys.iter().skip(j * r).take(r).all(|d| *d);
+            if all_dead {
+                *reported = true;
+                dead.push(self.base + j as u32);
+            }
+        }
+        dead
+    }
+
+    /// Relay the round announcement, gather the owned participants'
+    /// replies, and forward them as one attributed batch. A node owning
+    /// no participant this round stays silent: the tier above only
+    /// gathers from groups that owe it leaves.
+    fn serve_round(&mut self, frame: &Frame) -> Result<()> {
+        self.down.broadcast(frame)?;
+        let round = decode_round(frame)?;
+        self.rounds += 1;
+        let lo = self.base;
+        let hi = lo + self.leaves() as u32;
+        let local: Vec<u32> =
+            round.participants.iter().copied().filter(|id| (lo..hi).contains(id)).collect();
+        if local.is_empty() {
+            return Ok(());
+        }
+        let (arrived, dead) = self.collect(&local)?;
+        self.send_up(&dead, arrived)
+    }
+
+    /// Gather one reply per logical leaf in `local` (sorted global
+    /// ids). Virtual mode blocks for every replica and keeps the first
+    /// per leaf; real time polls until the window goes quiet, so the
+    /// batch carries whatever arrived on time plus newly-dead leaves.
+    fn collect(&mut self, local: &[u32]) -> Result<(Vec<(u32, Frame)>, Vec<u32>)> {
+        let r = self.replication as u32;
+        if !self.down.is_real_time() {
+            // lock-step: every replica answers; first reply per logical
+            // leaf wins, the losers' duplicates are dropped here (the
+            // root's dedupe/bits-once path never sees them)
+            let phys: Vec<u32> =
+                local.iter().flat_map(|&l| (0..r).map(move |rho| l * r + rho)).collect();
+            let replies = self.down.gather(&phys)?;
+            let mut covered = vec![false; local.len()];
+            let mut out = Vec::with_capacity(local.len());
+            for (tag, f) in replies {
+                let logical = tag / r;
+                if let Ok(i) = local.binary_search(&logical) {
+                    if let Some(c) = covered.get_mut(i) {
+                        if !*c {
+                            *c = true;
+                            out.push((logical, f));
+                            continue;
+                        }
+                    }
+                }
+                self.down.recycle_frame(f);
+            }
+            return Ok((out, Vec::new()));
+        }
+        let mut covered = vec![false; local.len()];
+        let mut out: Vec<(u32, Frame)> = Vec::new();
+        let mut dead_logical: Vec<u32> = Vec::new();
+        loop {
+            // live replicas of still-uncovered leaves
+            let mut outstanding = Vec::new();
+            for (i, &l) in local.iter().enumerate() {
+                if covered.get(i).copied().unwrap_or(true) {
+                    continue;
+                }
+                for rho in 0..r {
+                    let phys = l * r + rho;
+                    let live = self
+                        .slot(phys)
+                        .and_then(|s| self.dead_phys.get(s))
+                        .is_some_and(|d| !*d);
+                    if live {
+                        outstanding.push(phys);
+                    }
+                }
+            }
+            if outstanding.is_empty() {
+                break;
+            }
+            let g = self.down.gather_until(&outstanding, 1, self.window)?;
+            let progressed = !g.arrived.is_empty() || !g.dead.is_empty();
+            for (tag, f) in g.arrived {
+                let logical = tag / r;
+                match local.binary_search(&logical) {
+                    Ok(i) if !covered.get(i).copied().unwrap_or(true) => {
+                        if let Some(c) = covered.get_mut(i) {
+                            *c = true;
+                        }
+                        out.push((logical, f));
+                    }
+                    // losing replica or stale frame: drop it here
+                    _ => self.down.recycle_frame(f),
+                }
+            }
+            for tag in g.dead {
+                self.mark_phys_dead(tag);
+            }
+            dead_logical.extend(self.drain_dead_logical());
+            if !progressed {
+                // the window went quiet: close the round on what we have
+                break;
+            }
+        }
+        Ok((out, dead_logical))
+    }
+
+    /// Relay a resend probe to the live replicas of the target leaf and
+    /// forward the first reply (real-time path only; virtual rounds
+    /// never resend).
+    fn serve_resend(&mut self, frame: &Frame) -> Result<()> {
+        let (_step, worker) = decode_resend(frame)?;
+        let lo = self.base;
+        let hi = lo + self.leaves() as u32;
+        if !(lo..hi).contains(&worker) {
+            bail!("resend for worker {worker} routed to the sub-aggregator owning {lo}..{hi}");
+        }
+        let r = self.replication as u32;
+        let mut targets = Vec::new();
+        for rho in 0..r {
+            let phys = worker * r + rho;
+            let live =
+                self.slot(phys).and_then(|s| self.dead_phys.get(s)).is_some_and(|d| !*d);
+            if live {
+                self.down.send_to(phys, frame)?;
+                targets.push(phys);
+            }
+        }
+        if targets.is_empty() {
+            return Ok(());
+        }
+        let g = self.down.gather_until(&targets, 1, self.window)?;
+        let mut reply: Option<(u32, Frame)> = None;
+        for (tag, f) in g.arrived {
+            if reply.is_none() {
+                reply = Some((tag / r, f));
+            } else {
+                self.down.recycle_frame(f);
+            }
+        }
+        for tag in g.dead {
+            self.mark_phys_dead(tag);
+        }
+        let dead = self.drain_dead_logical();
+        let frames: Vec<(u32, Frame)> = reply.into_iter().collect();
+        if frames.is_empty() && dead.is_empty() {
+            return Ok(());
+        }
+        self.send_up(&dead, frames)
+    }
+
+    fn send_up(&mut self, dead: &[u32], frames: Vec<(u32, Frame)>) -> Result<()> {
+        let batch = encode_batch(dead, &frames);
+        self.forwarded_frames += frames.len() as u64;
+        self.forwarded_bits += 8 * batch.payload.len() as u64;
+        for (_, f) in frames {
+            self.down.recycle_frame(f);
+        }
+        self.up.send(&batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::encode_round;
+    use crate::transport::channel::{star, star_from};
+    use crate::transport::tree::decode_batch;
+    use crate::transport::Transport;
+
+    /// Leaf thread: reply `grad([tag])` to every round, exit on shutdown.
+    fn leaf(p: crate::transport::channel::WorkerPort, tag: u8) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || loop {
+            let Some(f) = p.recv() else { break };
+            match f.kind {
+                FrameKind::Shutdown => break,
+                FrameKind::Params => p.send(Frame::grad(vec![tag])),
+                _ => {}
+            }
+        })
+    }
+
+    #[test]
+    fn relays_rounds_and_batches_attributed_replies() {
+        let (mut root, mut sub_ports) = star(1);
+        let (down, leaf_ports) = star_from(0, 2);
+        let leaves: Vec<_> =
+            leaf_ports.into_iter().map(|p| { let t = p.id as u8; leaf(p, t) }).collect();
+        let up = sub_ports.remove(0);
+        let node = std::thread::spawn(move || {
+            SubAggregator::new(up, down, 0).unwrap().run().unwrap()
+        });
+        Transport::broadcast(&mut root, &encode_round(0, &[0, 1], &[], &[], &[1.0])).unwrap();
+        let got = Transport::gather(&mut root, &[0]).unwrap();
+        assert_eq!(got.len(), 1, "one combined message per sub-aggregator");
+        let (dead, mut frames) = decode_batch(&got[0].1).unwrap();
+        assert!(dead.is_empty());
+        frames.sort_by_key(|(id, _)| *id);
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0], (0, Frame::grad(vec![0])));
+        assert_eq!(frames[1], (1, Frame::grad(vec![1])));
+        Transport::shutdown(&mut root).unwrap();
+        assert_eq!(node.join().unwrap(), 1);
+        for l in leaves {
+            l.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stays_silent_when_it_owns_no_participant() {
+        let (mut root, mut sub_ports) = star(1);
+        let (down, leaf_ports) = star_from(0, 2);
+        let leaves: Vec<_> =
+            leaf_ports.into_iter().map(|p| { let t = p.id as u8; leaf(p, t) }).collect();
+        let up = sub_ports.remove(0);
+        let node = std::thread::spawn(move || {
+            SubAggregator::new(up, down, 0).unwrap().run().unwrap()
+        });
+        // round owned entirely by some other group's leaves
+        Transport::broadcast(&mut root, &encode_round(0, &[5, 6], &[], &[], &[1.0])).unwrap();
+        Transport::shutdown(&mut root).unwrap();
+        assert_eq!(node.join().unwrap(), 1);
+        // nothing was forwarded upward: the channel drains empty
+        assert!(root.gather(1).is_empty());
+        for l in leaves {
+            l.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn coded_leaves_keep_first_reply_and_drop_duplicates() {
+        let (mut root, mut sub_ports) = star(1);
+        // 2 logical leaves x 2 replicas: physical ids 0..4, logical = phys/2
+        let (down, leaf_ports) = star_from(0, 4);
+        let leaves: Vec<_> = leaf_ports
+            .into_iter()
+            .map(|p| { let t = (p.id / 2) as u8; leaf(p, t) })
+            .collect();
+        let up = sub_ports.remove(0);
+        let node = std::thread::spawn(move || {
+            SubAggregator::coded(up, down, 0, 2, None).unwrap().run().unwrap()
+        });
+        Transport::broadcast(&mut root, &encode_round(0, &[0, 1], &[], &[], &[1.0])).unwrap();
+        let got = Transport::gather(&mut root, &[0]).unwrap();
+        let (dead, mut frames) = decode_batch(&got[0].1).unwrap();
+        assert!(dead.is_empty());
+        frames.sort_by_key(|(id, _)| *id);
+        // one frame per logical leaf, attributed logically — the losing
+        // replicas' duplicates never leave the node
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0], (0, Frame::grad(vec![0])));
+        assert_eq!(frames[1], (1, Frame::grad(vec![1])));
+        Transport::shutdown(&mut root).unwrap();
+        assert_eq!(node.join().unwrap(), 1);
+        for l in leaves {
+            l.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_zero_replication_and_indivisible_slices() {
+        let (_root, mut sub_ports) = star(2);
+        let (down, _leaf_ports) = star_from(0, 3);
+        assert!(SubAggregator::coded(sub_ports.remove(0), down, 0, 0, None).is_err());
+        let (down, _leaf_ports) = star_from(0, 3);
+        assert!(SubAggregator::coded(sub_ports.remove(0), down, 0, 2, None).is_err());
+    }
+}

@@ -70,11 +70,13 @@
 
 pub mod framing;
 pub mod policy;
+pub mod report;
 
 pub use framing::{
     decode_reply, decode_reply_from, decode_resend, decode_round, encode_reply, encode_resend,
     encode_round, Reply, RoundDown, ROUND_FRAME_VERSION,
 };
+pub use report::{RoundReport, TierStats};
 pub use policy::{
     participants, Arrival, ArrivalView, CloseRule, ParticipationPolicy, SliceArrivals,
     StaleAction, StaleWeight,
@@ -90,8 +92,10 @@ use crate::config::TrainConfig;
 use crate::coordinator::{RoundMsg, Server};
 use crate::ef::{AckEntry, AckStatus, AggKind};
 use crate::netsim::{CostModel, CostSpec};
+use crate::transport::tree::{encode_batch, TreePlan};
 use crate::transport::{
-    Frame, LocalStar, Transport, WorkerLink, FRAME_PARAMS, FRAME_RESEND, FRAME_SHUTDOWN,
+    Frame, FrameKind, LocalStar, Transport, TreeLeader, WorkerLink, FRAME_PARAMS, FRAME_RESEND,
+    FRAME_SHUTDOWN,
 };
 
 /// Real-time mode: a reply still owed after this many rounds is given
@@ -145,44 +149,6 @@ struct PendingMsg {
     worker: u32,
     sent_step: u64,
     comp: Compressed,
-}
-
-/// What one engine round did (metrics / logging feed).
-#[derive(Clone, Debug)]
-pub struct RoundReport {
-    pub step: u64,
-    /// mean worker train loss over this round's on-time replies
-    /// (virtual mode: all of this round's replies, late included)
-    pub mean_loss: f64,
-    /// uplink bits newly applied this round (incl. stale arrivals)
-    pub bits: u64,
-    /// cumulative uplink bits across the run
-    pub total_bits: u64,
-    pub participants: usize,
-    /// replies that made this round's deadline
-    pub on_time: usize,
-    /// replies deferred to a later round
-    pub late: usize,
-    /// previous rounds' late messages applied now (staleness-damped for
-    /// `Fresh` servers, full weight for `Accumulate`)
-    pub applied_stale: usize,
-    /// previous rounds' late messages dropped now (`Fresh`: superseded
-    /// by the sender's on-time reply, or `staleness = drop`; real-time
-    /// mode also counts given-up frames that arrived after the fact)
-    pub dropped_stale: usize,
-    /// resend requests sent this round (real-time recovery)
-    pub resent: usize,
-    /// replies given up this round — acked `Dropped` without arriving
-    pub gave_up: usize,
-    /// workers currently excluded by the recovery policy
-    pub excluded: usize,
-    /// workers whose link is dead
-    pub dead: usize,
-    /// duration of this round, seconds (simulated in virtual mode, wall
-    /// clock in real-time mode)
-    pub sim_round_s: f64,
-    /// clock since the run started, seconds (same timebase)
-    pub sim_now_s: f64,
 }
 
 /// Per-round collection result, produced by the mode-specific phase and
@@ -471,6 +437,10 @@ impl<T: Transport> RoundEngine<T> {
         // else: duplicate of an already-resolved reply (a resend racing
         // its slow original) — discarded; the original resolution
         // already charged the transmission
+
+        // the payload was copied out by the decode above — hand the
+        // buffer back to the transport's receive pool
+        self.transport.recycle_frame(frame);
         Ok(())
     }
 
@@ -478,12 +448,15 @@ impl<T: Transport> RoundEngine<T> {
     /// the cost model + the policy's close rule. Bit-identical to the
     /// pre-refactor engine for the `full`/`quorum`/`sampled` policies.
     fn collect_virtual(&mut self, step: u64, parts: &[u32], down_bits: u64) -> Result<Collected> {
-        let mut replies = self
-            .transport
-            .gather(parts)?
-            .into_iter()
-            .map(|(id, frame)| decode_reply(&frame, step, id))
-            .collect::<Result<Vec<Reply>>>()?;
+        let gathered = self.transport.gather(parts)?;
+        let mut replies = Vec::with_capacity(gathered.len());
+        for (id, frame) in gathered {
+            let r = decode_reply(&frame, step, id)?;
+            // decode copies the payload out — recycle the buffer into
+            // the transport's receive pool
+            self.transport.recycle_frame(frame);
+            replies.push(r);
+        }
         replies.sort_by_key(|r| r.worker);
         let mean_loss =
             replies.iter().map(|r| r.loss as f64).sum::<f64>() / replies.len().max(1) as f64;
@@ -846,6 +819,9 @@ impl<T: Transport> RoundEngine<T> {
             dead: self.dead.iter().filter(|d| **d).count(),
             sim_round_s: col.round_s,
             sim_now_s,
+            // acks travel in frames on this path; tier stats belong to
+            // the simulator's tree rounds (report::RoundReport docs)
+            ..Default::default()
         })
     }
 
@@ -1059,6 +1035,82 @@ pub fn local_star(computes: Vec<Compute<'_>>) -> LocalStar<'_> {
             })
             .collect(),
     )
+}
+
+/// Build the in-process **2-tier tree** transport from per-worker
+/// compute closures: leaves are chunked into contiguous groups of
+/// `fanout` ([`TreePlan`]; `fanout = 0` picks ~√M), each group served by
+/// one inline sub-aggregator handler that runs [`serve_frame`] for every
+/// leaf it owns and forwards the replies upward as one attributed
+/// [`FrameKind::Batch`] frame. Because the leaf protocol is unchanged
+/// and the batch codec carries leaf reply frames byte-verbatim, an
+/// engine on this transport is **bit-identical** to the same engine on
+/// [`local_star`] — the property `tests/prop_tree.rs` pins.
+pub fn local_tree(computes: Vec<Compute<'_>>, fanout: usize) -> Result<TreeLeader<LocalStar<'_>>> {
+    local_tree_coded(computes.into_iter().map(|c| vec![c]).collect(), fanout)
+}
+
+/// [`local_tree`] with **coded leaf redundancy**: logical leaf `w` is
+/// backed by `groups[w]` replica closures (usually clones over the same
+/// shard assignment). Every replica sees every round frame — acks and
+/// the excluded set must reach all copies so their encoder states stay
+/// in lock-step — and the first replica to produce a reply wins; the
+/// others' replies are discarded before they ever leave the group. With
+/// deterministic replicas the winning copy is byte-identical to any
+/// other, so `r > 1` never changes the applied update (pinned in
+/// `tests/prop_tree.rs`).
+pub fn local_tree_coded(
+    groups: Vec<Vec<Compute<'_>>>,
+    fanout: usize,
+) -> Result<TreeLeader<LocalStar<'_>>> {
+    let m = groups.len();
+    let plan = TreePlan::resolve(m, fanout)?;
+    for (id, replicas) in groups.iter().enumerate() {
+        if replicas.is_empty() {
+            bail!("leaf {id} has no compute replicas");
+        }
+    }
+    let mut leaves: std::collections::VecDeque<(u32, Vec<Compute<'_>>)> =
+        groups.into_iter().enumerate().map(|(id, r)| (id as u32, r)).collect();
+    let mut handlers: Vec<crate::transport::local::Handler<'_>> =
+        Vec::with_capacity(plan.groups());
+    for g in 0..plan.groups() as u32 {
+        let range = plan.range(g);
+        let take = (range.end - range.start) as usize;
+        let mut group: Vec<(u32, Vec<Compute<'_>>)> = leaves.drain(..take).collect();
+        handlers.push(Box::new(move |frame: &Frame| -> Result<Option<Frame>> {
+            if frame.kind == FrameKind::Shutdown {
+                // nothing to relay in-process: the leaves are closures,
+                // not loops waiting on a link
+                return Ok(None);
+            }
+            let mut batch: Vec<(u32, Frame)> = Vec::new();
+            for (id, replicas) in group.iter_mut() {
+                let mut reply: Option<Frame> = None;
+                for compute in replicas.iter_mut() {
+                    // every replica serves every frame (shared ack
+                    // stream); first reply wins, the rest are dropped
+                    // inside the group
+                    match serve_frame(frame, *id, &mut **compute)? {
+                        ServeOutcome::Reply { frame: f, .. } => {
+                            if reply.is_none() {
+                                reply = Some(f);
+                            }
+                        }
+                        ServeOutcome::Idle | ServeOutcome::Shutdown => {}
+                        ServeOutcome::Resend { .. } => {}
+                    }
+                }
+                if let Some(f) = reply {
+                    batch.push((*id, f));
+                }
+            }
+            // always answer with a batch — empty when no owned leaf
+            // participated — so the upward contract is uniform
+            Ok(Some(encode_batch(&[], &batch)))
+        }) as crate::transport::local::Handler<'_>);
+    }
+    TreeLeader::new(LocalStar::new(handlers), m, plan.fanout())
 }
 
 /// Wrap a bare `(step, params) -> (loss, compressed)` gradient closure

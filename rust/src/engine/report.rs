@@ -1,0 +1,102 @@
+//! The one per-round report shared by the live engine
+//! ([`crate::engine::RoundEngine::run_round`]) and the event-heap
+//! simulator ([`crate::netsim::RoundSim::run_round`]).
+//!
+//! Before this module the two paths each declared their own report
+//! struct and every consumer (benches, scenario figures,
+//! `tests/prop_scale.rs`) restated the shared fields to compare them.
+//! Now both construct [`RoundReport`]; the producer-specific extras are
+//! plain fields that the other path leaves at their `Default` — the
+//! simulator records the next broadcast's ack stream in
+//! [`RoundReport::acks`] (the live engine ships acks in frames instead),
+//! and tree-topology rounds describe their relay tiers in
+//! [`RoundReport::tiers`].
+
+use crate::ef::AckEntry;
+
+/// Relay statistics for one tier of a tree round, leaf tier first.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TierStats {
+    /// links the receiving node actually waited on this round: the
+    /// busiest sub-aggregator's participating-leaf count at the leaf
+    /// tier, the number of active sub-aggregators at the root (the star
+    /// equivalent of the root figure is all of M)
+    pub fan_in: usize,
+    /// uplink bits forwarded into this tier's receiver this round
+    pub forwarded_bits: u64,
+}
+
+/// What one round did (metrics / logging feed).
+#[derive(Clone, Debug, Default)]
+pub struct RoundReport {
+    pub step: u64,
+    /// mean worker train loss over this round's on-time replies
+    /// (virtual mode: all of this round's replies, late included;
+    /// the constant-bit simulator has no losses and leaves it 0)
+    pub mean_loss: f64,
+    /// uplink bits newly applied this round (incl. stale arrivals)
+    pub bits: u64,
+    /// cumulative uplink bits across the run
+    pub total_bits: u64,
+    pub participants: usize,
+    /// replies that made this round's deadline
+    pub on_time: usize,
+    /// replies deferred to a later round
+    pub late: usize,
+    /// previous rounds' late messages applied now (staleness-damped for
+    /// `Fresh` servers, full weight for `Accumulate`)
+    pub applied_stale: usize,
+    /// previous rounds' late messages dropped now (`Fresh`: superseded
+    /// by the sender's on-time reply, or `staleness = drop`; real-time
+    /// mode also counts given-up frames that arrived after the fact)
+    pub dropped_stale: usize,
+    /// resend requests sent this round (real-time recovery)
+    pub resent: usize,
+    /// replies given up this round — acked `Dropped` without arriving
+    pub gave_up: usize,
+    /// workers currently excluded by the recovery policy
+    pub excluded: usize,
+    /// workers whose link is dead
+    pub dead: usize,
+    /// duration of this round, seconds (simulated in virtual mode, wall
+    /// clock in real-time mode)
+    pub sim_round_s: f64,
+    /// clock since the run started, seconds (same timebase)
+    pub sim_now_s: f64,
+    /// simulator path only: the acks this round stages for the *next*
+    /// broadcast, sorted by `(worker, sent_step)` — exactly what the
+    /// engine would ship in its next round frame. The live engine
+    /// delivers acks in frames and leaves this empty.
+    pub acks: Vec<(u32, AckEntry)>,
+    /// tree-topology rounds: per-tier relay statistics, leaf tier
+    /// first, root last. Empty for star rounds.
+    pub tiers: Vec<TierStats>,
+}
+
+impl RoundReport {
+    /// The root's fan-in this round: the last tier's figure for a tree
+    /// round, the participant count for a star round.
+    pub fn root_fan_in(&self) -> usize {
+        self.tiers.last().map_or(self.participants, |t| t.fan_in)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_fan_in_falls_back_to_participants_for_star_rounds() {
+        let star = RoundReport { participants: 64, ..Default::default() };
+        assert_eq!(star.root_fan_in(), 64);
+        let tree = RoundReport {
+            participants: 64,
+            tiers: vec![
+                TierStats { fan_in: 8, forwarded_bits: 1024 },
+                TierStats { fan_in: 8, forwarded_bits: 128 },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(tree.root_fan_in(), 8);
+    }
+}

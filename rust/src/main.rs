@@ -6,6 +6,7 @@
 //! mlmc-dist validate [lem32|lem33|lem34|lem36|thm41|comm|all]
 //! mlmc-dist info
 //! mlmc-dist worker --addr H:P --id N ...   (TCP cluster worker)
+//! mlmc-dist subagg --addr H:P --id G --leaf-addr H:P ...  (tree middle tier)
 //! mlmc-dist leader --addr H:P ...          (TCP cluster leader)
 //! ```
 
@@ -31,6 +32,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "validate" => figures::validate::cli(&args[1..]),
         "info" => cmd_info(),
         "leader" => mlmc_dist::coordinator::cluster::leader_main(&args[1..]),
+        "subagg" => mlmc_dist::coordinator::cluster::subagg_main(&args[1..]),
         "worker" => mlmc_dist::coordinator::cluster::worker_main(&args[1..]),
         "help" | "--help" | "-h" => {
             print_help();
@@ -49,6 +51,8 @@ fn print_help() {
          \x20                                              sweeps policy x link (loss vs sim time)\n\
          \x20 validate [lem32|lem33|lem34|lem36|thm41|comm|all]  lemma/theorem checks\n\
          \x20 leader   --addr H:P [--key=value ...]        TCP cluster leader\n\
+         \x20 subagg   --addr H:P --id G --leaf-addr H:P   tree middle tier: relays rounds to its\n\
+         \x20                                              leaf slice, batches replies upward\n\
          \x20 worker   --addr H:P --id N [--key=value ...] TCP cluster worker\n\
          \x20 info                                         list artifacts/models\n\n\
          config keys: {}\n\n\
@@ -72,7 +76,13 @@ fn print_help() {
          \x20 round_timeout  seconds (0 = wait forever)     deadline before resend requests go out\n\
          \x20 resend_max     n                              resend attempts before a reply is given up\n\
          \x20 exclude_after  n (0 = never)                  consecutive missed rounds before exclusion\n\
-         \x20 readmit_every  n (0 = never)                  probe an excluded worker every n rounds\n",
+         \x20 readmit_every  n (0 = never)                  probe an excluded worker every n rounds\n\n\
+         topology keys (hierarchical aggregation tree):\n\
+         \x20 topology       star | tree                    flat star (default) or a sub-aggregator\n\
+         \x20                                               tier: leader fan-in drops from M to ~sqrt(M)\n\
+         \x20 fanout         leaves per group (0 = auto)    auto picks the smallest f with f*f >= M\n\
+         \x20 replication    r >= 1 (tree only)             coded leaves: r replicas per shard, first\n\
+         \x20                                               on-time reply wins (sim + local tree runs)\n",
         [
             "model", "method", "workers", "steps", "lr", "seed", "frac_pm",
             "quant_bits", "eval_every", "eval_batches", "transport",
@@ -80,7 +90,7 @@ fn print_help() {
             "shard_size", "threads", "participation", "quorum", "sample_frac",
             "staleness", "stale_decay", "link", "straggler", "compute",
             "compute_spread", "round_timeout", "resend_max", "exclude_after",
-            "readmit_every", "tag",
+            "readmit_every", "topology", "fanout", "replication", "tag",
         ]
         .join(", ")
     );

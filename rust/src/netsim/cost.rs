@@ -346,6 +346,15 @@ impl CostModel {
         self.price(step, worker, up_bits, down_bits).total()
     }
 
+    /// One relay hop through a sub-aggregator: the base link's latency
+    /// plus serializing `bits` onto its uplink. Tree-topology rounds add
+    /// this to every leaf arrival — the sub-aggregator relays replies
+    /// cut-through over the base link (aggregator nodes sit on the good
+    /// part of the network, so no heterogeneity factor applies).
+    pub fn relay_hop_s(&self, bits: u64) -> f64 {
+        self.spec.base.latency_s + bits as f64 / self.spec.base.uplink_bps
+    }
+
     /// Advance simulated time by one round's duration.
     pub fn advance(&mut self, round_s: f64) -> f64 {
         self.now_s += round_s.max(0.0);

@@ -20,7 +20,7 @@ pub mod population;
 
 pub use cost::{CostBreakdown, CostModel, CostSpec};
 pub use event::{Event, EventHeap, HeapArrivals};
-pub use population::{Population, RoundSim, SimRoundReport};
+pub use population::{Population, RoundSim, SimRoundReport, Topology};
 
 /// A simple star-topology link model (every worker has an identical
 /// uplink to the server).

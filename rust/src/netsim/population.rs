@@ -25,9 +25,26 @@ use anyhow::{bail, Result};
 
 use crate::ef::{AckEntry, AckStatus, AggKind};
 use crate::engine::policy::{ArrivalView, CloseRule, ParticipationPolicy, StaleAction};
+use crate::engine::report::TierStats;
+use crate::transport::tree::TreePlan;
 
 use super::cost::CostModel;
 use super::event::{Event, EventHeap, HeapArrivals};
+
+/// The aggregation topology a [`RoundSim`] prices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// every worker uplinks straight to the leader (the default)
+    Star,
+    /// leaves → sub-aggregators → leader ([`TreePlan`] grouping:
+    /// `fanout` leaves per group, `0` = auto ~√M). Every reply pays one
+    /// extra relay hop ([`CostModel::relay_hop_s`]); with
+    /// `replication = r > 1` each logical leaf is backed by `r` physical
+    /// candidates (the cost model must then hold `logical_m × r`
+    /// workers) and the **first** candidate arrival wins — the coded
+    /// leaf shards are interchangeable, so only timing changes.
+    Tree { fanout: usize, replication: usize },
+}
 
 /// A simulated worker population behind one lazy [`CostModel`]: size M,
 /// zero per-worker state. Prices a round's active participants into an
@@ -63,36 +80,45 @@ impl Population {
         }
         heap
     }
+
+    /// Tree-topology arrivals with coded leaf redundancy: logical leaf
+    /// `w` is backed by the `replication` physical workers
+    /// `w*r .. w*r+r`, the earliest of which wins, and every reply pays
+    /// one relay hop through its sub-aggregator. Still O(active) — only
+    /// `replication ×` the drawn cohort is ever priced.
+    pub fn arrivals_coded(
+        &self,
+        step: u64,
+        parts: &[u32],
+        up_bits: u64,
+        down_bits: u64,
+        replication: usize,
+    ) -> EventHeap {
+        let r = replication.max(1) as u32;
+        let hop = self.cost.relay_hop_s(up_bits);
+        let mut heap = EventHeap::with_capacity(parts.len());
+        for &w in parts {
+            let mut best = f64::INFINITY;
+            for rho in 0..r {
+                let t = self.cost.arrival_s(step, w * r + rho, up_bits, down_bits);
+                if t < best {
+                    best = t;
+                }
+            }
+            heap.push(Event { at_s: best + hop, worker: w });
+        }
+        heap
+    }
 }
 
-/// What one simulated round did. Field-for-field the subset of the
-/// engine's `RoundReport` that a constant-bit simulation defines (no
-/// losses, no real-time recovery), plus the round's staged acks for
-/// protocol-equivalence tests.
-#[derive(Clone, Debug)]
-pub struct SimRoundReport {
-    pub step: u64,
-    pub participants: usize,
-    /// replies that made this round's deadline
-    pub on_time: usize,
-    /// replies deferred to a later round
-    pub late: usize,
-    /// previous rounds' late messages applied now
-    pub applied_stale: usize,
-    /// previous rounds' late messages dropped now
-    pub dropped_stale: usize,
-    /// uplink bits resolved this round (applied + dropped)
-    pub bits: u64,
-    /// cumulative uplink bits across the run
-    pub total_bits: u64,
-    /// duration of this round, simulated seconds
-    pub sim_round_s: f64,
-    /// simulated clock since the run started
-    pub sim_now_s: f64,
-    /// this round's acks, sorted by `(worker, sent_step)` — exactly what
-    /// the engine would ship in the NEXT round's broadcast
-    pub acks: Vec<(u32, AckEntry)>,
-}
+/// What one simulated round did: the simulator constructs the same
+/// [`crate::engine::report::RoundReport`] the live engine does (the
+/// unified report). A constant-bit simulation defines no losses and no
+/// real-time recovery, so those fields stay at their `Default`; the
+/// simulator additionally fills `acks` (the next broadcast's ack
+/// stream, for protocol-equivalence tests) and — on tree topologies —
+/// `tiers`.
+pub type SimRoundReport = crate::engine::report::RoundReport;
 
 /// Heap-driven virtual round loop over a [`Population`]: the engine's
 /// round protocol at O(active) memory with a constant-size message
@@ -101,6 +127,7 @@ pub struct RoundSim {
     population: Population,
     policy: Box<dyn ParticipationPolicy>,
     agg: AggKind,
+    topology: Topology,
     up_bits: u64,
     down_bits: u64,
     /// late messages awaiting resolution: `(worker, sent_step)`
@@ -121,11 +148,47 @@ impl RoundSim {
             population: Population::new(cost),
             policy,
             agg,
+            topology: Topology::Star,
             up_bits,
             down_bits,
             pending: Vec::new(),
             total_bits: 0,
             step: 0,
+        }
+    }
+
+    /// Switch the simulated aggregation topology (builder-style;
+    /// default [`Topology::Star`]). For a tree with `replication = r`,
+    /// the cost model must hold `logical_m × r` workers — physical
+    /// candidate `w*r + ρ` backs logical leaf `w`.
+    pub fn with_topology(mut self, topology: Topology) -> Result<Self> {
+        if let Topology::Tree { fanout, replication } = topology {
+            if replication == 0 {
+                bail!("tree replication must be >= 1");
+            }
+            let phys = self.population.size();
+            if phys % replication != 0 {
+                bail!(
+                    "population of {phys} workers is not divisible by replication {replication}"
+                );
+            }
+            // validates the leaf/fanout arithmetic up front
+            TreePlan::resolve(phys / replication, fanout)?;
+        }
+        self.topology = topology;
+        Ok(self)
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Logical leaf count the policy draws over: the population size on
+    /// a star; physical workers ÷ replication on a coded tree.
+    pub fn logical_m(&self) -> usize {
+        match self.topology {
+            Topology::Star => self.population.size(),
+            Topology::Tree { replication, .. } => self.population.size() / replication.max(1),
         }
     }
 
@@ -154,9 +217,20 @@ impl RoundSim {
     /// charge-once bit accounting.
     pub fn run_round(&mut self) -> Result<SimRoundReport> {
         let step = self.step;
-        let m = self.population.size();
+        let m = self.logical_m();
         let parts = self.policy.draw(step, m);
-        let heap = self.population.arrivals(step, &parts, self.up_bits, self.down_bits);
+        let heap = match self.topology {
+            Topology::Star => {
+                self.population.arrivals(step, &parts, self.up_bits, self.down_bits)
+            }
+            Topology::Tree { replication, .. } => self.population.arrivals_coded(
+                step,
+                &parts,
+                self.up_bits,
+                self.down_bits,
+                replication,
+            ),
+        };
         let mut view = HeapArrivals::new(heap, m);
         let active = view.active();
         let deadline = match self.policy.close_at(step, &mut view) {
@@ -270,6 +344,12 @@ impl RoundSim {
         self.total_bits += bits;
         let sim_now_s = self.population.cost_mut().advance(deadline);
         self.step += 1;
+        let tiers = match self.topology {
+            Topology::Star => Vec::new(),
+            Topology::Tree { fanout, .. } => {
+                tier_stats(&TreePlan::resolve(m, fanout)?, &parts, self.up_bits)
+            }
+        };
         Ok(SimRoundReport {
             step,
             participants: parts.len(),
@@ -282,6 +362,9 @@ impl RoundSim {
             sim_round_s: deadline,
             sim_now_s,
             acks,
+            tiers,
+            // no losses, no real-time recovery in a constant-bit sim
+            ..Default::default()
         })
     }
 
@@ -301,6 +384,39 @@ impl RoundSim {
             AggKind::Fresh => (0, pending.len()),
         }
     }
+}
+
+/// Per-tier relay statistics of one tree round, leaf tier first. The
+/// bits are conserved through the relay (batch frames carry leaf
+/// replies verbatim), so both tiers forward the full participant
+/// payload — the tree's win is **fan-in**: the root waits on the active
+/// sub-aggregators, not on every leaf. `parts` must be ascending
+/// (policy draws are), so group owners arrive run-length contiguous.
+fn tier_stats(plan: &TreePlan, parts: &[u32], up_bits: u64) -> Vec<TierStats> {
+    let mut active_groups = 0usize;
+    let mut max_fan = 0usize;
+    let mut cur: Option<u32> = None;
+    let mut n = 0usize;
+    for &w in parts {
+        let g = plan.owner(w);
+        if Some(g) != cur {
+            if n > max_fan {
+                max_fan = n;
+            }
+            active_groups += 1;
+            cur = Some(g);
+            n = 0;
+        }
+        n += 1;
+    }
+    if n > max_fan {
+        max_fan = n;
+    }
+    let forwarded_bits = parts.len() as u64 * up_bits;
+    vec![
+        TierStats { fan_in: max_fan, forwarded_bits },
+        TierStats { fan_in: active_groups, forwarded_bits },
+    ]
 }
 
 #[cfg(test)]
@@ -408,6 +524,70 @@ mod tests {
         assert_eq!(runs[0].total_bits, runs[1].total_bits);
         assert_eq!(runs[0].on_time, runs[1].on_time);
         assert!(runs[0].on_time > 16 / 2, "adaptive never closes below majority");
+    }
+
+    #[test]
+    fn tree_topology_prices_a_relay_hop_and_reports_tiers() {
+        let mk = |topo: Option<Topology>| {
+            let mut s = sim(64, Box::new(FullSync::new(StaleWeight::Damp)), AggKind::Fresh, 0.0);
+            if let Some(t) = topo {
+                s = s.with_topology(t).unwrap();
+            }
+            s.run_round().unwrap()
+        };
+        let star = mk(None);
+        let tree = mk(Some(Topology::Tree { fanout: 0, replication: 1 }));
+        assert!(tree.sim_round_s > star.sim_round_s, "the relay hop must cost time");
+        assert!(star.tiers.is_empty());
+        // 64 leaves, auto fanout 8 → 8 groups of 8, all active under
+        // full sync: root fan-in 8 where the star's is 64
+        assert_eq!(tree.tiers.len(), 2);
+        assert_eq!((tree.tiers[0].fan_in, tree.tiers[1].fan_in), (8, 8));
+        assert_eq!(tree.root_fan_in(), 8);
+        assert_eq!(star.root_fan_in(), 64);
+        // bits are conserved through the relay — the tree only cuts
+        // fan-in, never the charged uplink traffic
+        assert_eq!(tree.tiers[0].forwarded_bits, 64 * UP);
+        assert_eq!((tree.participants, tree.on_time, tree.late), (64, 64, 0));
+        assert_eq!(tree.bits, star.bits);
+    }
+
+    #[test]
+    fn coded_replication_takes_the_earliest_candidate() {
+        // physical population 16 = 8 logical leaves × r=2: candidates
+        // 2w and 2w+1 back leaf w; the earliest wins, plus one hop
+        let cost =
+            CostSpec::preset("hetero").unwrap().workers(16).straggler(0.3).seed(7).build();
+        let expect = (0..8u32)
+            .map(|w| {
+                let a = cost.arrival_s(0, 2 * w, UP, DOWN);
+                let b = cost.arrival_s(0, 2 * w + 1, UP, DOWN);
+                a.min(b) + cost.relay_hop_s(UP)
+            })
+            .fold(0.0f64, f64::max);
+        let mut s = RoundSim::new(
+            cost,
+            Box::new(FullSync::new(StaleWeight::Damp)),
+            AggKind::Fresh,
+            UP,
+            DOWN,
+        )
+        .with_topology(Topology::Tree { fanout: 2, replication: 2 })
+        .unwrap();
+        assert_eq!(s.logical_m(), 8);
+        let r = s.run_round().unwrap();
+        assert_eq!(r.participants, 8);
+        assert_eq!(r.sim_round_s.to_bits(), expect.to_bits());
+        // bad shapes are rejected loudly
+        let cost = CostSpec::preset("edge").unwrap().workers(9).build();
+        let s = RoundSim::new(
+            cost,
+            Box::new(FullSync::new(StaleWeight::Damp)),
+            AggKind::Fresh,
+            UP,
+            DOWN,
+        );
+        assert!(s.with_topology(Topology::Tree { fanout: 2, replication: 2 }).is_err());
     }
 
     #[test]

@@ -21,13 +21,22 @@ pub struct WorkerPort {
 
 /// Build a star with `m` workers.
 pub fn star(m: usize) -> (Leader, Vec<WorkerPort>) {
+    star_from(0, m)
+}
+
+/// Build a star whose `m` worker ports carry the **global** ids
+/// `base .. base+m` — a sub-aggregator's leaf-facing star: leaf replies
+/// tag themselves with the id the whole tree knows them by, so the
+/// relayed frames need no re-attribution. The leader side is unchanged
+/// (it matches whatever ids are passed to `gather`).
+pub fn star_from(base: u32, m: usize) -> (Leader, Vec<WorkerPort>) {
     let (up_tx, up_rx) = channel();
     let mut txs = Vec::with_capacity(m);
     let mut ports = Vec::with_capacity(m);
     for id in 0..m {
         let (down_tx, down_rx) = channel();
         txs.push(down_tx);
-        ports.push(WorkerPort { id: id as u32, tx: up_tx.clone(), rx: down_rx });
+        ports.push(WorkerPort { id: base + id as u32, tx: up_tx.clone(), rx: down_rx });
     }
     (Leader { rx: up_rx, txs }, ports)
 }
@@ -155,6 +164,18 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn star_from_tags_replies_with_global_ids() {
+        let (mut leader, ports) = star_from(4, 2);
+        assert_eq!((ports[0].id, ports[1].id), (4, 5));
+        ports[0].send(Frame::grad(vec![1]));
+        ports[1].send(Frame::grad(vec![2]));
+        let got = Transport::gather(&mut leader, &[4, 5]).unwrap();
+        let mut ids: Vec<u32> = got.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![4, 5]);
     }
 
     #[test]

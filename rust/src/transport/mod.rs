@@ -19,6 +19,7 @@ pub mod faulty;
 pub mod local;
 pub mod poll;
 pub mod tcp;
+pub mod tree;
 
 use std::time::Duration;
 
@@ -26,31 +27,100 @@ use anyhow::{bail, Result};
 
 pub use faulty::FaultyLink;
 pub use local::LocalStar;
+pub use tree::{TreeLeader, TreePlan};
 
-/// Frame kinds exchanged on the wire.
-pub const FRAME_PARAMS: u8 = 1;
-pub const FRAME_GRAD: u8 = 2;
-pub const FRAME_SHUTDOWN: u8 = 3;
+/// Every frame kind the wire speaks, as a closed enum. The `#[repr(u8)]`
+/// discriminants ARE the wire bytes (see [`FrameKind::as_byte`]), so the
+/// encoding is byte-identical to the historical raw-`u8` kinds — the
+/// repolint frame-layout pin over `engine/framing.rs` asserts the layout
+/// never drifts. Unknown bytes fail [`FrameKind::from_byte`], which the
+/// TCP leader treats as forged framing (the peer is severed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Worker → leader, once per connection: 4-byte LE worker id.
+    Hello = 0,
+    /// Leader → workers: the v3 round frame
+    /// ([`crate::engine::framing::encode_round`]).
+    Params = 1,
+    /// Worker → leader: one compressed gradient reply
+    /// ([`crate::engine::framing::encode_reply`]).
+    Grad = 2,
+    /// Leader → workers: the run is over.
+    Shutdown = 3,
+    /// Leader → one worker: "your reply for round `step` never arrived —
+    /// send it again" ([`crate::engine::framing::encode_resend`]).
+    Resend = 4,
+    /// Sub-aggregator → leader: several attributed leaf frames relayed
+    /// as one combined message ([`tree::encode_batch`]).
+    Batch = 5,
+}
+
+impl FrameKind {
+    /// The wire byte for this kind.
+    pub fn as_byte(self) -> u8 {
+        self as u8
+    }
+
+    /// Parse a wire byte; `None` for bytes no build ever emitted.
+    pub fn from_byte(b: u8) -> Option<FrameKind> {
+        match b {
+            0 => Some(FrameKind::Hello),
+            1 => Some(FrameKind::Params),
+            2 => Some(FrameKind::Grad),
+            3 => Some(FrameKind::Shutdown),
+            4 => Some(FrameKind::Resend),
+            5 => Some(FrameKind::Batch),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FrameKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // error messages print "kind {}" — keep the historical numeric
+        // form, with the name for humans
+        let name = match self {
+            FrameKind::Hello => "hello",
+            FrameKind::Params => "params",
+            FrameKind::Grad => "grad",
+            FrameKind::Shutdown => "shutdown",
+            FrameKind::Resend => "resend",
+            FrameKind::Batch => "batch",
+        };
+        write!(f, "{} ({name})", self.as_byte())
+    }
+}
+
+/// Typed aliases kept so the frame codec (`engine/framing.rs`, whose
+/// text is content-hash-pinned by repolint) and its call sites read
+/// unchanged.
+pub const FRAME_PARAMS: FrameKind = FrameKind::Params;
+pub const FRAME_GRAD: FrameKind = FrameKind::Grad;
+pub const FRAME_SHUTDOWN: FrameKind = FrameKind::Shutdown;
 /// Leader → one worker: "your reply for round `step` never arrived —
 /// send it again" (see [`crate::engine::framing::encode_resend`]).
-pub const FRAME_RESEND: u8 = 4;
+pub const FRAME_RESEND: FrameKind = FrameKind::Resend;
 
 /// A framed transport message.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Frame {
-    pub kind: u8,
+    pub kind: FrameKind,
     pub payload: Vec<u8>,
 }
 
 impl Frame {
     pub fn params(payload: Vec<u8>) -> Self {
-        Frame { kind: FRAME_PARAMS, payload }
+        Frame { kind: FrameKind::Params, payload }
     }
     pub fn grad(payload: Vec<u8>) -> Self {
-        Frame { kind: FRAME_GRAD, payload }
+        Frame { kind: FrameKind::Grad, payload }
     }
     pub fn shutdown() -> Self {
-        Frame { kind: FRAME_SHUTDOWN, payload: Vec::new() }
+        Frame { kind: FrameKind::Shutdown, payload: Vec::new() }
+    }
+    pub fn batch(payload: Vec<u8>) -> Self {
+        Frame { kind: FrameKind::Batch, payload }
     }
 }
 
@@ -66,6 +136,18 @@ pub struct Gathered {
     /// failure, forged framing). Each dead worker is reported exactly
     /// once, then silently skipped by broadcasts forever.
     pub dead: Vec<u32>,
+}
+
+impl Gathered {
+    /// Arrived frames of one kind, in arrival order.
+    pub fn of_kind(&self, kind: FrameKind) -> impl Iterator<Item = (u32, &Frame)> {
+        self.arrived.iter().filter(move |(_, f)| f.kind == kind).map(|(w, f)| (*w, f))
+    }
+
+    /// Arrived gradient replies (the common case), in arrival order.
+    pub fn grads(&self) -> impl Iterator<Item = (u32, &Frame)> {
+        self.of_kind(FrameKind::Grad)
+    }
 }
 
 /// Leader-side view of a star topology: broadcast downstream, collect
@@ -136,6 +218,16 @@ pub trait Transport {
         bail!("this transport cannot address worker {id} individually");
     }
 
+    /// Hand a fully-consumed frame back to the transport so its payload
+    /// buffer can be reused for a future receive. Purely an allocation
+    /// optimization: the default drops the frame, and a transport may
+    /// ignore recycled frames entirely. The TCP leader pools them in a
+    /// [`crate::compress::ScratchArena`] so steady-state rounds reuse
+    /// per-peer reassembly buffers instead of allocating per frame.
+    fn recycle_frame(&mut self, frame: Frame) {
+        let _ = frame;
+    }
+
     /// Tell every worker the run is over.
     fn shutdown(&mut self) -> Result<()>;
 }
@@ -158,6 +250,10 @@ impl<T: Transport> Transport for Blocking<T> {
 
     fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
         self.0.gather(ids)
+    }
+
+    fn recycle_frame(&mut self, frame: Frame) {
+        self.0.recycle_frame(frame);
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -243,5 +339,42 @@ mod tests {
         assert_eq!(Frame::shutdown().kind, FRAME_SHUTDOWN);
         assert_eq!(Frame::params(vec![1]).kind, FRAME_PARAMS);
         assert_eq!(Frame::grad(vec![2]).payload, vec![2]);
+        assert_eq!(Frame::batch(vec![3]).kind, FrameKind::Batch);
+    }
+
+    #[test]
+    fn frame_kind_bytes_roundtrip_and_unknown_bytes_fail() {
+        // the wire bytes are pinned: renumbering them is a protocol break
+        let pinned = [
+            (FrameKind::Hello, 0u8),
+            (FrameKind::Params, 1),
+            (FrameKind::Grad, 2),
+            (FrameKind::Shutdown, 3),
+            (FrameKind::Resend, 4),
+            (FrameKind::Batch, 5),
+        ];
+        for (kind, byte) in pinned {
+            assert_eq!(kind.as_byte(), byte);
+            assert_eq!(FrameKind::from_byte(byte), Some(kind));
+        }
+        for forged in [6u8, 7, 0x7F, 0xA3, 0xFF] {
+            assert_eq!(FrameKind::from_byte(forged), None);
+        }
+    }
+
+    #[test]
+    fn gathered_typed_accessors_filter_by_kind() {
+        let g = Gathered {
+            arrived: vec![
+                (0, Frame::grad(vec![1])),
+                (1, Frame::batch(vec![2])),
+                (2, Frame::grad(vec![3])),
+            ],
+            dead: vec![],
+        };
+        let grads: Vec<u32> = g.grads().map(|(w, _)| w).collect();
+        assert_eq!(grads, vec![0, 2]);
+        let batches: Vec<u32> = g.of_kind(FrameKind::Batch).map(|(w, _)| w).collect();
+        assert_eq!(batches, vec![1]);
     }
 }

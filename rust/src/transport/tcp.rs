@@ -21,7 +21,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::{poll, Frame, Gathered, Transport, WorkerLink};
+use crate::compress::ScratchArena;
+
+use super::{poll, Frame, FrameKind, Gathered, Transport, WorkerLink};
 
 /// Upper bound on a declared frame length; a peer declaring more is
 /// taken for malicious/corrupt and its link is severed.
@@ -46,7 +48,7 @@ fn le_u32_at(b: &[u8], off: usize) -> u32 {
 
 fn frame_bytes(frame: &Frame) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + frame.payload.len());
-    out.push(frame.kind);
+    out.push(frame.kind.as_byte());
     out.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&frame.payload);
     out
@@ -62,7 +64,10 @@ pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
 pub fn read_frame(stream: &mut TcpStream) -> Result<Frame> {
     let mut header = [0u8; 5];
     stream.read_exact(&mut header).context("reading frame header")?;
-    let [kind, l0, l1, l2, l3] = header;
+    let [kind_byte, l0, l1, l2, l3] = header;
+    let Some(kind) = FrameKind::from_byte(kind_byte) else {
+        bail!("unknown frame kind byte {kind_byte}");
+    };
     let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
     if len > MAX_FRAME_BYTES {
         bail!("frame too large: {len}");
@@ -101,6 +106,17 @@ impl Peer {
 /// identify themselves with a hello byte-frame carrying their id.
 pub struct TcpLeader {
     peers: Vec<Peer>,
+    /// payload-buffer pool: frames handed back through
+    /// [`Transport::recycle_frame`] donate their buffers to future
+    /// [`TcpLeader::read_peer`] reassemblies, so steady-state rounds
+    /// reuse per-peer receive buffers instead of allocating per frame.
+    arena: ScratchArena,
+    /// Global id of peer slot 0. A root leader uses 0; a sub-aggregator
+    /// accepting the leaf slice `base .. base+m` uses `base`, so every
+    /// id crossing the [`Transport`] boundary (gather tags, dead lists,
+    /// `send_to` targets) is a *global* tree id and relayed frames need
+    /// no re-attribution.
+    id_base: u32,
 }
 
 impl TcpLeader {
@@ -109,10 +125,24 @@ impl TcpLeader {
     /// streams are switched to nonblocking here.
     pub fn from_streams(streams: Vec<TcpStream>) -> Result<Self> {
         let peers = streams.into_iter().map(Peer::new).collect::<Result<_>>()?;
-        Ok(TcpLeader { peers })
+        Ok(TcpLeader { peers, arena: ScratchArena::new(), id_base: 0 })
+    }
+
+    /// Peer slot for a global worker id, if it belongs to this leader.
+    fn slot(&self, id: u32) -> Option<usize> {
+        let s = id.checked_sub(self.id_base)? as usize;
+        (s < self.peers.len()).then_some(s)
     }
 
     pub fn bind_and_accept(addr: &str, m: usize) -> Result<(Self, String)> {
+        Self::bind_and_accept_range(addr, 0, m)
+    }
+
+    /// Like [`TcpLeader::bind_and_accept`], but the expected hello ids
+    /// are the *global* range `base .. base + m` — a sub-aggregator
+    /// accepting its leaf slice of the tree's global id space. Peer
+    /// slot `i` holds the leaf with global id `base + i`.
+    pub fn bind_and_accept_range(addr: &str, base: u32, m: usize) -> Result<(Self, String)> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?.to_string();
         let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
@@ -125,21 +155,23 @@ impl TcpLeader {
             if hello.payload.len() != 4 {
                 bail!("malformed worker hello: {} payload bytes, want 4", hello.payload.len());
             }
-            let id = le_u32_at(&hello.payload, 0) as usize;
-            match streams.get_mut(id) {
-                Some(slot) if slot.is_none() => *slot = Some(s),
-                _ => bail!("bad worker hello id {id}"),
+            let id = le_u32_at(&hello.payload, 0);
+            let slot = id.checked_sub(base).map(|o| o as usize);
+            match slot.and_then(|o| streams.get_mut(o)) {
+                Some(entry) if entry.is_none() => *entry = Some(s),
+                _ => bail!("bad worker hello id {id} (want {base}..{})", base as usize + m),
             }
         }
         let mut accepted = Vec::with_capacity(m);
-        for (id, slot) in streams.into_iter().enumerate() {
+        for (i, slot) in streams.into_iter().enumerate() {
             match slot {
                 Some(s) => accepted.push(s),
                 // unreachable: m accepts, each filling a distinct empty slot
-                None => bail!("worker {id} never said hello"),
+                None => bail!("worker {} never said hello", base as usize + i),
             }
         }
-        let leader = Self::from_streams(accepted)?;
+        let mut leader = Self::from_streams(accepted)?;
+        leader.id_base = base;
         Ok((leader, local))
     }
 
@@ -187,11 +219,18 @@ impl TcpLeader {
             if peer.rbuf.len() < 5 + len {
                 break;
             }
-            let (kind, payload) = match (peer.rbuf.first(), peer.rbuf.get(5..5 + len)) {
-                (Some(&k), Some(p)) => (k, p.to_vec()),
-                // unreachable: rbuf.len() ≥ 5 + len was just checked
-                _ => break,
+            let Some(kind) = peer.rbuf.first().copied().and_then(FrameKind::from_byte) else {
+                // forged kind byte: sever the link rather than guess
+                peer.alive = false;
+                peer.rbuf.clear();
+                break;
             };
+            let mut payload = self.arena.take_bytes(len);
+            match peer.rbuf.get(5..5 + len) {
+                Some(p) => payload.extend_from_slice(p),
+                // unreachable: rbuf.len() ≥ 5 + len was just checked
+                None => break,
+            }
             peer.rbuf.drain(..5 + len);
             peer.inbox.push_back(Frame { kind, payload });
         }
@@ -275,11 +314,12 @@ impl TcpLeader {
     }
 
     fn drain_dead(&mut self) -> Vec<u32> {
+        let base = self.id_base;
         let mut dead = Vec::new();
         for (i, p) in self.peers.iter_mut().enumerate() {
             if !p.alive && !p.reported_dead {
                 p.reported_dead = true;
-                dead.push(i as u32);
+                dead.push(base + i as u32);
             }
         }
         dead
@@ -287,7 +327,10 @@ impl TcpLeader {
 
     fn drain_inboxes(&mut self, ids: &[u32], out: &mut Vec<(u32, Frame)>) {
         for &id in ids {
-            if let Some(peer) = self.peers.get_mut(id as usize) {
+            let Some(s) = self.slot(id) else {
+                continue;
+            };
+            if let Some(peer) = self.peers.get_mut(s) {
                 while let Some(f) = peer.inbox.pop_front() {
                     out.push((id, f));
                 }
@@ -332,7 +375,7 @@ impl Transport for TcpLeader {
             }
             let any_live = ids
                 .iter()
-                .any(|&id| self.peers.get(id as usize).is_some_and(|p| p.alive));
+                .any(|&id| self.slot(id).and_then(|s| self.peers.get(s)).is_some_and(|p| p.alive));
             if !any_live {
                 break;
             }
@@ -387,8 +430,10 @@ impl Transport for TcpLeader {
         // frames beyond the one-per-worker contract go back to their
         // inboxes, ahead of anything that arrived later
         for (id, frame) in extras.into_iter().rev() {
-            if let Some(peer) = self.peers.get_mut(id as usize) {
-                peer.inbox.push_front(frame);
+            if let Some(s) = self.slot(id) {
+                if let Some(peer) = self.peers.get_mut(s) {
+                    peer.inbox.push_front(frame);
+                }
             }
         }
         // every slot is Some here (the loop only exits when `remaining`
@@ -397,12 +442,19 @@ impl Transport for TcpLeader {
     }
 
     fn send_to(&mut self, id: u32, frame: &Frame) -> Result<()> {
-        if (id as usize) >= self.peers.len() {
+        let Some(s) = self.slot(id) else {
             bail!("no stream for worker {id}");
-        }
+        };
         let bytes = frame_bytes(frame);
-        self.write_peer(id as usize, &bytes);
+        self.write_peer(s, &bytes);
         Ok(())
+    }
+
+    /// A consumed frame's payload buffer rejoins the receive pool, so
+    /// the next [`TcpLeader::read_peer`] reassembly reuses it instead of
+    /// allocating.
+    fn recycle_frame(&mut self, frame: Frame) {
+        self.arena.put_bytes(frame.payload);
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -421,7 +473,8 @@ impl TcpWorker {
     pub fn connect(addr: &str, id: u32) -> Result<Self> {
         let mut stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        write_frame(&mut stream, &Frame { kind: 0, payload: id.to_le_bytes().to_vec() })?;
+        let hello = Frame { kind: FrameKind::Hello, payload: id.to_le_bytes().to_vec() };
+        write_frame(&mut stream, &hello)?;
         Ok(TcpWorker { stream, id })
     }
 
@@ -590,10 +643,80 @@ mod tests {
             write_frame(&mut s, &f).unwrap(); // echo
         });
         let mut c = TcpStream::connect(addr).unwrap();
-        let sent = Frame { kind: 7, payload: (0..255u8).collect() };
+        let sent = Frame::batch((0..255u8).collect());
         write_frame(&mut c, &sent).unwrap();
         let got = read_frame(&mut c).unwrap();
         assert_eq!(got, sent);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_kind_byte_is_rejected_by_blocking_reads() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // kind byte 9 was never assigned; zero-length payload
+            s.write_all(&[9u8, 0, 0, 0, 0]).unwrap();
+            // hold the socket open until the client has read the header
+            let _ = read_frame(&mut s);
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let err = read_frame(&mut c).unwrap_err();
+        assert!(err.to_string().contains("unknown frame kind"), "{err}");
+        drop(c);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn recycled_payload_buffers_return_to_the_receive_pool() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(&addr, 0).unwrap();
+            w.send(&Frame::grad(vec![1; 64])).unwrap();
+            assert_eq!(w.recv().unwrap().kind, FRAME_SHUTDOWN);
+        });
+        let mut tl = accept_n(&listener, 1);
+        let g = tl.gather_until(&[0], 1, Some(Duration::from_secs(10))).unwrap();
+        let (_, frame) = g.arrived.into_iter().next().unwrap();
+        let ptr = frame.payload.as_ptr();
+        let cap = frame.payload.capacity();
+        tl.recycle_frame(frame);
+        // LIFO pool: the very buffer we recycled is the next take —
+        // this is what read_peer draws on for future reassemblies
+        let reused = tl.arena.take_bytes(1);
+        assert!(reused.is_empty());
+        assert_eq!(reused.as_ptr(), ptr);
+        assert!(reused.capacity() >= cap);
+        tl.shutdown().unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn range_leader_speaks_global_ids() {
+        // a sub-aggregator owning the global leaf slice 4..5: gather
+        // tags, send_to targets, and range checks all use global ids
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(&addr, 4).unwrap();
+            let _ = w.recv().unwrap();
+            w.send(&Frame::grad(vec![9])).unwrap();
+            assert_eq!(w.recv().unwrap().kind, FRAME_SHUTDOWN);
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let _hello = read_frame(&mut s).unwrap();
+        let mut tl = TcpLeader::from_streams(vec![s]).unwrap();
+        tl.id_base = 4;
+        tl.broadcast(&Frame::params(params_to_bytes(&[1.0]))).unwrap();
+        let g = tl.gather_until(&[4], 1, Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(g.arrived.len(), 1);
+        assert_eq!(g.arrived[0].0, 4);
+        assert_eq!(g.arrived[0].1, Frame::grad(vec![9]));
+        // ids below the base are not this leader's leaves
+        assert!(tl.send_to(3, &Frame::shutdown()).is_err());
+        tl.send_to(4, &Frame::shutdown()).unwrap();
         t.join().unwrap();
     }
 
@@ -605,7 +728,8 @@ mod tests {
         let t = std::thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
             s.set_nodelay(true).unwrap();
-            write_frame(&mut s, &Frame { kind: 0, payload: 0u32.to_le_bytes().to_vec() }).unwrap();
+            let hello = Frame { kind: FrameKind::Hello, payload: 0u32.to_le_bytes().to_vec() };
+            write_frame(&mut s, &hello).unwrap();
             let bytes = frame_bytes(&Frame::grad(vec![1, 2, 3, 4, 5]));
             for b in bytes {
                 s.write_all(&[b]).unwrap();

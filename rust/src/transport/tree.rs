@@ -1,0 +1,481 @@
+//! Tree topology: leaf workers attach to sub-aggregators, the leader
+//! talks to sub-aggregators only — fan-in drops from M to ~√M.
+//!
+//! Three pieces live here:
+//!
+//! * [`TreePlan`] — the pure leaf↔sub-aggregator id arithmetic
+//!   (contiguous slices of the global leaf id space, `fanout` leaves per
+//!   group);
+//! * the **batch codec** ([`encode_batch`]/[`decode_batch`]) — one
+//!   [`FrameKind::Batch`] frame carrying a sub-aggregator's combined,
+//!   *attributed* upward message: each leaf reply rides verbatim with
+//!   its global worker id, plus the group's newly-dead leaf list. The
+//!   per-leaf frames inside are byte-identical to what the leaves sent,
+//!   so the leader's EF shadow/ack accounting and charge-once bit
+//!   metering are unchanged by the extra tier;
+//! * [`TreeLeader`] — a [`Transport`] adapter that makes a tree of
+//!   sub-aggregator links look like the flat star the
+//!   [`crate::engine::RoundEngine`] speaks: broadcasts fan out through
+//!   the sub-aggregators (which relay the round frame — acks included —
+//!   verbatim to their leaves), gathers unwrap batch frames back into
+//!   per-leaf replies, and a dead sub-aggregator surfaces as its whole
+//!   leaf range dying.
+//!
+//! Wire note: the batch layout below is leader↔sub-aggregator only; the
+//! leaf-facing protocol is exactly the pinned v3 round frame
+//! (`engine/framing.rs`), which is why a 2-tier run is bit-identical to
+//! the star (`tests/prop_tree.rs`).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::{Frame, FrameKind, Gathered, Transport};
+
+/// Version byte of the sub-aggregator batch frame.
+pub const BATCH_VERSION: u8 = 0xB1;
+
+/// Leaf↔group arithmetic for a two-level tree: group `g` owns the
+/// contiguous global leaf ids `g*fanout .. min((g+1)*fanout, leaves)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreePlan {
+    leaves: usize,
+    fanout: usize,
+}
+
+impl TreePlan {
+    pub fn new(leaves: usize, fanout: usize) -> Result<Self> {
+        if leaves == 0 {
+            bail!("tree needs at least one leaf");
+        }
+        if fanout == 0 {
+            bail!("tree fanout must be >= 1 (0 means auto only via resolve)");
+        }
+        Ok(TreePlan { leaves, fanout })
+    }
+
+    /// `fanout == 0` means auto: the smallest f with f² ≥ leaves, which
+    /// balances leaf fan-in against root fan-in at ~√M each.
+    pub fn resolve(leaves: usize, fanout: usize) -> Result<Self> {
+        let f = if fanout == 0 { Self::auto_fanout(leaves) } else { fanout };
+        Self::new(leaves, f)
+    }
+
+    /// Smallest `f` with `f * f >= leaves` (integer, no floats).
+    pub fn auto_fanout(leaves: usize) -> usize {
+        let mut f = 1usize;
+        while f * f < leaves {
+            f += 1;
+        }
+        f
+    }
+
+    pub fn leaves(&self) -> usize {
+        self.leaves
+    }
+
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+
+    /// Number of sub-aggregator groups (= the leader's fan-in).
+    pub fn groups(&self) -> usize {
+        (self.leaves + self.fanout - 1) / self.fanout
+    }
+
+    /// The group that owns global leaf id `leaf`.
+    pub fn owner(&self, leaf: u32) -> u32 {
+        leaf / self.fanout as u32
+    }
+
+    /// Global leaf ids owned by `group` (empty for out-of-range groups).
+    pub fn range(&self, group: u32) -> std::ops::Range<u32> {
+        let lo = (group as usize * self.fanout).min(self.leaves);
+        let hi = (lo + self.fanout).min(self.leaves);
+        lo as u32..hi as u32
+    }
+}
+
+/// Encode a sub-aggregator's combined upward message: the leaves that
+/// died since the last report, then each gathered leaf frame verbatim,
+/// attributed by global worker id.
+///
+/// Layout: `ver(1) | n_dead(4 LE) | dead ids(4 LE each) | n(4 LE) |
+/// n × [worker(4 LE) | kind(1) | len(4 LE) | payload]`.
+pub fn encode_batch(dead: &[u32], frames: &[(u32, Frame)]) -> Frame {
+    let body: usize = frames.iter().map(|(_, f)| 9 + f.payload.len()).sum();
+    let mut payload = Vec::with_capacity(9 + 4 * dead.len() + body);
+    payload.push(BATCH_VERSION);
+    payload.extend_from_slice(&(dead.len() as u32).to_le_bytes());
+    for &d in dead {
+        payload.extend_from_slice(&d.to_le_bytes());
+    }
+    payload.extend_from_slice(&(frames.len() as u32).to_le_bytes());
+    for (w, f) in frames {
+        payload.extend_from_slice(&w.to_le_bytes());
+        payload.push(f.kind.as_byte());
+        payload.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&f.payload);
+    }
+    Frame::batch(payload)
+}
+
+fn take_u8(b: &[u8], off: &mut usize) -> Result<u8> {
+    let v = *b.get(*off).ok_or_else(|| anyhow::anyhow!("batch frame truncated at {}", *off))?;
+    *off += 1;
+    Ok(v)
+}
+
+fn take_u32(b: &[u8], off: &mut usize) -> Result<u32> {
+    let s = b
+        .get(*off..*off + 4)
+        .ok_or_else(|| anyhow::anyhow!("batch frame truncated at {}", *off))?;
+    *off += 4;
+    let mut w = [0u8; 4];
+    w.copy_from_slice(s);
+    Ok(u32::from_le_bytes(w))
+}
+
+/// Decode a batch frame into `(dead leaves, attributed leaf frames)`.
+/// Declared counts are validated against the bytes actually present
+/// before any allocation sized from them — a forged count is an error,
+/// never an attacker-sized preallocation. Trailing garbage is an error.
+pub fn decode_batch(frame: &Frame) -> Result<(Vec<u32>, Vec<(u32, Frame)>)> {
+    if frame.kind != FrameKind::Batch {
+        bail!("expected batch frame, got kind {}", frame.kind);
+    }
+    let b = &frame.payload;
+    let mut off = 0usize;
+    let ver = take_u8(b, &mut off)?;
+    if ver != BATCH_VERSION {
+        bail!("batch frame version {ver}, this build speaks v{BATCH_VERSION}");
+    }
+    let n_dead = take_u32(b, &mut off)? as usize;
+    // each dead id is 4 bytes; a forged count fails here, not at alloc
+    if b.len().saturating_sub(off) < 4 * n_dead {
+        bail!("batch frame declares {n_dead} dead ids, buffer too short");
+    }
+    let mut dead = Vec::with_capacity(n_dead);
+    for _ in 0..n_dead {
+        dead.push(take_u32(b, &mut off)?);
+    }
+    let n = take_u32(b, &mut off)? as usize;
+    // each entry is ≥ 9 bytes; bound the count by the remaining buffer
+    if b.len().saturating_sub(off) < 9usize.saturating_mul(n) {
+        bail!("batch frame declares {n} entries, buffer too short");
+    }
+    let mut frames = Vec::with_capacity(n);
+    for _ in 0..n {
+        let worker = take_u32(b, &mut off)?;
+        let kind_byte = take_u8(b, &mut off)?;
+        let Some(kind) = FrameKind::from_byte(kind_byte) else {
+            bail!("batch entry for worker {worker}: unknown frame kind byte {kind_byte}");
+        };
+        let len = take_u32(b, &mut off)? as usize;
+        let payload = b
+            .get(off..off + len)
+            .ok_or_else(|| anyhow::anyhow!("batch entry for worker {worker} truncated"))?
+            .to_vec();
+        off += len;
+        frames.push((worker, Frame { kind, payload }));
+    }
+    if off != b.len() {
+        bail!("batch frame has {} trailing bytes", b.len() - off);
+    }
+    Ok((dead, frames))
+}
+
+/// Leader-side [`Transport`] adapter over a tree: the inner transport's
+/// "workers" are sub-aggregator links (one per [`TreePlan`] group), but
+/// this adapter exposes the *leaf* id space, so the round engine runs
+/// unmodified. Gathers unwrap batch frames into attributed leaf replies;
+/// a dead sub-aggregator link surfaces as its entire leaf range dying
+/// (the engine's exclusion ladder then retires those leaves).
+pub struct TreeLeader<T: Transport> {
+    inner: T,
+    plan: TreePlan,
+    /// leaf died (reported by a batch dead-list or a dead group link)
+    leaf_dead: Vec<bool>,
+    /// inner link to this group is dead
+    sub_dead: Vec<bool>,
+    /// batch frames unwrapped so far (fan-in diagnostics)
+    batches_in: u64,
+    /// leaf frames carried by those batches
+    leaf_frames_in: u64,
+}
+
+impl<T: Transport> TreeLeader<T> {
+    /// `leaves` is the global leaf count M; `fanout == 0` picks ~√M.
+    /// The inner transport must hold exactly one link per group.
+    pub fn new(inner: T, leaves: usize, fanout: usize) -> Result<Self> {
+        let plan = TreePlan::resolve(leaves, fanout)?;
+        if inner.workers() != plan.groups() {
+            bail!(
+                "tree of {leaves} leaves × fanout {} needs {} sub-aggregator links, inner transport has {}",
+                plan.fanout(),
+                plan.groups(),
+                inner.workers()
+            );
+        }
+        Ok(TreeLeader {
+            inner,
+            plan,
+            leaf_dead: vec![false; leaves],
+            sub_dead: vec![false; plan.groups()],
+            batches_in: 0,
+            leaf_frames_in: 0,
+        })
+    }
+
+    pub fn plan(&self) -> &TreePlan {
+        &self.plan
+    }
+
+    /// The leader's fan-in: how many links it actually waits on per
+    /// round (the star equivalent is M).
+    pub fn fan_in(&self) -> usize {
+        self.plan.groups()
+    }
+
+    /// `(batches unwrapped, leaf frames carried)` since construction.
+    pub fn relay_stats(&self) -> (u64, u64) {
+        (self.batches_in, self.leaf_frames_in)
+    }
+
+    /// Live groups owning at least one live requested leaf, ascending.
+    fn subs_for(&self, ids: &[u32]) -> Vec<u32> {
+        let mut subs: Vec<u32> = Vec::new();
+        for &id in ids {
+            if self.leaf_dead.get(id as usize).copied().unwrap_or(true) {
+                continue;
+            }
+            let g = self.plan.owner(id);
+            if self.sub_dead.get(g as usize).copied().unwrap_or(true) {
+                continue;
+            }
+            if !subs.contains(&g) {
+                subs.push(g);
+            }
+        }
+        subs.sort_unstable();
+        subs
+    }
+
+    fn mark_leaf_dead(&mut self, leaf: u32, dead_out: &mut Vec<u32>) {
+        if let Some(slot) = self.leaf_dead.get_mut(leaf as usize) {
+            if !*slot {
+                *slot = true;
+                dead_out.push(leaf);
+            }
+        }
+    }
+
+    fn mark_sub_dead(&mut self, group: u32, out: &mut Gathered) {
+        if let Some(slot) = self.sub_dead.get_mut(group as usize) {
+            if !*slot {
+                *slot = true;
+                for leaf in self.plan.range(group) {
+                    self.mark_leaf_dead(leaf, &mut out.dead);
+                }
+            }
+        }
+    }
+
+    fn unpack(&mut self, frame: Frame, out: &mut Gathered) -> Result<()> {
+        let (dead, frames) = decode_batch(&frame)?;
+        self.batches_in += 1;
+        self.leaf_frames_in += frames.len() as u64;
+        for d in dead {
+            self.mark_leaf_dead(d, &mut out.dead);
+        }
+        out.arrived.extend(frames);
+        Ok(())
+    }
+}
+
+impl<T: Transport> Transport for TreeLeader<T> {
+    fn workers(&self) -> usize {
+        self.plan.leaves()
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        // each sub-aggregator relays the round frame — acks, excluded
+        // set and params included — verbatim to its leaves
+        self.inner.broadcast(frame)
+    }
+
+    fn is_real_time(&self) -> bool {
+        self.inner.is_real_time()
+    }
+
+    /// Virtual-time path: one blocking batch per owning sub-aggregator;
+    /// the flattened leaf set must match `ids` exactly (each participant
+    /// replies exactly once per round, so anything else is a protocol
+    /// violation — same contract as the flat channel star).
+    fn gather(&mut self, ids: &[u32]) -> Result<Vec<(u32, Frame)>> {
+        let mut subs: Vec<u32> = ids.iter().map(|&id| self.plan.owner(id)).collect();
+        subs.sort_unstable();
+        subs.dedup();
+        let mut out: Vec<(u32, Frame)> = Vec::with_capacity(ids.len());
+        for (_, frame) in self.inner.gather(&subs)? {
+            let (dead, frames) = decode_batch(&frame)?;
+            if !dead.is_empty() {
+                bail!("leaves {dead:?} died during a blocking gather");
+            }
+            self.batches_in += 1;
+            self.leaf_frames_in += frames.len() as u64;
+            out.extend(frames);
+        }
+        let mut got: Vec<u32> = out.iter().map(|(w, _)| *w).collect();
+        got.sort_unstable();
+        let mut want: Vec<u32> = ids.to_vec();
+        want.sort_unstable();
+        if got != want {
+            bail!("tree gather produced leaves {got:?}, want {want:?}");
+        }
+        Ok(out)
+    }
+
+    fn gather_until(
+        &mut self,
+        ids: &[u32],
+        need: usize,
+        deadline: Option<Duration>,
+    ) -> Result<Gathered> {
+        let start = Instant::now();
+        let mut out = Gathered::default();
+        loop {
+            if out.arrived.len() >= need {
+                break;
+            }
+            let subs = self.subs_for(ids);
+            if subs.is_empty() {
+                break;
+            }
+            let remaining = match deadline {
+                Some(d) => {
+                    let r = d.saturating_sub(start.elapsed());
+                    if r.is_zero() {
+                        break;
+                    }
+                    Some(r)
+                }
+                None => None,
+            };
+            let g = self.inner.gather_until(&subs, 1, remaining)?;
+            let mut progressed = false;
+            for (_, frame) in g.arrived {
+                progressed = true;
+                self.unpack(frame, &mut out)?;
+            }
+            for group in g.dead {
+                progressed = true;
+                self.mark_sub_dead(group, &mut out);
+            }
+            if !progressed {
+                // the inner deadline expired with nothing new: that is
+                // the engine's recovery cue
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Resend requests route to the owning sub-aggregator, which relays
+    /// them to the addressed leaf (the frame embeds the leaf id).
+    fn send_to(&mut self, id: u32, frame: &Frame) -> Result<()> {
+        if (id as usize) >= self.plan.leaves() {
+            bail!("no leaf {id} in this tree");
+        }
+        self.inner.send_to(self.plan.owner(id), frame)
+    }
+
+    fn recycle_frame(&mut self, frame: Frame) {
+        self.inner.recycle_frame(frame);
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.inner.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_partitions_the_leaf_space() {
+        let plan = TreePlan::resolve(10, 4).unwrap();
+        assert_eq!(plan.groups(), 3);
+        assert_eq!(plan.range(0), 0..4);
+        assert_eq!(plan.range(1), 4..8);
+        assert_eq!(plan.range(2), 8..10); // ragged tail
+        assert_eq!(plan.range(3), 10..10); // out of range: empty
+        for leaf in 0..10u32 {
+            assert!(plan.range(plan.owner(leaf)).contains(&leaf));
+        }
+    }
+
+    #[test]
+    fn auto_fanout_is_ceil_sqrt() {
+        assert_eq!(TreePlan::auto_fanout(1), 1);
+        assert_eq!(TreePlan::auto_fanout(4), 2);
+        assert_eq!(TreePlan::auto_fanout(5), 3);
+        assert_eq!(TreePlan::auto_fanout(100), 10);
+        assert_eq!(TreePlan::auto_fanout(101), 11);
+        // resolve(., 0) picks it; the fan-in at both tiers is ~√M
+        let plan = TreePlan::resolve(1000, 0).unwrap();
+        assert_eq!(plan.fanout(), 32);
+        assert_eq!(plan.groups(), 32);
+        assert!(TreePlan::new(0, 1).is_err());
+        assert!(TreePlan::new(4, 0).is_err());
+    }
+
+    #[test]
+    fn batch_roundtrip_preserves_frames_bytewise() {
+        let frames = vec![
+            (3u32, Frame::grad(vec![1, 2, 3])),
+            (7, Frame::grad(Vec::new())),
+            (11, Frame::params(vec![0xA3, 9])),
+        ];
+        let dead = vec![5u32, 6];
+        let b = encode_batch(&dead, &frames);
+        assert_eq!(b.kind, FrameKind::Batch);
+        let (d2, f2) = decode_batch(&b).unwrap();
+        assert_eq!(d2, dead);
+        assert_eq!(f2, frames);
+        // empty batch is legal (a sub-aggregator with nothing to report)
+        let (d3, f3) = decode_batch(&encode_batch(&[], &[])).unwrap();
+        assert!(d3.is_empty() && f3.is_empty());
+    }
+
+    #[test]
+    fn batch_decode_rejects_forged_input() {
+        // wrong kind
+        assert!(decode_batch(&Frame::grad(vec![BATCH_VERSION])).is_err());
+        // wrong version
+        assert!(decode_batch(&Frame::batch(vec![0xB0, 0, 0, 0, 0, 0, 0, 0, 0])).is_err());
+        let good = encode_batch(&[9], &[(2, Frame::grad(vec![5, 6]))]);
+        // truncations at every boundary
+        for cut in 1..good.payload.len() {
+            let t = Frame::batch(good.payload[..cut].to_vec());
+            assert!(decode_batch(&t).is_err(), "cut at {cut} decoded");
+        }
+        // trailing garbage
+        let mut padded = good.payload.clone();
+        padded.push(0);
+        assert!(decode_batch(&Frame::batch(padded)).is_err());
+        // forged dead count (huge, no matching bytes)
+        let mut forged = good.payload.clone();
+        forged[1..5].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_batch(&Frame::batch(forged)).is_err());
+        // forged entry count
+        let mut forged = good.payload.clone();
+        forged[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_batch(&Frame::batch(forged)).is_err());
+        // unknown inner kind byte
+        let mut bad_kind = good.payload.clone();
+        bad_kind[17] = 0xEE;
+        assert!(decode_batch(&Frame::batch(bad_kind)).is_err());
+    }
+}

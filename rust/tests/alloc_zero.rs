@@ -121,6 +121,72 @@ fn run_round(
     bits
 }
 
+/// Drive an engine round loop to steady state, then measure each
+/// round's allocation count individually. The engine's per-round
+/// buffers (reply vecs, ack stream, frame payloads through the
+/// transport recycle hooks) are either pooled or sized by warmup, so
+/// every steady-state round must allocate the *same* count — growth
+/// round-over-round means a recycle hook stopped returning buffers.
+fn measure_round_loop<T: mlmc_dist::transport::Transport>(transport: T) -> Vec<u64> {
+    use mlmc_dist::config::TrainConfig;
+    use mlmc_dist::engine::RoundEngine;
+
+    let mut cfg = TrainConfig::default();
+    cfg.workers = transport.workers();
+    cfg.link = "hetero".into();
+    cfg.seed = 11;
+    let server = Server::new(vec![0.0f32; 64], Box::new(Sgd { lr: 0.1 }), AggKind::Fresh);
+    let mut eng = RoundEngine::from_cfg(transport, server, &cfg).unwrap();
+    for _ in 0..WARMUP {
+        std::hint::black_box(eng.run_round().unwrap());
+    }
+    let mut per_round = Vec::new();
+    for _ in 0..6 {
+        ALLOCS.store(0, Ordering::SeqCst);
+        ARMED.store(true, Ordering::SeqCst);
+        std::hint::black_box(eng.run_round().unwrap());
+        ARMED.store(false, Ordering::SeqCst);
+        per_round.push(ALLOCS.load(Ordering::SeqCst));
+    }
+    eng.finish().unwrap();
+    per_round
+}
+
+fn flat_computes(m: usize) -> Vec<mlmc_dist::engine::Compute<'static>> {
+    use mlmc_dist::compress::Compressed;
+    use mlmc_dist::engine::{Compute, WorkerRound};
+    (0..m)
+        .map(|_| {
+            Box::new(move |round: &WorkerRound<'_>| {
+                if !round.participant {
+                    return Ok(None);
+                }
+                Ok(Some((0.5f32, Compressed::dense(vec![1.0f32; round.params.len()]))))
+            }) as Compute<'static>
+        })
+        .collect()
+}
+
+#[test]
+fn engine_round_loop_is_allocation_flat_in_steady_state() {
+    use mlmc_dist::engine::{local_star, local_tree};
+
+    let star = measure_round_loop(local_star(flat_computes(4)));
+    assert_eq!(
+        star.iter().min(),
+        star.iter().max(),
+        "star round loop must allocate a flat count per steady-state round, got {star:?}"
+    );
+    // the 2-tier tree adds the batch encode/decode relay on top — it
+    // may allocate more per round, but must be just as flat
+    let tree = measure_round_loop(local_tree(flat_computes(4), 2).unwrap());
+    assert_eq!(
+        tree.iter().min(),
+        tree.iter().max(),
+        "tree round loop must allocate a flat count per steady-state round, got {tree:?}"
+    );
+}
+
 #[test]
 fn steady_state_round_allocates_nothing() {
     let mut rng = Rng::new(3);

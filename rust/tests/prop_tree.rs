@@ -1,0 +1,216 @@
+//! Hierarchical-tree properties (ISSUE 9):
+//!
+//! (a) A [`RoundEngine`] on the in-process **2-tier tree** transport
+//!     ([`local_tree`]) is **bit-identical** to the same engine on the
+//!     flat star ([`local_star`]) — same reports, same ack stream, same
+//!     charge-once bit totals, same final parameters — for the
+//!     full/quorum/sampled policies, across fanouts. The batch codec
+//!     carries leaf replies byte-verbatim and the engine sorts replies
+//!     by worker, so the tree can't change a single decision.
+//! (b) Coded leaf redundancy ([`local_tree_coded`], `r = 2`) **never
+//!     changes the applied update**: with deterministic replicas the
+//!     first-reply-wins rule picks a byte-identical frame, so an `r = 2`
+//!     run restates the `r = 1` run bit for bit.
+//! (c) The real threaded tier — [`SubAggregator`] nodes over channel
+//!     transports, leaf workers running [`engine::run_worker`] — matches
+//!     the flat star too: the relay is invisible to the engine.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::thread;
+
+use mlmc_dist::compress::Compressed;
+use mlmc_dist::config::TrainConfig;
+use mlmc_dist::coordinator::{Server, SubAggregator};
+use mlmc_dist::ef::{AckEntry, AggKind};
+use mlmc_dist::engine::policy::{
+    ClientSampling, FixedQuorum, FullSync, ParticipationPolicy, StaleWeight,
+};
+use mlmc_dist::engine::{
+    self, local_star, local_tree, local_tree_coded, Compute, RoundEngine, RoundReport, WorkerRound,
+};
+use mlmc_dist::optim::Sgd;
+use mlmc_dist::transport::{channel, Transport, TreeLeader, TreePlan};
+
+const D: usize = 16;
+const ROUNDS: usize = 4;
+
+fn cfg(m: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.workers = m;
+    cfg.link = "hetero".into();
+    cfg.straggler = 0.03;
+    cfg.seed = 11;
+    cfg
+}
+
+type PolicyFactory = fn(usize) -> Box<dyn ParticipationPolicy>;
+
+fn policy_grid() -> Vec<(&'static str, PolicyFactory)> {
+    vec![
+        ("full", |_m| Box::new(FullSync::new(StaleWeight::Damp))),
+        ("quorum", |m| Box::new(FixedQuorum::new(m / 2 + 1, StaleWeight::Damp))),
+        ("sampled", |_m| Box::new(ClientSampling::new(0.4, 11, StaleWeight::Damp))),
+    ]
+}
+
+/// The per-worker deterministic reply: distinct per `(worker, step)` so
+/// any attribution mix-up in the relay shows up in the aggregate.
+fn grad_value(w: u32, step: u64) -> f32 {
+    (w as f32 + 1.0) * 0.01 + step as f32 * 0.001
+}
+
+/// One deterministic compute closure for worker `w`, optionally logging
+/// every observed ack as `(observed_step, worker, ack)`.
+fn compute(w: u32, log: Option<Rc<RefCell<Vec<(u64, u32, AckEntry)>>>>) -> Compute<'static> {
+    Box::new(move |round: &WorkerRound<'_>| {
+        if let Some(log) = &log {
+            for a in round.acks {
+                log.borrow_mut().push((round.step, w, *a));
+            }
+        }
+        if !round.participant {
+            return Ok(None);
+        }
+        let v = grad_value(w, round.step);
+        Ok(Some((v, Compressed::dense(vec![v; round.params.len()]))))
+    })
+}
+
+/// Drive `ROUNDS` rounds over any transport; return the reports, the
+/// final parameter bits, and the drained cumulative uplink total.
+fn run<T: Transport>(
+    transport: T,
+    cfg: &TrainConfig,
+    policy: Box<dyn ParticipationPolicy>,
+) -> (Vec<RoundReport>, Vec<u32>, u64) {
+    let server = Server::new(vec![0.0; D], Box::new(Sgd { lr: 0.1 }), AggKind::Fresh);
+    let mut eng = RoundEngine::with_policy(transport, server, cfg, policy).unwrap();
+    let reports: Vec<RoundReport> = (0..ROUNDS).map(|_| eng.run_round().unwrap()).collect();
+    let params: Vec<u32> = eng.params().iter().map(|p| p.to_bits()).collect();
+    let total_bits = eng.finish().unwrap().total_bits;
+    (reports, params, total_bits)
+}
+
+fn assert_runs_match(tag: &str, a: &(Vec<RoundReport>, Vec<u32>, u64), b: &(Vec<RoundReport>, Vec<u32>, u64)) {
+    for (e, t) in a.0.iter().zip(&b.0) {
+        assert_eq!(e.step, t.step, "{tag}");
+        assert_eq!(e.participants, t.participants, "{tag} step {}", e.step);
+        assert_eq!(e.on_time, t.on_time, "{tag} step {}", e.step);
+        assert_eq!(e.late, t.late, "{tag} step {}", e.step);
+        assert_eq!(e.applied_stale, t.applied_stale, "{tag} step {}", e.step);
+        assert_eq!(e.dropped_stale, t.dropped_stale, "{tag} step {}", e.step);
+        assert_eq!(e.bits, t.bits, "{tag} step {}", e.step);
+        assert_eq!(e.total_bits, t.total_bits, "{tag} step {}", e.step);
+        assert_eq!(e.resent, t.resent, "{tag} step {}", e.step);
+        assert_eq!(e.gave_up, t.gave_up, "{tag} step {}", e.step);
+        assert_eq!(e.excluded, t.excluded, "{tag} step {}", e.step);
+        assert_eq!(e.dead, t.dead, "{tag} step {}", e.step);
+        assert_eq!(
+            e.mean_loss.to_bits(),
+            t.mean_loss.to_bits(),
+            "{tag} step {}: loss {} vs {}",
+            e.step,
+            e.mean_loss,
+            t.mean_loss
+        );
+        assert_eq!(e.sim_round_s.to_bits(), t.sim_round_s.to_bits(), "{tag} step {}", e.step);
+        assert_eq!(e.sim_now_s.to_bits(), t.sim_now_s.to_bits(), "{tag} step {}", e.step);
+        assert_eq!(e.acks, t.acks, "{tag} step {}", e.step);
+        assert_eq!(e.tiers, t.tiers, "{tag} step {}", e.step);
+    }
+    assert_eq!(a.1, b.1, "{tag}: final parameter bits");
+    assert_eq!(a.2, b.2, "{tag}: drained uplink totals");
+}
+
+#[test]
+fn two_tier_tree_is_bit_identical_to_the_flat_star() {
+    for &m in &[4usize, 9, 16] {
+        for &fanout in &[0usize, 2] {
+            for (name, factory) in policy_grid() {
+                let cfg = cfg(m);
+                let tag = format!("{name} m={m} fanout={fanout}");
+
+                let star_log = Rc::new(RefCell::new(Vec::new()));
+                let star_computes: Vec<Compute<'_>> =
+                    (0..m as u32).map(|w| compute(w, Some(Rc::clone(&star_log)))).collect();
+                let star = run(local_star(star_computes), &cfg, factory(m));
+
+                let tree_log = Rc::new(RefCell::new(Vec::new()));
+                let tree_computes: Vec<Compute<'_>> =
+                    (0..m as u32).map(|w| compute(w, Some(Rc::clone(&tree_log)))).collect();
+                let tree = run(local_tree(tree_computes, fanout).unwrap(), &cfg, factory(m));
+
+                assert_runs_match(&tag, &star, &tree);
+                assert_eq!(
+                    *star_log.borrow(),
+                    *tree_log.borrow(),
+                    "{tag}: workers observed different ack streams"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replicated_leaves_never_change_the_applied_update() {
+    let m = 6;
+    for &fanout in &[0usize, 3] {
+        for (name, factory) in policy_grid() {
+            let cfg = cfg(m);
+            let tag = format!("{name} m={m} fanout={fanout} r=2");
+            let groups_r1: Vec<Vec<Compute<'_>>> =
+                (0..m as u32).map(|w| vec![compute(w, None)]).collect();
+            let groups_r2: Vec<Vec<Compute<'_>>> =
+                (0..m as u32).map(|w| vec![compute(w, None), compute(w, None)]).collect();
+            let solo = run(local_tree_coded(groups_r1, fanout).unwrap(), &cfg, factory(m));
+            let coded = run(local_tree_coded(groups_r2, fanout).unwrap(), &cfg, factory(m));
+            assert_runs_match(&tag, &solo, &coded);
+        }
+    }
+}
+
+#[test]
+fn threaded_subaggregator_tier_matches_the_flat_star() {
+    let m = 4usize;
+    let fanout = 2usize;
+    for (name, factory) in policy_grid() {
+        let cfg = cfg(m);
+        let tag = format!("{name} threaded m={m} fanout={fanout}");
+
+        let star_computes: Vec<Compute<'_>> = (0..m as u32).map(|w| compute(w, None)).collect();
+        let star = run(local_star(star_computes), &cfg, factory(m));
+
+        // the real tier: one SubAggregator thread per group relaying to
+        // its own channel star of leaf-worker threads
+        let plan = TreePlan::resolve(m, fanout).unwrap();
+        let (root, sub_ports) = channel::star(plan.groups());
+        let mut handles = Vec::new();
+        for (g, up) in sub_ports.into_iter().enumerate() {
+            let range = plan.range(g as u32);
+            let leaves = (range.end - range.start) as usize;
+            let (down, leaf_ports) = channel::star_from(range.start, leaves);
+            for mut port in leaf_ports {
+                let w = port.id;
+                handles.push(thread::spawn(move || {
+                    engine::run_worker(&mut port, move |round: &WorkerRound<'_>| {
+                        if !round.participant {
+                            return Ok(None);
+                        }
+                        let v = grad_value(w, round.step);
+                        Ok(Some((v, Compressed::dense(vec![v; round.params.len()]))))
+                    })
+                    .unwrap();
+                }));
+            }
+            handles.push(thread::spawn(move || {
+                SubAggregator::new(up, down, range.start).unwrap().run().unwrap();
+            }));
+        }
+        let tree = run(TreeLeader::new(root, m, fanout).unwrap(), &cfg, factory(m));
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_runs_match(&tag, &star, &tree);
+    }
+}
