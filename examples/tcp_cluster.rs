@@ -33,6 +33,11 @@
 //!        tcp_cluster subagg --addr 127.0.0.1:7487 --id 0 --leaf-addr 127.0.0.1:7488 \
 //!            --workers 4 --fanout 2 --timeout-ms 500
 //!        tcp_cluster worker --addr 127.0.0.1:7488 --id 0
+//!
+//!    Adding `--reduce tier` to the leader switches the tree to in-tier
+//!    partial reduction (metadata up, schedule down, one dense partial
+//!    per group — the sub-aggregators need no extra flags, the round
+//!    frame carries the mode).
 
 use std::net::TcpListener;
 use std::time::Duration;
@@ -110,7 +115,7 @@ fn synth_leader(args: &[String]) -> anyhow::Result<()> {
         args,
         &[
             "--addr", "--workers", "--steps", "--quorum", "--timeout-ms", "--resend-max",
-            "--exclude-after", "--readmit-every", "--fanout",
+            "--exclude-after", "--readmit-every", "--fanout", "--reduce",
         ],
     );
     let addr = arg_val(args, "--addr").unwrap_or_else(|| "127.0.0.1:7477".into());
@@ -131,6 +136,11 @@ fn synth_leader(args: &[String]) -> anyhow::Result<()> {
     if tree {
         cfg.set("topology", "tree").unwrap();
         cfg.fanout = arg_num(args, "--fanout", 0);
+    }
+    // --reduce tier: in-tier partial reduction (tree only; validate
+    // rejects the combination with a star or an Accumulate method)
+    if let Some(r) = arg_val(args, "--reduce") {
+        cfg.set("reduce", &r).map_err(anyhow::Error::msg)?;
     }
     cfg.validate().map_err(anyhow::Error::msg)?;
 

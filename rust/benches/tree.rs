@@ -4,23 +4,38 @@
 //! links to ~sqrt(M) — along with rounds/sec and simulated time so the
 //! relay hop's latency cost is visible next to its fan-in win.
 //!
-//! Three topologies per M:
-//!  - `star`:     the flat baseline, root fan-in = participants (= M)
-//!  - `tree`:     auto fanout (smallest f with f² ≥ M), replication 1
-//!  - `tree_r2`:  same tree with coded leaves, r = 2 replicas per
-//!                logical shard over the *same physical population*
-//!                (logical M halves; first on-time replica wins)
+//! Four topologies per M:
+//!  - `star`:      the flat baseline, root fan-in = participants (= M)
+//!  - `tree`:      auto fanout (smallest f with f² ≥ M), replication 1,
+//!                 leaf replies relayed verbatim (`reduce = "root"`)
+//!  - `tree_tier`: same tree with in-tier partial reduction
+//!                 (`reduce = "tier"`): each active group ships one
+//!                 dense partial, so root ingress collapses from
+//!                 M·up_bits to ~sqrt(M)·up_bits
+//!  - `tree_r2`:   verbatim tree with coded leaves, r = 2 replicas per
+//!                 logical shard over the *same physical population*
+//!                 (logical M halves; first on-time replica wins)
 //!
-//! Emits `results/BENCH_tree.json`. Smoke mode (CI):
-//! `MLMC_BENCH_MS=60 TREE_BENCH_M=1000 cargo bench -p mlmc-dist
-//! --bench tree`. The binary asserts in-process that every tree case's
-//! root fan-in lands strictly below its star twin's.
+//! Each case also times the root's reduce work directly
+//! (`root_reduce_ns`): decode-and-accumulate every verbatim reply, vs
+//! axpy-combining the tier's pre-decoded partials.
+//!
+//! Emits `results/BENCH_tree.json` with the headline
+//! `tier_reduce_ingress_ratio` (verbatim root bits / tier root bits at
+//! the largest M). Smoke mode (CI): `MLMC_BENCH_MS=60 TREE_BENCH_M=1000
+//! cargo bench -p mlmc-dist --bench tree`. The binary asserts
+//! in-process that every tree case's root fan-in lands strictly below
+//! its star twin's, and that tier-reduced root ingress never exceeds
+//! the verbatim tree's for this dense message model.
 
 use std::time::{Duration, Instant};
 
+use mlmc_dist::compress::{Compressed, ScratchArena};
 use mlmc_dist::ef::AggKind;
 use mlmc_dist::engine::policy::{FullSync, ParticipationPolicy, StaleWeight};
 use mlmc_dist::netsim::{CostSpec, RoundSim, Topology};
+use mlmc_dist::transport::TreePlan;
+use mlmc_dist::wire::{decode_add_in, encode_into, WorkerMsg};
 
 /// Constant-size message model, matched to `benches/scale.rs`: a
 /// 64-f32 dense uplink reply against a 1024-f32 broadcast.
@@ -42,13 +57,61 @@ struct Case {
     leaf_fan_in: usize,
     /// uplink bits into the root in the last round
     root_bits: u64,
+    /// `root_bits` as bytes — the fan-in claim in wire units
+    root_ingress_bytes: u64,
+    /// measured root-side reduce cost per round: decode-and-accumulate
+    /// every verbatim reply (star/tree), or axpy-combine the tier's
+    /// pre-decoded partials (tree_tier)
+    root_reduce_ns: f64,
+}
+
+/// Message dimension matching `UP_BITS` (dense f32 payload).
+const REDUCE_D: usize = 64;
+
+/// Time the root's per-round reduce work for `n` incoming messages.
+/// Verbatim mode decodes each wire reply and accumulates it
+/// ([`decode_add_in`] — the root-reduce hot path); tier mode combines
+/// `n` already-dense partials with one axpy each, which is the entire
+/// numeric cost left at the root under `reduce = "tier"`.
+fn root_reduce_ns(n: usize, tier: bool) -> f64 {
+    let mut acc = vec![0.0f32; REDUCE_D];
+    let weight = 1.0 / n.max(1) as f32;
+    let budget = Duration::from_millis(20);
+    let mut rounds = 0u64;
+    let t = Instant::now();
+    if tier {
+        let partial = vec![0.001f32; REDUCE_D];
+        while rounds < 3 || t.elapsed() < budget {
+            for _ in 0..n {
+                mlmc_dist::tensor::axpy(&mut acc, weight, &partial);
+            }
+            std::hint::black_box(&mut acc);
+            rounds += 1;
+        }
+    } else {
+        let mut arena = ScratchArena::new();
+        let mut buf = Vec::new();
+        let msg = WorkerMsg {
+            step: 0,
+            worker: 0,
+            comp: Compressed::dense(vec![0.001f32; REDUCE_D]),
+        };
+        encode_into(&mut buf, &msg);
+        while rounds < 3 || t.elapsed() < budget {
+            for _ in 0..n {
+                std::hint::black_box(decode_add_in(&buf, &mut acc, weight, &mut arena));
+            }
+            rounds += 1;
+        }
+    }
+    t.elapsed().as_nanos() as f64 / rounds as f64
 }
 
 fn policy() -> Box<dyn ParticipationPolicy> {
     Box::new(FullSync::new(StaleWeight::Damp))
 }
 
-fn bench_topology(m: usize, name: &'static str, topology: Topology) -> Case {
+fn bench_topology(m: usize, name: &'static str, topology: Topology, tier: bool) -> Case {
     let budget_ms: u64 = std::env::var("MLMC_BENCH_MS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -63,6 +126,11 @@ fn bench_topology(m: usize, name: &'static str, topology: Topology) -> Case {
     let mut sim = RoundSim::new(cost, policy(), AggKind::Fresh, UP_BITS, DOWN_BITS)
         .with_topology(topology)
         .expect("bench topology must resolve");
+    if tier {
+        // each group's dense partial is the same 64-f32 payload a
+        // single leaf ships, so the reduced frame costs UP_BITS
+        sim = sim.with_reduce(UP_BITS).expect("tier reduction on a tree topology");
+    }
     let logical_m = sim.logical_m();
     let t = Instant::now();
     let mut rounds = 0u64;
@@ -80,9 +148,19 @@ fn bench_topology(m: usize, name: &'static str, topology: Topology) -> Case {
     sim.drain_pending();
     let wall = t.elapsed().as_secs_f64();
     let rounds_per_s = if wall > 0.0 { rounds as f64 / wall } else { 0.0 };
+    // root-side reduce cost: verbatim roots decode every logical reply;
+    // a tier-reduced root only combines the ~sqrt(M) group partials
+    let reduce_n = if tier {
+        TreePlan::resolve(logical_m, 0).expect("bench plan resolves").groups()
+    } else {
+        logical_m
+    };
+    let reduce_ns = root_reduce_ns(reduce_n, tier);
     println!(
-        "M={m:<7} {name:<8} logical={logical_m:<7} root_fan_in={root_fan_in:<6} \
-         leaf_fan_in={leaf_fan_in:<5} rounds={rounds:<6} {rounds_per_s:>9.1} rounds/s  sim={:.3}s",
+        "M={m:<7} {name:<9} logical={logical_m:<7} root_fan_in={root_fan_in:<6} \
+         leaf_fan_in={leaf_fan_in:<5} ingress={:<9}B reduce={reduce_ns:>11.0}ns \
+         rounds={rounds:<6} {rounds_per_s:>9.1} rounds/s  sim={:.3}s",
+        root_bits / 8,
         sim.sim_now_s()
     );
     Case {
@@ -95,6 +173,8 @@ fn bench_topology(m: usize, name: &'static str, topology: Topology) -> Case {
         root_fan_in,
         leaf_fan_in,
         root_bits,
+        root_ingress_bytes: root_bits / 8,
+        root_reduce_ns: reduce_ns,
     }
 }
 
@@ -108,14 +188,59 @@ fn main() {
 
     let mut cases: Vec<Case> = Vec::new();
     for &m in &ms {
-        cases.push(bench_topology(m, "star", Topology::Star));
-        cases.push(bench_topology(m, "tree", Topology::Tree { fanout: 0, replication: 1 }));
+        cases.push(bench_topology(m, "star", Topology::Star, false));
+        let tree = Topology::Tree { fanout: 0, replication: 1 };
+        cases.push(bench_topology(m, "tree", tree, false));
+        cases.push(bench_topology(m, "tree_tier", tree, true));
         if m % 2 == 0 {
-            cases.push(bench_topology(m, "tree_r2", Topology::Tree { fanout: 0, replication: 2 }));
+            cases.push(bench_topology(
+                m,
+                "tree_r2",
+                Topology::Tree { fanout: 0, replication: 2 },
+                false,
+            ));
         }
     }
 
-    write_json(&cases);
+    // headline: how much root ingress the in-tier reduction saves over
+    // the verbatim tree at the largest population
+    let m_max = *ms.last().expect("nonempty grid");
+    let verbatim = cases
+        .iter()
+        .find(|c| c.m == m_max && c.topology == "tree")
+        .expect("verbatim tree case present");
+    let tier = cases
+        .iter()
+        .find(|c| c.m == m_max && c.topology == "tree_tier")
+        .expect("tier tree case present");
+    let ingress_ratio = verbatim.root_bits as f64 / tier.root_bits.max(1) as f64;
+    println!(
+        "tier_reduce_ingress_ratio: {ingress_ratio:.1}x at M={m_max} \
+         ({} B verbatim vs {} B tier-reduced)",
+        verbatim.root_ingress_bytes, tier.root_ingress_bytes
+    );
+
+    write_json(&cases, ingress_ratio);
+
+    // the ingress contract, asserted in-binary: for this dense message
+    // model a tier-reduced root never ingests more than the verbatim
+    // tree (one partial per group vs every leaf payload relayed)
+    for &m in &ms {
+        let verbatim = cases
+            .iter()
+            .find(|c| c.m == m && c.topology == "tree")
+            .expect("verbatim tree case present");
+        let tier = cases
+            .iter()
+            .find(|c| c.m == m && c.topology == "tree_tier")
+            .expect("tier tree case present");
+        assert!(
+            tier.root_bits <= verbatim.root_bits,
+            "M={m}: tier-reduced root ingress {} exceeds verbatim {}",
+            tier.root_bits,
+            verbatim.root_bits
+        );
+    }
 
     // the fan-in contract, asserted in-binary: every tree case's root
     // fan-in must land strictly below its star twin's
@@ -143,12 +268,13 @@ fn main() {
     }
 }
 
-fn write_json(cases: &[Case]) {
+fn write_json(cases: &[Case], ingress_ratio: f64) {
     use std::fmt::Write as _;
     let mut s = String::new();
     s.push_str("{\n  \"suite\": \"tree\",\n");
     let _ = writeln!(s, "  \"up_bits\": {UP_BITS},");
     let _ = writeln!(s, "  \"down_bits\": {DOWN_BITS},");
+    let _ = writeln!(s, "  \"tier_reduce_ingress_ratio\": {ingress_ratio:.3},");
     s.push_str("  \"cases\": [\n");
     for (i, c) in cases.iter().enumerate() {
         let comma = if i + 1 < cases.len() { "," } else { "" };
@@ -156,7 +282,8 @@ fn write_json(cases: &[Case]) {
             s,
             "    {{\"m\": {}, \"topology\": {:?}, \"logical_m\": {}, \"rounds\": {}, \
              \"rounds_per_s\": {:.3}, \"sim_s\": {:.6}, \"root_fan_in\": {}, \
-             \"leaf_fan_in\": {}, \"root_bits\": {}}}{}",
+             \"leaf_fan_in\": {}, \"root_bits\": {}, \"root_ingress_bytes\": {}, \
+             \"root_reduce_ns\": {:.0}}}{}",
             c.m,
             c.topology,
             c.logical_m,
@@ -166,6 +293,8 @@ fn write_json(cases: &[Case]) {
             c.root_fan_in,
             c.leaf_fan_in,
             c.root_bits,
+            c.root_ingress_bytes,
+            c.root_reduce_ns,
             comma
         );
     }

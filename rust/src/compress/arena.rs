@@ -23,10 +23,12 @@
 //!   path keeps its scoped-thread allocations (thread spawn allocates
 //!   anyway); the zero-allocation contract is per-thread.
 //!
-//! Known allocators that remain outside the contract: `RandK`'s lazy
-//! Fisher–Yates `HashMap` and the boxed-context MLMC fallback for
-//! multilevel families without a [`crate::mlmc::Multilevel::draw_in`]
-//! override. See README §"Hot path".
+//! Known allocators that remain outside the contract: the
+//! boxed-context MLMC fallback for multilevel families without a
+//! [`crate::mlmc::Multilevel::draw_in`] override. (`RandK` used to be
+//! on this list for its lazy Fisher–Yates `HashMap`; its scratch is now
+//! a sorted arena-lent `u64` buffer, see [`crate::tensor::Rng::choose_k_with`].)
+//! See README §"Hot path".
 
 use super::{Compressed, Payload};
 use crate::tensor::Rng;

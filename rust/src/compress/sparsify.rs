@@ -123,7 +123,9 @@ impl Compressor for RandK {
         let d = v.len();
         let k = self.k.min(d);
         let mut idx = arena.take_u32(k);
-        rng.choose_k_into(d, k, &mut idx);
+        let mut swaps = arena.take_u64(k);
+        rng.choose_k_with(d, k, &mut idx, &mut swaps);
+        arena.put_u64(swaps);
         let scale = d as f32 / k as f32;
         let mut val = arena.take_f32(k);
         kernels::gather_scaled(v, &idx, scale, &mut val);

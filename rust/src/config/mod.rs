@@ -292,6 +292,13 @@ pub struct TrainConfig {
     /// children per tree group (tree only; 0 = auto, the smallest f
     /// with f^2 >= M)
     pub fanout: usize,
+    /// where leaf replies are numerically reduced: "root" (default —
+    /// every payload travels to the leader verbatim) or "tier" (each
+    /// sub-aggregator reduces its owned leaves into one dense partial
+    /// per group under the leader's schedule; tree only, Fresh-agg
+    /// methods only, bit-identical to "root" by the group-blocked
+    /// canonical order)
+    pub reduce: String,
     /// physical replicas per logical leaf (tree only; 1 = uncoded.
     /// With r > 1 each leaf's shard is served by r workers and the
     /// first on-time reply wins — coded straggler redundancy)
@@ -336,6 +343,7 @@ impl Default for TrainConfig {
             readmit_every: 8,
             topology: "star".into(),
             fanout: 0,
+            reduce: "root".into(),
             replication: 1,
             tag: String::new(),
         }
@@ -407,6 +415,7 @@ impl TrainConfig {
             "readmit_every" => self.readmit_every = p(val, key)?,
             "topology" => self.topology = val.to_string(),
             "fanout" => self.fanout = p(val, key)?,
+            "reduce" => self.reduce = val.to_string(),
             "replication" => self.replication = p(val, key)?,
             "tag" => self.tag = val.to_string(),
             other => return Err(format!("unknown config key {other:?}")),
@@ -518,6 +527,28 @@ impl TrainConfig {
         }
         if self.replication == 0 {
             return Err("replication must be >= 1".into());
+        }
+        if self.reduce != "root" && self.reduce != "tier" {
+            return Err(format!(
+                "unknown reduce mode {:?} (known: \"root\", \"tier\")",
+                self.reduce
+            ));
+        }
+        if self.reduce == "tier" {
+            if self.topology != "tree" {
+                return Err(
+                    "reduce = \"tier\" needs a relay tier to reduce at (set topology = \"tree\")"
+                        .into(),
+                );
+            }
+            if crate::coordinator::agg_kind(&self.method) == crate::ef::AggKind::Accumulate {
+                return Err(format!(
+                    "reduce = \"tier\" cannot host method {} — Accumulate (EF21-family) \
+                     methods keep per-worker shadows at the leader, which needs every \
+                     payload verbatim (use reduce = \"root\")",
+                    self.method
+                ));
+            }
         }
         if self.topology == "star" {
             if self.fanout != 0 {
@@ -641,6 +672,9 @@ impl TrainConfig {
             }
             if self.replication > 1 {
                 scenario.push_str(&format!("_r{}", self.replication));
+            }
+            if self.reduce == "tier" {
+                scenario.push_str("_tred");
             }
         }
         let tag = if self.tag.is_empty() { String::new() } else { format!("_{}", self.tag) };
@@ -990,6 +1024,39 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.topology, "tree");
         assert_eq!((cfg.fanout, cfg.replication), (2, 2));
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn reduce_knob_parses_validates_and_names_runs() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.reduce, "root");
+        // tier reduction is tree business
+        c.set("reduce", "tier").unwrap();
+        assert!(c.validate().unwrap_err().contains("topology"));
+        c.set("topology", "tree").unwrap();
+        c.validate().unwrap();
+        assert!(c.run_id().ends_with("_tree_tred"), "{}", c.run_id());
+        // reduce = "root" leaves the name alone (default namespace)
+        c.set("reduce", "root").unwrap();
+        c.validate().unwrap();
+        assert!(c.run_id().ends_with("_tree"), "{}", c.run_id());
+        // unknown modes are loud (set defers to validate)
+        c.set("reduce", "sideways").unwrap();
+        assert!(c.validate().unwrap_err().contains("unknown reduce mode"));
+        // Accumulate (EF21-family) methods need their payloads at the
+        // leader — tier reduction is rejected for them
+        let mut c = TrainConfig::default();
+        c.set("topology", "tree").unwrap();
+        c.set("reduce", "tier").unwrap();
+        c.set("method", "ef21-sgdm").unwrap();
+        assert!(c.validate().unwrap_err().contains("Accumulate"));
+        c.set("method", "mlmc-topk").unwrap();
+        c.validate().unwrap();
+        // and round-trip through TOML
+        let cfg = TrainConfig::from_toml("[train]\ntopology = \"tree\"\nreduce = \"tier\"\n")
+            .unwrap();
+        assert_eq!(cfg.reduce, "tier");
         cfg.validate().unwrap();
     }
 

@@ -12,6 +12,7 @@ pub use subagg::SubAggregator;
 use crate::compress::Compressed;
 use crate::ef::AggKind;
 use crate::optim::Optimizer;
+use crate::transport::TreePlan;
 
 /// One attributed, weighted worker message for
 /// [`Server::apply_attributed`].
@@ -65,6 +66,14 @@ pub struct Server {
     /// count — the legacy standalone behavior; the engine always sets it)
     workers: usize,
     scratch: Vec<f32>,
+    /// group-blocked reduction schedule ([`Server::with_reduce_plan`]);
+    /// `None` keeps the legacy flat schedule
+    reduce_plan: Option<TreePlan>,
+    /// per-group partial-sum buffer (group-blocked schedule only)
+    partial: Vec<f32>,
+    /// reusable `(group, msg index)` bucketing scratch for the
+    /// group-blocked schedule — `sort_unstable` keeps it allocation-free
+    order: Vec<(u32, u32)>,
     /// aggregation threads (1 = the serial path)
     threads: usize,
     /// cumulative uplink bits across all workers and rounds
@@ -84,6 +93,9 @@ impl Server {
             track_worker_shadows: true,
             workers: 0,
             scratch: vec![0.0; d],
+            reduce_plan: None,
+            partial: Vec::new(),
+            order: Vec::new(),
             threads: 1,
             total_bits: 0,
             rounds: 0,
@@ -135,6 +147,35 @@ impl Server {
         self.threads
     }
 
+    /// Fix the **group-blocked canonical reduction schedule**: messages
+    /// are bucketed by the plan's owning group and reduced group by
+    /// group — groups ascending, messages in arrival order within a
+    /// group, empty groups skipped entirely — with the averaging scale
+    /// applied once per group partial (`Σ_g scale · (Σ_{i∈g} w_i·m_i)`)
+    /// instead of once per message. This is the order a tier-reduced
+    /// tree necessarily computes in (each sub-aggregator sums its own
+    /// leaves, the root combines partials), so the engine sets it on
+    /// **every** topology and reduce mode — that is what keeps star,
+    /// tree, `reduce = "root"` and `reduce = "tier"` runs bit-for-bit
+    /// identical. Standalone servers that skip it keep the legacy flat
+    /// schedule (scale folded into each message's weight).
+    ///
+    /// The partial buffer and the bucketing scratch are preallocated
+    /// here, so plan-driven rounds stay allocation-free like the flat
+    /// path.
+    pub fn with_reduce_plan(mut self, plan: TreePlan) -> Self {
+        let d = self.params.len();
+        self.partial = vec![0.0; d];
+        self.order = Vec::with_capacity(plan.leaves());
+        self.reduce_plan = Some(plan);
+        self
+    }
+
+    /// The group-blocked schedule in effect, if any.
+    pub fn reduce_plan(&self) -> Option<&TreePlan> {
+        self.reduce_plan.as_ref()
+    }
+
     /// Apply one synchronous round of `m` worker messages, attributed to
     /// workers `0..m` at weight 1 (the lock-step convenience wrapper).
     /// Returns the uplink bits consumed this round.
@@ -163,7 +204,9 @@ impl Server {
         }
         let d = self.params.len();
         let threads = self.threads.min(d.max(1));
-        if threads <= 1 {
+        if let Some(plan) = self.reduce_plan {
+            self.reduce_group_blocked(msgs, scale, plan, threads);
+        } else if threads <= 1 {
             crate::tensor::zero(&mut self.scratch);
             for msg in msgs {
                 msg.comp.add_into(&mut self.scratch, msg.weight * scale);
@@ -203,6 +246,96 @@ impl Server {
                 self.shadow = shadow;
             }
         }
+        self.total_bits += bits;
+        self.rounds += 1;
+        bits
+    }
+
+    /// The group-blocked inner reduction: `scratch = Σ_g scale ·
+    /// (Σ_{i∈g} w_i·m_i)`, groups ascending, arrival order within each
+    /// group, empty groups skipped (skipping matters bitwise: adding a
+    /// zero partial would flip `-0.0` coordinates to `+0.0`). The
+    /// threaded path shards the coordinate space; per coordinate it runs
+    /// the exact serial sequence, so any thread count is bit-identical —
+    /// and both are bit-identical to a tier computing the inner sums
+    /// remotely ([`Server::apply_reduced`]).
+    fn reduce_group_blocked(
+        &mut self,
+        msgs: &[RoundMsg<'_>],
+        scale: f32,
+        plan: TreePlan,
+        threads: usize,
+    ) {
+        let d = self.params.len();
+        self.order.clear();
+        for (i, msg) in msgs.iter().enumerate() {
+            self.order.push((plan.owner(msg.worker), i as u32));
+        }
+        // stable by construction: ties on group keep ascending msg index
+        self.order.sort_unstable();
+        let order = &self.order;
+        if threads <= 1 {
+            crate::tensor::zero(&mut self.scratch);
+            let mut i = 0usize;
+            while i < order.len() {
+                let g = order[i].0;
+                crate::tensor::zero(&mut self.partial);
+                let mut j = i;
+                while j < order.len() && order[j].0 == g {
+                    let msg = &msgs[order[j].1 as usize];
+                    msg.comp.add_into(&mut self.partial, msg.weight);
+                    j += 1;
+                }
+                crate::tensor::axpy(&mut self.scratch, scale, &self.partial);
+                i = j;
+            }
+        } else {
+            let chunk = d.div_ceil(threads);
+            std::thread::scope(|s| {
+                let chunks = self.scratch.chunks_mut(chunk).zip(self.partial.chunks_mut(chunk));
+                for (t, (out, part)) in chunks.enumerate() {
+                    s.spawn(move || {
+                        crate::tensor::zero(out);
+                        let mut i = 0usize;
+                        while i < order.len() {
+                            let g = order[i].0;
+                            crate::tensor::zero(part);
+                            let mut j = i;
+                            while j < order.len() && order[j].0 == g {
+                                let msg = &msgs[order[j].1 as usize];
+                                msg.comp.payload.add_range_into(part, msg.weight, t * chunk);
+                                j += 1;
+                            }
+                            crate::tensor::axpy(out, scale, part);
+                            i = j;
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    /// Apply one tier-reduced round (`reduce = "tier"` phase 2):
+    /// `partials` are the nonempty per-group dense partial sums in
+    /// **ascending group order**, each already the weighted (unscaled)
+    /// sum of its group's scheduled messages in arrival order; `n_msgs`
+    /// is the total number of messages they fold in (the `Fresh`
+    /// averaging count); `bits` is the uplink charge for the round (the
+    /// placeholder-metered leaf bits — never the dense partials).
+    /// Bit-identical to [`Server::apply_attributed`] under the same
+    /// [`Server::with_reduce_plan`] schedule: the tiers just computed
+    /// the inner sums remotely. `Fresh` only — EF21 increments must
+    /// enter per-worker shadows at the leader, so the engine refuses to
+    /// tier-reduce `Accumulate` runs. Returns `bits`.
+    pub fn apply_reduced(&mut self, partials: &[&[f32]], n_msgs: usize, bits: u64) -> u64 {
+        debug_assert_eq!(self.agg, AggKind::Fresh, "tier reduction is Fresh-only");
+        let scale = 1.0 / self.norm(n_msgs) as f32;
+        crate::tensor::zero(&mut self.scratch);
+        for p in partials {
+            debug_assert_eq!(p.len(), self.params.len());
+            crate::tensor::axpy(&mut self.scratch, scale, p);
+        }
+        self.opt.step(&mut self.params, &self.scratch);
         self.total_bits += bits;
         self.rounds += 1;
         bits
@@ -501,5 +634,84 @@ mod tests {
             sparse(4, vec![0], vec![-4.0]),
         ]);
         assert_eq!(s.params, vec![0.0, 0.0, -4.0, 0.0]);
+    }
+
+    /// Random non-exactly-representable weights/values so the schedule
+    /// actually matters bitwise, workers from 3 of 4 groups (one group
+    /// partial, one group absent) so the empty-group skip is exercised.
+    fn grouped_fixture(d: usize) -> (TreePlan, Vec<Compressed>, Vec<(u32, f32)>) {
+        let plan = TreePlan::resolve(8, 2).unwrap(); // groups {0,1}…{6,7}
+        let mut rng = crate::tensor::Rng::new(17);
+        let who: Vec<(u32, f32)> = vec![(0, 1.0), (1, 0.3), (3, 0.7), (6, 1.0), (7, 0.9)];
+        let comps: Vec<Compressed> = (0..who.len())
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 1.0);
+                Compressed::dense(g)
+            })
+            .collect();
+        (plan, comps, who)
+    }
+
+    #[test]
+    fn group_blocked_apply_matches_tier_partial_combination() {
+        let d = 33;
+        let (plan, comps, who) = grouped_fixture(d);
+        let msgs: Vec<RoundMsg<'_>> = who
+            .iter()
+            .zip(&comps)
+            .map(|(&(worker, weight), comp)| RoundMsg { worker, weight, comp })
+            .collect();
+        // root-side group-blocked apply…
+        let mut root = Server::new(vec![0.1; d], Box::new(Sgd { lr: 0.3 }), AggKind::Fresh)
+            .with_reduce_plan(plan);
+        let bits = root.apply_attributed(&msgs);
+        // …vs tiers computing the inner sums remotely: one unscaled
+        // weighted partial per nonempty group, combined ascending
+        let mut partials: Vec<Vec<f32>> = Vec::new();
+        for g in 0..plan.groups() as u32 {
+            let range = plan.range(g);
+            let mine: Vec<&RoundMsg<'_>> =
+                msgs.iter().filter(|m| range.contains(&m.worker)).collect();
+            if mine.is_empty() {
+                continue;
+            }
+            let mut partial = vec![0.0f32; d];
+            for m in mine {
+                m.comp.add_into(&mut partial, m.weight);
+            }
+            partials.push(partial);
+        }
+        let refs: Vec<&[f32]> = partials.iter().map(Vec::as_slice).collect();
+        let mut tier = Server::new(vec![0.1; d], Box::new(Sgd { lr: 0.3 }), AggKind::Fresh)
+            .with_reduce_plan(plan);
+        assert_eq!(tier.apply_reduced(&refs, msgs.len(), bits), bits);
+        for (a, b) in root.params.iter().zip(&tier.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(root.total_bits, tier.total_bits);
+        assert_eq!(root.rounds, tier.rounds);
+    }
+
+    #[test]
+    fn group_blocked_threaded_matches_serial() {
+        let d = 257; // deliberately not a multiple of the thread count
+        let (plan, comps, who) = grouped_fixture(d);
+        let msgs: Vec<RoundMsg<'_>> = who
+            .iter()
+            .zip(&comps)
+            .map(|(&(worker, weight), comp)| RoundMsg { worker, weight, comp })
+            .collect();
+        let mut serial = Server::new(vec![0.1; d], Box::new(Sgd { lr: 0.3 }), AggKind::Fresh)
+            .with_reduce_plan(plan);
+        let mut threaded = Server::new(vec![0.1; d], Box::new(Sgd { lr: 0.3 }), AggKind::Fresh)
+            .with_reduce_plan(plan)
+            .with_threads(3);
+        for _ in 0..2 {
+            assert_eq!(serial.apply_attributed(&msgs), threaded.apply_attributed(&msgs));
+        }
+        for (a, b) in serial.params.iter().zip(&threaded.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

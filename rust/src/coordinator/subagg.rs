@@ -1,5 +1,5 @@
 //! Sub-aggregator: the middle tier of the hierarchical aggregation
-//! tree. It speaks the **same v3 round frame** on both sides — leaf
+//! tree. It speaks the **same v4 round frame** on both sides — leaf
 //! replies and leader announcements cross it unmodified — so the
 //! engine, the EF shadow/ack contract, and the recovery ladder all
 //! compose through the tree without a protocol change:
@@ -14,9 +14,32 @@
 //! forwards ONE combined message upward ([`encode_batch`]): the leader
 //! sees `groups ≈ √M` peers instead of `M`, while every leaf message
 //! stays attributed to its worker, so the per-worker shadow accounting
-//! at the root is bit-identical to the flat star (a numeric pre-reduce
-//! here would reorder float sums and break that identity). Terminal
-//! acks ride the next round frame and are relayed down unchanged.
+//! at the root is bit-identical to the flat star (an *unscheduled*
+//! numeric pre-reduce here would reorder float sums and break that
+//! identity). Terminal acks ride the next round frame and are relayed
+//! down unchanged.
+//!
+//! **Tier reduction.** When the round frame carries
+//! `reduce = "tier"` ([`ReduceMode::Tier`]), the node becomes the
+//! owner-computes reduction site instead of a byte relay:
+//!
+//! ```text
+//!   phase 1:  leader ◀─ meta (worker, step, loss, bits) ── subagg
+//!             (payloads decoded + stashed here, TierStash)
+//!   phase 2:  leader ── sched (apply list + drops) ──▶ subagg
+//!             leader ◀─ reduced (ONE dense partial)  ── subagg
+//! ```
+//!
+//! The leader still originates every Applied/Deferred/Dropped ack from
+//! the phase-1 metadata (placeholder replies charge exactly the
+//! reported bits), and the tier reduces its stashed payloads **in the
+//! leader's schedule order** at the scheduled staleness weights — the
+//! group-blocked canonical schedule that keeps tier-reduced runs
+//! bit-identical to `reduce = "root"` and to the flat star. The root's
+//! per-round ingress drops from Σ leaf payloads to one dense partial
+//! per group. Schedule frames are answered unconditionally (an empty
+//! partial means "nothing of mine was scheduled") and are never relayed
+//! to the leaves.
 //!
 //! **Coded leaves.** With `replication = r > 1`, each *logical* leaf id
 //! `l` is served by the `r` physical replicas `l*r .. l*r + r`
@@ -36,9 +59,11 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::engine::{decode_resend, decode_round};
-use crate::transport::tree::encode_batch;
-use crate::transport::{Frame, FrameKind, Transport, WorkerLink};
+use crate::engine::{decode_reply_from, decode_resend, decode_round};
+use crate::transport::tree::{
+    decode_sched, encode_batch, encode_meta, encode_reduced, MetaEntry, TierStash,
+};
+use crate::transport::{Frame, FrameKind, ReduceMode, Transport, WorkerLink};
 
 /// One sub-aggregator node: `up` is its worker-shaped link to the tier
 /// above, `down` its leader-shaped transport over its leaf slice.
@@ -60,6 +85,14 @@ pub struct SubAggregator<U: WorkerLink, D: Transport> {
     rounds: u64,
     forwarded_frames: u64,
     forwarded_bits: u64,
+    /// reduce mode of the last round frame (each broadcast re-announces
+    /// it, so the node needs no out-of-band configuration)
+    reduce: ReduceMode,
+    /// model dimension from the last round frame — sizes the phase-2
+    /// partial
+    dim: usize,
+    /// decoded replies awaiting a phase-2 schedule (`reduce = "tier"`)
+    stash: TierStash,
 }
 
 impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
@@ -86,6 +119,7 @@ impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
         if phys % replication != 0 {
             bail!("{phys} physical leaves are not divisible by replication {replication}");
         }
+        let leaves = phys / replication;
         Ok(SubAggregator {
             up,
             down,
@@ -93,10 +127,13 @@ impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
             replication,
             window,
             dead_phys: vec![false; phys],
-            reported_dead: vec![false; phys / replication],
+            reported_dead: vec![false; leaves],
             rounds: 0,
             forwarded_frames: 0,
             forwarded_bits: 0,
+            reduce: ReduceMode::Root,
+            dim: 0,
+            stash: TierStash::new(base, base + leaves as u32),
         })
     }
 
@@ -128,6 +165,7 @@ impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
                 }
                 FrameKind::Params => self.serve_round(&frame)?,
                 FrameKind::Resend => self.serve_resend(&frame)?,
+                FrameKind::Sched => self.serve_sched(&frame)?,
                 other => bail!("sub-aggregator: unexpected {other} frame from the leader"),
             }
         }
@@ -175,6 +213,8 @@ impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
         self.down.broadcast(frame)?;
         let round = decode_round(frame)?;
         self.rounds += 1;
+        self.reduce = round.reduce;
+        self.dim = round.params.len();
         let lo = self.base;
         let hi = lo + self.leaves() as u32;
         let local: Vec<u32> =
@@ -183,7 +223,24 @@ impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
             return Ok(());
         }
         let (arrived, dead) = self.collect(&local)?;
+        if self.reduce == ReduceMode::Tier {
+            return self.send_up_meta(&dead, arrived);
+        }
         self.send_up(&dead, arrived)
+    }
+
+    /// Answer a phase-2 schedule: reduce this node's share of the apply
+    /// list from the stash (schedule order, scheduled weights), discard
+    /// the owned drops, and send the dense partial upward. Answered
+    /// unconditionally — an empty partial is the "nothing of mine was
+    /// scheduled" reply the root's phase-2 gather counts on. Never
+    /// relayed to the leaves: the schedule is tier business only.
+    fn serve_sched(&mut self, frame: &Frame) -> Result<()> {
+        let (step, apply, drops) = decode_sched(frame)?;
+        let partial = self.stash.serve(step, &apply, &drops, self.dim)?;
+        let reduced = encode_reduced(self.base, &partial);
+        self.forwarded_bits += 8 * reduced.payload.len() as u64;
+        self.up.send(&reduced)
     }
 
     /// Gather one reply per logical leaf in `local` (sorted global
@@ -308,6 +365,9 @@ impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
         if frames.is_empty() && dead.is_empty() {
             return Ok(());
         }
+        if self.reduce == ReduceMode::Tier {
+            return self.send_up_meta(&dead, frames);
+        }
         self.send_up(&dead, frames)
     }
 
@@ -319,6 +379,30 @@ impl<U: WorkerLink, D: Transport> SubAggregator<U, D> {
             self.down.recycle_frame(f);
         }
         self.up.send(&batch)
+    }
+
+    /// `reduce = "tier"` phase 1: decode the gathered replies, stash the
+    /// payloads for the coming schedule, and send the leader metadata
+    /// only (worker, replied step, loss, accounted wire bits) — it
+    /// synthesizes placeholder replies from this, so its ack ladder and
+    /// charge-once bit metering run exactly as under `reduce = "root"`.
+    fn send_up_meta(&mut self, dead: &[u32], frames: Vec<(u32, Frame)>) -> Result<()> {
+        let mut entries: Vec<MetaEntry> = Vec::with_capacity(frames.len());
+        for (id, f) in frames {
+            let r = decode_reply_from(&f, id)?;
+            entries.push(MetaEntry {
+                worker: id,
+                step: r.step as u32,
+                loss: r.loss,
+                wire_bits: r.comp.wire_bits(),
+            });
+            self.stash.insert(id, r.step as u32, r.comp);
+            self.down.recycle_frame(f);
+        }
+        let meta = encode_meta(self.base, self.dim as u32, dead, &entries);
+        self.forwarded_frames += entries.len() as u64;
+        self.forwarded_bits += 8 * meta.payload.len() as u64;
+        self.up.send(&meta)
     }
 }
 
@@ -412,6 +496,66 @@ mod tests {
         assert_eq!(frames.len(), 2);
         assert_eq!(frames[0], (0, Frame::grad(vec![0])));
         assert_eq!(frames[1], (1, Frame::grad(vec![1])));
+        Transport::shutdown(&mut root).unwrap();
+        assert_eq!(node.join().unwrap(), 1);
+        for l in leaves {
+            l.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tier_round_ships_meta_then_answers_the_schedule_with_one_partial() {
+        use crate::compress::Compressed;
+        use crate::engine::{encode_reply, encode_round_with};
+        use crate::transport::tree::{decode_meta, decode_reduced, encode_sched, SchedEntry};
+
+        let (mut root, mut sub_ports) = star(1);
+        let (down, leaf_ports) = star_from(0, 2);
+        // leaves answer with real encoded replies: grad = [id+1, id+1]
+        let leaves: Vec<_> = leaf_ports
+            .into_iter()
+            .map(|p| {
+                std::thread::spawn(move || loop {
+                    let Some(f) = p.recv() else { break };
+                    match f.kind {
+                        FrameKind::Shutdown => break,
+                        FrameKind::Params => {
+                            let g = vec![(p.id + 1) as f32; 2];
+                            p.send(encode_reply(0, p.id, 0.25, Compressed::dense(g)));
+                        }
+                        _ => {}
+                    }
+                })
+            })
+            .collect();
+        let up = sub_ports.remove(0);
+        let node = std::thread::spawn(move || {
+            SubAggregator::new(up, down, 0).unwrap().run().unwrap()
+        });
+        let down_frame =
+            encode_round_with(0, &[0, 1], &[], &[], ReduceMode::Tier, &[0.0, 0.0]);
+        Transport::broadcast(&mut root, &down_frame).unwrap();
+        // phase 1: metadata only — the payloads stay stashed at the node
+        let got = Transport::gather(&mut root, &[0]).unwrap();
+        let (group, d, dead, mut entries) = decode_meta(&got[0].1).unwrap();
+        assert_eq!((group, d), (0, 2));
+        assert!(dead.is_empty());
+        entries.sort_by_key(|e| e.worker);
+        assert_eq!(entries.len(), 2);
+        assert_eq!((entries[0].worker, entries[0].step), (0, 0));
+        assert_eq!(entries[0].loss, 0.25);
+        assert!(entries[0].wire_bits > 0);
+        // phase 2: apply worker 1 at weight 0.5, drop worker 0's stash
+        let sched = encode_sched(
+            0,
+            &[SchedEntry { worker: 1, sent_step: 0, weight: 0.5 }],
+            &[(0, 0)],
+        );
+        Transport::broadcast(&mut root, &sched).unwrap();
+        let got = Transport::gather(&mut root, &[0]).unwrap();
+        let (origin, partial) = decode_reduced(&got[0].1).unwrap();
+        assert_eq!(origin, 0, "origin is the node's base leaf id");
+        assert_eq!(partial, vec![1.0, 1.0], "0.5 * [2, 2]");
         Transport::shutdown(&mut root).unwrap();
         assert_eq!(node.join().unwrap(), 1);
         for l in leaves {

@@ -1,16 +1,19 @@
 //! Round-frame codecs: the byte layout of the leader↔worker protocol.
 //!
-//! Downstream (leader → workers), `FRAME_PARAMS`, **version 3** (v2
-//! introduced the version byte + per-worker ack block; v3 adds the
+//! Downstream (leader → workers), `FRAME_PARAMS`, **version 4** (v2
+//! introduced the version byte + per-worker ack block; v3 added the
 //! excluded-worker block and the RESEND request frame of the recovery
-//! protocol — mixed-version clusters are rejected loudly at decode):
+//! protocol; v4 adds the one-byte reduce mode so relay tiers learn
+//! whether to forward replies verbatim or partially reduce them —
+//! mixed-version clusters are rejected loudly at decode):
 //!
 //! ```text
-//! ver(u8 = 0xA3) | step(u32 LE) | n_participants(u32 LE) | ids(n × u32 LE)
+//! ver(u8 = 0xA4) | step(u32 LE) | n_participants(u32 LE) | ids(n × u32 LE)
 //!   | n_ack_workers(u32 LE)
 //!   | per acked worker: worker(u32 LE) | n_entries(u8)
 //!       | per entry: sent_step(u32 LE) | status(u8) | weight(f32 LE)
 //!   | n_excluded(u32 LE) | ids(n × u32 LE)
+//!   | reduce(u8: 0 = root, 1 = tier)
 //!   | params_to_bytes(params)
 //! ```
 //!
@@ -18,7 +21,7 @@
 //! layer's "your reply for round `step` never arrived" request:
 //!
 //! ```text
-//! ver(u8 = 0xA3) | step(u32 LE) | worker(u32 LE)
+//! ver(u8 = 0xA4) | step(u32 LE) | worker(u32 LE)
 //! ```
 //!
 //! Upstream (worker → leader), `FRAME_GRAD`:
@@ -37,28 +40,30 @@ use anyhow::{bail, Result};
 use crate::compress::Compressed;
 use crate::ef::{AckEntry, AckStatus};
 use crate::transport::{
-    params_from_bytes, params_to_bytes, Frame, FRAME_GRAD, FRAME_PARAMS, FRAME_RESEND,
+    params_from_bytes, params_to_bytes, Frame, ReduceMode, FRAME_GRAD, FRAME_PARAMS,
+    FRAME_RESEND,
 };
 use crate::wire;
 
 // repolint: frame_layout(start) — everything down to the matching end
-// marker defines the v3 wire layout. The region is content-hashed into
+// marker defines the v4 wire layout. The region is content-hashed into
 // tools/repolint's config: changing it without bumping
 // ROUND_FRAME_VERSION (and re-pinning the hash) fails the lint, so a
 // layout change can never silently reuse a version byte.
-/// Round-frame wire version byte: `0xA3` = "v3", introduced with the
-/// dropped-message recovery protocol (excluded-worker block + RESEND
-/// frames). Decoders reject any other value — in particular the v2 byte
-/// `0xA2` — so a mixed-version cluster fails loudly instead of silently
-/// misreading state: a v2 worker would misparse the excluded block as
-/// params and could never answer a RESEND. Frames from this and future
-/// versions are exactly self-identifying; an unversioned *v1* frame
-/// (first byte = the LSB of its step counter) is caught by this probe
-/// except when its step ≡ 0xA3 (mod 256) — a high value chosen so
-/// small-step v1 frames can never alias — and an aliased frame still
-/// has to pass every structural length/order check below before
-/// anything is believed.
-pub const ROUND_FRAME_VERSION: u8 = 0xA3;
+/// Round-frame wire version byte: `0xA4` = "v4", introduced with the
+/// in-tier partial-reduction protocol (the one-byte reduce mode between
+/// the excluded block and the params). Decoders reject any other value
+/// — in particular the retired v2/v3 bytes `0xA2`/`0xA3` — so a
+/// mixed-version cluster fails loudly instead of silently misreading
+/// state: a v3 worker would misparse the reduce byte as the params
+/// length and a v3 tier would forward verbatim batches into a root
+/// expecting partials. Frames from this and future versions are exactly
+/// self-identifying; an unversioned *v1* frame (first byte = the LSB of
+/// its step counter) is caught by this probe except when its step ≡
+/// 0xA4 (mod 256) — a high value chosen so small-step v1 frames can
+/// never alias — and an aliased frame still has to pass every
+/// structural length/order check below before anything is believed.
+pub const ROUND_FRAME_VERSION: u8 = 0xA4;
 
 /// Decoded leader→worker round announcement.
 #[derive(Clone, Debug)]
@@ -73,6 +78,9 @@ pub struct RoundDown {
     /// from `participants`: a worker probed for re-admission this round
     /// appears in the participant set instead)
     pub excluded: Vec<u32>,
+    /// where this round's weighted reduction happens (v4): relay tiers
+    /// act on it, leaf workers ignore it
+    pub reduce: ReduceMode,
     pub params: Vec<f32>,
 }
 
@@ -116,10 +124,23 @@ pub fn encode_round(
     excluded: &[u32],
     params: &[f32],
 ) -> Frame {
+    encode_round_with(step, participants, acks, excluded, ReduceMode::Root, params)
+}
+
+/// [`encode_round`] with an explicit reduce mode (the 5-argument form
+/// keeps every root-reduce call site unchanged).
+pub fn encode_round_with(
+    step: u64,
+    participants: &[u32],
+    acks: &[Vec<AckEntry>],
+    excluded: &[u32],
+    reduce: ReduceMode,
+    params: &[f32],
+) -> Frame {
     let n_ack_workers = acks.iter().filter(|a| !a.is_empty()).count();
     let ack_bytes: usize = acks.iter().filter(|a| !a.is_empty()).map(|a| 5 + 9 * a.len()).sum();
     let mut payload = Vec::with_capacity(
-        1 + 8 + 4 * participants.len() + 4 + ack_bytes + 4 + 4 * excluded.len() + 4
+        1 + 8 + 4 * participants.len() + 4 + ack_bytes + 4 + 4 * excluded.len() + 1 + 4
             + 4 * params.len(),
     );
     payload.push(ROUND_FRAME_VERSION);
@@ -154,6 +175,7 @@ pub fn encode_round(
     for id in excluded {
         payload.extend_from_slice(&id.to_le_bytes());
     }
+    payload.push(reduce.as_byte());
     payload.extend_from_slice(&params_to_bytes(params));
     Frame { kind: FRAME_PARAMS, payload }
 }
@@ -256,8 +278,14 @@ pub fn decode_round(frame: &Frame) -> Result<RoundDown> {
     if let Some(id) = excluded.iter().find(|&&id| participants.binary_search(&id).is_ok()) {
         bail!("worker {id} is both participant and excluded");
     }
+    // --- reduce mode (v4) --------------------------------------------
+    need(b, off + 1, "reduce byte")?;
+    let Some(reduce) = ReduceMode::from_byte(b[off]) else {
+        bail!("unknown reduce mode byte {}", b[off]);
+    };
+    off += 1;
     let params = params_from_bytes(&b[off..])?;
-    Ok(RoundDown { step, participants, acks, excluded, params })
+    Ok(RoundDown { step, participants, acks, excluded, reduce, params })
 }
 
 /// Encode a resend request: "worker, your reply for round `step` never
@@ -372,8 +400,31 @@ mod tests {
         assert_eq!(down.params, vec![1.5, -2.0]);
         assert!(down.acks.is_empty());
         assert!(down.excluded.is_empty());
+        assert_eq!(down.reduce, ReduceMode::Root);
         assert!(down.is_participant(2));
         assert!(!down.is_participant(1));
+    }
+
+    #[test]
+    fn round_frame_roundtrips_reduce_mode() {
+        let f = encode_round_with(3, &[0, 1], &[], &[], ReduceMode::Tier, &[2.5]);
+        let down = decode_round(&f).unwrap();
+        assert_eq!(down.reduce, ReduceMode::Tier);
+        assert_eq!(down.params, vec![2.5]);
+        // the 5-arg form pins root mode
+        let f = encode_round(3, &[0, 1], &[], &[], &[2.5]);
+        assert_eq!(decode_round(&f).unwrap().reduce, ReduceMode::Root);
+        // reduce byte layout for this frame: ver(1) + step(4) +
+        // n_parts(4) + ids(8) + n_ack(4) + n_excl(4) = 25 — forge it
+        let mut forged = f.clone();
+        forged.payload[25] = 9;
+        let err = decode_round(&forged).unwrap_err().to_string();
+        assert!(err.contains("reduce mode"), "{err}");
+        // and a frame cut off before the reduce byte is loud, not a panic
+        let mut cut = f.clone();
+        cut.payload.truncate(25);
+        let err = decode_round(&cut).unwrap_err().to_string();
+        assert!(err.contains("reduce byte"), "{err}");
     }
 
     #[test]
@@ -439,9 +490,9 @@ mod tests {
     #[test]
     fn round_frame_rejects_other_versions_loudly() {
         let f = encode_round(1, &[0], &[], &[], &[1.0]);
-        // a v1 or v2 node's frame (or any other version) must be a loud
-        // error — 0xA2 is the retired v2 byte
-        for ver in [0u8, 1, 3, 0xA2, 255] {
+        // a v1, v2 or v3 node's frame (or any other version) must be a
+        // loud error — 0xA2/0xA3 are the retired v2/v3 bytes
+        for ver in [0u8, 1, 3, 0xA2, 0xA3, 255] {
             let mut forged = f.clone();
             forged.payload[0] = ver;
             let err = decode_round(&forged).unwrap_err().to_string();

@@ -44,7 +44,7 @@
 //!
 //!   1. **deadline** — when `round_timeout` expires before the round
 //!      can close, the leader sends a `FRAME_RESEND` request (round
-//!      frame v3, [`framing::encode_resend`]) to every participant
+//!      frame v4, [`framing::encode_resend`]) to every participant
 //!      still owing this round's reply and waits one more window, up to
 //!      `resend_max` times.
 //!   2. **give-up** — a reply still missing after the resend budget is
@@ -74,7 +74,7 @@ pub mod report;
 
 pub use framing::{
     decode_reply, decode_reply_from, decode_resend, decode_round, encode_reply, encode_resend,
-    encode_round, Reply, RoundDown, ROUND_FRAME_VERSION,
+    encode_round, encode_round_with, Reply, RoundDown, ROUND_FRAME_VERSION,
 };
 pub use report::{RoundReport, TierStats};
 pub use policy::{
@@ -92,10 +92,13 @@ use crate::config::TrainConfig;
 use crate::coordinator::{RoundMsg, Server};
 use crate::ef::{AckEntry, AckStatus, AggKind};
 use crate::netsim::{CostModel, CostSpec};
-use crate::transport::tree::{encode_batch, TreePlan};
+use crate::transport::tree::{
+    decode_reduced, decode_sched, encode_batch, encode_meta, encode_reduced, encode_sched,
+    MetaEntry, SchedEntry, TierStash, TreePlan,
+};
 use crate::transport::{
-    Frame, FrameKind, LocalStar, Transport, TreeLeader, WorkerLink, FRAME_PARAMS, FRAME_RESEND,
-    FRAME_SHUTDOWN,
+    Frame, FrameKind, LocalStar, ReduceMode, Transport, TreeLeader, WorkerLink, FRAME_PARAMS,
+    FRAME_RESEND, FRAME_SHUTDOWN,
 };
 
 /// Real-time mode: a reply still owed after this many rounds is given
@@ -108,7 +111,10 @@ pub const GIVE_UP_AGE: u64 = 6;
 /// Rounds a given-up entry is remembered, so the frame — should it
 /// still crawl in — is recognized and charged as dropped rather than
 /// applied. Anything later is discarded as a duplicate, uncharged.
-const GIVE_UP_MEMORY: u64 = 32;
+/// Public because tier-reduce stashes ([`crate::transport::tree::TierStash`])
+/// prune to the same horizon: a stashed reply the leader can no longer
+/// schedule must not outlive the leader's own memory of it.
+pub const GIVE_UP_MEMORY: u64 = 32;
 
 /// Hard cap on frames routed per worker per round: a peer spamming
 /// duplicates must not spin the leader forever. Per worker, so a
@@ -137,6 +143,15 @@ pub struct EngineOpts {
     /// probe an excluded worker for re-admission every this many rounds
     /// (0 = never re-admit)
     pub readmit_every: usize,
+    /// where the weighted reduction happens: [`ReduceMode::Root`]
+    /// (replies ride verbatim, the root reduces all M payloads) or
+    /// [`ReduceMode::Tier`] (each relay group ships one dense partial;
+    /// needs a transport with a [`Transport::tier_plan`])
+    pub reduce: ReduceMode,
+    /// leaf grouping for the group-blocked reduction schedule when the
+    /// transport has no tier of its own (0 = auto ~√M) — star runs use
+    /// this so their reduction order matches the equivalent tree's
+    pub fanout: usize,
 }
 
 /// A message that missed its round's quorum deadline, keyed by its
@@ -170,6 +185,10 @@ struct Collected {
     /// given-up frames that arrived after the fact — charged as dropped
     dropped_arrivals: usize,
     dropped_arrival_bits: u64,
+    /// `(worker, sent_step)` of those after-the-fact arrivals — under
+    /// `reduce = "tier"` the tier stashed the payload and must be told
+    /// to discard it (the schedule's drop list)
+    dropped_ids: Vec<(u32, u64)>,
     /// frames routed per worker this round (flood guard)
     routed: Vec<u32>,
     /// acks produced during collection (give-ups, deferrals) — staged
@@ -204,6 +223,11 @@ pub struct RoundEngine<T: Transport> {
     given_up: Vec<(u32, u64)>,
     /// timing mode, fixed at construction from the transport
     real: bool,
+    /// where the weighted reduction happens, fixed at construction
+    reduce: ReduceMode,
+    /// the group-blocked reduction schedule (the transport's own tier
+    /// plan, or the `opts.fanout` grouping for tierless transports)
+    plan: TreePlan,
     /// real-time mode: accumulated wall-clock round time
     wall_now_s: f64,
     step: u64,
@@ -223,9 +247,29 @@ impl<T: Transport> RoundEngine<T> {
             bail!("round_timeout {} must be a finite number of seconds >= 0", opts.round_timeout);
         }
         let real = transport.is_real_time();
+        // one canonical group-blocked reduction schedule for every
+        // topology: the transport's own tier plan when it has one, the
+        // same ~√M grouping a tree of this size would use otherwise —
+        // which is exactly what keeps star ≡ tree bit-for-bit
+        let plan = match transport.tier_plan() {
+            Some(p) => *p,
+            None => TreePlan::resolve(m, opts.fanout)?,
+        };
+        let reduce = opts.reduce;
+        if reduce == ReduceMode::Tier {
+            if transport.tier_plan().is_none() {
+                bail!("reduce = \"tier\" needs a relay-tier transport (topology = \"tree\")");
+            }
+            if server.agg() == AggKind::Accumulate {
+                bail!(
+                    "reduce = \"tier\" cannot host Accumulate (EF21-family) methods — the \
+                     per-worker shadows must stay at the leader"
+                );
+            }
+        }
         // the transport's worker count is ground truth for the
         // Accumulate normalization G = (1/M) Σ_w g^w
-        let server = server.with_workers(m);
+        let server = server.with_workers(m).with_reduce_plan(plan);
         Ok(RoundEngine {
             transport,
             server,
@@ -238,6 +282,8 @@ impl<T: Transport> RoundEngine<T> {
             owed: (0..m).map(|_| VecDeque::new()).collect(),
             given_up: Vec::new(),
             real,
+            reduce,
+            plan,
             wall_now_s: 0.0,
             step: 0,
             shut: false,
@@ -271,6 +317,11 @@ impl<T: Transport> RoundEngine<T> {
         // dimension-aware so `compute = "auto"` resolves to the fitted
         // per-step seconds for this model's parameter count
         let cost = CostSpec::from_train_cfg_for_dim(cfg, m, server.params.len())?.build();
+        let reduce = match cfg.reduce.as_str() {
+            "root" => ReduceMode::Root,
+            "tier" => ReduceMode::Tier,
+            other => bail!("unknown reduce mode {other:?} (known: \"root\", \"tier\")"),
+        };
         let opts = EngineOpts {
             policy,
             cost,
@@ -278,6 +329,8 @@ impl<T: Transport> RoundEngine<T> {
             resend_max: cfg.resend_max,
             exclude_after: cfg.exclude_after,
             readmit_every: cfg.readmit_every,
+            reduce,
+            fanout: cfg.fanout,
         };
         Self::new(transport, server, opts)
     }
@@ -433,6 +486,7 @@ impl<T: Transport> RoundEngine<T> {
             self.given_up.remove(pos);
             col.dropped_arrivals += 1;
             col.dropped_arrival_bits += r.comp.wire_bits();
+            col.dropped_ids.push((worker, r.step));
         }
         // else: duplicate of an already-resolved reply (a resend racing
         // its slow original) — discarded; the original resolution
@@ -684,7 +738,14 @@ impl<T: Transport> RoundEngine<T> {
         }
         let ship_acks: Vec<Vec<AckEntry>> = self.acks.iter_mut().map(std::mem::take).collect();
         let excluded_ids = self.excluded_frame_ids(&parts);
-        let down = encode_round(step, &parts, &ship_acks, &excluded_ids, &self.server.params);
+        let down = encode_round_with(
+            step,
+            &parts,
+            &ship_acks,
+            &excluded_ids,
+            self.reduce,
+            &self.server.params,
+        );
         // the model broadcast ships uncompressed f32s
         let down_bits = 32 * self.server.params.len() as u64;
         self.transport.broadcast(&down)?;
@@ -716,6 +777,17 @@ impl<T: Transport> RoundEngine<T> {
         let mut applied_stale = 0usize;
         let mut dropped_stale = col.dropped_arrivals;
         let mut dropped_bits = col.dropped_arrival_bits;
+        // reduce = "tier": mirror every resolution into the phase-2
+        // schedule — applies in the exact order they enter `apply` (the
+        // global apply order every tier filters), drops so the tiers
+        // discard the matching stash entries
+        let tier = self.reduce == ReduceMode::Tier;
+        let mut sched_apply: Vec<SchedEntry> = Vec::new();
+        let mut sched_drops: Vec<(u32, u32)> = if tier {
+            col.dropped_ids.iter().map(|&(w, s)| (w, s as u32)).collect()
+        } else {
+            Vec::new()
+        };
         for p in resolve {
             match agg {
                 AggKind::Accumulate => {
@@ -741,6 +813,9 @@ impl<T: Transport> RoundEngine<T> {
                             stage(&mut round_acks, p.worker, p.sent_step, AckStatus::Dropped, 0.0);
                             dropped_bits += p.comp.wire_bits();
                             dropped_stale += 1;
+                            if tier {
+                                sched_drops.push((p.worker, p.sent_step as u32));
+                            }
                         }
                         StaleAction::Apply(weight) => {
                             stage(
@@ -750,6 +825,13 @@ impl<T: Transport> RoundEngine<T> {
                                 AckStatus::Applied,
                                 weight,
                             );
+                            if tier {
+                                sched_apply.push(SchedEntry {
+                                    worker: p.worker,
+                                    sent_step: p.sent_step as u32,
+                                    weight,
+                                });
+                            }
                             apply.push((p.worker, weight, p.comp));
                             applied_stale += 1;
                         }
@@ -766,6 +848,13 @@ impl<T: Transport> RoundEngine<T> {
             if self.excluded_at[wi].is_some() {
                 // the re-admission probe came back on time
                 self.excluded_at[wi] = None;
+            }
+            if tier {
+                sched_apply.push(SchedEntry {
+                    worker: reply.worker,
+                    sent_step: step as u32,
+                    weight: 1.0,
+                });
             }
             apply.push((reply.worker, 1.0, reply.comp));
         }
@@ -788,13 +877,21 @@ impl<T: Transport> RoundEngine<T> {
         }
         let on_time = apply.len() - applied_stale;
 
-        let msgs: Vec<RoundMsg<'_>> = apply
-            .iter()
-            .map(|(worker, weight, comp)| RoundMsg { worker: *worker, weight: *weight, comp })
-            .collect();
         // dropped messages were still transmitted: their bits join the
         // uplink total (once, here at resolution), not the aggregate
-        let bits = self.server.apply_attributed(&msgs) + dropped_bits;
+        let bits = if tier {
+            // the apply list holds tier placeholders whose wire_bits()
+            // equal the stashed payloads' — the round charges exactly
+            // what reduce = "root" would have
+            let apply_bits: u64 = apply.iter().map(|(_, _, comp)| comp.wire_bits()).sum();
+            self.apply_tier(step, &sched_apply, &sched_drops, apply_bits)? + dropped_bits
+        } else {
+            let msgs: Vec<RoundMsg<'_>> = apply
+                .iter()
+                .map(|(worker, weight, comp)| RoundMsg { worker: *worker, weight: *weight, comp })
+                .collect();
+            self.server.apply_attributed(&msgs) + dropped_bits
+        };
         self.server.total_bits += dropped_bits;
         let sim_now_s = if self.real {
             self.wall_now_s += col.round_s;
@@ -823,6 +920,54 @@ impl<T: Transport> RoundEngine<T> {
             // the simulator's tree rounds (report::RoundReport docs)
             ..Default::default()
         })
+    }
+
+    /// `reduce = "tier"` phase 2: broadcast the resolved apply/drop
+    /// schedule, gather one dense partial per live relay group, and
+    /// combine the non-empty partials in ascending group order — the
+    /// same group-blocked canonical schedule
+    /// [`Server::apply_attributed`] runs for `reduce = "root"`, which is
+    /// what keeps the two modes bit-identical. Empty partials ("nothing
+    /// of mine was scheduled") are skipped, exactly as the star path
+    /// skips empty groups: accumulating a zero partial is *not* a
+    /// bitwise no-op (`-0.0 + 0.0 = +0.0`).
+    fn apply_tier(
+        &mut self,
+        step: u64,
+        sched_apply: &[SchedEntry],
+        sched_drops: &[(u32, u32)],
+        apply_bits: u64,
+    ) -> Result<u64> {
+        self.transport.broadcast(&encode_sched(step as u32, sched_apply, sched_drops))?;
+        let deadline = if self.real && self.opts.round_timeout > 0.0 {
+            Some(Duration::from_secs_f64(self.opts.round_timeout))
+        } else {
+            None
+        };
+        let g = self.transport.gather_reduced(deadline)?;
+        for w in g.dead {
+            self.mark_dead(w);
+        }
+        let d = self.server.params.len();
+        let mut partials: Vec<(u32, Vec<f32>)> = Vec::with_capacity(g.arrived.len());
+        for (group, frame) in g.arrived {
+            let (origin, partial) = decode_reduced(&frame)?;
+            let expect = self.plan.range(group).start;
+            if origin != expect {
+                bail!("group {group} reported a partial for base leaf {origin}, want {expect}");
+            }
+            self.transport.recycle_frame(frame);
+            if partial.is_empty() {
+                continue;
+            }
+            if partial.len() != d {
+                bail!("group {group} partial has {} coords, the model has {d}", partial.len());
+            }
+            partials.push((group, partial));
+        }
+        partials.sort_unstable_by_key(|&(group, _)| group);
+        let refs: Vec<&[f32]> = partials.iter().map(|(_, p)| p.as_slice()).collect();
+        Ok(self.server.apply_reduced(&refs, sched_apply.len(), apply_bits))
     }
 
     /// Resolve the deferred-message buffer outside the round loop:
@@ -1076,14 +1221,33 @@ pub fn local_tree_coded(
         Vec::with_capacity(plan.groups());
     for g in 0..plan.groups() as u32 {
         let range = plan.range(g);
+        let base = range.start;
         let take = (range.end - range.start) as usize;
         let mut group: Vec<(u32, Vec<Compute<'_>>)> = leaves.drain(..take).collect();
+        // reduce = "tier" state: decoded replies stashed at this tier
+        // between phase 1 (meta upward) and phase 2 (schedule down,
+        // partial upward); `dim` remembers the model size from the last
+        // round broadcast so the partial can be sized without it
+        let mut stash = TierStash::new(base, range.end);
+        let mut dim = 0usize;
         handlers.push(Box::new(move |frame: &Frame| -> Result<Option<Frame>> {
             if frame.kind == FrameKind::Shutdown {
                 // nothing to relay in-process: the leaves are closures,
                 // not loops waiting on a link
                 return Ok(None);
             }
+            if frame.kind == FrameKind::Sched {
+                // phase 2: reduce this tier's share of the schedule and
+                // answer with the dense partial (empty = nothing owned)
+                let (step, sched_apply, sched_drops) = decode_sched(frame)?;
+                let partial = stash.serve(step, &sched_apply, &sched_drops, dim)?;
+                return Ok(Some(encode_reduced(base, &partial)));
+            }
+            let tier = frame.kind == FRAME_PARAMS && {
+                let down = decode_round(frame)?;
+                dim = down.params.len();
+                down.reduce == ReduceMode::Tier
+            };
             let mut batch: Vec<(u32, Frame)> = Vec::new();
             for (id, replicas) in group.iter_mut() {
                 let mut reply: Option<Frame> = None;
@@ -1104,6 +1268,23 @@ pub fn local_tree_coded(
                 if let Some(f) = reply {
                     batch.push((*id, f));
                 }
+            }
+            if tier {
+                // phase 1: decode + stash the payloads here, send the
+                // leader metadata only (the placeholder contract keeps
+                // its pricing/ack/bit accounting unchanged)
+                let mut entries: Vec<MetaEntry> = Vec::with_capacity(batch.len());
+                for (id, f) in batch {
+                    let r = decode_reply_from(&f, id)?;
+                    entries.push(MetaEntry {
+                        worker: id,
+                        step: r.step as u32,
+                        loss: r.loss,
+                        wire_bits: r.comp.wire_bits(),
+                    });
+                    stash.insert(id, r.step as u32, r.comp);
+                }
+                return Ok(Some(encode_meta(base, dim as u32, &[], &entries)));
             }
             // always answer with a batch — empty when no owned leaf
             // participated — so the upward contract is uniform
@@ -1331,6 +1512,75 @@ mod tests {
         assert!(eng.excluded_workers().is_empty(), "on-time probe must re-admit");
         assert_eq!(eng.participants_at(8), vec![0, 1, 2]);
         eng.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tier_reduce_validates_its_preconditions() {
+        // tier reduction needs a transport with a relay tier
+        let server = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        let mut c = cfg(2);
+        c.reduce = "tier".into();
+        let err = RoundEngine::from_cfg(dense_star(2), server, &c).unwrap_err().to_string();
+        assert!(err.contains("relay-tier"), "{err}");
+        // EF21-family Accumulate shadows must stay at the leader
+        let server = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Accumulate);
+        let tree = local_tree(
+            (0..2)
+                .map(|_| {
+                    compute_fn(move |_step: u64, params: &[f32]| {
+                        Ok((0.0, Compressed::dense(vec![1.0f32; params.len()])))
+                    })
+                })
+                .collect(),
+            1,
+        )
+        .unwrap();
+        let err = RoundEngine::from_cfg(tree, server, &c).unwrap_err().to_string();
+        assert!(err.contains("Accumulate"), "{err}");
+        // an unknown reduce string fails loudly at construction
+        let server = Server::new(vec![0.0; 2], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+        let mut c = cfg(2);
+        c.reduce = "sideways".into();
+        let err = RoundEngine::from_cfg(dense_star(2), server, &c).unwrap_err().to_string();
+        assert!(err.contains("sideways"), "{err}");
+    }
+
+    #[test]
+    fn tier_reduce_fullsync_matches_root_reduce_bitwise() {
+        let d = 4;
+        let run = |reduce: &str| -> (Vec<f32>, u64) {
+            let server = Server::new(vec![0.0; d], Box::new(Sgd { lr: 1.0 }), AggKind::Fresh);
+            let tree = local_tree(
+                (0..4)
+                    .map(|w| {
+                        compute_fn(move |_step: u64, params: &[f32]| {
+                            Ok((
+                                w as f32,
+                                Compressed::dense(vec![(w + 1) as f32; params.len()]),
+                            ))
+                        })
+                    })
+                    .collect(),
+                2,
+            )
+            .unwrap();
+            let mut c = cfg(4);
+            c.reduce = reduce.into();
+            let mut eng = RoundEngine::from_cfg(tree, server, &c).unwrap();
+            for _ in 0..3 {
+                eng.run_round().unwrap();
+            }
+            let s = eng.finish().unwrap();
+            (s.params.clone(), s.total_bits)
+        };
+        let (rp, rb) = run("root");
+        let (tp, tb) = run("tier");
+        // the placeholder metering charges exactly the leaf bits, and the
+        // group-blocked schedule makes the trajectories bit-identical
+        assert_eq!(rb, tb, "uplink accounting diverged");
+        for (i, (a, b)) in rp.iter().zip(&tp).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "params differ at {i}: {a} vs {b}");
+        }
     }
 
     #[test]

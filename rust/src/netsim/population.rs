@@ -132,6 +132,10 @@ pub struct RoundSim {
     down_bits: u64,
     /// late messages awaiting resolution: `(worker, sent_step)`
     pending: Vec<(u32, u64)>,
+    /// `Some(bits)` = `reduce = "tier"` pricing: each active group's
+    /// upward hop carries one dense partial of this many bits instead
+    /// of its leaves' payloads verbatim (`None` = reduce at the root)
+    reduced_bits: Option<u64>,
     total_bits: u64,
     step: u64,
 }
@@ -152,9 +156,27 @@ impl RoundSim {
             up_bits,
             down_bits,
             pending: Vec::new(),
+            reduced_bits: None,
             total_bits: 0,
             step: 0,
         }
+    }
+
+    /// Price `reduce = "tier"` (builder-style, strictly opt-in): the
+    /// root-tier `forwarded_bits` in the report becomes
+    /// `active_groups × reduced_bits` — one dense partial per group —
+    /// instead of the participants' payloads verbatim. Leaf-tier
+    /// pricing, round latency, and the charge-once bit total are
+    /// untouched: the leaves still transmit every payload (that is what
+    /// the leader meters, bit-identically to `reduce = "root"`), only
+    /// the sub→root ingress shrinks. Requires a tree topology, so call
+    /// it after [`Self::with_topology`].
+    pub fn with_reduce(mut self, reduced_bits: u64) -> Result<Self> {
+        if !matches!(self.topology, Topology::Tree { .. }) {
+            bail!("tier reduction needs a relay tier to reduce at (with_topology first)");
+        }
+        self.reduced_bits = Some(reduced_bits);
+        Ok(self)
     }
 
     /// Switch the simulated aggregation topology (builder-style;
@@ -347,7 +369,7 @@ impl RoundSim {
         let tiers = match self.topology {
             Topology::Star => Vec::new(),
             Topology::Tree { fanout, .. } => {
-                tier_stats(&TreePlan::resolve(m, fanout)?, &parts, self.up_bits)
+                tier_stats(&TreePlan::resolve(m, fanout)?, &parts, self.up_bits, self.reduced_bits)
             }
         };
         Ok(SimRoundReport {
@@ -386,13 +408,21 @@ impl RoundSim {
     }
 }
 
-/// Per-tier relay statistics of one tree round, leaf tier first. The
-/// bits are conserved through the relay (batch frames carry leaf
-/// replies verbatim), so both tiers forward the full participant
-/// payload — the tree's win is **fan-in**: the root waits on the active
-/// sub-aggregators, not on every leaf. `parts` must be ascending
-/// (policy draws are), so group owners arrive run-length contiguous.
-fn tier_stats(plan: &TreePlan, parts: &[u32], up_bits: u64) -> Vec<TierStats> {
+/// Per-tier relay statistics of one tree round, leaf tier first. Under
+/// `reduce = "root"` (`reduced_bits = None`) the bits are conserved
+/// through the relay (batch frames carry leaf replies verbatim), so
+/// both tiers forward the full participant payload — the tree's win is
+/// **fan-in**: the root waits on the active sub-aggregators, not on
+/// every leaf. Under `reduce = "tier"` the root tier instead forwards
+/// one `reduced_bits` partial per active group: fan-in AND ingress
+/// shrink. `parts` must be ascending (policy draws are), so group
+/// owners arrive run-length contiguous.
+fn tier_stats(
+    plan: &TreePlan,
+    parts: &[u32],
+    up_bits: u64,
+    reduced_bits: Option<u64>,
+) -> Vec<TierStats> {
     let mut active_groups = 0usize;
     let mut max_fan = 0usize;
     let mut cur: Option<u32> = None;
@@ -413,9 +443,13 @@ fn tier_stats(plan: &TreePlan, parts: &[u32], up_bits: u64) -> Vec<TierStats> {
         max_fan = n;
     }
     let forwarded_bits = parts.len() as u64 * up_bits;
+    let root_ingress = match reduced_bits {
+        Some(rb) => active_groups as u64 * rb,
+        None => forwarded_bits,
+    };
     vec![
         TierStats { fan_in: max_fan, forwarded_bits },
-        TierStats { fan_in: active_groups, forwarded_bits },
+        TierStats { fan_in: active_groups, forwarded_bits: root_ingress },
     ]
 }
 
@@ -550,6 +584,33 @@ mod tests {
         assert_eq!(tree.tiers[0].forwarded_bits, 64 * UP);
         assert_eq!((tree.participants, tree.on_time, tree.late), (64, 64, 0));
         assert_eq!(tree.bits, star.bits);
+    }
+
+    #[test]
+    fn tier_reduce_prices_root_ingress_per_group() {
+        let reduced = 32 * 64u64; // one dense d=64 partial per group
+        let mk = |reduce: bool| {
+            let mut s = sim(64, Box::new(FullSync::new(StaleWeight::Damp)), AggKind::Fresh, 0.0);
+            s = s.with_topology(Topology::Tree { fanout: 0, replication: 1 }).unwrap();
+            if reduce {
+                s = s.with_reduce(reduced).unwrap();
+            }
+            s.run_round().unwrap()
+        };
+        let root = mk(false);
+        let tier = mk(true);
+        // everything but the root-tier ingress is byte-identical: tier
+        // reduction changes where the sum happens, not what is charged
+        assert_eq!(tier.sim_round_s.to_bits(), root.sim_round_s.to_bits());
+        assert_eq!(tier.bits, root.bits);
+        assert_eq!(tier.tiers[0].forwarded_bits, 64 * UP);
+        assert_eq!(root.tiers[1].forwarded_bits, 64 * UP);
+        // 8 active groups × one dense partial each
+        assert_eq!(tier.tiers[1].forwarded_bits, 8 * reduced);
+        assert_eq!((tier.tiers[0].fan_in, tier.tiers[1].fan_in), (8, 8));
+        // a star has no tier to reduce at
+        let s = sim(8, Box::new(FullSync::new(StaleWeight::Damp)), AggKind::Fresh, 0.0);
+        assert!(s.with_reduce(reduced).is_err());
     }
 
     #[test]

@@ -175,23 +175,48 @@ impl Rng {
     }
 
     /// [`Rng::choose_k`] into a caller-owned buffer (cleared first).
-    /// Same draws, same result; the lazy-permutation map still
-    /// allocates, so RandK stays outside the strict zero-allocation
-    /// contract (documented in `compress::arena`).
+    /// Same draws, same result; the lazy-permutation scratch is local
+    /// here, so prefer [`Rng::choose_k_with`] (caller-owned scratch) on
+    /// an allocation-free hot path.
     pub fn choose_k_into(&mut self, n: usize, k: usize, out: &mut Vec<u32>) {
+        let mut swaps = Vec::new();
+        self.choose_k_with(n, k, out, &mut swaps);
+    }
+
+    /// [`Rng::choose_k_into`] with caller-owned scratch for the lazy
+    /// permutation (both buffers cleared first). `swaps` holds
+    /// `index << 32 | value` entries kept sorted by index and probed by
+    /// binary search — the lookup-only map the draw needs, minus any
+    /// per-call allocation once the buffers have warmed up (RandK lends
+    /// them from its [`crate::compress::ScratchArena`]). Consumes the
+    /// same RNG draws and yields the same indices as [`Rng::choose_k`],
+    /// bit for bit.
+    pub fn choose_k_with(&mut self, n: usize, k: usize, out: &mut Vec<u32>, swaps: &mut Vec<u64>) {
         debug_assert!(k <= n);
-        // repolint: allow(hash_iter) — lookup-only map (get/insert keyed by
-        // index, never iterated), so hash order can't leak into results;
-        // draws depend only on the seeded stream.
-        let mut swaps: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+        debug_assert!(n <= u32::MAX as usize, "indices travel as u32");
+        fn probe(swaps: &[u64], i: usize) -> Result<usize, usize> {
+            swaps.binary_search_by(|e| ((e >> 32) as usize).cmp(&i))
+        }
+        fn value(swaps: &[u64], at: Result<usize, usize>, default: usize) -> usize {
+            match at {
+                Ok(pos) => (swaps[pos] & 0xFFFF_FFFF) as usize,
+                Err(_) => default,
+            }
+        }
+        swaps.clear();
         out.clear();
         out.reserve(k);
         for i in 0..k {
             let j = i + self.below(n - i);
-            let vi = *swaps.get(&i).unwrap_or(&i);
-            let vj = *swaps.get(&j).unwrap_or(&j);
+            let vi = value(swaps, probe(swaps, i), i);
+            let at_j = probe(swaps, j);
+            let vj = value(swaps, at_j, j);
             out.push(vj as u32);
-            swaps.insert(j, vi);
+            let entry = ((j as u64) << 32) | vi as u64;
+            match at_j {
+                Ok(pos) => swaps[pos] = entry,
+                Err(pos) => swaps.insert(pos, entry),
+            }
         }
     }
 
@@ -347,6 +372,27 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn choose_k_with_matches_the_allocating_forms_bit_for_bit() {
+        // same seeded stream, same draws, same indices — the sorted-Vec
+        // scratch is a drop-in for the map it replaced
+        let mut a = Rng::new(29);
+        let mut b = a.clone();
+        let mut scratch = Vec::new();
+        for &(n, k) in &[(100usize, 10usize), (5, 5), (5, 0), (1, 1), (64, 64)] {
+            let expect = a.choose_k(n, k);
+            let mut got = Vec::new();
+            b.choose_k_with(n, k, &mut got, &mut scratch);
+            assert_eq!(got, expect, "n={n} k={k}");
+            // the parents stayed in lock-step
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // warmed-up scratch is reused, not regrown per call
+        let cap = scratch.capacity();
+        b.choose_k_with(64, 64, &mut Vec::new(), &mut scratch);
+        assert!(scratch.capacity() >= cap);
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub use tree::{TreeLeader, TreePlan};
 pub enum FrameKind {
     /// Worker → leader, once per connection: 4-byte LE worker id.
     Hello = 0,
-    /// Leader → workers: the v3 round frame
+    /// Leader → workers: the v4 round frame
     /// ([`crate::engine::framing::encode_round`]).
     Params = 1,
     /// Worker → leader: one compressed gradient reply
@@ -54,6 +54,17 @@ pub enum FrameKind {
     /// Sub-aggregator → leader: several attributed leaf frames relayed
     /// as one combined message ([`tree::encode_batch`]).
     Batch = 5,
+    /// Sub-aggregator → leader, `reduce = "tier"` phase 1: per-leaf
+    /// reply metadata (worker, step, loss, accounted bits) with the
+    /// payload bytes retained at the tier ([`tree::encode_meta`]).
+    Meta = 6,
+    /// Leader → sub-aggregators, `reduce = "tier"` phase 2: the resolved
+    /// apply/drop schedule every tier reduces against
+    /// ([`tree::encode_sched`]).
+    Sched = 7,
+    /// Sub-aggregator → leader, `reduce = "tier"` phase 2: one dense
+    /// weighted partial sum per group ([`tree::encode_reduced`]).
+    Reduced = 8,
 }
 
 impl FrameKind {
@@ -71,6 +82,9 @@ impl FrameKind {
             3 => Some(FrameKind::Shutdown),
             4 => Some(FrameKind::Resend),
             5 => Some(FrameKind::Batch),
+            6 => Some(FrameKind::Meta),
+            7 => Some(FrameKind::Sched),
+            8 => Some(FrameKind::Reduced),
             _ => None,
         }
     }
@@ -87,6 +101,9 @@ impl std::fmt::Display for FrameKind {
             FrameKind::Shutdown => "shutdown",
             FrameKind::Resend => "resend",
             FrameKind::Batch => "batch",
+            FrameKind::Meta => "meta",
+            FrameKind::Sched => "sched",
+            FrameKind::Reduced => "reduced",
         };
         write!(f, "{} ({name})", self.as_byte())
     }
@@ -121,6 +138,50 @@ impl Frame {
     }
     pub fn batch(payload: Vec<u8>) -> Self {
         Frame { kind: FrameKind::Batch, payload }
+    }
+    pub fn meta(payload: Vec<u8>) -> Self {
+        Frame { kind: FrameKind::Meta, payload }
+    }
+    pub fn sched(payload: Vec<u8>) -> Self {
+        Frame { kind: FrameKind::Sched, payload }
+    }
+    pub fn reduced(payload: Vec<u8>) -> Self {
+        Frame { kind: FrameKind::Reduced, payload }
+    }
+}
+
+/// Where the weighted reduction happens (the `reduce` config knob).
+/// Carried in the round frame (v4) so every tier and leaf learns the
+/// round's mode from the broadcast itself — no out-of-band flag.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReduceMode {
+    /// leaf replies ride byte-verbatim to the root, which decodes and
+    /// reduces all M payloads itself (the flat-star-equivalent default)
+    #[default]
+    Root,
+    /// each sub-aggregator decodes its owned leaves' replies and ships
+    /// one dense weighted partial per group; the root combines ~sqrt(M)
+    /// partials in group order (bit-identical by the group-blocked
+    /// canonical schedule)
+    Tier,
+}
+
+impl ReduceMode {
+    /// The round-frame byte for this mode.
+    pub fn as_byte(self) -> u8 {
+        match self {
+            ReduceMode::Root => 0,
+            ReduceMode::Tier => 1,
+        }
+    }
+
+    /// Parse a round-frame byte; `None` for bytes no build ever emitted.
+    pub fn from_byte(b: u8) -> Option<ReduceMode> {
+        match b {
+            0 => Some(ReduceMode::Root),
+            1 => Some(ReduceMode::Tier),
+            _ => None,
+        }
     }
 }
 
@@ -228,6 +289,24 @@ pub trait Transport {
         let _ = frame;
     }
 
+    /// The tree grouping this transport aggregates through, if it is a
+    /// relay tier ([`TreeLeader`] returns its [`TreePlan`]). The engine
+    /// derives its group-blocked reduction schedule from this so star
+    /// and tree runs share one canonical order.
+    fn tier_plan(&self) -> Option<&TreePlan> {
+        None
+    }
+
+    /// `reduce = "tier"` phase 2: collect one [`FrameKind::Reduced`]
+    /// frame from every live relay group after a
+    /// [`FrameKind::Sched`] broadcast. Only relay transports implement
+    /// this; the default errors loudly so a misconfigured engine cannot
+    /// silently run a tier-reduced round over a flat star.
+    fn gather_reduced(&mut self, deadline: Option<Duration>) -> Result<Gathered> {
+        let _ = deadline;
+        bail!("this transport has no relay tier to gather partial reductions from");
+    }
+
     /// Tell every worker the run is over.
     fn shutdown(&mut self) -> Result<()>;
 }
@@ -254,6 +333,14 @@ impl<T: Transport> Transport for Blocking<T> {
 
     fn recycle_frame(&mut self, frame: Frame) {
         self.0.recycle_frame(frame);
+    }
+
+    fn tier_plan(&self) -> Option<&TreePlan> {
+        self.0.tier_plan()
+    }
+
+    fn gather_reduced(&mut self, deadline: Option<Duration>) -> Result<Gathered> {
+        self.0.gather_reduced(deadline)
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -340,6 +427,9 @@ mod tests {
         assert_eq!(Frame::params(vec![1]).kind, FRAME_PARAMS);
         assert_eq!(Frame::grad(vec![2]).payload, vec![2]);
         assert_eq!(Frame::batch(vec![3]).kind, FrameKind::Batch);
+        assert_eq!(Frame::meta(vec![4]).kind, FrameKind::Meta);
+        assert_eq!(Frame::sched(vec![5]).kind, FrameKind::Sched);
+        assert_eq!(Frame::reduced(vec![6]).kind, FrameKind::Reduced);
     }
 
     #[test]
@@ -352,14 +442,29 @@ mod tests {
             (FrameKind::Shutdown, 3),
             (FrameKind::Resend, 4),
             (FrameKind::Batch, 5),
+            (FrameKind::Meta, 6),
+            (FrameKind::Sched, 7),
+            (FrameKind::Reduced, 8),
         ];
         for (kind, byte) in pinned {
             assert_eq!(kind.as_byte(), byte);
             assert_eq!(FrameKind::from_byte(byte), Some(kind));
         }
-        for forged in [6u8, 7, 0x7F, 0xA3, 0xFF] {
+        for forged in [9u8, 10, 0x7F, 0xA3, 0xFF] {
             assert_eq!(FrameKind::from_byte(forged), None);
         }
+    }
+
+    #[test]
+    fn reduce_mode_bytes_roundtrip_and_unknown_bytes_fail() {
+        assert_eq!(ReduceMode::Root.as_byte(), 0);
+        assert_eq!(ReduceMode::Tier.as_byte(), 1);
+        assert_eq!(ReduceMode::from_byte(0), Some(ReduceMode::Root));
+        assert_eq!(ReduceMode::from_byte(1), Some(ReduceMode::Tier));
+        for forged in [2u8, 0x7F, 0xFF] {
+            assert_eq!(ReduceMode::from_byte(forged), None);
+        }
+        assert_eq!(ReduceMode::default(), ReduceMode::Root);
     }
 
     #[test]

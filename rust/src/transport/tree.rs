@@ -21,8 +21,27 @@
 //!   per-leaf replies, and a dead sub-aggregator surfaces as its whole
 //!   leaf range dying.
 //!
+//! With `reduce = "tier"` three more codecs join the
+//! leader↔sub-aggregator wire (the leaf-facing protocol is untouched):
+//!
+//! * the **meta codec** ([`encode_meta`]/[`decode_meta`]) — phase 1's
+//!   upward message: per-leaf reply *metadata* (worker, step, loss,
+//!   accounted wire bits) while the decoded payloads stay stashed at the
+//!   tier. The leader synthesizes placeholder replies from it
+//!   (zero-coordinate sparse payloads whose `wire_bits()` equal the
+//!   reported bits exactly), so its arrival pricing, ack ladder and
+//!   charge-once bit metering run unchanged;
+//! * the **sched codec** ([`encode_sched`]/[`decode_sched`]) — phase 2's
+//!   downward message: the resolved apply list (global apply order,
+//!   weights included) plus the drop list, which every tier filters to
+//!   its owned leaf range;
+//! * the **reduced codec** ([`encode_reduced`]/[`decode_reduced`]) — one
+//!   dense weighted partial sum per group, combined by the root in
+//!   ascending group order (the group-blocked canonical schedule that
+//!   keeps tier-reduced rounds bit-identical to the star).
+//!
 //! Wire note: the batch layout below is leader↔sub-aggregator only; the
-//! leaf-facing protocol is exactly the pinned v3 round frame
+//! leaf-facing protocol is exactly the pinned v4 round frame
 //! (`engine/framing.rs`), which is why a 2-tier run is bit-identical to
 //! the star (`tests/prop_tree.rs`).
 
@@ -30,10 +49,21 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::compress::{Compressed, Payload};
+
 use super::{Frame, FrameKind, Gathered, Transport};
 
 /// Version byte of the sub-aggregator batch frame.
 pub const BATCH_VERSION: u8 = 0xB1;
+
+/// Version byte of the tier-reduce meta frame (phase 1 upward).
+pub const META_VERSION: u8 = 0xC1;
+
+/// Version byte of the tier-reduce schedule frame (phase 2 downward).
+pub const SCHED_VERSION: u8 = 0xC2;
+
+/// Version byte of the tier-reduce partial-sum frame (phase 2 upward).
+pub const REDUCED_VERSION: u8 = 0xC3;
 
 /// Leaf↔group arithmetic for a two-level tree: group `g` owns the
 /// contiguous global leaf ids `g*fanout .. min((g+1)*fanout, leaves)`.
@@ -121,7 +151,7 @@ pub fn encode_batch(dead: &[u32], frames: &[(u32, Frame)]) -> Frame {
 }
 
 fn take_u8(b: &[u8], off: &mut usize) -> Result<u8> {
-    let v = *b.get(*off).ok_or_else(|| anyhow::anyhow!("batch frame truncated at {}", *off))?;
+    let v = *b.get(*off).ok_or_else(|| anyhow::anyhow!("tree frame truncated at {}", *off))?;
     *off += 1;
     Ok(v)
 }
@@ -129,11 +159,25 @@ fn take_u8(b: &[u8], off: &mut usize) -> Result<u8> {
 fn take_u32(b: &[u8], off: &mut usize) -> Result<u32> {
     let s = b
         .get(*off..*off + 4)
-        .ok_or_else(|| anyhow::anyhow!("batch frame truncated at {}", *off))?;
+        .ok_or_else(|| anyhow::anyhow!("tree frame truncated at {}", *off))?;
     *off += 4;
     let mut w = [0u8; 4];
     w.copy_from_slice(s);
     Ok(u32::from_le_bytes(w))
+}
+
+fn take_u64(b: &[u8], off: &mut usize) -> Result<u64> {
+    let s = b
+        .get(*off..*off + 8)
+        .ok_or_else(|| anyhow::anyhow!("tree frame truncated at {}", *off))?;
+    *off += 8;
+    let mut w = [0u8; 8];
+    w.copy_from_slice(s);
+    Ok(u64::from_le_bytes(w))
+}
+
+fn take_f32(b: &[u8], off: &mut usize) -> Result<f32> {
+    Ok(f32::from_bits(take_u32(b, off)?))
 }
 
 /// Decode a batch frame into `(dead leaves, attributed leaf frames)`.
@@ -185,6 +229,316 @@ pub fn decode_batch(frame: &Frame) -> Result<(Vec<u32>, Vec<(u32, Frame)>)> {
     Ok((dead, frames))
 }
 
+/// One leaf reply's metadata as reported upward in a tier-reduce meta
+/// frame: everything the leader needs to price, ack and account for the
+/// reply without seeing its payload (which stays stashed at the tier).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetaEntry {
+    /// global leaf worker id
+    pub worker: u32,
+    /// the step the reply was computed against (straggler detection)
+    pub step: u32,
+    /// worker-local loss sample, relayed for the leader's telemetry
+    pub loss: f32,
+    /// `Compressed::wire_bits()` of the stashed payload — the leader
+    /// charges exactly this, so bit metering matches `reduce = "root"`
+    pub wire_bits: u64,
+}
+
+/// Encode a tier's phase-1 upward message under `reduce = "tier"`:
+/// which group is reporting, the model dimension `d` the stashed
+/// payloads decode into, leaves that died since the last report, and
+/// one [`MetaEntry`] per gathered leaf reply (leaf order).
+///
+/// Layout: `ver(1) | group(4 LE) | d(4 LE) | n_dead(4 LE) |
+/// dead ids(4 LE each) | n(4 LE) | n × [worker(4 LE) | step(4 LE) |
+/// loss(f32 LE) | wire_bits(8 LE)]`.
+pub fn encode_meta(group: u32, d: u32, dead: &[u32], entries: &[MetaEntry]) -> Frame {
+    let mut payload = Vec::with_capacity(13 + 4 * dead.len() + 4 + 20 * entries.len());
+    payload.push(META_VERSION);
+    payload.extend_from_slice(&group.to_le_bytes());
+    payload.extend_from_slice(&d.to_le_bytes());
+    payload.extend_from_slice(&(dead.len() as u32).to_le_bytes());
+    for &dd in dead {
+        payload.extend_from_slice(&dd.to_le_bytes());
+    }
+    payload.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for e in entries {
+        payload.extend_from_slice(&e.worker.to_le_bytes());
+        payload.extend_from_slice(&e.step.to_le_bytes());
+        payload.extend_from_slice(&e.loss.to_le_bytes());
+        payload.extend_from_slice(&e.wire_bits.to_le_bytes());
+    }
+    Frame::meta(payload)
+}
+
+/// Decode a meta frame into `(group, d, dead leaves, entries)`. Same
+/// forged-count discipline as [`decode_batch`]: declared counts are
+/// checked against the bytes present before any allocation sized from
+/// them, and trailing garbage is an error.
+pub fn decode_meta(frame: &Frame) -> Result<(u32, u32, Vec<u32>, Vec<MetaEntry>)> {
+    if frame.kind != FrameKind::Meta {
+        bail!("expected meta frame, got kind {}", frame.kind);
+    }
+    let b = &frame.payload;
+    let mut off = 0usize;
+    let ver = take_u8(b, &mut off)?;
+    if ver != META_VERSION {
+        bail!("meta frame version {ver}, this build speaks v{META_VERSION}");
+    }
+    let group = take_u32(b, &mut off)?;
+    let d = take_u32(b, &mut off)?;
+    let n_dead = take_u32(b, &mut off)? as usize;
+    if b.len().saturating_sub(off) < 4usize.saturating_mul(n_dead) {
+        bail!("meta frame declares {n_dead} dead ids, buffer too short");
+    }
+    let mut dead = Vec::with_capacity(n_dead);
+    for _ in 0..n_dead {
+        dead.push(take_u32(b, &mut off)?);
+    }
+    let n = take_u32(b, &mut off)? as usize;
+    if b.len().saturating_sub(off) < 20usize.saturating_mul(n) {
+        bail!("meta frame declares {n} entries, buffer too short");
+    }
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let worker = take_u32(b, &mut off)?;
+        let step = take_u32(b, &mut off)?;
+        let loss = take_f32(b, &mut off)?;
+        let wire_bits = take_u64(b, &mut off)?;
+        entries.push(MetaEntry { worker, step, loss, wire_bits });
+    }
+    if off != b.len() {
+        bail!("meta frame has {} trailing bytes", b.len() - off);
+    }
+    Ok((group, d, dead, entries))
+}
+
+/// One entry of the phase-2 apply schedule: apply `worker`'s stashed
+/// reply from `sent_step` at `weight` (the staleness weight; the global
+/// 1/N averaging scale is applied by the root when it combines partials,
+/// never at the tier — that factoring is what keeps tier-reduced sums
+/// bit-identical to the star's group-blocked schedule).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchedEntry {
+    pub worker: u32,
+    pub sent_step: u32,
+    pub weight: f32,
+}
+
+/// Encode the phase-2 downward schedule under `reduce = "tier"`: the
+/// resolved apply list in **global apply order** (each tier filters it
+/// to its owned leaf range, preserving order) and the drop list
+/// (superseded or stale-dropped stash entries to discard).
+///
+/// Layout: `ver(1) | step(4 LE) | n_apply(4 LE) | n × [worker(4 LE) |
+/// sent_step(4 LE) | weight(f32 LE)] | n_drop(4 LE) |
+/// n × [worker(4 LE) | sent_step(4 LE)]`.
+pub fn encode_sched(step: u32, apply: &[SchedEntry], drops: &[(u32, u32)]) -> Frame {
+    let mut payload = Vec::with_capacity(13 + 12 * apply.len() + 8 * drops.len());
+    payload.push(SCHED_VERSION);
+    payload.extend_from_slice(&step.to_le_bytes());
+    payload.extend_from_slice(&(apply.len() as u32).to_le_bytes());
+    for e in apply {
+        payload.extend_from_slice(&e.worker.to_le_bytes());
+        payload.extend_from_slice(&e.sent_step.to_le_bytes());
+        payload.extend_from_slice(&e.weight.to_le_bytes());
+    }
+    payload.extend_from_slice(&(drops.len() as u32).to_le_bytes());
+    for &(w, s) in drops {
+        payload.extend_from_slice(&w.to_le_bytes());
+        payload.extend_from_slice(&s.to_le_bytes());
+    }
+    Frame::sched(payload)
+}
+
+/// Decode a schedule frame into `(step, apply list, drop list)`.
+/// Weights must be finite and in `[0, 1]` (staleness weights never
+/// exceed the on-time weight of 1).
+pub fn decode_sched(frame: &Frame) -> Result<(u32, Vec<SchedEntry>, Vec<(u32, u32)>)> {
+    if frame.kind != FrameKind::Sched {
+        bail!("expected sched frame, got kind {}", frame.kind);
+    }
+    let b = &frame.payload;
+    let mut off = 0usize;
+    let ver = take_u8(b, &mut off)?;
+    if ver != SCHED_VERSION {
+        bail!("sched frame version {ver}, this build speaks v{SCHED_VERSION}");
+    }
+    let step = take_u32(b, &mut off)?;
+    let n_apply = take_u32(b, &mut off)? as usize;
+    if b.len().saturating_sub(off) < 12usize.saturating_mul(n_apply) {
+        bail!("sched frame declares {n_apply} apply entries, buffer too short");
+    }
+    let mut apply = Vec::with_capacity(n_apply);
+    for _ in 0..n_apply {
+        let worker = take_u32(b, &mut off)?;
+        let sent_step = take_u32(b, &mut off)?;
+        let weight = take_f32(b, &mut off)?;
+        if !weight.is_finite() || !(0.0..=1.0).contains(&weight) {
+            bail!("sched entry for worker {worker} has weight {weight}, want [0, 1]");
+        }
+        apply.push(SchedEntry { worker, sent_step, weight });
+    }
+    let n_drop = take_u32(b, &mut off)? as usize;
+    if b.len().saturating_sub(off) < 8usize.saturating_mul(n_drop) {
+        bail!("sched frame declares {n_drop} drop entries, buffer too short");
+    }
+    let mut drops = Vec::with_capacity(n_drop);
+    for _ in 0..n_drop {
+        let worker = take_u32(b, &mut off)?;
+        let sent_step = take_u32(b, &mut off)?;
+        drops.push((worker, sent_step));
+    }
+    if off != b.len() {
+        bail!("sched frame has {} trailing bytes", b.len() - off);
+    }
+    Ok((step, apply, drops))
+}
+
+/// Encode a tier's phase-2 upward partial sum: the dense weighted sum of
+/// its scheduled stashed replies, reduced in leaf order. An empty
+/// partial (`n = 0`) is legal and means "nothing of mine was scheduled".
+///
+/// Layout: `ver(1) | group(4 LE) | n(4 LE) | n × f32 LE`.
+pub fn encode_reduced(group: u32, partial: &[f32]) -> Frame {
+    let mut payload = Vec::with_capacity(9 + 4 * partial.len());
+    payload.push(REDUCED_VERSION);
+    payload.extend_from_slice(&group.to_le_bytes());
+    payload.extend_from_slice(&(partial.len() as u32).to_le_bytes());
+    for &v in partial {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    Frame::reduced(payload)
+}
+
+/// Decode a reduced frame into `(group, partial)`. The declared length
+/// must match the buffer exactly.
+pub fn decode_reduced(frame: &Frame) -> Result<(u32, Vec<f32>)> {
+    if frame.kind != FrameKind::Reduced {
+        bail!("expected reduced frame, got kind {}", frame.kind);
+    }
+    let b = &frame.payload;
+    let mut off = 0usize;
+    let ver = take_u8(b, &mut off)?;
+    if ver != REDUCED_VERSION {
+        bail!("reduced frame version {ver}, this build speaks v{REDUCED_VERSION}");
+    }
+    let group = take_u32(b, &mut off)?;
+    let n = take_u32(b, &mut off)? as usize;
+    if b.len().saturating_sub(off) != 4usize.saturating_mul(n) {
+        bail!("reduced frame declares {n} values, buffer has {} bytes left", b.len() - off);
+    }
+    let mut partial = Vec::with_capacity(n);
+    for _ in 0..n {
+        partial.push(take_f32(b, &mut off)?);
+    }
+    Ok((group, partial))
+}
+
+/// Build the placeholder reply the leader synthesizes from a
+/// [`MetaEntry`]: a zero-coordinate sparse payload whose `wire_bits()`
+/// equal the tier-reported bits exactly (empty sparse payloads carry 0
+/// payload bits, so the whole charge rides in `extra_bits`). The frame
+/// is byte-compatible with a real leaf reply, so the engine's decode,
+/// pricing, ack and pending paths run unchanged.
+pub fn placeholder_reply(e: &MetaEntry, d: u32) -> Frame {
+    let comp = Compressed {
+        payload: Payload::Sparse { d, idx: Vec::new(), val: Vec::new() },
+        extra_bits: e.wire_bits,
+    };
+    crate::engine::framing::encode_reply(e.step as u64, e.worker, e.loss, comp)
+}
+
+/// A tier's stash of decoded-but-unapplied leaf replies under
+/// `reduce = "tier"`: phase 1 inserts every gathered reply keyed by
+/// `(worker, sent_step)`, phase 2 serves the leader's schedule from it.
+/// Shared by [`crate::coordinator::SubAggregator`] and the in-process
+/// tree handlers so both speak the identical stash discipline.
+///
+/// Entries older than [`crate::engine::GIVE_UP_MEMORY`] rounds are
+/// pruned on every serve — by then the leader has acked the reply
+/// `Dropped` and will never schedule it.
+pub struct TierStash {
+    /// owned leaf range `lo..hi` (global ids)
+    lo: u32,
+    hi: u32,
+    entries: Vec<(u32, u32, Compressed)>,
+}
+
+impl TierStash {
+    pub fn new(lo: u32, hi: u32) -> Self {
+        TierStash { lo, hi, entries: Vec::new() }
+    }
+
+    fn owns(&self, worker: u32) -> bool {
+        (self.lo..self.hi).contains(&worker)
+    }
+
+    /// Stash one decoded reply. A duplicate `(worker, sent_step)` —
+    /// a resend racing its slow original across rounds — replaces the
+    /// existing entry (deterministic replicas make the copies
+    /// byte-identical, so this is a no-op in effect).
+    pub fn insert(&mut self, worker: u32, sent_step: u32, comp: Compressed) {
+        match self.entries.iter_mut().find(|(w, s, _)| *w == worker && *s == sent_step) {
+            Some(slot) => slot.2 = comp,
+            None => self.entries.push((worker, sent_step, comp)),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serve one phase-2 schedule: reduce this tier's share of the apply
+    /// list — filtered to the owned leaf range, **in schedule order**
+    /// (= the leader's global apply order), each stashed payload
+    /// accumulated dense at its scheduled staleness weight — then
+    /// discard the owned drop-list entries and prune anything the leader
+    /// can no longer schedule. Returns the dense partial, or an empty
+    /// `Vec` when nothing owned was scheduled (the "not mine" reply).
+    /// A scheduled reply missing from the stash is a protocol violation.
+    pub fn serve(
+        &mut self,
+        step: u32,
+        apply: &[SchedEntry],
+        drops: &[(u32, u32)],
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        let mut partial: Vec<f32> = Vec::new();
+        for e in apply.iter().filter(|e| self.owns(e.worker)) {
+            let Some(pos) = self
+                .entries
+                .iter()
+                .position(|(w, s, _)| *w == e.worker && *s == e.sent_step)
+            else {
+                bail!(
+                    "schedule applies worker {} step {} but no such reply is stashed",
+                    e.worker,
+                    e.sent_step
+                );
+            };
+            if partial.is_empty() {
+                partial.resize(d, 0.0);
+            }
+            let (_, _, comp) = self.entries.swap_remove(pos);
+            comp.add_into(&mut partial, e.weight);
+        }
+        for &(w, s) in drops.iter().filter(|(w, _)| self.owns(*w)) {
+            if let Some(pos) = self.entries.iter().position(|(ew, es, _)| *ew == w && *es == s) {
+                self.entries.swap_remove(pos);
+            }
+        }
+        let horizon = crate::engine::GIVE_UP_MEMORY as u32;
+        self.entries.retain(|(_, s, _)| step.saturating_sub(*s) <= horizon);
+        Ok(partial)
+    }
+}
+
 /// Leader-side [`Transport`] adapter over a tree: the inner transport's
 /// "workers" are sub-aggregator links (one per [`TreePlan`] group), but
 /// this adapter exposes the *leaf* id space, so the round engine runs
@@ -200,8 +554,15 @@ pub struct TreeLeader<T: Transport> {
     sub_dead: Vec<bool>,
     /// batch frames unwrapped so far (fan-in diagnostics)
     batches_in: u64,
-    /// leaf frames carried by those batches
+    /// leaf frames carried by those batches (tier-reduce meta entries
+    /// count here too: each stands in for one leaf reply)
     leaf_frames_in: u64,
+    /// meta frames unwrapped so far (`reduce = "tier"` phase 1)
+    metas_in: u64,
+    /// reduced frames gathered so far (`reduce = "tier"` phase 2)
+    reduced_in: u64,
+    /// payload bits carried by those reduced frames
+    reduced_bits_in: u64,
 }
 
 impl<T: Transport> TreeLeader<T> {
@@ -224,6 +585,9 @@ impl<T: Transport> TreeLeader<T> {
             sub_dead: vec![false; plan.groups()],
             batches_in: 0,
             leaf_frames_in: 0,
+            metas_in: 0,
+            reduced_in: 0,
+            reduced_bits_in: 0,
         })
     }
 
@@ -240,6 +604,12 @@ impl<T: Transport> TreeLeader<T> {
     /// `(batches unwrapped, leaf frames carried)` since construction.
     pub fn relay_stats(&self) -> (u64, u64) {
         (self.batches_in, self.leaf_frames_in)
+    }
+
+    /// `(meta frames, reduced frames, reduced payload bits)` since
+    /// construction — the tier-reduce side of the relay diagnostics.
+    pub fn reduce_stats(&self) -> (u64, u64, u64) {
+        (self.metas_in, self.reduced_in, self.reduced_bits_in)
     }
 
     /// Live groups owning at least one live requested leaf, ascending.
@@ -281,14 +651,34 @@ impl<T: Transport> TreeLeader<T> {
         }
     }
 
+    /// Unwrap one upward frame into attributed leaf replies. Batch
+    /// frames carry the replies verbatim (`reduce = "root"`); meta
+    /// frames carry metadata only, and each entry becomes a synthesized
+    /// [`placeholder_reply`] (`reduce = "tier"` phase 1).
     fn unpack(&mut self, frame: Frame, out: &mut Gathered) -> Result<()> {
-        let (dead, frames) = decode_batch(&frame)?;
-        self.batches_in += 1;
-        self.leaf_frames_in += frames.len() as u64;
-        for d in dead {
-            self.mark_leaf_dead(d, &mut out.dead);
+        match frame.kind {
+            FrameKind::Batch => {
+                let (dead, frames) = decode_batch(&frame)?;
+                self.batches_in += 1;
+                self.leaf_frames_in += frames.len() as u64;
+                for d in dead {
+                    self.mark_leaf_dead(d, &mut out.dead);
+                }
+                out.arrived.extend(frames);
+            }
+            FrameKind::Meta => {
+                let (_, d, dead, entries) = decode_meta(&frame)?;
+                self.metas_in += 1;
+                self.leaf_frames_in += entries.len() as u64;
+                for dd in dead {
+                    self.mark_leaf_dead(dd, &mut out.dead);
+                }
+                for e in &entries {
+                    out.arrived.push((e.worker, placeholder_reply(e, d)));
+                }
+            }
+            other => bail!("unexpected upstream frame kind {other}"),
         }
-        out.arrived.extend(frames);
         Ok(())
     }
 }
@@ -318,13 +708,12 @@ impl<T: Transport> Transport for TreeLeader<T> {
         subs.dedup();
         let mut out: Vec<(u32, Frame)> = Vec::with_capacity(ids.len());
         for (_, frame) in self.inner.gather(&subs)? {
-            let (dead, frames) = decode_batch(&frame)?;
-            if !dead.is_empty() {
-                bail!("leaves {dead:?} died during a blocking gather");
+            let mut g = Gathered::default();
+            self.unpack(frame, &mut g)?;
+            if !g.dead.is_empty() {
+                bail!("leaves {:?} died during a blocking gather", g.dead);
             }
-            self.batches_in += 1;
-            self.leaf_frames_in += frames.len() as u64;
-            out.extend(frames);
+            out.extend(g.arrived);
         }
         let mut got: Vec<u32> = out.iter().map(|(w, _)| *w).collect();
         got.sort_unstable();
@@ -375,6 +764,75 @@ impl<T: Transport> Transport for TreeLeader<T> {
             if !progressed {
                 // the inner deadline expired with nothing new: that is
                 // the engine's recovery cue
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn tier_plan(&self) -> Option<&TreePlan> {
+        Some(&self.plan)
+    }
+
+    /// Phase-2 gather under `reduce = "tier"`: every live sub-aggregator
+    /// answers every schedule frame (with an empty partial when nothing
+    /// it owns was scheduled), so the wait set is *all* live groups —
+    /// not just the round's owning groups, which is what phase 1 waits
+    /// on. Arrived frames are attributed by group id, not leaf id. In
+    /// real time a group that misses the deadline is simply absent;
+    /// virtual transports block for the full set.
+    fn gather_reduced(&mut self, deadline: Option<Duration>) -> Result<Gathered> {
+        let live: Vec<u32> =
+            (0..self.plan.groups() as u32).filter(|&g| !self.sub_dead[g as usize]).collect();
+        let mut out = Gathered::default();
+        if live.is_empty() {
+            return Ok(out);
+        }
+        if !self.inner.is_real_time() {
+            for (group, frame) in self.inner.gather(&live)? {
+                self.reduced_in += 1;
+                self.reduced_bits_in += 8 * frame.payload.len() as u64;
+                out.arrived.push((group, frame));
+            }
+            return Ok(out);
+        }
+        let start = Instant::now();
+        let mut got = vec![false; self.plan.groups()];
+        loop {
+            let waiting: Vec<u32> = live
+                .iter()
+                .copied()
+                .filter(|&g| !got[g as usize] && !self.sub_dead[g as usize])
+                .collect();
+            if waiting.is_empty() {
+                break;
+            }
+            let remaining = match deadline {
+                Some(d) => {
+                    let r = d.saturating_sub(start.elapsed());
+                    if r.is_zero() {
+                        break;
+                    }
+                    Some(r)
+                }
+                None => None,
+            };
+            let g = self.inner.gather_until(&waiting, 1, remaining)?;
+            let mut progressed = false;
+            for (group, frame) in g.arrived {
+                progressed = true;
+                if let Some(slot) = got.get_mut(group as usize) {
+                    *slot = true;
+                }
+                self.reduced_in += 1;
+                self.reduced_bits_in += 8 * frame.payload.len() as u64;
+                out.arrived.push((group, frame));
+            }
+            for group in g.dead {
+                progressed = true;
+                self.mark_sub_dead(group, &mut out);
+            }
+            if !progressed {
                 break;
             }
         }
@@ -477,5 +935,190 @@ mod tests {
         let mut bad_kind = good.payload.clone();
         bad_kind[17] = 0xEE;
         assert!(decode_batch(&Frame::batch(bad_kind)).is_err());
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let entries = vec![
+            MetaEntry { worker: 3, step: 7, loss: 0.25, wire_bits: 1337 },
+            MetaEntry { worker: 4, step: 6, loss: -1.5, wire_bits: 0 },
+        ];
+        let dead = vec![5u32];
+        let f = encode_meta(1, 16, &dead, &entries);
+        assert_eq!(f.kind, FrameKind::Meta);
+        let (group, d, d2, e2) = decode_meta(&f).unwrap();
+        assert_eq!((group, d), (1, 16));
+        assert_eq!(d2, dead);
+        assert_eq!(e2, entries);
+        // empty report is legal (a group with nothing gathered yet)
+        let (g3, d3, dead3, e3) = decode_meta(&encode_meta(0, 8, &[], &[])).unwrap();
+        assert_eq!((g3, d3), (0, 8));
+        assert!(dead3.is_empty() && e3.is_empty());
+    }
+
+    #[test]
+    fn meta_decode_rejects_forged_input() {
+        // wrong kind, wrong version
+        assert!(decode_meta(&Frame::grad(vec![META_VERSION])).is_err());
+        assert!(decode_meta(&Frame::meta(vec![0xC0; 17])).is_err());
+        let good = encode_meta(2, 16, &[9], &[MetaEntry {
+            worker: 3,
+            step: 1,
+            loss: 0.5,
+            wire_bits: 77,
+        }]);
+        for cut in 1..good.payload.len() {
+            let t = Frame::meta(good.payload[..cut].to_vec());
+            assert!(decode_meta(&t).is_err(), "cut at {cut} decoded");
+        }
+        let mut padded = good.payload.clone();
+        padded.push(0);
+        assert!(decode_meta(&Frame::meta(padded)).is_err());
+        // forged dead count at offset 9, forged entry count at offset 17
+        let mut forged = good.payload.clone();
+        forged[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_meta(&Frame::meta(forged)).is_err());
+        let mut forged = good.payload.clone();
+        forged[17..21].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_meta(&Frame::meta(forged)).is_err());
+    }
+
+    #[test]
+    fn sched_roundtrip() {
+        let apply = vec![
+            SchedEntry { worker: 1, sent_step: 3, weight: 1.0 },
+            SchedEntry { worker: 0, sent_step: 2, weight: 0.5 },
+        ];
+        let drops = vec![(2u32, 1u32), (5, 3)];
+        let f = encode_sched(4, &apply, &drops);
+        assert_eq!(f.kind, FrameKind::Sched);
+        let (step, a2, d2) = decode_sched(&f).unwrap();
+        assert_eq!(step, 4);
+        assert_eq!(a2, apply);
+        assert_eq!(d2, drops);
+        // an all-empty schedule is legal (quorum round with no applies)
+        let (s3, a3, d3) = decode_sched(&encode_sched(9, &[], &[])).unwrap();
+        assert_eq!(s3, 9);
+        assert!(a3.is_empty() && d3.is_empty());
+    }
+
+    #[test]
+    fn sched_decode_rejects_forged_input() {
+        assert!(decode_sched(&Frame::grad(vec![SCHED_VERSION])).is_err());
+        assert!(decode_sched(&Frame::sched(vec![0xC0; 13])).is_err());
+        let good = encode_sched(4, &[SchedEntry { worker: 1, sent_step: 3, weight: 0.5 }], &[(
+            2, 3,
+        )]);
+        for cut in 1..good.payload.len() {
+            let t = Frame::sched(good.payload[..cut].to_vec());
+            assert!(decode_sched(&t).is_err(), "cut at {cut} decoded");
+        }
+        let mut padded = good.payload.clone();
+        padded.push(0);
+        assert!(decode_sched(&Frame::sched(padded)).is_err());
+        // forged apply count at offset 5, forged drop count at offset 21
+        let mut forged = good.payload.clone();
+        forged[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_sched(&Frame::sched(forged)).is_err());
+        let mut forged = good.payload.clone();
+        forged[21..25].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_sched(&Frame::sched(forged)).is_err());
+        // weights outside [0, 1] (or non-finite) are protocol violations
+        for bad in [2.0f32, -0.5, f32::NAN, f32::INFINITY] {
+            let mut forged = good.payload.clone();
+            forged[17..21].copy_from_slice(&bad.to_le_bytes());
+            assert!(decode_sched(&Frame::sched(forged)).is_err(), "weight {bad} decoded");
+        }
+    }
+
+    #[test]
+    fn reduced_roundtrip() {
+        let partial = vec![1.0f32, -2.5, -0.0, f32::from_bits(1)];
+        let f = encode_reduced(3, &partial);
+        assert_eq!(f.kind, FrameKind::Reduced);
+        let (group, p2) = decode_reduced(&f).unwrap();
+        assert_eq!(group, 3);
+        // bit-exact through the wire, -0.0 and subnormals included
+        assert_eq!(
+            p2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            partial.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // the empty partial is the "nothing of mine scheduled" reply
+        let (g3, p3) = decode_reduced(&encode_reduced(0, &[])).unwrap();
+        assert_eq!(g3, 0);
+        assert!(p3.is_empty());
+    }
+
+    #[test]
+    fn reduced_decode_rejects_forged_input() {
+        assert!(decode_reduced(&Frame::grad(vec![REDUCED_VERSION])).is_err());
+        assert!(decode_reduced(&Frame::reduced(vec![0xC0; 9])).is_err());
+        let good = encode_reduced(1, &[1.0, -2.0]);
+        for cut in 1..good.payload.len() {
+            let t = Frame::reduced(good.payload[..cut].to_vec());
+            assert!(decode_reduced(&t).is_err(), "cut at {cut} decoded");
+        }
+        // the length check is exact: trailing bytes are an error
+        let mut padded = good.payload.clone();
+        padded.push(0);
+        assert!(decode_reduced(&Frame::reduced(padded)).is_err());
+        // forged value count at offset 5
+        let mut forged = good.payload.clone();
+        forged[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_reduced(&Frame::reduced(forged)).is_err());
+    }
+
+    #[test]
+    fn tier_stash_serves_the_schedule_in_order_and_prunes() {
+        let mut stash = TierStash::new(4, 8);
+        stash.insert(4, 0, Compressed::dense(vec![1.0, 2.0]));
+        stash.insert(5, 0, Compressed::dense(vec![10.0, 20.0]));
+        stash.insert(6, 0, Compressed::dense(vec![100.0, 200.0]));
+        // a duplicate insert replaces, never double-counts
+        stash.insert(5, 0, Compressed::dense(vec![10.0, 20.0]));
+        assert_eq!(stash.len(), 3);
+        let apply = vec![
+            // schedule order (stale-before-fresh): worker 5 first
+            SchedEntry { worker: 5, sent_step: 0, weight: 0.5 },
+            SchedEntry { worker: 4, sent_step: 0, weight: 1.0 },
+            // not ours: another tier's leaf, must be skipped
+            SchedEntry { worker: 1, sent_step: 0, weight: 1.0 },
+        ];
+        let drops = vec![(6u32, 0u32), (2, 0)];
+        let p = stash.serve(1, &apply, &drops, 2).unwrap();
+        assert_eq!(p, vec![0.5 * 10.0 + 1.0, 0.5 * 20.0 + 2.0]);
+        // applied and dropped entries are gone
+        assert!(stash.is_empty());
+        // nothing owned scheduled → the empty "not mine" partial
+        let none = stash
+            .serve(2, &[SchedEntry { worker: 1, sent_step: 2, weight: 1.0 }], &[], 2)
+            .unwrap();
+        assert!(none.is_empty());
+        // a scheduled-but-missing reply is a protocol violation
+        let err = stash
+            .serve(3, &[SchedEntry { worker: 4, sent_step: 3, weight: 1.0 }], &[], 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no such reply is stashed"), "{err}");
+        // entries beyond the give-up horizon are pruned on serve
+        stash.insert(7, 0, Compressed::dense(vec![1.0, 1.0]));
+        let horizon = crate::engine::GIVE_UP_MEMORY as u32;
+        stash.serve(horizon + 1, &[], &[], 2).unwrap();
+        assert!(stash.is_empty(), "stale stash entry must be pruned");
+    }
+
+    #[test]
+    fn placeholder_reply_charges_exactly_the_reported_bits() {
+        let e = MetaEntry { worker: 6, step: 11, loss: 0.75, wire_bits: 4242 };
+        let f = placeholder_reply(&e, 128);
+        let r = crate::engine::framing::decode_reply_from(&f, 6).unwrap();
+        assert_eq!(r.step, 11);
+        assert_eq!(r.worker, 6);
+        assert_eq!(r.loss, 0.75);
+        // empty sparse payload ⇒ 0 payload bits, the full charge rides
+        // in extra_bits — so the leader meters reduce="tier" rounds
+        // identically to reduce="root"
+        assert_eq!(r.comp.wire_bits(), 4242);
+        assert_eq!(r.comp.payload.decode(), vec![0.0f32; 128]);
     }
 }

@@ -245,6 +245,21 @@ pub fn decode_in(bytes: &[u8], arena: &mut ScratchArena) -> WorkerMsg {
     WorkerMsg { step, worker, comp: Compressed { payload, extra_bits } }
 }
 
+/// Decode a message and accumulate its payload straight into `acc` at
+/// `weight`, returning the charged wire bits — the root's per-message
+/// work under `reduce = "root"` (decode, then axpy), composed into one
+/// entry point so the tier-reduce bench can time it without modeling
+/// the transport. Every decoded buffer is drawn from `arena` and
+/// recycled back before returning, so a hot loop over M messages stays
+/// allocation-free at steady state.
+pub fn decode_add_in(bytes: &[u8], acc: &mut [f32], weight: f32, arena: &mut ScratchArena) -> u64 {
+    let msg = decode_in(bytes, arena);
+    let bits = msg.comp.wire_bits();
+    msg.comp.add_into(acc, weight);
+    arena.recycle(msg.comp);
+    bits
+}
+
 /// Closed-form cost (EXPERIMENTS.md `comm` row): expected bits per step
 /// per worker for fixed-point MLMC, parameterized on scalar width `w`
 /// (64 in the paper → `2d + 64 + ⌈log₂63⌉`, §3.1; 32 here).
@@ -280,6 +295,24 @@ mod tests {
         assert_eq!(got.step, 7);
         assert_eq!(got.worker, 3);
         assert_eq!(got.comp.decode(), vec![1.5, -2.25, 0.0]);
+    }
+
+    #[test]
+    fn decode_add_in_accumulates_and_charges_the_wire_bits() {
+        let msg = WorkerMsg {
+            step: 3,
+            worker: 1,
+            comp: Compressed::dense(vec![1.0, -2.0, 0.5]),
+        };
+        let bytes = encode(&msg);
+        let mut arena = ScratchArena::new();
+        let mut acc = vec![1.0f32, 1.0, 1.0];
+        let bits = decode_add_in(&bytes, &mut acc, 0.5, &mut arena);
+        assert_eq!(bits, msg.comp.wire_bits());
+        assert_eq!(acc, vec![1.5, 0.0, 1.25]);
+        // a second pass reuses the recycled buffer and accumulates again
+        decode_add_in(&bytes, &mut acc, 1.0, &mut arena);
+        assert_eq!(acc, vec![2.5, -2.0, 1.75]);
     }
 
     #[test]

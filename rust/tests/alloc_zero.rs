@@ -7,17 +7,19 @@
 //! must perform **zero** heap allocations for every arena-capable
 //! compressor family.
 //!
-//! Documented exceptions (see README §"Hot path"): Rand-k (lazy
-//! Fisher–Yates `HashMap`), multilevel families without `draw_in`
-//! (boxed-ctx fallback), and multi-threaded `ParCompressor` (scoped
-//! spawn). They are deliberately absent from `FAMILIES`.
+//! Documented exceptions (see README §"Hot path"): multilevel families
+//! without `draw_in` (boxed-ctx fallback) and multi-threaded
+//! `ParCompressor` (scoped spawn). They are deliberately absent from
+//! `FAMILIES`. Rand-k graduated off this list: its Fisher–Yates
+//! scratch is an arena-lent sorted `u64` buffer now (`choose_k_with`),
+//! so it is measured below like every other family.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use mlmc_dist::compress::{
-    Compressor, FixedPoint, FloatPoint, Identity, ParCompressor, Rtn, ScratchArena, SignSgd,
-    STopK, TopK,
+    Compressor, FixedPoint, FloatPoint, Identity, ParCompressor, RandK, Rtn, ScratchArena,
+    SignSgd, STopK, TopK,
 };
 use mlmc_dist::coordinator::{RoundMsg, Server};
 use mlmc_dist::ef::AggKind;
@@ -81,6 +83,7 @@ fn families() -> Vec<Box<dyn Compressor>> {
     vec![
         Box::new(Identity),
         Box::new(TopK { k: 32 }),
+        Box::new(RandK { k: 32 }),
         Box::new(STopK { s: 16, k: 4 }),
         Box::new(Rtn { level: 4 }),
         Box::new(FixedPoint { f: 8 }),

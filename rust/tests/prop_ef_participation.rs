@@ -33,6 +33,7 @@ use mlmc_dist::engine::{self, compute_fn, Compute, RoundEngine, WorkerRound};
 use mlmc_dist::optim::Sgd;
 use mlmc_dist::tensor::Rng;
 use mlmc_dist::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
+use mlmc_dist::transport::TreePlan;
 
 const M: usize = 4;
 const D: usize = 24;
@@ -178,12 +179,17 @@ fn ef21_sgdm_shadows_bit_exact_under_quorum_and_sampling() {
 fn lockstep_loop(problem: &Quadratic, cfg: &TrainConfig) -> (Vec<f32>, u64) {
     let d = problem.d;
     let mut encoders: Vec<_> = (0..cfg.workers).map(|_| build_encoder(cfg, d)).collect();
+    // the engine reduces under the group-blocked canonical schedule on
+    // every topology; the reference loop adopts the same auto-fanout
+    // plan so the pooled float-add order matches (per-worker shadows
+    // stay send-ordered on both sides regardless)
     let mut server = Server::new(
         vec![0.0; d],
         Box::new(Sgd { lr: cfg.lr }),
         agg_kind(&cfg.method),
     )
-    .with_threads(cfg.threads);
+    .with_threads(cfg.threads)
+    .with_reduce_plan(TreePlan::resolve(cfg.workers, 0).unwrap());
     for step in 0..cfg.steps {
         let msgs: Vec<_> = encoders
             .iter_mut()
@@ -219,7 +225,7 @@ fn mixed_version_round_frames_are_rejected() {
     // (c): versioned decode — see also engine/framing.rs unit tests
     let f = engine::encode_round(3, &[0, 1], &[], &[], &[1.0, 2.0]);
     assert_eq!(f.payload[0], engine::ROUND_FRAME_VERSION);
-    // 0xA2 is the retired v2 byte — a v2 node in a v3 cluster is loud
+    // 0xA2 is a retired byte — an old node in a v4 cluster is loud
     for other in [0u8, 1, 0xA2, engine::ROUND_FRAME_VERSION + 1] {
         let mut forged = f.clone();
         forged.payload[0] = other;

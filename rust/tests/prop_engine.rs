@@ -18,6 +18,7 @@ use mlmc_dist::netsim::CostModel;
 use mlmc_dist::tensor::Rng;
 use mlmc_dist::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
 use mlmc_dist::transport::channel::star;
+use mlmc_dist::transport::TreePlan;
 
 /// The pre-refactor round protocol, verbatim: per-worker encoders fed by
 /// the `(seed ^ 0x5EED, worker, step)` RNG stream, messages applied in
@@ -26,12 +27,16 @@ use mlmc_dist::transport::channel::star;
 fn seed_lockstep_loop(problem: &Quadratic, cfg: &TrainConfig) -> (Vec<f32>, u64) {
     let d = problem.d;
     let mut encoders: Vec<_> = (0..cfg.workers).map(|_| build_encoder(cfg, d)).collect();
+    // the engine reduces under the group-blocked canonical schedule on
+    // every topology (what keeps star ≡ tree ≡ tier-reduced bitwise),
+    // so the lock-step reference adopts the same auto-fanout plan
     let mut server = Server::new(
         vec![0.0; d],
         Box::new(mlmc_dist::optim::Sgd { lr: cfg.lr }),
         agg_kind(&cfg.method),
     )
-    .with_threads(cfg.threads);
+    .with_threads(cfg.threads)
+    .with_reduce_plan(TreePlan::resolve(cfg.workers, 0).unwrap());
     for step in 0..cfg.steps {
         let msgs: Vec<_> = encoders
             .iter_mut()

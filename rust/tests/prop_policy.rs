@@ -26,6 +26,7 @@ use mlmc_dist::netsim::CostSpec;
 use mlmc_dist::optim::Sgd;
 use mlmc_dist::tensor::Rng;
 use mlmc_dist::train::synthetic::{run_quadratic, synth_cfg, Quadratic};
+use mlmc_dist::transport::TreePlan;
 
 fn assert_bit_identical(name: &str, a: &[f32], b: &[f32]) {
     assert_eq!(a.len(), b.len(), "{name}: length mismatch");
@@ -53,8 +54,12 @@ fn oracle_quorum_run(
     let m = cfg.workers;
     let down_bits = 32 * d as u64;
     let mut encoders: Vec<_> = (0..m).map(|_| build_encoder(cfg, d)).collect();
+    // the engine reduces under the group-blocked canonical schedule on
+    // every topology (that is what makes star ≡ tree ≡ tier-reduced
+    // bit-identical), so the oracle must mirror its auto-fanout plan
     let mut server =
-        Server::new(vec![0.0; d], Box::new(Sgd { lr: cfg.lr }), agg_kind(&cfg.method));
+        Server::new(vec![0.0; d], Box::new(Sgd { lr: cfg.lr }), agg_kind(&cfg.method))
+            .with_reduce_plan(TreePlan::resolve(m, 0).unwrap());
     let mut cost = CostSpec::from_train_cfg(cfg, m).unwrap().build();
     // (worker, sent_step, comp)
     let mut pending: Vec<(u32, u64, mlmc_dist::compress::Compressed)> = Vec::new();

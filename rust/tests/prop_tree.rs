@@ -14,6 +14,15 @@
 //! (c) The real threaded tier — [`SubAggregator`] nodes over channel
 //!     transports, leaf workers running [`engine::run_worker`] — matches
 //!     the flat star too: the relay is invisible to the engine.
+//! (d) **In-tier partial reduction** (`reduce = "tier"`, ISSUE 10): each
+//!     group ships one dense weighted partial under the leader's
+//!     schedule instead of M verbatim payloads, yet the run restates the
+//!     flat star **bit for bit** — same reports, same params, same
+//!     charge-once bit totals, and every leaf observes the identical
+//!     Applied/Deferred/Dropped ack stream — across the full policy ×
+//!     staleness grid, including replies deferred across a round
+//!     boundary (the late leaf's payload waits in the tier stash until
+//!     the next round's schedule resolves it).
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -212,5 +221,114 @@ fn threaded_subaggregator_tier_matches_the_flat_star() {
             h.join().unwrap();
         }
         assert_runs_match(&tag, &star, &tree);
+    }
+}
+
+#[test]
+fn tier_reduction_restates_the_star_run_across_policies_and_staleness() {
+    // (d): straggler raised so the quorum cells provably defer replies
+    // across round boundaries — the deferred payload sits in the tier
+    // stash and must land (or drop) exactly as the star run decides
+    let stale_grid: [(&str, StaleWeight); 3] = [
+        ("damp", StaleWeight::Damp),
+        ("drop", StaleWeight::Drop),
+        ("exp", StaleWeight::Exp { decay: 0.5 }),
+    ];
+    let mut quorum_late = 0usize;
+    for &m in &[4usize, 9] {
+        for &fanout in &[0usize, 2] {
+            for &(sname, sw) in &stale_grid {
+                for pname in ["full", "quorum", "sampled"] {
+                    let mk = || -> Box<dyn ParticipationPolicy> {
+                        match pname {
+                            "full" => Box::new(FullSync::new(sw)),
+                            "quorum" => Box::new(FixedQuorum::new(m / 2 + 1, sw)),
+                            _ => Box::new(ClientSampling::new(0.4, 11, sw)),
+                        }
+                    };
+                    let mut base = cfg(m);
+                    base.straggler = 0.08;
+                    // the star adopts the tree's grouping so both reduce
+                    // under the identical group-blocked schedule
+                    base.fanout = fanout;
+                    let tag = format!("{pname}/{sname} m={m} fanout={fanout} reduce=tier");
+
+                    let star_log = Rc::new(RefCell::new(Vec::new()));
+                    let star_computes: Vec<Compute<'_>> =
+                        (0..m as u32).map(|w| compute(w, Some(Rc::clone(&star_log)))).collect();
+                    let star = run(local_star(star_computes), &base, mk());
+
+                    let mut tcfg = base.clone();
+                    tcfg.reduce = "tier".into();
+                    let tier_log = Rc::new(RefCell::new(Vec::new()));
+                    let tier_computes: Vec<Compute<'_>> =
+                        (0..m as u32).map(|w| compute(w, Some(Rc::clone(&tier_log)))).collect();
+                    let tier = run(local_tree(tier_computes, fanout).unwrap(), &tcfg, mk());
+
+                    assert_runs_match(&tag, &star, &tier);
+                    assert_eq!(
+                        *star_log.borrow(),
+                        *tier_log.borrow(),
+                        "{tag}: workers observed different ack streams"
+                    );
+                    if pname == "quorum" {
+                        quorum_late += star.0.iter().map(|r| r.late).sum::<usize>();
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        quorum_late > 0,
+        "no quorum cell ever deferred a reply across a round boundary — the grid \
+         no longer exercises the tier-stash late path"
+    );
+}
+
+#[test]
+fn threaded_subaggregator_tier_reduces_bit_identically() {
+    // (d) over the real threaded tier: the same SubAggregator binary
+    // switches into metadata-up / schedule-down mode purely from the
+    // round frame's reduce byte, and the run restates the flat star
+    let m = 4usize;
+    let fanout = 2usize;
+    for (name, factory) in policy_grid() {
+        let cfg = cfg(m);
+        let tag = format!("{name} threaded m={m} fanout={fanout} reduce=tier");
+
+        let star_computes: Vec<Compute<'_>> = (0..m as u32).map(|w| compute(w, None)).collect();
+        let star = run(local_star(star_computes), &cfg, factory(m));
+
+        let plan = TreePlan::resolve(m, fanout).unwrap();
+        let (root, sub_ports) = channel::star(plan.groups());
+        let mut handles = Vec::new();
+        for (g, up) in sub_ports.into_iter().enumerate() {
+            let range = plan.range(g as u32);
+            let leaves = (range.end - range.start) as usize;
+            let (down, leaf_ports) = channel::star_from(range.start, leaves);
+            for mut port in leaf_ports {
+                let w = port.id;
+                handles.push(thread::spawn(move || {
+                    engine::run_worker(&mut port, move |round: &WorkerRound<'_>| {
+                        if !round.participant {
+                            return Ok(None);
+                        }
+                        let v = grad_value(w, round.step);
+                        Ok(Some((v, Compressed::dense(vec![v; round.params.len()]))))
+                    })
+                    .unwrap();
+                }));
+            }
+            handles.push(thread::spawn(move || {
+                SubAggregator::new(up, down, range.start).unwrap().run().unwrap();
+            }));
+        }
+        let mut tcfg = cfg.clone();
+        tcfg.reduce = "tier".into();
+        let tier = run(TreeLeader::new(root, m, fanout).unwrap(), &tcfg, factory(m));
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_runs_match(&tag, &star, &tier);
     }
 }
